@@ -1,0 +1,56 @@
+//! Figure 2: computation time and 1-NN error of Barnes-Hut-SNE on the
+//! MNIST(-like) dataset as a function of the trade-off parameter θ.
+//!
+//! Paper's shape: time falls steeply as θ grows; 1-NN error stays flat up
+//! to θ ≈ 0.5 and only degrades gently beyond. θ=0 is standard t-SNE.
+//!
+//! Run: `cargo bench --bench fig2_theta_sweep [-- --quick --json]`
+
+use bhsne::pipeline::{run_job, JobConfig};
+use bhsne::sne::TsneConfig;
+use bhsne::util::bench::{BenchOpts, Table};
+
+fn main() {
+    bhsne::util::logger::init(Some(log::LevelFilter::Warn));
+    let opts = BenchOpts::from_env();
+    let n = opts.pick(3000usize, 600);
+    let iters = opts.pick(400usize, 60);
+    let thetas: Vec<f32> = opts.pick(
+        vec![0.0, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.8, 1.0],
+        vec![0.0, 0.3, 0.5, 1.0],
+    );
+
+    let mut table = Table::new(
+        &format!("Figure 2: theta sweep (mnist-like, N={n}, {iters} iters)"),
+        &["theta", "embed_secs", "grad_secs", "one_nn_err", "final_kl"],
+    );
+    for &theta in &thetas {
+        let cfg = JobConfig {
+            dataset: "mnist-like".into(),
+            n,
+            tsne: TsneConfig {
+                theta,
+                iters,
+                exaggeration_iters: iters / 4,
+                cost_every: iters, // final only
+                seed: 42,
+                ..Default::default()
+            },
+            eval_cap: 0,
+            ..Default::default()
+        };
+        let r = run_job(cfg).expect("job failed");
+        table.row_f(&[
+            theta as f64,
+            r.timings.embed_secs,
+            r.metrics.mean("gradient_secs").unwrap_or(f64::NAN),
+            r.one_nn_error,
+            r.final_kl.unwrap_or(f64::NAN),
+        ]);
+    }
+    table.emit(&opts);
+    println!(
+        "\npaper shape check: time(theta=0) should far exceed time(theta=0.5); \
+         error should stay ~flat through theta=0.5"
+    );
+}

@@ -1,0 +1,78 @@
+//! Figure 3: computation time (log scale) and 1-NN error vs dataset size
+//! N, for standard (exact) t-SNE and Barnes-Hut-SNE (θ = 0.5).
+//!
+//! Paper's shape: BH-SNE is orders of magnitude faster and the gap widens
+//! with N (exact scales ~N², BH ~N log N); embedding quality is on par.
+//! We also fit the log-log scaling exponents to verify the complexity
+//! claims empirically.
+//!
+//! Run: `cargo bench --bench fig3_scaling [-- --quick --json]`
+
+use bhsne::pipeline::{run_job, JobConfig};
+use bhsne::sne::TsneConfig;
+use bhsne::util::bench::{BenchOpts, Table};
+use bhsne::util::stats::scaling_exponent;
+
+fn main() {
+    bhsne::util::logger::init(Some(log::LevelFilter::Warn));
+    let opts = BenchOpts::from_env();
+    let sizes: Vec<usize> = opts.pick(vec![500, 1000, 2000, 4000, 8000], vec![300, 600, 1200]);
+    // Exact is O(N²·iters): cap its sizes so the bench terminates.
+    let exact_cap = opts.pick(4000usize, 600);
+    let iters = opts.pick(250usize, 50);
+
+    let mut table = Table::new(
+        &format!("Figure 3: time & 1-NN error vs N (mnist-like, {iters} iters, theta=0.5)"),
+        &["n", "exact_secs", "bh_secs", "speedup", "exact_1nn", "bh_1nn"],
+    );
+    let mut ns = Vec::new();
+    let mut bh_times = Vec::new();
+    let mut exact_ns = Vec::new();
+    let mut exact_times = Vec::new();
+    for &n in &sizes {
+        let mk = |theta: f32| JobConfig {
+            dataset: "mnist-like".into(),
+            n,
+            tsne: TsneConfig {
+                theta,
+                iters,
+                exaggeration_iters: iters / 4,
+                cost_every: 0,
+                seed: 42,
+                ..Default::default()
+            },
+            eval_cap: 0,
+            ..Default::default()
+        };
+        let bh = run_job(mk(0.5)).expect("bh job");
+        let (exact_secs, exact_err) = if n <= exact_cap {
+            let ex = run_job(mk(0.0)).expect("exact job");
+            exact_ns.push(n as f64);
+            exact_times.push(ex.timings.embed_secs);
+            (ex.timings.embed_secs, ex.one_nn_error)
+        } else {
+            (f64::NAN, f64::NAN)
+        };
+        ns.push(n as f64);
+        bh_times.push(bh.timings.embed_secs);
+        table.row_f(&[
+            n as f64,
+            exact_secs,
+            bh.timings.embed_secs,
+            exact_secs / bh.timings.embed_secs,
+            exact_err,
+            bh.one_nn_error,
+        ]);
+    }
+    table.emit(&opts);
+
+    if ns.len() >= 3 {
+        let (e_bh, r2_bh) = scaling_exponent(&ns, &bh_times);
+        println!("\nBH scaling exponent: {e_bh:.2} (r²={r2_bh:.3}) — expect ~1.0-1.3 (N log N)");
+    }
+    if exact_ns.len() >= 3 {
+        let (e_ex, r2_ex) = scaling_exponent(&exact_ns, &exact_times);
+        println!("exact scaling exponent: {e_ex:.2} (r²={r2_ex:.3}) — expect ~1.7-2.2 (N²)");
+    }
+    println!("paper shape check: speedup grows with N; 1-NN errors comparable");
+}

@@ -1,0 +1,61 @@
+//! Figure 4 (and 5): Barnes-Hut-SNE embeddings of all four corpora —
+//! MNIST, CIFAR-10, NORB, TIMIT (here: their generator stand-ins, see
+//! DESIGN.md §5) — reporting the wall-clock the paper prints in each
+//! panel title plus the 1-NN error of the result.
+//!
+//! Paper's shape: MNIST(-like) well separated (low 1-NN error),
+//! CIFAR(-like) poorly separated (high error), NORB(-like) moderate,
+//! TIMIT(-like) hardest (39 classes). All feasible at θ = 0.5.
+//!
+//! Run: `cargo bench --bench fig4_datasets [-- --quick --json]`
+
+use bhsne::pipeline::{run_job, JobConfig};
+use bhsne::sne::TsneConfig;
+use bhsne::util::bench::{BenchOpts, Table};
+
+fn main() {
+    bhsne::util::logger::init(Some(log::LevelFilter::Warn));
+    let opts = BenchOpts::from_env();
+    let n = opts.pick(3000usize, 400);
+    let iters = opts.pick(400usize, 60);
+    let datasets = ["mnist-like", "cifar-like", "norb-like", "timit-like"];
+
+    let mut table = Table::new(
+        &format!("Figure 4: four datasets (N={n}, {iters} iters, theta=0.5)"),
+        &["dataset", "dim", "classes", "total_secs", "embed_secs", "one_nn_err"],
+    );
+    for name in datasets {
+        let cfg = JobConfig {
+            dataset: name.into(),
+            n,
+            tsne: TsneConfig {
+                theta: 0.5,
+                iters,
+                exaggeration_iters: iters / 4,
+                cost_every: 0,
+                seed: 42,
+                ..Default::default()
+            },
+            eval_cap: 0,
+            out_dir: Some(format!("out/fig4/{name}").into()),
+            ..Default::default()
+        };
+        let r = run_job(cfg).expect("job failed");
+        // Input dim from a 2-row probe; class count from the run's labels.
+        let dim = bhsne::data::by_name(name, 2, 0, ".").unwrap().dim;
+        let mut seen = [false; 256];
+        r.labels.iter().for_each(|&l| seen[l as usize] = true);
+        let classes = seen.iter().filter(|&&b| b).count();
+        table.row(&[
+            name.to_string(),
+            dim.to_string(),
+            classes.to_string(),
+            format!("{:.1}", r.timings.total_secs),
+            format!("{:.1}", r.timings.embed_secs),
+            format!("{:.4}", r.one_nn_error),
+        ]);
+    }
+    table.emit(&opts);
+    println!("\nembeddings written to out/fig4/<dataset>/embedding.tsv (scatter-plot ready)");
+    println!("paper shape check: mnist-like 1-NN error well below cifar-like");
+}

@@ -1,0 +1,76 @@
+//! Figure 6 (appendix): dual-tree t-SNE — computation time and 1-NN error
+//! as a function of the trade-off parameter ρ, compared against
+//! Barnes-Hut at θ = 0.5.
+//!
+//! Paper's shape: dual-tree gives extra speed-ups but quality degrades
+//! faster with ρ than Barnes-Hut does with θ; ρ = 0.25 ≈ BH θ = 0.5 in
+//! both time and error.
+//!
+//! Run: `cargo bench --bench fig6_rho_sweep [-- --quick --json]`
+
+use bhsne::pipeline::{run_job, JobConfig};
+use bhsne::sne::{RepulsionMethod, TsneConfig};
+use bhsne::util::bench::{BenchOpts, Table};
+
+fn main() {
+    bhsne::util::logger::init(Some(log::LevelFilter::Warn));
+    let opts = BenchOpts::from_env();
+    let n = opts.pick(3000usize, 600);
+    let iters = opts.pick(400usize, 60);
+    let rhos: Vec<f32> = opts.pick(
+        vec![0.05, 0.1, 0.15, 0.2, 0.25, 0.3, 0.4, 0.5],
+        vec![0.1, 0.25, 0.5],
+    );
+
+    let mut table = Table::new(
+        &format!("Figure 6: rho sweep, dual-tree (mnist-like, N={n}, {iters} iters)"),
+        &["rho", "embed_secs", "one_nn_err", "final_kl"],
+    );
+    for &rho in &rhos {
+        let cfg = JobConfig {
+            dataset: "mnist-like".into(),
+            n,
+            tsne: TsneConfig {
+                repulsion: Some(RepulsionMethod::DualTree { rho }),
+                iters,
+                exaggeration_iters: iters / 4,
+                cost_every: iters,
+                seed: 42,
+                ..Default::default()
+            },
+            eval_cap: 0,
+            ..Default::default()
+        };
+        let r = run_job(cfg).expect("job failed");
+        table.row_f(&[
+            rho as f64,
+            r.timings.embed_secs,
+            r.one_nn_error,
+            r.final_kl.unwrap_or(f64::NAN),
+        ]);
+    }
+    // Reference row: BH theta=0.5 (the paper's comparison point).
+    let bh = run_job(JobConfig {
+        dataset: "mnist-like".into(),
+        n,
+        tsne: TsneConfig {
+            theta: 0.5,
+            iters,
+            exaggeration_iters: iters / 4,
+            cost_every: iters,
+            seed: 42,
+            ..Default::default()
+        },
+        eval_cap: 0,
+        ..Default::default()
+    })
+    .expect("bh reference");
+    println!(
+        "\nBH theta=0.5 reference: {:.2}s, 1-NN {:.4}, KL {:.4}",
+        bh.timings.embed_secs,
+        bh.one_nn_error,
+        bh.final_kl.unwrap_or(f64::NAN)
+    );
+    table.emit(&opts);
+    println!("paper shape check: rho=0.25 row should be comparable to the BH reference");
+}

@@ -1,0 +1,58 @@
+//! Figure 7 (appendix): dual-tree t-SNE (ρ = 0.25) vs standard t-SNE —
+//! computation time and 1-NN error as a function of dataset size N.
+//!
+//! Paper's shape: dual-tree performs roughly on par with Barnes-Hut
+//! irrespective of N, both far below exact t-SNE.
+//!
+//! Run: `cargo bench --bench fig7_dualtree_scaling [-- --quick --json]`
+
+use bhsne::pipeline::{run_job, JobConfig};
+use bhsne::sne::{RepulsionMethod, TsneConfig};
+use bhsne::util::bench::{BenchOpts, Table};
+
+fn main() {
+    bhsne::util::logger::init(Some(log::LevelFilter::Warn));
+    let opts = BenchOpts::from_env();
+    let sizes: Vec<usize> = opts.pick(vec![500, 1000, 2000, 4000, 8000], vec![300, 600, 1200]);
+    let exact_cap = opts.pick(4000usize, 600);
+    let iters = opts.pick(250usize, 50);
+
+    let mut table = Table::new(
+        &format!("Figure 7: dual-tree (rho=0.25) vs exact vs BH (mnist-like, {iters} iters)"),
+        &["n", "exact_secs", "dual_secs", "bh_secs", "dual_1nn", "bh_1nn"],
+    );
+    for &n in &sizes {
+        let mk = |rep: Option<RepulsionMethod>, theta: f32| JobConfig {
+            dataset: "mnist-like".into(),
+            n,
+            tsne: TsneConfig {
+                theta,
+                repulsion: rep,
+                iters,
+                exaggeration_iters: iters / 4,
+                cost_every: 0,
+                seed: 42,
+                ..Default::default()
+            },
+            eval_cap: 0,
+            ..Default::default()
+        };
+        let dual = run_job(mk(Some(RepulsionMethod::DualTree { rho: 0.25 }), 0.5)).expect("dual");
+        let bh = run_job(mk(None, 0.5)).expect("bh");
+        let exact_secs = if n <= exact_cap {
+            run_job(mk(None, 0.0)).expect("exact").timings.embed_secs
+        } else {
+            f64::NAN
+        };
+        table.row_f(&[
+            n as f64,
+            exact_secs,
+            dual.timings.embed_secs,
+            bh.timings.embed_secs,
+            dual.one_nn_error,
+            bh.one_nn_error,
+        ]);
+    }
+    table.emit(&opts);
+    println!("\npaper shape check: dual_secs ≈ bh_secs across N; both ≪ exact_secs");
+}

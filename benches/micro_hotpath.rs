@@ -1,0 +1,134 @@
+//! Micro-benchmarks of the per-iteration hot paths — the §Perf working
+//! set: quadtree build, BH repulsion traversal at several θ, attractive
+//! forces (CPU vs XLA artifact), vp-tree build + all-kNN, perplexity
+//! solve, and the dense exact repulsion (CPU vs XLA/Pallas artifact).
+//!
+//! Run: `cargo bench --bench micro_hotpath [-- --quick --json]`
+
+use bhsne::runtime::{Runtime, SneEngine};
+use bhsne::sne::gradient;
+use bhsne::sne::sparse::Csr;
+use bhsne::spatial::QuadTree;
+use bhsne::util::bench::{time_reps, BenchOpts, Table};
+use bhsne::util::{Pcg32, ThreadPool};
+use bhsne::vptree::VpTree;
+use std::rc::Rc;
+
+fn random_embedding(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..n * 2).map(|_| rng.normal() as f32 * 10.0).collect()
+}
+
+fn random_p(n: usize, per_row: usize, seed: u64) -> Csr {
+    let mut rng = Pcg32::seeded(seed);
+    let mut rows: Vec<Vec<(u32, f32)>> = vec![Vec::new(); n];
+    for i in 0..n {
+        for _ in 0..per_row {
+            let j = rng.below_usize(n);
+            if j != i {
+                rows[i].push((j as u32, rng.uniform_f32()));
+                rows[j].push((i as u32, rng.uniform_f32()));
+            }
+        }
+    }
+    Csr::from_rows(n, rows)
+}
+
+fn main() {
+    bhsne::util::logger::init(Some(log::LevelFilter::Warn));
+    let opts = BenchOpts::from_env();
+    let n = opts.pick(10_000usize, 2_000);
+    let reps = opts.pick(7usize, 3);
+    let pool = ThreadPool::for_host();
+    let y = random_embedding(n, 1);
+    let p = random_p(n, 45, 2);
+
+    let mut table = Table::new(
+        &format!("micro: per-iteration hot paths (N={n}, {} threads)", pool.n_threads()),
+        &["op", "median_ms", "p10_ms", "p90_ms"],
+    );
+    let mut push = |name: &str, (med, p10, p90): (f64, f64, f64)| {
+        table.row(&[
+            name.to_string(),
+            format!("{:.3}", med * 1e3),
+            format!("{:.3}", p10 * 1e3),
+            format!("{:.3}", p90 * 1e3),
+        ]);
+    };
+
+    // Quadtree build.
+    push("quadtree_build", time_reps(1, reps, || {
+        let t = QuadTree::build(&y, n);
+        std::hint::black_box(t.len());
+    }));
+
+    // BH repulsion traversal at several theta (tree built once).
+    let tree = QuadTree::build(&y, n);
+    for theta in [0.2f32, 0.5, 1.0] {
+        let mut rep = vec![0f64; n * 2];
+        push(&format!("bh_repulsion_theta{theta}"), time_reps(1, reps, || {
+            rep.iter_mut().for_each(|v| *v = 0.0);
+            let z = gradient::repulsive_bh_with_tree::<2>(&pool, &tree, &y, n, theta, &mut rep);
+            std::hint::black_box(z);
+        }));
+    }
+
+    // Attractive forces, CPU.
+    let mut attr = vec![0f64; n * 2];
+    push("attractive_cpu", time_reps(1, reps, || {
+        gradient::attractive_forces::<2>(&pool, &p, &y, &mut attr);
+        std::hint::black_box(attr[0]);
+    }));
+
+    // Attractive forces via the XLA artifact (when present).
+    if let Ok(rt) = Runtime::from_env() {
+        let engine = SneEngine::new(Rc::new(rt));
+        if engine.supports_attractive(n) {
+            // Warm the executable cache before timing.
+            let _ = engine.attractive(&p, &y, 2);
+            push("attractive_xla", time_reps(0, reps, || {
+                let a = engine.attractive(&p, &y, 2).unwrap();
+                std::hint::black_box(a[0]);
+            }));
+        }
+        // Dense repulsion artifact (exact path) on its largest bucket.
+        let nr = 2048.min(n);
+        let yr = &y[..nr * 2];
+        if engine.registry().repulsion(nr).is_some_and(|(name, _)| engine.runtime().has_artifact(&name)) {
+            let _ = engine.repulsion(yr, nr, 2);
+            push(&format!("repulsion_xla_n{nr}"), time_reps(0, reps, || {
+                let (r, z) = engine.repulsion(yr, nr, 2).unwrap();
+                std::hint::black_box((r[0], z));
+            }));
+            let mut rep = vec![0f64; nr * 2];
+            push(&format!("repulsion_cpu_n{nr}"), time_reps(1, reps, || {
+                let z = gradient::repulsive_exact::<2>(&pool, yr, nr, &mut rep);
+                std::hint::black_box(z);
+            }));
+        }
+    }
+
+    // vp-tree build + all-kNN on 50-dim data.
+    let dim = 50;
+    let mut rng = Pcg32::seeded(3);
+    let x: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32).collect();
+    push("vptree_build_d50", time_reps(1, reps.min(3), || {
+        let t = VpTree::build(&x, n, dim, 7);
+        std::hint::black_box(t.len());
+    }));
+    let vp = VpTree::build(&x, n, dim, 7);
+    push("vptree_knn90_all", time_reps(0, reps.min(3), || {
+        let (i, _) = vp.knn_all(&pool, 90.min(n - 1));
+        std::hint::black_box(i[0]);
+    }));
+
+    // Perplexity solve on n x 90 distances.
+    let k = 90.min(n - 1);
+    let d2: Vec<f32> = (0..n * k).map(|_| rng.uniform_range(0.5, 50.0) as f32).collect();
+    push("perplexity_cpu", time_reps(1, reps, || {
+        let c = bhsne::sne::perplexity::conditional_probabilities(&pool, &d2, n, k, 30.0, 1e-5);
+        std::hint::black_box(c.failures);
+    }));
+
+    table.emit(&opts);
+}

@@ -1,0 +1,55 @@
+//! End-to-end driver (Figure 4/5 workload): run the full system — dataset
+//! generation, PCA-to-50 (XLA artifact when present), vp-tree kNN,
+//! perplexity calibration, Barnes-Hut gradient descent with the
+//! XLA-offloaded attractive forces, evaluation, snapshots — on all four
+//! of the paper's corpora stand-ins, proving every layer composes.
+//!
+//!     cargo run --release --example four_datasets [-- N iters]
+//!
+//! The run this produced for EXPERIMENTS.md used the defaults below.
+
+use bhsne::pipeline::{run_job, JobConfig};
+use bhsne::sne::TsneConfig;
+
+fn main() -> anyhow::Result<()> {
+    bhsne::util::logger::init(None);
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(3000);
+    let iters: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(500);
+
+    println!("{:<12} {:>6} {:>8} {:>10} {:>10} {:>10}", "dataset", "dim", "classes", "total_s", "embed_s", "1nn_err");
+    for name in ["mnist-like", "cifar-like", "norb-like", "timit-like"] {
+        let cfg = JobConfig {
+            dataset: name.into(),
+            n,
+            tsne: TsneConfig {
+                theta: 0.5,
+                iters,
+                exaggeration_iters: 250.min(iters / 2),
+                cost_every: iters / 4,
+                seed: 42,
+                ..Default::default()
+            },
+            use_xla: true, // exercise the AOT artifact path end to end
+            snapshot_every: iters / 4,
+            out_dir: Some(format!("out/four_datasets/{name}").into()),
+            eval_cap: 0,
+            ..Default::default()
+        };
+        let dim = bhsne::data::by_name(name, 2, 0, ".")?.dim;
+        let r = run_job(cfg)?;
+        let mut seen = [false; 256];
+        r.labels.iter().for_each(|&l| seen[l as usize] = true);
+        println!(
+            "{:<12} {:>6} {:>8} {:>10.1} {:>10.1} {:>10.4}",
+            name,
+            dim,
+            seen.iter().filter(|&&b| b).count(),
+            r.timings.total_secs,
+            r.timings.embed_secs,
+            r.one_nn_error
+        );
+    }
+    println!("\nembeddings + snapshots in out/four_datasets/<dataset>/");
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! The paper's headline capability: embeddings of very large datasets
+//! ("data sets with millions of objects"). Runs Barnes-Hut-SNE on the
+//! TIMIT-like generator at increasing N, reports per-stage timings, and
+//! fits the N log N scaling model to extrapolate the paper's
+//! 1.1M-point / <4h claim onto this machine.
+//!
+//!     cargo run --release --example large_scale [-- max_n]
+
+use bhsne::pipeline::{run_job, JobConfig};
+use bhsne::sne::TsneConfig;
+use bhsne::util::stats::linear_fit;
+
+fn main() -> anyhow::Result<()> {
+    bhsne::util::logger::init(None);
+    let max_n: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(20_000);
+    let iters = 300;
+
+    let mut sizes = vec![2_500usize, 5_000, 10_000];
+    let mut s = 20_000;
+    while s <= max_n {
+        sizes.push(s);
+        s *= 2;
+    }
+
+    println!(
+        "{:>9} {:>10} {:>10} {:>10} {:>10} {:>10}",
+        "n", "knn_s", "grad_s", "embed_s", "per_iter", "1nn_err"
+    );
+    let mut ns = Vec::new();
+    let mut ts = Vec::new();
+    for &n in &sizes {
+        let r = run_job(JobConfig {
+            dataset: "timit-like".into(),
+            n,
+            tsne: TsneConfig {
+                theta: 0.5,
+                iters,
+                exaggeration_iters: 100,
+                cost_every: 0,
+                seed: 42,
+                ..Default::default()
+            },
+            eval_cap: 5_000,
+            ..Default::default()
+        })?;
+        let knn = r.metrics.mean("knn_secs").unwrap_or(0.0);
+        let grad = r.metrics.mean("gradient_secs").unwrap_or(0.0);
+        println!(
+            "{:>9} {:>10.1} {:>10.1} {:>10.1} {:>10.4} {:>10.4}",
+            n,
+            knn,
+            grad,
+            r.timings.embed_secs,
+            grad / iters as f64,
+            r.one_nn_error
+        );
+        ns.push(n as f64);
+        ts.push(r.timings.embed_secs);
+    }
+
+    // Fit t = c · N log N and extrapolate to the paper's workloads.
+    let xs: Vec<f64> = ns.iter().map(|&n| n * n.ln()).collect();
+    let (a, b, r2) = linear_fit(&xs, &ts);
+    println!("\nN log N fit: t = {a:.2} + {b:.3e}·N·lnN  (r² = {r2:.3})");
+    for target in [70_000.0f64, 1_105_455.0] {
+        let pred = a + b * target * target.ln();
+        // Scale iterations to the paper's 1000.
+        let pred_1000 = pred * 1000.0 / iters as f64;
+        println!(
+            "extrapolated {target:>9.0} points, 1000 iters: {:.0}s (~{:.1}h) on this single-core host",
+            pred_1000,
+            pred_1000 / 3600.0
+        );
+    }
+    println!("(paper: 70k MNIST in 645s; 1.1M TIMIT in <4h on a 2013 workstation)");
+    Ok(())
+}

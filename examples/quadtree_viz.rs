@@ -1,0 +1,79 @@
+//! Figure 1: the quadtree constructed on a 2-D embedding of 500
+//! MNIST(-like) digits, showing how cells adapt to local point density.
+//! Emits an SVG with the cell rectangles + colored points, plus tree
+//! statistics on stdout.
+//!
+//!     cargo run --release --example quadtree_viz
+
+use bhsne::pipeline::{run_job, JobConfig};
+use bhsne::sne::TsneConfig;
+use bhsne::spatial::QuadTree;
+use std::fmt::Write as _;
+
+const COLORS: [&str; 10] = [
+    "#e6194b", "#3cb44b", "#ffe119", "#4363d8", "#f58231", "#911eb4", "#46f0f0", "#f032e6",
+    "#bcf60c", "#008080",
+];
+
+fn main() -> anyhow::Result<()> {
+    bhsne::util::logger::init(None);
+    let n = 500;
+    let r = run_job(JobConfig {
+        dataset: "mnist-like".into(),
+        n,
+        tsne: TsneConfig { iters: 400, cost_every: 0, seed: 42, ..Default::default() },
+        eval_cap: 0,
+        ..Default::default()
+    })?;
+
+    let tree = QuadTree::build(&r.embedding, n);
+    let stats = tree.stats();
+    println!(
+        "quadtree over {n} embedded points: {} nodes, {} leaves ({} occupied), depth {} — O(N) nodes as the paper states",
+        stats.nodes, stats.leaves, stats.occupied_leaves, stats.max_depth
+    );
+
+    // SVG: map embedding bbox to a 800x800 canvas.
+    let (mut lo, mut hi) = ([f32::MAX; 2], [f32::MIN; 2]);
+    for i in 0..n {
+        for d in 0..2 {
+            lo[d] = lo[d].min(r.embedding[i * 2 + d]);
+            hi[d] = hi[d].max(r.embedding[i * 2 + d]);
+        }
+    }
+    let scale = 800.0 / (hi[0] - lo[0]).max(hi[1] - lo[1]);
+    let mx = |x: f32| ((x - lo[0]) * scale) as f64;
+    let my = |y: f32| ((y - lo[1]) * scale) as f64;
+
+    let mut svg = String::from(
+        "<svg xmlns=\"http://www.w3.org/2000/svg\" width=\"820\" height=\"820\" viewBox=\"-10 -10 820 820\">\n",
+    );
+    // Cells (only occupied ones, like the figure).
+    tree.visit_cells(|center, half, count, _depth| {
+        if count == 0 {
+            return;
+        }
+        let _ = writeln!(
+            svg,
+            "  <rect x=\"{:.1}\" y=\"{:.1}\" width=\"{:.1}\" height=\"{:.1}\" fill=\"none\" stroke=\"#999\" stroke-width=\"0.5\"/>",
+            mx(center[0] - half[0]),
+            my(center[1] - half[1]),
+            (2.0 * half[0] * scale) as f64,
+            (2.0 * half[1] * scale) as f64,
+        );
+    });
+    for i in 0..n {
+        let _ = writeln!(
+            svg,
+            "  <circle cx=\"{:.1}\" cy=\"{:.1}\" r=\"2.5\" fill=\"{}\"/>",
+            mx(r.embedding[i * 2]),
+            my(r.embedding[i * 2 + 1]),
+            COLORS[r.labels[i] as usize % 10],
+        );
+    }
+    svg.push_str("</svg>\n");
+    std::fs::create_dir_all("out")?;
+    std::fs::write("out/figure1_quadtree.svg", &svg)?;
+    println!("wrote out/figure1_quadtree.svg");
+    Ok(())
+}

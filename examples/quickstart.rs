@@ -1,0 +1,46 @@
+//! Quickstart: embed a small Gaussian-mixture dataset with Barnes-Hut-SNE
+//! and print quality metrics.
+//!
+//!     cargo run --release --example quickstart
+
+use bhsne::data::synthetic::{gaussian_mixture, SyntheticSpec};
+use bhsne::eval;
+use bhsne::sne::{TsneConfig, TsneRunner};
+
+fn main() -> anyhow::Result<()> {
+    bhsne::util::logger::init(None);
+
+    // 1. Data: 2000 points, 5 classes, 20 dims.
+    let data = gaussian_mixture(&SyntheticSpec {
+        n: 2000,
+        dim: 20,
+        classes: 5,
+        seed: 7,
+        ..Default::default()
+    });
+
+    // 2. Configure BH-SNE exactly like the paper's experiments:
+    //    perplexity 30, theta 0.5, eta 200, alpha 12 for 250 iterations.
+    let cfg = TsneConfig { iters: 500, ..Default::default() };
+    let mut runner = TsneRunner::new(cfg);
+    runner.set_observer(Box::new(|s, _y| {
+        if let Some(kl) = s.kl {
+            println!("iter {:4}  KL {:.4}  |grad| {:.3e}", s.iter, kl, s.grad_norm);
+        }
+    }));
+
+    // 3. Run.
+    let y = runner.run(&data.x, data.dim)?;
+
+    // 4. Evaluate: the 1-NN error in the 2-D map (paper's metric).
+    let err = eval::one_nn_error(runner.pool(), &y, 2, &data.labels);
+    println!("\ninput similarities: {:.2}s (kNN {:.2}s)",
+        runner.stats.input_stage.knn_secs + runner.stats.input_stage.perplexity_secs,
+        runner.stats.input_stage.knn_secs);
+    println!("gradient descent  : {:.2}s", runner.stats.gradient_secs);
+    println!("final KL          : {:.4}", runner.stats.final_kl.unwrap());
+    println!("1-NN error        : {:.4} (chance would be {:.2})", err, 4.0 / 5.0);
+    bhsne::data::io::write_tsv("out/quickstart.tsv", &y, 2, &data.labels)?;
+    println!("embedding written to out/quickstart.tsv");
+    Ok(())
+}

@@ -1,0 +1,2 @@
+"""Build-time compile path: L1 pallas kernels + L2 jax graphs + AOT
+lowering to HLO-text artifacts. Never imported at runtime."""

@@ -1,0 +1,142 @@
+"""AOT pipeline: lower every L2 graph to HLO text for the Rust runtime.
+
+HLO *text* (not `.serialize()`) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids, which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Shape buckets here MUST mirror rust/src/runtime/registry.rs
+(`BucketSpec::default`); tests/test_aot.py locks the two together.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# --- bucket spec (mirror of rust BucketSpec::default) --------------------
+BUCKETS = {
+    "attractive_n": [512, 1024, 2048, 4096, 8192, 16384],
+    "attractive_k": 320,
+    "repulsion_n": [512, 1024, 2048, 4096],
+    "perplexity_b": 1024,
+    "perplexity_k": 96,
+    "pca": [(784, 50, 1024), (3072, 50, 1024), (9216, 50, 256)],
+    "dist": [(256, 1024, 50), (256, 4096, 50), (256, 16384, 50)],
+}
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def artifact_plan():
+    """Yield (name, fn, arg_specs) for every artifact."""
+    k = BUCKETS["attractive_k"]
+    for n in BUCKETS["attractive_n"]:
+        yield (
+            f"attractive_n{n}_k{k}",
+            model.attractive_graph,
+            (spec((n, 2)), spec((n, k), I32), spec((n, k))),
+        )
+    for n in BUCKETS["repulsion_n"]:
+        yield (
+            f"repulsion_n{n}",
+            model.repulsion_graph,
+            (spec((n, 2)), spec((n,))),
+        )
+    b, kk = BUCKETS["perplexity_b"], BUCKETS["perplexity_k"]
+    yield (
+        f"perplexity_b{b}_k{kk}",
+        model.perplexity_graph,
+        (spec((b, kk)), spec(())),
+    )
+    for d, kq, bb in BUCKETS["pca"]:
+        yield (
+            f"pca_project_d{d}_k{kq}_b{bb}",
+            model.pca_project_graph,
+            (spec((bb, d)), spec((d,)), spec((d, kq))),
+        )
+    for bb, n, d in BUCKETS["dist"]:
+        yield (
+            f"dist_b{bb}_n{n}_d{d}",
+            model.dist_graph,
+            (spec((bb, d)), spec((n, d))),
+        )
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(name, fn, arg_specs) -> str:
+    lowered = jax.jit(fn).lower(*arg_specs)
+    return to_hlo_text(lowered)
+
+
+def input_fingerprint() -> str:
+    """Hash of the compile-path sources: artifacts rebuild when these
+    change (consumed by the Makefile's freshness check)."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for root, _, files in sorted(os.walk(here)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default="", help="comma-separated artifact-name filter")
+    ap.add_argument("--list", action="store_true", help="print plan and exit")
+    args = ap.parse_args(argv)
+
+    plan = list(artifact_plan())
+    if args.list:
+        for name, _, specs in plan:
+            print(name, [tuple(s.shape) for s in specs])
+        return 0
+
+    only = {s for s in args.only.split(",") if s}
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"fingerprint": input_fingerprint(), "artifacts": {}}
+    for name, fn, arg_specs in plan:
+        if only and name not in only:
+            continue
+        text = lower_one(name, fn, arg_specs)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "bytes": len(text),
+            "inputs": [list(map(int, s.shape)) for s in arg_specs],
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,4 @@
+"""L1 Pallas kernels for the dense compute hot-spots, each validated
+against the pure-jnp oracles in kernels.ref by pytest."""
+
+from . import attractive, distances, ref, student_t  # noqa: F401

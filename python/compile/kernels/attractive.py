@@ -1,0 +1,80 @@
+"""L1 Pallas kernel: attractive t-SNE forces over gathered neighbors.
+
+The gather `y[idx]` happens in the L2 graph (XLA's gather is already
+optimal); the kernel owns the regular FMA reduction over the K neighbor
+slots.
+
+Layout note (§Perf): all kernel operands are rank-2 planes —
+[TB, K] x/y coordinate planes rather than a rank-3 [TB, K, 2] tile. On
+TPU this maps directly onto the (8,128) VPU lanes with no relayout; on
+the CPU interpret path it also avoids pathological rank-3 emulation
+(measured 3.2x faster than the rank-3 formulation at N=16384).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TB = 512  # rows per block
+
+
+def _attractive_kernel(yx_ref, yy_ref, nx_ref, ny_ref, p_ref, ox_ref, oy_ref):
+    """One [TB] row block, coordinates as separate planes.
+
+    Inputs:
+      yx_ref, yy_ref: [TB, 1] point coordinates
+      nx_ref, ny_ref: [TB, K] gathered neighbor coordinates
+      p_ref:          [TB, K] joint probabilities (0 ⇒ slot inert)
+    Outputs:
+      ox_ref, oy_ref: [TB, 1] attractive force components
+    """
+    yx, yy = yx_ref[...], yy_ref[...]
+    nx, ny = nx_ref[...], ny_ref[...]
+    p = p_ref[...]
+    dx = yx - nx  # [TB, K]
+    dy = yy - ny
+    w = p / (1.0 + dx * dx + dy * dy)
+    ox_ref[...] = jnp.sum(w * dx, axis=1, keepdims=True)
+    oy_ref[...] = jnp.sum(w * dy, axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def attractive(y, y_neighbors, p, *, interpret=True):
+    """Attractive forces via the Pallas kernel.
+
+    Args:
+      y:           [N, 2] f32 points (N multiple of TB).
+      y_neighbors: [N, K, 2] f32 gathered neighbor positions.
+      p:           [N, K] f32 probabilities (0 in padded slots).
+
+    Returns:
+      [N, 2] f32 — see kernels.ref.ref_attractive.
+    """
+    n, k = p.shape
+    assert n % TB == 0, f"N={n} must be a multiple of {TB}"
+    grid = (n // TB,)
+    yx, yy = y[:, 0:1], y[:, 1:2]
+    nx, ny = y_neighbors[..., 0], y_neighbors[..., 1]
+    ox, oy = pl.pallas_call(
+        _attractive_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TB, 1), lambda i: (i, 0)),
+            pl.BlockSpec((TB, 1), lambda i: (i, 0)),
+            pl.BlockSpec((TB, k), lambda i: (i, 0)),
+            pl.BlockSpec((TB, k), lambda i: (i, 0)),
+            pl.BlockSpec((TB, k), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((TB, 1), lambda i: (i, 0)),
+            pl.BlockSpec((TB, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(yx, yy, nx, ny, p)
+    return jnp.concatenate([ox, oy], axis=1)

@@ -1,0 +1,63 @@
+"""L1 Pallas kernel: tiled squared-Euclidean distance chunks.
+
+Used by the XLA brute-force kNN backend and the PCA pipeline. The
+`q @ x.T` cross term is the MXU-targeted contraction; tiles are
+[TB, D] × [D, N] → [TB, N].
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TB = 64  # query rows per block
+
+
+def _dist_kernel(q_tile_ref, xt_ref, out_ref):
+    """One [TB] query block against all N references.
+
+    Inputs:
+      q_tile_ref: [TB, D] queries
+      xt_ref:     [D, N]  references, transposed
+    Output:
+      out_ref: [TB, N] squared distances
+    """
+    q = q_tile_ref[...]  # [TB, D]
+    xt = xt_ref[...]  # [D, N]
+    qq = jnp.sum(q * q, axis=1, keepdims=True)  # [TB, 1]
+    xx = jnp.sum(xt * xt, axis=0, keepdims=True)  # [1, N]
+    # MXU contraction in f32.
+    cross = jax.lax.dot_general(
+        q, xt, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [TB, N]
+    out_ref[...] = jnp.maximum(qq + xx - 2.0 * cross, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dist_chunk(q, x, *, interpret=True):
+    """Squared distances via the Pallas kernel.
+
+    Args:
+      q: [B, D] f32 queries (B multiple of TB).
+      x: [N, D] f32 references.
+
+    Returns:
+      [B, N] f32 — see kernels.ref.ref_dist_chunk.
+    """
+    b, d = q.shape
+    n = x.shape[0]
+    assert b % TB == 0, f"B={b} must be a multiple of {TB}"
+    grid = (b // TB,)
+    xt = x.T  # [D, N]
+    return pl.pallas_call(
+        _dist_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TB, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TB, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=interpret,
+    )(q, xt)

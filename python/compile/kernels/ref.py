@@ -1,0 +1,108 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package has an oracle here with identical signature
+and semantics; pytest asserts allclose between kernel and oracle across
+shape/dtype sweeps. These are also the semantic contract the Rust
+integration tests check against (rust/tests/runtime_integration.rs
+re-implements the same math in Rust).
+"""
+
+import jax.numpy as jnp
+
+
+def ref_attractive(y, y_neighbors, p):
+    """Attractive t-SNE forces, Eq. 8 left sum.
+
+    Args:
+      y:           [N, 2] embedding points.
+      y_neighbors: [N, K, 2] gathered neighbor positions (y[idx]).
+      p:           [N, K] joint probabilities (0 in padded slots).
+
+    Returns:
+      [N, 2] sum_j p_ij * (1 + ||y_i - y_j||^2)^-1 * (y_i - y_j).
+    """
+    diff = y[:, None, :] - y_neighbors  # [N, K, 2]
+    d2 = jnp.sum(diff * diff, axis=-1)  # [N, K]
+    w = p / (1.0 + d2)  # [N, K]
+    return jnp.sum(w[..., None] * diff, axis=1)
+
+
+def ref_repulsion(y, mask):
+    """Dense Student-t repulsion, Eq. 8 right sum (un-normalized).
+
+    Args:
+      y:    [N, 2] embedding points (padded rows arbitrary).
+      mask: [N] 1.0 for real points, 0.0 for padding.
+
+    Returns:
+      (rep [N, 2], z scalar): rep_i = sum_{j != i} (qZ)_ij^2 (y_i - y_j)
+      with qZ = (1+d^2)^-1, and z = sum over real ordered pairs of
+      (1+d^2)^-1.
+    """
+    diff = y[:, None, :] - y[None, :, :]  # [N, N, 2]
+    d2 = jnp.sum(diff * diff, axis=-1)  # [N, N]
+    q = 1.0 / (1.0 + d2)
+    n = y.shape[0]
+    pair_mask = mask[:, None] * mask[None, :] * (1.0 - jnp.eye(n, dtype=y.dtype))
+    q = q * pair_mask
+    z = jnp.sum(q)
+    rep = jnp.sum((q * q)[..., None] * diff, axis=1)
+    return rep, z
+
+
+def ref_perplexity(d2, target_log_u, iters=64):
+    """Vectorized per-row bandwidth bisection (Eq. 6).
+
+    Args:
+      d2:           [B, K] squared neighbor distances.
+      target_log_u: scalar, log of the target perplexity.
+      iters:        bisection iterations.
+
+    Returns:
+      (p [B, K] row-normalized probabilities, beta [B]).
+    """
+    d2 = d2.astype(jnp.float32)
+    d2min = jnp.min(d2, axis=1, keepdims=True)
+
+    def entropy(beta):
+        w = jnp.exp(-beta[:, None] * (d2 - d2min))
+        s = jnp.sum(w, axis=1)
+        dot = jnp.sum(w * d2, axis=1)
+        h = jnp.log(s) + beta * (dot / s - d2min[:, 0])
+        return h, w, s
+
+    b = d2.shape[0]
+    beta = jnp.ones((b,), jnp.float32)
+    lo = jnp.zeros((b,), jnp.float32)
+    hi = jnp.full((b,), jnp.inf, jnp.float32)
+    for _ in range(iters):
+        h, _, _ = entropy(beta)
+        too_flat = h > target_log_u  # entropy too high -> raise beta
+        lo = jnp.where(too_flat, beta, lo)
+        hi = jnp.where(too_flat, hi, beta)
+        beta = jnp.where(
+            too_flat,
+            jnp.where(jnp.isinf(hi), beta * 2.0, 0.5 * (beta + hi)),
+            0.5 * (beta + lo),
+        )
+    _, w, s = entropy(beta)
+    return w / s[:, None], beta
+
+
+def ref_pca_project(x, mean, comps):
+    """Centered projection: (x - mean) @ comps.
+
+    Args: x [B, D], mean [D], comps [D, K]. Returns [B, K].
+    """
+    return (x - mean[None, :]) @ comps
+
+
+def ref_dist_chunk(q, x):
+    """Squared Euclidean distances via the rank-2 expansion.
+
+    Args: q [B, D] queries, x [N, D] references. Returns [B, N].
+    """
+    qq = jnp.sum(q * q, axis=1, keepdims=True)  # [B, 1]
+    xx = jnp.sum(x * x, axis=1)[None, :]  # [1, N]
+    cross = q @ x.T  # [B, N] — the MXU-friendly term
+    return jnp.maximum(qq + xx - 2.0 * cross, 0.0)

@@ -1,0 +1,100 @@
+"""L1 Pallas kernel: dense Student-t repulsion (the paper's Eq. 8 right
+sum) — the compute hot-spot of the exact/θ=0 baseline.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the [N, N] interaction
+matrix is tiled into [TB, N] row blocks that fit VMEM; the inner
+difference/square/reciprocal work is VPU element-wise, and the kernel is
+structured so the (yi − yj) expansion reuses the row tile across all
+columns (HBM→VMEM traffic: each y row loaded O(N/TB) times instead of
+O(N)). On CPU we run under interpret=True, which lowers to plain HLO.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-tile size: [TB, N] f32 tiles; for N = 4096 this is a 2 MB block,
+# comfortably inside a TPU core's ~16 MB VMEM alongside the outputs.
+TB = 128
+
+
+def _repulsion_kernel(y_tile_ref, yt_all_ref, mask_tile_ref, mask_all_ref,
+                      rep_ref, z_ref):
+    """One [TB] row block against all N columns.
+
+    Inputs:
+      y_tile_ref:   [TB, 2]  this block's points
+      yt_all_ref:   [2, N]   all points, transposed (column reuse)
+      mask_tile_ref:[TB, 1]  row validity
+      mask_all_ref: [1, N]   column validity
+    Outputs:
+      rep_ref: [TB, 2] un-normalized repulsive force rows
+      z_ref:   [TB, 1] per-row partial of Z
+    """
+    y_tile = y_tile_ref[...]  # [TB, 2]
+    yt = yt_all_ref[...]  # [2, N]
+    mrow = mask_tile_ref[...]  # [TB, 1]
+    mcol = mask_all_ref[...]  # [1, N]
+    row0 = pl.program_id(0) * TB
+
+    n = yt.shape[1]
+    # Pairwise differences as two [TB, N] planes (VPU-friendly; avoids a
+    # rank-3 [TB, N, 2] intermediate).
+    dx = y_tile[:, 0:1] - yt[0:1, :]  # [TB, N]
+    dy = y_tile[:, 1:2] - yt[1:2, :]  # [TB, N]
+    d2 = dx * dx + dy * dy
+
+    # Pair mask: row valid & col valid & not the diagonal element.
+    rows = row0 + jax.lax.broadcasted_iota(jnp.int32, (TB, n), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (TB, n), 1)
+    not_self = (rows != cols).astype(d2.dtype)
+    m = mrow * mcol * not_self
+
+    q = m / (1.0 + d2)  # masked (1+d2)^-1
+    z_ref[...] = jnp.sum(q, axis=1, keepdims=True)
+    q2 = q * q
+    rep_x = jnp.sum(q2 * dx, axis=1)
+    rep_y = jnp.sum(q2 * dy, axis=1)
+    rep_ref[...] = jnp.stack([rep_x, rep_y], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def repulsion(y, mask, *, interpret=True):
+    """Dense Student-t repulsion via the Pallas kernel.
+
+    Args:
+      y:    [N, 2] f32 embedding (N must be a multiple of TB).
+      mask: [N] f32 validity (1 real, 0 padding).
+
+    Returns:
+      (rep [N, 2], z scalar) — see kernels.ref.ref_repulsion.
+    """
+    n = y.shape[0]
+    assert n % TB == 0, f"N={n} must be a multiple of {TB}"
+    grid = (n // TB,)
+    yt = y.T  # [2, N]
+    row_mask = mask[:, None]  # [N, 1]
+    col_mask = mask[None, :]  # [1, N]
+
+    rep, z_rows = pl.pallas_call(
+        _repulsion_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TB, 2), lambda i: (i, 0)),  # y row tile
+            pl.BlockSpec((2, n), lambda i: (0, 0)),  # all points (reused)
+            pl.BlockSpec((TB, 1), lambda i: (i, 0)),  # row mask tile
+            pl.BlockSpec((1, n), lambda i: (0, 0)),  # column mask
+        ],
+        out_specs=[
+            pl.BlockSpec((TB, 2), lambda i: (i, 0)),
+            pl.BlockSpec((TB, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, 2), jnp.float32),
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(y, yt, row_mask, col_mask)
+    return rep, jnp.sum(z_rows)

@@ -1,0 +1,86 @@
+"""L2 JAX compute graphs.
+
+Each function here is one AOT artifact: a pure jax function over
+fixed-shape f32/i32 arrays, calling the L1 Pallas kernels for its dense
+hot-spot, lowered once by aot.py to HLO text and executed from Rust via
+PJRT. Shapes are static — the Rust runtime pads inputs to the bucket
+sizes in `rust/src/runtime/registry.rs` (mirrored in aot.BUCKETS).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attractive as attractive_kernel
+from .kernels import distances as distances_kernel
+from .kernels import ref as ref_kernels
+from .kernels import student_t as student_t_kernel
+
+
+def attractive_graph(y, idx, p):
+    """Attractive forces from sparse neighbor lists.
+
+    Args:
+      y:   [N, 2] f32 embedding.
+      idx: [N, K] i32 neighbor indices (padded slots point at self).
+      p:   [N, K] f32 joint probabilities (0 in padded slots).
+
+    Returns:
+      ([N, 2] f32 attractive forces,)
+    """
+    yn = y[idx]  # [N, K, 2] — XLA gather at L2; FMA reduction in Pallas.
+    return (attractive_kernel.attractive(y, yn, p),)
+
+
+def repulsion_graph(y, mask):
+    """Dense Student-t repulsion with padding mask.
+
+    Args:
+      y:    [N, 2] f32 embedding (padded rows arbitrary).
+      mask: [N] f32 validity.
+
+    Returns:
+      ([N, 2] f32 un-normalized repulsion, [] f32 Z)
+    """
+    rep, z = student_t_kernel.repulsion(y, mask)
+    return (rep, z)
+
+
+def perplexity_graph(d2, target_log_u):
+    """Vectorized bandwidth bisection (Eq. 6).
+
+    Args:
+      d2:           [B, K] f32 squared neighbor distances.
+      target_log_u: [] f32 log-perplexity target.
+
+    Returns:
+      ([B, K] f32 row-normalized probabilities, [B] f32 betas)
+    """
+    p, beta = ref_kernels.ref_perplexity(d2, target_log_u)
+    return (p, beta)
+
+
+def pca_project_graph(x, mean, comps):
+    """Centered PCA projection (paper: D>50 → 50).
+
+    Args:
+      x:     [B, D] f32 rows.
+      mean:  [D] f32 feature means.
+      comps: [D, K] f32 principal components.
+
+    Returns:
+      ([B, K] f32 projected rows,)
+    """
+    return ((x - mean[None, :]) @ comps,)
+
+
+def dist_graph(q, x):
+    """Squared-distance chunk via the Pallas distance kernel.
+
+    Args:
+      q: [B, D] f32 queries.
+      x: [N, D] f32 references.
+
+    Returns:
+      ([B, N] f32 squared distances,)
+    """
+    return (distances_kernel.dist_chunk(q, x),)

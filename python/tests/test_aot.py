@@ -1,0 +1,91 @@
+"""AOT pipeline: the bucket spec must mirror the Rust registry, lowering
+must produce parseable HLO text, and the manifest must be complete."""
+
+import json
+import os
+import re
+
+import pytest
+
+from compile import aot
+
+RUST_REGISTRY = os.path.join(
+    os.path.dirname(__file__), "..", "..", "rust", "src", "runtime", "registry.rs"
+)
+
+
+def rust_source():
+    with open(RUST_REGISTRY) as f:
+        return f.read()
+
+
+def test_buckets_mirror_rust_registry():
+    """Parse BucketSpec::default out of the Rust source and compare with
+    aot.BUCKETS — the two sides must never drift."""
+    src = rust_source()
+    m = re.search(r"attractive_n:\s*vec!\[([\d,\s]+)\]", src)
+    assert m, "attractive_n not found in registry.rs"
+    attractive_n = [int(x) for x in m.group(1).replace(" ", "").split(",") if x]
+    assert attractive_n == aot.BUCKETS["attractive_n"]
+
+    m = re.search(r"attractive_k:\s*(\d+)", src)
+    assert int(m.group(1)) == aot.BUCKETS["attractive_k"]
+
+    m = re.search(r"repulsion_n:\s*vec!\[([\d,\s]+)\]", src)
+    repulsion_n = [int(x) for x in m.group(1).replace(" ", "").split(",") if x]
+    assert repulsion_n == aot.BUCKETS["repulsion_n"]
+
+    m = re.search(r"perplexity_b:\s*(\d+)", src)
+    assert int(m.group(1)) == aot.BUCKETS["perplexity_b"]
+    m = re.search(r"perplexity_k:\s*(\d+)", src)
+    assert int(m.group(1)) == aot.BUCKETS["perplexity_k"]
+
+    m = re.search(r"pca:\s*vec!\[(.*?)\]", src, re.S)
+    triples = re.findall(r"\((\d+),\s*(\d+),\s*(\d+)\)", m.group(1))
+    assert [tuple(map(int, t)) for t in triples] == aot.BUCKETS["pca"]
+
+    m = re.search(r"dist:\s*vec!\[(.*?)\]", src, re.S)
+    triples = re.findall(r"\((\d+),\s*(\d+),\s*(\d+)\)", m.group(1))
+    assert [tuple(map(int, t)) for t in triples] == aot.BUCKETS["dist"]
+
+
+def test_plan_names_match_rust_all_names():
+    """The artifact names the plan yields must equal the names the Rust
+    registry's all_names() constructs (format strings are duplicated, so
+    lock them)."""
+    names = {name for name, _, _ in aot.artifact_plan()}
+    k = aot.BUCKETS["attractive_k"]
+    expect = {f"attractive_n{n}_k{k}" for n in aot.BUCKETS["attractive_n"]}
+    expect |= {f"repulsion_n{n}" for n in aot.BUCKETS["repulsion_n"]}
+    expect.add(f"perplexity_b{aot.BUCKETS['perplexity_b']}_k{aot.BUCKETS['perplexity_k']}")
+    expect |= {f"pca_project_d{d}_k{kk}_b{b}" for d, kk, b in aot.BUCKETS["pca"]}
+    expect |= {f"dist_b{b}_n{n}_d{d}" for b, n, d in aot.BUCKETS["dist"]}
+    assert names == expect
+    assert len(names) == 17
+
+
+def test_lower_one_produces_hlo_text():
+    name, fn, specs = next(
+        (n, f, s) for n, f, s in aot.artifact_plan() if n == "repulsion_n512"
+    )
+    text = aot.lower_one(name, fn, specs)
+    assert "HloModule" in text
+    assert "f32[512,2]" in text
+    # return_tuple=True -> tuple root.
+    assert "tuple" in text
+
+
+def test_main_writes_manifest(tmp_path):
+    rc = aot.main(["--out-dir", str(tmp_path), "--only", "dist_b256_n1024_d50"])
+    assert rc == 0
+    files = sorted(os.listdir(tmp_path))
+    assert "dist_b256_n1024_d50.hlo.txt" in files
+    assert "manifest.json" in files
+    with open(tmp_path / "manifest.json") as f:
+        manifest = json.load(f)
+    assert "dist_b256_n1024_d50" in manifest["artifacts"]
+    assert manifest["fingerprint"] == aot.input_fingerprint()
+
+
+def test_fingerprint_stable():
+    assert aot.input_fingerprint() == aot.input_fingerprint()

@@ -1,0 +1,166 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and value regimes; fixed-seed numpy generates
+the payloads (hypothesis drives the *shape/regime* space so shrinking
+stays fast on array inputs).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attractive, distances, ref, student_t
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(rng, shape, lo=-3.0, hi=3.0):
+    return jnp.asarray(rng.uniform(lo, hi, size=shape), jnp.float32)
+
+
+# ---------------------------------------------------------------- student_t
+@settings(max_examples=20, deadline=None)
+@given(
+    blocks=st.integers(min_value=1, max_value=4),
+    pad=st.integers(min_value=0, max_value=127),
+    seed=st.integers(min_value=0, max_value=2**31),
+    scale=st.sampled_from([0.01, 1.0, 100.0]),
+)
+def test_repulsion_matches_ref(blocks, pad, seed, scale):
+    n = blocks * student_t.TB
+    rng = np.random.default_rng(seed)
+    y = rand(rng, (n, 2)) * scale
+    real = max(n - pad, 2)
+    mask = jnp.asarray(np.arange(n) < real, jnp.float32)
+    rep, z = student_t.repulsion(y, mask)
+    rref, zref = ref.ref_repulsion(y, mask)
+    np.testing.assert_allclose(np.asarray(rep), np.asarray(rref), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(float(z), float(zref), rtol=1e-5)
+
+
+def test_repulsion_padding_exactness():
+    """Padded rows must contribute exactly nothing."""
+    rng = np.random.default_rng(0)
+    n = student_t.TB * 2
+    real = 100
+    y = rand(rng, (n, 2))
+    mask = jnp.asarray(np.arange(n) < real, jnp.float32)
+    rep, z = student_t.repulsion(y, mask)
+    # Garbage in the padding must not change results.
+    y2 = y.at[real:].set(12345.0)
+    rep2, z2 = student_t.repulsion(y2, mask)
+    np.testing.assert_allclose(np.asarray(rep[:real]), np.asarray(rep2[:real]), rtol=1e-6)
+    assert float(z) == pytest.approx(float(z2), rel=1e-6)
+    # Padded output rows are exactly zero.
+    assert float(jnp.max(jnp.abs(rep[real:]))) == 0.0
+
+
+def test_repulsion_against_rust_semantics():
+    """Tiny hand-check mirroring rust's exact_repulsion oracle."""
+    y = jnp.asarray([[0.0, 0.0], [3.0, 4.0], [0.0, 1.0]], jnp.float32)
+    yp = jnp.zeros((student_t.TB, 2), jnp.float32).at[:3].set(y)
+    mask = jnp.asarray(np.arange(student_t.TB) < 3, jnp.float32)
+    rep, z = student_t.repulsion(yp, mask)
+    # Manual: pairs (0,1) d2=25 q=1/26; (0,2) d2=1 q=1/2; (1,2) d2=9+9=18 q=1/19.
+    z_want = 2 * (1 / 26 + 1 / 2 + 1 / 19)
+    assert float(z) == pytest.approx(z_want, rel=1e-5)
+    f0 = (1 / 26) ** 2 * np.array([-3.0, -4.0]) + (1 / 2) ** 2 * np.array([0.0, -1.0])
+    np.testing.assert_allclose(np.asarray(rep[0]), f0, rtol=1e-5)
+
+
+# --------------------------------------------------------------- attractive
+@settings(max_examples=20, deadline=None)
+@given(
+    blocks=st.integers(min_value=1, max_value=3),
+    k=st.sampled_from([1, 7, 96, 192]),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_attractive_matches_ref(blocks, k, seed):
+    n = blocks * attractive.TB
+    rng = np.random.default_rng(seed)
+    y = rand(rng, (n, 2))
+    idx = jnp.asarray(rng.integers(0, n, size=(n, k)), jnp.int32)
+    p = rand(rng, (n, k), 0.0, 1.0)
+    yn = y[idx]
+    got = attractive.attractive(y, yn, p)
+    want = ref.ref_attractive(y, yn, p)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-6)
+
+
+def test_attractive_zero_p_slots_inert():
+    rng = np.random.default_rng(1)
+    n, k = attractive.TB, 8
+    y = rand(rng, (n, 2))
+    idx = jnp.asarray(rng.integers(0, n, size=(n, k)), jnp.int32)
+    p = rand(rng, (n, k), 0.0, 1.0)
+    # Zero half the slots; point them somewhere absurd.
+    p = p.at[:, 4:].set(0.0)
+    yn = y[idx]
+    yn_garbage = yn.at[:, 4:, :].set(1e6)
+    a1 = attractive.attractive(y, yn, p)
+    a2 = attractive.attractive(y, yn_garbage, p)
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a2), rtol=1e-6)
+
+
+def test_attractive_self_slots_zero():
+    """Padding convention: slot pointing at self contributes 0 even with
+    p > 0 (diff = 0)."""
+    n, k = attractive.TB, 4
+    y = jnp.asarray(np.random.default_rng(2).normal(size=(n, 2)), jnp.float32)
+    idx = jnp.tile(jnp.arange(n, dtype=jnp.int32)[:, None], (1, k))
+    p = jnp.ones((n, k), jnp.float32)
+    a = attractive.attractive(y, y[idx], p)
+    assert float(jnp.max(jnp.abs(a))) == 0.0
+
+
+# ---------------------------------------------------------------- distances
+@settings(max_examples=20, deadline=None)
+@given(
+    qb=st.integers(min_value=1, max_value=3),
+    n=st.sampled_from([64, 300, 1024]),
+    d=st.sampled_from([2, 39, 50]),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_dist_matches_ref(qb, n, d, seed):
+    b = qb * distances.TB
+    rng = np.random.default_rng(seed)
+    q = rand(rng, (b, d))
+    x = rand(rng, (n, d))
+    got = distances.dist_chunk(q, x)
+    want = ref.ref_dist_chunk(q, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_dist_nonnegative_even_for_duplicates():
+    rng = np.random.default_rng(3)
+    x = rand(rng, (64, 10))
+    q = x[: distances.TB] if distances.TB <= 64 else jnp.tile(x, (distances.TB // 64, 1))
+    got = distances.dist_chunk(q, x)
+    assert float(jnp.min(got)) >= 0.0
+    # Diagonal of self-queries is ~0.
+    diag = jnp.asarray([got[i, i] for i in range(min(64, distances.TB))])
+    assert float(jnp.max(diag)) < 1e-3
+
+
+# --------------------------------------------------------------- perplexity
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.sampled_from([4, 32]),
+    k=st.sampled_from([16, 90, 96]),
+    u=st.sampled_from([5.0, 30.0]),
+    seed=st.integers(min_value=0, max_value=2**31),
+    scale=st.sampled_from([0.1, 1.0, 1000.0]),
+)
+def test_perplexity_hits_target(b, k, u, seed, scale):
+    if u >= k:
+        return
+    rng = np.random.default_rng(seed)
+    d2 = rand(rng, (b, k), 0.01, 30.0) * scale
+    p, beta = ref.ref_perplexity(d2, jnp.float32(np.log(u)))
+    p = np.asarray(p)
+    np.testing.assert_allclose(p.sum(axis=1), 1.0, rtol=1e-4)
+    h = -(p * np.log(np.maximum(p, 1e-30))).sum(axis=1)
+    np.testing.assert_allclose(np.exp(h), u, rtol=2e-2)
+    assert np.all(np.asarray(beta) > 0)

@@ -1,0 +1,93 @@
+"""L2 correctness: model graphs vs oracles, including the padding
+conventions the Rust runtime relies on."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def test_attractive_graph_matches_gathered_ref():
+    from compile.kernels import attractive as ak
+
+    rng = np.random.default_rng(0)
+    n, k = ak.TB, 24
+    y = jnp.asarray(rng.normal(size=(n, 2)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, n, size=(n, k)), jnp.int32)
+    p = jnp.asarray(rng.random(size=(n, k)), jnp.float32)
+    (got,) = model.attractive_graph(y, idx, p)
+    want = ref.ref_attractive(y, y[idx], p)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_attractive_graph_rust_padding_convention():
+    """Rust pads unused slots with (idx=self, p=0) and whole padded rows
+    the same way; both must contribute exactly zero."""
+    from compile.kernels import attractive as ak
+
+    rng = np.random.default_rng(1)
+    n, k, real = ak.TB, 8, 100
+    y = jnp.asarray(rng.normal(size=(n, 2)), jnp.float32)
+    idx = np.tile(np.arange(n, dtype=np.int32)[:, None], (1, k))
+    p = np.zeros((n, k), np.float32)
+    # Real rows: first 3 slots are real neighbors.
+    idx[:real, :3] = rng.integers(0, real, size=(real, 3))
+    p[:real, :3] = rng.random(size=(real, 3))
+    (got,) = model.attractive_graph(y, jnp.asarray(idx), jnp.asarray(p))
+    got = np.asarray(got)
+    assert np.all(np.abs(got[real:]) == 0.0)
+    want = ref.ref_attractive(y[:real], y[jnp.asarray(idx[:real, :3])], jnp.asarray(p[:real, :3]))
+    np.testing.assert_allclose(got[:real], np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_repulsion_graph_shapes_and_mask():
+    rng = np.random.default_rng(2)
+    n = 512
+    y = jnp.asarray(rng.normal(size=(n, 2)), jnp.float32)
+    mask = jnp.asarray(np.arange(n) < 300, jnp.float32)
+    rep, z = model.repulsion_graph(y, mask)
+    assert rep.shape == (n, 2)
+    assert z.shape == ()
+    rref, zref = ref.ref_repulsion(y, mask)
+    np.testing.assert_allclose(np.asarray(rep), np.asarray(rref), rtol=1e-4, atol=1e-5)
+    assert float(z) == pytest.approx(float(zref), rel=1e-5)
+
+
+def test_perplexity_graph_row_padding():
+    """Rust pads unused slots with d2=1e10; those slots must get ~0 mass
+    and real slots must be unaffected."""
+    rng = np.random.default_rng(3)
+    b, k, real_k = 32, 96, 90
+    d2 = rng.uniform(0.5, 20.0, size=(b, k)).astype(np.float32)
+    d2[:, real_k:] = 1e10
+    target = jnp.float32(np.log(30.0))
+    p, beta = model.perplexity_graph(jnp.asarray(d2), target)
+    p = np.asarray(p)
+    assert np.all(p[:, real_k:] < 1e-6)
+    # Compare against solving only the real slots.
+    p2, _ = model.perplexity_graph(jnp.asarray(d2[:, :real_k]), target)
+    np.testing.assert_allclose(p[:, :real_k], np.asarray(p2), rtol=1e-3, atol=1e-5)
+    assert np.all(np.asarray(beta) > 0)
+
+
+def test_pca_graph_matches_numpy():
+    rng = np.random.default_rng(4)
+    b, d, k = 64, 784, 50
+    x = rng.normal(size=(b, d)).astype(np.float32)
+    mean = rng.normal(size=(d,)).astype(np.float32)
+    comps = rng.normal(size=(d, k)).astype(np.float32)
+    (got,) = model.pca_project_graph(jnp.asarray(x), jnp.asarray(mean), jnp.asarray(comps))
+    want = (x - mean) @ comps
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-3, atol=1e-3)
+
+
+def test_dist_graph_matches_ref():
+    rng = np.random.default_rng(5)
+    b, n, d = 128, 777, 50
+    q = jnp.asarray(rng.normal(size=(b, d)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    (got,) = model.dist_graph(q, x)
+    want = ref.ref_dist_chunk(q, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)

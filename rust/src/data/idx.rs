@@ -1,0 +1,179 @@
+//! IDX (MNIST) file format reader, with transparent gzip support.
+//!
+//! When real MNIST files (`train-images-idx3-ubyte[.gz]`,
+//! `train-labels-idx1-ubyte[.gz]`) are present in the data directory, the
+//! experiments run on the genuine corpus instead of the generator.
+
+use super::Dataset;
+use anyhow::{bail, Context, Result};
+use byteorder::{BigEndian, ReadBytesExt};
+use std::io::Read;
+use std::path::{Path, PathBuf};
+
+/// A parsed IDX tensor: dimensions and raw u8 payload.
+#[derive(Debug, Clone)]
+pub struct IdxTensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+/// Parse IDX from a reader (magic: 0x00 0x00 dtype ndims).
+pub fn read_idx(mut r: impl Read) -> Result<IdxTensor> {
+    let magic = r.read_u32::<BigEndian>().context("reading IDX magic")?;
+    let dtype = ((magic >> 8) & 0xff) as u8;
+    let ndims = (magic & 0xff) as usize;
+    if magic >> 16 != 0 {
+        bail!("bad IDX magic {magic:#x}");
+    }
+    if dtype != 0x08 {
+        bail!("unsupported IDX dtype {dtype:#x} (only u8 supported)");
+    }
+    if ndims == 0 || ndims > 4 {
+        bail!("implausible IDX rank {ndims}");
+    }
+    let mut dims = Vec::with_capacity(ndims);
+    let mut total = 1usize;
+    for _ in 0..ndims {
+        let d = r.read_u32::<BigEndian>()? as usize;
+        total = total
+            .checked_mul(d)
+            .with_context(|| format!("IDX dims overflow: {dims:?} x {d}"))?;
+        dims.push(d);
+    }
+    let mut data = vec![0u8; total];
+    r.read_exact(&mut data).context("reading IDX payload")?;
+    Ok(IdxTensor { dims, data })
+}
+
+/// Open a file, decompressing if the name ends in `.gz`.
+fn open_maybe_gz(path: &Path) -> Result<Box<dyn Read>> {
+    let f = std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    if path.extension().is_some_and(|e| e == "gz") {
+        Ok(Box::new(flate2::read::GzDecoder::new(f)))
+    } else {
+        Ok(Box::new(f))
+    }
+}
+
+/// Find the first existing variant of a base filename.
+fn find_variant(dir: &Path, base: &str) -> Option<PathBuf> {
+    for suffix in ["", ".gz"] {
+        let p = dir.join(format!("{base}{suffix}"));
+        if p.exists() {
+            return Some(p);
+        }
+    }
+    None
+}
+
+/// Load up to `max_n` MNIST training digits from `dir`.
+pub fn load_mnist(dir: &str, max_n: usize) -> Result<Dataset> {
+    let dir = Path::new(dir);
+    let images_path = find_variant(dir, "train-images-idx3-ubyte")
+        .with_context(|| format!("no MNIST images in {}", dir.display()))?;
+    let labels_path = find_variant(dir, "train-labels-idx1-ubyte")
+        .with_context(|| format!("no MNIST labels in {}", dir.display()))?;
+    let images = read_idx(open_maybe_gz(&images_path)?)?;
+    let labels = read_idx(open_maybe_gz(&labels_path)?)?;
+    if images.dims.len() != 3 {
+        bail!("expected rank-3 image tensor, got {:?}", images.dims);
+    }
+    let n = images.dims[0].min(labels.dims[0]).min(max_n);
+    let dim = images.dims[1] * images.dims[2];
+    let mut x = vec![0f32; n * dim];
+    for (i, v) in images.data[..n * dim].iter().enumerate() {
+        x[i] = *v as f32 / 255.0;
+    }
+    Ok(Dataset { x, n, dim, labels: labels.data[..n].to_vec(), name: "mnist".into() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    /// Serialize a small IDX tensor for round-trip tests.
+    fn make_idx(dims: &[u32], data: &[u8]) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&[0, 0, 0x08, dims.len() as u8]);
+        for &d in dims {
+            out.extend_from_slice(&d.to_be_bytes());
+        }
+        out.extend_from_slice(data);
+        out
+    }
+
+    #[test]
+    fn roundtrip_rank3() {
+        let data: Vec<u8> = (0..2 * 3 * 4).map(|i| i as u8).collect();
+        let bytes = make_idx(&[2, 3, 4], &data);
+        let t = read_idx(&bytes[..]).unwrap();
+        assert_eq!(t.dims, vec![2, 3, 4]);
+        assert_eq!(t.data, data);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let bytes = vec![1, 2, 3, 4, 0, 0, 0, 1];
+        assert!(read_idx(&bytes[..]).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_payload() {
+        let bytes = make_idx(&[10], &[1, 2, 3]); // claims 10, has 3
+        assert!(read_idx(&bytes[..]).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_dtype() {
+        let mut bytes = make_idx(&[1], &[7]);
+        bytes[2] = 0x0d; // float dtype
+        assert!(read_idx(&bytes[..]).is_err());
+    }
+
+    #[test]
+    fn load_mnist_from_tempdir() {
+        let dir = std::env::temp_dir().join(format!("bhsne-idx-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // 3 tiny 2x2 "images" + labels.
+        let images = make_idx(&[3, 2, 2], &[0, 64, 128, 255, 1, 2, 3, 4, 10, 20, 30, 40]);
+        let labels = make_idx(&[3], &[7, 1, 9]);
+        std::fs::File::create(dir.join("train-images-idx3-ubyte"))
+            .unwrap()
+            .write_all(&images)
+            .unwrap();
+        std::fs::File::create(dir.join("train-labels-idx1-ubyte"))
+            .unwrap()
+            .write_all(&labels)
+            .unwrap();
+        let d = load_mnist(dir.to_str().unwrap(), 2).unwrap();
+        assert_eq!(d.n, 2);
+        assert_eq!(d.dim, 4);
+        assert_eq!(d.labels, vec![7, 1]);
+        assert!((d.x[3] - 1.0).abs() < 1e-6); // 255 → 1.0
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_mnist_gzip_variant() {
+        let dir = std::env::temp_dir().join(format!("bhsne-idxgz-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let images = make_idx(&[1, 2, 2], &[9, 8, 7, 6]);
+        let labels = make_idx(&[1], &[3]);
+        for (name, bytes) in [("train-images-idx3-ubyte.gz", &images), ("train-labels-idx1-ubyte.gz", &labels)] {
+            let f = std::fs::File::create(dir.join(name)).unwrap();
+            let mut gz = flate2::write::GzEncoder::new(f, flate2::Compression::fast());
+            gz.write_all(bytes).unwrap();
+            gz.finish().unwrap();
+        }
+        let d = load_mnist(dir.to_str().unwrap(), 10).unwrap();
+        assert_eq!(d.n, 1);
+        assert_eq!(d.labels, vec![3]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(load_mnist("/definitely/not/a/dir", 5).is_err());
+    }
+}

@@ -1,0 +1,173 @@
+//! Embedding snapshot I/O: TSV (human/plot-friendly) and a compact binary
+//! format used by the pipeline's periodic snapshots.
+
+use anyhow::{bail, Context, Result};
+use byteorder::{LittleEndian, ReadBytesExt, WriteBytesExt};
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+/// Write `n × dim` embedding rows with labels as TSV:
+/// `y_0 <tab> ... <tab> y_{dim-1} <tab> label`.
+pub fn write_tsv(path: impl AsRef<Path>, y: &[f32], dim: usize, labels: &[u8]) -> Result<()> {
+    let n = labels.len();
+    assert!(y.len() >= n * dim);
+    if let Some(parent) = path.as_ref().parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating {}", path.as_ref().display()))?;
+    let mut w = BufWriter::new(f);
+    for i in 0..n {
+        for d in 0..dim {
+            write!(w, "{}\t", y[i * dim + d])?;
+        }
+        writeln!(w, "{}", labels[i])?;
+    }
+    Ok(())
+}
+
+/// Read an embedding TSV back: returns (y, dim, labels).
+pub fn read_tsv(path: impl AsRef<Path>) -> Result<(Vec<f32>, usize, Vec<u8>)> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {}", path.as_ref().display()))?;
+    let r = BufReader::new(f);
+    let mut y = Vec::new();
+    let mut labels = Vec::new();
+    let mut dim = 0usize;
+    for (ln, line) in r.lines().enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split('\t').collect();
+        if fields.len() < 2 {
+            bail!("line {}: expected at least 2 fields", ln + 1);
+        }
+        let this_dim = fields.len() - 1;
+        if dim == 0 {
+            dim = this_dim;
+        } else if dim != this_dim {
+            bail!("line {}: inconsistent dimensionality {this_dim} vs {dim}", ln + 1);
+        }
+        for fstr in &fields[..this_dim] {
+            y.push(fstr.parse::<f32>().with_context(|| format!("line {}: bad float", ln + 1))?);
+        }
+        labels.push(fields[this_dim].parse::<u8>().with_context(|| format!("line {}: bad label", ln + 1))?);
+    }
+    Ok((y, dim, labels))
+}
+
+const SNAP_MAGIC: u32 = 0x42_48_53_4e; // "BHSN"
+
+/// Binary snapshot: magic, version, n, dim, iter, f32 rows, u8 labels.
+pub fn write_snapshot(
+    path: impl AsRef<Path>,
+    y: &[f32],
+    dim: usize,
+    labels: &[u8],
+    iter: u64,
+) -> Result<()> {
+    let n = labels.len();
+    assert!(y.len() >= n * dim);
+    let f = std::fs::File::create(path.as_ref())?;
+    let mut w = BufWriter::new(f);
+    w.write_u32::<LittleEndian>(SNAP_MAGIC)?;
+    w.write_u32::<LittleEndian>(1)?; // version
+    w.write_u64::<LittleEndian>(n as u64)?;
+    w.write_u32::<LittleEndian>(dim as u32)?;
+    w.write_u64::<LittleEndian>(iter)?;
+    for &v in &y[..n * dim] {
+        w.write_f32::<LittleEndian>(v)?;
+    }
+    w.write_all(labels)?;
+    Ok(())
+}
+
+/// Parsed snapshot.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub y: Vec<f32>,
+    pub dim: usize,
+    pub labels: Vec<u8>,
+    pub iter: u64,
+}
+
+pub fn read_snapshot(path: impl AsRef<Path>) -> Result<Snapshot> {
+    let f = std::fs::File::open(path.as_ref())?;
+    let mut r = BufReader::new(f);
+    let magic = r.read_u32::<LittleEndian>()?;
+    if magic != SNAP_MAGIC {
+        bail!("bad snapshot magic {magic:#x}");
+    }
+    let version = r.read_u32::<LittleEndian>()?;
+    if version != 1 {
+        bail!("unsupported snapshot version {version}");
+    }
+    let n = r.read_u64::<LittleEndian>()? as usize;
+    let dim = r.read_u32::<LittleEndian>()? as usize;
+    let iter = r.read_u64::<LittleEndian>()?;
+    if n.checked_mul(dim).is_none() || n * dim > (1 << 33) {
+        bail!("implausible snapshot size {n}x{dim}");
+    }
+    let mut y = vec![0f32; n * dim];
+    for v in y.iter_mut() {
+        *v = r.read_f32::<LittleEndian>()?;
+    }
+    let mut labels = vec![0u8; n];
+    r.read_exact(&mut labels)?;
+    Ok(Snapshot { y, dim, labels, iter })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("bhsne-io-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn tsv_roundtrip() {
+        let y = vec![1.5f32, -2.0, 3.25, 4.0];
+        let labels = vec![0u8, 7];
+        let p = tmp("roundtrip.tsv");
+        write_tsv(&p, &y, 2, &labels).unwrap();
+        let (y2, dim, l2) = read_tsv(&p).unwrap();
+        assert_eq!(dim, 2);
+        assert_eq!(y2, y);
+        assert_eq!(l2, labels);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn tsv_rejects_ragged_rows() {
+        let p = tmp("ragged.tsv");
+        std::fs::write(&p, "1.0\t2.0\t0\n1.0\t3\n").unwrap();
+        assert!(read_tsv(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn snapshot_roundtrip() {
+        let y = vec![0.5f32; 6];
+        let labels = vec![1u8, 2, 3];
+        let p = tmp("snap.bin");
+        write_snapshot(&p, &y, 2, &labels, 123).unwrap();
+        let s = read_snapshot(&p).unwrap();
+        assert_eq!(s.dim, 2);
+        assert_eq!(s.iter, 123);
+        assert_eq!(s.y, y);
+        assert_eq!(s.labels, labels);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn snapshot_rejects_garbage() {
+        let p = tmp("garbage.bin");
+        std::fs::write(&p, b"not a snapshot at all").unwrap();
+        assert!(read_snapshot(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

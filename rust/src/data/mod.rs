@@ -1,0 +1,122 @@
+//! Datasets: synthetic generators standing in for the paper's four
+//! corpora (MNIST, CIFAR-10, NORB, TIMIT — see DESIGN.md §5 for the
+//! substitution rationale), an IDX loader for real MNIST when the files
+//! are present, and embedding snapshot I/O.
+
+pub mod idx;
+pub mod io;
+pub mod synthetic;
+
+/// A labeled dataset: row-major `n × dim` features and one label per row.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub x: Vec<f32>,
+    pub n: usize,
+    pub dim: usize,
+    pub labels: Vec<u8>,
+    pub name: String,
+}
+
+impl Dataset {
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Keep only the first `n` rows (scaling experiments subsample).
+    pub fn truncate(&mut self, n: usize) {
+        if n < self.n {
+            self.n = n;
+            self.x.truncate(n * self.dim);
+            self.labels.truncate(n);
+        }
+    }
+
+    /// Deterministically shuffle rows (subsampling prefixes stay i.i.d.).
+    pub fn shuffle(&mut self, seed: u64) {
+        let mut rng = crate::util::Pcg32::seeded(seed);
+        let mut perm: Vec<usize> = (0..self.n).collect();
+        rng.shuffle(&mut perm);
+        let mut x = vec![0f32; self.x.len()];
+        let mut labels = vec![0u8; self.n];
+        for (to, &from) in perm.iter().enumerate() {
+            x[to * self.dim..(to + 1) * self.dim]
+                .copy_from_slice(&self.x[from * self.dim..(from + 1) * self.dim]);
+            labels[to] = self.labels[from];
+        }
+        self.x = x;
+        self.labels = labels;
+    }
+
+    /// Number of distinct labels.
+    pub fn n_classes(&self) -> usize {
+        let mut seen = [false; 256];
+        for &l in &self.labels {
+            seen[l as usize] = true;
+        }
+        seen.iter().filter(|&&b| b).count()
+    }
+}
+
+/// Resolve a dataset by name, matching the paper's four experiments:
+/// `mnist-like`, `cifar-like`, `norb-like`, `timit-like`, plus generic
+/// `gaussians` and `swiss-roll`. `mnist` loads real IDX files from
+/// `data_dir` and falls back to the generator when absent.
+pub fn by_name(name: &str, n: usize, seed: u64, data_dir: &str) -> anyhow::Result<Dataset> {
+    use synthetic::*;
+    let spec = SyntheticSpec { n, seed, ..Default::default() };
+    Ok(match name {
+        "mnist" => match idx::load_mnist(data_dir, n) {
+            Ok(d) => d,
+            Err(e) => {
+                log::warn!("real MNIST unavailable ({e}); using mnist-like generator");
+                mnist_like(&spec)
+            }
+        },
+        "mnist-like" => mnist_like(&spec),
+        "cifar-like" => cifar_like(&spec),
+        "norb-like" => norb_like(&spec),
+        "timit-like" => timit_like(&spec),
+        "gaussians" => gaussian_mixture(&spec),
+        "swiss-roll" => swiss_roll(&spec),
+        other => anyhow::bail!("unknown dataset {other:?}"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_name_resolves_all_generators() {
+        for name in ["mnist-like", "cifar-like", "norb-like", "timit-like", "gaussians", "swiss-roll"] {
+            let d = by_name(name, 50, 1, "/nonexistent").unwrap();
+            assert_eq!(d.n, 50, "{name}");
+            assert_eq!(d.x.len(), d.n * d.dim);
+            assert_eq!(d.labels.len(), d.n);
+            assert!(d.x.iter().all(|v| v.is_finite()), "{name} has non-finite values");
+        }
+        assert!(by_name("bogus", 10, 1, ".").is_err());
+    }
+
+    #[test]
+    fn truncate_and_shuffle() {
+        let mut d = by_name("gaussians", 100, 2, ".").unwrap();
+        let before_row5 = d.row(5).to_vec();
+        d.shuffle(9);
+        // Shuffle must preserve the multiset of labels.
+        let mut seen = d.labels.clone();
+        seen.sort_unstable();
+        assert_eq!(seen.len(), 100);
+        d.truncate(40);
+        assert_eq!(d.n, 40);
+        assert_eq!(d.x.len(), 40 * d.dim);
+        let _ = before_row5;
+    }
+
+    #[test]
+    fn mnist_falls_back_to_generator() {
+        let d = by_name("mnist", 30, 3, "/definitely/not/here").unwrap();
+        assert_eq!(d.n, 30);
+        assert_eq!(d.dim, 784);
+    }
+}

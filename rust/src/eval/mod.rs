@@ -1,0 +1,157 @@
+//! Embedding-quality metrics.
+//!
+//! The paper's quantitative metric is the **1-nearest-neighbor error** of
+//! the embedding (fraction of points whose nearest neighbor in the 2-D
+//! map has a different class label). We also ship generalized k-NN error
+//! and trustworthiness (Venna & Kaski) for the extended benches.
+
+use crate::knn::{KnnBackend, VpTreeKnn};
+use crate::util::ThreadPool;
+
+/// 1-NN classification error of an embedding (paper's Figures 2/3/6/7).
+pub fn one_nn_error(pool: &ThreadPool, y: &[f32], dim: usize, labels: &[u8]) -> f64 {
+    knn_error(pool, y, dim, labels, 1)
+}
+
+/// k-NN (majority-vote) classification error.
+pub fn knn_error(pool: &ThreadPool, y: &[f32], dim: usize, labels: &[u8], k: usize) -> f64 {
+    let n = labels.len();
+    assert!(y.len() >= n * dim);
+    assert!(n > k);
+    let r = VpTreeKnn.knn_all(pool, y, n, dim, k, 0x316e6e /* "1nn" */);
+    let mut wrong = 0usize;
+    for i in 0..n {
+        // Majority vote over the k neighbors (k=1 reduces to the paper's
+        // metric).
+        let mut counts = [0u32; 256];
+        for j in 0..k {
+            counts[labels[r.indices[i * k + j] as usize] as usize] += 1;
+        }
+        let pred = counts.iter().enumerate().max_by_key(|&(_, &c)| c).unwrap().0;
+        if pred != labels[i] as usize {
+            wrong += 1;
+        }
+    }
+    wrong as f64 / n as f64
+}
+
+/// Trustworthiness T(k): penalizes points that are close in the embedding
+/// but far in the original space. 1.0 = perfect.
+pub fn trustworthiness(
+    pool: &ThreadPool,
+    x: &[f32],
+    x_dim: usize,
+    y: &[f32],
+    y_dim: usize,
+    n: usize,
+    k: usize,
+) -> f64 {
+    assert!(k < n / 2, "trustworthiness requires k < n/2");
+    // Ranks in the original space: full sort per point (O(N² log N) — use
+    // on eval-sized subsets only).
+    let knn_y = VpTreeKnn.knn_all(pool, y, n, y_dim, k, 1);
+    let mut penalty = 0f64;
+    for i in 0..n {
+        // Rank of each embedding-neighbor in the original space.
+        let xi = &x[i * x_dim..(i + 1) * x_dim];
+        let mut d2: Vec<(f32, u32)> = (0..n)
+            .filter(|&j| j != i)
+            .map(|j| {
+                let xj = &x[j * x_dim..(j + 1) * x_dim];
+                let d: f32 = xi.iter().zip(xj).map(|(a, b)| (a - b) * (a - b)).sum();
+                (d, j as u32)
+            })
+            .collect();
+        d2.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut rank = vec![0usize; n];
+        for (r, &(_, j)) in d2.iter().enumerate() {
+            rank[j as usize] = r + 1; // 1-based
+        }
+        for j in 0..k {
+            let nb = knn_y.indices[i * k + j] as usize;
+            let r = rank[nb];
+            if r > k {
+                penalty += (r - k) as f64;
+            }
+        }
+    }
+    let norm = 2.0 / (n as f64 * k as f64 * (2.0 * n as f64 - 3.0 * k as f64 - 1.0));
+    1.0 - norm * penalty
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn perfectly_separated_clusters_have_zero_error() {
+        let n = 100;
+        let mut y = Vec::with_capacity(n * 2);
+        let mut labels = Vec::with_capacity(n);
+        let mut rng = Pcg32::seeded(1);
+        for i in 0..n {
+            let c = (i % 2) as f32 * 100.0;
+            y.push(c + rng.uniform_f32());
+            y.push(c + rng.uniform_f32());
+            labels.push((i % 2) as u8);
+        }
+        let pool = ThreadPool::new(2);
+        assert_eq!(one_nn_error(&pool, &y, 2, &labels), 0.0);
+    }
+
+    #[test]
+    fn random_labels_near_chance() {
+        let n = 600;
+        let mut rng = Pcg32::seeded(2);
+        let y: Vec<f32> = (0..n * 2).map(|_| rng.uniform_f32() * 10.0).collect();
+        let labels: Vec<u8> = (0..n).map(|_| rng.below(4) as u8).collect();
+        let pool = ThreadPool::new(4);
+        let err = one_nn_error(&pool, &y, 2, &labels);
+        assert!((err - 0.75).abs() < 0.08, "err={err}");
+    }
+
+    #[test]
+    fn knn_error_majority_helps_on_noise() {
+        // Two overlapping clusters with 10% label noise: k=15 vote should
+        // beat k=1.
+        let n = 400;
+        let mut rng = Pcg32::seeded(3);
+        let mut y = Vec::new();
+        let mut labels = Vec::new();
+        for i in 0..n {
+            let c = (i % 2) as f64 * 4.0;
+            y.push((c + rng.normal()) as f32);
+            y.push(rng.normal() as f32);
+            let true_l = (i % 2) as u8;
+            labels.push(if rng.uniform() < 0.1 { 1 - true_l } else { true_l });
+        }
+        let pool = ThreadPool::new(2);
+        let e1 = knn_error(&pool, &y, 2, &labels, 1);
+        let e15 = knn_error(&pool, &y, 2, &labels, 15);
+        assert!(e15 < e1 + 0.02, "e1={e1} e15={e15}");
+    }
+
+    #[test]
+    fn trustworthiness_perfect_for_identity() {
+        // Embedding == data ⇒ trustworthiness 1.
+        let n = 80;
+        let mut rng = Pcg32::seeded(4);
+        let x: Vec<f32> = (0..n * 2).map(|_| rng.normal() as f32).collect();
+        let pool = ThreadPool::new(2);
+        let t = trustworthiness(&pool, &x, 2, &x, 2, n, 10);
+        assert!((t - 1.0).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    fn trustworthiness_penalizes_shuffled_embedding() {
+        let n = 80;
+        let mut rng = Pcg32::seeded(5);
+        let x: Vec<f32> = (0..n * 2).map(|_| rng.normal() as f32).collect();
+        // Random unrelated embedding.
+        let y: Vec<f32> = (0..n * 2).map(|_| rng.normal() as f32).collect();
+        let pool = ThreadPool::new(2);
+        let t = trustworthiness(&pool, &x, 2, &y, 2, n, 10);
+        assert!(t < 0.85, "t={t}");
+    }
+}

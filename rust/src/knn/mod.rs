@@ -1,0 +1,170 @@
+//! k-nearest-neighbor backends.
+//!
+//! The paper uses a vantage-point tree; we also ship an exact brute-force
+//! backend (the O(N²) comparator and the correctness oracle) and, when
+//! AOT artifacts are present, an XLA-offloaded brute-force backend that
+//! computes distance chunks on the PJRT runtime (`runtime::XlaKnn`).
+
+use crate::util::ThreadPool;
+use crate::vptree::VpTree;
+
+/// Output of an all-pairs kNN query: row-major `n × k` neighbor indices
+/// and distances, each row ascending by distance, self excluded.
+#[derive(Debug, Clone)]
+pub struct KnnResult {
+    pub indices: Vec<u32>,
+    pub distances: Vec<f32>,
+}
+
+/// Strategy interface for all-pairs kNN.
+pub trait KnnBackend: Sync {
+    fn name(&self) -> &'static str;
+    fn knn_all(
+        &self,
+        pool: &ThreadPool,
+        x: &[f32],
+        n: usize,
+        dim: usize,
+        k: usize,
+        seed: u64,
+    ) -> KnnResult;
+}
+
+/// Vantage-point-tree backend (§4.1): O(uN log N).
+pub struct VpTreeKnn;
+
+impl KnnBackend for VpTreeKnn {
+    fn name(&self) -> &'static str {
+        "vptree"
+    }
+
+    fn knn_all(
+        &self,
+        pool: &ThreadPool,
+        x: &[f32],
+        n: usize,
+        dim: usize,
+        k: usize,
+        seed: u64,
+    ) -> KnnResult {
+        let tree = VpTree::build(x, n, dim, seed);
+        let (indices, distances) = tree.knn_all(pool, k);
+        KnnResult { indices, distances }
+    }
+}
+
+/// Exact brute-force backend: O(N²·D). The baseline t-SNE input stage and
+/// the oracle for vp-tree tests.
+pub struct BruteKnn;
+
+impl KnnBackend for BruteKnn {
+    fn name(&self) -> &'static str {
+        "brute"
+    }
+
+    fn knn_all(
+        &self,
+        pool: &ThreadPool,
+        x: &[f32],
+        n: usize,
+        dim: usize,
+        k: usize,
+        _seed: u64,
+    ) -> KnnResult {
+        let k = k.min(n - 1);
+        let mut indices = vec![0u32; n * k];
+        let mut distances = vec![0f32; n * k];
+        struct Cells<T>(*mut T);
+        unsafe impl<T: Send> Send for Cells<T> {}
+        unsafe impl<T: Send> Sync for Cells<T> {}
+        let ic = Cells(indices.as_mut_ptr());
+        let dc = Cells(distances.as_mut_ptr());
+        pool.scope_chunks(n, 8, |lo, hi| {
+            let _ = (&ic, &dc);
+            let mut heap_buf: Vec<(f32, u32)> = Vec::with_capacity(n);
+            for i in lo..hi {
+                heap_buf.clear();
+                let xi = &x[i * dim..(i + 1) * dim];
+                for j in 0..n {
+                    if j == i {
+                        continue;
+                    }
+                    let xj = &x[j * dim..(j + 1) * dim];
+                    let mut d2 = 0f32;
+                    for d in 0..dim {
+                        let diff = xi[d] - xj[d];
+                        d2 += diff * diff;
+                    }
+                    heap_buf.push((d2, j as u32));
+                }
+                // Partial selection of the k smallest.
+                let kk = k.min(heap_buf.len());
+                heap_buf.select_nth_unstable_by(kk - 1, |a, b| a.0.partial_cmp(&b.0).unwrap());
+                heap_buf[..kk].sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                for (slot, &(d2, j)) in heap_buf[..kk].iter().enumerate() {
+                    // SAFETY: disjoint rows across chunks.
+                    unsafe {
+                        *ic.0.add(i * k + slot) = j;
+                        *dc.0.add(i * k + slot) = d2.sqrt();
+                    }
+                }
+            }
+        });
+        KnnResult { indices, distances }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn random_data(n: usize, dim: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::seeded(seed);
+        (0..n * dim).map(|_| rng.uniform_range(-3.0, 3.0) as f32).collect()
+    }
+
+    #[test]
+    fn vptree_and_brute_agree() {
+        let (n, dim, k) = (200, 6, 12);
+        let x = random_data(n, dim, 1);
+        let pool = ThreadPool::new(4);
+        let a = VpTreeKnn.knn_all(&pool, &x, n, dim, k, 9);
+        let b = BruteKnn.knn_all(&pool, &x, n, dim, k, 9);
+        for i in 0..n * k {
+            assert!(
+                (a.distances[i] - b.distances[i]).abs() < 1e-5,
+                "slot {i}: vptree {} brute {}",
+                a.distances[i],
+                b.distances[i]
+            );
+        }
+    }
+
+    #[test]
+    fn rows_sorted_and_self_free() {
+        let (n, dim, k) = (100, 4, 8);
+        let x = random_data(n, dim, 2);
+        let pool = ThreadPool::new(2);
+        for backend in [&VpTreeKnn as &dyn KnnBackend, &BruteKnn] {
+            let r = backend.knn_all(&pool, &x, n, dim, k, 3);
+            for i in 0..n {
+                for j in 0..k {
+                    assert_ne!(r.indices[i * k + j], i as u32, "{} self-loop", backend.name());
+                    if j > 0 {
+                        assert!(r.distances[i * k + j] >= r.distances[i * k + j - 1]);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn k_clamped_to_n_minus_1() {
+        let (n, dim) = (5, 2);
+        let x = random_data(n, dim, 3);
+        let pool = ThreadPool::new(1);
+        let r = BruteKnn.knn_all(&pool, &x, n, dim, 10, 4);
+        assert_eq!(r.indices.len(), n * 4);
+    }
+}

@@ -1,0 +1,30 @@
+//! # Barnes-Hut-SNE
+//!
+//! A production-grade reproduction of *Barnes-Hut-SNE* (van der Maaten,
+//! ICLR 2013): O(N log N) t-SNE via vantage-point-tree nearest-neighbor
+//! search and Barnes-Hut approximation of the repulsive gradient forces.
+//!
+//! The system is a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordinator: trees, gradient assembly,
+//!   optimizer, datasets, evaluation, the embedding-job pipeline, and a
+//!   PJRT runtime that executes AOT-compiled XLA artifacts.
+//! * **L2 (`python/compile/model.py`)** — JAX compute graphs (exact
+//!   gradient, attractive forces, perplexity search, PCA), lowered once
+//!   to HLO text by `python/compile/aot.py`.
+//! * **L1 (`python/compile/kernels/`)** — Pallas kernels for the dense
+//!   tiles inside the L2 graphs, validated against pure-jnp oracles.
+//!
+//! Python never runs on the request path; the Rust binary is
+//! self-contained once `make artifacts` has produced `artifacts/`.
+
+pub mod data;
+pub mod eval;
+pub mod knn;
+pub mod pca;
+pub mod pipeline;
+pub mod runtime;
+pub mod sne;
+pub mod spatial;
+pub mod util;
+pub mod vptree;

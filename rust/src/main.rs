@@ -1,0 +1,302 @@
+//! `bhsne` — Barnes-Hut-SNE command-line launcher.
+//!
+//! Subcommands:
+//!   embed     run one embedding job (dataset → PCA → BH-SNE → eval)
+//!   sweep     parameter sweeps (θ, ρ, N) reproducing the paper's figures
+//!   quadtree  dump the quadtree of a small embedding (Figure 1)
+//!   info      show artifact/runtime status
+//!
+//! Configuration comes from an optional TOML-subset file (`--config`)
+//! overridden by CLI flags.
+
+use bhsne::data;
+use bhsne::pipeline::{run_job, run_sweep, JobConfig};
+use bhsne::runtime::SneEngine;
+use bhsne::sne::{RepulsionMethod, TsneConfig};
+use bhsne::util::args::{parse, ArgError, CommandSpec};
+use bhsne::util::config::Config;
+
+fn main() {
+    bhsne::util::logger::init(None);
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn top_help() -> String {
+    "bhsne — Barnes-Hut-SNE (van der Maaten, ICLR 2013) reproduction\n\n\
+     USAGE:\n  bhsne <COMMAND> [OPTIONS]\n\n\
+     COMMANDS:\n  \
+     embed     run one embedding job\n  \
+     sweep     run a parameter sweep (theta | rho | size)\n  \
+     quadtree  visualize the quadtree of a small embedding (Figure 1)\n  \
+     info      artifact/runtime status\n\n\
+     Run `bhsne <COMMAND> --help` for options.\n"
+        .to_string()
+}
+
+fn run(args: &[String]) -> anyhow::Result<()> {
+    let Some(cmd) = args.first() else {
+        print!("{}", top_help());
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "embed" => cmd_embed(rest),
+        "sweep" => cmd_sweep(rest),
+        "quadtree" => cmd_quadtree(rest),
+        "info" => cmd_info(rest),
+        "--help" | "-h" | "help" => {
+            print!("{}", top_help());
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command {other:?}; try --help"),
+    }
+}
+
+fn embed_spec() -> CommandSpec {
+    CommandSpec::new("embed", "run one embedding job")
+        .opt("dataset", "mnist-like", "dataset name (mnist|mnist-like|cifar-like|norb-like|timit-like|gaussians|swiss-roll)")
+        .opt("n", "5000", "number of points")
+        .opt("theta", "0.5", "BH trade-off (0 = exact t-SNE)")
+        .opt("rho", "-1", "use dual-tree repulsion with this rho (>0 enables)")
+        .opt("perplexity", "30", "perplexity u")
+        .opt("iters", "1000", "gradient iterations")
+        .opt("exaggeration", "12", "early exaggeration alpha")
+        .opt("eta", "200", "learning rate")
+        .opt("seed", "42", "RNG seed")
+        .opt("out-dim", "2", "embedding dimensionality (2 or 3)")
+        .opt("out", "out/run", "output directory")
+        .opt("data-dir", "data", "directory with real datasets (IDX)")
+        .opt("snapshot-every", "0", "snapshot interval in iterations")
+        .opt("threads", "0", "worker threads (0 = all cores)")
+        .opt("config", "", "TOML config file (CLI flags override)")
+        .flag("xla", "offload regular ops to AOT XLA artifacts")
+        .flag("brute-knn", "use brute-force kNN instead of the vp-tree")
+}
+
+fn job_from_parsed(p: &bhsne::util::args::Parsed) -> anyhow::Result<JobConfig> {
+    // Start from optional config file.
+    let mut cfg = JobConfig::default();
+    let config_path = p.str("config").unwrap_or("");
+    if !config_path.is_empty() {
+        let file = Config::load(config_path)?;
+        cfg.dataset = file.str_or("job.dataset", &cfg.dataset);
+        cfg.n = file.usize_or("job.n", cfg.n);
+        cfg.data_dir = file.str_or("job.data_dir", &cfg.data_dir);
+        cfg.tsne.theta = file.float_or("tsne.theta", cfg.tsne.theta as f64) as f32;
+        cfg.tsne.perplexity = file.float_or("tsne.perplexity", cfg.tsne.perplexity);
+        cfg.tsne.iters = file.usize_or("tsne.iters", cfg.tsne.iters);
+        cfg.tsne.exaggeration = file.float_or("tsne.exaggeration", cfg.tsne.exaggeration as f64) as f32;
+        cfg.tsne.eta = file.float_or("tsne.eta", cfg.tsne.eta);
+        cfg.tsne.seed = file.int_or("tsne.seed", cfg.tsne.seed as i64) as u64;
+        cfg.use_xla = file.bool_or("job.xla", cfg.use_xla);
+    }
+    // CLI overrides.
+    cfg.dataset = p.str("dataset").unwrap_or(&cfg.dataset).to_string();
+    cfg.n = p.get("n").map_err(anyhow::Error::msg)?;
+    cfg.data_dir = p.str("data-dir").unwrap_or(&cfg.data_dir).to_string();
+    cfg.tsne.theta = p.get("theta").map_err(anyhow::Error::msg)?;
+    let rho: f32 = p.get("rho").map_err(anyhow::Error::msg)?;
+    if rho > 0.0 {
+        cfg.tsne.repulsion = Some(RepulsionMethod::DualTree { rho });
+    }
+    cfg.tsne.perplexity = p.get("perplexity").map_err(anyhow::Error::msg)?;
+    cfg.tsne.iters = p.get("iters").map_err(anyhow::Error::msg)?;
+    cfg.tsne.exaggeration = p.get("exaggeration").map_err(anyhow::Error::msg)?;
+    cfg.tsne.eta = p.get("eta").map_err(anyhow::Error::msg)?;
+    cfg.tsne.seed = p.get("seed").map_err(anyhow::Error::msg)?;
+    cfg.tsne.out_dim = p.get("out-dim").map_err(anyhow::Error::msg)?;
+    cfg.snapshot_every = p.get("snapshot-every").map_err(anyhow::Error::msg)?;
+    cfg.threads = p.get("threads").map_err(anyhow::Error::msg)?;
+    cfg.out_dir = Some(p.str("out").unwrap_or("out/run").into());
+    if p.flag("xla") {
+        cfg.use_xla = true;
+    }
+    if p.flag("brute-knn") {
+        cfg.tsne.knn = bhsne::sne::KnnChoice::Brute;
+    }
+    Ok(cfg)
+}
+
+fn cmd_embed(args: &[String]) -> anyhow::Result<()> {
+    let spec = embed_spec();
+    let p = match parse(&spec, "bhsne", args) {
+        Ok(p) => p,
+        Err(ArgError::Help(h)) => {
+            print!("{h}");
+            return Ok(());
+        }
+        Err(e) => anyhow::bail!("{e}"),
+    };
+    let cfg = job_from_parsed(&p)?;
+    let r = run_job(cfg)?;
+    println!("dataset          : {}", r.dataset_name);
+    println!("points           : {}", r.n);
+    println!("1-NN error       : {:.4}", r.one_nn_error);
+    println!("final KL         : {:?}", r.final_kl);
+    println!("embed time (s)   : {:.2}", r.timings.embed_secs);
+    println!("{}", r.metrics.render());
+    Ok(())
+}
+
+fn cmd_sweep(args: &[String]) -> anyhow::Result<()> {
+    let spec = CommandSpec::new("sweep", "parameter sweeps reproducing the paper's figures")
+        .req("param", "what to sweep: theta | rho | size")
+        .opt("values", "", "comma-separated sweep values (defaults per param)")
+        .opt("dataset", "mnist-like", "dataset name")
+        .opt("n", "5000", "points (fixed for theta/rho sweeps)")
+        .opt("iters", "1000", "gradient iterations")
+        .opt("seed", "42", "RNG seed")
+        .opt("threads", "0", "worker threads")
+        .flag("xla", "use XLA artifacts where available");
+    let p = match parse(&spec, "bhsne", args) {
+        Ok(p) => p,
+        Err(ArgError::Help(h)) => {
+            print!("{h}");
+            return Ok(());
+        }
+        Err(e) => anyhow::bail!("{e}"),
+    };
+    let param = p.str("param").unwrap().to_string();
+    let base = JobConfig {
+        dataset: p.str("dataset").unwrap_or("mnist-like").to_string(),
+        n: p.get("n").map_err(anyhow::Error::msg)?,
+        tsne: TsneConfig {
+            iters: p.get("iters").map_err(anyhow::Error::msg)?,
+            seed: p.get("seed").map_err(anyhow::Error::msg)?,
+            ..Default::default()
+        },
+        use_xla: p.flag("xla"),
+        threads: p.get("threads").map_err(anyhow::Error::msg)?,
+        ..Default::default()
+    };
+    let values: Vec<f64> = if p.str("values").unwrap_or("").is_empty() {
+        match param.as_str() {
+            "theta" => vec![0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.8, 1.0],
+            "rho" => vec![0.05, 0.1, 0.15, 0.2, 0.25, 0.3, 0.4, 0.5],
+            "size" => vec![1000.0, 2000.0, 5000.0, 10000.0],
+            other => anyhow::bail!("unknown sweep param {other:?}"),
+        }
+    } else {
+        p.list("values").map_err(anyhow::Error::msg)?
+    };
+    let jobs: Vec<JobConfig> = values
+        .iter()
+        .map(|&v| {
+            let mut j = base.clone();
+            match param.as_str() {
+                "theta" => j.tsne.theta = v as f32,
+                "rho" => j.tsne.repulsion = Some(RepulsionMethod::DualTree { rho: v as f32 }),
+                _ => j.n = v as usize,
+            }
+            j
+        })
+        .collect();
+    let results = run_sweep(jobs)?;
+    println!("{:>10} {:>12} {:>12} {:>14}", param, "embed_s", "1nn_err", "final_kl");
+    for (v, r) in values.iter().zip(&results) {
+        println!(
+            "{v:>10} {:>12.2} {:>12.4} {:>14.4}",
+            r.timings.embed_secs,
+            r.one_nn_error,
+            r.final_kl.unwrap_or(f64::NAN)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_quadtree(args: &[String]) -> anyhow::Result<()> {
+    let spec = CommandSpec::new("quadtree", "embed a small dataset and print its quadtree (Figure 1)")
+        .opt("n", "500", "points")
+        .opt("dataset", "mnist-like", "dataset")
+        .opt("iters", "300", "iterations")
+        .opt("seed", "42", "seed");
+    let p = match parse(&spec, "bhsne", args) {
+        Ok(p) => p,
+        Err(ArgError::Help(h)) => {
+            print!("{h}");
+            return Ok(());
+        }
+        Err(e) => anyhow::bail!("{e}"),
+    };
+    let cfg = JobConfig {
+        dataset: p.str("dataset").unwrap_or("mnist-like").to_string(),
+        n: p.get("n").map_err(anyhow::Error::msg)?,
+        tsne: TsneConfig {
+            iters: p.get("iters").map_err(anyhow::Error::msg)?,
+            seed: p.get("seed").map_err(anyhow::Error::msg)?,
+            cost_every: 0,
+            ..Default::default()
+        },
+        eval_cap: 0,
+        ..Default::default()
+    };
+    let n = cfg.n;
+    let r = run_job(cfg)?;
+    let tree = bhsne::spatial::QuadTree::build(&r.embedding, n);
+    let stats = tree.stats();
+    println!(
+        "quadtree: {} nodes, {} leaves ({} occupied), depth {}",
+        stats.nodes, stats.leaves, stats.occupied_leaves, stats.max_depth
+    );
+    // ASCII density map of the embedding.
+    let mut rows = vec![vec![0u32; 64]; 32];
+    let (mut lo, mut hi) = ([f32::MAX; 2], [f32::MIN; 2]);
+    for i in 0..n {
+        for d in 0..2 {
+            lo[d] = lo[d].min(r.embedding[i * 2 + d]);
+            hi[d] = hi[d].max(r.embedding[i * 2 + d]);
+        }
+    }
+    for i in 0..n {
+        let cx = ((r.embedding[i * 2] - lo[0]) / (hi[0] - lo[0]).max(1e-9) * 63.0) as usize;
+        let cy = ((r.embedding[i * 2 + 1] - lo[1]) / (hi[1] - lo[1]).max(1e-9) * 31.0) as usize;
+        rows[cy.min(31)][cx.min(63)] += 1;
+    }
+    for row in rows {
+        let line: String = row
+            .iter()
+            .map(|&c| match c {
+                0 => ' ',
+                1..=2 => '.',
+                3..=6 => 'o',
+                _ => '#',
+            })
+            .collect();
+        println!("{line}");
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &[String]) -> anyhow::Result<()> {
+    let spec = CommandSpec::new("info", "artifact and runtime status");
+    let _ = match parse(&spec, "bhsne", args) {
+        Ok(p) => p,
+        Err(ArgError::Help(h)) => {
+            print!("{h}");
+            return Ok(());
+        }
+        Err(e) => anyhow::bail!("{e}"),
+    };
+    println!("datasets: mnist mnist-like cifar-like norb-like timit-like gaussians swiss-roll");
+    let _ = data::by_name("gaussians", 4, 0, ".")?;
+    match SneEngine::from_env() {
+        Ok(engine) => {
+            println!("PJRT platform: {}", engine.runtime().platform());
+            println!("artifact dir : {}", engine.runtime().dir().display());
+            for name in engine.registry().all_names() {
+                let status = if engine.runtime().has_artifact(&name) { "present" } else { "MISSING" };
+                println!("  {name:<36} {status}");
+            }
+        }
+        Err(e) => println!("XLA runtime unavailable: {e}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,348 @@
+//! PCA preprocessing.
+//!
+//! The paper reduces every dataset with D > 50 to 50 dimensions by PCA
+//! before running (BH-)SNE. We implement PCA via the Gram-matrix trick
+//! plus blocked subspace (orthogonal) iteration — no LAPACK in the vendor
+//! set — and optionally offload the final `X·W` projection to an AOT XLA
+//! artifact through the runtime.
+
+use crate::util::{Pcg32, ThreadPool};
+
+/// Result of a PCA fit.
+#[derive(Debug, Clone)]
+pub struct Pca {
+    /// Per-feature means subtracted before projection (length `dim`).
+    pub mean: Vec<f32>,
+    /// Projection matrix, row-major `dim × k` (columns are components).
+    pub components: Vec<f32>,
+    pub dim: usize,
+    pub k: usize,
+    /// Eigenvalues (variance along each component), descending.
+    pub eigenvalues: Vec<f64>,
+}
+
+/// Fit a k-component PCA on `n × dim` data via covariance + subspace
+/// iteration. O(n·dim·k) per iteration; `iters`=30 is plenty for the
+/// well-separated spectra of real data.
+pub fn fit(pool: &ThreadPool, x: &[f32], n: usize, dim: usize, k: usize, seed: u64) -> Pca {
+    assert!(x.len() >= n * dim);
+    let k = k.min(dim).min(n);
+    // Feature means.
+    let mut mean = vec![0f32; dim];
+    for i in 0..n {
+        for d in 0..dim {
+            mean[d] += x[i * dim + d];
+        }
+    }
+    for m in mean.iter_mut() {
+        *m /= n as f32;
+    }
+
+    // Subspace iteration on the covariance operator C = Xᶜᵀ Xᶜ / n applied
+    // implicitly: V ← orth(Xᶜᵀ (Xᶜ V)). Never materializes the dim × dim
+    // covariance (dim can be 9216).
+    let mut rng = Pcg32::new(seed, 0x7063 /* "pc" */);
+    let mut v = vec![0f32; dim * k];
+    for e in v.iter_mut() {
+        *e = rng.normal() as f32;
+    }
+    orthonormalize(&mut v, dim, k);
+
+    let iters = 20;
+    let mut xv = vec![0f32; n * k];
+    let mut eig = vec![0f64; k];
+    for _ in 0..iters {
+        project_centered(pool, x, n, dim, &mean, &v, k, &mut xv);
+        // w = Xᶜᵀ (Xᶜ V)  (dim × k), accumulated in f64 then cast.
+        let mut w64 = vec![0f64; dim * k];
+        {
+            // Parallel over feature rows would need a transpose; instead
+            // parallelize over data chunks with per-chunk partials.
+            const CHUNK: usize = 512;
+            let n_chunks = n.div_ceil(CHUNK);
+            let mut partials = vec![0f64; n_chunks * dim * k];
+            struct Cells(*mut f64);
+            unsafe impl Send for Cells {}
+            unsafe impl Sync for Cells {}
+            let pc = Cells(partials.as_mut_ptr());
+            pool.scope_chunks(n, CHUNK, |lo, hi| {
+                let _ = &pc;
+                let slot = lo / CHUNK;
+                // SAFETY: each chunk owns its slot.
+                let part = unsafe {
+                    std::slice::from_raw_parts_mut(pc.0.add(slot * dim * k), dim * k)
+                };
+                for i in lo..hi {
+                    let xi = &x[i * dim..(i + 1) * dim];
+                    let yi = &xv[i * k..(i + 1) * k];
+                    for d in 0..dim {
+                        let c = (xi[d] - mean[d]) as f64;
+                        for j in 0..k {
+                            part[d * k + j] += c * yi[j] as f64;
+                        }
+                    }
+                }
+            });
+            for slot in 0..n_chunks {
+                for e in 0..dim * k {
+                    w64[e] += partials[slot * dim * k + e];
+                }
+            }
+        }
+        // Eigenvalue estimates: Rayleigh quotients before orthonormalizing.
+        for j in 0..k {
+            let mut num = 0f64;
+            for d in 0..dim {
+                num += w64[d * k + j] * v[d * k + j] as f64;
+            }
+            eig[j] = num / n as f64;
+        }
+        for (dst, &s) in v.iter_mut().zip(w64.iter()) {
+            *dst = s as f32;
+        }
+        orthonormalize(&mut v, dim, k);
+    }
+    // Sort components by descending eigenvalue.
+    let mut order: Vec<usize> = (0..k).collect();
+    order.sort_by(|&a, &b| eig[b].partial_cmp(&eig[a]).unwrap());
+    let mut sorted_v = vec![0f32; dim * k];
+    let mut sorted_e = vec![0f64; k];
+    for (to, &from) in order.iter().enumerate() {
+        sorted_e[to] = eig[from];
+        for d in 0..dim {
+            sorted_v[d * k + to] = v[d * k + from];
+        }
+    }
+    Pca { mean, components: sorted_v, dim, k, eigenvalues: sorted_e }
+}
+
+/// Project `n × dim` data onto the fitted components → `n × k`.
+pub fn transform(pool: &ThreadPool, pca: &Pca, x: &[f32], n: usize) -> Vec<f32> {
+    let mut out = vec![0f32; n * pca.k];
+    project_centered(pool, x, n, pca.dim, &pca.mean, &pca.components, pca.k, &mut out);
+    out
+}
+
+/// Fit + transform, reducing to at most `target_dim` (the paper's 50)
+/// only when `dim > target_dim`.
+pub fn reduce_if_needed(
+    pool: &ThreadPool,
+    x: &[f32],
+    n: usize,
+    dim: usize,
+    target_dim: usize,
+    seed: u64,
+) -> (Vec<f32>, usize) {
+    if dim <= target_dim {
+        return (x[..n * dim].to_vec(), dim);
+    }
+    // Fit on a subsample: 50 components are estimated accurately from a
+    // few thousand rows, and the fit is O(iters·n·dim·k) — the dominant
+    // preprocessing cost for NORB-sized inputs.
+    let fit_n = n.min(2000);
+    let pca = fit(pool, x, fit_n, dim, target_dim, seed);
+    (transform(pool, &pca, x, n), target_dim)
+}
+
+/// out[i] = (x_i − mean) · V  (n × k), parallel over rows.
+fn project_centered(
+    pool: &ThreadPool,
+    x: &[f32],
+    n: usize,
+    dim: usize,
+    mean: &[f32],
+    v: &[f32],
+    k: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(out.len(), n * k);
+    struct Cells(*mut f32);
+    unsafe impl Send for Cells {}
+    unsafe impl Sync for Cells {}
+    let oc = Cells(out.as_mut_ptr());
+    pool.scope_chunks(n, 64, |lo, hi| {
+        let _ = &oc;
+        for i in lo..hi {
+            let xi = &x[i * dim..(i + 1) * dim];
+            let row = unsafe { std::slice::from_raw_parts_mut(oc.0.add(i * k), k) };
+            let mut acc = vec![0f64; k];
+            for d in 0..dim {
+                let c = (xi[d] - mean[d]) as f64;
+                if c != 0.0 {
+                    let vr = &v[d * k..(d + 1) * k];
+                    for j in 0..k {
+                        acc[j] += c * vr[j] as f64;
+                    }
+                }
+            }
+            for j in 0..k {
+                row[j] = acc[j] as f32;
+            }
+        }
+    });
+}
+
+/// Modified Gram-Schmidt with re-orthogonalization ("twice is enough",
+/// Kahan/Parlett) on the k columns of a `dim × k` row-major matrix. The
+/// second pass is essential for rank-deficient inputs: the residual of a
+/// nearly-dependent column is dominated by rounding noise that is *not*
+/// orthogonal to the earlier columns until re-projected.
+fn orthonormalize(v: &mut [f32], dim: usize, k: usize) {
+    for j in 0..k {
+        // Two projection-subtraction passes onto previous columns.
+        for _pass in 0..2 {
+            for p in 0..j {
+                let mut dot = 0f64;
+                for d in 0..dim {
+                    dot += v[d * k + j] as f64 * v[d * k + p] as f64;
+                }
+                for d in 0..dim {
+                    v[d * k + j] -= (dot * v[d * k + p] as f64) as f32;
+                }
+            }
+        }
+        let mut norm = 0f64;
+        for d in 0..dim {
+            norm += (v[d * k + j] as f64).powi(2);
+        }
+        let mut norm = norm.sqrt();
+        if norm < 1e-9 {
+            // Degenerate column (rank-deficient data can zero a column
+            // under Gram-Schmidt). Replace with successive standard-basis
+            // vectors, re-orthogonalized, until one survives — the result
+            // is arbitrary but keeps V orthonormal, which downstream code
+            // relies on (projection must be a contraction).
+            'attempt: for attempt in 0..dim {
+                let e = (j + attempt) % dim;
+                for d in 0..dim {
+                    v[d * k + j] = if d == e { 1.0 } else { 0.0 };
+                }
+                for p in 0..j {
+                    let mut dot = 0f64;
+                    for d in 0..dim {
+                        dot += v[d * k + j] as f64 * v[d * k + p] as f64;
+                    }
+                    for d in 0..dim {
+                        v[d * k + j] -= (dot * v[d * k + p] as f64) as f32;
+                    }
+                }
+                let mut n2 = 0f64;
+                for d in 0..dim {
+                    n2 += (v[d * k + j] as f64).powi(2);
+                }
+                if n2.sqrt() > 1e-3 {
+                    norm = n2.sqrt();
+                    break 'attempt;
+                }
+            }
+        }
+        let inv = (1.0 / norm.max(1e-12)) as f32;
+        for d in 0..dim {
+            v[d * k + j] *= inv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Data with a known dominant direction.
+    fn anisotropic(n: usize, dim: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::seeded(seed);
+        let mut x = vec![0f32; n * dim];
+        for i in 0..n {
+            let main = rng.normal() * 10.0; // big variance along e0+e1
+            for d in 0..dim {
+                let base = match d {
+                    0 => main,
+                    1 => main * 0.8,
+                    _ => 0.0,
+                };
+                x[i * dim + d] = (base + rng.normal() * 0.5) as f32;
+            }
+        }
+        x
+    }
+
+    #[test]
+    fn recovers_dominant_direction() {
+        let (n, dim) = (400, 10);
+        let x = anisotropic(n, dim, 1);
+        let pool = ThreadPool::new(2);
+        let pca = fit(&pool, &x, n, dim, 3, 7);
+        // First component should be ≈ (1, 0.8, 0, ...) normalized.
+        let expect = {
+            let norm = (1.0f64 + 0.64).sqrt();
+            [1.0 / norm, 0.8 / norm]
+        };
+        let c0 = [pca.components[0], pca.components[3]]; // (d=0,j=0), (d=1,j=0)
+        let dot = (c0[0] as f64 * expect[0] + c0[1] as f64 * expect[1]).abs();
+        assert!(dot > 0.99, "dot={dot} c0={c0:?}");
+        // Eigenvalues descending.
+        assert!(pca.eigenvalues[0] > pca.eigenvalues[1]);
+        assert!(pca.eigenvalues[1] >= pca.eigenvalues[2] - 1e-9);
+    }
+
+    #[test]
+    fn components_are_orthonormal() {
+        let (n, dim, k) = (200, 12, 5);
+        let x = anisotropic(n, dim, 2);
+        let pool = ThreadPool::new(2);
+        let pca = fit(&pool, &x, n, dim, k, 3);
+        for a in 0..k {
+            for b in 0..k {
+                let mut dot = 0f64;
+                for d in 0..dim {
+                    dot += pca.components[d * k + a] as f64 * pca.components[d * k + b] as f64;
+                }
+                let want = if a == b { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-4, "({a},{b}) dot={dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn projection_preserves_dominant_variance() {
+        let (n, dim) = (300, 20);
+        let x = anisotropic(n, dim, 3);
+        let pool = ThreadPool::new(2);
+        let (z, k) = reduce_if_needed(&pool, &x, n, dim, 5, 4);
+        assert_eq!(k, 5);
+        // Variance of projected data ≈ total variance of x (most variance
+        // lives in 2 directions).
+        let var = |v: &[f32], n: usize, d: usize| -> f64 {
+            let mut tot = 0f64;
+            for j in 0..d {
+                let mean: f64 = (0..n).map(|i| v[i * d + j] as f64).sum::<f64>() / n as f64;
+                tot += (0..n).map(|i| (v[i * d + j] as f64 - mean).powi(2)).sum::<f64>() / n as f64;
+            }
+            tot
+        };
+        let vx = var(&x, n, dim);
+        let vz = var(&z, n, 5);
+        assert!(vz / vx > 0.95, "kept {} of variance", vz / vx);
+    }
+
+    #[test]
+    fn low_dim_passthrough() {
+        let pool = ThreadPool::new(1);
+        let x = vec![1.0f32; 10 * 5];
+        let (z, k) = reduce_if_needed(&pool, &x, 10, 5, 50, 5);
+        assert_eq!(k, 5);
+        assert_eq!(z, x);
+    }
+
+    #[test]
+    fn transform_is_centered() {
+        let (n, dim) = (100, 8);
+        let x = anisotropic(n, dim, 6);
+        let pool = ThreadPool::new(2);
+        let pca = fit(&pool, &x, n, dim, 3, 7);
+        let z = transform(&pool, &pca, &x, n);
+        for j in 0..3 {
+            let mean: f64 = (0..n).map(|i| z[i * 3 + j] as f64).sum::<f64>() / n as f64;
+            assert!(mean.abs() < 1e-3, "component {j} mean {mean}");
+        }
+    }
+}

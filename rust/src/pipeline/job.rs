@@ -1,0 +1,298 @@
+//! One embedding job: the full staged experiment.
+
+use super::metrics::MetricsRegistry;
+use crate::data::{self, Dataset};
+use crate::eval;
+use crate::runtime::{SneEngine, XlaAttractive};
+use crate::sne::{TsneConfig, TsneRunner};
+use crate::util::{Stopwatch, ThreadPool};
+use std::path::PathBuf;
+use std::rc::Rc;
+
+/// Configuration of one end-to-end embedding job.
+#[derive(Debug, Clone)]
+pub struct JobConfig {
+    /// Dataset name (see [`crate::data::by_name`]).
+    pub dataset: String,
+    /// Number of points to use.
+    pub n: usize,
+    /// Directory with real data files (IDX); generators ignore it.
+    pub data_dir: String,
+    /// t-SNE hyperparameters.
+    pub tsne: TsneConfig,
+    /// PCA target dimensionality applied when input dim exceeds it
+    /// (paper: 50). 0 disables PCA.
+    pub pca_target: usize,
+    /// Write a TSV snapshot every this many iterations (0 = never).
+    pub snapshot_every: usize,
+    /// Output directory for snapshots and the final embedding.
+    pub out_dir: Option<PathBuf>,
+    /// Offload attractive forces to the XLA runtime when artifacts exist.
+    pub use_xla: bool,
+    /// Thread count (0 = all cores).
+    pub threads: usize,
+    /// Evaluate 1-NN error on at most this many points (0 = all; the
+    /// metric is O(N log N) but evaluation on millions is wasteful).
+    pub eval_cap: usize,
+}
+
+impl Default for JobConfig {
+    fn default() -> Self {
+        JobConfig {
+            dataset: "mnist-like".into(),
+            n: 2000,
+            data_dir: "data".into(),
+            tsne: TsneConfig::default(),
+            pca_target: 50,
+            snapshot_every: 0,
+            out_dir: None,
+            use_xla: false,
+            threads: 0,
+            eval_cap: 10_000,
+        }
+    }
+}
+
+impl JobConfig {
+    pub fn describe(&self) -> String {
+        format!(
+            "{} n={} theta={} iters={} {}",
+            self.dataset,
+            self.n,
+            self.tsne.theta,
+            self.tsne.iters,
+            if self.use_xla { "xla" } else { "cpu" }
+        )
+    }
+}
+
+/// Wall-clock per stage.
+#[derive(Debug, Clone, Default)]
+pub struct StageTimings {
+    pub dataset_secs: f64,
+    pub pca_secs: f64,
+    pub embed_secs: f64,
+    pub eval_secs: f64,
+    pub total_secs: f64,
+}
+
+/// Everything a finished job produces.
+#[derive(Debug)]
+pub struct JobResult {
+    pub embedding: Vec<f32>,
+    pub out_dim: usize,
+    pub labels: Vec<u8>,
+    pub one_nn_error: f64,
+    pub final_kl: Option<f64>,
+    pub timings: StageTimings,
+    pub metrics: MetricsRegistry,
+    pub dataset_name: String,
+    pub n: usize,
+}
+
+/// Execute one job end to end.
+pub fn run_job(cfg: JobConfig) -> anyhow::Result<JobResult> {
+    let total_sw = Stopwatch::start();
+    let mut metrics = MetricsRegistry::new();
+    let pool = super::make_pool(cfg.threads);
+
+    // ---- Stage 1: dataset ----
+    let sw = Stopwatch::start();
+    let mut ds: Dataset = data::by_name(&cfg.dataset, cfg.n, cfg.tsne.seed, &cfg.data_dir)?;
+    ds.truncate(cfg.n);
+    let dataset_secs = sw.elapsed_secs();
+    metrics.observe("dataset_secs", dataset_secs);
+    log::info!("dataset {} n={} dim={}", ds.name, ds.n, ds.dim);
+
+    // ---- Stage 2: PCA (paper: reduce D>50 to 50) ----
+    let sw = Stopwatch::start();
+    let (x, dim) = if cfg.pca_target > 0 && ds.dim > cfg.pca_target {
+        // Prefer the XLA projection artifact when allowed and present.
+        if cfg.use_xla {
+            match try_xla_pca(&pool, &ds, cfg.pca_target, cfg.tsne.seed) {
+                Some(z) => (z, cfg.pca_target),
+                None => crate::pca::reduce_if_needed(&pool, &ds.x, ds.n, ds.dim, cfg.pca_target, cfg.tsne.seed),
+            }
+        } else {
+            crate::pca::reduce_if_needed(&pool, &ds.x, ds.n, ds.dim, cfg.pca_target, cfg.tsne.seed)
+        }
+    } else {
+        (ds.x.clone(), ds.dim)
+    };
+    let pca_secs = sw.elapsed_secs();
+    metrics.observe("pca_secs", pca_secs);
+
+    // ---- Stage 3: optimize ----
+    let sw = Stopwatch::start();
+    let mut runner = TsneRunner::with_pool(cfg.tsne.clone(), pool);
+    if cfg.use_xla {
+        match SneEngine::from_env() {
+            Ok(engine) => {
+                let engine = Rc::new(engine);
+                if engine.supports_attractive(ds.n) {
+                    log::info!("attractive forces: XLA artifact path");
+                    runner.set_attractive_backend(Box::new(XlaAttractive::new(engine)));
+                } else {
+                    log::info!("no attractive artifact for n={}; using CPU", ds.n);
+                }
+            }
+            Err(e) => log::warn!("XLA runtime unavailable ({e}); using CPU"),
+        }
+    }
+    // Snapshot observer.
+    if cfg.snapshot_every > 0 {
+        if let Some(dir) = cfg.out_dir.clone() {
+            std::fs::create_dir_all(&dir)?;
+            let every = cfg.snapshot_every;
+            let labels = ds.labels.clone();
+            let out_dim = cfg.tsne.out_dim;
+            runner.set_observer(Box::new(move |s, y| {
+                if s.iter % every == 0 {
+                    let p = dir.join(format!("snapshot_{:05}.bin", s.iter));
+                    if let Err(e) = crate::data::io::write_snapshot(&p, y, out_dim, &labels, s.iter as u64) {
+                        log::warn!("snapshot failed: {e}");
+                    }
+                }
+                if let Some(kl) = s.kl {
+                    log::info!("iter {:4} KL {kl:.4} |g| {:.3e}", s.iter, s.grad_norm);
+                }
+            }));
+        }
+    }
+    let y = runner.run(&x, dim)?;
+    let embed_secs = sw.elapsed_secs();
+    metrics.observe("embed_secs", embed_secs);
+    metrics.observe("knn_secs", runner.stats.input_stage.knn_secs);
+    metrics.observe("perplexity_secs", runner.stats.input_stage.perplexity_secs);
+    metrics.observe("gradient_secs", runner.stats.gradient_secs);
+
+    // ---- Stage 4: evaluate ----
+    let sw = Stopwatch::start();
+    let eval_n = if cfg.eval_cap == 0 { ds.n } else { ds.n.min(cfg.eval_cap) };
+    let one_nn = eval::one_nn_error(
+        runner.pool(),
+        &y[..eval_n * cfg.tsne.out_dim],
+        cfg.tsne.out_dim,
+        &ds.labels[..eval_n],
+    );
+    let eval_secs = sw.elapsed_secs();
+    metrics.observe("eval_secs", eval_secs);
+    metrics.observe("one_nn_error", one_nn);
+
+    // ---- Persist ----
+    if let Some(dir) = &cfg.out_dir {
+        std::fs::create_dir_all(dir)?;
+        crate::data::io::write_tsv(dir.join("embedding.tsv"), &y, cfg.tsne.out_dim, &ds.labels)?;
+    }
+
+    let timings = StageTimings {
+        dataset_secs,
+        pca_secs,
+        embed_secs,
+        eval_secs,
+        total_secs: total_sw.elapsed_secs(),
+    };
+    log::info!(
+        "job done: n={} embed {:.1}s 1-NN err {:.4} KL {:?}",
+        ds.n,
+        timings.embed_secs,
+        one_nn,
+        runner.stats.final_kl
+    );
+    Ok(JobResult {
+        embedding: y,
+        out_dim: cfg.tsne.out_dim,
+        labels: ds.labels,
+        one_nn_error: one_nn,
+        final_kl: runner.stats.final_kl,
+        timings,
+        metrics,
+        dataset_name: ds.name,
+        n: ds.n,
+    })
+}
+
+/// PCA via the XLA projection artifact: fit on a subsample in Rust (the
+/// fit is one-time build cost), project all rows through the artifact.
+fn try_xla_pca(pool: &ThreadPool, ds: &Dataset, target: usize, seed: u64) -> Option<Vec<f32>> {
+    let engine = SneEngine::from_env().ok()?;
+    let (name, ..) = engine.registry().pca(ds.dim, target)?;
+    if !engine.runtime().has_artifact(&name) {
+        return None;
+    }
+    // Fit on ≤2000 rows (adequate for 50 components), project all via XLA.
+    let fit_n = ds.n.min(2000);
+    let pca = crate::pca::fit(pool, &ds.x, fit_n, ds.dim, target, seed);
+    match engine.pca_project(&ds.x, ds.n, ds.dim, &pca.mean, &pca.components, target) {
+        Ok(z) => {
+            log::info!("pca projection: XLA artifact path");
+            Some(z)
+        }
+        Err(e) => {
+            log::warn!("xla pca failed ({e}); falling back to CPU");
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_job_end_to_end() {
+        let cfg = JobConfig {
+            dataset: "gaussians".into(),
+            n: 200,
+            tsne: TsneConfig {
+                iters: 60,
+                exaggeration_iters: 20,
+                cost_every: 30,
+                seed: 3,
+                ..Default::default()
+            },
+            pca_target: 20,
+            eval_cap: 0,
+            ..Default::default()
+        };
+        let r = run_job(cfg).unwrap();
+        assert_eq!(r.embedding.len(), 200 * 2);
+        assert!(r.one_nn_error < 0.5, "err {}", r.one_nn_error);
+        assert!(r.final_kl.is_some());
+        assert!(r.timings.total_secs > 0.0);
+    }
+
+    #[test]
+    fn job_writes_outputs() {
+        let dir = std::env::temp_dir().join(format!("bhsne-job-{}", std::process::id()));
+        let cfg = JobConfig {
+            dataset: "gaussians".into(),
+            n: 120,
+            tsne: TsneConfig { iters: 30, exaggeration_iters: 10, cost_every: 15, ..Default::default() },
+            snapshot_every: 10,
+            out_dir: Some(dir.clone()),
+            eval_cap: 0,
+            ..Default::default()
+        };
+        run_job(cfg).unwrap();
+        assert!(dir.join("embedding.tsv").exists());
+        assert!(dir.join("snapshot_00000.bin").exists());
+        let (y, dim, labels) = crate::data::io::read_tsv(dir.join("embedding.tsv")).unwrap();
+        assert_eq!(dim, 2);
+        assert_eq!(y.len(), labels.len() * 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sweep_runs_multiple_jobs() {
+        let mk = |theta: f32| JobConfig {
+            dataset: "gaussians".into(),
+            n: 100,
+            tsne: TsneConfig { iters: 20, exaggeration_iters: 5, theta, cost_every: 0, ..Default::default() },
+            eval_cap: 0,
+            ..Default::default()
+        };
+        let rs = super::super::run_sweep(vec![mk(0.2), mk(0.8)]).unwrap();
+        assert_eq!(rs.len(), 2);
+    }
+}

@@ -1,0 +1,98 @@
+//! Lightweight metrics registry: named summaries collected during a job
+//! and rendered as a table at the end (stand-in for a metrics exporter).
+
+use crate::util::Summary;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Named observation summaries.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    metrics: BTreeMap<String, Summary>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one observation of `name`.
+    pub fn observe(&mut self, name: &str, value: f64) {
+        self.metrics.entry(name.to_string()).or_insert_with(Summary::new).push(value);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Summary> {
+        self.metrics.get(name)
+    }
+
+    /// Mean of a metric, if recorded.
+    pub fn mean(&self, name: &str) -> Option<f64> {
+        self.metrics.get(name).map(|s| s.mean())
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.metrics.keys().map(|s| s.as_str())
+    }
+
+    /// Merge another registry into this one.
+    pub fn merge(&mut self, other: &MetricsRegistry) {
+        for (k, v) in &other.metrics {
+            self.metrics.entry(k.clone()).or_insert_with(Summary::new).merge(v);
+        }
+    }
+
+    /// Render a fixed-width table.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{:<24} {:>10} {:>12} {:>12} {:>12}", "metric", "count", "mean", "min", "max");
+        for (name, s) in &self.metrics {
+            let _ = writeln!(
+                out,
+                "{:<24} {:>10} {:>12.5} {:>12.5} {:>12.5}",
+                name,
+                s.count(),
+                s.mean(),
+                s.min(),
+                s.max()
+            );
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn observe_and_query() {
+        let mut m = MetricsRegistry::new();
+        m.observe("latency", 1.0);
+        m.observe("latency", 3.0);
+        assert_eq!(m.mean("latency"), Some(2.0));
+        assert_eq!(m.get("latency").unwrap().count(), 2);
+        assert_eq!(m.mean("missing"), None);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = MetricsRegistry::new();
+        let mut b = MetricsRegistry::new();
+        a.observe("x", 1.0);
+        b.observe("x", 3.0);
+        b.observe("y", 5.0);
+        a.merge(&b);
+        assert_eq!(a.mean("x"), Some(2.0));
+        assert_eq!(a.mean("y"), Some(5.0));
+    }
+
+    #[test]
+    fn render_contains_all_metrics() {
+        let mut m = MetricsRegistry::new();
+        m.observe("alpha", 1.0);
+        m.observe("beta", 2.0);
+        let table = m.render();
+        assert!(table.contains("alpha"));
+        assert!(table.contains("beta"));
+    }
+}

@@ -1,0 +1,38 @@
+//! Embedding-job pipeline: the L3 coordinator that stages a full
+//! experiment — dataset → PCA → similarities → optimization → evaluation
+//! — with snapshots, metrics, and multi-job sweep scheduling.
+//!
+//! This is what the CLI (`bhsne embed` / `bhsne sweep`) and every bench
+//! harness drive; examples compose the same API.
+
+mod job;
+mod metrics;
+
+pub use job::{run_job, JobConfig, JobResult, StageTimings};
+pub use metrics::MetricsRegistry;
+
+use crate::util::{Stopwatch, ThreadPool};
+
+/// Run a list of jobs sequentially (each job parallelizes internally;
+/// running jobs concurrently would fight over cores) and collect results.
+/// A failure in one job aborts the sweep.
+pub fn run_sweep(jobs: Vec<JobConfig>) -> anyhow::Result<Vec<JobResult>> {
+    let mut results = Vec::with_capacity(jobs.len());
+    let total = jobs.len();
+    let sw = Stopwatch::start();
+    for (i, job) in jobs.into_iter().enumerate() {
+        log::info!("sweep job {}/{}: {}", i + 1, total, job.describe());
+        results.push(run_job(job)?);
+    }
+    log::info!("sweep finished in {:.1}s", sw.elapsed_secs());
+    Ok(results)
+}
+
+/// Shared pool sizing: one pool per process, reused across stages.
+pub fn make_pool(threads: usize) -> ThreadPool {
+    if threads == 0 {
+        ThreadPool::for_host()
+    } else {
+        ThreadPool::new(threads)
+    }
+}

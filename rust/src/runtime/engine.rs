@@ -1,0 +1,286 @@
+//! High-level XLA-offloaded ops: the SNE engine.
+//!
+//! Each op pads its inputs to the artifact's static bucket, executes, and
+//! un-pads. Padding is always constructed so padded slots contribute
+//! *exactly* zero (p=0 neighbor slots; mask vectors for the dense
+//! repulsion), which the integration tests verify against the pure-Rust
+//! implementations.
+
+use super::registry::ArtifactRegistry;
+use super::{literal_f32, literal_i32, Runtime};
+use crate::sne::sparse::Csr;
+use crate::sne::AttractiveBackend;
+use crate::util::ThreadPool;
+use anyhow::{Context, Result};
+use std::rc::Rc;
+
+/// XLA-offloaded implementations of the regular (non-tree) hot-path ops.
+pub struct SneEngine {
+    rt: Rc<Runtime>,
+    registry: ArtifactRegistry,
+}
+
+impl SneEngine {
+    pub fn new(rt: Rc<Runtime>) -> Self {
+        SneEngine { rt, registry: ArtifactRegistry::default() }
+    }
+
+    pub fn from_env() -> Result<Self> {
+        Ok(Self::new(Rc::new(Runtime::from_env()?)))
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    pub fn registry(&self) -> &ArtifactRegistry {
+        &self.registry
+    }
+
+    /// True when the attractive artifact for `n` exists on disk.
+    pub fn supports_attractive(&self, n: usize) -> bool {
+        self.registry.attractive(n).is_some_and(|(name, _, _)| self.rt.has_artifact(&name))
+    }
+
+    /// Attractive forces (Eq. 8 left sum) via the AOT artifact.
+    ///
+    /// The CSR is flattened into fixed `[N, K]` neighbor-index and
+    /// probability arrays; unused slots carry `p = 0` and index `i`
+    /// (self), contributing `0 · q · (y_i − y_i) = 0`.
+    pub fn attractive(&self, p: &Csr, y: &[f32], dim: usize) -> Result<Vec<f64>> {
+        anyhow::ensure!(dim == 2, "attractive artifact is 2-D only");
+        let n = p.n_rows;
+        let (name, cap, k) = self
+            .registry
+            .attractive(n)
+            .with_context(|| format!("no attractive bucket for n={n}"))?;
+        let mut idx = vec![0i32; cap * k];
+        let mut pv = vec![0f32; cap * k];
+        // Hub rows (high symmetrized in-degree) can exceed any fixed K
+        // bucket; they are truncated for the XLA call and recomputed
+        // exactly on the CPU afterwards (they are a small tail).
+        let mut overflow: Vec<usize> = Vec::new();
+        for i in 0..n {
+            let (cols, vals) = p.row(i);
+            let take = cols.len().min(k);
+            if cols.len() > k {
+                overflow.push(i);
+            }
+            for (slot, (&j, &v)) in cols.iter().zip(vals).take(take).enumerate() {
+                idx[i * k + slot] = j as i32;
+                pv[i * k + slot] = v;
+            }
+            for slot in take..k {
+                idx[i * k + slot] = i as i32; // self ⇒ zero difference
+            }
+        }
+        // Padded rows: all slots self-referencing with p=0.
+        for i in n..cap {
+            for slot in 0..k {
+                idx[i * k + slot] = i as i32;
+            }
+        }
+        let mut yy = vec![0f32; cap * 2];
+        yy[..n * 2].copy_from_slice(&y[..n * 2]);
+
+        let outputs = self.rt.execute(
+            &name,
+            &[
+                literal_f32(&yy, &[cap as i64, 2])?,
+                literal_i32(&idx, &[cap as i64, k as i64])?,
+                literal_f32(&pv, &[cap as i64, k as i64])?,
+            ],
+        )?;
+        let attr: Vec<f32> = outputs[0].to_vec()?;
+        let mut out: Vec<f64> = attr[..n * 2].iter().map(|&v| v as f64).collect();
+        // Exact CPU recomputation of the truncated hub rows.
+        for &i in &overflow {
+            let yi = [y[i * 2], y[i * 2 + 1]];
+            let (cols, vals) = p.row(i);
+            let mut acc = [0f64; 2];
+            for (&j, &pij) in cols.iter().zip(vals) {
+                let dx = yi[0] - y[j as usize * 2];
+                let dy = yi[1] - y[j as usize * 2 + 1];
+                let w = pij as f64 / (1.0 + (dx * dx + dy * dy) as f64);
+                acc[0] += w * dx as f64;
+                acc[1] += w * dy as f64;
+            }
+            out[i * 2] = acc[0];
+            out[i * 2 + 1] = acc[1];
+        }
+        if !overflow.is_empty() {
+            log::debug!("attractive: {} hub rows recomputed on cpu", overflow.len());
+        }
+        Ok(out)
+    }
+
+    /// Dense Student-t repulsion via the AOT artifact (the Pallas
+    /// flagship kernel): returns (`F_rep·Z` rows, `Z`). Padded slots are
+    /// masked out inside the graph.
+    pub fn repulsion(&self, y: &[f32], n: usize, dim: usize) -> Result<(Vec<f64>, f64)> {
+        anyhow::ensure!(dim == 2, "repulsion artifact is 2-D only");
+        let (name, cap) = self
+            .registry
+            .repulsion(n)
+            .with_context(|| format!("no repulsion bucket for n={n}"))?;
+        let mut yy = vec![0f32; cap * 2];
+        yy[..n * 2].copy_from_slice(&y[..n * 2]);
+        let mut mask = vec![0f32; cap];
+        mask[..n].iter_mut().for_each(|m| *m = 1.0);
+        let outputs = self.rt.execute(
+            &name,
+            &[literal_f32(&yy, &[cap as i64, 2])?, literal_f32(&mask, &[cap as i64])?],
+        )?;
+        let rep: Vec<f32> = outputs[0].to_vec()?;
+        let z: f32 = outputs[1].get_first_element()?;
+        Ok((rep[..n * 2].iter().map(|&v| v as f64).collect(), z as f64))
+    }
+
+    /// Vectorized perplexity bisection (Eq. 6 bandwidths) on `n × k`
+    /// squared distances. Rows are processed in chunks of the artifact's
+    /// B bucket. Returns row-normalized probabilities aligned with the
+    /// input layout plus the β per row.
+    pub fn perplexity(&self, d2: &[f32], n: usize, k: usize, u: f64) -> Result<(Vec<f32>, Vec<f32>)> {
+        let (name, b, kk) = self
+            .registry
+            .perplexity(k)
+            .with_context(|| format!("no perplexity artifact for k={k}"))?;
+        let mut p = vec![0f32; n * k];
+        let mut beta = vec![0f32; n];
+        let target = (u.min(k as f64)).ln() as f32;
+        let mut chunk_d2 = vec![0f32; b * kk];
+        for lo in (0..n).step_by(b) {
+            let hi = (lo + b).min(n);
+            // Pad: unused neighbor slots get a huge distance (p ≈ 0);
+            // unused rows get uniform distances (finite, discarded).
+            chunk_d2.iter_mut().for_each(|v| *v = 1e10);
+            for (r, i) in (lo..hi).enumerate() {
+                chunk_d2[r * kk..r * kk + k].copy_from_slice(&d2[i * k..(i + 1) * k]);
+            }
+            let outputs = self.rt.execute(
+                &name,
+                &[
+                    literal_f32(&chunk_d2, &[b as i64, kk as i64])?,
+                    xla::Literal::scalar(target),
+                ],
+            )?;
+            let cp: Vec<f32> = outputs[0].to_vec()?;
+            let cb: Vec<f32> = outputs[1].to_vec()?;
+            for (r, i) in (lo..hi).enumerate() {
+                p[i * k..(i + 1) * k].copy_from_slice(&cp[r * kk..r * kk + k]);
+                beta[i] = cb[r];
+            }
+        }
+        Ok((p, beta))
+    }
+
+    /// PCA projection `((x − mean) · V)` via the AOT artifact, chunked
+    /// over rows. `comps` is row-major `d × k`.
+    pub fn pca_project(
+        &self,
+        x: &[f32],
+        n: usize,
+        d: usize,
+        mean: &[f32],
+        comps: &[f32],
+        k: usize,
+    ) -> Result<Vec<f32>> {
+        let (name, dd, kk, b) = self
+            .registry
+            .pca(d, k)
+            .with_context(|| format!("no pca artifact for d={d} k={k}"))?;
+        anyhow::ensure!(k == kk, "artifact k {kk} != requested {k}");
+        let mean_l = literal_f32(mean, &[dd as i64])?;
+        let comps_l = literal_f32(comps, &[dd as i64, kk as i64])?;
+        let mut out = vec![0f32; n * k];
+        let mut chunk = vec![0f32; b * d];
+        for lo in (0..n).step_by(b) {
+            let hi = (lo + b).min(n);
+            chunk.iter_mut().for_each(|v| *v = 0.0);
+            chunk[..(hi - lo) * d].copy_from_slice(&x[lo * d..hi * d]);
+            let outputs = self.rt.execute(
+                &name,
+                &[literal_f32(&chunk, &[b as i64, dd as i64])?, mean_l.clone(), comps_l.clone()],
+            )?;
+            let z: Vec<f32> = outputs[0].to_vec()?;
+            out[lo * k..hi * k].copy_from_slice(&z[..(hi - lo) * k]);
+        }
+        Ok(out)
+    }
+
+    /// Squared-distance chunk: query rows `q` (`m × d`) against reference
+    /// `x` (`n × d`) → `m × n` squared distances, chunked over queries.
+    pub fn dist_chunk(&self, q: &[f32], m: usize, x: &[f32], n: usize, d: usize) -> Result<Vec<f32>> {
+        let (name, b, nn, dd) = self
+            .registry
+            .dist(n, d)
+            .with_context(|| format!("no dist artifact for n={n} d={d}"))?;
+        // Pad reference with points at +inf-ish distance (1e9 coordinate
+        // offsets would overflow f32 squares; use a large finite offset).
+        let mut xx = vec![3e4f32; nn * dd];
+        xx[..n * d].copy_from_slice(&x[..n * d]);
+        let x_l = literal_f32(&xx, &[nn as i64, dd as i64])?;
+        let mut out = vec![0f32; m * n];
+        let mut chunk = vec![0f32; b * dd];
+        for lo in (0..m).step_by(b) {
+            let hi = (lo + b).min(m);
+            chunk.iter_mut().for_each(|v| *v = 0.0);
+            chunk[..(hi - lo) * d].copy_from_slice(&q[lo * d..hi * d]);
+            let outputs = self.rt.execute(
+                &name,
+                &[literal_f32(&chunk, &[b as i64, dd as i64])?, x_l.clone()],
+            )?;
+            let z: Vec<f32> = outputs[0].to_vec()?;
+            for (r, i) in (lo..hi).enumerate() {
+                out[i * n..(i + 1) * n].copy_from_slice(&z[r * nn..r * nn + n]);
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// [`AttractiveBackend`] adapter: uses the XLA engine when a bucket
+/// exists, silently falling back to the CPU path otherwise (and on any
+/// runtime error, with a warning).
+pub struct XlaAttractive {
+    engine: Rc<SneEngine>,
+    /// Set after the first failure (e.g. a hub row overflowing the K
+    /// bucket): the P matrix is fixed for a whole run, so retrying every
+    /// iteration would only repeat the marshalling work and the warning.
+    disabled: std::cell::Cell<bool>,
+}
+
+impl XlaAttractive {
+    pub fn new(engine: Rc<SneEngine>) -> Self {
+        XlaAttractive { engine, disabled: std::cell::Cell::new(false) }
+    }
+}
+
+impl AttractiveBackend for XlaAttractive {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn compute(&self, pool: &ThreadPool, p: &Csr, y: &[f32], dim: usize, out: &mut [f64]) {
+        if !self.disabled.get() && dim == 2 && self.engine.supports_attractive(p.n_rows) {
+            match self.engine.attractive(p, y, dim) {
+                Ok(attr) => {
+                    out.copy_from_slice(&attr);
+                    return;
+                }
+                Err(e) => {
+                    log::warn!("xla attractive failed ({e}); using cpu for the rest of this run");
+                    self.disabled.set(true);
+                }
+            }
+        }
+        crate::sne::CpuAttractive.compute(pool, p, y, dim, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Engine integration tests live in rust/tests/runtime_integration.rs —
+    // they need the artifacts built by `make artifacts`. Unit-testable
+    // parts (bucket math, padding layout) are covered in registry.rs.
+}

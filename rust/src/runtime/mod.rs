@@ -1,0 +1,135 @@
+//! PJRT runtime: loads AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path.
+//!
+//! Python never runs here — the artifacts are self-contained XLA programs
+//! (L2 JAX graphs with L1 Pallas kernels already lowered inside). Every
+//! op has a pure-Rust fallback; the engine degrades gracefully when an
+//! artifact (or the whole directory) is missing.
+//!
+//! Interchange format is HLO *text*, not serialized protos: jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects, while
+//! the text parser reassigns ids (see /opt/xla-example/README.md).
+
+mod engine;
+mod registry;
+
+pub use engine::{SneEngine, XlaAttractive};
+pub use registry::{ArtifactRegistry, BucketSpec};
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::cell::RefCell;
+
+/// Default artifact directory, overridable via `BHSNE_ARTIFACTS`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var("BHSNE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// A lazily-compiling cache of PJRT executables keyed by artifact name.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at `dir`.
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            dir: dir.as_ref().to_path_buf(),
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Create rooted at the default artifact directory.
+    pub fn from_env() -> Result<Self> {
+        Self::new(default_artifact_dir())
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Whether `name.hlo.txt` exists (cheap check before `load`).
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.dir.join(format!("{name}.hlo.txt")).exists()
+    }
+
+    /// Load (and cache) the executable for `name.hlo.txt`.
+    pub fn load(&self, name: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        {
+            let cache = self.cache.borrow();
+            if let Some(e) = cache.get(name) {
+                return Ok(e.clone());
+            }
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        let exe = std::rc::Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute a cached executable on literal inputs; outputs are the
+    /// decomposed tuple elements (aot.py always lowers with
+    /// `return_tuple=True`).
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.load(name)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {name}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {name}"))?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+/// Helpers for literal marshalling.
+pub(crate) fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+pub(crate) fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_artifact_is_reported() {
+        let rt = Runtime::new("/nonexistent-artifacts").unwrap();
+        assert!(!rt.has_artifact("attractive_n512_k320"));
+        assert!(rt.load("attractive_n512_k320").is_err());
+    }
+
+    #[test]
+    fn cache_counts() {
+        let rt = Runtime::new("/nonexistent-artifacts").unwrap();
+        assert_eq!(rt.cached(), 0);
+    }
+}

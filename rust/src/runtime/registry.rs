@@ -1,0 +1,168 @@
+//! Artifact registry: maps logical ops to shape-bucketed artifact names.
+//!
+//! PJRT executables have static shapes, so `aot.py` emits one artifact
+//! per (op, bucket). The registry picks the smallest bucket that fits a
+//! request; callers pad inputs up to the bucket (padding is constructed
+//! so padded elements contribute exactly zero — see each op).
+
+/// The shape buckets emitted by aot.py. Kept in one place so the Python
+/// and Rust sides cannot drift silently: `python/compile/aot.py` imports
+/// nothing from here, but `tests/test_aot.py` asserts the same lists.
+#[derive(Debug, Clone)]
+pub struct BucketSpec {
+    /// N buckets for the attractive-force op.
+    pub attractive_n: Vec<usize>,
+    /// Neighbor-slot count for the attractive op. A symmetrized row has
+    /// ⌊3u⌋ = 90 own neighbors plus one slot per point that *chose* it —
+    /// hub points in high-dimensional data commonly reach in-degrees of
+    /// 150-200, so the bucket is generous; rows that still overflow fall
+    /// back to the CPU path (XlaAttractive disables itself after the
+    /// first overflow).
+    pub attractive_k: usize,
+    /// N buckets for the dense repulsion op (O(N²) — small buckets only).
+    pub repulsion_n: Vec<usize>,
+    /// Row-chunk size for the perplexity op.
+    pub perplexity_b: usize,
+    /// Neighbor count for the perplexity op (⌊3·30⌋ = 90 padded to 96).
+    pub perplexity_k: usize,
+    /// (D, K, B) triples for PCA projection.
+    pub pca: Vec<(usize, usize, usize)>,
+    /// (B, N, D) triples for distance chunks.
+    pub dist: Vec<(usize, usize, usize)>,
+}
+
+impl Default for BucketSpec {
+    fn default() -> Self {
+        BucketSpec {
+            attractive_n: vec![512, 1024, 2048, 4096, 8192, 16384],
+            attractive_k: 320,
+            repulsion_n: vec![512, 1024, 2048, 4096],
+            perplexity_b: 1024,
+            perplexity_k: 96,
+            pca: vec![(784, 50, 1024), (3072, 50, 1024), (9216, 50, 256)],
+            dist: vec![(256, 1024, 50), (256, 4096, 50), (256, 16384, 50)],
+        }
+    }
+}
+
+/// Resolves op requests to artifact names.
+#[derive(Debug, Clone, Default)]
+pub struct ArtifactRegistry {
+    pub spec: BucketSpec,
+}
+
+impl ArtifactRegistry {
+    /// Smallest attractive bucket with capacity ≥ n, if any.
+    pub fn attractive(&self, n: usize) -> Option<(String, usize, usize)> {
+        let k = self.spec.attractive_k;
+        self.spec
+            .attractive_n
+            .iter()
+            .find(|&&b| b >= n)
+            .map(|&b| (format!("attractive_n{b}_k{k}"), b, k))
+    }
+
+    /// Smallest repulsion bucket with capacity ≥ n.
+    pub fn repulsion(&self, n: usize) -> Option<(String, usize)> {
+        self.spec
+            .repulsion_n
+            .iter()
+            .find(|&&b| b >= n)
+            .map(|&b| (format!("repulsion_n{b}"), b))
+    }
+
+    /// Perplexity row-chunk artifact (fixed bucket, rows are chunked).
+    pub fn perplexity(&self, k: usize) -> Option<(String, usize, usize)> {
+        if k > self.spec.perplexity_k {
+            return None;
+        }
+        let b = self.spec.perplexity_b;
+        let kk = self.spec.perplexity_k;
+        Some((format!("perplexity_b{b}_k{kk}"), b, kk))
+    }
+
+    /// PCA projection artifact for input dim `d`, target `k`.
+    pub fn pca(&self, d: usize, k: usize) -> Option<(String, usize, usize, usize)> {
+        self.spec
+            .pca
+            .iter()
+            .find(|&&(dd, kk, _)| dd == d && kk >= k)
+            .map(|&(dd, kk, b)| (format!("pca_project_d{dd}_k{kk}_b{b}"), dd, kk, b))
+    }
+
+    /// Distance-chunk artifact for reference set size `n`, feature dim `d`.
+    pub fn dist(&self, n: usize, d: usize) -> Option<(String, usize, usize, usize)> {
+        self.spec
+            .dist
+            .iter()
+            .find(|&&(_, nn, dd)| nn >= n && dd == d)
+            .map(|&(b, nn, dd)| (format!("dist_b{b}_n{nn}_d{dd}"), b, nn, dd))
+    }
+
+    /// Every artifact name the spec implies (make-artifacts completeness
+    /// check and the integration tests iterate this).
+    pub fn all_names(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for &n in &self.spec.attractive_n {
+            out.push(format!("attractive_n{n}_k{}", self.spec.attractive_k));
+        }
+        for &n in &self.spec.repulsion_n {
+            out.push(format!("repulsion_n{n}"));
+        }
+        out.push(format!("perplexity_b{}_k{}", self.spec.perplexity_b, self.spec.perplexity_k));
+        for &(d, k, b) in &self.spec.pca {
+            out.push(format!("pca_project_d{d}_k{k}_b{b}"));
+        }
+        for &(b, n, d) in &self.spec.dist {
+            out.push(format!("dist_b{b}_n{n}_d{d}"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_selection_rounds_up() {
+        let r = ArtifactRegistry::default();
+        let (name, cap, k) = r.attractive(700).unwrap();
+        assert_eq!(name, "attractive_n1024_k320");
+        assert_eq!(cap, 1024);
+        assert_eq!(k, 320);
+        let (name, cap) = r.repulsion(512).unwrap();
+        assert_eq!(name, "repulsion_n512");
+        assert_eq!(cap, 512);
+    }
+
+    #[test]
+    fn oversize_requests_return_none() {
+        let r = ArtifactRegistry::default();
+        assert!(r.attractive(20_000).is_none());
+        assert!(r.repulsion(10_000).is_none());
+        assert!(r.perplexity(200).is_none());
+    }
+
+    #[test]
+    fn pca_and_dist_lookup() {
+        let r = ArtifactRegistry::default();
+        let (name, d, k, b) = r.pca(784, 50).unwrap();
+        assert_eq!(name, "pca_project_d784_k50_b1024");
+        assert_eq!((d, k, b), (784, 50, 1024));
+        assert!(r.pca(123, 50).is_none());
+        let (name, ..) = r.dist(3000, 50).unwrap();
+        assert_eq!(name, "dist_b256_n4096_d50");
+    }
+
+    #[test]
+    fn all_names_complete_and_unique() {
+        let r = ArtifactRegistry::default();
+        let names = r.all_names();
+        assert_eq!(names.len(), 6 + 4 + 1 + 3 + 3);
+        let mut sorted = names.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), names.len());
+    }
+}

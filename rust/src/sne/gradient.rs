@@ -1,0 +1,457 @@
+//! Gradient assembly (Eq. 8): sparse attractive forces + Barnes-Hut (or
+//! dual-tree, or exact) repulsive forces.
+//!
+//! All force routines write *unnormalized* quantities and return the
+//! normalizer Z so the caller can form `∂C/∂y_i = 4(F_attr − F_rep)` with
+//! `F_rep = F_repZ / Z` exactly as the paper derives.
+
+use super::sparse::Csr;
+use crate::spatial::{BhTree, CellSizeMode};
+use crate::util::ThreadPool;
+
+/// Strategy for the repulsive part of the gradient.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RepulsionMethod {
+    /// Exact O(N²) summation — the θ=0 / standard-t-SNE baseline.
+    Exact,
+    /// Barnes-Hut point-cell traversal with trade-off θ (§4.2).
+    BarnesHut { theta: f32 },
+    /// Dual-tree cell-cell traversal with trade-off ρ (appendix).
+    DualTree { rho: f32 },
+}
+
+/// Attractive term of Eq. 8 for every point:
+/// `F_attr(i) = Σ_j p_ij · (1+||y_i−y_j||²)^-1 · (y_i − y_j)`.
+///
+/// O(nnz(P)); parallel over rows. `y` is row-major `n × DIM`; the result
+/// is written into `out` (same layout, f64 accumulation).
+pub fn attractive_forces<const DIM: usize>(
+    pool: &ThreadPool,
+    p: &Csr,
+    y: &[f32],
+    out: &mut [f64],
+) {
+    let n = p.n_rows;
+    assert!(y.len() >= n * DIM);
+    assert_eq!(out.len(), n * DIM);
+    struct Cells(*mut f64);
+    unsafe impl Send for Cells {}
+    unsafe impl Sync for Cells {}
+    let oc = Cells(out.as_mut_ptr());
+    pool.scope_chunks(n, 128, |lo, hi| {
+        let _ = &oc;
+        for i in lo..hi {
+            let yi = &y[i * DIM..(i + 1) * DIM];
+            let mut acc = [0f64; DIM];
+            let (cols, vals) = p.row(i);
+            for (&j, &pij) in cols.iter().zip(vals) {
+                let yj = &y[j as usize * DIM..(j as usize + 1) * DIM];
+                let mut d2 = 0f32;
+                let mut diff = [0f32; DIM];
+                for d in 0..DIM {
+                    diff[d] = yi[d] - yj[d];
+                    d2 += diff[d] * diff[d];
+                }
+                let w = pij as f64 / (1.0 + d2 as f64);
+                for d in 0..DIM {
+                    acc[d] += w * diff[d] as f64;
+                }
+            }
+            // SAFETY: disjoint rows across chunks.
+            let row = unsafe { std::slice::from_raw_parts_mut(oc.0.add(i * DIM), DIM) };
+            row.copy_from_slice(&acc);
+        }
+    });
+}
+
+/// Repulsive term, exact: `F_repZ(i) = Σ_{j≠i} q² Z² (y_i − y_j)` with
+/// `qZ = (1+d²)^-1`; returns the normalizer `Z = Σ_{k≠l} (1+d²)^-1`
+/// (ordered pairs). O(N²), parallel over i.
+pub fn repulsive_exact<const DIM: usize>(pool: &ThreadPool, y: &[f32], n: usize, out: &mut [f64]) -> f64 {
+    assert!(y.len() >= n * DIM);
+    assert_eq!(out.len(), n * DIM);
+    struct Cells(*mut f64);
+    unsafe impl Send for Cells {}
+    unsafe impl Sync for Cells {}
+    let oc = Cells(out.as_mut_ptr());
+    // Deterministic Z reduction: one slot per chunk, summed in order
+    // afterwards — thread scheduling cannot perturb the result.
+    const CHUNK: usize = 16;
+    let n_chunks = n.div_ceil(CHUNK);
+    let mut z_parts = vec![0f64; n_chunks];
+    let zc = Cells(z_parts.as_mut_ptr());
+    pool.scope_chunks(n, CHUNK, |lo, hi| {
+        let _ = (&oc, &zc);
+        let mut z_local = 0f64;
+        for i in lo..hi {
+            let yi = &y[i * DIM..(i + 1) * DIM];
+            let mut acc = [0f64; DIM];
+            for j in 0..n {
+                if j == i {
+                    continue;
+                }
+                let yj = &y[j * DIM..(j + 1) * DIM];
+                let mut d2 = 0f32;
+                let mut diff = [0f32; DIM];
+                for d in 0..DIM {
+                    diff[d] = yi[d] - yj[d];
+                    d2 += diff[d] * diff[d];
+                }
+                let q = 1.0 / (1.0 + d2 as f64);
+                z_local += q;
+                let qq = q * q;
+                for d in 0..DIM {
+                    acc[d] += qq * diff[d] as f64;
+                }
+            }
+            let row = unsafe { std::slice::from_raw_parts_mut(oc.0.add(i * DIM), DIM) };
+            row.copy_from_slice(&acc);
+        }
+        // SAFETY: one chunk writes exactly one slot.
+        unsafe { *zc.0.add(lo / CHUNK) = z_local };
+    });
+    z_parts.iter().sum()
+}
+
+/// Repulsive term via Barnes-Hut: builds the quadtree/octree and runs the
+/// per-point traversal in parallel. Returns Z.
+pub fn repulsive_bh<const DIM: usize>(
+    pool: &ThreadPool,
+    y: &[f32],
+    n: usize,
+    theta: f32,
+    mode: CellSizeMode,
+    out: &mut [f64],
+) -> f64 {
+    let tree = BhTree::<DIM>::build_with(y, n, mode);
+    repulsive_bh_with_tree(pool, &tree, y, n, theta, out)
+}
+
+/// Same, reusing an already-built tree (the runner rebuilds the tree once
+/// per iteration and shares it between cost and gradient evaluation).
+pub fn repulsive_bh_with_tree<const DIM: usize>(
+    pool: &ThreadPool,
+    tree: &BhTree<DIM>,
+    y: &[f32],
+    n: usize,
+    theta: f32,
+    out: &mut [f64],
+) -> f64 {
+    assert_eq!(out.len(), n * DIM);
+    struct Cells(*mut f64);
+    unsafe impl Send for Cells {}
+    unsafe impl Sync for Cells {}
+    let oc = Cells(out.as_mut_ptr());
+    // Deterministic Z reduction (see repulsive_exact).
+    const CHUNK: usize = 64;
+    let n_chunks = n.div_ceil(CHUNK);
+    let mut z_parts = vec![0f64; n_chunks];
+    let zc = Cells(z_parts.as_mut_ptr());
+    pool.scope_chunks(n, CHUNK, |lo, hi| {
+        let _ = (&oc, &zc);
+        let mut z_local = 0f64;
+        for i in lo..hi {
+            let mut yi = [0f32; DIM];
+            yi.copy_from_slice(&y[i * DIM..(i + 1) * DIM]);
+            let mut f = [0f64; DIM];
+            z_local += tree.repulsion(i as u32, &yi, theta, &mut f);
+            let row = unsafe { std::slice::from_raw_parts_mut(oc.0.add(i * DIM), DIM) };
+            row.copy_from_slice(&f);
+        }
+        // SAFETY: one chunk writes exactly one slot.
+        unsafe { *zc.0.add(lo / CHUNK) = z_local };
+    });
+    z_parts.iter().sum()
+}
+
+/// Full gradient of Eq. 8: `grad = 4 (F_attr − F_repZ / Z)`, written into
+/// `grad` (row-major `n × DIM`). Returns Z (useful for the KL cost).
+pub fn gradient<const DIM: usize>(
+    pool: &ThreadPool,
+    p: &Csr,
+    y: &[f32],
+    n: usize,
+    method: RepulsionMethod,
+    mode: CellSizeMode,
+    grad: &mut [f64],
+    attr_scratch: &mut [f64],
+    rep_scratch: &mut [f64],
+) -> f64 {
+    assert_eq!(grad.len(), n * DIM);
+    attractive_forces::<DIM>(pool, p, y, attr_scratch);
+    rep_scratch.iter_mut().for_each(|v| *v = 0.0);
+    let z = match method {
+        RepulsionMethod::Exact => repulsive_exact::<DIM>(pool, y, n, rep_scratch),
+        RepulsionMethod::BarnesHut { theta } => {
+            repulsive_bh::<DIM>(pool, y, n, theta, mode, rep_scratch)
+        }
+        RepulsionMethod::DualTree { rho } => {
+            let mut tree = BhTree::<DIM>::build_with(y, n, mode);
+            tree.repulsion_dual(rho, rep_scratch)
+        }
+    };
+    let zinv = 1.0 / z.max(f64::MIN_POSITIVE);
+    for (g, (a, r)) in grad.iter_mut().zip(attr_scratch.iter().zip(rep_scratch.iter())) {
+        *g = 4.0 * (a - r * zinv);
+    }
+    z
+}
+
+/// KL divergence KL(P||Q) (Eq. 4) given the current embedding and Z.
+/// Exact in the sparse entries: terms with p_ij = 0 contribute zero, so
+/// only stored entries are summed; Z must cover all pairs (from the
+/// repulsion pass). O(nnz).
+pub fn kl_cost<const DIM: usize>(pool: &ThreadPool, p: &Csr, y: &[f32], z: f64) -> f64 {
+    let n = p.n_rows;
+    const CHUNK: usize = 256;
+    let n_chunks = n.div_ceil(CHUNK);
+    let mut parts = vec![0f64; n_chunks];
+    struct Cells(*mut f64);
+    unsafe impl Send for Cells {}
+    unsafe impl Sync for Cells {}
+    let pc = Cells(parts.as_mut_ptr());
+    pool.scope_chunks(n, CHUNK, |lo, hi| {
+        let _ = &pc;
+        let mut local = 0f64;
+        for i in lo..hi {
+            let yi = &y[i * DIM..(i + 1) * DIM];
+            let (cols, vals) = p.row(i);
+            for (&j, &pij) in cols.iter().zip(vals) {
+                if pij <= 0.0 {
+                    continue;
+                }
+                let yj = &y[j as usize * DIM..(j as usize + 1) * DIM];
+                let mut d2 = 0f64;
+                for d in 0..DIM {
+                    let diff = (yi[d] - yj[d]) as f64;
+                    d2 += diff * diff;
+                }
+                let qij = (1.0 / (1.0 + d2)) / z;
+                local += pij as f64 * ((pij as f64 / qij.max(1e-300)).ln());
+            }
+        }
+        // SAFETY: one chunk writes exactly one slot.
+        unsafe { *pc.0.add(lo / CHUNK) = local };
+    });
+    parts.iter().sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn random_embedding(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::seeded(seed);
+        (0..n * 2).map(|_| rng.normal() as f32).collect()
+    }
+
+    /// Dense random P that is symmetric and sums to 1, sparsified.
+    fn random_p(n: usize, k: usize, seed: u64) -> Csr {
+        let mut rng = Pcg32::seeded(seed);
+        let mut rows: Vec<Vec<(u32, f32)>> = vec![Vec::new(); n];
+        for i in 0..n {
+            for _ in 0..k {
+                let j = rng.below_usize(n);
+                if j != i {
+                    let v = rng.uniform_f32();
+                    rows[i].push((j as u32, v));
+                    rows[j].push((i as u32, v));
+                }
+            }
+        }
+        let mut m = Csr::from_rows(n, rows);
+        let s = m.sum() as f32;
+        m.scale(1.0 / s);
+        m
+    }
+
+    /// Naive full-gradient oracle straight from Eq. 5.
+    fn exact_gradient_oracle(p: &Csr, y: &[f32], n: usize) -> Vec<f64> {
+        // Z over ordered pairs.
+        let mut z = 0f64;
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    let dx = (y[i * 2] - y[j * 2]) as f64;
+                    let dy = (y[i * 2 + 1] - y[j * 2 + 1]) as f64;
+                    z += 1.0 / (1.0 + dx * dx + dy * dy);
+                }
+            }
+        }
+        let mut grad = vec![0f64; n * 2];
+        for i in 0..n {
+            for j in 0..n {
+                if i == j {
+                    continue;
+                }
+                let dx = (y[i * 2] - y[j * 2]) as f64;
+                let dy = (y[i * 2 + 1] - y[j * 2 + 1]) as f64;
+                let qz = 1.0 / (1.0 + dx * dx + dy * dy);
+                let qij = qz / z;
+                let pij = p.get(i, j as u32).unwrap_or(0.0) as f64;
+                let w = 4.0 * (pij - qij) * qz;
+                grad[i * 2] += w * dx;
+                grad[i * 2 + 1] += w * dy;
+            }
+        }
+        grad
+    }
+
+    #[test]
+    fn exact_method_matches_eq5_oracle() {
+        let n = 80;
+        let y = random_embedding(n, 1);
+        let p = random_p(n, 5, 2);
+        let pool = ThreadPool::new(4);
+        let mut grad = vec![0f64; n * 2];
+        let mut a = vec![0f64; n * 2];
+        let mut r = vec![0f64; n * 2];
+        gradient::<2>(&pool, &p, &y, n, RepulsionMethod::Exact, CellSizeMode::Diagonal, &mut grad, &mut a, &mut r);
+        let want = exact_gradient_oracle(&p, &y, n);
+        for (g, w) in grad.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-6 * w.abs().max(1e-3), "got {g} want {w}");
+        }
+    }
+
+    #[test]
+    fn bh_theta0_equals_exact() {
+        let n = 60;
+        let y = random_embedding(n, 3);
+        let p = random_p(n, 4, 4);
+        let pool = ThreadPool::new(2);
+        let mut g_exact = vec![0f64; n * 2];
+        let mut g_bh = vec![0f64; n * 2];
+        let mut a = vec![0f64; n * 2];
+        let mut r = vec![0f64; n * 2];
+        gradient::<2>(&pool, &p, &y, n, RepulsionMethod::Exact, CellSizeMode::Diagonal, &mut g_exact, &mut a, &mut r);
+        gradient::<2>(&pool, &p, &y, n, RepulsionMethod::BarnesHut { theta: 0.0 }, CellSizeMode::Diagonal, &mut g_bh, &mut a, &mut r);
+        // θ=0 visits every leaf — algorithmically exact; the BH summary
+        // path computes q with one f32 divide (§Perf), so agreement is at
+        // f32 precision, not bit-exact f64.
+        // Error scale is set by the (large, mostly cancelling) repulsion
+        // terms, so tolerance is absolute at f32 precision of those terms.
+        for (e, b) in g_exact.iter().zip(&g_bh) {
+            assert!((e - b).abs() < 1e-6 + 1e-5 * e.abs(), "exact {e} vs bh {b}");
+        }
+    }
+
+    #[test]
+    fn bh_theta05_close_to_exact() {
+        let n = 300;
+        let y = random_embedding(n, 5);
+        let p = random_p(n, 6, 6);
+        let pool = ThreadPool::new(4);
+        let mut g_exact = vec![0f64; n * 2];
+        let mut g_bh = vec![0f64; n * 2];
+        let mut a = vec![0f64; n * 2];
+        let mut r = vec![0f64; n * 2];
+        gradient::<2>(&pool, &p, &y, n, RepulsionMethod::Exact, CellSizeMode::Diagonal, &mut g_exact, &mut a, &mut r);
+        gradient::<2>(&pool, &p, &y, n, RepulsionMethod::BarnesHut { theta: 0.5 }, CellSizeMode::Diagonal, &mut g_bh, &mut a, &mut r);
+        // Relative L2 error of the whole gradient field.
+        let norm: f64 = g_exact.iter().map(|x| x * x).sum::<f64>().sqrt();
+        let err: f64 = g_exact.iter().zip(&g_bh).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt();
+        assert!(err / norm < 0.05, "rel err {}", err / norm);
+    }
+
+    #[test]
+    fn dual_tree_close_to_exact() {
+        let n = 250;
+        let y = random_embedding(n, 7);
+        let p = random_p(n, 6, 8);
+        let pool = ThreadPool::new(4);
+        let mut g_exact = vec![0f64; n * 2];
+        let mut g_dt = vec![0f64; n * 2];
+        let mut a = vec![0f64; n * 2];
+        let mut r = vec![0f64; n * 2];
+        gradient::<2>(&pool, &p, &y, n, RepulsionMethod::Exact, CellSizeMode::Diagonal, &mut g_exact, &mut a, &mut r);
+        gradient::<2>(&pool, &p, &y, n, RepulsionMethod::DualTree { rho: 0.2 }, CellSizeMode::Diagonal, &mut g_dt, &mut a, &mut r);
+        let norm: f64 = g_exact.iter().map(|x| x * x).sum::<f64>().sqrt();
+        let err: f64 = g_exact.iter().zip(&g_dt).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt();
+        assert!(err / norm < 0.1, "rel err {}", err / norm);
+    }
+
+    #[test]
+    fn gradient_descends_cost() {
+        // One small gradient step must not increase KL.
+        let n = 120;
+        let mut y = random_embedding(n, 9);
+        let p = random_p(n, 5, 10);
+        let pool = ThreadPool::new(4);
+        let mut grad = vec![0f64; n * 2];
+        let mut a = vec![0f64; n * 2];
+        let mut r = vec![0f64; n * 2];
+        let z0 = gradient::<2>(&pool, &p, &y, n, RepulsionMethod::Exact, CellSizeMode::Diagonal, &mut grad, &mut a, &mut r);
+        let c0 = kl_cost::<2>(&pool, &p, &y, z0);
+        let eta = 0.01;
+        for (yy, g) in y.iter_mut().zip(&grad) {
+            *yy -= (eta * g) as f32;
+        }
+        let z1 = gradient::<2>(&pool, &p, &y, n, RepulsionMethod::Exact, CellSizeMode::Diagonal, &mut grad, &mut a, &mut r);
+        let c1 = kl_cost::<2>(&pool, &p, &y, z1);
+        assert!(c1 <= c0 + 1e-9, "cost rose: {c0} -> {c1}");
+    }
+
+    #[test]
+    fn gradient_is_translation_invariant() {
+        let n = 90;
+        let y = random_embedding(n, 11);
+        let shifted: Vec<f32> = y.iter().enumerate().map(|(i, &v)| v + if i % 2 == 0 { 5.0 } else { -3.0 }).collect();
+        let p = random_p(n, 5, 12);
+        let pool = ThreadPool::new(2);
+        let mut g1 = vec![0f64; n * 2];
+        let mut g2 = vec![0f64; n * 2];
+        let mut a = vec![0f64; n * 2];
+        let mut r = vec![0f64; n * 2];
+        gradient::<2>(&pool, &p, &y, n, RepulsionMethod::Exact, CellSizeMode::Diagonal, &mut g1, &mut a, &mut r);
+        gradient::<2>(&pool, &p, &shifted, n, RepulsionMethod::Exact, CellSizeMode::Diagonal, &mut g2, &mut a, &mut r);
+        // f32 coordinates lose ~1e-6 absolute precision under the shift,
+        // so require agreement at f32-realistic tolerance.
+        for (x, w) in g1.iter().zip(&g2) {
+            assert!((x - w).abs() < 1e-4 + 1e-3 * x.abs(), "{x} vs {w}");
+        }
+    }
+
+    #[test]
+    fn finite_difference_check() {
+        // Central finite differences on the exact KL cost vs our gradient.
+        let n = 25;
+        let y = random_embedding(n, 13);
+        let p = random_p(n, 4, 14);
+        let pool = ThreadPool::new(1);
+
+        let cost_fn = |y: &[f32]| {
+            // Exact Z.
+            let mut z = 0f64;
+            for i in 0..n {
+                for j in 0..n {
+                    if i != j {
+                        let dx = (y[i * 2] - y[j * 2]) as f64;
+                        let dy = (y[i * 2 + 1] - y[j * 2 + 1]) as f64;
+                        z += 1.0 / (1.0 + dx * dx + dy * dy);
+                    }
+                }
+            }
+            kl_cost::<2>(&pool, &p, y, z)
+        };
+
+        let mut grad = vec![0f64; n * 2];
+        let mut a = vec![0f64; n * 2];
+        let mut r = vec![0f64; n * 2];
+        gradient::<2>(&pool, &p, &y, n, RepulsionMethod::Exact, CellSizeMode::Diagonal, &mut grad, &mut a, &mut r);
+
+        let h = 1e-3f32;
+        for idx in [0usize, 7, 13, 2 * n - 1] {
+            let mut yp = y.clone();
+            let mut ym = y.clone();
+            yp[idx] += h;
+            ym[idx] -= h;
+            let fd = (cost_fn(&yp) - cost_fn(&ym)) / (2.0 * h as f64);
+            assert!(
+                (fd - grad[idx]).abs() < 5e-3 * fd.abs().max(0.1),
+                "idx {idx}: fd {fd} vs analytic {}",
+                grad[idx]
+            );
+        }
+    }
+}

@@ -1,0 +1,143 @@
+//! Input-similarity pipeline (§4.1): kNN search → per-point bandwidth
+//! search → sparse conditional P → symmetrized joint P.
+
+use super::perplexity::conditional_probabilities;
+use super::sparse::Csr;
+use crate::knn::{KnnBackend, KnnResult};
+use crate::util::{Stopwatch, ThreadPool};
+
+/// Timing breakdown of the input-similarity stage (reported by the
+/// pipeline and the benches).
+#[derive(Debug, Clone, Default)]
+pub struct InputStageStats {
+    pub knn_secs: f64,
+    pub perplexity_secs: f64,
+    pub symmetrize_secs: f64,
+    pub perplexity_failures: usize,
+    pub nnz: usize,
+}
+
+/// Compute the sparse joint distribution P of Eq. 6/7.
+///
+/// * `x` — row-major `n × dim` input data.
+/// * `perplexity` — the paper's u; each point keeps ⌊3u⌋ neighbors.
+/// * `backend` — kNN strategy (vp-tree in all paper experiments).
+///
+/// Returns the symmetrized CSR (sums to 1) plus stage statistics.
+pub fn joint_probabilities(
+    pool: &ThreadPool,
+    x: &[f32],
+    n: usize,
+    dim: usize,
+    perplexity: f64,
+    backend: &dyn KnnBackend,
+    seed: u64,
+) -> (Csr, InputStageStats) {
+    let k = (3.0 * perplexity).floor() as usize;
+    let k = k.min(n - 1).max(1);
+    let mut stats = InputStageStats::default();
+
+    let sw = Stopwatch::start();
+    let KnnResult { indices, distances } = backend.knn_all(pool, x, n, dim, k, seed);
+    stats.knn_secs = sw.elapsed_secs();
+
+    // Squared distances for the Gaussian kernel.
+    let sw = Stopwatch::start();
+    let d2: Vec<f32> = distances.iter().map(|&d| d * d).collect();
+    let cond = conditional_probabilities(pool, &d2, n, k, perplexity.min(k as f64), 1e-5);
+    stats.perplexity_failures = cond.failures;
+    stats.perplexity_secs = sw.elapsed_secs();
+
+    // Assemble conditional CSR rows, then symmetrize.
+    let sw = Stopwatch::start();
+    let rows: Vec<Vec<(u32, f32)>> = (0..n)
+        .map(|i| {
+            (0..k)
+                .filter(|&j| indices[i * k + j] != i as u32) // paranoia: no self loops
+                .map(|j| (indices[i * k + j], cond.p[i * k + j]))
+                .collect()
+        })
+        .collect();
+    let conditional = Csr::from_rows(n, rows);
+    let joint = conditional.symmetrize();
+    stats.symmetrize_secs = sw.elapsed_secs();
+    stats.nnz = joint.nnz();
+    (joint, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::knn::VpTreeKnn;
+    use crate::util::Pcg32;
+
+    fn random_data(n: usize, dim: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::seeded(seed);
+        (0..n * dim).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn joint_p_sums_to_one_and_symmetric() {
+        let (n, dim) = (300, 5);
+        let x = random_data(n, dim, 1);
+        let pool = ThreadPool::new(4);
+        let (p, stats) = joint_probabilities(&pool, &x, n, dim, 15.0, &VpTreeKnn, 7);
+        assert!((p.sum() - 1.0).abs() < 1e-4, "sum={}", p.sum());
+        assert!(p.is_symmetric(1e-4));
+        assert_eq!(stats.perplexity_failures, 0);
+        // ⌊3u⌋ = 45 neighbors per row before symmetrization; after, between
+        // 45 and 90 per row.
+        let k = 45;
+        assert!(stats.nnz >= n * k && stats.nnz <= 2 * n * k, "nnz={}", stats.nnz);
+    }
+
+    #[test]
+    fn no_self_similarities() {
+        let (n, dim) = (100, 3);
+        let x = random_data(n, dim, 2);
+        let pool = ThreadPool::new(2);
+        let (p, _) = joint_probabilities(&pool, &x, n, dim, 10.0, &VpTreeKnn, 3);
+        for i in 0..n {
+            assert_eq!(p.get(i, i as u32), None, "self-loop at {i}");
+        }
+    }
+
+    #[test]
+    fn close_pairs_get_more_mass() {
+        // Two tight clusters far apart: within-cluster p should dominate.
+        let dim = 2;
+        let n = 60;
+        let mut rng = Pcg32::seeded(3);
+        let mut x = Vec::with_capacity(n * dim);
+        for i in 0..n {
+            let c = if i < 30 { 0.0 } else { 100.0 };
+            x.push(c + rng.normal() as f32);
+            x.push(c + rng.normal() as f32);
+        }
+        let pool = ThreadPool::new(2);
+        let (p, _) = joint_probabilities(&pool, &x, n, dim, 5.0, &VpTreeKnn, 4);
+        let mut within = 0f64;
+        let mut across = 0f64;
+        for i in 0..n {
+            let (cols, vals) = p.row(i);
+            for (&j, &v) in cols.iter().zip(vals) {
+                if (i < 30) == ((j as usize) < 30) {
+                    within += v as f64;
+                } else {
+                    across += v as f64;
+                }
+            }
+        }
+        assert!(within > 100.0 * across, "within={within} across={across}");
+    }
+
+    #[test]
+    fn tiny_dataset_clamps_k() {
+        let (n, dim) = (8, 2);
+        let x = random_data(n, dim, 5);
+        let pool = ThreadPool::new(1);
+        // perplexity 30 → k=90 > n-1; must clamp and still work.
+        let (p, _) = joint_probabilities(&pool, &x, n, dim, 30.0, &VpTreeKnn, 6);
+        assert!((p.sum() - 1.0).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,471 @@
+//! t-SNE / Barnes-Hut-SNE core: similarity construction, gradient
+//! strategies, the optimizer, and the [`TsneRunner`] that ties them into
+//! the paper's full training loop.
+
+pub mod gradient;
+pub mod input;
+pub mod optimizer;
+pub mod perplexity;
+pub mod sparse;
+
+pub use gradient::RepulsionMethod;
+pub use sparse::Csr;
+
+use crate::knn::{BruteKnn, KnnBackend, VpTreeKnn};
+use crate::spatial::CellSizeMode;
+use crate::util::{Pcg32, Stopwatch, ThreadPool};
+
+/// Pluggable attractive-force backend. The default computes on the Rust
+/// thread pool; the runtime module provides an XLA-offloaded
+/// implementation loaded from AOT artifacts.
+///
+/// Not `Send`/`Sync`: the XLA backend wraps PJRT handles that are
+/// single-threaded by construction; `compute` is only ever invoked from
+/// the runner's own thread (parallelism happens *inside* via the pool).
+pub trait AttractiveBackend {
+    fn name(&self) -> &'static str;
+    /// Write `F_attr` (Eq. 8 left sum) for every point into `out`
+    /// (row-major `n × dim`, f64).
+    fn compute(&self, pool: &ThreadPool, p: &Csr, y: &[f32], dim: usize, out: &mut [f64]);
+}
+
+/// Default CPU attractive-force backend.
+pub struct CpuAttractive;
+
+impl AttractiveBackend for CpuAttractive {
+    fn name(&self) -> &'static str {
+        "cpu"
+    }
+
+    fn compute(&self, pool: &ThreadPool, p: &Csr, y: &[f32], dim: usize, out: &mut [f64]) {
+        match dim {
+            2 => gradient::attractive_forces::<2>(pool, p, y, out),
+            3 => gradient::attractive_forces::<3>(pool, p, y, out),
+            _ => panic!("unsupported embedding dimension {dim}"),
+        }
+    }
+}
+
+/// Which kNN backend builds the input similarities.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KnnChoice {
+    VpTree,
+    Brute,
+}
+
+/// Full configuration of one t-SNE run — field defaults mirror the
+/// paper's experimental setup (§5).
+#[derive(Debug, Clone)]
+pub struct TsneConfig {
+    /// Output dimensionality s ∈ {2, 3}.
+    pub out_dim: usize,
+    /// Perplexity u (paper: 30).
+    pub perplexity: f64,
+    /// Barnes-Hut trade-off θ (paper: 0.5; 0 ⇒ exact).
+    pub theta: f32,
+    /// Gradient iterations (paper: 1000).
+    pub iters: usize,
+    /// Early-exaggeration factor α (paper: 12).
+    pub exaggeration: f32,
+    /// Iterations during which exaggeration applies (paper: 250).
+    pub exaggeration_iters: usize,
+    /// Initial step size η (paper: 200).
+    pub eta: f64,
+    /// RNG seed for init + tree builds.
+    pub seed: u64,
+    /// Repulsion strategy. `BarnesHut{theta}` by default; `theta` field
+    /// above is used when this is `None`.
+    pub repulsion: Option<RepulsionMethod>,
+    /// kNN backend for the input stage.
+    pub knn: KnnChoice,
+    /// Cell-size measure in the BH condition.
+    pub cell_size: CellSizeMode,
+    /// Compute the KL cost every `cost_every` iterations (0 = never; cost
+    /// evaluation reuses the iteration's Z so it is cheap but not free).
+    pub cost_every: usize,
+}
+
+impl Default for TsneConfig {
+    fn default() -> Self {
+        TsneConfig {
+            out_dim: 2,
+            perplexity: 30.0,
+            theta: 0.5,
+            iters: 1000,
+            exaggeration: 12.0,
+            exaggeration_iters: 250,
+            eta: 200.0,
+            seed: 42,
+            repulsion: None,
+            knn: KnnChoice::VpTree,
+            cell_size: CellSizeMode::Diagonal,
+            cost_every: 50,
+        }
+    }
+}
+
+impl TsneConfig {
+    /// Resolve the repulsion method from config.
+    pub fn repulsion_method(&self) -> RepulsionMethod {
+        self.repulsion.unwrap_or({
+            if self.theta <= 0.0 {
+                RepulsionMethod::Exact
+            } else {
+                RepulsionMethod::BarnesHut { theta: self.theta }
+            }
+        })
+    }
+}
+
+/// Per-iteration progress record passed to the observer callback.
+#[derive(Debug, Clone)]
+pub struct IterStats {
+    pub iter: usize,
+    pub kl: Option<f64>,
+    pub grad_norm: f64,
+    pub z: f64,
+    pub secs: f64,
+    pub exaggerating: bool,
+}
+
+/// Aggregate timing of a finished run.
+#[derive(Debug, Clone, Default)]
+pub struct RunStats {
+    pub input_stage: input::InputStageStats,
+    pub gradient_secs: f64,
+    pub total_secs: f64,
+    pub final_kl: Option<f64>,
+    pub iters: usize,
+}
+
+/// The Barnes-Hut-SNE training loop.
+pub struct TsneRunner {
+    pub config: TsneConfig,
+    pool: ThreadPool,
+    attractive: Box<dyn AttractiveBackend>,
+    observer: Option<Box<dyn FnMut(&IterStats, &[f32])>>,
+    pub stats: RunStats,
+}
+
+impl TsneRunner {
+    pub fn new(config: TsneConfig) -> Self {
+        TsneRunner {
+            config,
+            pool: ThreadPool::for_host(),
+            attractive: Box::new(CpuAttractive),
+            observer: None,
+            stats: RunStats::default(),
+        }
+    }
+
+    /// Use an explicit thread pool (benches pin thread counts).
+    pub fn with_pool(config: TsneConfig, pool: ThreadPool) -> Self {
+        TsneRunner {
+            config,
+            pool,
+            attractive: Box::new(CpuAttractive),
+            observer: None,
+            stats: RunStats::default(),
+        }
+    }
+
+    /// Swap in a different attractive-force backend (XLA runtime).
+    pub fn set_attractive_backend(&mut self, b: Box<dyn AttractiveBackend>) {
+        self.attractive = b;
+    }
+
+    /// Register a per-iteration observer (progress bars, snapshots).
+    pub fn set_observer(&mut self, f: Box<dyn FnMut(&IterStats, &[f32])>) {
+        self.observer = Some(f);
+    }
+
+    pub fn pool(&self) -> &ThreadPool {
+        &self.pool
+    }
+
+    /// Embed `x` (row-major `n × dim`). Returns the embedding, row-major
+    /// `n × out_dim`.
+    pub fn run(&mut self, x: &[f32], dim: usize) -> anyhow::Result<Vec<f32>> {
+        let n = x.len() / dim;
+        anyhow::ensure!(n * dim == x.len(), "x length {} not divisible by dim {dim}", x.len());
+        anyhow::ensure!(n >= 2, "need at least 2 points");
+        let total_sw = Stopwatch::start();
+
+        // ---- Input similarities (Eq. 6/7) ----
+        let backend: &dyn KnnBackend = match self.config.knn {
+            KnnChoice::VpTree => &VpTreeKnn,
+            KnnChoice::Brute => &BruteKnn,
+        };
+        let (mut p, input_stats) = input::joint_probabilities(
+            &self.pool,
+            x,
+            n,
+            dim,
+            self.config.perplexity,
+            backend,
+            self.config.seed,
+        );
+        self.stats.input_stage = input_stats;
+
+        // ---- Optimize ----
+        let y = self.optimize(&mut p, n)?;
+        self.stats.total_secs = total_sw.elapsed_secs();
+        Ok(y)
+    }
+
+    /// Run the gradient loop on a pre-computed joint distribution
+    /// (exposed so the pipeline can split stages and so tests can inject
+    /// exact P). `p` is temporarily exaggerated in place.
+    pub fn optimize(&mut self, p: &mut Csr, n: usize) -> anyhow::Result<Vec<f32>> {
+        let dim = self.config.out_dim;
+        anyhow::ensure!(dim == 2 || dim == 3, "out_dim must be 2 or 3 (paper §6)");
+        let method = self.config.repulsion_method();
+        let sw = Stopwatch::start();
+
+        // Init y ~ N(0, 1e-4) (σ = 0.01), per the paper.
+        let mut rng = Pcg32::seeded(self.config.seed);
+        let mut y = vec![0f32; n * dim];
+        rng.fill_normal(&mut y, 1e-2);
+
+        let mut opt = optimizer::Optimizer::new(n, dim, self.config.eta);
+        opt.momentum_switch = self.config.exaggeration_iters;
+
+        // Early exaggeration: multiply all p_ij by α for the first
+        // `exaggeration_iters` iterations.
+        let ex = self.config.exaggeration.max(1.0);
+        if ex > 1.0 {
+            p.scale(ex);
+        }
+        let mut exaggerating = ex > 1.0;
+
+        let mut grad = vec![0f64; n * dim];
+        let mut attr = vec![0f64; n * dim];
+        let mut rep = vec![0f64; n * dim];
+        let mut last_kl = None;
+
+        for it in 0..self.config.iters {
+            let it_sw = Stopwatch::start();
+            if exaggerating && it >= self.config.exaggeration_iters {
+                p.scale(1.0 / ex);
+                exaggerating = false;
+            }
+
+            // Gradient: attractive via the pluggable backend, repulsive via
+            // the configured tree strategy.
+            self.attractive.compute(&self.pool, p, &y, dim, &mut attr);
+            rep.iter_mut().for_each(|v| *v = 0.0);
+            let z = match (dim, method) {
+                (2, RepulsionMethod::Exact) => gradient::repulsive_exact::<2>(&self.pool, &y, n, &mut rep),
+                (3, RepulsionMethod::Exact) => gradient::repulsive_exact::<3>(&self.pool, &y, n, &mut rep),
+                (2, RepulsionMethod::BarnesHut { theta }) => {
+                    gradient::repulsive_bh::<2>(&self.pool, &y, n, theta, self.config.cell_size, &mut rep)
+                }
+                (3, RepulsionMethod::BarnesHut { theta }) => {
+                    gradient::repulsive_bh::<3>(&self.pool, &y, n, theta, self.config.cell_size, &mut rep)
+                }
+                (2, RepulsionMethod::DualTree { rho }) => {
+                    let mut tree = crate::spatial::BhTree::<2>::build_with(&y, n, self.config.cell_size);
+                    tree.repulsion_dual(rho, &mut rep)
+                }
+                (3, RepulsionMethod::DualTree { rho }) => {
+                    let mut tree = crate::spatial::BhTree::<3>::build_with(&y, n, self.config.cell_size);
+                    tree.repulsion_dual(rho, &mut rep)
+                }
+                _ => unreachable!(),
+            };
+            let zinv = 1.0 / z.max(f64::MIN_POSITIVE);
+            let mut gnorm = 0f64;
+            for i in 0..n * dim {
+                grad[i] = 4.0 * (attr[i] - rep[i] * zinv);
+                gnorm += grad[i] * grad[i];
+            }
+
+            opt.step(&mut y, &grad);
+            optimizer::Optimizer::recenter(&mut y, n, dim);
+
+            let kl = if self.config.cost_every > 0
+                && (it % self.config.cost_every == 0 || it + 1 == self.config.iters)
+            {
+                let c = match dim {
+                    2 => gradient::kl_cost::<2>(&self.pool, p, &y, z),
+                    _ => gradient::kl_cost::<3>(&self.pool, p, &y, z),
+                };
+                last_kl = Some(c);
+                Some(c)
+            } else {
+                None
+            };
+
+            if let Some(obs) = &mut self.observer {
+                obs(
+                    &IterStats {
+                        iter: it,
+                        kl,
+                        grad_norm: gnorm.sqrt(),
+                        z,
+                        secs: it_sw.elapsed_secs(),
+                        exaggerating,
+                    },
+                    &y,
+                );
+            }
+        }
+        // Leave P un-exaggerated even when iters < exaggeration_iters.
+        if exaggerating {
+            p.scale(1.0 / ex);
+        }
+        self.stats.gradient_secs = sw.elapsed_secs();
+        self.stats.final_kl = last_kl;
+        self.stats.iters = self.config.iters;
+        Ok(y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{gaussian_mixture, SyntheticSpec};
+
+    fn tiny_config(iters: usize) -> TsneConfig {
+        TsneConfig {
+            iters,
+            exaggeration_iters: iters / 4,
+            cost_every: iters / 4,
+            seed: 1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn run_produces_finite_embedding() {
+        let data = gaussian_mixture(&SyntheticSpec { n: 300, dim: 10, classes: 3, seed: 5, ..Default::default() });
+        let mut runner = TsneRunner::new(tiny_config(120));
+        let y = runner.run(&data.x, data.dim).unwrap();
+        assert_eq!(y.len(), 300 * 2);
+        assert!(y.iter().all(|v| v.is_finite()));
+        // Embedding should have expanded well beyond the 1e-2 init scale.
+        let spread = y.iter().map(|v| v.abs()).fold(0f32, f32::max);
+        assert!(spread > 0.5, "spread={spread}");
+    }
+
+    #[test]
+    fn kl_decreases_over_training() {
+        let data = gaussian_mixture(&SyntheticSpec { n: 240, dim: 8, classes: 4, seed: 6, ..Default::default() });
+        let mut cfg = tiny_config(200);
+        cfg.cost_every = 10;
+        let mut runner = TsneRunner::new(cfg);
+        use std::cell::RefCell;
+        use std::rc::Rc;
+        let kls: Rc<RefCell<Vec<f64>>> = Rc::new(RefCell::new(Vec::new()));
+        let kls2 = Rc::clone(&kls);
+        runner.set_observer(Box::new(move |s, _| {
+            if let Some(k) = s.kl {
+                kls2.borrow_mut().push(k);
+            }
+        }));
+        runner.run(&data.x, data.dim).unwrap();
+        let kls = kls.borrow();
+        assert!(kls.len() >= 5);
+        // KL after training should be well below the first measured value
+        // (not strictly monotone per-iteration, especially around the
+        // exaggeration switch, but the trend must be down).
+        let first = kls[1]; // skip iter-0 value measured before any real progress
+        let last = *kls.last().unwrap();
+        assert!(last < first, "KL did not decrease: {first} -> {last}");
+    }
+
+    #[test]
+    fn separates_two_distant_clusters() {
+        let data = gaussian_mixture(&SyntheticSpec {
+            n: 200,
+            dim: 6,
+            classes: 2,
+            class_sep: 20.0,
+            seed: 7,
+            ..Default::default()
+        });
+        let mut runner = TsneRunner::new(tiny_config(300));
+        let y = runner.run(&data.x, data.dim).unwrap();
+        // Centroid distance vs average within-cluster spread.
+        let mut c = [[0f64; 2]; 2];
+        let mut cnt = [0f64; 2];
+        for i in 0..200 {
+            let l = data.labels[i] as usize;
+            c[l][0] += y[i * 2] as f64;
+            c[l][1] += y[i * 2 + 1] as f64;
+            cnt[l] += 1.0;
+        }
+        for l in 0..2 {
+            c[l][0] /= cnt[l];
+            c[l][1] /= cnt[l];
+        }
+        let between = ((c[0][0] - c[1][0]).powi(2) + (c[0][1] - c[1][1]).powi(2)).sqrt();
+        let mut within = 0f64;
+        for i in 0..200 {
+            let l = data.labels[i] as usize;
+            within += ((y[i * 2] as f64 - c[l][0]).powi(2) + (y[i * 2 + 1] as f64 - c[l][1]).powi(2)).sqrt();
+        }
+        within /= 200.0;
+        assert!(between > 2.0 * within, "between={between} within={within}");
+    }
+
+    #[test]
+    fn exact_and_bh_runs_similar_quality() {
+        // t-SNE trajectories are chaotic, so exact and BH runs diverge in
+        // *position*; what must match is embedding quality — the paper's
+        // own comparison metric (1-NN error) plus both KLs reaching well
+        // below the post-exaggeration level.
+        let data = gaussian_mixture(&SyntheticSpec { n: 150, dim: 5, classes: 3, seed: 8, ..Default::default() });
+        let mut errs = Vec::new();
+        let mut kls = Vec::new();
+        for theta in [0.0f32, 0.5] {
+            let mut cfg = tiny_config(150);
+            cfg.theta = theta;
+            cfg.cost_every = 150; // only final
+            let mut runner = TsneRunner::new(cfg);
+            let y = runner.run(&data.x, data.dim).unwrap();
+            errs.push(crate::eval::one_nn_error(runner.pool(), &y, 2, &data.labels));
+            kls.push(runner.stats.final_kl.unwrap());
+        }
+        assert!((errs[0] - errs[1]).abs() < 0.1, "1-NN errors diverged: {errs:?}");
+        assert!(kls.iter().all(|&k| k < 2.0), "KLs did not converge: {kls:?}");
+    }
+
+    #[test]
+    fn three_dimensional_embedding_works() {
+        let data = gaussian_mixture(&SyntheticSpec { n: 120, dim: 6, classes: 2, seed: 9, ..Default::default() });
+        let mut cfg = tiny_config(80);
+        cfg.out_dim = 3;
+        let mut runner = TsneRunner::new(cfg);
+        let y = runner.run(&data.x, data.dim).unwrap();
+        assert_eq!(y.len(), 120 * 3);
+        assert!(y.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn rejects_bad_out_dim() {
+        let data = gaussian_mixture(&SyntheticSpec { n: 50, dim: 4, classes: 2, seed: 10, ..Default::default() });
+        let mut cfg = tiny_config(10);
+        cfg.out_dim = 5;
+        let mut runner = TsneRunner::new(cfg);
+        assert!(runner.run(&data.x, data.dim).is_err());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let data = gaussian_mixture(&SyntheticSpec { n: 100, dim: 5, classes: 2, seed: 11, ..Default::default() });
+        let run = || {
+            let mut runner = TsneRunner::new(tiny_config(60));
+            runner.run(&data.x, data.dim).unwrap()
+        };
+        let y1 = run();
+        let y2 = run();
+        // Thread-pool scheduling does not affect results: all parallel
+        // writes are per-row disjoint and Z is reduced in f64... but the
+        // floating-point reduction order of Z *can* differ. We therefore
+        // require near-equality, not bit-equality.
+        for (a, b) in y1.iter().zip(&y2) {
+            assert!((a - b).abs() < 2e-2, "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,225 @@
+//! Per-point Gaussian bandwidth search (Eq. 1/6).
+//!
+//! For each point i we need σ_i such that the perplexity of the
+//! conditional distribution P_i over its ⌊3u⌋ nearest neighbors equals the
+//! user's perplexity u. Working in precision β = 1/(2σ²), the perplexity
+//! is monotone in β, so a simple bisection (the paper's "simple binary
+//! search") converges fast; 200 iterations of doubling/halving plus
+//! midpoint bisection reproduces the reference implementation's behavior.
+
+use crate::util::ThreadPool;
+
+/// Result of the conditional-distribution computation.
+#[derive(Debug, Clone)]
+pub struct CondP {
+    /// Row-major `n × k` conditional probabilities aligned with the kNN
+    /// index array the caller supplied (row i sums to 1).
+    pub p: Vec<f32>,
+    /// The β=1/(2σ²) found per point (diagnostics / tests).
+    pub beta: Vec<f32>,
+    /// Rows where the search did not reach tolerance (should be empty).
+    pub failures: usize,
+}
+
+/// Shannon entropy (nats) and normalized probabilities for a row of
+/// squared distances at precision `beta`. Returns (H, sum of unnormalized
+/// weights).
+#[inline]
+fn row_entropy(d2: &[f32], beta: f64, out_p: &mut [f64]) -> (f64, f64) {
+    // Subtract the min squared distance before exponentiating: shift
+    // invariance of the softmax keeps exp() in range for any beta.
+    let d2min = d2.iter().cloned().fold(f32::INFINITY, f32::min) as f64;
+    let mut sum = 0f64;
+    let mut dot = 0f64; // Σ w·d²
+    for (j, &d) in d2.iter().enumerate() {
+        let w = (-beta * (d as f64 - d2min)).exp();
+        out_p[j] = w;
+        sum += w;
+        dot += w * d as f64;
+    }
+    // H = log(sum) + beta * <d²> (after un-shifting the min, the shift
+    // cancels in H; derive: H = -Σ p log p with p = w/sum).
+    let h = sum.ln() + beta * (dot / sum - d2min);
+    (h, sum)
+}
+
+/// Solve one row: find β with |H(β) − log u| < tol, write normalized
+/// probabilities. `d2` are *squared* distances to the k neighbors.
+pub fn solve_row(d2: &[f32], perplexity: f64, tol: f64, p_out: &mut [f32]) -> (f32, bool) {
+    let target = perplexity.ln();
+    let k = d2.len();
+    debug_assert!(k > 0);
+    let mut beta = 1.0f64;
+    let mut beta_min = f64::NEG_INFINITY;
+    let mut beta_max = f64::INFINITY;
+    let mut scratch = vec![0f64; k];
+    let mut ok = false;
+    for _ in 0..200 {
+        let (h, _) = row_entropy(d2, beta, &mut scratch);
+        let diff = h - target;
+        if diff.abs() < tol {
+            ok = true;
+            break;
+        }
+        if diff > 0.0 {
+            // Entropy too high → distribution too flat → raise β.
+            beta_min = beta;
+            beta = if beta_max.is_infinite() { beta * 2.0 } else { 0.5 * (beta + beta_max) };
+        } else {
+            beta_max = beta;
+            beta = if beta_min.is_infinite() { beta * 0.5 } else { 0.5 * (beta + beta_min) };
+        }
+    }
+    // Final normalized probabilities at the found β.
+    let (_, sum) = row_entropy(d2, beta, &mut scratch);
+    for j in 0..k {
+        p_out[j] = (scratch[j] / sum) as f32;
+    }
+    (beta as f32, ok)
+}
+
+/// Solve all rows in parallel. `d2` is row-major `n × k` squared
+/// distances (kNN distances squared, self excluded).
+pub fn conditional_probabilities(
+    pool: &ThreadPool,
+    d2: &[f32],
+    n: usize,
+    k: usize,
+    perplexity: f64,
+    tol: f64,
+) -> CondP {
+    assert_eq!(d2.len(), n * k);
+    assert!(
+        perplexity <= k as f64,
+        "perplexity {perplexity} needs at least {perplexity} neighbors, got {k}"
+    );
+    let mut p = vec![0f32; n * k];
+    let mut beta = vec![0f32; n];
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    let failures = AtomicUsize::new(0);
+    // Disjoint row writes across threads.
+    struct Cells(*mut f32);
+    unsafe impl Send for Cells {}
+    unsafe impl Sync for Cells {}
+    let pc = Cells(p.as_mut_ptr());
+    let bc = Cells(beta.as_mut_ptr());
+    let fref = &failures;
+    pool.scope_chunks(n, 64, |lo, hi| {
+        let _ = (&pc, &bc);
+        for i in lo..hi {
+            let row = &d2[i * k..(i + 1) * k];
+            // SAFETY: rows are disjoint across chunks.
+            let p_row = unsafe { std::slice::from_raw_parts_mut(pc.0.add(i * k), k) };
+            let (b, ok) = solve_row(row, perplexity, tol, p_row);
+            unsafe { *bc.0.add(i) = b };
+            if !ok {
+                fref.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    });
+    CondP { p, beta, failures: failures.load(Ordering::Relaxed) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn entropy_of(p: &[f32]) -> f64 {
+        -p.iter().filter(|&&x| x > 0.0).map(|&x| (x as f64) * (x as f64).ln()).sum::<f64>()
+    }
+
+    #[test]
+    fn row_hits_target_perplexity() {
+        let mut rng = Pcg32::seeded(1);
+        let k = 90;
+        let d2: Vec<f32> = (0..k).map(|_| rng.uniform_range(0.1, 25.0) as f32).collect();
+        let mut p = vec![0f32; k];
+        let (beta, ok) = solve_row(&d2, 30.0, 1e-5, &mut p);
+        assert!(ok, "search failed, beta={beta}");
+        let sum: f32 = p.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-5);
+        let perp = entropy_of(&p).exp();
+        assert!((perp - 30.0).abs() < 0.01, "perplexity={perp}");
+    }
+
+    #[test]
+    fn closer_neighbors_get_higher_p() {
+        let d2 = [0.1f32, 1.0, 4.0, 9.0, 16.0, 25.0];
+        let mut p = vec![0f32; 6];
+        solve_row(&d2, 3.0, 1e-5, &mut p);
+        for w in p.windows(2) {
+            assert!(w[0] >= w[1], "{p:?} not monotone");
+        }
+    }
+
+    #[test]
+    fn tiny_distances_are_stable() {
+        // All-zero distances: uniform distribution expected (and finite).
+        let d2 = [0f32; 10];
+        let mut p = vec![0f32; 10];
+        let (_, _) = solve_row(&d2, 5.0, 1e-5, &mut p);
+        assert!(p.iter().all(|x| x.is_finite()));
+        let sum: f32 = p.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-5);
+        for &x in &p {
+            assert!((x - 0.1).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn huge_distances_are_stable() {
+        let d2 = [1e8f32, 2e8, 3e8, 4e8, 5e8];
+        let mut p = vec![0f32; 5];
+        let (beta, _) = solve_row(&d2, 2.0, 1e-5, &mut p);
+        assert!(p.iter().all(|x| x.is_finite()), "beta={beta} p={p:?}");
+        let perp = entropy_of(&p).exp();
+        assert!((perp - 2.0).abs() < 0.05, "perp={perp}");
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let mut rng = Pcg32::seeded(2);
+        let (n, k) = (64, 30);
+        let d2: Vec<f32> = (0..n * k).map(|_| rng.uniform_range(0.5, 50.0) as f32).collect();
+        let pool = ThreadPool::new(4);
+        let cp = conditional_probabilities(&pool, &d2, n, k, 10.0, 1e-5);
+        assert_eq!(cp.failures, 0);
+        for i in 0..n {
+            let mut p = vec![0f32; k];
+            let (b, _) = solve_row(&d2[i * k..(i + 1) * k], 10.0, 1e-5, &mut p);
+            assert!((cp.beta[i] - b).abs() < 1e-6);
+            for j in 0..k {
+                assert!((cp.p[i * k + j] - p[j]).abs() < 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn beta_decreases_with_spread() {
+        // A spread-out row needs a smaller beta (larger sigma) than a tight
+        // one for the same perplexity? Actually: tighter distances need
+        // LARGER beta to reach the same (absolute) perplexity since
+        // perplexity is scale-dependent through beta*d². Verify the scaling
+        // identity: scaling d² by c scales beta by 1/c.
+        let d2a: Vec<f32> = (1..=50).map(|i| i as f32).collect();
+        let d2b: Vec<f32> = d2a.iter().map(|&x| 4.0 * x).collect();
+        let mut pa = vec![0f32; 50];
+        let mut pb = vec![0f32; 50];
+        let (ba, _) = solve_row(&d2a, 12.0, 1e-7, &mut pa);
+        let (bb, _) = solve_row(&d2b, 12.0, 1e-7, &mut pb);
+        assert!((ba / bb - 4.0).abs() < 1e-2, "ba={ba} bb={bb}");
+        // And the distributions coincide.
+        for (a, b) in pa.iter().zip(&pb) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "perplexity")]
+    fn rejects_k_below_perplexity() {
+        let pool = ThreadPool::new(1);
+        let d2 = vec![1f32; 4 * 5];
+        conditional_probabilities(&pool, &d2, 4, 5, 30.0, 1e-5);
+    }
+}

@@ -1,0 +1,189 @@
+//! Compressed-sparse-row matrix for the sparse similarity distribution P.
+//!
+//! Barnes-Hut-SNE's input similarities have at most ⌊3u⌋ non-zeros per
+//! row before symmetrization (Eq. 6) and at most 2·⌊3u⌋ after (Eq. 7);
+//! CSR keeps the attractive-force loop contiguous and O(uN).
+
+/// CSR matrix with f32 values and u32 column indices.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    pub n_rows: usize,
+    /// Row start offsets, length `n_rows + 1`.
+    pub indptr: Vec<u32>,
+    /// Column indices, row-sorted within each row.
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl Csr {
+    /// Build from per-row (column, value) lists. Columns need not be
+    /// sorted; they are sorted here and duplicate columns are summed.
+    pub fn from_rows(n_rows: usize, rows: Vec<Vec<(u32, f32)>>) -> Self {
+        assert_eq!(rows.len(), n_rows);
+        let mut indptr = Vec::with_capacity(n_rows + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0u32);
+        for mut row in rows {
+            row.sort_unstable_by_key(|&(c, _)| c);
+            let mut i = 0;
+            while i < row.len() {
+                let col = row[i].0;
+                let mut v = 0f32;
+                while i < row.len() && row[i].0 == col {
+                    v += row[i].1;
+                    i += 1;
+                }
+                indices.push(col);
+                values.push(v);
+            }
+            indptr.push(indices.len() as u32);
+        }
+        Csr { n_rows, indptr, indices, values }
+    }
+
+    /// Number of stored entries.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Row accessor: (columns, values).
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        let s = self.indptr[i] as usize;
+        let e = self.indptr[i + 1] as usize;
+        (&self.indices[s..e], &self.values[s..e])
+    }
+
+    /// Sum of all stored values.
+    pub fn sum(&self) -> f64 {
+        self.values.iter().map(|&v| v as f64).sum()
+    }
+
+    /// Multiply all values in place (early exaggeration).
+    pub fn scale(&mut self, factor: f32) {
+        for v in self.values.iter_mut() {
+            *v *= factor;
+        }
+    }
+
+    /// Value at (i, j) if stored (binary search within the row).
+    pub fn get(&self, i: usize, j: u32) -> Option<f32> {
+        let (cols, vals) = self.row(i);
+        cols.binary_search(&j).ok().map(|k| vals[k])
+    }
+
+    /// Symmetrize a conditional-probability matrix into the joint
+    /// distribution of Eq. 7: `p_ij = (p_{j|i} + p_{i|j}) / (2N)`.
+    ///
+    /// The input holds `p_{j|i}` in row i; the output's stored pattern is
+    /// the union of (i,j) and (j,i) patterns. The result sums to 1 when
+    /// every input row sums to 1.
+    pub fn symmetrize(&self) -> Csr {
+        let n = self.n_rows;
+        // Count output row lengths: row i gains one slot per stored (i,j)
+        // plus one per stored (j,i) not already in row i.
+        let mut rows: Vec<Vec<(u32, f32)>> = vec![Vec::new(); n];
+        let scale = 1.0 / (2.0 * n as f32);
+        for i in 0..n {
+            let (cols, vals) = self.row(i);
+            for (&j, &v) in cols.iter().zip(vals) {
+                // Contribution of p_{j|i} to both p_ij and p_ji.
+                rows[i].push((j, v * scale));
+                rows[j as usize].push((i as u32, v * scale));
+            }
+        }
+        Csr::from_rows(n, rows)
+    }
+
+    /// Check structural symmetry of values: p_ij == p_ji for every stored
+    /// entry (within tolerance). Used by tests and debug assertions.
+    pub fn is_symmetric(&self, tol: f32) -> bool {
+        for i in 0..self.n_rows {
+            let (cols, vals) = self.row(i);
+            for (&j, &v) in cols.iter().zip(vals) {
+                match self.get(j as usize, i as u32) {
+                    Some(w) if (w - v).abs() <= tol * v.abs().max(1e-20) => {}
+                    _ => return false,
+                }
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Csr {
+        // Row 0: (1, 0.7), (2, 0.3); Row 1: (0, 1.0); Row 2: (0, 0.4), (1, 0.6)
+        Csr::from_rows(
+            3,
+            vec![
+                vec![(2, 0.3), (1, 0.7)], // unsorted on purpose
+                vec![(0, 1.0)],
+                vec![(0, 0.4), (1, 0.6)],
+            ],
+        )
+    }
+
+    #[test]
+    fn from_rows_sorts_and_indexes() {
+        let m = sample();
+        assert_eq!(m.nnz(), 5);
+        let (c0, v0) = m.row(0);
+        assert_eq!(c0, &[1, 2]);
+        assert_eq!(v0, &[0.7, 0.3]);
+        assert_eq!(m.get(2, 1), Some(0.6));
+        assert_eq!(m.get(1, 2), None);
+    }
+
+    #[test]
+    fn duplicate_columns_sum() {
+        let m = Csr::from_rows(1, vec![vec![(0, 0.5), (0, 0.25), (1, 1.0)]]);
+        assert_eq!(m.get(0, 0), Some(0.75));
+        assert_eq!(m.nnz(), 2);
+    }
+
+    #[test]
+    fn symmetrize_produces_joint_distribution() {
+        let m = sample(); // each row sums to 1
+        let p = m.symmetrize();
+        assert!(p.is_symmetric(1e-6), "{p:?}");
+        assert!((p.sum() - 1.0).abs() < 1e-6, "sum={}", p.sum());
+        // p_01 = (p_{1|0} + p_{0|1}) / (2*3) = (0.7 + 1.0) / 6
+        let want = (0.7 + 1.0) / 6.0;
+        assert!((p.get(0, 1).unwrap() - want).abs() < 1e-6);
+        assert!((p.get(1, 0).unwrap() - want).abs() < 1e-6);
+        // p_12 = (p_{2|1} + p_{1|2}) / 6 = (0 + 0.6) / 6
+        let want12 = 0.6 / 6.0;
+        assert!((p.get(1, 2).unwrap() - want12).abs() < 1e-6);
+    }
+
+    #[test]
+    fn symmetrize_pattern_union() {
+        let m = Csr::from_rows(2, vec![vec![(1, 1.0)], vec![]]);
+        let p = m.symmetrize();
+        // (0,1) stored and (1,0) materialized.
+        assert!(p.get(0, 1).is_some());
+        assert!(p.get(1, 0).is_some());
+        assert_eq!(p.get(0, 1), p.get(1, 0));
+    }
+
+    #[test]
+    fn scale_multiplies_values() {
+        let mut m = sample();
+        let before = m.sum();
+        m.scale(12.0);
+        assert!((m.sum() - 12.0 * before).abs() < 1e-4);
+    }
+
+    #[test]
+    fn empty_rows_ok() {
+        let m = Csr::from_rows(3, vec![vec![], vec![(0, 1.0)], vec![]]);
+        assert_eq!(m.row(0).0.len(), 0);
+        assert_eq!(m.row(2).0.len(), 0);
+        assert_eq!(m.nnz(), 1);
+    }
+}

@@ -1,0 +1,825 @@
+//! Barnes-Hut tree: flat-array quadtree/octree with center-of-mass upkeep
+//! and the repulsive-force traversal of Barnes-Hut-SNE §4.2.
+
+/// How the cell size `r_cell` in the summary condition (Eq. 9) is
+/// measured.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CellSizeMode {
+    /// Length of the cell diagonal — the paper's verbatim definition.
+    #[default]
+    Diagonal,
+    /// Maximum side width — what the author's released C++ uses.
+    MaxWidth,
+}
+
+const NO_CHILD: u32 = u32::MAX;
+
+/// One cell. Children are allocated contiguously, so a single
+/// `first_child` index addresses all 2^DIM of them.
+#[derive(Debug, Clone, Copy)]
+struct Node<const DIM: usize> {
+    center: [f32; DIM],
+    half: [f32; DIM],
+    /// Sum of member positions (divide by `count` for the center-of-mass).
+    com_sum: [f64; DIM],
+    /// Number of points in the cell (duplicates counted).
+    count: u32,
+    /// Index of first of the 2^DIM contiguous children, or NO_CHILD (leaf).
+    first_child: u32,
+    /// Leaf payload: dataset index of the stored point (u32::MAX if none).
+    point: u32,
+    /// Multiplicity of the stored point (coincident duplicates collapse).
+    multiplicity: u32,
+    /// Position of the stored point (valid when `point != u32::MAX`).
+    pos: [f32; DIM],
+}
+
+impl<const DIM: usize> Node<DIM> {
+    fn empty(center: [f32; DIM], half: [f32; DIM]) -> Self {
+        Node {
+            center,
+            half,
+            com_sum: [0.0; DIM],
+            count: 0,
+            first_child: NO_CHILD,
+            point: u32::MAX,
+            multiplicity: 0,
+            pos: [0.0; DIM],
+        }
+    }
+
+    #[inline]
+    fn is_leaf(&self) -> bool {
+        self.first_child == NO_CHILD
+    }
+
+    #[inline]
+    fn contains(&self, p: &[f32; DIM]) -> bool {
+        (0..DIM).all(|d| {
+            p[d] >= self.center[d] - self.half[d] && p[d] <= self.center[d] + self.half[d]
+        })
+    }
+
+    /// Center of mass (count must be > 0).
+    #[inline]
+    fn com(&self) -> [f32; DIM] {
+        let inv = 1.0 / self.count as f64;
+        let mut c = [0f32; DIM];
+        for d in 0..DIM {
+            c[d] = (self.com_sum[d] * inv) as f32;
+        }
+        c
+    }
+
+    /// Squared cell size per the configured mode.
+    #[inline]
+    fn r2(&self, mode: CellSizeMode) -> f32 {
+        match mode {
+            CellSizeMode::Diagonal => {
+                let mut s = 0f32;
+                for d in 0..DIM {
+                    let w = 2.0 * self.half[d];
+                    s += w * w;
+                }
+                s
+            }
+            CellSizeMode::MaxWidth => {
+                let mut m = 0f32;
+                for d in 0..DIM {
+                    m = m.max(2.0 * self.half[d]);
+                }
+                m * m
+            }
+        }
+    }
+}
+
+/// Summary statistics for tests and the quadtree-visualization example.
+#[derive(Debug, Clone, Default)]
+pub struct NodeStats {
+    pub nodes: usize,
+    pub leaves: usize,
+    pub occupied_leaves: usize,
+    pub max_depth: usize,
+    pub total_points: usize,
+}
+
+/// A Barnes-Hut tree over an `n × DIM` row-major embedding.
+///
+/// `DIM = 2` is the paper's quadtree, `DIM = 3` the octree used for 3-D
+/// embeddings. Construction inserts points one at a time (O(N log N));
+/// [`BhTree::repulsion`] runs the depth-first "summary" traversal of §4.2,
+/// returning the un-normalized repulsive force and this point's
+/// contribution to the normalizer `Z`.
+pub struct BhTree<const DIM: usize> {
+    nodes: Vec<Node<DIM>>,
+    mode: CellSizeMode,
+    n: usize,
+    /// Points in DFS-leaf order (for dual-tree range queries); built by
+    /// [`BhTree::build_ranges`].
+    order: Vec<u32>,
+    /// Per-node `[start, end)` into `order` (parallel to `nodes`).
+    ranges: Vec<(u32, u32)>,
+    /// Number of insertions that hit the depth cap with non-coincident
+    /// points (numerically indistinguishable positions).
+    depth_cap_hits: usize,
+    // ---- traversal SoA, finalized once after construction (§Perf) ----
+    // The DFS touches ~24 bytes per visited node instead of the full
+    // ~80-byte build node, and the per-visit COM divide / r² computation
+    // is hoisted into `finalize`.
+    t_com: Vec<[f32; DIM]>,
+    t_r2: Vec<f32>,
+    t_count: Vec<u32>,
+    t_first: Vec<u32>,
+    t_point: Vec<u32>,
+}
+
+/// Beyond this depth cells are smaller than f32 resolution for any sane
+/// embedding; further splitting is numerically meaningless, so
+/// near-coincident points collapse into a multiplicity instead.
+const MAX_DEPTH: usize = 48;
+
+impl<const DIM: usize> BhTree<DIM> {
+    /// Number of children per interior node.
+    pub const FANOUT: usize = 1 << DIM;
+
+    /// Build the tree by inserting the `n` points of `y` one at a time.
+    pub fn build(y: &[f32], n: usize) -> Self {
+        Self::build_with(y, n, CellSizeMode::default())
+    }
+
+    /// Build with an explicit cell-size mode.
+    pub fn build_with(y: &[f32], n: usize, mode: CellSizeMode) -> Self {
+        assert!(y.len() >= n * DIM);
+        assert!(n > 0, "cannot build tree over zero points");
+        let mut lo = [f32::INFINITY; DIM];
+        let mut hi = [f32::NEG_INFINITY; DIM];
+        for i in 0..n {
+            for d in 0..DIM {
+                let v = y[i * DIM + d];
+                lo[d] = lo[d].min(v);
+                hi[d] = hi[d].max(v);
+            }
+        }
+        let mut center = [0f32; DIM];
+        let mut half = [0f32; DIM];
+        for d in 0..DIM {
+            center[d] = 0.5 * (lo[d] + hi[d]);
+            // Inflate so boundary points are strictly inside; floor the
+            // half-width so a degenerate (all-equal) axis still subdivides.
+            half[d] = ((hi[d] - lo[d]) * 0.5).max(1e-5) * (1.0 + 1e-4);
+        }
+        let mut tree = BhTree {
+            nodes: Vec::with_capacity(2 * n),
+            mode,
+            n,
+            order: Vec::new(),
+            ranges: Vec::new(),
+            depth_cap_hits: 0,
+            t_com: Vec::new(),
+            t_r2: Vec::new(),
+            t_count: Vec::new(),
+            t_first: Vec::new(),
+            t_point: Vec::new(),
+        };
+        tree.nodes.push(Node::empty(center, half));
+        for i in 0..n {
+            let mut p = [0f32; DIM];
+            p.copy_from_slice(&y[i * DIM..(i + 1) * DIM]);
+            tree.insert(i as u32, p);
+        }
+        tree.finalize();
+        tree
+    }
+
+    /// Build the traversal SoA: finalized center-of-mass, squared cell
+    /// size, counts, child links. One pass, O(nodes).
+    fn finalize(&mut self) {
+        let m = self.nodes.len();
+        self.t_com = Vec::with_capacity(m);
+        self.t_r2 = Vec::with_capacity(m);
+        self.t_count = Vec::with_capacity(m);
+        self.t_first = Vec::with_capacity(m);
+        self.t_point = Vec::with_capacity(m);
+        for node in &self.nodes {
+            self.t_com.push(if node.count > 0 { node.com() } else { [0.0; DIM] });
+            self.t_r2.push(node.r2(self.mode));
+            self.t_count.push(node.count);
+            self.t_first.push(node.first_child);
+            self.t_point.push(node.point);
+        }
+    }
+
+    /// Insert one point, descending from the root, splitting occupied
+    /// leaves and updating COM/count along the path.
+    fn insert(&mut self, index: u32, p: [f32; DIM]) {
+        debug_assert!(self.nodes[0].contains(&p), "point outside root cell");
+        let mut cur = 0u32;
+        let mut depth = 0usize;
+        loop {
+            {
+                let node = &mut self.nodes[cur as usize];
+                node.count += 1;
+                for d in 0..DIM {
+                    node.com_sum[d] += p[d] as f64;
+                }
+            }
+            let node = self.nodes[cur as usize];
+            if node.is_leaf() {
+                if node.count == 1 {
+                    let m = &mut self.nodes[cur as usize];
+                    m.point = index;
+                    m.multiplicity = 1;
+                    m.pos = p;
+                    return;
+                }
+                // Occupied leaf: coincident (or unsplittably close) points
+                // collapse into the multiplicity, as in the reference code.
+                let same = (0..DIM).all(|d| node.pos[d] == p[d]);
+                if same || depth >= MAX_DEPTH {
+                    if !same {
+                        self.depth_cap_hits += 1;
+                    }
+                    self.nodes[cur as usize].multiplicity += 1;
+                    return;
+                }
+                // Split: push the stored point down one level, then keep
+                // descending with the new point.
+                self.subdivide(cur);
+                let child = self.child_for(cur, &node.pos);
+                {
+                    let c = &mut self.nodes[child as usize];
+                    c.count = node.multiplicity;
+                    for d in 0..DIM {
+                        c.com_sum[d] = node.pos[d] as f64 * node.multiplicity as f64;
+                    }
+                    c.point = node.point;
+                    c.multiplicity = node.multiplicity;
+                    c.pos = node.pos;
+                }
+                let m = &mut self.nodes[cur as usize];
+                m.point = u32::MAX;
+                m.multiplicity = 0;
+            }
+            cur = self.child_for(cur, &p);
+            depth += 1;
+        }
+    }
+
+    /// Allocate 2^DIM children for `cur`.
+    fn subdivide(&mut self, cur: u32) {
+        let parent = self.nodes[cur as usize];
+        let first = self.nodes.len() as u32;
+        for q in 0..Self::FANOUT {
+            let mut c = [0f32; DIM];
+            let mut h = [0f32; DIM];
+            for d in 0..DIM {
+                h[d] = parent.half[d] * 0.5;
+                c[d] = parent.center[d] + if (q >> d) & 1 == 1 { h[d] } else { -h[d] };
+            }
+            self.nodes.push(Node::empty(c, h));
+        }
+        self.nodes[cur as usize].first_child = first;
+    }
+
+    /// Child slot of `cur` containing position `p`.
+    #[inline]
+    fn child_for(&self, cur: u32, p: &[f32; DIM]) -> u32 {
+        let node = &self.nodes[cur as usize];
+        let mut q = 0usize;
+        for d in 0..DIM {
+            if p[d] >= node.center[d] {
+                q |= 1 << d;
+            }
+        }
+        node.first_child + q as u32
+    }
+
+    /// Number of points inserted.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Insertions that collapsed non-identical points at the depth cap.
+    pub fn depth_cap_hits(&self) -> usize {
+        self.depth_cap_hits
+    }
+
+    /// Barnes-Hut repulsive traversal for the point at `yi` with dataset
+    /// index `index` (skipped when met as a singleton leaf).
+    ///
+    /// Accumulates into `force` the quantity
+    /// `Σ_cell N_cell · (1+||yi−y_cell||²)^-2 · (yi−y_cell)`  (= F_rep·Z of
+    /// the paper, for this i) and returns this point's contribution to the
+    /// normalizer `Z = Σ q·Z` terms, i.e. `Σ_cell N_cell (1+d²)^-1`.
+    ///
+    /// The summary condition is the standard Barnes-Hut reading of Eq. 9:
+    /// `r_cell / ||yi − y_cell|| < θ` (compared squared — no sqrt on the
+    /// hot path). θ = 0 therefore never summarizes and reproduces exact
+    /// t-SNE, as the paper notes.
+    pub fn repulsion(&self, index: u32, yi: &[f32; DIM], theta: f32, force: &mut [f64; DIM]) -> f64 {
+        let theta2 = theta * theta;
+        let mut z = 0f64;
+        // Explicit DFS stack of node ids. Bound: at each level at most
+        // FANOUT-1 siblings stay on the stack, so MAX_DEPTH*(FANOUT-1)+1
+        // = 337 for the octree; 512 gives headroom.
+        let mut stack = [0u32; 512];
+        let mut top = 0usize;
+        stack[top] = 0;
+        top += 1;
+        // Traversal over the finalized SoA (see `finalize`): COM and r²
+        // are precomputed, and each visit touches the four hot arrays.
+        let t_com = &self.t_com;
+        let t_r2 = &self.t_r2;
+        let t_count = &self.t_count;
+        let t_first = &self.t_first;
+        // Summary-term math shared by the stack loop and the inlined leaf
+        // fast path. Self-exclusion: coincident points collapse into one
+        // leaf (whose COM equals the stored position), so the query lies
+        // in a leaf iff d² == 0, or the stored index is the query; exclude
+        // exactly one copy — unlike the reference C++, which misses
+        // self-exclusion for collapsed duplicates.
+        macro_rules! summarize {
+            ($id:expr, $count:expr, $is_leaf:expr, $d2:expr, $diff:expr) => {{
+                // q via one f32 divide (the f64 divide dominated the
+                // summary path); accumulation stays f64.
+                let qf = 1.0f32 / (1.0 + $d2);
+                let mut mult = $count as f64;
+                if $is_leaf && ($d2 == 0.0 || self.t_point[$id] == index) {
+                    mult -= 1.0;
+                }
+                if mult > 0.0 {
+                    let q = qf as f64;
+                    z += mult * q;
+                    let qq = mult * q * q;
+                    for d in 0..DIM {
+                        force[d] += qq * $diff[d] as f64;
+                    }
+                }
+            }};
+        }
+        while top > 0 {
+            top -= 1;
+            let id = stack[top] as usize;
+            let count = t_count[id];
+            let com = &t_com[id];
+            let mut d2 = 0f32;
+            let mut diff = [0f32; DIM];
+            for d in 0..DIM {
+                diff[d] = yi[d] - com[d];
+                d2 += diff[d] * diff[d];
+            }
+            let first = t_first[id];
+            if first == NO_CHILD || t_r2[id] < theta2 * d2 {
+                summarize!(id, count, first == NO_CHILD, d2, diff);
+            } else {
+                let first = first as usize;
+                for c in 0..Self::FANOUT {
+                    let child = first + c;
+                    let ccount = t_count[child];
+                    if ccount == 0 {
+                        continue;
+                    }
+                    // Leaf fast path: summarize inline instead of paying
+                    // a push/pop round-trip (leaves are the majority of
+                    // visited nodes at practical θ).
+                    if t_first[child] == NO_CHILD {
+                        let ccom = &t_com[child];
+                        let mut cd2 = 0f32;
+                        let mut cdiff = [0f32; DIM];
+                        for d in 0..DIM {
+                            cdiff[d] = yi[d] - ccom[d];
+                            cd2 += cdiff[d] * cdiff[d];
+                        }
+                        summarize!(child, ccount, true, cd2, cdiff);
+                    } else {
+                        stack[top] = child as u32;
+                        top += 1;
+                        debug_assert!(top < stack.len());
+                    }
+                }
+            }
+        }
+        z
+    }
+
+    /// Compute tree statistics (walks every node).
+    pub fn stats(&self) -> NodeStats {
+        let mut s = NodeStats { total_points: self.n, ..Default::default() };
+        // (node, depth) DFS.
+        let mut stack = vec![(0u32, 0usize)];
+        while let Some((id, depth)) = stack.pop() {
+            let node = &self.nodes[id as usize];
+            s.nodes += 1;
+            s.max_depth = s.max_depth.max(depth);
+            if node.is_leaf() {
+                s.leaves += 1;
+                if node.count > 0 {
+                    s.occupied_leaves += 1;
+                }
+            } else {
+                for c in 0..Self::FANOUT {
+                    stack.push((node.first_child + c as u32, depth + 1));
+                }
+            }
+        }
+        s
+    }
+
+    /// Build the DFS point ordering and per-node `[start, end)` ranges
+    /// used by the dual-tree traversal. Idempotent.
+    pub fn build_ranges(&mut self) {
+        if !self.order.is_empty() {
+            return;
+        }
+        self.ranges = vec![(0, 0); self.nodes.len()];
+        self.order = Vec::with_capacity(self.n);
+        self.range_rec(0);
+    }
+
+    fn range_rec(&mut self, id: u32) {
+        let start = self.order.len() as u32;
+        let node = self.nodes[id as usize];
+        if node.is_leaf() {
+            if node.point != u32::MAX {
+                // A collapsed leaf stores one index with multiplicity m;
+                // dual-tree applies per-point forces, so repeat it.
+                for _ in 0..node.multiplicity {
+                    self.order.push(node.point);
+                }
+            }
+        } else {
+            for c in 0..Self::FANOUT {
+                self.range_rec(node.first_child + c as u32);
+            }
+        }
+        self.ranges[id as usize] = (start, self.order.len() as u32);
+    }
+
+    /// Dual-tree repulsion (paper appendix, Eq. 10): simultaneous DFS over
+    /// node pairs; a pair whose cells satisfy
+    /// `max(r1, r2) / ||com1 − com2|| < ρ` contributes one summary
+    /// interaction applied to every point of both cells.
+    ///
+    /// `forces` is `n × DIM` (f64), `rho` the trade-off parameter. Returns
+    /// the estimate of Z (sum over ordered pairs, matching what the
+    /// point-cell traversal accumulates over all i).
+    pub fn repulsion_dual(&mut self, rho: f32, forces: &mut [f64]) -> f64 {
+        self.build_ranges();
+        assert_eq!(forces.len(), self.n * DIM);
+        let mut z = 0f64;
+        let mut stack: Vec<(u32, u32)> = Vec::with_capacity(1024);
+        stack.push((0, 0));
+        let rho2 = rho * rho;
+        while let Some((a, b)) = stack.pop() {
+            let na = &self.nodes[a as usize];
+            let nb = &self.nodes[b as usize];
+            if na.count == 0 || nb.count == 0 {
+                continue;
+            }
+            if a == b {
+                // Identical cells cannot be summarized (d = 0): split.
+                if na.is_leaf() {
+                    // All pairs inside one leaf are coincident duplicates →
+                    // zero force, but they do contribute to Z: m(m-1) pairs
+                    // at distance 0, q·Z = 1 each.
+                    let m = na.count as f64;
+                    z += m * (m - 1.0);
+                    continue;
+                }
+                let first = na.first_child;
+                for i in 0..Self::FANOUT {
+                    for j in 0..Self::FANOUT {
+                        stack.push((first + i as u32, first + j as u32));
+                    }
+                }
+                continue;
+            }
+            let ca = na.com();
+            let cb = nb.com();
+            let mut d2 = 0f32;
+            let mut diff = [0f32; DIM];
+            for d in 0..DIM {
+                diff[d] = ca[d] - cb[d];
+                d2 += diff[d] * diff[d];
+            }
+            let r2max = na.r2(self.mode).max(nb.r2(self.mode));
+            let both_leaves = na.is_leaf() && nb.is_leaf();
+            if both_leaves || r2max < rho2 * d2 {
+                // Summary interaction: every point in A repelled along
+                // (com_a − com_b), count-weighted; asymmetric pairs are
+                // visited twice (A,B) and (B,A) by construction from the
+                // root pair, so apply only the A-side here.
+                let q = 1.0 / (1.0 + d2 as f64);
+                let w = nb.count as f64;
+                z += na.count as f64 * w * q;
+                let qq = w * q * q;
+                let (s, e) = self.ranges[a as usize];
+                for &pi in &self.order[s as usize..e as usize] {
+                    let row = pi as usize * DIM;
+                    for d in 0..DIM {
+                        forces[row + d] += qq * diff[d] as f64;
+                    }
+                }
+            } else {
+                // Split the larger cell (by size measure); leaves split the
+                // other side.
+                let split_a = !na.is_leaf() && (nb.is_leaf() || na.r2(self.mode) >= nb.r2(self.mode));
+                if split_a {
+                    let first = na.first_child;
+                    for c in 0..Self::FANOUT {
+                        stack.push((first + c as u32, b));
+                    }
+                } else {
+                    let first = nb.first_child;
+                    for c in 0..Self::FANOUT {
+                        stack.push((a, first + c as u32));
+                    }
+                }
+            }
+        }
+        z
+    }
+
+    /// Borrow the (center, half-widths, count, depth) of every node —
+    /// used by the quadtree-visualization example (Figure 1).
+    pub fn visit_cells(&self, mut f: impl FnMut(&[f32; DIM], &[f32; DIM], u32, usize)) {
+        let mut stack = vec![(0u32, 0usize)];
+        while let Some((id, depth)) = stack.pop() {
+            let node = &self.nodes[id as usize];
+            if node.count == 0 {
+                continue;
+            }
+            f(&node.center, &node.half, node.count, depth);
+            if !node.is_leaf() {
+                for c in 0..Self::FANOUT {
+                    stack.push((node.first_child + c as u32, depth + 1));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn random_embedding(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::seeded(seed);
+        (0..n * 2).map(|_| rng.normal() as f32 * 3.0).collect()
+    }
+
+    /// Exact repulsion oracle: F_rep·Z components and Z contribution for i.
+    fn exact_repulsion(y: &[f32], n: usize, i: usize) -> ([f64; 2], f64) {
+        let yi = [y[i * 2], y[i * 2 + 1]];
+        let mut f = [0f64; 2];
+        let mut z = 0f64;
+        for j in 0..n {
+            if j == i {
+                continue;
+            }
+            let dx = (yi[0] - y[j * 2]) as f64;
+            let dy = (yi[1] - y[j * 2 + 1]) as f64;
+            let q = 1.0 / (1.0 + dx * dx + dy * dy);
+            z += q;
+            f[0] += q * q * dx;
+            f[1] += q * q * dy;
+        }
+        (f, z)
+    }
+
+    #[test]
+    fn com_and_count_invariants() {
+        let n = 500;
+        let y = random_embedding(n, 1);
+        let tree = BhTree::<2>::build(&y, n);
+        // Root invariants.
+        let root = &tree.nodes[0];
+        assert_eq!(root.count as usize, n);
+        let mut sx = 0f64;
+        let mut sy = 0f64;
+        for i in 0..n {
+            sx += y[i * 2] as f64;
+            sy += y[i * 2 + 1] as f64;
+        }
+        assert!((root.com_sum[0] - sx).abs() < 1e-6 * n as f64);
+        assert!((root.com_sum[1] - sy).abs() < 1e-6 * n as f64);
+        // Every interior node's count equals the sum of its children's.
+        for (id, node) in tree.nodes.iter().enumerate() {
+            if !node.is_leaf() {
+                let sum: u32 = (0..4).map(|c| tree.nodes[node.first_child as usize + c].count).sum();
+                assert_eq!(node.count, sum, "node {id}");
+            }
+        }
+    }
+
+    #[test]
+    fn theta_zero_is_exact() {
+        let n = 200;
+        let y = random_embedding(n, 2);
+        let tree = BhTree::<2>::build(&y, n);
+        for i in (0..n).step_by(17) {
+            let yi = [y[i * 2], y[i * 2 + 1]];
+            let mut f = [0f64; 2];
+            let z = tree.repulsion(i as u32, &yi, 0.0, &mut f);
+            let (ef, ez) = exact_repulsion(&y, n, i);
+            assert!((z - ez).abs() < 1e-6 * ez.max(1.0), "i={i} z={z} ez={ez}");
+            for d in 0..2 {
+                assert!((f[d] - ef[d]).abs() < 1e-6 * ef[d].abs().max(1.0), "i={i} d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn small_theta_close_to_exact() {
+        let n = 400;
+        let y = random_embedding(n, 3);
+        let tree = BhTree::<2>::build(&y, n);
+        let mut max_rel = 0f64;
+        for i in 0..n {
+            let yi = [y[i * 2], y[i * 2 + 1]];
+            let mut f = [0f64; 2];
+            let z = tree.repulsion(i as u32, &yi, 0.3, &mut f);
+            let (ef, ez) = exact_repulsion(&y, n, i);
+            max_rel = max_rel.max((z - ez).abs() / ez);
+            let fn_ = (ef[0] * ef[0] + ef[1] * ef[1]).sqrt().max(1e-9);
+            let err = ((f[0] - ef[0]).powi(2) + (f[1] - ef[1]).powi(2)).sqrt();
+            assert!(err / fn_ < 0.15, "i={i} rel force err {}", err / fn_);
+        }
+        assert!(max_rel < 0.05, "Z rel err {max_rel}");
+    }
+
+    #[test]
+    fn bigger_theta_is_coarser() {
+        // Average |Z - Z_exact| should grow with theta.
+        let n = 300;
+        let y = random_embedding(n, 4);
+        let tree = BhTree::<2>::build(&y, n);
+        let mut errs = Vec::new();
+        for theta in [0.2f32, 0.8] {
+            let mut tot = 0f64;
+            for i in 0..n {
+                let yi = [y[i * 2], y[i * 2 + 1]];
+                let mut f = [0f64; 2];
+                let z = tree.repulsion(i as u32, &yi, theta, &mut f);
+                let (_, ez) = exact_repulsion(&y, n, i);
+                tot += (z - ez).abs();
+            }
+            errs.push(tot);
+        }
+        assert!(errs[1] > errs[0], "errors {errs:?} should grow with theta");
+    }
+
+    #[test]
+    fn duplicate_points_collapse() {
+        let mut y = Vec::new();
+        for _ in 0..50 {
+            y.extend_from_slice(&[1.0f32, 1.0]);
+        }
+        y.extend_from_slice(&[4.0, 4.0]);
+        let n = 51;
+        let tree = BhTree::<2>::build(&y, n);
+        let stats = tree.stats();
+        // 50 coincident points occupy a single leaf.
+        assert!(stats.nodes < 60, "{stats:?}");
+        // Force on the distinct point: repelled by the clump of 50.
+        let mut f = [0f64; 2];
+        let z = tree.repulsion(50, &[4.0, 4.0], 0.0, &mut f);
+        // q computed with an f32 divide on the summary path (§Perf).
+        let d2 = 9.0 + 9.0;
+        let q = 1.0 / (1.0 + d2);
+        assert!((z - 50.0 * q).abs() < 1e-5, "z={z}");
+        assert!((f[0] - 50.0 * q * q * 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn self_excluded_in_duplicate_leaf() {
+        // Two coincident points: each sees exactly one other at d=0.
+        let y = vec![2.0f32, 2.0, 2.0, 2.0, 9.0, 9.0];
+        let tree = BhTree::<2>::build(&y, 3);
+        let mut f = [0f64; 2];
+        let z = tree.repulsion(1, &[2.0, 2.0], 0.0, &mut f);
+        // One coincident partner (q=1) plus the far point. (The reference
+        // C++ would report 2 + far here — it misses self-exclusion for
+        // collapsed duplicates; we exclude exactly one self copy.)
+        let d2 = 49.0 + 49.0;
+        let far = 1.0 / (1.0 + d2);
+        assert!((z - (1.0 + far)).abs() < 1e-9, "z={z}");
+    }
+
+    #[test]
+    fn octree_theta_zero_exact() {
+        let n = 100;
+        let mut rng = Pcg32::seeded(5);
+        let y: Vec<f32> = (0..n * 3).map(|_| rng.normal() as f32).collect();
+        let tree = BhTree::<3>::build(&y, n);
+        for i in (0..n).step_by(9) {
+            let yi = [y[i * 3], y[i * 3 + 1], y[i * 3 + 2]];
+            let mut f = [0f64; 3];
+            let z = tree.repulsion(i as u32, &yi, 0.0, &mut f);
+            // Oracle.
+            let mut ez = 0f64;
+            let mut ef = [0f64; 3];
+            for j in 0..n {
+                if j == i {
+                    continue;
+                }
+                let mut d2 = 0f64;
+                let mut diff = [0f64; 3];
+                for d in 0..3 {
+                    diff[d] = (yi[d] - y[j * 3 + d]) as f64;
+                    d2 += diff[d] * diff[d];
+                }
+                let q = 1.0 / (1.0 + d2);
+                ez += q;
+                for d in 0..3 {
+                    ef[d] += q * q * diff[d];
+                }
+            }
+            assert!((z - ez).abs() < 1e-6 * ez.max(1.0));
+            for d in 0..3 {
+                assert!((f[d] - ef[d]).abs() < 1e-6 * ef[d].abs().max(1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn ranges_cover_all_points() {
+        let n = 333;
+        let y = random_embedding(n, 6);
+        let mut tree = BhTree::<2>::build(&y, n);
+        tree.build_ranges();
+        assert_eq!(tree.order.len(), n);
+        let (s, e) = tree.ranges[0];
+        assert_eq!((s, e), (0, n as u32));
+        let mut seen = vec![false; n];
+        for &p in &tree.order {
+            assert!(!seen[p as usize], "point {p} appears twice");
+            seen[p as usize] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn dual_tree_close_to_exact_small_rho() {
+        let n = 250;
+        let y = random_embedding(n, 7);
+        let mut tree = BhTree::<2>::build(&y, n);
+        let mut forces = vec![0f64; n * 2];
+        let z = tree.repulsion_dual(0.2, &mut forces);
+        // Oracle totals.
+        let mut ez = 0f64;
+        for i in 0..n {
+            let (_, zi) = exact_repulsion(&y, n, i);
+            ez += zi;
+        }
+        assert!((z - ez).abs() / ez < 0.05, "z={z} ez={ez}");
+        // Per-point force should be directionally consistent with exact.
+        let mut cos_sum = 0f64;
+        for i in 0..n {
+            let (ef, _) = exact_repulsion(&y, n, i);
+            let f = [forces[i * 2], forces[i * 2 + 1]];
+            let dot = f[0] * ef[0] + f[1] * ef[1];
+            let na = (f[0] * f[0] + f[1] * f[1]).sqrt();
+            let nb = (ef[0] * ef[0] + ef[1] * ef[1]).sqrt();
+            if na > 1e-12 && nb > 1e-12 {
+                cos_sum += dot / (na * nb);
+            }
+        }
+        assert!(cos_sum / n as f64 > 0.95, "mean cosine {}", cos_sum / n as f64);
+    }
+
+    #[test]
+    fn stats_sane() {
+        let n = 500;
+        let y = random_embedding(n, 8);
+        let tree = BhTree::<2>::build(&y, n);
+        let s = tree.stats();
+        assert!(s.nodes >= s.leaves);
+        assert!(s.occupied_leaves <= n);
+        assert!(s.max_depth >= 2 && s.max_depth <= MAX_DEPTH);
+        assert_eq!(s.total_points, n);
+        // O(N) nodes claim from the paper.
+        assert!(s.nodes < 8 * n, "nodes {} not O(N)", s.nodes);
+    }
+
+    #[test]
+    fn visit_cells_counts_root() {
+        let n = 64;
+        let y = random_embedding(n, 9);
+        let tree = BhTree::<2>::build(&y, n);
+        let mut root_seen = false;
+        tree.visit_cells(|_, _, count, depth| {
+            if depth == 0 {
+                root_seen = true;
+                assert_eq!(count as usize, n);
+            }
+        });
+        assert!(root_seen);
+    }
+}

@@ -1,0 +1,22 @@
+//! Space-partitioning trees on the low-dimensional embedding.
+//!
+//! [`BhTree`] is the paper's §4.2 quadtree (2-D) / octree (3-D),
+//! implemented once over a const dimension parameter: each node is a
+//! rectangular cell storing the center-of-mass and point count of the
+//! points inside it; leaves hold at most one *distinct* position
+//! (coincident points collapse into a multiplicity count, as in the
+//! reference implementation).
+//!
+//! The tree also records a DFS point ordering with per-node `[start, end)`
+//! ranges so the dual-tree algorithm (paper appendix) can map *cell-cell*
+//! interactions back onto the points they summarize without per-node child
+//! lists.
+
+mod bhtree;
+
+pub use bhtree::{BhTree, CellSizeMode, NodeStats};
+
+/// 2-D quadtree specialization used by every 2-D embedding experiment.
+pub type QuadTree = BhTree<2>;
+/// 3-D octree for 3-D embeddings.
+pub type OcTree = BhTree<3>;

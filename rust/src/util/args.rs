@@ -1,0 +1,264 @@
+//! A small declarative command-line parser (clap is not in the offline
+//! vendor set).
+//!
+//! Supports subcommands, `--flag`, `--key value`, `--key=value`, typed
+//! accessors with defaults, required options, and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Specification of one option.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub required: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Specification of a (sub)command.
+#[derive(Debug, Clone, Default)]
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+    pub positional: Vec<(&'static str, &'static str)>, // (name, help)
+}
+
+impl CommandSpec {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        CommandSpec { name, about, opts: Vec::new(), positional: Vec::new() }
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, takes_value: false, required: false, default: None });
+        self
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, takes_value: true, required: false, default: Some(default) });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, takes_value: true, required: true, default: None });
+        self
+    }
+
+    pub fn pos(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positional.push((name, help));
+        self
+    }
+
+    fn find(&self, name: &str) -> Option<&OptSpec> {
+        self.opts.iter().find(|o| o.name == name)
+    }
+
+    /// Render usage/help text.
+    pub fn help_text(&self, prog: &str) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} {} — {}", prog, self.name, self.about);
+        let _ = writeln!(s, "\nUSAGE:\n  {} {} [OPTIONS]{}", prog, self.name,
+            self.positional.iter().map(|(n, _)| format!(" <{n}>")).collect::<String>());
+        if !self.positional.is_empty() {
+            let _ = writeln!(s, "\nARGS:");
+            for (n, h) in &self.positional {
+                let _ = writeln!(s, "  <{n}>  {h}");
+            }
+        }
+        if !self.opts.is_empty() {
+            let _ = writeln!(s, "\nOPTIONS:");
+            for o in &self.opts {
+                let mut left = format!("--{}", o.name);
+                if o.takes_value {
+                    left.push_str(" <v>");
+                }
+                let extra = match (o.required, o.default) {
+                    (true, _) => " (required)".to_string(),
+                    (_, Some(d)) => format!(" [default: {d}]"),
+                    _ => String::new(),
+                };
+                let _ = writeln!(s, "  {left:<24} {}{extra}", o.help);
+            }
+        }
+        s
+    }
+}
+
+/// Parsed arguments for one command.
+#[derive(Debug, Clone, Default)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Parsed {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn str(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get<T: std::str::FromStr>(&self, name: &str) -> Result<T, String> {
+        let raw = self
+            .values
+            .get(name)
+            .ok_or_else(|| format!("missing option --{name}"))?;
+        raw.parse().map_err(|_| format!("--{name}: cannot parse {raw:?}"))
+    }
+
+    /// Comma-separated list accessor, e.g. `--sizes 1000,2000,5000`.
+    pub fn list<T: std::str::FromStr>(&self, name: &str) -> Result<Vec<T>, String> {
+        let raw = self
+            .values
+            .get(name)
+            .ok_or_else(|| format!("missing option --{name}"))?;
+        raw.split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().parse().map_err(|_| format!("--{name}: cannot parse element {s:?}")))
+            .collect()
+    }
+}
+
+/// Parse error (also carries help requests).
+#[derive(Debug, thiserror::Error)]
+pub enum ArgError {
+    #[error("{0}")]
+    Invalid(String),
+    #[error("{0}")]
+    Help(String),
+}
+
+/// Parse `args` (without the program name) against `spec`.
+pub fn parse(spec: &CommandSpec, prog: &str, args: &[String]) -> Result<Parsed, ArgError> {
+    let mut parsed = Parsed::default();
+    // Seed defaults first.
+    for o in &spec.opts {
+        if let Some(d) = o.default {
+            parsed.values.insert(o.name.to_string(), d.to_string());
+        }
+    }
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if a == "--help" || a == "-h" {
+            return Err(ArgError::Help(spec.help_text(prog)));
+        }
+        if let Some(body) = a.strip_prefix("--") {
+            let (name, inline_val) = match body.split_once('=') {
+                Some((n, v)) => (n, Some(v.to_string())),
+                None => (body, None),
+            };
+            let o = spec
+                .find(name)
+                .ok_or_else(|| ArgError::Invalid(format!("unknown option --{name}")))?;
+            if o.takes_value {
+                let val = match inline_val {
+                    Some(v) => v,
+                    None => {
+                        i += 1;
+                        args.get(i)
+                            .cloned()
+                            .ok_or_else(|| ArgError::Invalid(format!("--{name} needs a value")))?
+                    }
+                };
+                parsed.values.insert(name.to_string(), val);
+            } else {
+                if inline_val.is_some() {
+                    return Err(ArgError::Invalid(format!("--{name} takes no value")));
+                }
+                parsed.flags.push(name.to_string());
+            }
+        } else {
+            parsed.positional.push(a.clone());
+        }
+        i += 1;
+    }
+    for o in &spec.opts {
+        if o.required && !parsed.values.contains_key(o.name) {
+            return Err(ArgError::Invalid(format!("missing required option --{}", o.name)));
+        }
+    }
+    if parsed.positional.len() > spec.positional.len() {
+        return Err(ArgError::Invalid(format!(
+            "unexpected positional argument {:?}",
+            parsed.positional[spec.positional.len()]
+        )));
+    }
+    Ok(parsed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> CommandSpec {
+        CommandSpec::new("embed", "run an embedding")
+            .opt("theta", "0.5", "BH trade-off")
+            .req("dataset", "dataset name")
+            .flag("verbose", "more logs")
+            .pos("out", "output path")
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_defaults_and_required() {
+        let p = parse(&spec(), "bhsne", &sv(&["--dataset", "mnist"])).unwrap();
+        assert_eq!(p.get::<f64>("theta").unwrap(), 0.5);
+        assert_eq!(p.str("dataset"), Some("mnist"));
+        assert!(!p.flag("verbose"));
+    }
+
+    #[test]
+    fn parses_equals_form_and_flags() {
+        let p = parse(&spec(), "bhsne", &sv(&["--theta=0.8", "--dataset=x", "--verbose", "out.tsv"])).unwrap();
+        assert_eq!(p.get::<f64>("theta").unwrap(), 0.8);
+        assert!(p.flag("verbose"));
+        assert_eq!(p.positional, vec!["out.tsv"]);
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        let e = parse(&spec(), "bhsne", &sv(&[])).unwrap_err();
+        assert!(matches!(e, ArgError::Invalid(_)));
+        assert!(e.to_string().contains("dataset"));
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        let e = parse(&spec(), "bhsne", &sv(&["--bogus", "--dataset", "x"])).unwrap_err();
+        assert!(e.to_string().contains("bogus"));
+    }
+
+    #[test]
+    fn help_is_returned() {
+        let e = parse(&spec(), "bhsne", &sv(&["--help"])).unwrap_err();
+        match e {
+            ArgError::Help(h) => {
+                assert!(h.contains("--theta"));
+                assert!(h.contains("required"));
+            }
+            _ => panic!("expected help"),
+        }
+    }
+
+    #[test]
+    fn list_accessor() {
+        let s = CommandSpec::new("t", "t").opt("sizes", "1,2", "sizes");
+        let p = parse(&s, "p", &sv(&["--sizes", "10, 20,30"])).unwrap();
+        assert_eq!(p.list::<usize>("sizes").unwrap(), vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn extra_positional_rejected() {
+        let e = parse(&spec(), "bhsne", &sv(&["--dataset", "m", "a", "b"])).unwrap_err();
+        assert!(e.to_string().contains("unexpected positional"));
+    }
+}

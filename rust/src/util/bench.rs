@@ -1,0 +1,213 @@
+//! Bench-harness support (criterion is not in the offline vendor set).
+//!
+//! Every `benches/fig*.rs` binary is a `harness = false` cargo bench
+//! target built on this module: argument parsing (`--quick`, `--json`),
+//! repeated timing with warmup, and aligned table/series output matching
+//! the rows/series the paper's figures report.
+
+use super::stats::{percentile, Stopwatch};
+use std::fmt::Write as _;
+
+/// Bench-wide options parsed from `cargo bench -- [flags]`.
+#[derive(Debug, Clone)]
+pub struct BenchOpts {
+    /// Reduced sizes for CI smoke runs.
+    pub quick: bool,
+    /// Also emit a JSON blob per table (machine-readable capture).
+    pub json: bool,
+    /// Substring filter applied to bench names (cargo passes the filter
+    /// positionally).
+    pub filter: Option<String>,
+}
+
+impl BenchOpts {
+    pub fn from_env() -> Self {
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        let quick = args.iter().any(|a| a == "--quick");
+        let json = args.iter().any(|a| a == "--json");
+        let filter = args
+            .iter()
+            .find(|a| !a.starts_with("--") && a.as_str() != "--bench")
+            .cloned();
+        BenchOpts { quick, json, filter }
+    }
+
+    /// Should a bench with this name run under the current filter?
+    pub fn selected(&self, name: &str) -> bool {
+        match &self.filter {
+            Some(f) => name.contains(f.as_str()),
+            None => true,
+        }
+    }
+
+    /// Pick between full and quick values.
+    pub fn pick<T: Clone>(&self, full: T, quick: T) -> T {
+        if self.quick {
+            quick
+        } else {
+            full
+        }
+    }
+}
+
+/// Time one invocation of `f` (seconds).
+pub fn time_once<R>(f: impl FnOnce() -> R) -> (f64, R) {
+    let sw = Stopwatch::start();
+    let r = f();
+    (sw.elapsed_secs(), r)
+}
+
+/// Time `f` `reps` times after `warmup` runs; returns (median, p10, p90).
+pub fn time_reps(warmup: usize, reps: usize, mut f: impl FnMut()) -> (f64, f64, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<f64> = (0..reps.max(1))
+        .map(|_| {
+            let sw = Stopwatch::start();
+            f();
+            sw.elapsed_secs()
+        })
+        .collect();
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (
+        percentile(&samples, 50.0),
+        percentile(&samples, 10.0),
+        percentile(&samples, 90.0),
+    )
+}
+
+/// A result table rendered like the paper's figure series.
+pub struct Table {
+    title: String,
+    columns: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.columns.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Convenience: format mixed numeric cells.
+    pub fn row_f(&mut self, cells: &[f64]) {
+        self.row(&cells.iter().map(|v| format_num(*v)).collect::<Vec<_>>());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "\n== {} ==", self.title);
+        let header: Vec<String> = self
+            .columns
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{c:>w$}", w = widths[i]))
+            .collect();
+        let _ = writeln!(out, "{}", header.join("  "));
+        let _ = writeln!(out, "{}", "-".repeat(header.join("  ").len()));
+        for row in &self.rows {
+            let cells: Vec<String> = row
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{c:>w$}", w = widths[i]))
+                .collect();
+            let _ = writeln!(out, "{}", cells.join("  "));
+        }
+        out
+    }
+
+    /// Emit as JSON (one object per row).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\"table\":\"");
+        out.push_str(&self.title.replace('"', "'"));
+        out.push_str("\",\"rows\":[");
+        for (ri, row) in self.rows.iter().enumerate() {
+            if ri > 0 {
+                out.push(',');
+            }
+            out.push('{');
+            for (i, (c, v)) in self.columns.iter().zip(row).enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                let _ = write!(out, "\"{}\":", c.replace('"', "'"));
+                if v.parse::<f64>().is_ok() {
+                    out.push_str(v);
+                } else {
+                    let _ = write!(out, "\"{v}\"");
+                }
+            }
+            out.push('}');
+        }
+        out.push_str("]}");
+        out
+    }
+
+    /// Print to stdout (and JSON when requested).
+    pub fn emit(&self, opts: &BenchOpts) {
+        print!("{}", self.render());
+        if opts.json {
+            println!("JSON: {}", self.to_json());
+        }
+    }
+}
+
+fn format_num(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e9 {
+        format!("{}", v as i64)
+    } else if v.abs() >= 100.0 {
+        format!("{v:.1}")
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_reps_ordering() {
+        let (med, p10, p90) = time_reps(1, 9, || {
+            std::thread::sleep(std::time::Duration::from_micros(100));
+        });
+        assert!(p10 <= med && med <= p90);
+        assert!(med >= 50e-6);
+    }
+
+    #[test]
+    fn table_renders_and_jsons() {
+        let mut t = Table::new("demo", &["n", "secs"]);
+        t.row_f(&[1000.0, 1.5]);
+        t.row_f(&[2000.0, 3.25]);
+        let s = t.render();
+        assert!(s.contains("demo") && s.contains("1000") && s.contains("3.2500"));
+        let j = t.to_json();
+        assert!(j.contains("\"n\":1000"));
+    }
+
+    #[test]
+    fn opts_pick() {
+        let o = BenchOpts { quick: true, json: false, filter: None };
+        assert_eq!(o.pick(10, 2), 2);
+        assert!(o.selected("anything"));
+        let o2 = BenchOpts { quick: false, json: false, filter: Some("fig2".into()) };
+        assert!(o2.selected("fig2_theta"));
+        assert!(!o2.selected("fig3"));
+    }
+}

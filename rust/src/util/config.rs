@@ -1,0 +1,353 @@
+//! TOML-subset configuration parser and typed access.
+//!
+//! The vendor set has no serde/toml, so we parse the subset of TOML that
+//! run configs actually need: `[section]` headers, `key = value` with
+//! string / integer / float / bool / homogeneous-array values, `#`
+//! comments, and dotted lookup (`section.key`). Unknown syntax is a hard
+//! error — configs should fail loudly.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+/// A parsed configuration value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Str(s) => write!(f, "{s:?}"),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::Array(xs) => {
+                write!(f, "[")?;
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+/// Configuration: a flat map keyed by `section.key` (top-level keys have no
+/// section prefix).
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    values: BTreeMap<String, Value>,
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("config error at line {line}: {msg}")]
+pub struct ConfigError {
+    pub line: usize,
+    pub msg: String,
+}
+
+fn err<T>(line: usize, msg: impl Into<String>) -> Result<T, ConfigError> {
+    Err(ConfigError { line, msg: msg.into() })
+}
+
+impl Config {
+    /// Parse from TOML-subset text.
+    pub fn parse(text: &str) -> Result<Self, ConfigError> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = lineno + 1;
+            let s = strip_comment(raw).trim();
+            if s.is_empty() {
+                continue;
+            }
+            if let Some(rest) = s.strip_prefix('[') {
+                let Some(name) = rest.strip_suffix(']') else {
+                    return err(line, "unterminated section header");
+                };
+                let name = name.trim();
+                if name.is_empty() {
+                    return err(line, "empty section name");
+                }
+                section = name.to_string();
+                continue;
+            }
+            let Some((k, v)) = s.split_once('=') else {
+                return err(line, format!("expected key = value, got {s:?}"));
+            };
+            let key = k.trim();
+            if key.is_empty() {
+                return err(line, "empty key");
+            }
+            let value = parse_value(v.trim(), line)?;
+            let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            if cfg.values.insert(full.clone(), value).is_some() {
+                return err(line, format!("duplicate key {full:?}"));
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        Ok(Self::parse(&text)?)
+    }
+
+    /// Insert/override a value programmatically (CLI overrides).
+    pub fn set(&mut self, key: &str, value: Value) {
+        self.values.insert(key.to_string(), value);
+    }
+
+    /// Override from a `key=value` string, guessing the type.
+    pub fn set_kv(&mut self, kv: &str) -> Result<(), ConfigError> {
+        let Some((k, v)) = kv.split_once('=') else {
+            return err(0, format!("override must be key=value, got {kv:?}"));
+        };
+        let value = parse_value(v.trim(), 0)?;
+        self.set(k.trim(), value);
+        Ok(())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+
+    pub fn str(&self, key: &str) -> Option<&str> {
+        match self.values.get(key) {
+            Some(Value::Str(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str(key).unwrap_or(default).to_string()
+    }
+
+    pub fn int(&self, key: &str) -> Option<i64> {
+        match self.values.get(key) {
+            Some(Value::Int(i)) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn int_or(&self, key: &str, default: i64) -> i64 {
+        self.int(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.int(key).map(|i| i.max(0) as usize).unwrap_or(default)
+    }
+
+    /// Float accessor; integers coerce to float.
+    pub fn float(&self, key: &str) -> Option<f64> {
+        match self.values.get(key) {
+            Some(Value::Float(x)) => Some(*x),
+            Some(Value::Int(i)) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn float_or(&self, key: &str, default: f64) -> f64 {
+        self.float(key).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        match self.values.get(key) {
+            Some(Value::Bool(b)) => *b,
+            _ => default,
+        }
+    }
+
+    /// Array of floats (ints coerce).
+    pub fn float_array(&self, key: &str) -> Option<Vec<f64>> {
+        match self.values.get(key) {
+            Some(Value::Array(xs)) => xs
+                .iter()
+                .map(|v| match v {
+                    Value::Float(x) => Some(*x),
+                    Value::Int(i) => Some(*i as f64),
+                    _ => None,
+                })
+                .collect(),
+            _ => None,
+        }
+    }
+
+    /// Array of ints.
+    pub fn int_array(&self, key: &str) -> Option<Vec<i64>> {
+        match self.values.get(key) {
+            Some(Value::Array(xs)) => xs
+                .iter()
+                .map(|v| match v {
+                    Value::Int(i) => Some(*i),
+                    _ => None,
+                })
+                .collect(),
+            _ => None,
+        }
+    }
+
+    /// Serialize back to TOML-subset text (stable order; sections grouped).
+    pub fn to_text(&self) -> String {
+        let mut top = String::new();
+        let mut sections: BTreeMap<&str, String> = BTreeMap::new();
+        for (k, v) in &self.values {
+            match k.rsplit_once('.') {
+                Some((sec, key)) => {
+                    let buf = sections.entry(sec).or_default();
+                    buf.push_str(&format!("{key} = {v}\n"));
+                }
+                None => top.push_str(&format!("{k} = {v}\n")),
+            }
+        }
+        let mut out = top;
+        for (sec, body) in sections {
+            out.push_str(&format!("\n[{sec}]\n{body}"));
+        }
+        out
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, line: usize) -> Result<Value, ConfigError> {
+    if s.is_empty() {
+        return err(line, "empty value");
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let Some(inner) = body.strip_suffix('"') else {
+            return err(line, "unterminated string");
+        };
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let Some(inner) = body.strip_suffix(']') else {
+            return err(line, "unterminated array");
+        };
+        let mut items = Vec::new();
+        for part in inner.split(',') {
+            let p = part.trim();
+            if p.is_empty() {
+                continue;
+            }
+            items.push(parse_value(p, line)?);
+        }
+        return Ok(Value::Array(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(x) = s.parse::<f64>() {
+        return Ok(Value::Float(x));
+    }
+    err(line, format!("cannot parse value {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# run configuration
+name = "mnist-run"   # inline comment
+seed = 42
+
+[tsne]
+theta = 0.5
+perplexity = 30
+exaggeration = 12.0
+use_bh = true
+sizes = [1000, 2000, 5000]
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str("name"), Some("mnist-run"));
+        assert_eq!(c.int("seed"), Some(42));
+        assert_eq!(c.float("tsne.theta"), Some(0.5));
+        assert_eq!(c.float("tsne.perplexity"), Some(30.0)); // int coerces
+        assert_eq!(c.float("tsne.exaggeration"), Some(12.0));
+        assert!(c.bool_or("tsne.use_bh", false));
+        assert_eq!(c.int_array("tsne.sizes").unwrap(), vec![1000, 2000, 5000]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.float_or("tsne.theta", 0.5), 0.5);
+        assert_eq!(c.usize_or("tsne.iters", 1000), 1000);
+        assert_eq!(c.str_or("dataset", "mnist-like"), "mnist-like");
+    }
+
+    #[test]
+    fn duplicate_key_errors() {
+        let e = Config::parse("a = 1\na = 2\n").unwrap_err();
+        assert!(e.to_string().contains("duplicate"));
+    }
+
+    #[test]
+    fn bad_syntax_errors_with_line() {
+        let e = Config::parse("a = 1\nnot a kv\n").unwrap_err();
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let c = Config::parse("s = \"a#b\"").unwrap();
+        assert_eq!(c.str("s"), Some("a#b"));
+    }
+
+    #[test]
+    fn cli_override() {
+        let mut c = Config::parse(SAMPLE).unwrap();
+        c.set_kv("tsne.theta=0.8").unwrap();
+        assert_eq!(c.float("tsne.theta"), Some(0.8));
+    }
+
+    #[test]
+    fn roundtrip_text() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let c2 = Config::parse(&c.to_text()).unwrap();
+        assert_eq!(c.float("tsne.theta"), c2.float("tsne.theta"));
+        assert_eq!(c.str("name"), c2.str("name"));
+        assert_eq!(c.int_array("tsne.sizes"), c2.int_array("tsne.sizes"));
+    }
+
+    #[test]
+    fn float_array_coerces_ints() {
+        let c = Config::parse("xs = [1, 2.5, 3]").unwrap();
+        assert_eq!(c.float_array("xs").unwrap(), vec![1.0, 2.5, 3.0]);
+    }
+}

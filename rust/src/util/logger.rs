@@ -1,0 +1,80 @@
+//! Minimal leveled logger backing the `log` crate facade.
+//!
+//! Writes to stderr with elapsed-time prefixes; level is controlled by
+//! `BHSNE_LOG` (error|warn|info|debug|trace) or programmatically.
+
+use log::{Level, LevelFilter, Metadata, Record};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+struct StderrLogger {
+    start: Instant,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed().as_secs_f64();
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{t:9.3}s {lvl} {}] {}", record.target(), record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: OnceLock<StderrLogger> = OnceLock::new();
+
+/// Parse a level name; defaults to Info on unknown input.
+pub fn parse_level(s: &str) -> LevelFilter {
+    match s.to_ascii_lowercase().as_str() {
+        "off" => LevelFilter::Off,
+        "error" => LevelFilter::Error,
+        "warn" => LevelFilter::Warn,
+        "info" => LevelFilter::Info,
+        "debug" => LevelFilter::Debug,
+        "trace" => LevelFilter::Trace,
+        _ => LevelFilter::Info,
+    }
+}
+
+/// Install the logger (idempotent). Level comes from `BHSNE_LOG` unless
+/// `level` is given.
+pub fn init(level: Option<LevelFilter>) {
+    let logger = LOGGER.get_or_init(|| StderrLogger { start: Instant::now() });
+    let _ = log::set_logger(logger);
+    let filter = level.unwrap_or_else(|| {
+        std::env::var("BHSNE_LOG").map(|v| parse_level(&v)).unwrap_or(LevelFilter::Info)
+    });
+    log::set_max_level(filter);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_level_known_and_unknown() {
+        assert_eq!(parse_level("debug"), LevelFilter::Debug);
+        assert_eq!(parse_level("OFF"), LevelFilter::Off);
+        assert_eq!(parse_level("bogus"), LevelFilter::Info);
+    }
+
+    #[test]
+    fn init_is_idempotent() {
+        init(Some(LevelFilter::Warn));
+        init(Some(LevelFilter::Info));
+        assert_eq!(log::max_level(), LevelFilter::Info);
+    }
+}

@@ -1,0 +1,17 @@
+//! Hand-rolled substrates: everything the rest of the library needs that
+//! would normally come from external crates (rand, rayon, clap, toml,
+//! proptest, criterion's stats) — the offline vendor set only contains the
+//! `xla` dependency closure, so these are implemented from scratch.
+
+pub mod args;
+pub mod bench;
+pub mod config;
+pub mod logger;
+pub mod pool;
+pub mod quickcheck;
+pub mod rng;
+pub mod stats;
+
+pub use pool::ThreadPool;
+pub use rng::Pcg32;
+pub use stats::{Stopwatch, Summary};

@@ -1,0 +1,322 @@
+//! A small fixed-size thread pool with scoped parallel-for.
+//!
+//! Neither rayon nor tokio is in the offline vendor set, so the pool is
+//! built on `std::thread` + channels. It provides the two primitives the
+//! hot paths need:
+//!
+//! * [`ThreadPool::scope_chunks`] — parallel-for over index ranges with a
+//!   per-chunk closure (used by kNN search, per-point BH force loops,
+//!   dataset generation).
+//! * [`ThreadPool::install`] — run a closure on the pool and wait.
+//!
+//! The pool is work-sharing (an atomic chunk cursor), not work-stealing;
+//! for the embarrassingly-parallel per-point loops here that is within a
+//! few percent of rayon in practice.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Message {
+    Run(Job),
+    Shutdown,
+}
+
+struct Shared {
+    queue: Mutex<std::collections::VecDeque<Message>>,
+    available: Condvar,
+}
+
+/// Fixed-size thread pool.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<thread::JoinHandle<()>>,
+    n_threads: usize,
+}
+
+impl ThreadPool {
+    /// Create a pool with `n` worker threads (minimum 1).
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(std::collections::VecDeque::new()),
+            available: Condvar::new(),
+        });
+        let workers = (0..n)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                thread::Builder::new()
+                    .name(format!("bhsne-worker-{i}"))
+                    .spawn(move || worker_loop(shared))
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { shared, workers, n_threads: n }
+    }
+
+    /// Pool sized to the machine (`available_parallelism`), capped at 16.
+    pub fn for_host() -> Self {
+        let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Self::new(n.min(16))
+    }
+
+    /// Number of worker threads.
+    pub fn n_threads(&self) -> usize {
+        self.n_threads
+    }
+
+    fn submit(&self, job: Job) {
+        let mut q = self.shared.queue.lock().unwrap();
+        q.push_back(Message::Run(job));
+        self.shared.available.notify_one();
+    }
+
+    /// Run `f` once on the pool and block until it finishes.
+    pub fn install<F, R>(&self, f: F) -> R
+    where
+        F: FnOnce() -> R + Send,
+        R: Send,
+    {
+        let mut result: Option<R> = None;
+        self.scoped(|scope| {
+            let slot = &mut result;
+            scope.run(move || {
+                *slot = Some(f());
+            });
+        });
+        result.expect("install job completed without producing a value")
+    }
+
+    /// Scoped execution: jobs spawned in the scope may borrow from the
+    /// caller's stack; the call blocks until every spawned job completes.
+    pub fn scoped<'env, F>(&self, f: F)
+    where
+        F: FnOnce(&Scope<'env, '_>),
+    {
+        let pending = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let scope = Scope { pool: self, pending: Arc::clone(&pending), _marker: std::marker::PhantomData };
+        f(&scope);
+        // Wait for all jobs of this scope.
+        let (lock, cv) = &*pending;
+        let mut n = lock.lock().unwrap();
+        while *n > 0 {
+            n = cv.wait(n).unwrap();
+        }
+    }
+
+    /// Parallel-for over `0..n` in contiguous chunks. `body(lo, hi)` is
+    /// invoked for disjoint ranges covering `0..n`; chunks are claimed from
+    /// an atomic cursor so faster threads take more chunks.
+    pub fn scope_chunks<F>(&self, n: usize, chunk: usize, body: F)
+    where
+        F: Fn(usize, usize) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        let chunk = chunk.max(1);
+        if n <= chunk || self.n_threads == 1 {
+            body(0, n);
+            return;
+        }
+        let cursor = AtomicUsize::new(0);
+        let body_ref = &body;
+        let cursor_ref = &cursor;
+        self.scoped(|scope| {
+            for _ in 0..self.n_threads {
+                scope.run(move || loop {
+                    let lo = cursor_ref.fetch_add(chunk, Ordering::Relaxed);
+                    if lo >= n {
+                        break;
+                    }
+                    let hi = (lo + chunk).min(n);
+                    body_ref(lo, hi);
+                });
+            }
+        });
+    }
+
+    /// Parallel map over `0..n` producing a `Vec<R>` (one result per index).
+    pub fn map_indexed<R, F>(&self, n: usize, chunk: usize, f: F) -> Vec<R>
+    where
+        R: Send + Default + Clone,
+        F: Fn(usize) -> R + Sync,
+    {
+        let mut out = vec![R::default(); n];
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        let f_ref = &f;
+        self.scope_chunks(n, chunk, move |lo, hi| {
+            let p = out_ptr; // copy the Send wrapper into the closure
+            for i in lo..hi {
+                // SAFETY: chunks are disjoint; each index written exactly once.
+                unsafe { *p.0.add(i) = f_ref(i) };
+            }
+        });
+        out
+    }
+}
+
+/// Raw-pointer wrapper so disjoint-index writes can cross the closure
+/// boundary. Soundness argument lives at each use site. (Manual Copy —
+/// derive would demand `T: Copy`, but raw pointers are always Copy.)
+struct SendPtr<T>(*mut T);
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            for _ in 0..self.workers.len() {
+                q.push_back(Message::Shutdown);
+            }
+            self.shared.available.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let msg = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(m) = q.pop_front() {
+                    break m;
+                }
+                q = shared.available.wait(q).unwrap();
+            }
+        };
+        match msg {
+            Message::Run(job) => job(),
+            Message::Shutdown => return,
+        }
+    }
+}
+
+/// Handle passed to [`ThreadPool::scoped`] closures for spawning jobs that
+/// may borrow the enclosing stack frame.
+pub struct Scope<'env, 'pool> {
+    pool: &'pool ThreadPool,
+    pending: Arc<(Mutex<usize>, Condvar)>,
+    _marker: std::marker::PhantomData<&'env ()>,
+}
+
+impl<'env, 'pool> Scope<'env, 'pool> {
+    /// Spawn a job inside the scope.
+    pub fn run<F>(&self, f: F)
+    where
+        F: FnOnce() + Send + 'env,
+    {
+        {
+            let (lock, _) = &*self.pending;
+            *lock.lock().unwrap() += 1;
+        }
+        let pending = Arc::clone(&self.pending);
+        // SAFETY: `scoped` blocks until the pending counter returns to zero,
+        // so the 'env borrow cannot outlive the frame that owns it. This is
+        // the same argument std::thread::scope makes.
+        let job: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+            f();
+            let (lock, cv) = &*pending;
+            let mut n = lock.lock().unwrap();
+            *n -= 1;
+            if *n == 0 {
+                cv.notify_all();
+            }
+        });
+        let job: Job = unsafe { std::mem::transmute(job) };
+        self.pool.submit(job);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn install_returns_value() {
+        let pool = ThreadPool::new(2);
+        let v = pool.install(|| 21 * 2);
+        assert_eq!(v, 42);
+    }
+
+    #[test]
+    fn scope_chunks_covers_all_indices_once() {
+        let pool = ThreadPool::new(4);
+        let n = 10_000;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        pool.scope_chunks(n, 64, |lo, hi| {
+            for i in lo..hi {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn scope_chunks_small_n_runs_inline() {
+        let pool = ThreadPool::new(4);
+        let sum = AtomicU64::new(0);
+        pool.scope_chunks(5, 100, |lo, hi| {
+            for i in lo..hi {
+                sum.fetch_add(i as u64, Ordering::Relaxed);
+            }
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 0 + 1 + 2 + 3 + 4);
+    }
+
+    #[test]
+    fn map_indexed_matches_serial() {
+        let pool = ThreadPool::new(3);
+        let out = pool.map_indexed(1000, 16, |i| i * i);
+        let expect: Vec<usize> = (0..1000).map(|i| i * i).collect();
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn scoped_jobs_borrow_stack() {
+        let pool = ThreadPool::new(2);
+        let data = vec![1u64, 2, 3, 4];
+        let total = AtomicU64::new(0);
+        pool.scoped(|scope| {
+            for &x in &data {
+                let total = &total;
+                scope.run(move || {
+                    total.fetch_add(x, Ordering::Relaxed);
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn pool_survives_many_rounds() {
+        let pool = ThreadPool::new(4);
+        for round in 0..50 {
+            let count = AtomicU64::new(0);
+            pool.scope_chunks(200, 7, |lo, hi| {
+                count.fetch_add((hi - lo) as u64, Ordering::Relaxed);
+            });
+            assert_eq!(count.load(Ordering::Relaxed), 200, "round {round}");
+        }
+    }
+
+    #[test]
+    fn single_thread_pool_works() {
+        let pool = ThreadPool::new(1);
+        let out = pool.map_indexed(64, 8, |i| i + 1);
+        assert_eq!(out[63], 64);
+    }
+}

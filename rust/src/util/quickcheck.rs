@@ -1,0 +1,266 @@
+//! Minimal property-based testing framework (proptest is not in the
+//! offline vendor set).
+//!
+//! Provides seeded generators for the shapes this library cares about
+//! (point clouds, dimensions, thetas) and a [`check`] driver that runs a
+//! property over many random cases, then greedily *shrinks* a failing case
+//! (halving sizes / zeroing coordinates) before reporting it.
+
+use super::rng::Pcg32;
+
+/// A generator produces a random value of `T` from an RNG and a size hint.
+pub trait Gen<T> {
+    fn generate(&self, rng: &mut Pcg32, size: usize) -> T;
+    /// Candidate smaller versions of a failing value (simplest first).
+    fn shrink(&self, value: &T) -> Vec<T> {
+        let _ = value;
+        Vec::new()
+    }
+}
+
+/// Uniform f64 in [lo, hi).
+pub struct UniformF64 {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Gen<f64> for UniformF64 {
+    fn generate(&self, rng: &mut Pcg32, _size: usize) -> f64 {
+        rng.uniform_range(self.lo, self.hi)
+    }
+
+    fn shrink(&self, value: &f64) -> Vec<f64> {
+        let mut out = Vec::new();
+        if *value != self.lo {
+            out.push(self.lo);
+            out.push((self.lo + value) / 2.0);
+        }
+        out
+    }
+}
+
+/// Uniform usize in [lo, hi].
+pub struct UniformUsize {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Gen<usize> for UniformUsize {
+    fn generate(&self, rng: &mut Pcg32, _size: usize) -> usize {
+        self.lo + rng.below_usize(self.hi - self.lo + 1)
+    }
+
+    fn shrink(&self, value: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *value > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (value - self.lo) / 2);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Random point cloud: `n` points in `dim` dimensions, i.i.d. coordinates.
+/// Generates clusters occasionally to exercise non-uniform densities.
+pub struct PointCloud {
+    pub dim: usize,
+    pub min_n: usize,
+    pub max_n: usize,
+}
+
+/// A generated point set in row-major layout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Points {
+    pub n: usize,
+    pub dim: usize,
+    pub data: Vec<f32>,
+}
+
+impl Points {
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+}
+
+impl Gen<Points> for PointCloud {
+    fn generate(&self, rng: &mut Pcg32, _size: usize) -> Points {
+        let n = self.min_n + rng.below_usize(self.max_n - self.min_n + 1);
+        let mut data = vec![0f32; n * self.dim];
+        // Mix of regimes: uniform cloud, tight clusters, or near-duplicates.
+        let regime = rng.below(3);
+        match regime {
+            0 => {
+                for v in data.iter_mut() {
+                    *v = rng.uniform_range(-10.0, 10.0) as f32;
+                }
+            }
+            1 => {
+                let k = 1 + rng.below_usize(4);
+                let centers: Vec<f64> = (0..k * self.dim).map(|_| rng.uniform_range(-20.0, 20.0)).collect();
+                for i in 0..n {
+                    let c = rng.below_usize(k);
+                    for d in 0..self.dim {
+                        data[i * self.dim + d] = (centers[c * self.dim + d] + rng.normal() * 0.5) as f32;
+                    }
+                }
+            }
+            _ => {
+                // Many coincident / near-coincident points (tree edge cases).
+                for i in 0..n {
+                    let base = (i % 3) as f32;
+                    for d in 0..self.dim {
+                        data[i * self.dim + d] = base + if rng.below(4) == 0 { rng.uniform_f32() * 1e-5 } else { 0.0 };
+                    }
+                }
+            }
+        }
+        Points { n, dim: self.dim, data }
+    }
+
+    fn shrink(&self, value: &Points) -> Vec<Points> {
+        let mut out = Vec::new();
+        // Halve the point count.
+        if value.n > self.min_n {
+            let n2 = (value.n / 2).max(self.min_n);
+            out.push(Points { n: n2, dim: value.dim, data: value.data[..n2 * value.dim].to_vec() });
+        }
+        // Drop the first half instead (different subset).
+        if value.n > self.min_n + 1 {
+            let n2 = (value.n / 2).max(self.min_n);
+            let start = value.n - n2;
+            out.push(Points { n: n2, dim: value.dim, data: value.data[start * value.dim..].to_vec() });
+        }
+        // Round coordinates to integers (simpler numbers).
+        let rounded: Vec<f32> = value.data.iter().map(|x| x.round()).collect();
+        if rounded != value.data {
+            out.push(Points { n: value.n, dim: value.dim, data: rounded });
+        }
+        out
+    }
+}
+
+/// Outcome of a property check.
+#[derive(Debug)]
+pub struct Failure<T> {
+    pub case: T,
+    pub iterations: usize,
+    pub shrinks: usize,
+    pub message: String,
+}
+
+/// Run `prop` over `cases` generated values; on failure, shrink greedily
+/// and panic with the minimal counterexample (standard test integration).
+pub fn check<T, G, P>(seed: u64, cases: usize, gen: &G, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: Gen<T>,
+    P: Fn(&T) -> Result<(), String>,
+{
+    if let Some(fail) = check_quiet(seed, cases, gen, &prop) {
+        panic!(
+            "property failed after {} cases ({} shrinks)\n  message: {}\n  minimal case: {:?}",
+            fail.iterations, fail.shrinks, fail.message, fail.case
+        );
+    }
+}
+
+/// Like [`check`] but returns the failure instead of panicking (testable).
+pub fn check_quiet<T, G, P>(seed: u64, cases: usize, gen: &G, prop: &P) -> Option<Failure<T>>
+where
+    T: std::fmt::Debug + Clone,
+    G: Gen<T>,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Pcg32::seeded(seed);
+    for it in 0..cases {
+        let case = gen.generate(&mut rng, it);
+        if let Err(msg) = prop(&case) {
+            // Shrink greedily: repeatedly take the first shrink that still fails.
+            let mut best = case;
+            let mut best_msg = msg;
+            let mut shrinks = 0;
+            'outer: loop {
+                for cand in gen.shrink(&best) {
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        shrinks += 1;
+                        if shrinks > 200 {
+                            break 'outer;
+                        }
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            return Some(Failure { case: best, iterations: it + 1, shrinks, message: best_msg });
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_returns_none() {
+        let g = UniformUsize { lo: 0, hi: 100 };
+        let fail = check_quiet(1, 200, &g, &|&x: &usize| {
+            if x <= 100 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+        assert!(fail.is_none());
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimal() {
+        let g = UniformUsize { lo: 0, hi: 1000 };
+        // Fails for x >= 17; minimal failing value reachable by our shrinker
+        // should be well below the typical random failure.
+        let fail = check_quiet(2, 500, &g, &|&x: &usize| {
+            if x < 17 {
+                Ok(())
+            } else {
+                Err(format!("{x} >= 17"))
+            }
+        })
+        .expect("must fail");
+        assert!(fail.case >= 17);
+        assert!(fail.case <= 33, "shrunk case {} should be near the boundary", fail.case);
+    }
+
+    #[test]
+    fn point_cloud_shapes_valid() {
+        let g = PointCloud { dim: 3, min_n: 2, max_n: 50 };
+        let mut rng = Pcg32::seeded(3);
+        for i in 0..100 {
+            let p = g.generate(&mut rng, i);
+            assert!(p.n >= 2 && p.n <= 50);
+            assert_eq!(p.data.len(), p.n * 3);
+            assert!(p.data.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn point_cloud_shrink_preserves_shape() {
+        let g = PointCloud { dim: 2, min_n: 2, max_n: 40 };
+        let mut rng = Pcg32::seeded(4);
+        let p = g.generate(&mut rng, 0);
+        for s in g.shrink(&p) {
+            assert_eq!(s.data.len(), s.n * s.dim);
+            assert!(s.n >= 2);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn check_panics_on_failure() {
+        let g = UniformF64 { lo: 0.0, hi: 1.0 };
+        check(5, 100, &g, |&x: &f64| if x < 0.5 { Ok(()) } else { Err("big".into()) });
+    }
+}

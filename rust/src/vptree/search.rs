@@ -1,0 +1,136 @@
+//! Bounded max-heap of candidate neighbors for kNN search.
+//!
+//! Keeps the k closest items seen so far; `tau()` (the distance to the
+//! furthest kept neighbor, or +∞ while the heap is underfull) drives the
+//! vp-tree's branch pruning.
+
+/// Fixed-capacity max-heap ordered by distance.
+#[derive(Debug)]
+pub struct NeighborHeap {
+    k: usize,
+    /// (distance, item) pairs in binary max-heap order by distance.
+    heap: Vec<(f32, u32)>,
+}
+
+impl NeighborHeap {
+    pub fn new(k: usize) -> Self {
+        assert!(k > 0, "k must be positive");
+        NeighborHeap { k, heap: Vec::with_capacity(k + 1) }
+    }
+
+    /// Current pruning radius: max kept distance once full, else +∞.
+    #[inline]
+    pub fn tau(&self) -> f32 {
+        if self.heap.len() < self.k {
+            f32::INFINITY
+        } else {
+            self.heap[0].0
+        }
+    }
+
+    /// Offer a candidate; kept iff it beats the current τ.
+    #[inline]
+    pub fn offer(&mut self, item: u32, dist: f32) {
+        if self.heap.len() < self.k {
+            self.heap.push((dist, item));
+            self.sift_up(self.heap.len() - 1);
+        } else if dist < self.heap[0].0 {
+            self.heap[0] = (dist, item);
+            self.sift_down(0);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Consume into `(item, distance)` pairs ascending by distance.
+    pub fn into_sorted(mut self) -> Vec<(u32, f32)> {
+        self.heap.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+        self.heap.into_iter().map(|(d, i)| (i, d)).collect()
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if self.heap[i].0 > self.heap[parent].0 {
+                self.heap.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        let n = self.heap.len();
+        loop {
+            let l = 2 * i + 1;
+            let r = 2 * i + 2;
+            let mut largest = i;
+            if l < n && self.heap[l].0 > self.heap[largest].0 {
+                largest = l;
+            }
+            if r < n && self.heap[r].0 > self.heap[largest].0 {
+                largest = r;
+            }
+            if largest == i {
+                break;
+            }
+            self.heap.swap(i, largest);
+            i = largest;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn keeps_k_smallest() {
+        let mut h = NeighborHeap::new(3);
+        for (i, d) in [5.0, 1.0, 4.0, 2.0, 3.0, 0.5].iter().enumerate() {
+            h.offer(i as u32, *d);
+        }
+        let out = h.into_sorted();
+        let dists: Vec<f32> = out.iter().map(|&(_, d)| d).collect();
+        assert_eq!(dists, vec![0.5, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn tau_infinite_until_full() {
+        let mut h = NeighborHeap::new(2);
+        assert_eq!(h.tau(), f32::INFINITY);
+        h.offer(0, 1.0);
+        assert_eq!(h.tau(), f32::INFINITY);
+        h.offer(1, 2.0);
+        assert_eq!(h.tau(), 2.0);
+        h.offer(2, 0.5);
+        assert_eq!(h.tau(), 1.0);
+    }
+
+    #[test]
+    fn random_stream_matches_sort() {
+        let mut rng = Pcg32::seeded(9);
+        for trial in 0..50 {
+            let k = 1 + rng.below_usize(10);
+            let n = 1 + rng.below_usize(200);
+            let ds: Vec<f32> = (0..n).map(|_| rng.uniform_f32() * 100.0).collect();
+            let mut h = NeighborHeap::new(k);
+            for (i, &d) in ds.iter().enumerate() {
+                h.offer(i as u32, d);
+            }
+            let got: Vec<f32> = h.into_sorted().iter().map(|&(_, d)| d).collect();
+            let mut want = ds.clone();
+            want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            want.truncate(k);
+            assert_eq!(got, want, "trial {trial}");
+        }
+    }
+}

@@ -1,0 +1,133 @@
+//! CLI integration tests: drive the `bhsne` binary end to end.
+
+use std::process::Command;
+
+fn bhsne() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_bhsne"))
+}
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("bhsne-cli-{}-{name}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn no_args_prints_usage() {
+    let out = bhsne().output().unwrap();
+    assert!(out.status.success());
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("USAGE"));
+    assert!(s.contains("embed"));
+}
+
+#[test]
+fn unknown_command_fails() {
+    let out = bhsne().arg("bogus").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown command"));
+}
+
+#[test]
+fn embed_help_lists_options() {
+    let out = bhsne().args(["embed", "--help"]).output().unwrap();
+    assert!(out.status.success());
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("--theta"));
+    assert!(s.contains("--perplexity"));
+}
+
+#[test]
+fn embed_small_run_writes_embedding() {
+    let dir = tmpdir("embed");
+    let out = bhsne()
+        .args([
+            "embed",
+            "--dataset", "gaussians",
+            "--n", "150",
+            "--iters", "40",
+            "--exaggeration", "4",
+            "--out",
+        ])
+        .arg(&dir)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("1-NN error"), "{s}");
+    assert!(dir.join("embedding.tsv").exists());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn embed_with_config_file() {
+    let dir = tmpdir("cfg");
+    let cfg_path = dir.join("run.toml");
+    std::fs::write(
+        &cfg_path,
+        "[job]\ndataset = \"gaussians\"\nn = 120\n\n[tsne]\ntheta = 0.7\niters = 30\n",
+    )
+    .unwrap();
+    let out = bhsne()
+        .args(["embed", "--config"])
+        .arg(&cfg_path)
+        .args(["--n", "100", "--iters", "25", "--out"]) // CLI overrides file
+        .arg(dir.join("out"))
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("points           : 100"), "{s}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn sweep_theta_prints_table() {
+    let out = bhsne()
+        .args([
+            "sweep",
+            "--param", "theta",
+            "--values", "0.4,0.8",
+            "--dataset", "gaussians",
+            "--n", "120",
+            "--iters", "25",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("theta") && s.contains("1nn_err"), "{s}");
+    // Two data rows.
+    assert!(s.contains("0.4") && s.contains("0.8"));
+}
+
+#[test]
+fn quadtree_ascii_map() {
+    let out = bhsne()
+        .args(["quadtree", "--n", "120", "--iters", "50", "--dataset", "gaussians"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("quadtree:"), "{s}");
+}
+
+#[test]
+fn info_reports_artifacts() {
+    let out = bhsne().arg("info").output().unwrap();
+    assert!(out.status.success());
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("datasets:"));
+    // Either lists artifacts or reports runtime unavailable — both valid.
+    assert!(s.contains("attractive_n512_k320") || s.contains("unavailable"));
+}
+
+#[test]
+fn embed_rejects_bad_dataset() {
+    let out = bhsne()
+        .args(["embed", "--dataset", "nope", "--n", "50", "--iters", "5"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown dataset"));
+}

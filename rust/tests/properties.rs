@@ -1,0 +1,205 @@
+//! Cross-module property tests (util::quickcheck): invariants that span
+//! the similarity pipeline, trees, gradient, and optimizer.
+
+use bhsne::knn::{BruteKnn, KnnBackend, VpTreeKnn};
+use bhsne::sne::{gradient, input, RepulsionMethod};
+use bhsne::spatial::{BhTree, CellSizeMode};
+use bhsne::util::quickcheck::{check, Gen, PointCloud, Points, UniformF64};
+use bhsne::util::{Pcg32, ThreadPool};
+
+#[test]
+fn prop_joint_p_is_a_distribution() {
+    let pool = ThreadPool::new(2);
+    let gen = PointCloud { dim: 6, min_n: 12, max_n: 150 };
+    check(101, 25, &gen, |p: &Points| {
+        let (csr, stats) =
+            input::joint_probabilities(&pool, &p.data, p.n, p.dim, 8.0, &VpTreeKnn, 3);
+        let sum = csr.sum();
+        if (sum - 1.0).abs() > 1e-3 {
+            return Err(format!("sum(P)={sum}"));
+        }
+        if !csr.is_symmetric(1e-3) {
+            return Err("P not symmetric".into());
+        }
+        // Perplexity "failures" are legitimate when a point's neighbor
+        // list contains many coincident points: the entropy range is then
+        // bounded below by log(#zeros) and the target can be unreachable.
+        // The emitted distribution is still valid (checked above), so the
+        // strict check applies only to clouds of distinct points.
+        let distinct = {
+            let mut rows: Vec<&[f32]> = (0..p.n).map(|i| p.row(i)).collect();
+            rows.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            rows.windows(2).all(|w| w[0] != w[1])
+        };
+        if distinct && stats.perplexity_failures > 0 {
+            return Err(format!("{} perplexity failures", stats.perplexity_failures));
+        }
+        // No negative probabilities.
+        if csr.values.iter().any(|&v| v < 0.0) {
+            return Err("negative p_ij".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bh_converges_to_exact_as_theta_shrinks() {
+    let pool = ThreadPool::new(2);
+    let gen = PointCloud { dim: 2, min_n: 20, max_n: 200 };
+    check(102, 20, &gen, |p: &Points| {
+        let n = p.n;
+        let mut exact = vec![0f64; n * 2];
+        let z_exact = gradient::repulsive_exact::<2>(&pool, &p.data, n, &mut exact);
+        for &theta in &[0.1f32, 0.4] {
+            let mut bh = vec![0f64; n * 2];
+            let z_bh =
+                gradient::repulsive_bh::<2>(&pool, &p.data, n, theta, CellSizeMode::Diagonal, &mut bh);
+            let tol = 0.02 + 0.25 * theta as f64; // looser for bigger theta
+            if (z_bh - z_exact).abs() > tol * z_exact {
+                return Err(format!("theta={theta}: Z {z_bh} vs exact {z_exact}"));
+            }
+            let norm: f64 = exact.iter().map(|v| v * v).sum::<f64>().sqrt();
+            let err: f64 =
+                exact.iter().zip(&bh).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt();
+            if norm > 1e-12 && err / norm > tol * 2.0 {
+                return Err(format!("theta={theta}: force err {}", err / norm));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quadtree_counts_match_any_cloud() {
+    let gen = PointCloud { dim: 2, min_n: 2, max_n: 400 };
+    check(103, 40, &gen, |p: &Points| {
+        let tree = BhTree::<2>::build(&p.data, p.n);
+        let stats = tree.stats();
+        if stats.total_points != p.n {
+            return Err(format!("total {} != {}", stats.total_points, p.n));
+        }
+        // O(N) node bound (paper): generous constant for adversarial
+        // clouds with near-coincident points.
+        if stats.nodes > 64 * p.n + 64 {
+            return Err(format!("{} nodes for {} points", stats.nodes, p.n));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_knn_backends_agree() {
+    let pool = ThreadPool::new(2);
+    let gen = PointCloud { dim: 4, min_n: 5, max_n: 120 };
+    check(104, 30, &gen, |p: &Points| {
+        let k = 4.min(p.n - 1).max(1);
+        let a = VpTreeKnn.knn_all(&pool, &p.data, p.n, p.dim, k, 9);
+        let b = BruteKnn.knn_all(&pool, &p.data, p.n, p.dim, k, 9);
+        for i in 0..p.n * k {
+            if (a.distances[i] - b.distances[i]).abs() > 1e-4 {
+                return Err(format!(
+                    "slot {i}: vptree {} vs brute {}",
+                    a.distances[i], b.distances[i]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gradient_step_reduces_cost_for_small_eta() {
+    let pool = ThreadPool::new(2);
+    let gen = UniformF64 { lo: 0.0, hi: 1.0 };
+    // Fixed cloud, random seeds/perturbations via the generated value.
+    check(105, 15, &gen, |&u: &f64| {
+        let n = 80;
+        let seed = (u * 1e6) as u64 + 1;
+        let mut rng = Pcg32::seeded(seed);
+        let y: Vec<f32> = (0..n * 2).map(|_| rng.normal() as f32).collect();
+        let mut rows: Vec<Vec<(u32, f32)>> = vec![Vec::new(); n];
+        for i in 0..n {
+            for _ in 0..4 {
+                let j = rng.below_usize(n);
+                if j != i {
+                    let v = rng.uniform_f32();
+                    rows[i].push((j as u32, v));
+                    rows[j].push((i as u32, v));
+                }
+            }
+        }
+        let mut p = bhsne::sne::Csr::from_rows(n, rows);
+        let s = p.sum() as f32;
+        p.scale(1.0 / s);
+
+        let mut grad = vec![0f64; n * 2];
+        let mut a = vec![0f64; n * 2];
+        let mut r = vec![0f64; n * 2];
+        let z0 = gradient::gradient::<2>(
+            &pool, &p, &y, n, RepulsionMethod::Exact, CellSizeMode::Diagonal,
+            &mut grad, &mut a, &mut r,
+        );
+        let c0 = gradient::kl_cost::<2>(&pool, &p, &y, z0);
+        let mut y1 = y.clone();
+        for (yy, g) in y1.iter_mut().zip(&grad) {
+            *yy -= (0.005 * g) as f32;
+        }
+        let z1 = gradient::gradient::<2>(
+            &pool, &p, &y1, n, RepulsionMethod::Exact, CellSizeMode::Diagonal,
+            &mut grad, &mut a, &mut r,
+        );
+        let c1 = gradient::kl_cost::<2>(&pool, &p, &y1, z1);
+        if c1 > c0 + 1e-8 {
+            return Err(format!("cost rose {c0} -> {c1} (seed {seed})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dualtree_z_tracks_exact() {
+    let pool = ThreadPool::new(2);
+    let gen = PointCloud { dim: 2, min_n: 30, max_n: 250 };
+    check(106, 15, &gen, |p: &Points| {
+        let n = p.n;
+        let mut exact = vec![0f64; n * 2];
+        let z_exact = gradient::repulsive_exact::<2>(&pool, &p.data, n, &mut exact);
+        let mut tree = BhTree::<2>::build(&p.data, n);
+        let mut forces = vec![0f64; n * 2];
+        let z_dt = tree.repulsion_dual(0.2, &mut forces);
+        if (z_dt - z_exact).abs() > 0.08 * z_exact {
+            return Err(format!("dual Z {z_dt} vs exact {z_exact}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pca_projection_never_increases_pairwise_distance() {
+    // Orthonormal projection is a contraction: ‖proj(x)−proj(y)‖ ≤ ‖x−y‖.
+    let pool = ThreadPool::new(2);
+    let gen = PointCloud { dim: 8, min_n: 20, max_n: 100 };
+    check(107, 20, &gen, |p: &Points| {
+        let k = 3;
+        let pca = bhsne::pca::fit(&pool, &p.data, p.n, p.dim, k, 5);
+        let z = bhsne::pca::transform(&pool, &pca, &p.data, p.n);
+        let mut rng = Pcg32::seeded(11);
+        for _ in 0..20 {
+            let i = rng.below_usize(p.n);
+            let j = rng.below_usize(p.n);
+            let dx: f32 = p
+                .row(i)
+                .iter()
+                .zip(p.row(j))
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            let dz: f32 = (0..k)
+                .map(|d| (z[i * k + d] - z[j * k + d]).powi(2))
+                .sum();
+            if dz > dx * (1.0 + 1e-3) + 1e-4 {
+                return Err(format!("expansion: proj {dz} > orig {dx}"));
+            }
+        }
+        Ok(())
+    });
+}

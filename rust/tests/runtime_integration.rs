@@ -1,0 +1,217 @@
+//! Integration tests: the AOT XLA artifacts must agree with the pure-Rust
+//! implementations to f32 tolerance, including under padding.
+//!
+//! These tests are skipped (with a visible message) when `make artifacts`
+//! has not produced the artifact directory — `make test` always builds it
+//! first, so CI exercises the real path.
+
+use bhsne::runtime::{Runtime, SneEngine};
+use bhsne::sne::sparse::Csr;
+use bhsne::sne::{gradient, perplexity};
+use bhsne::util::{Pcg32, ThreadPool};
+use std::rc::Rc;
+
+fn artifacts_present() -> bool {
+    bhsne::runtime::default_artifact_dir().join("manifest.json").exists()
+}
+
+fn engine() -> SneEngine {
+    SneEngine::new(Rc::new(Runtime::from_env().unwrap()))
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_present() {
+            eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+            return;
+        }
+    };
+}
+
+fn random_embedding(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..n * 2).map(|_| rng.normal() as f32 * 2.0).collect()
+}
+
+fn random_p(n: usize, per_row: usize, seed: u64) -> Csr {
+    let mut rng = Pcg32::seeded(seed);
+    let mut rows: Vec<Vec<(u32, f32)>> = vec![Vec::new(); n];
+    for i in 0..n {
+        for _ in 0..per_row {
+            let j = rng.below_usize(n);
+            if j != i {
+                let v = rng.uniform_f32();
+                rows[i].push((j as u32, v));
+                rows[j].push((i as u32, v));
+            }
+        }
+    }
+    let mut m = Csr::from_rows(n, rows);
+    let s = m.sum() as f32;
+    m.scale(1.0 / s);
+    m
+}
+
+#[test]
+fn xla_attractive_matches_cpu() {
+    require_artifacts!();
+    let eng = engine();
+    let pool = ThreadPool::new(2);
+    // n = 300 forces padding up to the 512 bucket.
+    for (n, seed) in [(300usize, 1u64), (512, 2)] {
+        let y = random_embedding(n, seed);
+        let p = random_p(n, 8, seed + 10);
+        let xla = eng.attractive(&p, &y, 2).unwrap();
+        let mut cpu = vec![0f64; n * 2];
+        gradient::attractive_forces::<2>(&pool, &p, &y, &mut cpu);
+        for i in 0..n * 2 {
+            assert!(
+                (xla[i] - cpu[i]).abs() < 1e-5 + 1e-4 * cpu[i].abs(),
+                "n={n} i={i}: xla {} cpu {}",
+                xla[i],
+                cpu[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn xla_repulsion_matches_cpu_with_padding() {
+    require_artifacts!();
+    let eng = engine();
+    let pool = ThreadPool::new(2);
+    for (n, seed) in [(200usize, 3u64), (512, 4)] {
+        let y = random_embedding(n, seed);
+        let (xla_rep, xla_z) = eng.repulsion(&y, n, 2).unwrap();
+        let mut cpu = vec![0f64; n * 2];
+        let cpu_z = gradient::repulsive_exact::<2>(&pool, &y, n, &mut cpu);
+        assert!(
+            (xla_z - cpu_z).abs() < 1e-3 * cpu_z,
+            "n={n}: z xla {xla_z} cpu {cpu_z}"
+        );
+        for i in 0..n * 2 {
+            assert!(
+                (xla_rep[i] - cpu[i]).abs() < 1e-4 + 1e-3 * cpu[i].abs(),
+                "n={n} i={i}: xla {} cpu {}",
+                xla_rep[i],
+                cpu[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn xla_perplexity_matches_cpu() {
+    require_artifacts!();
+    let eng = engine();
+    let (n, k, u) = (100usize, 90usize, 30.0);
+    let mut rng = Pcg32::seeded(5);
+    let d2: Vec<f32> = (0..n * k).map(|_| rng.uniform_range(0.5, 40.0) as f32).collect();
+    let (p, beta) = eng.perplexity(&d2, n, k, u).unwrap();
+    for i in 0..n {
+        let mut cpu_p = vec![0f32; k];
+        let (cpu_beta, ok) = perplexity::solve_row(&d2[i * k..(i + 1) * k], u, 1e-5, &mut cpu_p);
+        assert!(ok);
+        assert!(
+            (beta[i] - cpu_beta).abs() < 1e-2 * cpu_beta.abs().max(1e-3),
+            "row {i}: beta xla {} cpu {}",
+            beta[i],
+            cpu_beta
+        );
+        for j in 0..k {
+            assert!(
+                (p[i * k + j] - cpu_p[j]).abs() < 1e-4,
+                "row {i} slot {j}: {} vs {}",
+                p[i * k + j],
+                cpu_p[j]
+            );
+        }
+        // Row sums to 1.
+        let s: f32 = p[i * k..(i + 1) * k].iter().sum();
+        assert!((s - 1.0).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn xla_pca_project_matches_cpu() {
+    require_artifacts!();
+    let eng = engine();
+    let pool = ThreadPool::new(2);
+    let (n, d, k) = (150usize, 784usize, 50usize);
+    let mut rng = Pcg32::seeded(6);
+    let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+    let pca = bhsne::pca::fit(&pool, &x, n, d, k, 7);
+    let xla = eng.pca_project(&x, n, d, &pca.mean, &pca.components, k).unwrap();
+    let cpu = bhsne::pca::transform(&pool, &pca, &x, n);
+    for i in 0..n * k {
+        assert!(
+            (xla[i] - cpu[i]).abs() < 1e-3 + 1e-3 * cpu[i].abs(),
+            "i={i}: xla {} cpu {}",
+            xla[i],
+            cpu[i]
+        );
+    }
+}
+
+#[test]
+fn xla_dist_chunk_matches_cpu() {
+    require_artifacts!();
+    let eng = engine();
+    let (m, n, d) = (100usize, 800usize, 50usize);
+    let mut rng = Pcg32::seeded(8);
+    let q: Vec<f32> = (0..m * d).map(|_| rng.normal() as f32).collect();
+    let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+    let out = eng.dist_chunk(&q, m, &x, n, d).unwrap();
+    for i in (0..m).step_by(17) {
+        for j in (0..n).step_by(37) {
+            let mut want = 0f32;
+            for t in 0..d {
+                let diff = q[i * d + t] - x[j * d + t];
+                want += diff * diff;
+            }
+            let got = out[i * n + j];
+            assert!(
+                (got - want).abs() < 1e-2 + 1e-4 * want,
+                "({i},{j}): xla {got} cpu {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn end_to_end_embedding_with_xla_backend() {
+    require_artifacts!();
+    use bhsne::data::synthetic::{gaussian_mixture, SyntheticSpec};
+    use bhsne::runtime::XlaAttractive;
+    use bhsne::sne::{TsneConfig, TsneRunner};
+
+    let data = gaussian_mixture(&SyntheticSpec { n: 400, dim: 10, classes: 4, seed: 11, ..Default::default() });
+    let cfg = TsneConfig { iters: 100, exaggeration_iters: 30, cost_every: 50, seed: 1, ..Default::default() };
+
+    // CPU run.
+    let mut cpu_runner = TsneRunner::new(cfg.clone());
+    let y_cpu = cpu_runner.run(&data.x, data.dim).unwrap();
+
+    // XLA-attractive run.
+    let mut xla_runner = TsneRunner::new(cfg);
+    xla_runner.set_attractive_backend(Box::new(XlaAttractive::new(Rc::new(engine()))));
+    let y_xla = xla_runner.run(&data.x, data.dim).unwrap();
+
+    // t-SNE dynamics are chaotic: the XLA path accumulates attractive
+    // forces in f32 while the CPU path uses f64, so trajectories diverge
+    // in *position* (cluster layout is rotation/permutation-free anyway).
+    // What must agree is embedding QUALITY: final KL and 1-NN error.
+    let (k1, k2) = (cpu_runner.stats.final_kl.unwrap(), xla_runner.stats.final_kl.unwrap());
+    assert!(
+        (k1 - k2).abs() < 0.15 * k1.abs().max(0.1),
+        "KL diverged: cpu {k1} vs xla {k2}"
+    );
+    let pool = ThreadPool::new(2);
+    let e_cpu = bhsne::eval::one_nn_error(&pool, &y_cpu, 2, &data.labels);
+    let e_xla = bhsne::eval::one_nn_error(&pool, &y_xla, 2, &data.labels);
+    assert!(
+        (e_cpu - e_xla).abs() < 0.1,
+        "1-NN error diverged: cpu {e_cpu} vs xla {e_xla}"
+    );
+    assert!(y_xla.iter().all(|v| v.is_finite()));
+}
