@@ -1,14 +1,20 @@
 //! Micro-benchmarks of the per-iteration hot paths — the §Perf working
-//! set: quadtree build, BH repulsion traversal at several θ, attractive
-//! forces (CPU vs XLA artifact), vp-tree build + all-kNN, perplexity
-//! solve, and the dense exact repulsion (CPU vs XLA/Pallas artifact).
+//! set: Morton-ordered quadtree build (serial vs pool-parallel), BH
+//! repulsion traversal at several θ, the combined build+traverse
+//! iteration cost, attractive forces (CPU vs XLA artifact), vp-tree
+//! build + all-kNN, perplexity solve, and the dense exact repulsion.
+//!
+//! Besides the human-readable table, the run always writes
+//! `BENCH_micro_hotpath.json` with normalized ns/point figures
+//! (tree-build, force-eval, end-to-end iteration) so CI can archive the
+//! perf trajectory across commits.
 //!
 //! Run: `cargo bench --bench micro_hotpath [-- --quick --json]`
 
 use bhsne::runtime::{Runtime, SneEngine};
 use bhsne::sne::gradient;
 use bhsne::sne::sparse::Csr;
-use bhsne::spatial::QuadTree;
+use bhsne::spatial::{CellSizeMode, QuadTree};
 use bhsne::util::bench::{time_reps, BenchOpts, Table};
 use bhsne::util::{Pcg32, ThreadPool};
 use bhsne::vptree::VpTree;
@@ -37,14 +43,24 @@ fn random_p(n: usize, per_row: usize, seed: u64) -> Csr {
 fn main() {
     bhsne::util::logger::init(Some(log::LevelFilter::Warn));
     let opts = BenchOpts::from_env();
+    // The tree/force sections run at the acceptance-scale N (50k, 2-D);
+    // the kNN/perplexity sections keep the smaller historical size so a
+    // full run stays in tens of seconds. The quick size stays above the
+    // parallel-build threshold (8k) so CI's archived JSON always measures
+    // the parallel path, not the serial fallback.
+    let n_tree = opts.pick(50_000usize, 10_000);
     let n = opts.pick(10_000usize, 2_000);
     let reps = opts.pick(7usize, 3);
     let pool = ThreadPool::for_host();
+    let yt = random_embedding(n_tree, 1);
     let y = random_embedding(n, 1);
     let p = random_p(n, 45, 2);
 
     let mut table = Table::new(
-        &format!("micro: per-iteration hot paths (N={n}, {} threads)", pool.n_threads()),
+        &format!(
+            "micro: per-iteration hot paths (N_tree={n_tree}, N={n}, {} threads)",
+            pool.n_threads()
+        ),
         &["op", "median_ms", "p10_ms", "p90_ms"],
     );
     let mut push = |name: &str, (med, p10, p90): (f64, f64, f64)| {
@@ -56,22 +72,43 @@ fn main() {
         ]);
     };
 
-    // Quadtree build.
-    push("quadtree_build", time_reps(1, reps, || {
-        let t = QuadTree::build(&y, n);
+    // Quadtree build: Morton-ordered bottom-up, serial vs pool-parallel.
+    let (build_serial, sp10, sp90) = time_reps(1, reps, || {
+        let t = QuadTree::build(&yt, n_tree);
         std::hint::black_box(t.len());
-    }));
+    });
+    push("tree_build_serial", (build_serial, sp10, sp90));
+    let (build_par, pp10, pp90) = time_reps(1, reps, || {
+        let t = QuadTree::build_parallel(&pool, &yt, n_tree, CellSizeMode::Diagonal);
+        std::hint::black_box(t.len());
+    });
+    push("tree_build_parallel", (build_par, pp10, pp90));
 
     // BH repulsion traversal at several theta (tree built once).
-    let tree = QuadTree::build(&y, n);
+    let tree = QuadTree::build_parallel(&pool, &yt, n_tree, CellSizeMode::Diagonal);
+    let mut force_eval = f64::NAN;
     for theta in [0.2f32, 0.5, 1.0] {
-        let mut rep = vec![0f64; n * 2];
-        push(&format!("bh_repulsion_theta{theta}"), time_reps(1, reps, || {
+        let mut rep = vec![0f64; n_tree * 2];
+        let timing = time_reps(1, reps, || {
             rep.iter_mut().for_each(|v| *v = 0.0);
-            let z = gradient::repulsive_bh_with_tree::<2>(&pool, &tree, &y, n, theta, &mut rep);
+            let z = gradient::repulsive_bh_with_tree::<2>(&pool, &tree, &yt, n_tree, theta, &mut rep);
             std::hint::black_box(z);
-        }));
+        });
+        if theta == 0.5 {
+            force_eval = timing.0;
+        }
+        push(&format!("bh_repulsion_theta{theta}"), timing);
     }
+
+    // End-to-end repulsive iteration: rebuild the tree and traverse it,
+    // exactly what the optimizer pays per iteration at θ = 0.5.
+    let mut rep = vec![0f64; n_tree * 2];
+    let (iter_secs, ip10, ip90) = time_reps(1, reps, || {
+        rep.iter_mut().for_each(|v| *v = 0.0);
+        let z = gradient::repulsive_bh::<2>(&pool, &yt, n_tree, 0.5, CellSizeMode::Diagonal, &mut rep);
+        std::hint::black_box(z);
+    });
+    push("bh_iteration_build_plus_eval", (iter_secs, ip10, ip90));
 
     // Attractive forces, CPU.
     let mut attr = vec![0f64; n * 2];
@@ -131,4 +168,29 @@ fn main() {
     }));
 
     table.emit(&opts);
+
+    // Machine-readable capture for CI: normalized ns/point hot-path costs.
+    let per_point = |secs: f64| secs * 1e9 / n_tree as f64;
+    let json = format!(
+        concat!(
+            "{{\"bench\":\"micro_hotpath\",\"n\":{},\"threads\":{},",
+            "\"tree_build_serial_ns_per_point\":{:.2},",
+            "\"tree_build_parallel_ns_per_point\":{:.2},",
+            "\"force_eval_theta05_ns_per_point\":{:.2},",
+            "\"iter_build_plus_eval_ms\":{:.4},",
+            "\"table\":{}}}"
+        ),
+        n_tree,
+        pool.n_threads(),
+        per_point(build_serial),
+        per_point(build_par),
+        per_point(force_eval),
+        iter_secs * 1e3,
+        table.to_json(),
+    );
+    let path = "BENCH_micro_hotpath.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }

@@ -1,6 +1,10 @@
 //! Quickstart: embed a small Gaussian-mixture dataset with Barnes-Hut-SNE
 //! and print quality metrics.
 //!
+//! Doubles as the CI smoke test: the run asserts that the KL cost is
+//! finite and decreased over training, exiting non-zero otherwise. Set
+//! `QUICKSTART_QUICK=1` for the reduced-size CI configuration.
+//!
 //!     cargo run --release --example quickstart
 
 use bhsne::data::synthetic::{gaussian_mixture, SyntheticSpec};
@@ -9,10 +13,11 @@ use bhsne::sne::{TsneConfig, TsneRunner};
 
 fn main() -> anyhow::Result<()> {
     bhsne::util::logger::init(None);
+    let quick = std::env::var("QUICKSTART_QUICK").is_ok_and(|v| v == "1");
 
-    // 1. Data: 2000 points, 5 classes, 20 dims.
+    // 1. Data: 2000 points, 5 classes, 20 dims (reduced under QUICK).
     let data = gaussian_mixture(&SyntheticSpec {
-        n: 2000,
+        n: if quick { 600 } else { 2000 },
         dim: 20,
         classes: 5,
         seed: 7,
@@ -21,11 +26,24 @@ fn main() -> anyhow::Result<()> {
 
     // 2. Configure BH-SNE exactly like the paper's experiments:
     //    perplexity 30, theta 0.5, eta 200, alpha 12 for 250 iterations.
-    let cfg = TsneConfig { iters: 500, ..Default::default() };
+    let iters = if quick { 250 } else { 500 };
+    let cfg = TsneConfig {
+        iters,
+        exaggeration_iters: 250.min(iters / 2),
+        cost_every: 25,
+        ..Default::default()
+    };
+    let exaggeration_iters = cfg.exaggeration_iters;
     let mut runner = TsneRunner::new(cfg);
-    runner.set_observer(Box::new(|s, _y| {
+    // Track the KL trajectory for the smoke assertions below.
+    use std::cell::RefCell;
+    use std::rc::Rc;
+    let kls: Rc<RefCell<Vec<(usize, f64)>>> = Rc::new(RefCell::new(Vec::new()));
+    let kls_obs = Rc::clone(&kls);
+    runner.set_observer(Box::new(move |s, _y| {
         if let Some(kl) = s.kl {
             println!("iter {:4}  KL {:.4}  |grad| {:.3e}", s.iter, kl, s.grad_norm);
+            kls_obs.borrow_mut().push((s.iter, kl));
         }
     }));
 
@@ -37,9 +55,30 @@ fn main() -> anyhow::Result<()> {
     println!("\ninput similarities: {:.2}s (kNN {:.2}s)",
         runner.stats.input_stage.knn_secs + runner.stats.input_stage.perplexity_secs,
         runner.stats.input_stage.knn_secs);
-    println!("gradient descent  : {:.2}s", runner.stats.gradient_secs);
+    println!("gradient descent  : {:.2}s (tree {:.2}s, traversal {:.2}s)",
+        runner.stats.gradient_secs, runner.stats.tree_secs, runner.stats.repulsion_secs);
     println!("final KL          : {:.4}", runner.stats.final_kl.unwrap());
     println!("1-NN error        : {:.4} (chance would be {:.2})", err, 4.0 / 5.0);
+
+    // 5. Smoke assertions (CI gate): embedding finite, KL finite, and
+    //    decreasing across the un-exaggerated phase. The baseline is the
+    //    FIRST measurement taken after early exaggeration ends — KLs from
+    //    the exaggeration phase are computed against the scaled P and
+    //    would make the comparison vacuous.
+    anyhow::ensure!(y.iter().all(|v| v.is_finite()), "embedding contains non-finite values");
+    let kls = kls.borrow();
+    anyhow::ensure!(kls.iter().all(|&(_, k)| k.is_finite()), "KL went non-finite: {kls:?}");
+    let post: Vec<f64> =
+        kls.iter().filter(|&&(it, _)| it >= exaggeration_iters).map(|&(_, k)| k).collect();
+    anyhow::ensure!(post.len() >= 3, "too few post-exaggeration KL measurements: {}", post.len());
+    let first = post[0];
+    let last = *post.last().unwrap();
+    anyhow::ensure!(
+        last < first,
+        "KL did not decrease over training: {first:.4} -> {last:.4}"
+    );
+    println!("smoke check       : KL {first:.4} -> {last:.4} (decreasing, finite)");
+
     bhsne::data::io::write_tsv("out/quickstart.tsv", &y, 2, &data.labels)?;
     println!("embedding written to out/quickstart.tsv");
     Ok(())

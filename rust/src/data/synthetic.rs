@@ -255,7 +255,7 @@ mod tests {
         assert_eq!(norb_like(&spec).dim, 9216);
         assert_eq!(timit_like(&spec).dim, 39);
         assert_eq!(norb_like(&spec).n_classes(), 5);
-        assert_eq!(timit_like(&spec).n_classes() <= 39, true);
+        assert!(timit_like(&spec).n_classes() <= 39);
     }
 
     #[test]

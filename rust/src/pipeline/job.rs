@@ -165,6 +165,8 @@ pub fn run_job(cfg: JobConfig) -> anyhow::Result<JobResult> {
     metrics.observe("knn_secs", runner.stats.input_stage.knn_secs);
     metrics.observe("perplexity_secs", runner.stats.input_stage.perplexity_secs);
     metrics.observe("gradient_secs", runner.stats.gradient_secs);
+    metrics.observe("tree_secs", runner.stats.tree_secs);
+    metrics.observe("repulsion_secs", runner.stats.repulsion_secs);
 
     // ---- Stage 4: evaluate ----
     let sw = Stopwatch::start();

@@ -113,7 +113,8 @@ pub fn repulsive_exact<const DIM: usize>(pool: &ThreadPool, y: &[f32], n: usize,
     z_parts.iter().sum()
 }
 
-/// Repulsive term via Barnes-Hut: builds the quadtree/octree and runs the
+/// Repulsive term via Barnes-Hut: builds the quadtree/octree (Morton
+/// sort + bottom-up assembly, parallel on the pool) and runs the
 /// per-point traversal in parallel. Returns Z.
 pub fn repulsive_bh<const DIM: usize>(
     pool: &ThreadPool,
@@ -123,7 +124,7 @@ pub fn repulsive_bh<const DIM: usize>(
     mode: CellSizeMode,
     out: &mut [f64],
 ) -> f64 {
-    let tree = BhTree::<DIM>::build_with(y, n, mode);
+    let tree = BhTree::<DIM>::build_parallel(pool, y, n, mode);
     repulsive_bh_with_tree(pool, &tree, y, n, theta, out)
 }
 
@@ -186,7 +187,7 @@ pub fn gradient<const DIM: usize>(
             repulsive_bh::<DIM>(pool, y, n, theta, mode, rep_scratch)
         }
         RepulsionMethod::DualTree { rho } => {
-            let mut tree = BhTree::<DIM>::build_with(y, n, mode);
+            let mut tree = BhTree::<DIM>::build_parallel(pool, y, n, mode);
             tree.repulsion_dual(rho, rep_scratch)
         }
     };

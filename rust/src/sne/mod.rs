@@ -133,6 +133,12 @@ pub struct IterStats {
 pub struct RunStats {
     pub input_stage: input::InputStageStats,
     pub gradient_secs: f64,
+    /// Cumulative Barnes-Hut tree rebuild time across all iterations
+    /// (Morton sort + bottom-up assembly; zero for the exact method).
+    pub tree_secs: f64,
+    /// Cumulative repulsive-force evaluation time across all iterations
+    /// (tree traversal, dual-tree walk, or exact O(N²) sum).
+    pub repulsion_secs: f64,
     pub total_secs: f64,
     pub final_kl: Option<f64>,
     pub iters: usize,
@@ -242,6 +248,8 @@ impl TsneRunner {
         let mut attr = vec![0f64; n * dim];
         let mut rep = vec![0f64; n * dim];
         let mut last_kl = None;
+        let mut tree_secs = 0f64;
+        let mut repulsion_secs = 0f64;
 
         for it in 0..self.config.iters {
             let it_sw = Stopwatch::start();
@@ -251,28 +259,48 @@ impl TsneRunner {
             }
 
             // Gradient: attractive via the pluggable backend, repulsive via
-            // the configured tree strategy.
+            // the configured tree strategy. The Barnes-Hut tree is rebuilt
+            // once per iteration (Morton sort + parallel bottom-up
+            // assembly) and shared by the whole traversal pass; the two
+            // phases are timed separately so the pipeline can report where
+            // the iteration budget goes.
             self.attractive.compute(&self.pool, p, &y, dim, &mut attr);
             rep.iter_mut().for_each(|v| *v = 0.0);
+            let rep_sw = Stopwatch::start();
             let z = match (dim, method) {
                 (2, RepulsionMethod::Exact) => gradient::repulsive_exact::<2>(&self.pool, &y, n, &mut rep),
                 (3, RepulsionMethod::Exact) => gradient::repulsive_exact::<3>(&self.pool, &y, n, &mut rep),
                 (2, RepulsionMethod::BarnesHut { theta }) => {
-                    gradient::repulsive_bh::<2>(&self.pool, &y, n, theta, self.config.cell_size, &mut rep)
+                    let sw = Stopwatch::start();
+                    let tree =
+                        crate::spatial::BhTree::<2>::build_parallel(&self.pool, &y, n, self.config.cell_size);
+                    tree_secs += sw.elapsed_secs();
+                    gradient::repulsive_bh_with_tree::<2>(&self.pool, &tree, &y, n, theta, &mut rep)
                 }
                 (3, RepulsionMethod::BarnesHut { theta }) => {
-                    gradient::repulsive_bh::<3>(&self.pool, &y, n, theta, self.config.cell_size, &mut rep)
+                    let sw = Stopwatch::start();
+                    let tree =
+                        crate::spatial::BhTree::<3>::build_parallel(&self.pool, &y, n, self.config.cell_size);
+                    tree_secs += sw.elapsed_secs();
+                    gradient::repulsive_bh_with_tree::<3>(&self.pool, &tree, &y, n, theta, &mut rep)
                 }
                 (2, RepulsionMethod::DualTree { rho }) => {
-                    let mut tree = crate::spatial::BhTree::<2>::build_with(&y, n, self.config.cell_size);
+                    let sw = Stopwatch::start();
+                    let mut tree =
+                        crate::spatial::BhTree::<2>::build_parallel(&self.pool, &y, n, self.config.cell_size);
+                    tree_secs += sw.elapsed_secs();
                     tree.repulsion_dual(rho, &mut rep)
                 }
                 (3, RepulsionMethod::DualTree { rho }) => {
-                    let mut tree = crate::spatial::BhTree::<3>::build_with(&y, n, self.config.cell_size);
+                    let sw = Stopwatch::start();
+                    let mut tree =
+                        crate::spatial::BhTree::<3>::build_parallel(&self.pool, &y, n, self.config.cell_size);
+                    tree_secs += sw.elapsed_secs();
                     tree.repulsion_dual(rho, &mut rep)
                 }
                 _ => unreachable!(),
             };
+            repulsion_secs += rep_sw.elapsed_secs();
             let zinv = 1.0 / z.max(f64::MIN_POSITIVE);
             let mut gnorm = 0f64;
             for i in 0..n * dim {
@@ -315,6 +343,10 @@ impl TsneRunner {
             p.scale(1.0 / ex);
         }
         self.stats.gradient_secs = sw.elapsed_secs();
+        // `repulsion_secs` was measured around the whole repulsive phase;
+        // report traversal time net of the tree rebuilds timed within it.
+        self.stats.tree_secs = tree_secs;
+        self.stats.repulsion_secs = (repulsion_secs - tree_secs).max(0.0);
         self.stats.final_kl = last_kl;
         self.stats.iters = self.config.iters;
         Ok(y)

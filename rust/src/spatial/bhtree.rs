@@ -1,5 +1,16 @@
 //! Barnes-Hut tree: flat-array quadtree/octree with center-of-mass upkeep
 //! and the repulsive-force traversal of Barnes-Hut-SNE §4.2.
+//!
+//! Construction is Morton-ordered and bottom-up (Chaudhary et al. 2022,
+//! "Accelerating Barnes-Hut t-SNE on Multi-Core CPUs"): points are
+//! quantized to a Z-order key, sorted once, and the tree is assembled from
+//! the sorted array — every node's points form one contiguous range, so
+//! subtrees build independently and in parallel on the
+//! [`crate::util::ThreadPool`]. [`BhTree::build_parallel`] is the
+//! per-iteration hot path; [`BhTree::build`] runs the same algorithm
+//! serially.
+
+use crate::util::ThreadPool;
 
 /// How the cell size `r_cell` in the summary condition (Eq. 9) is
 /// measured.
@@ -16,7 +27,7 @@ const NO_CHILD: u32 = u32::MAX;
 
 /// One cell. Children are allocated contiguously, so a single
 /// `first_child` index addresses all 2^DIM of them.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 struct Node<const DIM: usize> {
     center: [f32; DIM],
     half: [f32; DIM],
@@ -51,13 +62,6 @@ impl<const DIM: usize> Node<DIM> {
     #[inline]
     fn is_leaf(&self) -> bool {
         self.first_child == NO_CHILD
-    }
-
-    #[inline]
-    fn contains(&self, p: &[f32; DIM]) -> bool {
-        (0..DIM).all(|d| {
-            p[d] >= self.center[d] - self.half[d] && p[d] <= self.center[d] + self.half[d]
-        })
     }
 
     /// Center of mass (count must be > 0).
@@ -107,7 +111,8 @@ pub struct NodeStats {
 /// A Barnes-Hut tree over an `n × DIM` row-major embedding.
 ///
 /// `DIM = 2` is the paper's quadtree, `DIM = 3` the octree used for 3-D
-/// embeddings. Construction inserts points one at a time (O(N log N));
+/// embeddings. Construction sorts the points into Morton order and builds
+/// the flat node array bottom-up (O(N log N), parallel over subtrees);
 /// [`BhTree::repulsion`] runs the depth-first "summary" traversal of §4.2,
 /// returning the un-normalized repulsive force and this point's
 /// contribution to the normalizer `Z`.
@@ -120,8 +125,8 @@ pub struct BhTree<const DIM: usize> {
     order: Vec<u32>,
     /// Per-node `[start, end)` into `order` (parallel to `nodes`).
     ranges: Vec<(u32, u32)>,
-    /// Number of insertions that hit the depth cap with non-coincident
-    /// points (numerically indistinguishable positions).
+    /// Points that collapsed into a leaf despite a distinct position
+    /// (coordinates indistinguishable at Morton-key resolution).
     depth_cap_hits: usize,
     // ---- traversal SoA, finalized once after construction (§Perf) ----
     // The DFS touches ~24 bytes per visited node instead of the full
@@ -134,60 +139,70 @@ pub struct BhTree<const DIM: usize> {
     t_point: Vec<u32>,
 }
 
-/// Beyond this depth cells are smaller than f32 resolution for any sane
-/// embedding; further splitting is numerically meaningless, so
-/// near-coincident points collapse into a multiplicity instead.
-const MAX_DEPTH: usize = 48;
+/// Disjoint-write raw-pointer wrapper for pool closures (soundness
+/// argument lives at each use site, same idiom as the gradient module).
+struct RawMut<T>(*mut T);
+unsafe impl<T: Send> Send for RawMut<T> {}
+unsafe impl<T: Send> Sync for RawMut<T> {}
+
+/// Build ranges at least this large use the parallel path.
+const PAR_BUILD_MIN: usize = 8 * 1024;
 
 impl<const DIM: usize> BhTree<DIM> {
     /// Number of children per interior node.
     pub const FANOUT: usize = 1 << DIM;
 
-    /// Build the tree by inserting the `n` points of `y` one at a time.
+    /// Morton key bits per dimension (31 for the quadtree, 21 for the
+    /// octree — the interleaved key must fit in a u64). Cells smaller than
+    /// `extent / 2^KEY_BITS` cannot be refined further; points that close
+    /// collapse into a multiplicity, like the reference implementation's
+    /// depth cap.
+    pub const KEY_BITS: usize = 63 / DIM;
+
+    /// Build the tree serially (Morton-ordered, bottom-up).
     pub fn build(y: &[f32], n: usize) -> Self {
         Self::build_with(y, n, CellSizeMode::default())
     }
 
-    /// Build with an explicit cell-size mode.
+    /// Build serially with an explicit cell-size mode.
     pub fn build_with(y: &[f32], n: usize, mode: CellSizeMode) -> Self {
+        Self::build_impl(y, n, mode, None)
+    }
+
+    /// Build on the thread pool: parallel bounding box, key generation,
+    /// merge sort, and subtree assembly. Produces bit-identical results to
+    /// the serial build (the sort key includes the dataset index, so the
+    /// ordering is total and scheduling cannot perturb anything).
+    pub fn build_parallel(pool: &ThreadPool, y: &[f32], n: usize, mode: CellSizeMode) -> Self {
+        Self::build_impl(y, n, mode, Some(pool))
+    }
+
+    fn build_impl(y: &[f32], n: usize, mode: CellSizeMode, pool: Option<&ThreadPool>) -> Self {
         assert!(y.len() >= n * DIM);
         assert!(n > 0, "cannot build tree over zero points");
-        let mut lo = [f32::INFINITY; DIM];
-        let mut hi = [f32::NEG_INFINITY; DIM];
-        for i in 0..n {
-            for d in 0..DIM {
-                let v = y[i * DIM + d];
-                lo[d] = lo[d].min(v);
-                hi[d] = hi[d].max(v);
+        let pool = pool.filter(|p| p.n_threads() > 1 && n >= PAR_BUILD_MIN);
+        let (center, half) = bounding_cell::<DIM>(y, n, pool);
+        let sorted = morton_sorted::<DIM>(y, n, &center, &half, pool);
+        let (nodes, depth_cap_hits) = match pool {
+            Some(pool) => build_nodes_parallel::<DIM>(pool, y, &sorted, center, half),
+            None => {
+                let b = SubtreeBuilder::<DIM>::run(y, &sorted, center, half, 0, n, 0);
+                (b.nodes, b.depth_cap_hits)
             }
-        }
-        let mut center = [0f32; DIM];
-        let mut half = [0f32; DIM];
-        for d in 0..DIM {
-            center[d] = 0.5 * (lo[d] + hi[d]);
-            // Inflate so boundary points are strictly inside; floor the
-            // half-width so a degenerate (all-equal) axis still subdivides.
-            half[d] = ((hi[d] - lo[d]) * 0.5).max(1e-5) * (1.0 + 1e-4);
-        }
+        };
         let mut tree = BhTree {
-            nodes: Vec::with_capacity(2 * n),
+            nodes,
             mode,
             n,
             order: Vec::new(),
             ranges: Vec::new(),
-            depth_cap_hits: 0,
+            depth_cap_hits,
             t_com: Vec::new(),
             t_r2: Vec::new(),
             t_count: Vec::new(),
             t_first: Vec::new(),
             t_point: Vec::new(),
         };
-        tree.nodes.push(Node::empty(center, half));
-        for i in 0..n {
-            let mut p = [0f32; DIM];
-            p.copy_from_slice(&y[i * DIM..(i + 1) * DIM]);
-            tree.insert(i as u32, p);
-        }
         tree.finalize();
         tree
     }
@@ -210,91 +225,6 @@ impl<const DIM: usize> BhTree<DIM> {
         }
     }
 
-    /// Insert one point, descending from the root, splitting occupied
-    /// leaves and updating COM/count along the path.
-    fn insert(&mut self, index: u32, p: [f32; DIM]) {
-        debug_assert!(self.nodes[0].contains(&p), "point outside root cell");
-        let mut cur = 0u32;
-        let mut depth = 0usize;
-        loop {
-            {
-                let node = &mut self.nodes[cur as usize];
-                node.count += 1;
-                for d in 0..DIM {
-                    node.com_sum[d] += p[d] as f64;
-                }
-            }
-            let node = self.nodes[cur as usize];
-            if node.is_leaf() {
-                if node.count == 1 {
-                    let m = &mut self.nodes[cur as usize];
-                    m.point = index;
-                    m.multiplicity = 1;
-                    m.pos = p;
-                    return;
-                }
-                // Occupied leaf: coincident (or unsplittably close) points
-                // collapse into the multiplicity, as in the reference code.
-                let same = (0..DIM).all(|d| node.pos[d] == p[d]);
-                if same || depth >= MAX_DEPTH {
-                    if !same {
-                        self.depth_cap_hits += 1;
-                    }
-                    self.nodes[cur as usize].multiplicity += 1;
-                    return;
-                }
-                // Split: push the stored point down one level, then keep
-                // descending with the new point.
-                self.subdivide(cur);
-                let child = self.child_for(cur, &node.pos);
-                {
-                    let c = &mut self.nodes[child as usize];
-                    c.count = node.multiplicity;
-                    for d in 0..DIM {
-                        c.com_sum[d] = node.pos[d] as f64 * node.multiplicity as f64;
-                    }
-                    c.point = node.point;
-                    c.multiplicity = node.multiplicity;
-                    c.pos = node.pos;
-                }
-                let m = &mut self.nodes[cur as usize];
-                m.point = u32::MAX;
-                m.multiplicity = 0;
-            }
-            cur = self.child_for(cur, &p);
-            depth += 1;
-        }
-    }
-
-    /// Allocate 2^DIM children for `cur`.
-    fn subdivide(&mut self, cur: u32) {
-        let parent = self.nodes[cur as usize];
-        let first = self.nodes.len() as u32;
-        for q in 0..Self::FANOUT {
-            let mut c = [0f32; DIM];
-            let mut h = [0f32; DIM];
-            for d in 0..DIM {
-                h[d] = parent.half[d] * 0.5;
-                c[d] = parent.center[d] + if (q >> d) & 1 == 1 { h[d] } else { -h[d] };
-            }
-            self.nodes.push(Node::empty(c, h));
-        }
-        self.nodes[cur as usize].first_child = first;
-    }
-
-    /// Child slot of `cur` containing position `p`.
-    #[inline]
-    fn child_for(&self, cur: u32, p: &[f32; DIM]) -> u32 {
-        let node = &self.nodes[cur as usize];
-        let mut q = 0usize;
-        for d in 0..DIM {
-            if p[d] >= node.center[d] {
-                q |= 1 << d;
-            }
-        }
-        node.first_child + q as u32
-    }
-
     /// Number of points inserted.
     pub fn len(&self) -> usize {
         self.n
@@ -304,7 +234,8 @@ impl<const DIM: usize> BhTree<DIM> {
         self.n == 0
     }
 
-    /// Insertions that collapsed non-identical points at the depth cap.
+    /// Points that collapsed with a non-identical position (key-resolution
+    /// analogue of the reference implementation's depth cap).
     pub fn depth_cap_hits(&self) -> usize {
         self.depth_cap_hits
     }
@@ -325,8 +256,8 @@ impl<const DIM: usize> BhTree<DIM> {
         let theta2 = theta * theta;
         let mut z = 0f64;
         // Explicit DFS stack of node ids. Bound: at each level at most
-        // FANOUT-1 siblings stay on the stack, so MAX_DEPTH*(FANOUT-1)+1
-        // = 337 for the octree; 512 gives headroom.
+        // FANOUT-1 siblings stay on the stack, so KEY_BITS*(FANOUT-1)+1
+        // = 148 for the octree; 512 gives headroom.
         let mut stack = [0u32; 512];
         let mut top = 0usize;
         stack[top] = 0;
@@ -562,6 +493,447 @@ impl<const DIM: usize> BhTree<DIM> {
             }
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Morton-ordered bottom-up construction.
+// ---------------------------------------------------------------------------
+
+/// Root cell (center, half-widths) of the point set: the bounding box,
+/// inflated so boundary points are strictly inside, with a floored
+/// half-width so a degenerate (all-equal) axis still subdivides.
+fn bounding_cell<const DIM: usize>(
+    y: &[f32],
+    n: usize,
+    pool: Option<&ThreadPool>,
+) -> ([f32; DIM], [f32; DIM]) {
+    let mut lo = [f32::INFINITY; DIM];
+    let mut hi = [f32::NEG_INFINITY; DIM];
+    match pool {
+        Some(pool) => {
+            // Per-chunk partial boxes, combined in slot order (min/max is
+            // order-independent anyway, but keep the reduction fixed).
+            const CHUNK: usize = 16 * 1024;
+            let n_chunks = n.div_ceil(CHUNK);
+            let mut parts = vec![(lo, hi); n_chunks];
+            let pc = RawMut(parts.as_mut_ptr());
+            pool.scope_chunks(n, CHUNK, |a, b| {
+                let _ = &pc;
+                let mut plo = [f32::INFINITY; DIM];
+                let mut phi = [f32::NEG_INFINITY; DIM];
+                for i in a..b {
+                    for d in 0..DIM {
+                        let v = y[i * DIM + d];
+                        plo[d] = plo[d].min(v);
+                        phi[d] = phi[d].max(v);
+                    }
+                }
+                // SAFETY: one chunk writes exactly one slot.
+                unsafe { *pc.0.add(a / CHUNK) = (plo, phi) };
+            });
+            for (plo, phi) in parts {
+                for d in 0..DIM {
+                    lo[d] = lo[d].min(plo[d]);
+                    hi[d] = hi[d].max(phi[d]);
+                }
+            }
+        }
+        None => {
+            for i in 0..n {
+                for d in 0..DIM {
+                    let v = y[i * DIM + d];
+                    lo[d] = lo[d].min(v);
+                    hi[d] = hi[d].max(v);
+                }
+            }
+        }
+    }
+    let mut center = [0f32; DIM];
+    let mut half = [0f32; DIM];
+    for d in 0..DIM {
+        center[d] = 0.5 * (lo[d] + hi[d]);
+        half[d] = ((hi[d] - lo[d]) * 0.5).max(1e-5) * (1.0 + 1e-4);
+    }
+    (center, half)
+}
+
+/// Interleave the quantized per-axis cells of one point into a Morton key.
+/// Bit `b` of axis `d` lands at key bit `b*DIM + d`, so the top DIM bits
+/// are the root-level child index and each deeper level reads the next
+/// DIM bits down — sorted keys give contiguous child ranges at every
+/// level, with the child order matching `q |= 1 << d` for the upper half.
+#[inline]
+fn morton_key<const DIM: usize>(p: &[f32; DIM], origin: &[f64; DIM], inv_step: &[f64; DIM]) -> u64 {
+    let bits = BhTree::<DIM>::KEY_BITS;
+    let max_cell = (1u64 << bits) - 1;
+    let mut key = 0u64;
+    for d in 0..DIM {
+        let cell = ((p[d] as f64 - origin[d]) * inv_step[d]) as i64;
+        let cell = (cell.max(0) as u64).min(max_cell);
+        for b in 0..bits {
+            key |= ((cell >> b) & 1) << (b * DIM + d);
+        }
+    }
+    key
+}
+
+/// Compute and sort the `(key, index)` pairs. The index participates in
+/// the ordering, making it total: ties between coincident points resolve
+/// to dataset order, exactly like the old first-arrival insertion, and
+/// serial/parallel sorts agree bit-for-bit.
+fn morton_sorted<const DIM: usize>(
+    y: &[f32],
+    n: usize,
+    center: &[f32; DIM],
+    half: &[f32; DIM],
+    pool: Option<&ThreadPool>,
+) -> Vec<(u64, u32)> {
+    let mut origin = [0f64; DIM];
+    let mut inv_step = [0f64; DIM];
+    for d in 0..DIM {
+        origin[d] = center[d] as f64 - half[d] as f64;
+        inv_step[d] = (1u64 << BhTree::<DIM>::KEY_BITS) as f64 / (2.0 * half[d] as f64);
+    }
+    let mut keys: Vec<(u64, u32)> = vec![(0, 0); n];
+    let key_at = |i: usize| {
+        let mut p = [0f32; DIM];
+        p.copy_from_slice(&y[i * DIM..(i + 1) * DIM]);
+        (morton_key::<DIM>(&p, &origin, &inv_step), i as u32)
+    };
+    match pool {
+        Some(pool) => {
+            let kc = RawMut(keys.as_mut_ptr());
+            pool.scope_chunks(n, 4096, |lo, hi| {
+                let _ = &kc;
+                for i in lo..hi {
+                    // SAFETY: disjoint indices across chunks.
+                    unsafe { *kc.0.add(i) = key_at(i) };
+                }
+            });
+            par_merge_sort(pool, &mut keys);
+        }
+        None => {
+            for (i, slot) in keys.iter_mut().enumerate() {
+                *slot = key_at(i);
+            }
+            keys.sort_unstable();
+        }
+    }
+    keys
+}
+
+/// Parallel merge sort: sort equal chunks on the pool, then merge pairs of
+/// runs (also on the pool) doubling the run width each round.
+fn par_merge_sort(pool: &ThreadPool, keys: &mut [(u64, u32)]) {
+    let n = keys.len();
+    let chunk = n.div_ceil(pool.n_threads().min(16)).max(4096);
+    if chunk >= n {
+        keys.sort_unstable();
+        return;
+    }
+    {
+        let kc = RawMut(keys.as_mut_ptr());
+        pool.scope_chunks(n, chunk, |lo, hi| {
+            let _ = &kc;
+            // SAFETY: chunks are disjoint ranges.
+            let run = unsafe { std::slice::from_raw_parts_mut(kc.0.add(lo), hi - lo) };
+            run.sort_unstable();
+        });
+    }
+    let mut scratch: Vec<(u64, u32)> = vec![(0, 0); n];
+    let mut width = chunk;
+    let mut in_keys = true;
+    while width < n {
+        {
+            let (src, dst): (&[(u64, u32)], &mut [(u64, u32)]) = if in_keys {
+                (&*keys, &mut scratch[..])
+            } else {
+                (&scratch[..], &mut *keys)
+            };
+            let dc = RawMut(dst.as_mut_ptr());
+            pool.scoped(|scope| {
+                let mut start = 0usize;
+                while start < n {
+                    let mid = (start + width).min(n);
+                    let end = (start + 2 * width).min(n);
+                    let dc = &dc;
+                    scope.run(move || {
+                        // SAFETY: each job owns dst[start..end]; jobs are
+                        // disjoint by construction.
+                        let out = unsafe {
+                            std::slice::from_raw_parts_mut(dc.0.add(start), end - start)
+                        };
+                        merge_runs(&src[start..mid], &src[mid..end], out);
+                    });
+                    start = end;
+                }
+            });
+        }
+        width *= 2;
+        in_keys = !in_keys;
+    }
+    if !in_keys {
+        keys.copy_from_slice(&scratch);
+    }
+}
+
+/// Two-pointer merge of sorted runs `a` and `b` into `out`.
+fn merge_runs(a: &[(u64, u32)], b: &[(u64, u32)], out: &mut [(u64, u32)]) {
+    debug_assert_eq!(a.len() + b.len(), out.len());
+    let (mut i, mut j) = (0usize, 0usize);
+    for slot in out.iter_mut() {
+        *slot = if i < a.len() && (j >= b.len() || a[i] <= b[j]) {
+            i += 1;
+            a[i - 1]
+        } else {
+            j += 1;
+            b[j - 1]
+        };
+    }
+}
+
+/// Bottom-up assembly of one subtree from a contiguous slice of the
+/// Morton-sorted point array. `nodes[0]` is the subtree root.
+struct SubtreeBuilder<'a, const DIM: usize> {
+    y: &'a [f32],
+    sorted: &'a [(u64, u32)],
+    nodes: Vec<Node<DIM>>,
+    depth_cap_hits: usize,
+}
+
+impl<'a, const DIM: usize> SubtreeBuilder<'a, DIM> {
+    const FANOUT: usize = 1 << DIM;
+
+    fn run(
+        y: &'a [f32],
+        sorted: &'a [(u64, u32)],
+        center: [f32; DIM],
+        half: [f32; DIM],
+        lo: usize,
+        hi: usize,
+        depth: usize,
+    ) -> Self {
+        let mut b = SubtreeBuilder { y, sorted, nodes: vec![Node::empty(center, half)], depth_cap_hits: 0 };
+        b.fill(0, lo, hi, depth);
+        b
+    }
+
+    #[inline]
+    fn pos(&self, idx: u32) -> [f32; DIM] {
+        let mut p = [0f32; DIM];
+        p.copy_from_slice(&self.y[idx as usize * DIM..(idx as usize + 1) * DIM]);
+        p
+    }
+
+    /// Fill node `id` (center/half already set) from `sorted[lo..hi]` at
+    /// tree depth `depth`. Recursion depth is bounded by KEY_BITS.
+    fn fill(&mut self, id: usize, lo: usize, hi: usize, depth: usize) {
+        let count = (hi - lo) as u32;
+        if count == 0 {
+            return;
+        }
+        let first_key = self.sorted[lo].0;
+        let last_key = self.sorted[hi - 1].0;
+        if count == 1 || first_key == last_key || depth >= BhTree::<DIM>::KEY_BITS {
+            // Leaf: one distinct position, or positions indistinguishable
+            // at key resolution (the depth-cap analogue) — collapse into a
+            // multiplicity. The stored index is the smallest in the range
+            // (ties sort by index), matching first-arrival insertion.
+            let first_idx = self.sorted[lo].1;
+            let p0 = self.pos(first_idx);
+            let mut com = [0f64; DIM];
+            for &(_, pi) in &self.sorted[lo..hi] {
+                let p = self.pos(pi);
+                for d in 0..DIM {
+                    com[d] += p[d] as f64;
+                }
+                if p != p0 {
+                    self.depth_cap_hits += 1;
+                }
+            }
+            let node = &mut self.nodes[id];
+            node.count = count;
+            node.com_sum = com;
+            node.point = first_idx;
+            node.multiplicity = count;
+            node.pos = p0;
+            return;
+        }
+        // Interior: allocate the 2^DIM contiguous children with the same
+        // halving arithmetic as the incremental builder used, then split
+        // the sorted range on this depth's Morton bit-plane.
+        let (center, half) = (self.nodes[id].center, self.nodes[id].half);
+        let first = self.nodes.len();
+        for q in 0..Self::FANOUT {
+            let mut c = [0f32; DIM];
+            let mut h = [0f32; DIM];
+            for d in 0..DIM {
+                h[d] = half[d] * 0.5;
+                c[d] = center[d] + if (q >> d) & 1 == 1 { h[d] } else { -h[d] };
+            }
+            self.nodes.push(Node::empty(c, h));
+        }
+        self.nodes[id].first_child = first as u32;
+        let bounds = child_bounds::<DIM>(self.sorted, lo, hi, depth);
+        for q in 0..Self::FANOUT {
+            self.fill(first + q, bounds[q], bounds[q + 1], depth + 1);
+        }
+        // Roll the children's counts and mass sums up into this node.
+        let mut cnt = 0u32;
+        let mut com = [0f64; DIM];
+        for q in 0..Self::FANOUT {
+            let child = &self.nodes[first + q];
+            cnt += child.count;
+            for d in 0..DIM {
+                com[d] += child.com_sum[d];
+            }
+        }
+        let node = &mut self.nodes[id];
+        node.count = cnt;
+        node.com_sum = com;
+    }
+}
+
+/// Child range boundaries of `sorted[lo..hi]` at `depth`: `bounds[q]..
+/// bounds[q+1]` is child q's range. The Morton group bits are monotone
+/// within a sorted range, so each boundary is one binary search.
+fn child_bounds<const DIM: usize>(
+    sorted: &[(u64, u32)],
+    lo: usize,
+    hi: usize,
+    depth: usize,
+) -> [usize; 9] {
+    let fanout = 1usize << DIM;
+    debug_assert!(fanout < 9);
+    let shift = (BhTree::<DIM>::KEY_BITS - 1 - depth) * DIM;
+    let mask = (fanout - 1) as u64;
+    let mut bounds = [hi; 9];
+    bounds[0] = lo;
+    for q in 0..fanout - 1 {
+        bounds[q + 1] =
+            lo + sorted[lo..hi].partition_point(|&(k, _)| ((k >> shift) & mask) as usize <= q);
+    }
+    bounds
+}
+
+/// Parallel node assembly: expand a BFS frontier of (node, range, depth)
+/// tasks until there is enough parallelism, build each frontier subtree
+/// in its own arena on the pool, then stitch the arenas into the flat
+/// array and roll counts/mass up through the serially-built top levels.
+fn build_nodes_parallel<const DIM: usize>(
+    pool: &ThreadPool,
+    y: &[f32],
+    sorted: &[(u64, u32)],
+    center: [f32; DIM],
+    half: [f32; DIM],
+) -> (Vec<Node<DIM>>, usize) {
+    let n = sorted.len();
+    let fanout = 1usize << DIM;
+    let mut nodes = vec![Node::empty(center, half)];
+
+    #[derive(Clone, Copy)]
+    struct Task {
+        id: usize,
+        lo: usize,
+        hi: usize,
+        depth: usize,
+    }
+    let mut frontier = vec![Task { id: 0, lo: 0, hi: n, depth: 0 }];
+    let mut serial_interiors: Vec<usize> = Vec::new();
+    let target_tasks = pool.n_threads() * 4;
+    let big = (n / (pool.n_threads() * 4)).max(1024);
+
+    // Expand at most a few levels: beyond that the task count is already
+    // far past the thread count.
+    for _level in 0..4 {
+        if frontier.len() >= target_tasks {
+            break;
+        }
+        let mut next = Vec::with_capacity(frontier.len() * fanout);
+        let mut expanded_any = false;
+        for task in frontier {
+            let expandable = task.hi - task.lo > big
+                && sorted[task.lo].0 != sorted[task.hi - 1].0
+                && task.depth < BhTree::<DIM>::KEY_BITS;
+            if !expandable {
+                next.push(task);
+                continue;
+            }
+            expanded_any = true;
+            let (c, h) = (nodes[task.id].center, nodes[task.id].half);
+            let first = nodes.len();
+            for q in 0..fanout {
+                let mut cc = [0f32; DIM];
+                let mut hh = [0f32; DIM];
+                for d in 0..DIM {
+                    hh[d] = h[d] * 0.5;
+                    cc[d] = c[d] + if (q >> d) & 1 == 1 { hh[d] } else { -hh[d] };
+                }
+                nodes.push(Node::empty(cc, hh));
+            }
+            nodes[task.id].first_child = first as u32;
+            serial_interiors.push(task.id);
+            let bounds = child_bounds::<DIM>(sorted, task.lo, task.hi, task.depth);
+            for q in 0..fanout {
+                if bounds[q + 1] > bounds[q] {
+                    next.push(Task { id: first + q, lo: bounds[q], hi: bounds[q + 1], depth: task.depth + 1 });
+                }
+            }
+        }
+        frontier = next;
+        if !expanded_any {
+            break;
+        }
+    }
+
+    // Build every frontier subtree in parallel (deterministic: arenas only
+    // depend on their range, and stitch order is the frontier order).
+    let mut arenas: Vec<Option<SubtreeBuilder<DIM>>> = frontier.iter().map(|_| None).collect();
+    pool.scoped(|scope| {
+        for (task, slot) in frontier.iter().zip(arenas.iter_mut()) {
+            let Task { id, lo, hi, depth } = *task;
+            let (c, h) = (nodes[id].center, nodes[id].half);
+            scope.run(move || {
+                *slot = Some(SubtreeBuilder::<DIM>::run(y, sorted, c, h, lo, hi, depth));
+            });
+        }
+    });
+
+    // Stitch: arena-local index L maps to `base + L - 1`; local 0 is the
+    // frontier node itself and overwrites its placeholder slot.
+    let mut depth_cap_hits = 0usize;
+    for (task, arena) in frontier.iter().zip(arenas) {
+        let arena = arena.expect("subtree arena missing");
+        depth_cap_hits += arena.depth_cap_hits;
+        let base = nodes.len();
+        let remap = |fc: u32| if fc == NO_CHILD { NO_CHILD } else { base as u32 + fc - 1 };
+        let mut root = arena.nodes[0];
+        root.first_child = remap(root.first_child);
+        nodes[task.id] = root;
+        for mut node in arena.nodes.into_iter().skip(1) {
+            node.first_child = remap(node.first_child);
+            nodes.push(node);
+        }
+    }
+
+    // Roll counts/mass up through the serially-expanded interior nodes
+    // (children were expanded after their parents, so reverse order sees
+    // every child finished first).
+    for &id in serial_interiors.iter().rev() {
+        let first = nodes[id].first_child as usize;
+        let mut cnt = 0u32;
+        let mut com = [0f64; DIM];
+        for q in 0..fanout {
+            let child = &nodes[first + q];
+            cnt += child.count;
+            for d in 0..DIM {
+                com[d] += child.com_sum[d];
+            }
+        }
+        nodes[id].count = cnt;
+        nodes[id].com_sum = com;
+    }
+    (nodes, depth_cap_hits)
 }
 
 #[cfg(test)]
@@ -802,7 +1174,7 @@ mod tests {
         let s = tree.stats();
         assert!(s.nodes >= s.leaves);
         assert!(s.occupied_leaves <= n);
-        assert!(s.max_depth >= 2 && s.max_depth <= MAX_DEPTH);
+        assert!(s.max_depth >= 2 && s.max_depth <= BhTree::<2>::KEY_BITS);
         assert_eq!(s.total_points, n);
         // O(N) nodes claim from the paper.
         assert!(s.nodes < 8 * n, "nodes {} not O(N)", s.nodes);
@@ -821,5 +1193,111 @@ mod tests {
             }
         });
         assert!(root_seen);
+    }
+
+    #[test]
+    fn morton_keys_sorted_and_total() {
+        let n = 1000;
+        let y = random_embedding(n, 10);
+        let (center, half) = bounding_cell::<2>(&y, n, None);
+        let sorted = morton_sorted::<2>(&y, n, &center, &half, None);
+        assert_eq!(sorted.len(), n);
+        for w in sorted.windows(2) {
+            assert!(w[0] < w[1], "ordering not strictly increasing: {w:?}");
+        }
+        let mut seen = vec![false; n];
+        for &(_, i) in &sorted {
+            seen[i as usize] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn parallel_build_matches_serial_exactly() {
+        // The parallel path must be a pure reorganization of the same
+        // computation: identical structure, COM sums, and traversal output.
+        let pool = ThreadPool::new(4);
+        for &n in &[PAR_BUILD_MIN, PAR_BUILD_MIN + 1357] {
+            let y = random_embedding(n, 11);
+            let serial = BhTree::<2>::build(&y, n);
+            let parallel = BhTree::<2>::build_parallel(&pool, &y, n, CellSizeMode::Diagonal);
+            assert_eq!(serial.nodes.len(), parallel.nodes.len(), "n={n}");
+            assert_eq!(serial.depth_cap_hits, parallel.depth_cap_hits);
+            for i in (0..n).step_by(97) {
+                let yi = [y[i * 2], y[i * 2 + 1]];
+                let mut fs = [0f64; 2];
+                let mut fp = [0f64; 2];
+                let zs = serial.repulsion(i as u32, &yi, 0.5, &mut fs);
+                let zp = parallel.repulsion(i as u32, &yi, 0.5, &mut fp);
+                assert_eq!(zs, zp, "n={n} i={i}");
+                assert_eq!(fs, fp, "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_build_is_deterministic() {
+        let pool_a = ThreadPool::new(4);
+        let pool_b = ThreadPool::new(2);
+        let n = PAR_BUILD_MIN + 500;
+        let y = random_embedding(n, 12);
+        let a = BhTree::<2>::build_parallel(&pool_a, &y, n, CellSizeMode::Diagonal);
+        let b = BhTree::<2>::build_parallel(&pool_b, &y, n, CellSizeMode::Diagonal);
+        // Thread count must not change the logical tree: compare the
+        // traversal SoA through a fixed set of queries.
+        for i in (0..n).step_by(401) {
+            let yi = [y[i * 2], y[i * 2 + 1]];
+            let mut fa = [0f64; 2];
+            let mut fb = [0f64; 2];
+            assert_eq!(
+                a.repulsion(i as u32, &yi, 0.7, &mut fa),
+                b.repulsion(i as u32, &yi, 0.7, &mut fb)
+            );
+            assert_eq!(fa, fb);
+        }
+    }
+
+    #[test]
+    fn parallel_build_with_duplicates() {
+        let pool = ThreadPool::new(4);
+        let n = PAR_BUILD_MIN;
+        // Half the points coincide pairwise: every even index duplicates
+        // the next odd one.
+        let mut rng = Pcg32::seeded(13);
+        let mut y = Vec::with_capacity(n * 2);
+        for _ in 0..n / 2 {
+            let (a, b) = (rng.normal() as f32, rng.normal() as f32);
+            y.extend_from_slice(&[a, b, a, b]);
+        }
+        let tree = BhTree::<2>::build_parallel(&pool, &y, n, CellSizeMode::Diagonal);
+        assert_eq!(tree.len(), n);
+        let stats = tree.stats();
+        assert_eq!(stats.total_points, n);
+        // θ=0 stays exact (self-exclusion in collapsed leaves included).
+        let i = 0usize;
+        let yi = [y[0], y[1]];
+        let mut f = [0f64; 2];
+        let z = tree.repulsion(i as u32, &yi, 0.0, &mut f);
+        let (ef, ez) = exact_repulsion(&y, n, i);
+        assert!((z - ez).abs() < 1e-5 * ez.max(1.0), "z={z} ez={ez}");
+        for d in 0..2 {
+            assert!((f[d] - ef[d]).abs() < 1e-5 * ef[d].abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn merge_sort_helpers_agree_with_std() {
+        let pool = ThreadPool::new(3);
+        let mut rng = Pcg32::seeded(14);
+        for &n in &[0usize, 1, 5, 4095, 4096, 50_000] {
+            let mut a: Vec<(u64, u32)> =
+                (0..n).map(|i| (rng.next_u64() % 1000, i as u32)).collect();
+            let mut b = a.clone();
+            a.sort_unstable();
+            if !b.is_empty() {
+                par_merge_sort(&pool, &mut b);
+            }
+            assert_eq!(a, b, "n={n}");
+        }
     }
 }

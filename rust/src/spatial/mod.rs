@@ -7,6 +7,12 @@
 //! (coincident points collapse into a multiplicity count, as in the
 //! reference implementation).
 //!
+//! Construction is Morton-ordered: points are quantized to a Z-order key
+//! and sorted once, after which every cell's points form a contiguous
+//! range of the sorted array and the flat node array is assembled
+//! bottom-up — serially via [`BhTree::build`], or across the thread pool
+//! via [`BhTree::build_parallel`] (the per-iteration hot path).
+//!
 //! The tree also records a DFS point ordering with per-node `[start, end)`
 //! ranges so the dual-tree algorithm (paper appendix) can map *cell-cell*
 //! interactions back onto the points they summarize without per-node child

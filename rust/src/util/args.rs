@@ -125,13 +125,21 @@ impl Parsed {
 }
 
 /// Parse error (also carries help requests).
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ArgError {
-    #[error("{0}")]
     Invalid(String),
-    #[error("{0}")]
     Help(String),
 }
+
+impl std::fmt::Display for ArgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ArgError::Invalid(msg) | ArgError::Help(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ArgError {}
 
 /// Parse `args` (without the program name) against `spec`.
 pub fn parse(spec: &CommandSpec, prog: &str, args: &[String]) -> Result<Parsed, ArgError> {

@@ -48,12 +48,19 @@ pub struct Config {
     values: BTreeMap<String, Value>,
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("config error at line {line}: {msg}")]
+#[derive(Debug)]
 pub struct ConfigError {
     pub line: usize,
     pub msg: String,
 }
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ConfigError {}
 
 fn err<T>(line: usize, msg: impl Into<String>) -> Result<T, ConfigError> {
     Err(ConfigError { line, msg: msg.into() })

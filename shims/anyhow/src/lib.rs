@@ -1,0 +1,206 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no network and no vendored registry, so this
+//! workspace ships a minimal re-implementation of the `anyhow` API surface
+//! the codebase actually uses: [`Error`], [`Result`], [`Context`] on
+//! `Result`/`Option`, and the `bail!` / `ensure!` / `anyhow!` macros.
+//!
+//! Differences from real anyhow: no backtraces and no downcasting — the
+//! error is a rendered message chain. `{}` prints the outermost message,
+//! `{:#}` the full `a: b: c` chain (same as anyhow), and `{:?}` a
+//! multi-line report with a `Caused by:` section.
+
+use std::fmt;
+
+/// A rendered error: outermost message plus the chain of causes.
+pub struct Error {
+    msg: String,
+    /// Causes, outermost first.
+    chain: Vec<String>,
+}
+
+/// `anyhow::Result` with the usual defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), chain: Vec::new() }
+    }
+
+    /// Build from a concrete error, capturing its `source()` chain.
+    pub fn new<E: std::error::Error>(error: E) -> Error {
+        let mut chain = Vec::new();
+        let mut source = error.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { msg: error.to_string(), chain }
+    }
+
+    /// Wrap with an outer context message (what `Context` does).
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        let mut chain = Vec::with_capacity(self.chain.len() + 1);
+        chain.push(self.msg);
+        chain.extend(self.chain);
+        Error { msg: context.to_string(), chain }
+    }
+
+    /// The rendered cause messages, outermost first (excludes the top
+    /// message itself).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            for cause in &self.chain {
+                write!(f, ": {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if !self.chain.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for (i, cause) in self.chain.iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`; that
+// is what makes the blanket `From` below coherent (same trick as anyhow).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+/// Context extension for fallible values, mirroring `anyhow::Context`.
+pub trait Context<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T, E> for Result<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::Error::msg(format!($($arg)*)))
+    };
+}
+
+/// Return early with a formatted error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::Error::msg(format!($($arg)*)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e: Error = Err::<(), _>(io_err()).context("opening config").unwrap_err();
+        assert_eq!(format!("{e}"), "opening config");
+        assert_eq!(format!("{e:#}"), "opening config: missing file");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("no bucket for n={}", 7)).unwrap_err();
+        assert_eq!(e.to_string(), "no bucket for n=7");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(inner().unwrap_err().to_string(), "missing file");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: usize) -> Result<usize> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert!(f(3).unwrap_err().to_string().contains("three"));
+        assert!(f(11).unwrap_err().to_string().contains("too big: 11"));
+    }
+}

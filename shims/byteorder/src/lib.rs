@@ -1,0 +1,130 @@
+//! Offline stand-in for the `byteorder` crate: endian-aware integer/float
+//! reads and writes over `std::io` streams (the subset bhsne's IDX and
+//! snapshot codecs use).
+
+use std::io;
+
+/// Byte-order strategy (implemented by [`BigEndian`] / [`LittleEndian`]).
+pub trait ByteOrder {
+    fn read_u32(buf: [u8; 4]) -> u32;
+    fn read_u64(buf: [u8; 8]) -> u64;
+    fn write_u32(v: u32) -> [u8; 4];
+    fn write_u64(v: u64) -> [u8; 8];
+
+    fn read_f32(buf: [u8; 4]) -> f32 {
+        f32::from_bits(Self::read_u32(buf))
+    }
+
+    fn write_f32(v: f32) -> [u8; 4] {
+        Self::write_u32(v.to_bits())
+    }
+}
+
+/// Big-endian byte order.
+pub enum BigEndian {}
+
+impl ByteOrder for BigEndian {
+    fn read_u32(buf: [u8; 4]) -> u32 {
+        u32::from_be_bytes(buf)
+    }
+
+    fn read_u64(buf: [u8; 8]) -> u64 {
+        u64::from_be_bytes(buf)
+    }
+
+    fn write_u32(v: u32) -> [u8; 4] {
+        v.to_be_bytes()
+    }
+
+    fn write_u64(v: u64) -> [u8; 8] {
+        v.to_be_bytes()
+    }
+}
+
+/// Little-endian byte order.
+pub enum LittleEndian {}
+
+impl ByteOrder for LittleEndian {
+    fn read_u32(buf: [u8; 4]) -> u32 {
+        u32::from_le_bytes(buf)
+    }
+
+    fn read_u64(buf: [u8; 8]) -> u64 {
+        u64::from_le_bytes(buf)
+    }
+
+    fn write_u32(v: u32) -> [u8; 4] {
+        v.to_le_bytes()
+    }
+
+    fn write_u64(v: u64) -> [u8; 8] {
+        v.to_le_bytes()
+    }
+}
+
+/// Endian-aware reads on any `io::Read`.
+pub trait ReadBytesExt: io::Read {
+    fn read_u32<E: ByteOrder>(&mut self) -> io::Result<u32> {
+        let mut buf = [0u8; 4];
+        self.read_exact(&mut buf)?;
+        Ok(E::read_u32(buf))
+    }
+
+    fn read_u64<E: ByteOrder>(&mut self) -> io::Result<u64> {
+        let mut buf = [0u8; 8];
+        self.read_exact(&mut buf)?;
+        Ok(E::read_u64(buf))
+    }
+
+    fn read_f32<E: ByteOrder>(&mut self) -> io::Result<f32> {
+        let mut buf = [0u8; 4];
+        self.read_exact(&mut buf)?;
+        Ok(E::read_f32(buf))
+    }
+}
+
+impl<R: io::Read + ?Sized> ReadBytesExt for R {}
+
+/// Endian-aware writes on any `io::Write`.
+pub trait WriteBytesExt: io::Write {
+    fn write_u32<E: ByteOrder>(&mut self, v: u32) -> io::Result<()> {
+        self.write_all(&E::write_u32(v))
+    }
+
+    fn write_u64<E: ByteOrder>(&mut self, v: u64) -> io::Result<()> {
+        self.write_all(&E::write_u64(v))
+    }
+
+    fn write_f32<E: ByteOrder>(&mut self, v: f32) -> io::Result<()> {
+        self.write_all(&E::write_f32(v))
+    }
+}
+
+impl<W: io::Write + ?Sized> WriteBytesExt for W {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_both_orders() {
+        let mut buf = Vec::new();
+        buf.write_u32::<BigEndian>(0x0102_0304).unwrap();
+        buf.write_u32::<LittleEndian>(0x0102_0304).unwrap();
+        buf.write_u64::<LittleEndian>(0x1122_3344_5566_7788).unwrap();
+        buf.write_f32::<LittleEndian>(1.5).unwrap();
+        assert_eq!(&buf[..4], &[1, 2, 3, 4]);
+        assert_eq!(&buf[4..8], &[4, 3, 2, 1]);
+        let mut r = &buf[..];
+        assert_eq!(r.read_u32::<BigEndian>().unwrap(), 0x0102_0304);
+        assert_eq!(r.read_u32::<LittleEndian>().unwrap(), 0x0102_0304);
+        assert_eq!(r.read_u64::<LittleEndian>().unwrap(), 0x1122_3344_5566_7788);
+        assert_eq!(r.read_f32::<LittleEndian>().unwrap(), 1.5);
+    }
+
+    #[test]
+    fn short_read_errors() {
+        let mut r: &[u8] = &[1, 2];
+        assert!(r.read_u32::<BigEndian>().is_err());
+    }
+}

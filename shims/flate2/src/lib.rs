@@ -1,0 +1,275 @@
+//! Offline stand-in for the `flate2` gzip crate.
+//!
+//! Implements the gzip container (header, CRC-32 trailer) around DEFLATE
+//! *stored* (uncompressed) blocks only:
+//!
+//! * [`write::GzEncoder`] always emits stored blocks — valid gzip that any
+//!   real decoder accepts, just without compression.
+//! * [`read::GzDecoder`] decodes stored-block streams (everything this
+//!   shim's encoder produces) and reports a clear `io::Error` for
+//!   Huffman-compressed streams produced by real gzip tools.
+//!
+//! That covers the repo's use: round-tripping its own `.gz` snapshot and
+//! IDX fixtures. Externally-compressed MNIST archives fall back to the
+//! synthetic generator path (the caller already handles the error).
+
+use std::io::{self, Read, Write};
+
+/// Compression level marker (stored blocks ignore it).
+#[derive(Debug, Clone, Copy)]
+pub struct Compression(pub u32);
+
+impl Compression {
+    pub fn fast() -> Compression {
+        Compression(1)
+    }
+
+    pub fn best() -> Compression {
+        Compression(9)
+    }
+
+    pub fn none() -> Compression {
+        Compression(0)
+    }
+}
+
+impl Default for Compression {
+    fn default() -> Self {
+        Compression(6)
+    }
+}
+
+/// CRC-32 (IEEE 802.3, reflected, poly 0xEDB88320) — the gzip checksum.
+fn crc32(data: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+pub mod write {
+    use super::*;
+
+    /// Gzip encoder over any `Write` sink (stored blocks only).
+    pub struct GzEncoder<W: Write> {
+        inner: W,
+        buf: Vec<u8>,
+    }
+
+    impl<W: Write> GzEncoder<W> {
+        pub fn new(inner: W, _level: Compression) -> Self {
+            GzEncoder { inner, buf: Vec::new() }
+        }
+
+        /// Flush the gzip stream and return the underlying writer.
+        pub fn finish(mut self) -> io::Result<W> {
+            // Header: magic, CM=8 (deflate), no flags, mtime 0, XFL 0, OS 255.
+            self.inner.write_all(&[0x1f, 0x8b, 0x08, 0, 0, 0, 0, 0, 0, 0xff])?;
+            // Deflate payload: stored blocks of at most 65535 bytes.
+            let mut rest = self.buf.as_slice();
+            loop {
+                let take = rest.len().min(65535);
+                let (chunk, tail) = rest.split_at(take);
+                let bfinal = tail.is_empty();
+                self.inner.write_all(&[u8::from(bfinal)])?; // BFINAL bit, BTYPE=00
+                self.inner.write_all(&(take as u16).to_le_bytes())?;
+                self.inner.write_all(&(!(take as u16)).to_le_bytes())?;
+                self.inner.write_all(chunk)?;
+                if bfinal {
+                    break;
+                }
+                rest = tail;
+            }
+            // Trailer: CRC-32 and input size mod 2^32, both little-endian.
+            self.inner.write_all(&crc32(&self.buf).to_le_bytes())?;
+            self.inner.write_all(&(self.buf.len() as u32).to_le_bytes())?;
+            self.inner.flush()?;
+            Ok(self.inner)
+        }
+    }
+
+    impl<W: Write> Write for GzEncoder<W> {
+        fn write(&mut self, data: &[u8]) -> io::Result<usize> {
+            self.buf.extend_from_slice(data);
+            Ok(data.len())
+        }
+
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+}
+
+pub mod read {
+    use super::*;
+
+    /// Gzip decoder over any `Read` source (stored blocks only).
+    pub struct GzDecoder<R: Read> {
+        inner: Option<R>,
+        /// Decoded payload, filled lazily on first read.
+        out: Vec<u8>,
+        pos: usize,
+    }
+
+    impl<R: Read> GzDecoder<R> {
+        pub fn new(inner: R) -> Self {
+            GzDecoder { inner: Some(inner), out: Vec::new(), pos: 0 }
+        }
+
+        fn decode_all(&mut self) -> io::Result<()> {
+            let Some(mut inner) = self.inner.take() else {
+                return Ok(());
+            };
+            let mut raw = Vec::new();
+            inner.read_to_end(&mut raw)?;
+            self.out = inflate_gzip(&raw)?;
+            Ok(())
+        }
+    }
+
+    impl<R: Read> Read for GzDecoder<R> {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            if self.inner.is_some() {
+                self.decode_all()?;
+            }
+            let n = buf.len().min(self.out.len() - self.pos);
+            buf[..n].copy_from_slice(&self.out[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+
+    fn bad(msg: &str) -> io::Error {
+        io::Error::new(io::ErrorKind::InvalidData, msg.to_string())
+    }
+
+    /// Parse a full gzip member and return the decoded payload.
+    fn inflate_gzip(raw: &[u8]) -> io::Result<Vec<u8>> {
+        if raw.len() < 18 {
+            return Err(bad("gzip stream too short"));
+        }
+        if raw[0] != 0x1f || raw[1] != 0x8b {
+            return Err(bad("bad gzip magic"));
+        }
+        if raw[2] != 0x08 {
+            return Err(bad("unsupported gzip compression method"));
+        }
+        let flg = raw[3];
+        let mut p = 10usize; // fixed header
+        if flg & 0x04 != 0 {
+            // FEXTRA
+            if p + 2 > raw.len() {
+                return Err(bad("truncated FEXTRA"));
+            }
+            let xlen = u16::from_le_bytes([raw[p], raw[p + 1]]) as usize;
+            p += 2 + xlen;
+        }
+        for bit in [0x08u8, 0x10] {
+            // FNAME then FCOMMENT: zero-terminated strings when present.
+            if flg & bit != 0 {
+                while p < raw.len() && raw[p] != 0 {
+                    p += 1;
+                }
+                p += 1;
+            }
+        }
+        if flg & 0x02 != 0 {
+            p += 2; // FHCRC
+        }
+        let body_end = raw.len() - 8;
+        if p >= body_end {
+            return Err(bad("truncated gzip header"));
+        }
+        let body = &raw[p..body_end];
+        let out = inflate_stored(body)?;
+        // Verify the CRC-32 trailer.
+        let trailer = &raw[raw.len() - 8..];
+        let want_crc = u32::from_le_bytes([trailer[0], trailer[1], trailer[2], trailer[3]]);
+        if crc32(&out) != want_crc {
+            return Err(bad("gzip CRC mismatch"));
+        }
+        Ok(out)
+    }
+
+    /// Inflate a DEFLATE stream consisting of stored blocks.
+    fn inflate_stored(body: &[u8]) -> io::Result<Vec<u8>> {
+        let mut out = Vec::new();
+        let mut p = 0usize;
+        loop {
+            if p >= body.len() {
+                return Err(bad("truncated deflate stream"));
+            }
+            let hdr = body[p];
+            p += 1;
+            let bfinal = hdr & 1 != 0;
+            let btype = (hdr >> 1) & 3;
+            if btype != 0 {
+                return Err(bad(
+                    "flate2 shim supports stored deflate blocks only (compressed input needs the real flate2)",
+                ));
+            }
+            if p + 4 > body.len() {
+                return Err(bad("truncated stored-block header"));
+            }
+            let len = u16::from_le_bytes([body[p], body[p + 1]]) as usize;
+            let nlen = u16::from_le_bytes([body[p + 2], body[p + 3]]);
+            if nlen != !(len as u16) {
+                return Err(bad("stored-block length complement mismatch"));
+            }
+            p += 4;
+            if p + len > body.len() {
+                return Err(bad("truncated stored block"));
+            }
+            out.extend_from_slice(&body[p..p + len]);
+            p += len;
+            if bfinal {
+                return Ok(out);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(data: &[u8]) -> Vec<u8> {
+        let mut enc = write::GzEncoder::new(Vec::new(), Compression::fast());
+        enc.write_all(data).unwrap();
+        let compressed = enc.finish().unwrap();
+        let mut dec = read::GzDecoder::new(&compressed[..]);
+        let mut out = Vec::new();
+        dec.read_to_end(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn roundtrips_small_and_empty() {
+        assert_eq!(roundtrip(b"hello gzip"), b"hello gzip");
+        assert_eq!(roundtrip(b""), b"");
+    }
+
+    #[test]
+    fn roundtrips_multi_block() {
+        let data: Vec<u8> = (0..200_000).map(|i| (i % 251) as u8).collect();
+        assert_eq!(roundtrip(&data), data);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let mut dec = read::GzDecoder::new(&b"definitely not gzip at all"[..]);
+        let mut out = Vec::new();
+        assert!(dec.read_to_end(&mut out).is_err());
+    }
+
+    #[test]
+    fn crc_matches_known_vector() {
+        // CRC-32("123456789") = 0xCBF43926 (classic check value).
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+}
