@@ -1,13 +1,15 @@
 //! Micro-benchmarks of the per-iteration hot paths — the §Perf working
 //! set: Morton-ordered quadtree build (serial vs pool-parallel), BH
 //! repulsion traversal at several θ, the combined build+traverse
-//! iteration cost, attractive forces (CPU vs XLA artifact), vp-tree
-//! build + all-kNN, perplexity solve, and the dense exact repulsion.
+//! iteration cost, attractive forces (CPU vs XLA artifact), the §4.1
+//! input-similarity stage (vp-tree build serial vs pool-parallel,
+//! batched all-kNN, perplexity solve, streaming symmetrize), and the
+//! dense exact repulsion.
 //!
 //! Besides the human-readable table, the run always writes
 //! `BENCH_micro_hotpath.json` with normalized ns/point figures
-//! (tree-build, force-eval, end-to-end iteration) so CI can archive the
-//! perf trajectory across commits.
+//! (tree-build, force-eval, end-to-end iteration, plus an `input_stage`
+//! block) so CI can archive the perf trajectory across commits.
 //!
 //! Run: `cargo bench --bench micro_hotpath [-- --quick --json]`
 
@@ -145,32 +147,52 @@ fn main() {
         }
     }
 
-    // vp-tree build + all-kNN on 50-dim data.
+    // ---- Input-similarity stage (§4.1) on 50-dim data. The quick size
+    // stays above the vp-tree parallel-build threshold (2k) so CI's
+    // archived JSON always measures the parallel path. ----
     let dim = 50;
+    let n_vp = opts.pick(10_000usize, 4_000);
     let mut rng = Pcg32::seeded(3);
-    let x: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32).collect();
-    push("vptree_build_d50", time_reps(1, reps.min(3), || {
-        let t = VpTree::build(&x, n, dim, 7);
+    let x: Vec<f32> = (0..n_vp * dim).map(|_| rng.normal() as f32).collect();
+    let (vp_serial, vs10, vs90) = time_reps(1, reps.min(3), || {
+        let t = VpTree::build(&x, n_vp, dim, 7);
         std::hint::black_box(t.len());
-    }));
-    let vp = VpTree::build(&x, n, dim, 7);
-    push("vptree_knn90_all", time_reps(0, reps.min(3), || {
-        let (i, _) = vp.knn_all(&pool, 90.min(n - 1));
-        std::hint::black_box(i[0]);
-    }));
+    });
+    push("vptree_build_serial_d50", (vp_serial, vs10, vs90));
+    let (vp_par, vp10, vp90) = time_reps(1, reps.min(3), || {
+        let t = VpTree::build_parallel(&pool, &x, n_vp, dim, 7);
+        std::hint::black_box(t.len());
+    });
+    push("vptree_build_parallel_d50", (vp_par, vp10, vp90));
 
-    // Perplexity solve on n x 90 distances.
-    let k = 90.min(n - 1);
-    let d2: Vec<f32> = (0..n * k).map(|_| rng.uniform_range(0.5, 50.0) as f32).collect();
+    let vp = VpTree::build_parallel(&pool, &x, n_vp, dim, 7);
+    let k = 90.min(n_vp - 1);
+    let (knn_query, kq10, kq90) = time_reps(0, reps.min(3), || {
+        let (i, _) = vp.knn_all(&pool, k);
+        std::hint::black_box(i[0]);
+    });
+    push("vptree_knn90_all", (knn_query, kq10, kq90));
+
+    // Perplexity solve + streaming symmetrize on the real kNN output.
+    let (knn_idx, knn_dst) = vp.knn_all(&pool, k);
+    let d2: Vec<f32> = knn_dst.iter().map(|d| d * d).collect();
     push("perplexity_cpu", time_reps(1, reps, || {
-        let c = bhsne::sne::perplexity::conditional_probabilities(&pool, &d2, n, k, 30.0, 1e-5);
+        let c = bhsne::sne::perplexity::conditional_probabilities(&pool, &d2, n_vp, k, 30.0, 1e-5);
         std::hint::black_box(c.failures);
     }));
+    let cond = bhsne::sne::perplexity::conditional_probabilities(&pool, &d2, n_vp, k, 30.0, 1e-5);
+    let conditional = Csr::from_knn(&pool, n_vp, k, &knn_idx, &cond.p);
+    let (symmetrize, sy10, sy90) = time_reps(1, reps, || {
+        let j = conditional.symmetrize_parallel(&pool);
+        std::hint::black_box(j.nnz());
+    });
+    push("symmetrize_streaming", (symmetrize, sy10, sy90));
 
     table.emit(&opts);
 
     // Machine-readable capture for CI: normalized ns/point hot-path costs.
     let per_point = |secs: f64| secs * 1e9 / n_tree as f64;
+    let per_point_vp = |secs: f64| secs * 1e9 / n_vp as f64;
     let json = format!(
         concat!(
             "{{\"bench\":\"micro_hotpath\",\"n\":{},\"threads\":{},",
@@ -178,6 +200,11 @@ fn main() {
             "\"tree_build_parallel_ns_per_point\":{:.2},",
             "\"force_eval_theta05_ns_per_point\":{:.2},",
             "\"iter_build_plus_eval_ms\":{:.4},",
+            "\"input_stage\":{{\"n\":{},",
+            "\"vp_build_serial_ns_per_point\":{:.2},",
+            "\"vp_build_parallel_ns_per_point\":{:.2},",
+            "\"knn_query_ns_per_point\":{:.2},",
+            "\"symmetrize_ns_per_point\":{:.2}}},",
             "\"table\":{}}}"
         ),
         n_tree,
@@ -186,6 +213,11 @@ fn main() {
         per_point(build_par),
         per_point(force_eval),
         iter_secs * 1e3,
+        n_vp,
+        per_point_vp(vp_serial),
+        per_point_vp(vp_par),
+        per_point_vp(knn_query),
+        per_point_vp(symmetrize),
         table.to_json(),
     );
     let path = "BENCH_micro_hotpath.json";

@@ -6,7 +6,7 @@
 //!     cargo run --release --example custom_metric
 
 use bhsne::eval;
-use bhsne::sne::{input, sparse::Csr, TsneConfig, TsneRunner};
+use bhsne::sne::{sparse::Csr, TsneConfig, TsneRunner};
 use bhsne::util::{Pcg32, ThreadPool};
 use bhsne::vptree::{Cosine, VpTree};
 
@@ -33,17 +33,16 @@ fn main() -> anyhow::Result<()> {
     let perplexity = 30.0;
     let k = (3.0 * perplexity) as usize;
 
-    // kNN under the angular metric.
-    let tree = VpTree::build_with(&x, n, dim, 7, Cosine);
+    // kNN under the angular metric (pool-parallel build, bit-identical to
+    // the serial one).
+    let tree = VpTree::build_parallel_with(&pool, &x, n, dim, 7, Cosine);
     let (idx, dst) = tree.knn_all(&pool, k);
 
-    // Bandwidth calibration on the metric's squared distances.
+    // Bandwidth calibration on the metric's squared distances, then the
+    // streaming CSR assembly straight from the fixed-k kNN arrays.
     let d2: Vec<f32> = dst.iter().map(|d| d * d).collect();
     let cond = bhsne::sne::perplexity::conditional_probabilities(&pool, &d2, n, k, perplexity, 1e-5);
-    let rows: Vec<Vec<(u32, f32)>> = (0..n)
-        .map(|i| (0..k).map(|j| (idx[i * k + j], cond.p[i * k + j])).collect())
-        .collect();
-    let mut p = Csr::from_rows(n, rows).symmetrize();
+    let mut p = Csr::from_knn(&pool, n, k, &idx, &cond.p).symmetrize_parallel(&pool);
 
     // Optimize.
     let mut runner = TsneRunner::with_pool(
@@ -53,7 +52,8 @@ fn main() -> anyhow::Result<()> {
     let y = runner.optimize(&mut p, n)?;
 
     let err = eval::one_nn_error(runner.pool(), &y, 2, &labels);
-    println!("angular-metric embedding: 1-NN error {err:.4} (chance {:.2})", (classes - 1) as f64 / classes as f64);
+    let chance = (classes - 1) as f64 / classes as f64;
+    println!("angular-metric embedding: 1-NN error {err:.4} (chance {chance:.2})");
     bhsne::data::io::write_tsv("out/custom_metric.tsv", &y, 2, &labels)?;
     println!("embedding written to out/custom_metric.tsv");
     Ok(())

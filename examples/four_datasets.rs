@@ -17,7 +17,8 @@ fn main() -> anyhow::Result<()> {
     let n: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(3000);
     let iters: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(500);
 
-    println!("{:<12} {:>6} {:>8} {:>10} {:>10} {:>10}", "dataset", "dim", "classes", "total_s", "embed_s", "1nn_err");
+    print!("{:<12} {:>6} {:>8} ", "dataset", "dim", "classes");
+    println!("{:>10} {:>10} {:>10}", "total_s", "embed_s", "1nn_err");
     for name in ["mnist-like", "cifar-like", "norb-like", "timit-like"] {
         let cfg = JobConfig {
             dataset: name.into(),

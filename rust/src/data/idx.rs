@@ -160,7 +160,8 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let images = make_idx(&[1, 2, 2], &[9, 8, 7, 6]);
         let labels = make_idx(&[1], &[3]);
-        for (name, bytes) in [("train-images-idx3-ubyte.gz", &images), ("train-labels-idx1-ubyte.gz", &labels)] {
+        let files = [("train-images-idx3-ubyte.gz", &images), ("train-labels-idx1-ubyte.gz", &labels)];
+        for (name, bytes) in files {
             let f = std::fs::File::create(dir.join(name)).unwrap();
             let mut gz = flate2::write::GzEncoder::new(f, flate2::Compression::fast());
             gz.write_all(bytes).unwrap();

@@ -5,7 +5,8 @@
 //! AOT artifacts are present, an XLA-offloaded brute-force backend that
 //! computes distance chunks on the PJRT runtime (`runtime::XlaKnn`).
 
-use crate::util::ThreadPool;
+use crate::util::pool::SendPtr;
+use crate::util::{Stopwatch, ThreadPool};
 use crate::vptree::VpTree;
 
 /// Output of an all-pairs kNN query: row-major `n × k` neighbor indices
@@ -14,6 +15,14 @@ use crate::vptree::VpTree;
 pub struct KnnResult {
     pub indices: Vec<u32>,
     pub distances: Vec<f32>,
+    /// Actual row width: `min(requested k, n-1)`. Callers must index rows
+    /// with this, not the k they asked for (degenerate n clamps it, down
+    /// to 0 for n = 1).
+    pub k: usize,
+    /// Index-structure build time (zero for brute force).
+    pub build_secs: f64,
+    /// Batched query time.
+    pub query_secs: f64,
 }
 
 /// Strategy interface for all-pairs kNN.
@@ -47,9 +56,13 @@ impl KnnBackend for VpTreeKnn {
         k: usize,
         seed: u64,
     ) -> KnnResult {
-        let tree = VpTree::build(x, n, dim, seed);
+        let sw = Stopwatch::start();
+        let tree = VpTree::build_parallel(pool, x, n, dim, seed);
+        let build_secs = sw.elapsed_secs();
+        let sw = Stopwatch::start();
         let (indices, distances) = tree.knn_all(pool, k);
-        KnnResult { indices, distances }
+        let query_secs = sw.elapsed_secs();
+        KnnResult { indices, distances, k: k.min(n - 1), build_secs, query_secs }
     }
 }
 
@@ -74,11 +87,13 @@ impl KnnBackend for BruteKnn {
         let k = k.min(n - 1);
         let mut indices = vec![0u32; n * k];
         let mut distances = vec![0f32; n * k];
-        struct Cells<T>(*mut T);
-        unsafe impl<T: Send> Send for Cells<T> {}
-        unsafe impl<T: Send> Sync for Cells<T> {}
-        let ic = Cells(indices.as_mut_ptr());
-        let dc = Cells(distances.as_mut_ptr());
+        if k == 0 {
+            // n = 1: no possible neighbor — cleanly empty rows.
+            return KnnResult { indices, distances, k, build_secs: 0.0, query_secs: 0.0 };
+        }
+        let sw = Stopwatch::start();
+        let ic = SendPtr(indices.as_mut_ptr());
+        let dc = SendPtr(distances.as_mut_ptr());
         pool.scope_chunks(n, 8, |lo, hi| {
             let _ = (&ic, &dc);
             let mut heap_buf: Vec<(f32, u32)> = Vec::with_capacity(n);
@@ -110,7 +125,7 @@ impl KnnBackend for BruteKnn {
                 }
             }
         });
-        KnnResult { indices, distances }
+        KnnResult { indices, distances, k, build_secs: 0.0, query_secs: sw.elapsed_secs() }
     }
 }
 
@@ -165,6 +180,19 @@ mod tests {
         let x = random_data(n, dim, 3);
         let pool = ThreadPool::new(1);
         let r = BruteKnn.knn_all(&pool, &x, n, dim, 10, 4);
+        assert_eq!(r.k, 4);
         assert_eq!(r.indices.len(), n * 4);
+    }
+
+    #[test]
+    fn single_point_dataset_yields_empty_rows() {
+        let x = vec![0.5f32, -0.5];
+        let pool = ThreadPool::new(2);
+        for backend in [&VpTreeKnn as &dyn KnnBackend, &BruteKnn] {
+            let r = backend.knn_all(&pool, &x, 1, 2, 3, 1);
+            assert_eq!(r.k, 0, "{}", backend.name());
+            assert!(r.indices.is_empty(), "{}", backend.name());
+            assert!(r.distances.is_empty(), "{}", backend.name());
+        }
     }
 }

@@ -62,7 +62,11 @@ fn run(args: &[String]) -> anyhow::Result<()> {
 
 fn embed_spec() -> CommandSpec {
     CommandSpec::new("embed", "run one embedding job")
-        .opt("dataset", "mnist-like", "dataset name (mnist|mnist-like|cifar-like|norb-like|timit-like|gaussians|swiss-roll)")
+        .opt(
+            "dataset",
+            "mnist-like",
+            "dataset name (mnist|mnist-like|cifar-like|norb-like|timit-like|gaussians|swiss-roll)",
+        )
         .opt("n", "5000", "number of points")
         .opt("theta", "0.5", "BH trade-off (0 = exact t-SNE)")
         .opt("rho", "-1", "use dual-tree repulsion with this rho (>0 enables)")

@@ -6,6 +6,7 @@
 //! set — and optionally offload the final `X·W` projection to an AOT XLA
 //! artifact through the runtime.
 
+use crate::util::pool::SendPtr;
 use crate::util::{Pcg32, ThreadPool};
 
 /// Result of a PCA fit.
@@ -61,10 +62,7 @@ pub fn fit(pool: &ThreadPool, x: &[f32], n: usize, dim: usize, k: usize, seed: u
             const CHUNK: usize = 512;
             let n_chunks = n.div_ceil(CHUNK);
             let mut partials = vec![0f64; n_chunks * dim * k];
-            struct Cells(*mut f64);
-            unsafe impl Send for Cells {}
-            unsafe impl Sync for Cells {}
-            let pc = Cells(partials.as_mut_ptr());
+            let pc = SendPtr(partials.as_mut_ptr());
             pool.scope_chunks(n, CHUNK, |lo, hi| {
                 let _ = &pc;
                 let slot = lo / CHUNK;
@@ -156,10 +154,7 @@ fn project_centered(
     out: &mut [f32],
 ) {
     assert_eq!(out.len(), n * k);
-    struct Cells(*mut f32);
-    unsafe impl Send for Cells {}
-    unsafe impl Sync for Cells {}
-    let oc = Cells(out.as_mut_ptr());
+    let oc = SendPtr(out.as_mut_ptr());
     pool.scope_chunks(n, 64, |lo, hi| {
         let _ = &oc;
         for i in lo..hi {

@@ -111,7 +111,9 @@ pub fn run_job(cfg: JobConfig) -> anyhow::Result<JobResult> {
         if cfg.use_xla {
             match try_xla_pca(&pool, &ds, cfg.pca_target, cfg.tsne.seed) {
                 Some(z) => (z, cfg.pca_target),
-                None => crate::pca::reduce_if_needed(&pool, &ds.x, ds.n, ds.dim, cfg.pca_target, cfg.tsne.seed),
+                None => {
+                    crate::pca::reduce_if_needed(&pool, &ds.x, ds.n, ds.dim, cfg.pca_target, cfg.tsne.seed)
+                }
             }
         } else {
             crate::pca::reduce_if_needed(&pool, &ds.x, ds.n, ds.dim, cfg.pca_target, cfg.tsne.seed)
@@ -162,11 +164,17 @@ pub fn run_job(cfg: JobConfig) -> anyhow::Result<JobResult> {
     let y = runner.run(&x, dim)?;
     let embed_secs = sw.elapsed_secs();
     metrics.observe("embed_secs", embed_secs);
-    metrics.observe("knn_secs", runner.stats.input_stage.knn_secs);
-    metrics.observe("perplexity_secs", runner.stats.input_stage.perplexity_secs);
-    metrics.observe("gradient_secs", runner.stats.gradient_secs);
-    metrics.observe("tree_secs", runner.stats.tree_secs);
-    metrics.observe("repulsion_secs", runner.stats.repulsion_secs);
+    let input = &runner.stats.input_stage;
+    metrics.observe_all(&[
+        ("knn_secs", input.knn_secs),
+        ("knn_build_secs", input.knn_build_secs),
+        ("knn_query_secs", input.knn_query_secs),
+        ("perplexity_secs", input.perplexity_secs),
+        ("symmetrize_secs", input.symmetrize_secs),
+        ("gradient_secs", runner.stats.gradient_secs),
+        ("tree_secs", runner.stats.tree_secs),
+        ("repulsion_secs", runner.stats.repulsion_secs),
+    ]);
 
     // ---- Stage 4: evaluate ----
     let sw = Stopwatch::start();

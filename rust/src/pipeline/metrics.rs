@@ -21,6 +21,15 @@ impl MetricsRegistry {
         self.metrics.entry(name.to_string()).or_insert_with(Summary::new).push(value);
     }
 
+    /// Record one observation for each `(name, value)` pair — stage
+    /// timing blocks (e.g. the input-similarity substages) report as one
+    /// call instead of a stanza of `observe`s.
+    pub fn observe_all(&mut self, pairs: &[(&str, f64)]) {
+        for &(name, value) in pairs {
+            self.observe(name, value);
+        }
+    }
+
     pub fn get(&self, name: &str) -> Option<&Summary> {
         self.metrics.get(name)
     }
@@ -72,6 +81,15 @@ mod tests {
         assert_eq!(m.mean("latency"), Some(2.0));
         assert_eq!(m.get("latency").unwrap().count(), 2);
         assert_eq!(m.mean("missing"), None);
+    }
+
+    #[test]
+    fn observe_all_records_each_pair() {
+        let mut m = MetricsRegistry::new();
+        m.observe_all(&[("a", 1.0), ("b", 2.0), ("a", 3.0)]);
+        assert_eq!(m.mean("a"), Some(2.0));
+        assert_eq!(m.mean("b"), Some(2.0));
+        assert_eq!(m.get("a").unwrap().count(), 2);
     }
 
     #[test]

@@ -7,6 +7,7 @@
 
 use super::sparse::Csr;
 use crate::spatial::{BhTree, CellSizeMode};
+use crate::util::pool::SendPtr;
 use crate::util::ThreadPool;
 
 /// Strategy for the repulsive part of the gradient.
@@ -34,10 +35,7 @@ pub fn attractive_forces<const DIM: usize>(
     let n = p.n_rows;
     assert!(y.len() >= n * DIM);
     assert_eq!(out.len(), n * DIM);
-    struct Cells(*mut f64);
-    unsafe impl Send for Cells {}
-    unsafe impl Sync for Cells {}
-    let oc = Cells(out.as_mut_ptr());
+    let oc = SendPtr(out.as_mut_ptr());
     pool.scope_chunks(n, 128, |lo, hi| {
         let _ = &oc;
         for i in lo..hi {
@@ -70,16 +68,13 @@ pub fn attractive_forces<const DIM: usize>(
 pub fn repulsive_exact<const DIM: usize>(pool: &ThreadPool, y: &[f32], n: usize, out: &mut [f64]) -> f64 {
     assert!(y.len() >= n * DIM);
     assert_eq!(out.len(), n * DIM);
-    struct Cells(*mut f64);
-    unsafe impl Send for Cells {}
-    unsafe impl Sync for Cells {}
-    let oc = Cells(out.as_mut_ptr());
+    let oc = SendPtr(out.as_mut_ptr());
     // Deterministic Z reduction: one slot per chunk, summed in order
     // afterwards — thread scheduling cannot perturb the result.
     const CHUNK: usize = 16;
     let n_chunks = n.div_ceil(CHUNK);
     let mut z_parts = vec![0f64; n_chunks];
-    let zc = Cells(z_parts.as_mut_ptr());
+    let zc = SendPtr(z_parts.as_mut_ptr());
     pool.scope_chunks(n, CHUNK, |lo, hi| {
         let _ = (&oc, &zc);
         let mut z_local = 0f64;
@@ -139,15 +134,12 @@ pub fn repulsive_bh_with_tree<const DIM: usize>(
     out: &mut [f64],
 ) -> f64 {
     assert_eq!(out.len(), n * DIM);
-    struct Cells(*mut f64);
-    unsafe impl Send for Cells {}
-    unsafe impl Sync for Cells {}
-    let oc = Cells(out.as_mut_ptr());
+    let oc = SendPtr(out.as_mut_ptr());
     // Deterministic Z reduction (see repulsive_exact).
     const CHUNK: usize = 64;
     let n_chunks = n.div_ceil(CHUNK);
     let mut z_parts = vec![0f64; n_chunks];
-    let zc = Cells(z_parts.as_mut_ptr());
+    let zc = SendPtr(z_parts.as_mut_ptr());
     pool.scope_chunks(n, CHUNK, |lo, hi| {
         let _ = (&oc, &zc);
         let mut z_local = 0f64;
@@ -207,10 +199,7 @@ pub fn kl_cost<const DIM: usize>(pool: &ThreadPool, p: &Csr, y: &[f32], z: f64) 
     const CHUNK: usize = 256;
     let n_chunks = n.div_ceil(CHUNK);
     let mut parts = vec![0f64; n_chunks];
-    struct Cells(*mut f64);
-    unsafe impl Send for Cells {}
-    unsafe impl Sync for Cells {}
-    let pc = Cells(parts.as_mut_ptr());
+    let pc = SendPtr(parts.as_mut_ptr());
     pool.scope_chunks(n, CHUNK, |lo, hi| {
         let _ = &pc;
         let mut local = 0f64;
@@ -308,7 +297,17 @@ mod tests {
         let mut grad = vec![0f64; n * 2];
         let mut a = vec![0f64; n * 2];
         let mut r = vec![0f64; n * 2];
-        gradient::<2>(&pool, &p, &y, n, RepulsionMethod::Exact, CellSizeMode::Diagonal, &mut grad, &mut a, &mut r);
+        gradient::<2>(
+            &pool,
+            &p,
+            &y,
+            n,
+            RepulsionMethod::Exact,
+            CellSizeMode::Diagonal,
+            &mut grad,
+            &mut a,
+            &mut r,
+        );
         let want = exact_gradient_oracle(&p, &y, n);
         for (g, w) in grad.iter().zip(&want) {
             assert!((g - w).abs() < 1e-6 * w.abs().max(1e-3), "got {g} want {w}");
@@ -325,8 +324,28 @@ mod tests {
         let mut g_bh = vec![0f64; n * 2];
         let mut a = vec![0f64; n * 2];
         let mut r = vec![0f64; n * 2];
-        gradient::<2>(&pool, &p, &y, n, RepulsionMethod::Exact, CellSizeMode::Diagonal, &mut g_exact, &mut a, &mut r);
-        gradient::<2>(&pool, &p, &y, n, RepulsionMethod::BarnesHut { theta: 0.0 }, CellSizeMode::Diagonal, &mut g_bh, &mut a, &mut r);
+        gradient::<2>(
+            &pool,
+            &p,
+            &y,
+            n,
+            RepulsionMethod::Exact,
+            CellSizeMode::Diagonal,
+            &mut g_exact,
+            &mut a,
+            &mut r,
+        );
+        gradient::<2>(
+            &pool,
+            &p,
+            &y,
+            n,
+            RepulsionMethod::BarnesHut { theta: 0.0 },
+            CellSizeMode::Diagonal,
+            &mut g_bh,
+            &mut a,
+            &mut r,
+        );
         // θ=0 visits every leaf — algorithmically exact; the BH summary
         // path computes q with one f32 divide (§Perf), so agreement is at
         // f32 precision, not bit-exact f64.
@@ -347,8 +366,28 @@ mod tests {
         let mut g_bh = vec![0f64; n * 2];
         let mut a = vec![0f64; n * 2];
         let mut r = vec![0f64; n * 2];
-        gradient::<2>(&pool, &p, &y, n, RepulsionMethod::Exact, CellSizeMode::Diagonal, &mut g_exact, &mut a, &mut r);
-        gradient::<2>(&pool, &p, &y, n, RepulsionMethod::BarnesHut { theta: 0.5 }, CellSizeMode::Diagonal, &mut g_bh, &mut a, &mut r);
+        gradient::<2>(
+            &pool,
+            &p,
+            &y,
+            n,
+            RepulsionMethod::Exact,
+            CellSizeMode::Diagonal,
+            &mut g_exact,
+            &mut a,
+            &mut r,
+        );
+        gradient::<2>(
+            &pool,
+            &p,
+            &y,
+            n,
+            RepulsionMethod::BarnesHut { theta: 0.5 },
+            CellSizeMode::Diagonal,
+            &mut g_bh,
+            &mut a,
+            &mut r,
+        );
         // Relative L2 error of the whole gradient field.
         let norm: f64 = g_exact.iter().map(|x| x * x).sum::<f64>().sqrt();
         let err: f64 = g_exact.iter().zip(&g_bh).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt();
@@ -365,8 +404,28 @@ mod tests {
         let mut g_dt = vec![0f64; n * 2];
         let mut a = vec![0f64; n * 2];
         let mut r = vec![0f64; n * 2];
-        gradient::<2>(&pool, &p, &y, n, RepulsionMethod::Exact, CellSizeMode::Diagonal, &mut g_exact, &mut a, &mut r);
-        gradient::<2>(&pool, &p, &y, n, RepulsionMethod::DualTree { rho: 0.2 }, CellSizeMode::Diagonal, &mut g_dt, &mut a, &mut r);
+        gradient::<2>(
+            &pool,
+            &p,
+            &y,
+            n,
+            RepulsionMethod::Exact,
+            CellSizeMode::Diagonal,
+            &mut g_exact,
+            &mut a,
+            &mut r,
+        );
+        gradient::<2>(
+            &pool,
+            &p,
+            &y,
+            n,
+            RepulsionMethod::DualTree { rho: 0.2 },
+            CellSizeMode::Diagonal,
+            &mut g_dt,
+            &mut a,
+            &mut r,
+        );
         let norm: f64 = g_exact.iter().map(|x| x * x).sum::<f64>().sqrt();
         let err: f64 = g_exact.iter().zip(&g_dt).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt();
         assert!(err / norm < 0.1, "rel err {}", err / norm);
@@ -382,13 +441,33 @@ mod tests {
         let mut grad = vec![0f64; n * 2];
         let mut a = vec![0f64; n * 2];
         let mut r = vec![0f64; n * 2];
-        let z0 = gradient::<2>(&pool, &p, &y, n, RepulsionMethod::Exact, CellSizeMode::Diagonal, &mut grad, &mut a, &mut r);
+        let z0 = gradient::<2>(
+            &pool,
+            &p,
+            &y,
+            n,
+            RepulsionMethod::Exact,
+            CellSizeMode::Diagonal,
+            &mut grad,
+            &mut a,
+            &mut r,
+        );
         let c0 = kl_cost::<2>(&pool, &p, &y, z0);
         let eta = 0.01;
         for (yy, g) in y.iter_mut().zip(&grad) {
             *yy -= (eta * g) as f32;
         }
-        let z1 = gradient::<2>(&pool, &p, &y, n, RepulsionMethod::Exact, CellSizeMode::Diagonal, &mut grad, &mut a, &mut r);
+        let z1 = gradient::<2>(
+            &pool,
+            &p,
+            &y,
+            n,
+            RepulsionMethod::Exact,
+            CellSizeMode::Diagonal,
+            &mut grad,
+            &mut a,
+            &mut r,
+        );
         let c1 = kl_cost::<2>(&pool, &p, &y, z1);
         assert!(c1 <= c0 + 1e-9, "cost rose: {c0} -> {c1}");
     }
@@ -397,15 +476,36 @@ mod tests {
     fn gradient_is_translation_invariant() {
         let n = 90;
         let y = random_embedding(n, 11);
-        let shifted: Vec<f32> = y.iter().enumerate().map(|(i, &v)| v + if i % 2 == 0 { 5.0 } else { -3.0 }).collect();
+        let shifted: Vec<f32> =
+            y.iter().enumerate().map(|(i, &v)| v + if i % 2 == 0 { 5.0 } else { -3.0 }).collect();
         let p = random_p(n, 5, 12);
         let pool = ThreadPool::new(2);
         let mut g1 = vec![0f64; n * 2];
         let mut g2 = vec![0f64; n * 2];
         let mut a = vec![0f64; n * 2];
         let mut r = vec![0f64; n * 2];
-        gradient::<2>(&pool, &p, &y, n, RepulsionMethod::Exact, CellSizeMode::Diagonal, &mut g1, &mut a, &mut r);
-        gradient::<2>(&pool, &p, &shifted, n, RepulsionMethod::Exact, CellSizeMode::Diagonal, &mut g2, &mut a, &mut r);
+        gradient::<2>(
+            &pool,
+            &p,
+            &y,
+            n,
+            RepulsionMethod::Exact,
+            CellSizeMode::Diagonal,
+            &mut g1,
+            &mut a,
+            &mut r,
+        );
+        gradient::<2>(
+            &pool,
+            &p,
+            &shifted,
+            n,
+            RepulsionMethod::Exact,
+            CellSizeMode::Diagonal,
+            &mut g2,
+            &mut a,
+            &mut r,
+        );
         // f32 coordinates lose ~1e-6 absolute precision under the shift,
         // so require agreement at f32-realistic tolerance.
         for (x, w) in g1.iter().zip(&g2) {
@@ -439,7 +539,17 @@ mod tests {
         let mut grad = vec![0f64; n * 2];
         let mut a = vec![0f64; n * 2];
         let mut r = vec![0f64; n * 2];
-        gradient::<2>(&pool, &p, &y, n, RepulsionMethod::Exact, CellSizeMode::Diagonal, &mut grad, &mut a, &mut r);
+        gradient::<2>(
+            &pool,
+            &p,
+            &y,
+            n,
+            RepulsionMethod::Exact,
+            CellSizeMode::Diagonal,
+            &mut grad,
+            &mut a,
+            &mut r,
+        );
 
         let h = 1e-3f32;
         for idx in [0usize, 7, 13, 2 * n - 1] {

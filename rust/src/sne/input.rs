@@ -1,5 +1,15 @@
 //! Input-similarity pipeline (§4.1): kNN search → per-point bandwidth
 //! search → sparse conditional P → symmetrized joint P.
+//!
+//! The stage is parallel and allocation-free end to end: the vp-tree
+//! builds on the pool (bit-identical to the serial oracle build), the
+//! batched kNN writes rows straight into the output arrays with
+//! per-thread scratch, the squared distances reuse the kNN distance
+//! buffer in place, and the conditional/joint CSRs are assembled
+//! streaming ([`Csr::from_knn`] + [`Csr::symmetrize_parallel`]) with no
+//! `Vec<Vec<…>>` intermediate. Every substage (vp build / kNN query /
+//! bandwidth solve / symmetrize) is timed separately in
+//! [`InputStageStats`] for the pipeline metrics and the hot-path bench.
 
 use super::perplexity::conditional_probabilities;
 use super::sparse::Csr;
@@ -10,7 +20,12 @@ use crate::util::{Stopwatch, ThreadPool};
 /// pipeline and the benches).
 #[derive(Debug, Clone, Default)]
 pub struct InputStageStats {
+    /// Total kNN time (index build + batched queries).
     pub knn_secs: f64,
+    /// Index-structure build time (vp-tree; zero for brute force).
+    pub knn_build_secs: f64,
+    /// Batched query time.
+    pub knn_query_secs: f64,
     pub perplexity_secs: f64,
     pub symmetrize_secs: f64,
     pub perplexity_failures: usize,
@@ -33,33 +48,40 @@ pub fn joint_probabilities(
     backend: &dyn KnnBackend,
     seed: u64,
 ) -> (Csr, InputStageStats) {
-    let k = (3.0 * perplexity).floor() as usize;
-    let k = k.min(n - 1).max(1);
+    let k_req = (3.0 * perplexity).floor() as usize;
+    let k_req = k_req.min(n - 1).max(1);
     let mut stats = InputStageStats::default();
 
     let sw = Stopwatch::start();
-    let KnnResult { indices, distances } = backend.knn_all(pool, x, n, dim, k, seed);
+    let KnnResult { indices, mut distances, k, build_secs, query_secs } =
+        backend.knn_all(pool, x, n, dim, k_req, seed);
     stats.knn_secs = sw.elapsed_secs();
+    stats.knn_build_secs = build_secs;
+    stats.knn_query_secs = query_secs;
 
-    // Squared distances for the Gaussian kernel.
+    // Degenerate n = 1: no neighbors exist (k clamped to 0), so P is the
+    // empty distribution — return it cleanly instead of handing empty
+    // rows to the bandwidth search.
+    if k == 0 {
+        let empty = Csr { n_rows: n, indptr: vec![0u32; n + 1], indices: Vec::new(), values: Vec::new() };
+        return (empty, stats);
+    }
+
+    // Squared distances for the Gaussian kernel, in place — the kNN
+    // distance buffer is not needed again.
     let sw = Stopwatch::start();
-    let d2: Vec<f32> = distances.iter().map(|&d| d * d).collect();
-    let cond = conditional_probabilities(pool, &d2, n, k, perplexity.min(k as f64), 1e-5);
+    for d in distances.iter_mut() {
+        *d *= *d;
+    }
+    let cond = conditional_probabilities(pool, &distances, n, k, perplexity.min(k as f64), 1e-5);
     stats.perplexity_failures = cond.failures;
     stats.perplexity_secs = sw.elapsed_secs();
 
-    // Assemble conditional CSR rows, then symmetrize.
+    // Streaming CSR assembly straight from the fixed-k arrays, then the
+    // counting-transpose symmetrization.
     let sw = Stopwatch::start();
-    let rows: Vec<Vec<(u32, f32)>> = (0..n)
-        .map(|i| {
-            (0..k)
-                .filter(|&j| indices[i * k + j] != i as u32) // paranoia: no self loops
-                .map(|j| (indices[i * k + j], cond.p[i * k + j]))
-                .collect()
-        })
-        .collect();
-    let conditional = Csr::from_rows(n, rows);
-    let joint = conditional.symmetrize();
+    let conditional = Csr::from_knn(pool, n, k, &indices, &cond.p);
+    let joint = conditional.symmetrize_parallel(pool);
     stats.symmetrize_secs = sw.elapsed_secs();
     stats.nnz = joint.nnz();
     (joint, stats)
@@ -89,6 +111,22 @@ mod tests {
         // 45 and 90 per row.
         let k = 45;
         assert!(stats.nnz >= n * k && stats.nnz <= 2 * n * k, "nnz={}", stats.nnz);
+    }
+
+    #[test]
+    fn substage_timings_are_recorded() {
+        let (n, dim) = (400, 6);
+        let x = random_data(n, dim, 9);
+        let pool = ThreadPool::new(2);
+        let (_, stats) = joint_probabilities(&pool, &x, n, dim, 12.0, &VpTreeKnn, 7);
+        // All substages ran, and the build/query split stays within the
+        // total kNN stage time.
+        assert!(stats.knn_secs > 0.0);
+        assert!(stats.knn_build_secs > 0.0);
+        assert!(stats.knn_query_secs > 0.0);
+        assert!(stats.knn_build_secs + stats.knn_query_secs <= stats.knn_secs * 1.5);
+        assert!(stats.perplexity_secs > 0.0);
+        assert!(stats.symmetrize_secs > 0.0);
     }
 
     #[test]
@@ -129,6 +167,20 @@ mod tests {
             }
         }
         assert!(within > 100.0 * across, "within={within} across={across}");
+    }
+
+    #[test]
+    fn single_point_input_yields_empty_p() {
+        // n = 1 has no pairs: P must come back empty (and well-formed)
+        // without panicking anywhere in the stage.
+        let x = vec![0.25f32, -1.5];
+        let pool = ThreadPool::new(2);
+        let (p, stats) = joint_probabilities(&pool, &x, 1, 2, 30.0, &VpTreeKnn, 3);
+        assert_eq!(p.n_rows, 1);
+        assert_eq!(p.nnz(), 0);
+        assert_eq!(p.row(0).0.len(), 0);
+        assert_eq!(stats.nnz, 0);
+        assert_eq!(stats.perplexity_failures, 0);
     }
 
     #[test]

@@ -370,7 +370,8 @@ mod tests {
 
     #[test]
     fn run_produces_finite_embedding() {
-        let data = gaussian_mixture(&SyntheticSpec { n: 300, dim: 10, classes: 3, seed: 5, ..Default::default() });
+        let spec = SyntheticSpec { n: 300, dim: 10, classes: 3, seed: 5, ..Default::default() };
+        let data = gaussian_mixture(&spec);
         let mut runner = TsneRunner::new(tiny_config(120));
         let y = runner.run(&data.x, data.dim).unwrap();
         assert_eq!(y.len(), 300 * 2);
@@ -382,7 +383,8 @@ mod tests {
 
     #[test]
     fn kl_decreases_over_training() {
-        let data = gaussian_mixture(&SyntheticSpec { n: 240, dim: 8, classes: 4, seed: 6, ..Default::default() });
+        let spec = SyntheticSpec { n: 240, dim: 8, classes: 4, seed: 6, ..Default::default() };
+        let data = gaussian_mixture(&spec);
         let mut cfg = tiny_config(200);
         cfg.cost_every = 10;
         let mut runner = TsneRunner::new(cfg);
@@ -408,14 +410,15 @@ mod tests {
 
     #[test]
     fn separates_two_distant_clusters() {
-        let data = gaussian_mixture(&SyntheticSpec {
+        let spec = SyntheticSpec {
             n: 200,
             dim: 6,
             classes: 2,
             class_sep: 20.0,
             seed: 7,
             ..Default::default()
-        });
+        };
+        let data = gaussian_mixture(&spec);
         let mut runner = TsneRunner::new(tiny_config(300));
         let y = runner.run(&data.x, data.dim).unwrap();
         // Centroid distance vs average within-cluster spread.
@@ -447,7 +450,8 @@ mod tests {
         // *position*; what must match is embedding quality — the paper's
         // own comparison metric (1-NN error) plus both KLs reaching well
         // below the post-exaggeration level.
-        let data = gaussian_mixture(&SyntheticSpec { n: 150, dim: 5, classes: 3, seed: 8, ..Default::default() });
+        let spec = SyntheticSpec { n: 150, dim: 5, classes: 3, seed: 8, ..Default::default() };
+        let data = gaussian_mixture(&spec);
         let mut errs = Vec::new();
         let mut kls = Vec::new();
         for theta in [0.0f32, 0.5] {
@@ -465,7 +469,8 @@ mod tests {
 
     #[test]
     fn three_dimensional_embedding_works() {
-        let data = gaussian_mixture(&SyntheticSpec { n: 120, dim: 6, classes: 2, seed: 9, ..Default::default() });
+        let spec = SyntheticSpec { n: 120, dim: 6, classes: 2, seed: 9, ..Default::default() };
+        let data = gaussian_mixture(&spec);
         let mut cfg = tiny_config(80);
         cfg.out_dim = 3;
         let mut runner = TsneRunner::new(cfg);
@@ -476,7 +481,8 @@ mod tests {
 
     #[test]
     fn rejects_bad_out_dim() {
-        let data = gaussian_mixture(&SyntheticSpec { n: 50, dim: 4, classes: 2, seed: 10, ..Default::default() });
+        let spec = SyntheticSpec { n: 50, dim: 4, classes: 2, seed: 10, ..Default::default() };
+        let data = gaussian_mixture(&spec);
         let mut cfg = tiny_config(10);
         cfg.out_dim = 5;
         let mut runner = TsneRunner::new(cfg);
@@ -485,7 +491,8 @@ mod tests {
 
     #[test]
     fn deterministic_given_seed() {
-        let data = gaussian_mixture(&SyntheticSpec { n: 100, dim: 5, classes: 2, seed: 11, ..Default::default() });
+        let spec = SyntheticSpec { n: 100, dim: 5, classes: 2, seed: 11, ..Default::default() };
+        let data = gaussian_mixture(&spec);
         let run = || {
             let mut runner = TsneRunner::new(tiny_config(60));
             runner.run(&data.x, data.dim).unwrap()

@@ -7,6 +7,7 @@
 //! search") converges fast; 200 iterations of doubling/halving plus
 //! midpoint bisection reproduces the reference implementation's behavior.
 
+use crate::util::pool::SendPtr;
 use crate::util::ThreadPool;
 
 /// Result of the conditional-distribution computation.
@@ -45,17 +46,27 @@ fn row_entropy(d2: &[f32], beta: f64, out_p: &mut [f64]) -> (f64, f64) {
 
 /// Solve one row: find β with |H(β) − log u| < tol, write normalized
 /// probabilities. `d2` are *squared* distances to the k neighbors.
-pub fn solve_row(d2: &[f32], perplexity: f64, tol: f64, p_out: &mut [f32]) -> (f32, bool) {
+/// `scratch` is a caller-owned weight buffer (resized to k here) so the
+/// batched chunk loop solves every row of a batch with zero allocations.
+pub fn solve_row(
+    d2: &[f32],
+    perplexity: f64,
+    tol: f64,
+    p_out: &mut [f32],
+    scratch: &mut Vec<f64>,
+) -> (f32, bool) {
     let target = perplexity.ln();
     let k = d2.len();
     debug_assert!(k > 0);
     let mut beta = 1.0f64;
     let mut beta_min = f64::NEG_INFINITY;
     let mut beta_max = f64::INFINITY;
-    let mut scratch = vec![0f64; k];
+    scratch.clear();
+    scratch.resize(k, 0.0);
+    let scratch = &mut scratch[..];
     let mut ok = false;
     for _ in 0..200 {
-        let (h, _) = row_entropy(d2, beta, &mut scratch);
+        let (h, _) = row_entropy(d2, beta, scratch);
         let diff = h - target;
         if diff.abs() < tol {
             ok = true;
@@ -71,7 +82,7 @@ pub fn solve_row(d2: &[f32], perplexity: f64, tol: f64, p_out: &mut [f32]) -> (f
         }
     }
     // Final normalized probabilities at the found β.
-    let (_, sum) = row_entropy(d2, beta, &mut scratch);
+    let (_, sum) = row_entropy(d2, beta, scratch);
     for j in 0..k {
         p_out[j] = (scratch[j] / sum) as f32;
     }
@@ -98,25 +109,29 @@ pub fn conditional_probabilities(
     use std::sync::atomic::{AtomicUsize, Ordering};
     let failures = AtomicUsize::new(0);
     // Disjoint row writes across threads.
-    struct Cells(*mut f32);
-    unsafe impl Send for Cells {}
-    unsafe impl Sync for Cells {}
-    let pc = Cells(p.as_mut_ptr());
-    let bc = Cells(beta.as_mut_ptr());
+    let pc = SendPtr(p.as_mut_ptr());
+    let bc = SendPtr(beta.as_mut_ptr());
     let fref = &failures;
-    pool.scope_chunks(n, 64, |lo, hi| {
-        let _ = (&pc, &bc);
-        for i in lo..hi {
-            let row = &d2[i * k..(i + 1) * k];
-            // SAFETY: rows are disjoint across chunks.
-            let p_row = unsafe { std::slice::from_raw_parts_mut(pc.0.add(i * k), k) };
-            let (b, ok) = solve_row(row, perplexity, tol, p_row);
-            unsafe { *bc.0.add(i) = b };
-            if !ok {
-                fref.fetch_add(1, Ordering::Relaxed);
+    // One weight buffer per worker thread, reused across every row that
+    // worker solves — the per-row `vec![0f64; k]` is gone.
+    pool.scope_chunks_with(
+        n,
+        64,
+        || Vec::with_capacity(k),
+        |scratch, lo, hi| {
+            let _ = (&pc, &bc);
+            for i in lo..hi {
+                let row = &d2[i * k..(i + 1) * k];
+                // SAFETY: rows are disjoint across chunks.
+                let p_row = unsafe { std::slice::from_raw_parts_mut(pc.0.add(i * k), k) };
+                let (b, ok) = solve_row(row, perplexity, tol, p_row, scratch);
+                unsafe { *bc.0.add(i) = b };
+                if !ok {
+                    fref.fetch_add(1, Ordering::Relaxed);
+                }
             }
-        }
-    });
+        },
+    );
     CondP { p, beta, failures: failures.load(Ordering::Relaxed) }
 }
 
@@ -135,7 +150,8 @@ mod tests {
         let k = 90;
         let d2: Vec<f32> = (0..k).map(|_| rng.uniform_range(0.1, 25.0) as f32).collect();
         let mut p = vec![0f32; k];
-        let (beta, ok) = solve_row(&d2, 30.0, 1e-5, &mut p);
+        let mut scratch = Vec::new();
+        let (beta, ok) = solve_row(&d2, 30.0, 1e-5, &mut p, &mut scratch);
         assert!(ok, "search failed, beta={beta}");
         let sum: f32 = p.iter().sum();
         assert!((sum - 1.0).abs() < 1e-5);
@@ -147,7 +163,7 @@ mod tests {
     fn closer_neighbors_get_higher_p() {
         let d2 = [0.1f32, 1.0, 4.0, 9.0, 16.0, 25.0];
         let mut p = vec![0f32; 6];
-        solve_row(&d2, 3.0, 1e-5, &mut p);
+        solve_row(&d2, 3.0, 1e-5, &mut p, &mut Vec::new());
         for w in p.windows(2) {
             assert!(w[0] >= w[1], "{p:?} not monotone");
         }
@@ -158,7 +174,7 @@ mod tests {
         // All-zero distances: uniform distribution expected (and finite).
         let d2 = [0f32; 10];
         let mut p = vec![0f32; 10];
-        let (_, _) = solve_row(&d2, 5.0, 1e-5, &mut p);
+        let (_, _) = solve_row(&d2, 5.0, 1e-5, &mut p, &mut Vec::new());
         assert!(p.iter().all(|x| x.is_finite()));
         let sum: f32 = p.iter().sum();
         assert!((sum - 1.0).abs() < 1e-5);
@@ -171,7 +187,7 @@ mod tests {
     fn huge_distances_are_stable() {
         let d2 = [1e8f32, 2e8, 3e8, 4e8, 5e8];
         let mut p = vec![0f32; 5];
-        let (beta, _) = solve_row(&d2, 2.0, 1e-5, &mut p);
+        let (beta, _) = solve_row(&d2, 2.0, 1e-5, &mut p, &mut Vec::new());
         assert!(p.iter().all(|x| x.is_finite()), "beta={beta} p={p:?}");
         let perp = entropy_of(&p).exp();
         assert!((perp - 2.0).abs() < 0.05, "perp={perp}");
@@ -185,9 +201,10 @@ mod tests {
         let pool = ThreadPool::new(4);
         let cp = conditional_probabilities(&pool, &d2, n, k, 10.0, 1e-5);
         assert_eq!(cp.failures, 0);
+        let mut scratch = Vec::new();
         for i in 0..n {
             let mut p = vec![0f32; k];
-            let (b, _) = solve_row(&d2[i * k..(i + 1) * k], 10.0, 1e-5, &mut p);
+            let (b, _) = solve_row(&d2[i * k..(i + 1) * k], 10.0, 1e-5, &mut p, &mut scratch);
             assert!((cp.beta[i] - b).abs() < 1e-6);
             for j in 0..k {
                 assert!((cp.p[i * k + j] - p[j]).abs() < 1e-7);
@@ -206,8 +223,9 @@ mod tests {
         let d2b: Vec<f32> = d2a.iter().map(|&x| 4.0 * x).collect();
         let mut pa = vec![0f32; 50];
         let mut pb = vec![0f32; 50];
-        let (ba, _) = solve_row(&d2a, 12.0, 1e-7, &mut pa);
-        let (bb, _) = solve_row(&d2b, 12.0, 1e-7, &mut pb);
+        let mut scratch = Vec::new();
+        let (ba, _) = solve_row(&d2a, 12.0, 1e-7, &mut pa, &mut scratch);
+        let (bb, _) = solve_row(&d2b, 12.0, 1e-7, &mut pb, &mut scratch);
         assert!((ba / bb - 4.0).abs() < 1e-2, "ba={ba} bb={bb}");
         // And the distributions coincide.
         for (a, b) in pa.iter().zip(&pb) {

@@ -3,6 +3,17 @@
 //! Barnes-Hut-SNE's input similarities have at most ⌊3u⌋ non-zeros per
 //! row before symmetrization (Eq. 6) and at most 2·⌊3u⌋ after (Eq. 7);
 //! CSR keeps the attractive-force loop contiguous and O(uN).
+//!
+//! Two construction paths exist: the general [`Csr::from_rows`] (per-row
+//! Vec lists, used by tests and ad-hoc callers) and the streaming
+//! [`Csr::from_knn`] + [`Csr::symmetrize_parallel`] pair the input stage
+//! uses, which assemble the conditional and joint matrices straight from
+//! the fixed-k kNN arrays with no `Vec<Vec<…>>` intermediate and
+//! pool-parallel row passes. [`Csr::symmetrize`] keeps the original
+//! serial scatter implementation as the correctness oracle.
+
+use crate::util::pool::SendPtr;
+use crate::util::ThreadPool;
 
 /// CSR matrix with f32 values and u32 column indices.
 #[derive(Debug, Clone, PartialEq)]
@@ -42,6 +53,68 @@ impl Csr {
         Csr { n_rows, indptr, indices, values }
     }
 
+    /// Streaming CSR assembly from fixed-width kNN output: `cols`/`vals`
+    /// are row-major `n × k` (neighbor indices and their conditional
+    /// probabilities). Any self column is dropped defensively; rows are
+    /// sorted by column. Unlike [`Csr::from_rows`] there is no per-row
+    /// `Vec` — one counting pass sizes `indptr`, then every row is
+    /// gathered, sorted, and written into its final slot in parallel with
+    /// a per-worker scratch buffer.
+    ///
+    /// kNN rows never repeat a neighbor, so no duplicate-column merging
+    /// happens here (debug-asserted); use `from_rows` for arbitrary data.
+    pub fn from_knn(pool: &ThreadPool, n: usize, k: usize, cols: &[u32], vals: &[f32]) -> Self {
+        assert_eq!(cols.len(), n * k);
+        assert_eq!(vals.len(), n * k);
+        // Pass 1: per-row non-self counts → indptr prefix sum.
+        let lens: Vec<u32> = pool.map_indexed(n, 256, |i| {
+            cols[i * k..(i + 1) * k].iter().filter(|&&c| c != i as u32).count() as u32
+        });
+        let mut indptr = vec![0u32; n + 1];
+        for i in 0..n {
+            indptr[i + 1] = indptr[i] + lens[i];
+        }
+        let nnz = indptr[n] as usize;
+        let mut indices = vec![0u32; nnz];
+        let mut values = vec![0f32; nnz];
+        // Pass 2: gather + column-sort + write, rows in parallel.
+        let ic = SendPtr(indices.as_mut_ptr());
+        let vc = SendPtr(values.as_mut_ptr());
+        let indptr_ref = &indptr;
+        pool.scope_chunks_with(
+            n,
+            64,
+            || Vec::with_capacity(k),
+            |scratch: &mut Vec<(u32, f32)>, lo, hi| {
+                let _ = (&ic, &vc);
+                for i in lo..hi {
+                    scratch.clear();
+                    for j in 0..k {
+                        let c = cols[i * k + j];
+                        if c != i as u32 {
+                            scratch.push((c, vals[i * k + j]));
+                        }
+                    }
+                    scratch.sort_unstable_by_key(|&(c, _)| c);
+                    debug_assert!(
+                        scratch.windows(2).all(|w| w[0].0 < w[1].0),
+                        "kNN row {i} has duplicate neighbors"
+                    );
+                    let start = indptr_ref[i] as usize;
+                    for (slot, &(c, v)) in scratch.iter().enumerate() {
+                        // SAFETY: [indptr[i], indptr[i+1]) ranges are
+                        // disjoint across rows; each slot written once.
+                        unsafe {
+                            *ic.0.add(start + slot) = c;
+                            *vc.0.add(start + slot) = v;
+                        }
+                    }
+                }
+            },
+        );
+        Csr { n_rows: n, indptr, indices, values }
+    }
+
     /// Number of stored entries.
     pub fn nnz(&self) -> usize {
         self.values.len()
@@ -79,6 +152,11 @@ impl Csr {
     /// The input holds `p_{j|i}` in row i; the output's stored pattern is
     /// the union of (i,j) and (j,i) patterns. The result sums to 1 when
     /// every input row sums to 1.
+    ///
+    /// This is the original serial scatter implementation (one `Vec` per
+    /// output row); it is kept as the test oracle for
+    /// [`Csr::symmetrize_parallel`], which the input stage uses and which
+    /// produces bit-identical output.
     pub fn symmetrize(&self) -> Csr {
         let n = self.n_rows;
         // Count output row lengths: row i gains one slot per stored (i,j)
@@ -96,6 +174,126 @@ impl Csr {
         Csr::from_rows(n, rows)
     }
 
+    /// Streaming symmetrization: same result as [`Csr::symmetrize`]
+    /// (bit-identical values), computed without the N-vector scatter.
+    ///
+    /// Two-pass counting transpose (count columns → prefix sum → scatter
+    /// in source-row order, which leaves every transpose row sorted),
+    /// then a pool-parallel sorted merge of row i of C with row i of Cᵀ:
+    /// a first merge walk sizes each output row, a second writes
+    /// `p_{j|i}·s + p_{i|j}·s` (s = 1/2N) into its final slot.
+    ///
+    /// Precondition: every row's columns are strictly ascending (no
+    /// duplicates) — both in-tree constructors guarantee this
+    /// (`from_rows` merges duplicates, `from_knn` rejects them). A
+    /// hand-built `Csr` violating it would leave duplicate columns
+    /// unmerged here, where the scatter oracle would sum them.
+    pub fn symmetrize_parallel(&self, pool: &ThreadPool) -> Csr {
+        let n = self.n_rows;
+        let nnz = self.nnz();
+        debug_assert!(
+            (0..n).all(|i| self.row(i).0.windows(2).all(|w| w[0] < w[1])),
+            "symmetrize_parallel requires strictly ascending row columns"
+        );
+        // --- Counting transpose: t = Cᵀ in CSR form. ---
+        let mut t_indptr = vec![0u32; n + 1];
+        for &c in &self.indices {
+            t_indptr[c as usize + 1] += 1;
+        }
+        for i in 0..n {
+            t_indptr[i + 1] += t_indptr[i];
+        }
+        let mut cursor: Vec<u32> = t_indptr[..n].to_vec();
+        let mut t_indices = vec![0u32; nnz];
+        let mut t_values = vec![0f32; nnz];
+        for i in 0..n {
+            let (cols, vals) = self.row(i);
+            for (&j, &v) in cols.iter().zip(vals) {
+                let slot = cursor[j as usize] as usize;
+                cursor[j as usize] += 1;
+                // Scattering in ascending i keeps transpose rows sorted.
+                t_indices[slot] = i as u32;
+                t_values[slot] = v;
+            }
+        }
+        let t_row = |i: usize| {
+            let s = t_indptr[i] as usize;
+            let e = t_indptr[i + 1] as usize;
+            (&t_indices[s..e], &t_values[s..e])
+        };
+        // --- Merged row lengths (sorted-union walk), in parallel. ---
+        let lens: Vec<u32> =
+            pool.map_indexed(n, 128, |i| merge_union_len(self.row(i).0, t_row(i).0) as u32);
+        let mut indptr = vec![0u32; n + 1];
+        for i in 0..n {
+            indptr[i + 1] = indptr[i] + lens[i];
+        }
+        let out_nnz = indptr[n] as usize;
+        let mut indices = vec![0u32; out_nnz];
+        let mut values = vec![0f32; out_nnz];
+        let scale = 1.0 / (2.0 * n as f32);
+        // --- Parallel merge fill into disjoint row ranges. ---
+        let ic = SendPtr(indices.as_mut_ptr());
+        let vc = SendPtr(values.as_mut_ptr());
+        let indptr_ref = &indptr;
+        pool.scope_chunks(n, 128, |lo, hi| {
+            let _ = (&ic, &vc);
+            for i in lo..hi {
+                let (a_cols, a_vals) = self.row(i);
+                let (b_cols, b_vals) = t_row(i);
+                let mut at = indptr_ref[i] as usize;
+                let (mut x, mut y) = (0usize, 0usize);
+                // SAFETY (all three writes): [indptr[i], indptr[i+1])
+                // ranges are disjoint across rows; each slot written once.
+                while x < a_cols.len() && y < b_cols.len() {
+                    let (c, v) = match a_cols[x].cmp(&b_cols[y]) {
+                        std::cmp::Ordering::Less => {
+                            let e = (a_cols[x], a_vals[x] * scale);
+                            x += 1;
+                            e
+                        }
+                        std::cmp::Ordering::Greater => {
+                            let e = (b_cols[y], b_vals[y] * scale);
+                            y += 1;
+                            e
+                        }
+                        std::cmp::Ordering::Equal => {
+                            // Same f32 sum order as the scatter oracle:
+                            // a·s + b·s, not (a + b)·s.
+                            let e = (a_cols[x], a_vals[x] * scale + b_vals[y] * scale);
+                            x += 1;
+                            y += 1;
+                            e
+                        }
+                    };
+                    unsafe {
+                        *ic.0.add(at) = c;
+                        *vc.0.add(at) = v;
+                    }
+                    at += 1;
+                }
+                while x < a_cols.len() {
+                    unsafe {
+                        *ic.0.add(at) = a_cols[x];
+                        *vc.0.add(at) = a_vals[x] * scale;
+                    }
+                    x += 1;
+                    at += 1;
+                }
+                while y < b_cols.len() {
+                    unsafe {
+                        *ic.0.add(at) = b_cols[y];
+                        *vc.0.add(at) = b_vals[y] * scale;
+                    }
+                    y += 1;
+                    at += 1;
+                }
+                debug_assert_eq!(at, indptr_ref[i + 1] as usize);
+            }
+        });
+        Csr { n_rows: n, indptr, indices, values }
+    }
+
     /// Check structural symmetry of values: p_ij == p_ji for every stored
     /// entry (within tolerance). Used by tests and debug assertions.
     pub fn is_symmetric(&self, tol: f32) -> bool {
@@ -110,6 +308,24 @@ impl Csr {
         }
         true
     }
+}
+
+/// Length of the union of two ascending-sorted index lists.
+#[inline]
+fn merge_union_len(a: &[u32], b: &[u32]) -> usize {
+    let (mut x, mut y, mut c) = (0usize, 0usize, 0usize);
+    while x < a.len() && y < b.len() {
+        match a[x].cmp(&b[y]) {
+            std::cmp::Ordering::Less => x += 1,
+            std::cmp::Ordering::Greater => y += 1,
+            std::cmp::Ordering::Equal => {
+                x += 1;
+                y += 1;
+            }
+        }
+        c += 1;
+    }
+    c + (a.len() - x) + (b.len() - y)
 }
 
 #[cfg(test)]
@@ -185,5 +401,84 @@ mod tests {
         assert_eq!(m.row(0).0.len(), 0);
         assert_eq!(m.row(2).0.len(), 0);
         assert_eq!(m.nnz(), 1);
+    }
+
+    use crate::util::{Pcg32, ThreadPool};
+
+    /// Random conditional matrix shaped like a kNN output: n rows of k
+    /// distinct non-self columns each (row-major fixed-width arrays).
+    fn random_knn_rows(n: usize, k: usize, seed: u64) -> (Vec<u32>, Vec<f32>) {
+        let mut rng = Pcg32::seeded(seed);
+        let mut cols = Vec::with_capacity(n * k);
+        let mut vals = Vec::with_capacity(n * k);
+        for i in 0..n {
+            let mut others: Vec<usize> =
+                rng.sample_indices(n - 1, k).into_iter().map(|j| if j >= i { j + 1 } else { j }).collect();
+            // kNN rows arrive distance-sorted, not column-sorted; shuffle
+            // to make sure from_knn does its own ordering.
+            rng.shuffle(&mut others);
+            for j in others {
+                cols.push(j as u32);
+                vals.push(rng.uniform_f32().max(1e-6));
+            }
+        }
+        (cols, vals)
+    }
+
+    #[test]
+    fn from_knn_matches_from_rows() {
+        let pool = ThreadPool::new(4);
+        for (n, k, seed) in [(40usize, 5usize, 1u64), (200, 12, 2), (7, 6, 3)] {
+            let (cols, vals) = random_knn_rows(n, k, seed);
+            let streamed = Csr::from_knn(&pool, n, k, &cols, &vals);
+            let rows: Vec<Vec<(u32, f32)>> = (0..n)
+                .map(|i| (0..k).map(|j| (cols[i * k + j], vals[i * k + j])).collect())
+                .collect();
+            let reference = Csr::from_rows(n, rows);
+            assert_eq!(streamed, reference, "n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn from_knn_drops_self_columns() {
+        let pool = ThreadPool::new(2);
+        // Row 0 lists itself — must be dropped; row 1 is clean.
+        let cols = vec![0, 1, 0, 2];
+        let vals = vec![0.9, 0.5, 0.25, 0.75];
+        let m = Csr::from_knn(&pool, 2, 2, &cols, &vals);
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(m.row(0), (&[1u32][..], &[0.5f32][..]));
+        assert_eq!(m.row(1), (&[0u32, 2][..], &[0.25f32, 0.75][..]));
+    }
+
+    #[test]
+    fn symmetrize_parallel_matches_scatter_oracle() {
+        let pool = ThreadPool::new(4);
+        for (n, k, seed) in [(3usize, 2usize, 4u64), (50, 7, 5), (301, 15, 6)] {
+            let (cols, vals) = random_knn_rows(n, k, seed);
+            let cond = Csr::from_knn(&pool, n, k, &cols, &vals);
+            let oracle = cond.symmetrize();
+            let streamed = cond.symmetrize_parallel(&pool);
+            // Bit-identical: same pattern, same value bits.
+            assert_eq!(streamed, oracle, "n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn symmetrize_parallel_handles_empty_and_ragged_rows() {
+        let pool = ThreadPool::new(2);
+        let m = Csr::from_rows(4, vec![vec![(1, 1.0)], vec![], vec![(0, 0.3), (1, 0.7)], vec![]]);
+        let oracle = m.symmetrize();
+        let streamed = m.symmetrize_parallel(&pool);
+        assert_eq!(streamed, oracle);
+        assert!(streamed.is_symmetric(1e-6));
+    }
+
+    #[test]
+    fn merge_union_len_basics() {
+        assert_eq!(merge_union_len(&[], &[]), 0);
+        assert_eq!(merge_union_len(&[1, 3], &[]), 2);
+        assert_eq!(merge_union_len(&[1, 3], &[1, 2, 3]), 3);
+        assert_eq!(merge_union_len(&[0, 9], &[1, 2, 3]), 5);
     }
 }

@@ -876,7 +876,8 @@ fn build_nodes_parallel<const DIM: usize>(
             let bounds = child_bounds::<DIM>(sorted, task.lo, task.hi, task.depth);
             for q in 0..fanout {
                 if bounds[q + 1] > bounds[q] {
-                    next.push(Task { id: first + q, lo: bounds[q], hi: bounds[q + 1], depth: task.depth + 1 });
+                    let depth = task.depth + 1;
+                    next.push(Task { id: first + q, lo: bounds[q], hi: bounds[q + 1], depth });
                 }
             }
         }

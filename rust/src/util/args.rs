@@ -226,7 +226,8 @@ mod tests {
 
     #[test]
     fn parses_equals_form_and_flags() {
-        let p = parse(&spec(), "bhsne", &sv(&["--theta=0.8", "--dataset=x", "--verbose", "out.tsv"])).unwrap();
+        let args = sv(&["--theta=0.8", "--dataset=x", "--verbose", "out.tsv"]);
+        let p = parse(&spec(), "bhsne", &args).unwrap();
         assert_eq!(p.get::<f64>("theta").unwrap(), 0.8);
         assert!(p.flag("verbose"));
         assert_eq!(p.positional, vec!["out.tsv"]);

@@ -113,26 +113,45 @@ impl ThreadPool {
     where
         F: Fn(usize, usize) + Sync,
     {
+        self.scope_chunks_with(n, chunk, || (), |_, lo, hi| body(lo, hi));
+    }
+
+    /// Like [`ThreadPool::scope_chunks`] but with per-worker state: `init`
+    /// runs at most once per worker thread (lazily, on its first claimed
+    /// chunk) and the state is handed to every `body` call on that worker.
+    /// This is what lets the kNN search and the perplexity solver reuse
+    /// heaps/stacks/scratch buffers across a whole batch of rows instead
+    /// of allocating per row.
+    pub fn scope_chunks_with<S, I, F>(&self, n: usize, chunk: usize, init: I, body: F)
+    where
+        I: Fn() -> S + Sync,
+        F: Fn(&mut S, usize, usize) + Sync,
+    {
         if n == 0 {
             return;
         }
         let chunk = chunk.max(1);
         if n <= chunk || self.n_threads == 1 {
-            body(0, n);
+            let mut state = init();
+            body(&mut state, 0, n);
             return;
         }
         let cursor = AtomicUsize::new(0);
+        let init_ref = &init;
         let body_ref = &body;
         let cursor_ref = &cursor;
         self.scoped(|scope| {
             for _ in 0..self.n_threads {
-                scope.run(move || loop {
-                    let lo = cursor_ref.fetch_add(chunk, Ordering::Relaxed);
-                    if lo >= n {
-                        break;
+                scope.run(move || {
+                    let mut state: Option<S> = None;
+                    loop {
+                        let lo = cursor_ref.fetch_add(chunk, Ordering::Relaxed);
+                        if lo >= n {
+                            break;
+                        }
+                        let hi = (lo + chunk).min(n);
+                        body_ref(state.get_or_insert_with(init_ref), lo, hi);
                     }
-                    let hi = (lo + chunk).min(n);
-                    body_ref(lo, hi);
                 });
             }
         });
@@ -159,9 +178,11 @@ impl ThreadPool {
 }
 
 /// Raw-pointer wrapper so disjoint-index writes can cross the closure
-/// boundary. Soundness argument lives at each use site. (Manual Copy —
-/// derive would demand `T: Copy`, but raw pointers are always Copy.)
-struct SendPtr<T>(*mut T);
+/// boundary. Soundness argument lives at each use site — the crate-wide
+/// convention is that every write through a `SendPtr` targets an index
+/// range owned by exactly one pool job. (Manual Copy — derive would
+/// demand `T: Copy`, but raw pointers are always Copy.)
+pub(crate) struct SendPtr<T>(pub(crate) *mut T);
 impl<T> Clone for SendPtr<T> {
     fn clone(&self) -> Self {
         *self
@@ -275,6 +296,33 @@ mod tests {
             }
         });
         assert_eq!(sum.load(Ordering::Relaxed), 0 + 1 + 2 + 3 + 4);
+    }
+
+    #[test]
+    fn scope_chunks_with_state_covers_all_indices() {
+        let pool = ThreadPool::new(4);
+        let n = 5_000;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        let inits = AtomicU64::new(0);
+        pool.scope_chunks_with(
+            n,
+            32,
+            || {
+                inits.fetch_add(1, Ordering::Relaxed);
+                Vec::<usize>::new()
+            },
+            |scratch, lo, hi| {
+                scratch.clear();
+                scratch.extend(lo..hi);
+                for &i in scratch.iter() {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                }
+            },
+        );
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        // State is per worker, not per chunk: far fewer inits than chunks.
+        let inits = inits.load(Ordering::Relaxed);
+        assert!(inits >= 1 && inits <= 4, "inits={inits}");
     }
 
     #[test]

@@ -110,7 +110,8 @@ impl Gen<Points> for PointCloud {
                 for i in 0..n {
                     let base = (i % 3) as f32;
                     for d in 0..self.dim {
-                        data[i * self.dim + d] = base + if rng.below(4) == 0 { rng.uniform_f32() * 1e-5 } else { 0.0 };
+                        let jitter = if rng.below(4) == 0 { rng.uniform_f32() * 1e-5 } else { 0.0 };
+                        data[i * self.dim + d] = base + jitter;
                     }
                 }
             }

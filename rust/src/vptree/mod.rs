@@ -7,11 +7,30 @@
 //! furthest neighbor currently in the candidate list).
 //!
 //! Implementation notes:
-//! * Nodes live in a flat `Vec` (indices, not `Box` pointers) — better
-//!   locality and trivially send-able across the thread pool.
-//! * The build partitions around the *median* distance to the vantage
-//!   point with `select_nth_unstable`, giving a balanced tree in
-//!   O(N log N) regardless of data distribution.
+//! * Nodes live in a flat arena (indices, not `Box` pointers), allocated
+//!   up front: because every split is a *median* split, the subtree sizes
+//!   — and therefore the pre-order arena layout — are a pure function of
+//!   `n`, so a subtree over `m` items always occupies the contiguous slot
+//!   range `[base, base + m)` and can be built independently of its
+//!   siblings.
+//! * Each partition computes the distance of every item to the vantage
+//!   point exactly once into a reusable `(dist, idx)` buffer and selects
+//!   the median on the cached values; the old recursive build paid two
+//!   full D-dimensional distance evaluations per *comparison* inside
+//!   `select_nth_unstable_by`.
+//! * [`VpTree::build_parallel`] fans independent subtrees out on the
+//!   thread pool below the top splits (whose distance passes are
+//!   themselves pool-parallel). The random vantage choices are replayed
+//!   from the same seeded pre-order pick sequence the serial build
+//!   consumes, and the partition performs the identical comparator
+//!   decisions, so the parallel build is **bit-identical** to
+//!   [`VpTree::build`] — same vantage points, same tie order, same arena
+//!   — which the serial path (kept for small `n`) doubles as the test
+//!   oracle for.
+//! * Queries are batched: [`VpTree::knn_all`] reuses one
+//!   [`SearchScratch`] (candidate heap + DFS stack) per worker thread and
+//!   writes each row straight into the output arrays, so the query phase
+//!   performs no per-query allocation.
 //! * The metric is pluggable ([`Metric`]); Euclidean over `f32` rows is
 //!   the default and what every experiment uses, matching the paper.
 
@@ -19,15 +38,23 @@ mod metric;
 mod search;
 
 pub use metric::{Cosine, Euclidean, Manhattan, Metric};
-pub use search::NeighborHeap;
+pub use search::{NeighborHeap, SearchScratch};
 
+use crate::util::pool::SendPtr;
 use crate::util::{Pcg32, ThreadPool};
 
 const NO_CHILD: u32 = u32::MAX;
 
+/// Below this many points the parallel build is all fork overhead; the
+/// serial arena build runs instead (and remains the correctness oracle).
+const PARALLEL_BUILD_MIN: usize = 2048;
+
+/// Partitions at least this large fan their distance pass over the pool.
+const PARALLEL_DIST_MIN: usize = 4096;
+
 /// One vp-tree node: the vantage point's dataset index, the ball radius
 /// (median distance of its subtree items), and child slots.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 struct Node {
     /// Index of the vantage point in the dataset.
     item: u32,
@@ -35,6 +62,55 @@ struct Node {
     radius: f32,
     left: u32,
     right: u32,
+}
+
+const EMPTY_NODE: Node = Node { item: 0, radius: 0.0, left: NO_CHILD, right: NO_CHILD };
+
+/// Distance comparator shared by every partition (serial and parallel
+/// paths must make identical tie decisions).
+#[inline]
+fn by_dist(a: &(f32, u32), b: &(f32, u32)) -> std::cmp::Ordering {
+    a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal)
+}
+
+/// Replay the seeded vantage-point pick sequence without touching data.
+///
+/// The build consumes exactly one `below(m)` draw per node, in pre-order,
+/// and the subtree sizes are a pure function of `n` (median splits), so
+/// replaying the size recursion yields every pick up front. This is what
+/// lets parallel subtree builds share one seeded RNG with no cross-thread
+/// handoff: the subtree at arena slot `base` over `m` items owns
+/// `picks[base..base + m]`.
+fn vantage_picks(n: usize, seed: u64) -> Vec<u32> {
+    let mut rng = Pcg32::new(seed, 0x7674 /* "vt" */);
+    let mut picks = Vec::with_capacity(n);
+    let mut stack: Vec<u32> = Vec::with_capacity(64);
+    stack.push(n as u32);
+    while let Some(m) = stack.pop() {
+        picks.push(rng.below(m));
+        let rest = m - 1;
+        if rest > 0 {
+            let mid = (rest - 1) / 2;
+            let left = mid + 1;
+            let right = rest - left;
+            if right > 0 {
+                stack.push(right);
+            }
+            stack.push(left);
+        }
+    }
+    picks
+}
+
+/// Disjoint views of one subtree: its item permutation, its node-arena
+/// range, and its pre-order pick slice (`base` is the absolute arena
+/// offset of the subtree root). Used both as the child views returned by
+/// a partition step and as the unit of work fanned out on the pool.
+struct Subtree<'t> {
+    base: usize,
+    items: &'t mut [u32],
+    nodes: &'t mut [Node],
+    picks: &'t [u32],
 }
 
 /// A built vantage-point tree over a borrowed row-major dataset.
@@ -48,9 +124,15 @@ pub struct VpTree<'a, M: Metric = Euclidean> {
 }
 
 impl<'a> VpTree<'a, Euclidean> {
-    /// Build with the Euclidean metric.
+    /// Build with the Euclidean metric (serial).
     pub fn build(data: &'a [f32], n: usize, dim: usize, seed: u64) -> Self {
         Self::build_with(data, n, dim, seed, Euclidean)
+    }
+
+    /// Build with the Euclidean metric on the pool. Bit-identical to
+    /// [`VpTree::build`] with the same seed.
+    pub fn build_parallel(pool: &ThreadPool, data: &'a [f32], n: usize, dim: usize, seed: u64) -> Self {
+        Self::build_parallel_with(pool, data, n, dim, seed, Euclidean)
     }
 }
 
@@ -63,59 +145,226 @@ impl<'a, M: Metric> VpTree<'a, M> {
     pub fn build_with(data: &'a [f32], n: usize, dim: usize, seed: u64, metric: M) -> Self {
         assert!(data.len() >= n * dim, "data shorter than n*dim");
         assert!(n > 0, "empty dataset");
-        let mut rng = Pcg32::new(seed, 0x7674 /* "vt" */);
+        let picks = vantage_picks(n, seed);
         let mut items: Vec<u32> = (0..n as u32).collect();
-        let mut nodes = Vec::with_capacity(n);
-        let root = Self::build_rec(data, dim, &metric, &mut items[..], &mut nodes, &mut rng);
-        VpTree { data, dim, n, nodes, root, metric }
+        let mut nodes = vec![EMPTY_NODE; n];
+        let mut scratch: Vec<(f32, u32)> = Vec::with_capacity(n.saturating_sub(1));
+        Self::build_range(data, dim, &metric, &mut items, &mut nodes, 0, &picks, &mut scratch);
+        VpTree { data, dim, n, nodes, root: 0, metric }
+    }
+
+    /// Parallel build: the top partitions run their distance passes on the
+    /// pool, then independent subtrees fan out one per pool job. The pick
+    /// sequence, partition comparator, and arena layout are shared with
+    /// [`VpTree::build_with`], so the result is bit-identical to the
+    /// serial build (which small `n` falls back to).
+    pub fn build_parallel_with(
+        pool: &ThreadPool,
+        data: &'a [f32],
+        n: usize,
+        dim: usize,
+        seed: u64,
+        metric: M,
+    ) -> Self
+    where
+        M: Sync,
+    {
+        assert!(data.len() >= n * dim, "data shorter than n*dim");
+        assert!(n > 0, "empty dataset");
+        if n < PARALLEL_BUILD_MIN || pool.n_threads() == 1 {
+            return Self::build_with(data, n, dim, seed, metric);
+        }
+        let picks = vantage_picks(n, seed);
+        let mut items: Vec<u32> = (0..n as u32).collect();
+        let mut nodes = vec![EMPTY_NODE; n];
+        // Fan-out grain: several subtrees per worker smooth out the size
+        // imbalance left by the top median splits.
+        let grain = (n / (pool.n_threads() * 4)).max(PARALLEL_BUILD_MIN / 4);
+        let mut tasks: Vec<Subtree<'_>> = Vec::new();
+        {
+            let mut scratch: Vec<(f32, u32)> = Vec::with_capacity(n - 1);
+            Self::split_top(
+                pool,
+                data,
+                dim,
+                &metric,
+                &mut items,
+                &mut nodes,
+                0,
+                &picks,
+                grain,
+                &mut scratch,
+                &mut tasks,
+            );
+        }
+        let metric_ref = &metric;
+        pool.scoped(|scope| {
+            for task in tasks {
+                scope.run(move || {
+                    let mut scratch: Vec<(f32, u32)> = Vec::with_capacity(task.items.len());
+                    Self::build_range(
+                        data,
+                        dim,
+                        metric_ref,
+                        task.items,
+                        task.nodes,
+                        task.base,
+                        task.picks,
+                        &mut scratch,
+                    );
+                });
+            }
+        });
+        VpTree { data, dim, n, nodes, root: 0, metric }
     }
 
     fn row(data: &[f32], dim: usize, i: u32) -> &[f32] {
         &data[i as usize * dim..(i as usize + 1) * dim]
     }
 
-    /// Recursive build over the sub-slice `items`; returns node index.
-    fn build_rec(
-        data: &'a [f32],
+    /// Shared partition tail for both build paths: select the median on
+    /// the filled `scratch` (one `(dist, idx)` per non-vp item, in item
+    /// order), write the vantage node at `nodes[0]` with absolute child
+    /// links, and split the subtree views into its children. Keeping the
+    /// tie order, link arithmetic, and pick-slice split in ONE place is
+    /// what makes the serial/parallel bit-identical guarantee structural
+    /// rather than copy-discipline.
+    fn link_children<'s>(
+        items: &'s mut [u32],
+        nodes: &'s mut [Node],
+        base: usize,
+        picks: &'s [u32],
+        scratch: &mut [(f32, u32)],
+    ) -> (Subtree<'s>, Option<Subtree<'s>>) {
+        debug_assert_eq!(items.len(), nodes.len());
+        debug_assert_eq!(items.len(), picks.len());
+        debug_assert_eq!(scratch.len(), items.len() - 1);
+        let vp = items[0];
+        let (_, rest) = items.split_at_mut(1);
+        let mid = (rest.len() - 1) / 2;
+        scratch.select_nth_unstable_by(mid, by_dist);
+        let radius = scratch[mid].0;
+        for (slot, &(_, i)) in scratch.iter().enumerate() {
+            rest[slot] = i;
+        }
+        let left_len = mid + 1;
+        let right_len = rest.len() - left_len;
+        let (head, nodes_rest) = nodes.split_at_mut(1);
+        head[0] = Node {
+            item: vp,
+            radius,
+            left: (base + 1) as u32,
+            right: if right_len > 0 { (base + 1 + left_len) as u32 } else { NO_CHILD },
+        };
+        let (items_l, items_r) = rest.split_at_mut(left_len);
+        let (nodes_l, nodes_r) = nodes_rest.split_at_mut(left_len);
+        let (picks_l, picks_r) = picks[1..].split_at(left_len);
+        let left = Subtree { base: base + 1, items: items_l, nodes: nodes_l, picks: picks_l };
+        let right = if right_len > 0 {
+            Some(Subtree { base: base + 1 + left_len, items: items_r, nodes: nodes_r, picks: picks_r })
+        } else {
+            None
+        };
+        (left, right)
+    }
+
+    /// Serial subtree build over the relative views `items`/`nodes`
+    /// (both of the subtree's length) consuming its `picks` slice; `base`
+    /// is the absolute arena offset of `nodes[0]` (child links are
+    /// absolute). One distance evaluation per item per level, into the
+    /// caller's reusable scratch buffer.
+    #[allow(clippy::too_many_arguments)]
+    fn build_range(
+        data: &[f32],
         dim: usize,
         metric: &M,
         items: &mut [u32],
-        nodes: &mut Vec<Node>,
-        rng: &mut Pcg32,
-    ) -> u32 {
-        if items.is_empty() {
-            return NO_CHILD;
+        nodes: &mut [Node],
+        base: usize,
+        picks: &[u32],
+        scratch: &mut Vec<(f32, u32)>,
+    ) {
+        // Move the seeded random vantage point to slot 0.
+        items.swap(0, picks[0] as usize);
+        if items.len() == 1 {
+            nodes[0] = Node { item: items[0], radius: 0.0, left: NO_CHILD, right: NO_CHILD };
+            return;
         }
-        // Move a random vantage point to slot 0.
-        let pick = rng.below_usize(items.len());
-        items.swap(0, pick);
-        let vp = items[0];
-        let id = nodes.len() as u32;
-        nodes.push(Node { item: vp, radius: 0.0, left: NO_CHILD, right: NO_CHILD });
-
-        let rest = &mut items[1..];
-        if rest.is_empty() {
-            return id;
+        let vp_row = Self::row(data, dim, items[0]);
+        scratch.clear();
+        scratch.extend(items[1..].iter().map(|&i| (metric.dist(vp_row, Self::row(data, dim, i)), i)));
+        let (l, r) = Self::link_children(items, nodes, base, picks, scratch);
+        Self::build_range(data, dim, metric, l.items, l.nodes, l.base, l.picks, scratch);
+        if let Some(r) = r {
+            Self::build_range(data, dim, metric, r.items, r.nodes, r.base, r.picks, scratch);
         }
-        // Partition the remainder around the median distance to vp.
-        let vp_row = Self::row(data, dim, vp);
-        let mid = (rest.len() - 1) / 2;
-        rest.select_nth_unstable_by(mid, |&a, &b| {
-            let da = metric.dist(vp_row, Self::row(data, dim, a));
-            let db = metric.dist(vp_row, Self::row(data, dim, b));
-            da.partial_cmp(&db).unwrap_or(std::cmp::Ordering::Equal)
-        });
-        let radius = metric.dist(vp_row, Self::row(data, dim, rest[mid]));
-        nodes[id as usize].radius = radius;
+    }
 
-        // Inside ball: [0, mid]; outside: (mid, len). The median element
-        // itself goes left so the left child is never empty.
-        let (inside, outside) = rest.split_at_mut(mid + 1);
-        let left = Self::build_rec(data, dim, metric, inside, nodes, rng);
-        let right = Self::build_rec(data, dim, metric, outside, nodes, rng);
-        nodes[id as usize].left = left;
-        nodes[id as usize].right = right;
-        id
+    /// Partition the top of the tree, collecting ≤ `grain`-sized subtrees
+    /// into `tasks` for the fan-out phase. The distance pass of each top
+    /// partition is itself parallelized over the pool (it is the dominant
+    /// serial cost at the root: one D-dimensional evaluation per item);
+    /// the partition tail is the same [`VpTree::link_children`] the
+    /// serial build uses.
+    #[allow(clippy::too_many_arguments)]
+    fn split_top<'t>(
+        pool: &ThreadPool,
+        data: &[f32],
+        dim: usize,
+        metric: &M,
+        items: &'t mut [u32],
+        nodes: &'t mut [Node],
+        base: usize,
+        picks: &'t [u32],
+        grain: usize,
+        scratch: &mut Vec<(f32, u32)>,
+        tasks: &mut Vec<Subtree<'t>>,
+    ) where
+        M: Sync,
+    {
+        if items.len() <= grain {
+            tasks.push(Subtree { base, items, nodes, picks });
+            return;
+        }
+        items.swap(0, picks[0] as usize);
+        let vp_row = Self::row(data, dim, items[0]);
+        let rest_len = items.len() - 1;
+        scratch.clear();
+        if rest_len >= PARALLEL_DIST_MIN {
+            scratch.resize(rest_len, (0f32, 0u32));
+            // Disjoint chunk writes into the scratch buffer.
+            let sc = SendPtr(scratch.as_mut_ptr());
+            let rest_ro: &[u32] = &items[1..];
+            pool.scope_chunks(rest_len, 512, |lo, hi| {
+                let _ = &sc;
+                for j in lo..hi {
+                    let d = metric.dist(vp_row, Self::row(data, dim, rest_ro[j]));
+                    // SAFETY: chunk ranges are disjoint; each slot is
+                    // written exactly once.
+                    unsafe { *sc.0.add(j) = (d, rest_ro[j]) };
+                }
+            });
+        } else {
+            scratch
+                .extend(items[1..].iter().map(|&i| (metric.dist(vp_row, Self::row(data, dim, i)), i)));
+        }
+        let (l, r) = Self::link_children(items, nodes, base, picks, scratch);
+        Self::split_top(pool, data, dim, metric, l.items, l.nodes, l.base, l.picks, grain, scratch, tasks);
+        if let Some(r) = r {
+            Self::split_top(
+                pool,
+                data,
+                dim,
+                metric,
+                r.items,
+                r.nodes,
+                r.base,
+                r.picks,
+                grain,
+                scratch,
+                tasks,
+            );
+        }
     }
 
     /// Number of indexed points.
@@ -129,23 +378,52 @@ impl<'a, M: Metric> VpTree<'a, M> {
 
     /// k nearest neighbors of an arbitrary query row, ascending by
     /// distance. If `exclude` is `Some(i)`, dataset item `i` is skipped
-    /// (self-exclusion for all-pairs kNN).
+    /// (self-exclusion for all-pairs kNN). Allocating convenience wrapper
+    /// over [`VpTree::knn_into`].
     pub fn knn(&self, query: &[f32], k: usize, exclude: Option<u32>) -> Vec<(u32, f32)> {
         assert_eq!(query.len(), self.dim);
-        let mut heap = NeighborHeap::new(k);
-        self.search(self.root, query, exclude, &mut heap);
-        heap.into_sorted()
+        if k == 0 {
+            return Vec::new();
+        }
+        let mut scratch = SearchScratch::new(k);
+        self.search(self.root, query, exclude, &mut scratch);
+        scratch.heap.into_sorted()
+    }
+
+    /// k nearest neighbors written straight into `out_idx`/`out_dst`
+    /// (first `k` slots each), reusing the caller's scratch — zero
+    /// allocations on a warm scratch. Returns the number of neighbors
+    /// found (< k only when fewer than k candidates exist).
+    pub fn knn_into(
+        &self,
+        query: &[f32],
+        k: usize,
+        exclude: Option<u32>,
+        scratch: &mut SearchScratch,
+        out_idx: &mut [u32],
+        out_dst: &mut [f32],
+    ) -> usize {
+        assert_eq!(query.len(), self.dim);
+        if k == 0 {
+            return 0;
+        }
+        scratch.heap.reset(k);
+        self.search(self.root, query, exclude, scratch);
+        scratch.heap.drain_sorted_into(out_idx, out_dst)
     }
 
     /// Iterative DFS with τ-pruning. The child containing the query is
     /// searched first (better τ earlier → more pruning), per the paper's
-    /// description of the search order.
-    fn search(&self, root: u32, query: &[f32], exclude: Option<u32>, heap: &mut NeighborHeap) {
+    /// description of the search order. Candidates accumulate in
+    /// `scratch.heap`; the DFS stack is `scratch.stack` (reused across
+    /// queries — recursion overhead and per-query allocation both gone).
+    fn search(&self, root: u32, query: &[f32], exclude: Option<u32>, scratch: &mut SearchScratch) {
         if root == NO_CHILD {
             return;
         }
-        // Explicit stack of node ids avoids recursion overhead on deep trees.
-        let mut stack: Vec<u32> = Vec::with_capacity(64);
+        let heap = &mut scratch.heap;
+        let stack = &mut scratch.stack;
+        stack.clear();
         stack.push(root);
         while let Some(id) = stack.pop() {
             let node = self.nodes[id as usize];
@@ -181,9 +459,13 @@ impl<'a, M: Metric> VpTree<'a, M> {
         }
     }
 
-    /// All-pairs kNN: for every dataset row, its `k` nearest other rows.
-    /// Parallelized over the thread pool; output is row-major
-    /// `(indices[n*k], distances[n*k])`, each row ascending by distance.
+    /// All-pairs kNN: for every dataset row, its `min(k, n-1)` nearest
+    /// other rows. Parallelized over the thread pool with one reused
+    /// [`SearchScratch`] per worker; output is row-major
+    /// `(indices[n*k'], distances[n*k'])` with `k' = min(k, n-1)`, each
+    /// row full and ascending by distance. For `n = 1` (no possible
+    /// neighbor) the output is cleanly empty — no phantom self-neighbor
+    /// padding.
     pub fn knn_all(&self, pool: &ThreadPool, k: usize) -> (Vec<u32>, Vec<f32>)
     where
         M: Sync,
@@ -192,27 +474,26 @@ impl<'a, M: Metric> VpTree<'a, M> {
         let n = self.n;
         let mut idx = vec![0u32; n * k];
         let mut dst = vec![0f32; n * k];
+        if k == 0 {
+            return (idx, dst);
+        }
         let idx_slices = SliceCells::new(&mut idx, k);
         let dst_slices = SliceCells::new(&mut dst, k);
-        pool.scope_chunks(n, 32, |lo, hi| {
-            for i in lo..hi {
-                let q = Self::row(self.data, self.dim, i as u32);
-                let nn = self.knn(q, k, Some(i as u32));
-                let oi = idx_slices.get(i);
-                let od = dst_slices.get(i);
-                for (j, &(ni, nd)) in nn.iter().enumerate() {
-                    oi[j] = ni;
-                    od[j] = nd;
+        pool.scope_chunks_with(
+            n,
+            32,
+            || SearchScratch::new(k),
+            |scratch, lo, hi| {
+                for i in lo..hi {
+                    let q = Self::row(self.data, self.dim, i as u32);
+                    let oi = idx_slices.get(i);
+                    let od = dst_slices.get(i);
+                    let got = self.knn_into(q, k, Some(i as u32), scratch, oi, od);
+                    // k ≤ n-1 candidates always exist, so rows are full.
+                    debug_assert_eq!(got, k);
                 }
-                // If fewer than k neighbors exist (tiny data), pad by
-                // repeating the last neighbor — callers use k ≤ n-1 so this
-                // only triggers for degenerate n.
-                for j in nn.len()..k {
-                    oi[j] = oi[j.saturating_sub(1)];
-                    od[j] = od[j.saturating_sub(1)];
-                }
-            }
-        });
+            },
+        );
         (idx, dst)
     }
 }
@@ -329,6 +610,35 @@ mod tests {
     }
 
     #[test]
+    fn knn_all_single_point_is_cleanly_empty() {
+        // n = 1 has no possible neighbor: k clamps to 0 and the output is
+        // empty — no NeighborHeap(0) panic, no phantom self-neighbor row.
+        let data = vec![1.0f32, 2.0];
+        let tree = VpTree::build(&data, 1, 2, 1);
+        let pool = ThreadPool::new(2);
+        let (idx, dst) = tree.knn_all(&pool, 5);
+        assert!(idx.is_empty());
+        assert!(dst.is_empty());
+    }
+
+    #[test]
+    fn knn_all_two_points_clamps_to_one_neighbor() {
+        let data = vec![0.0f32, 0.0, 3.0, 4.0];
+        let tree = VpTree::build(&data, 2, 2, 1);
+        let pool = ThreadPool::new(2);
+        let (idx, dst) = tree.knn_all(&pool, 8);
+        assert_eq!(idx, vec![1, 0]);
+        assert_eq!(dst, vec![5.0, 5.0]);
+    }
+
+    #[test]
+    fn knn_zero_k_returns_empty() {
+        let data = random_points(10, 2, 4);
+        let tree = VpTree::build(&data, 10, 2, 4);
+        assert!(tree.knn(&data[0..2], 0, None).is_empty());
+    }
+
+    #[test]
     fn knn_all_matches_per_query() {
         let (n, dim, k) = (120, 3, 7);
         let data = random_points(n, dim, 5);
@@ -343,6 +653,54 @@ mod tests {
                 assert_ne!(idx[q * k + j], q as u32);
             }
         }
+    }
+
+    #[test]
+    fn knn_into_matches_knn() {
+        let (n, dim, k) = (150, 4, 9);
+        let data = random_points(n, dim, 6);
+        let tree = VpTree::build(&data, n, dim, 6);
+        let mut scratch = SearchScratch::new(k);
+        let mut oi = vec![0u32; k];
+        let mut od = vec![0f32; k];
+        for q in 0..n {
+            let row = &data[q * dim..(q + 1) * dim];
+            let want = tree.knn(row, k, Some(q as u32));
+            let got = tree.knn_into(row, k, Some(q as u32), &mut scratch, &mut oi, &mut od);
+            assert_eq!(got, want.len());
+            for j in 0..got {
+                assert_eq!((oi[j], od[j]), want[j], "q={q} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_build_is_bit_identical_to_serial() {
+        // Above PARALLEL_BUILD_MIN so the fan-out path actually runs; the
+        // arenas must match node for node (same vantage picks, same tie
+        // order, same radii bits, same child links).
+        let (n, dim) = (PARALLEL_BUILD_MIN + 713, 8);
+        let data = random_points(n, dim, 21);
+        let pool = ThreadPool::new(4);
+        let serial = VpTree::build(&data, n, dim, 42);
+        let par = VpTree::build_parallel(&pool, &data, n, dim, 42);
+        assert_eq!(serial.root, par.root);
+        assert_eq!(serial.nodes, par.nodes);
+    }
+
+    #[test]
+    fn parallel_build_bit_identical_on_duplicate_heavy_data() {
+        // All-coincident points maximize distance ties: the comparator's
+        // Equal fallback must break them identically on both paths.
+        let (n, dim) = (PARALLEL_BUILD_MIN + 101, 3);
+        let mut data = vec![1.0f32; n * dim];
+        for v in data.iter_mut().skip(n * dim / 2) {
+            *v = 2.0;
+        }
+        let pool = ThreadPool::new(3);
+        let serial = VpTree::build(&data, n, dim, 7);
+        let par = VpTree::build_parallel(&pool, &data, n, dim, 7);
+        assert_eq!(serial.nodes, par.nodes);
     }
 
     #[test]
@@ -396,5 +754,30 @@ mod tests {
         let nn1 = t1.knn(&data[0..dim], 8, Some(0));
         let nn2 = t2.knn(&data[0..dim], 8, Some(0));
         assert_eq!(nn1, nn2);
+    }
+
+    #[test]
+    fn vantage_picks_counts_and_ranges() {
+        for n in [1usize, 2, 3, 7, 100, 1001] {
+            let picks = vantage_picks(n, 9);
+            assert_eq!(picks.len(), n, "one pick per node");
+            // Verify each pick is in range for its subtree size by
+            // replaying the same size recursion.
+            let mut stack = vec![n as u32];
+            let mut at = 0usize;
+            while let Some(m) = stack.pop() {
+                assert!(picks[at] < m, "pick {} out of range {m}", picks[at]);
+                at += 1;
+                let rest = m - 1;
+                if rest > 0 {
+                    let mid = (rest - 1) / 2;
+                    if rest - mid - 1 > 0 {
+                        stack.push(rest - mid - 1);
+                    }
+                    stack.push(mid + 1);
+                }
+            }
+            assert_eq!(at, n);
+        }
     }
 }

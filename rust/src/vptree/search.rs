@@ -1,4 +1,5 @@
-//! Bounded max-heap of candidate neighbors for kNN search.
+//! Bounded max-heap of candidate neighbors for kNN search, plus the
+//! reusable per-thread scratch state for batched queries.
 //!
 //! Keeps the k closest items seen so far; `tau()` (the distance to the
 //! furthest kept neighbor, or +∞ while the heap is underfull) drives the
@@ -12,10 +13,34 @@ pub struct NeighborHeap {
     heap: Vec<(f32, u32)>,
 }
 
+/// Reusable scratch for batched kNN queries: the candidate heap and the
+/// DFS node stack survive across queries so each query on a warm scratch
+/// performs zero heap allocations.
+#[derive(Debug)]
+pub struct SearchScratch {
+    pub(crate) heap: NeighborHeap,
+    pub(crate) stack: Vec<u32>,
+}
+
+impl SearchScratch {
+    pub fn new(k: usize) -> Self {
+        SearchScratch { heap: NeighborHeap::new(k.max(1)), stack: Vec::with_capacity(64) }
+    }
+}
+
 impl NeighborHeap {
     pub fn new(k: usize) -> Self {
         assert!(k > 0, "k must be positive");
         NeighborHeap { k, heap: Vec::with_capacity(k + 1) }
+    }
+
+    /// Re-arm the heap for a fresh query of size `k`, keeping the backing
+    /// allocation.
+    pub fn reset(&mut self, k: usize) {
+        assert!(k > 0, "k must be positive");
+        self.k = k;
+        self.heap.clear();
+        self.heap.reserve(k + 1);
     }
 
     /// Current pruning radius: max kept distance once full, else +∞.
@@ -52,6 +77,22 @@ impl NeighborHeap {
     pub fn into_sorted(mut self) -> Vec<(u32, f32)> {
         self.heap.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
         self.heap.into_iter().map(|(d, i)| (i, d)).collect()
+    }
+
+    /// Sort the kept candidates ascending by distance, write them into the
+    /// first `len()` slots of `idx`/`dst`, and clear the heap for reuse.
+    /// Returns the number of slots written. The sort is identical to
+    /// [`NeighborHeap::into_sorted`], so batched and one-shot queries
+    /// produce the same ordering (ties included).
+    pub fn drain_sorted_into(&mut self, idx: &mut [u32], dst: &mut [f32]) -> usize {
+        self.heap.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+        let m = self.heap.len();
+        for (j, &(d, i)) in self.heap.iter().enumerate() {
+            idx[j] = i;
+            dst[j] = d;
+        }
+        self.heap.clear();
+        m
     }
 
     fn sift_up(&mut self, mut i: usize) {
@@ -113,6 +154,49 @@ mod tests {
         assert_eq!(h.tau(), 2.0);
         h.offer(2, 0.5);
         assert_eq!(h.tau(), 1.0);
+    }
+
+    #[test]
+    fn reset_reuses_allocation_and_resizes() {
+        let mut h = NeighborHeap::new(2);
+        h.offer(0, 3.0);
+        h.offer(1, 1.0);
+        h.reset(3);
+        assert!(h.is_empty());
+        assert_eq!(h.tau(), f32::INFINITY);
+        for (i, d) in [5.0, 1.0, 4.0, 2.0].iter().enumerate() {
+            h.offer(i as u32, *d);
+        }
+        let mut idx = [0u32; 3];
+        let mut dst = [0f32; 3];
+        assert_eq!(h.drain_sorted_into(&mut idx, &mut dst), 3);
+        assert_eq!(dst, [1.0, 2.0, 4.0]);
+        assert_eq!(idx, [1, 3, 2]);
+        // Drained: ready for the next query without reallocation.
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn drain_matches_into_sorted() {
+        let mut rng = Pcg32::seeded(17);
+        for _ in 0..20 {
+            let k = 1 + rng.below_usize(8);
+            let ds: Vec<f32> = (0..40).map(|_| rng.uniform_f32()).collect();
+            let mut a = NeighborHeap::new(k);
+            let mut b = NeighborHeap::new(k);
+            for (i, &d) in ds.iter().enumerate() {
+                a.offer(i as u32, d);
+                b.offer(i as u32, d);
+            }
+            let want = a.into_sorted();
+            let mut idx = vec![0u32; k];
+            let mut dst = vec![0f32; k];
+            let m = b.drain_sorted_into(&mut idx, &mut dst);
+            assert_eq!(m, want.len());
+            for j in 0..m {
+                assert_eq!((idx[j], dst[j]), want[j]);
+            }
+        }
     }
 
     #[test]

@@ -2,10 +2,12 @@
 //! the similarity pipeline, trees, gradient, and optimizer.
 
 use bhsne::knn::{BruteKnn, KnnBackend, VpTreeKnn};
+use bhsne::sne::sparse::Csr;
 use bhsne::sne::{gradient, input, RepulsionMethod};
 use bhsne::spatial::{BhTree, CellSizeMode};
 use bhsne::util::quickcheck::{check, Gen, PointCloud, Points, UniformF64};
 use bhsne::util::{Pcg32, ThreadPool};
+use bhsne::vptree::VpTree;
 
 #[test]
 fn prop_joint_p_is_a_distribution() {
@@ -88,6 +90,64 @@ fn prop_quadtree_counts_match_any_cloud() {
 }
 
 #[test]
+fn prop_parallel_vptree_build_equals_serial() {
+    // The PointCloud generator mixes uniform, clustered, and
+    // duplicate-heavy regimes; sizes straddle the parallel-build
+    // threshold (2048) so both the fan-out path and the serial fallback
+    // are exercised. `knn_all` output must be *identical* — indices and
+    // distance bits — because the parallel build replays the serial
+    // pick sequence and tie order.
+    let pool = ThreadPool::new(4);
+    let gen = PointCloud { dim: 3, min_n: 1800, max_n: 2800 };
+    check(108, 6, &gen, |p: &Points| {
+        let serial = VpTree::build(&p.data, p.n, p.dim, 31);
+        let par = VpTree::build_parallel(&pool, &p.data, p.n, p.dim, 31);
+        let k = 6;
+        let (si, sd) = serial.knn_all(&pool, k);
+        let (pi, pd) = par.knn_all(&pool, k);
+        if si != pi {
+            let at = si.iter().zip(&pi).position(|(a, b)| a != b).unwrap();
+            return Err(format!("n={}: index mismatch at slot {at}: {} vs {}", p.n, si[at], pi[at]));
+        }
+        if sd != pd {
+            let at = sd.iter().zip(&pd).position(|(a, b)| a != b).unwrap();
+            return Err(format!("n={}: distance mismatch at slot {at}: {} vs {}", p.n, sd[at], pd[at]));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_streaming_symmetrize_equals_scatter_oracle() {
+    // Random conditional matrices shaped like the input stage's
+    // (fixed-k kNN rows, no self loops): the streaming counting-transpose
+    // + merge path must reproduce the scatter implementation exactly.
+    let pool = ThreadPool::new(4);
+    let gen = UniformF64 { lo: 0.0, hi: 1.0 };
+    check(109, 25, &gen, |&u: &f64| {
+        let seed = (u * 1e9) as u64 + 1;
+        let mut rng = Pcg32::seeded(seed);
+        let n = 20 + rng.below_usize(300);
+        let k = 1 + rng.below_usize(15.min(n - 1));
+        let mut cols = Vec::with_capacity(n * k);
+        let mut vals = Vec::with_capacity(n * k);
+        for i in 0..n {
+            for j in rng.sample_indices(n - 1, k) {
+                cols.push(if j >= i { j + 1 } else { j } as u32);
+                vals.push(rng.uniform_f32());
+            }
+        }
+        let cond = Csr::from_knn(&pool, n, k, &cols, &vals);
+        let oracle = cond.symmetrize();
+        let streamed = cond.symmetrize_parallel(&pool);
+        if streamed != oracle {
+            return Err(format!("n={n} k={k}: streaming symmetrize diverged from scatter oracle"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_knn_backends_agree() {
     let pool = ThreadPool::new(2);
     let gen = PointCloud { dim: 4, min_n: 5, max_n: 120 };
@@ -136,8 +196,15 @@ fn prop_gradient_step_reduces_cost_for_small_eta() {
         let mut a = vec![0f64; n * 2];
         let mut r = vec![0f64; n * 2];
         let z0 = gradient::gradient::<2>(
-            &pool, &p, &y, n, RepulsionMethod::Exact, CellSizeMode::Diagonal,
-            &mut grad, &mut a, &mut r,
+            &pool,
+            &p,
+            &y,
+            n,
+            RepulsionMethod::Exact,
+            CellSizeMode::Diagonal,
+            &mut grad,
+            &mut a,
+            &mut r,
         );
         let c0 = gradient::kl_cost::<2>(&pool, &p, &y, z0);
         let mut y1 = y.clone();
@@ -145,8 +212,15 @@ fn prop_gradient_step_reduces_cost_for_small_eta() {
             *yy -= (0.005 * g) as f32;
         }
         let z1 = gradient::gradient::<2>(
-            &pool, &p, &y1, n, RepulsionMethod::Exact, CellSizeMode::Diagonal,
-            &mut grad, &mut a, &mut r,
+            &pool,
+            &p,
+            &y1,
+            n,
+            RepulsionMethod::Exact,
+            CellSizeMode::Diagonal,
+            &mut grad,
+            &mut a,
+            &mut r,
         );
         let c1 = gradient::kl_cost::<2>(&pool, &p, &y1, z1);
         if c1 > c0 + 1e-8 {

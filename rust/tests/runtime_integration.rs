@@ -108,9 +108,11 @@ fn xla_perplexity_matches_cpu() {
     let mut rng = Pcg32::seeded(5);
     let d2: Vec<f32> = (0..n * k).map(|_| rng.uniform_range(0.5, 40.0) as f32).collect();
     let (p, beta) = eng.perplexity(&d2, n, k, u).unwrap();
+    let mut scratch = Vec::new();
     for i in 0..n {
         let mut cpu_p = vec![0f32; k];
-        let (cpu_beta, ok) = perplexity::solve_row(&d2[i * k..(i + 1) * k], u, 1e-5, &mut cpu_p);
+        let (cpu_beta, ok) =
+            perplexity::solve_row(&d2[i * k..(i + 1) * k], u, 1e-5, &mut cpu_p, &mut scratch);
         assert!(ok);
         assert!(
             (beta[i] - cpu_beta).abs() < 1e-2 * cpu_beta.abs().max(1e-3),
@@ -185,8 +187,15 @@ fn end_to_end_embedding_with_xla_backend() {
     use bhsne::runtime::XlaAttractive;
     use bhsne::sne::{TsneConfig, TsneRunner};
 
-    let data = gaussian_mixture(&SyntheticSpec { n: 400, dim: 10, classes: 4, seed: 11, ..Default::default() });
-    let cfg = TsneConfig { iters: 100, exaggeration_iters: 30, cost_every: 50, seed: 1, ..Default::default() };
+    let spec = SyntheticSpec { n: 400, dim: 10, classes: 4, seed: 11, ..Default::default() };
+    let data = gaussian_mixture(&spec);
+    let cfg = TsneConfig {
+        iters: 100,
+        exaggeration_iters: 30,
+        cost_every: 50,
+        seed: 1,
+        ..Default::default()
+    };
 
     // CPU run.
     let mut cpu_runner = TsneRunner::new(cfg.clone());
