@@ -16,7 +16,7 @@
 use bhsne::runtime::{Runtime, SneEngine};
 use bhsne::sne::gradient;
 use bhsne::sne::sparse::Csr;
-use bhsne::spatial::{CellSizeMode, QuadTree};
+use bhsne::spatial::{CellSizeMode, DualTreeScratch, QuadTree};
 use bhsne::util::bench::{time_reps, BenchOpts, Table};
 use bhsne::util::{Pcg32, ThreadPool};
 use bhsne::vptree::VpTree;
@@ -86,6 +86,27 @@ fn main() {
     });
     push("tree_build_parallel", (build_par, pp10, pp90));
 
+    // Incremental refit: drift the embedding slightly each rep (the
+    // steady state of a late t-SNE run) and rebuild in place — re-key in
+    // the previous sorted order, adaptive merge, reused arenas.
+    let mut refit_tree = QuadTree::build_parallel(&pool, &yt, n_tree, CellSizeMode::Diagonal);
+    let mut yd = yt.clone();
+    let mut drift_rng = Pcg32::seeded(7);
+    let mut refit_adaptive = 0usize;
+    let mut refit_fallback = 0usize;
+    let (refit_secs, rf10, rf90) = time_reps(1, reps, || {
+        for v in yd.iter_mut() {
+            *v += drift_rng.normal() as f32 * 1e-3;
+        }
+        if refit_tree.refit(Some(&pool), &yd) {
+            refit_adaptive += 1;
+        } else {
+            refit_fallback += 1;
+        }
+        std::hint::black_box(refit_tree.len());
+    });
+    push("tree_refit_drift", (refit_secs, rf10, rf90));
+
     // BH repulsion traversal at several theta (tree built once).
     let tree = QuadTree::build_parallel(&pool, &yt, n_tree, CellSizeMode::Diagonal);
     let mut force_eval = f64::NAN;
@@ -111,6 +132,23 @@ fn main() {
         std::hint::black_box(z);
     });
     push("bh_iteration_build_plus_eval", (iter_secs, ip10, ip90));
+
+    // Dual-tree repulsion: serial pair-DFS vs the fanned-out parallel
+    // walk (same tree; scratch reused across reps like the engine does).
+    let mut dual_forces = vec![0f64; n_tree * 2];
+    let (dual_serial, ds10, ds90) = time_reps(1, reps, || {
+        dual_forces.iter_mut().for_each(|v| *v = 0.0);
+        let z = tree.repulsion_dual(0.25, &mut dual_forces);
+        std::hint::black_box(z);
+    });
+    push("dual_tree_serial_rho025", (dual_serial, ds10, ds90));
+    let mut dual_ws = DualTreeScratch::new();
+    let (dual_par, dp10, dp90) = time_reps(1, reps, || {
+        dual_forces.iter_mut().for_each(|v| *v = 0.0);
+        let z = tree.repulsion_dual_parallel(&pool, 0.25, &mut dual_forces, &mut dual_ws);
+        std::hint::black_box(z);
+    });
+    push("dual_tree_parallel_rho025", (dual_par, dp10, dp90));
 
     // Attractive forces, CPU.
     let mut attr = vec![0f64; n * 2];
@@ -189,6 +227,9 @@ fn main() {
     push("symmetrize_streaming", (symmetrize, sy10, sy90));
 
     table.emit(&opts);
+    println!(
+        "(tree refit under drift: {refit_adaptive} adaptive, {refit_fallback} full re-sorts)"
+    );
 
     // Machine-readable capture for CI: normalized ns/point hot-path costs.
     let per_point = |secs: f64| secs * 1e9 / n_tree as f64;
@@ -198,7 +239,10 @@ fn main() {
             "{{\"bench\":\"micro_hotpath\",\"n\":{},\"threads\":{},",
             "\"tree_build_serial_ns_per_point\":{:.2},",
             "\"tree_build_parallel_ns_per_point\":{:.2},",
+            "\"tree_refit_ns_per_point\":{:.2},",
             "\"force_eval_theta05_ns_per_point\":{:.2},",
+            "\"dual_tree_serial_ns_per_point\":{:.2},",
+            "\"dual_tree_parallel_ns_per_point\":{:.2},",
             "\"iter_build_plus_eval_ms\":{:.4},",
             "\"input_stage\":{{\"n\":{},",
             "\"vp_build_serial_ns_per_point\":{:.2},",
@@ -211,7 +255,10 @@ fn main() {
         pool.n_threads(),
         per_point(build_serial),
         per_point(build_par),
+        per_point(refit_secs),
         per_point(force_eval),
+        per_point(dual_serial),
+        per_point(dual_par),
         iter_secs * 1e3,
         n_vp,
         per_point_vp(vp_serial),

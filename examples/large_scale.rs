@@ -26,8 +26,8 @@ fn main() -> anyhow::Result<()> {
     }
 
     println!(
-        "{:>9} {:>10} {:>10} {:>10} {:>10} {:>10}",
-        "n", "knn_s", "grad_s", "embed_s", "per_iter", "1nn_err"
+        "{:>9} {:>10} {:>10} {:>10} {:>10} {:>8} {:>10}",
+        "n", "knn_s", "grad_s", "embed_s", "per_iter", "refits", "1nn_err"
     );
     let mut ns = Vec::new();
     let mut ts = Vec::new();
@@ -48,13 +48,15 @@ fn main() -> anyhow::Result<()> {
         })?;
         let knn = r.metrics.mean("knn_secs").unwrap_or(0.0);
         let grad = r.metrics.mean("gradient_secs").unwrap_or(0.0);
+        let refits = r.metrics.mean("tree_refits").unwrap_or(0.0);
         println!(
-            "{:>9} {:>10.1} {:>10.1} {:>10.1} {:>10.4} {:>10.4}",
+            "{:>9} {:>10.1} {:>10.1} {:>10.1} {:>10.4} {:>8.0} {:>10.4}",
             n,
             knn,
             grad,
             r.timings.embed_secs,
             grad / iters as f64,
+            refits,
             r.one_nn_error
         );
         ns.push(n as f64);

@@ -57,6 +57,8 @@ fn main() -> anyhow::Result<()> {
         runner.stats.input_stage.knn_secs);
     println!("gradient descent  : {:.2}s (tree {:.2}s, traversal {:.2}s)",
         runner.stats.gradient_secs, runner.stats.tree_secs, runner.stats.repulsion_secs);
+    println!("tree rebuilds     : {} incremental refits, {} full rebuilds",
+        runner.stats.tree_refits, runner.stats.tree_rebuilds);
     println!("final KL          : {:.4}", runner.stats.final_kl.unwrap());
     println!("1-NN error        : {:.4} (chance would be {:.2})", err, 4.0 / 5.0);
 

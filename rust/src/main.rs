@@ -146,6 +146,11 @@ fn cmd_embed(args: &[String]) -> anyhow::Result<()> {
     println!("1-NN error       : {:.4}", r.one_nn_error);
     println!("final KL         : {:?}", r.final_kl);
     println!("embed time (s)   : {:.2}", r.timings.embed_secs);
+    if let (Some(refits), Some(rebuilds)) =
+        (r.metrics.mean("tree_refits"), r.metrics.mean("tree_rebuilds"))
+    {
+        println!("tree rebuilds    : {refits:.0} incremental refits, {rebuilds:.0} full");
+    }
     println!("{}", r.metrics.render());
     Ok(())
 }

@@ -174,6 +174,10 @@ pub fn run_job(cfg: JobConfig) -> anyhow::Result<JobResult> {
         ("gradient_secs", runner.stats.gradient_secs),
         ("tree_secs", runner.stats.tree_secs),
         ("repulsion_secs", runner.stats.repulsion_secs),
+        // Force-engine rebuild split: how many iterations reused the
+        // previous tree via the incremental refit vs ran a full re-sort.
+        ("tree_refits", runner.stats.tree_refits as f64),
+        ("tree_rebuilds", runner.stats.tree_rebuilds as f64),
     ]);
 
     // ---- Stage 4: evaluate ----

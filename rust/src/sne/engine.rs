@@ -1,0 +1,409 @@
+//! Persistent per-iteration force engine — the §4.2 output-space hot
+//! path, owned state and all.
+//!
+//! [`ForceEngine`] is created once per run and owns every buffer the
+//! gradient loop touches each iteration: the Barnes-Hut tree (node arena,
+//! Morton key buffers, traversal SoA), the attractive/repulsive f64
+//! scratch, the deterministic Z-reduction slots, and the dual-tree
+//! workspace. Steady-state iterations therefore perform **zero heap
+//! allocation** (asserted by arena-capacity snapshot tests via
+//! [`ForceEngine::capacities`]).
+//!
+//! The tree is rebuilt *incrementally*: [`crate::spatial::BhTree::refit`]
+//! re-keys the previous iteration's sorted order and restores it with a
+//! run-detecting adaptive merge (embeddings move slowly after early
+//! exaggeration, so the Morton order is nearly unchanged late in a run),
+//! falling back to the from-scratch parallel sort when more than
+//! `n / REFIT_DISORDER_DENOM` keys are displaced. Both paths are
+//! bit-identical to `build_parallel`, which remains the oracle.
+//!
+//! [`DynForceEngine`] erases the compile-time dimension so the runner can
+//! hold one engine for either the 2-D quadtree or the 3-D octree.
+
+use super::gradient::{self, RepulsionMethod};
+use super::sparse::Csr;
+use super::AttractiveBackend;
+use crate::spatial::{BhTree, CellSizeMode, DualTreeScratch};
+use crate::util::{Stopwatch, ThreadPool};
+
+/// Counters and timings accumulated across a run.
+#[derive(Debug, Clone, Default)]
+pub struct EngineStats {
+    /// Cumulative tree build + refit time (zero for the exact method).
+    pub tree_secs: f64,
+    /// Cumulative repulsive-force evaluation time, net of tree work.
+    pub repulsion_secs: f64,
+    /// Iterations whose tree rebuild took the incremental (adaptive
+    /// re-sort) path.
+    pub refits: usize,
+    /// Iterations that ran the from-scratch sort — includes the first
+    /// build and every disorder-threshold fallback.
+    pub full_rebuilds: usize,
+}
+
+/// Reusable force engine for one embedding run (fixed `n`, fixed method).
+pub struct ForceEngine<const DIM: usize> {
+    n: usize,
+    method: RepulsionMethod,
+    mode: CellSizeMode,
+    /// The persistent tree; built on first use, refit in place afterwards.
+    tree: Option<BhTree<DIM>>,
+    /// Dual-tree traversal workspace (slot accumulators, stacks, seeds).
+    dual: DualTreeScratch,
+    /// Deterministic Z-reduction slots shared by the exact and BH paths.
+    z_parts: Vec<f64>,
+    /// Attractive-force accumulator (`n × DIM`, f64).
+    attr: Vec<f64>,
+    /// Repulsive-force accumulator (`n × DIM`, f64).
+    rep: Vec<f64>,
+    pub stats: EngineStats,
+}
+
+impl<const DIM: usize> ForceEngine<DIM> {
+    pub fn new(n: usize, method: RepulsionMethod, mode: CellSizeMode) -> Self {
+        ForceEngine {
+            n,
+            method,
+            mode,
+            tree: None,
+            dual: DualTreeScratch::new(),
+            z_parts: Vec::new(),
+            // Sized lazily on the first `gradient` call: the throwaway
+            // engines behind the `gradient()` compatibility wrapper only
+            // use `repulsive_into` with caller-owned buffers.
+            attr: Vec::new(),
+            rep: Vec::new(),
+            stats: EngineStats::default(),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn method(&self) -> RepulsionMethod {
+        self.method
+    }
+
+    /// Build the tree for `y`, or refit the previous iteration's tree in
+    /// place — bit-identical to a from-scratch `build_parallel` either
+    /// way (see [`BhTree::refit`]).
+    fn prepare_tree(&mut self, pool: &ThreadPool, y: &[f32]) {
+        let sw = Stopwatch::start();
+        match self.tree.as_mut() {
+            Some(tree) => {
+                if tree.refit(Some(pool), y) {
+                    self.stats.refits += 1;
+                } else {
+                    self.stats.full_rebuilds += 1;
+                }
+            }
+            None => {
+                self.tree = Some(BhTree::build_parallel(pool, y, self.n, self.mode));
+                self.stats.full_rebuilds += 1;
+            }
+        }
+        self.stats.tree_secs += sw.elapsed_secs();
+    }
+
+    /// Zero `out` and accumulate the unnormalized repulsive term
+    /// (`F_repZ`) into it per the configured method; returns Z. `out` is
+    /// row-major `n × DIM`.
+    pub fn repulsive_into(&mut self, pool: &ThreadPool, y: &[f32], out: &mut [f64]) -> f64 {
+        assert_eq!(out.len(), self.n * DIM);
+        out.iter_mut().for_each(|v| *v = 0.0);
+        match self.method {
+            RepulsionMethod::Exact => {
+                let sw = Stopwatch::start();
+                let z =
+                    gradient::repulsive_exact_with::<DIM>(pool, y, self.n, out, &mut self.z_parts);
+                self.stats.repulsion_secs += sw.elapsed_secs();
+                z
+            }
+            RepulsionMethod::BarnesHut { theta } => {
+                self.prepare_tree(pool, y);
+                let sw = Stopwatch::start();
+                let tree = self.tree.as_ref().expect("tree prepared");
+                let z = gradient::repulsive_bh_with_tree_scratch::<DIM>(
+                    pool,
+                    tree,
+                    y,
+                    self.n,
+                    theta,
+                    out,
+                    &mut self.z_parts,
+                );
+                self.stats.repulsion_secs += sw.elapsed_secs();
+                z
+            }
+            RepulsionMethod::DualTree { rho } => {
+                self.prepare_tree(pool, y);
+                let sw = Stopwatch::start();
+                let tree = self.tree.as_ref().expect("tree prepared");
+                let z = tree.repulsion_dual_parallel(pool, rho, out, &mut self.dual);
+                self.stats.repulsion_secs += sw.elapsed_secs();
+                z
+            }
+        }
+    }
+
+    /// Full gradient of Eq. 8 through the engine's persistent buffers:
+    /// attractive term via `backend`, repulsive term via the configured
+    /// strategy (tree shared with any same-iteration cost evaluation).
+    /// Writes `4(F_attr − F_repZ/Z)` into `grad`; returns Z.
+    pub fn gradient(
+        &mut self,
+        pool: &ThreadPool,
+        backend: &dyn AttractiveBackend,
+        p: &Csr,
+        y: &[f32],
+        grad: &mut [f64],
+    ) -> f64 {
+        assert_eq!(grad.len(), self.n * DIM);
+        // Move the buffers out (allocation-free) so `self` stays free for
+        // the repulsive call; first call sizes them, after that the
+        // resizes are no-ops.
+        let mut attr = std::mem::take(&mut self.attr);
+        let mut rep = std::mem::take(&mut self.rep);
+        attr.resize(self.n * DIM, 0.0);
+        rep.resize(self.n * DIM, 0.0);
+        backend.compute(pool, p, y, DIM, &mut attr);
+        let z = self.repulsive_into(pool, y, &mut rep);
+        let zinv = 1.0 / z.max(f64::MIN_POSITIVE);
+        for (g, (a, r)) in grad.iter_mut().zip(attr.iter().zip(rep.iter())) {
+            *g = 4.0 * (a - r * zinv);
+        }
+        self.attr = attr;
+        self.rep = rep;
+        z
+    }
+
+    /// KL divergence KL(P||Q) (Eq. 4) from the sparse entries, with the Z
+    /// the iteration's repulsion pass returned.
+    pub fn kl_cost(&self, pool: &ThreadPool, p: &Csr, y: &[f32], z: f64) -> f64 {
+        gradient::kl_cost::<DIM>(pool, p, y, z)
+    }
+
+    /// Arena-capacity snapshot over every persistent buffer the engine
+    /// owns (tree arenas and key buffers, dual-tree workspace, force and
+    /// Z scratch). Steady-state iterations must leave it unchanged — the
+    /// no-allocation assertion used by the tests.
+    pub fn capacities(&self) -> Vec<usize> {
+        let mut caps = vec![self.z_parts.capacity(), self.attr.capacity(), self.rep.capacity()];
+        if let Some(tree) = &self.tree {
+            caps.extend(tree.capacities());
+        }
+        caps.extend(self.dual.capacities());
+        caps
+    }
+}
+
+/// Dimension-erased engine: the runner resolves `out_dim` at runtime, so
+/// it holds one of the two monomorphized engines behind a thin enum.
+pub enum DynForceEngine {
+    D2(ForceEngine<2>),
+    D3(ForceEngine<3>),
+}
+
+impl DynForceEngine {
+    /// Panics unless `dim` is 2 or 3 (the runner validates beforehand).
+    pub fn new(dim: usize, n: usize, method: RepulsionMethod, mode: CellSizeMode) -> Self {
+        match dim {
+            2 => DynForceEngine::D2(ForceEngine::new(n, method, mode)),
+            3 => DynForceEngine::D3(ForceEngine::new(n, method, mode)),
+            _ => panic!("unsupported embedding dimension {dim}"),
+        }
+    }
+
+    pub fn gradient(
+        &mut self,
+        pool: &ThreadPool,
+        backend: &dyn AttractiveBackend,
+        p: &Csr,
+        y: &[f32],
+        grad: &mut [f64],
+    ) -> f64 {
+        match self {
+            DynForceEngine::D2(e) => e.gradient(pool, backend, p, y, grad),
+            DynForceEngine::D3(e) => e.gradient(pool, backend, p, y, grad),
+        }
+    }
+
+    pub fn kl_cost(&self, pool: &ThreadPool, p: &Csr, y: &[f32], z: f64) -> f64 {
+        match self {
+            DynForceEngine::D2(e) => e.kl_cost(pool, p, y, z),
+            DynForceEngine::D3(e) => e.kl_cost(pool, p, y, z),
+        }
+    }
+
+    pub fn stats(&self) -> &EngineStats {
+        match self {
+            DynForceEngine::D2(e) => &e.stats,
+            DynForceEngine::D3(e) => &e.stats,
+        }
+    }
+
+    pub fn capacities(&self) -> Vec<usize> {
+        match self {
+            DynForceEngine::D2(e) => e.capacities(),
+            DynForceEngine::D3(e) => e.capacities(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sne::CpuAttractive;
+    use crate::util::Pcg32;
+
+    fn random_embedding(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::seeded(seed);
+        (0..n * 2).map(|_| rng.normal() as f32 * 2.0).collect()
+    }
+
+    fn random_p(n: usize, k: usize, seed: u64) -> Csr {
+        let mut rng = Pcg32::seeded(seed);
+        let mut rows: Vec<Vec<(u32, f32)>> = vec![Vec::new(); n];
+        for i in 0..n {
+            for _ in 0..k {
+                let j = rng.below_usize(n);
+                if j != i {
+                    let v = rng.uniform_f32();
+                    rows[i].push((j as u32, v));
+                    rows[j].push((i as u32, v));
+                }
+            }
+        }
+        let mut m = Csr::from_rows(n, rows);
+        let s = m.sum() as f32;
+        m.scale(1.0 / s);
+        m
+    }
+
+    /// A persistent engine across drifting iterations must match a fresh
+    /// engine (fresh tree build) bit for bit — the refit path integrated
+    /// end to end.
+    #[test]
+    fn persistent_engine_matches_fresh_engine_bitwise() {
+        let pool = ThreadPool::new(4);
+        let n = 9000; // above the parallel-build threshold
+        let p = random_p(n, 3, 1);
+        let method = RepulsionMethod::BarnesHut { theta: 0.5 };
+        let mut engine = ForceEngine::<2>::new(n, method, CellSizeMode::Diagonal);
+        let mut y = random_embedding(n, 2);
+        let mut rng = Pcg32::seeded(3);
+        let mut grad = vec![0f64; n * 2];
+        let mut grad_fresh = vec![0f64; n * 2];
+        let mut attr = vec![0f64; n * 2];
+        let mut rep = vec![0f64; n * 2];
+        for it in 0..4 {
+            let z = engine.gradient(&pool, &CpuAttractive, &p, &y, &mut grad);
+            let z_fresh = gradient::gradient::<2>(
+                &pool,
+                &p,
+                &y,
+                n,
+                method,
+                CellSizeMode::Diagonal,
+                &mut grad_fresh,
+                &mut attr,
+                &mut rep,
+            );
+            assert_eq!(z, z_fresh, "iteration {it}");
+            assert_eq!(grad, grad_fresh, "iteration {it}");
+            for v in y.iter_mut() {
+                *v += rng.normal() as f32 * 1e-4;
+            }
+        }
+        assert_eq!(engine.stats.full_rebuilds + engine.stats.refits, 4);
+        assert!(engine.stats.refits >= 1, "drifting iterations never refit");
+    }
+
+    #[test]
+    fn engine_exact_matches_free_function() {
+        let pool = ThreadPool::new(2);
+        let n = 200;
+        let y = random_embedding(n, 4);
+        let mut engine = ForceEngine::<2>::new(n, RepulsionMethod::Exact, CellSizeMode::Diagonal);
+        let mut out = vec![0f64; n * 2];
+        let z = engine.repulsive_into(&pool, &y, &mut out);
+        let mut want = vec![0f64; n * 2];
+        let z_want = gradient::repulsive_exact::<2>(&pool, &y, n, &mut want);
+        assert_eq!(z, z_want);
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn engine_dual_tracks_serial_dual() {
+        let pool = ThreadPool::new(4);
+        let n = 400;
+        let y = random_embedding(n, 5);
+        let mut engine =
+            ForceEngine::<2>::new(n, RepulsionMethod::DualTree { rho: 0.25 }, CellSizeMode::Diagonal);
+        let mut out = vec![0f64; n * 2];
+        let z = engine.repulsive_into(&pool, &y, &mut out);
+        let tree = crate::spatial::BhTree::<2>::build(&y, n);
+        let mut want = vec![0f64; n * 2];
+        let z_want = tree.repulsion_dual(0.25, &mut want);
+        assert!((z - z_want).abs() <= 1e-9 * z_want.abs().max(1.0), "{z} vs {z_want}");
+        for (a, b) in out.iter().zip(&want) {
+            assert!((a - b).abs() <= 1e-9 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+    }
+
+    /// The headline engine invariant: after warm-up, iterations reuse
+    /// every arena — the capacity snapshot is frozen.
+    #[test]
+    fn steady_state_iterations_do_not_allocate() {
+        let pool = ThreadPool::new(4);
+        let n = 9000;
+        let p = random_p(n, 3, 6);
+        let mut engine = ForceEngine::<2>::new(
+            n,
+            RepulsionMethod::BarnesHut { theta: 0.5 },
+            CellSizeMode::Diagonal,
+        );
+        let mut y = random_embedding(n, 7);
+        let mut rng = Pcg32::seeded(8);
+        let mut grad = vec![0f64; n * 2];
+        for _ in 0..4 {
+            engine.gradient(&pool, &CpuAttractive, &p, &y, &mut grad);
+            for v in y.iter_mut() {
+                *v += rng.normal() as f32 * 1e-4;
+            }
+        }
+        let caps = engine.capacities();
+        for it in 4..10 {
+            engine.gradient(&pool, &CpuAttractive, &p, &y, &mut grad);
+            for v in y.iter_mut() {
+                *v += rng.normal() as f32 * 1e-4;
+            }
+            assert_eq!(engine.capacities(), caps, "iteration {it} grew an engine arena");
+        }
+    }
+
+    #[test]
+    fn dyn_engine_dispatches_both_dims() {
+        let pool = ThreadPool::new(2);
+        let n = 60;
+        let p = random_p(n, 3, 9);
+        for dim in [2usize, 3] {
+            let mut rng = Pcg32::seeded(10 + dim as u64);
+            let y: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32).collect();
+            let mut engine = DynForceEngine::new(
+                dim,
+                n,
+                RepulsionMethod::BarnesHut { theta: 0.5 },
+                CellSizeMode::Diagonal,
+            );
+            let mut grad = vec![0f64; n * dim];
+            let z = engine.gradient(&pool, &CpuAttractive, &p, &y, &mut grad);
+            assert!(z.is_finite() && z > 0.0);
+            assert!(grad.iter().all(|g| g.is_finite()));
+            let kl = engine.kl_cost(&pool, &p, &y, z);
+            assert!(kl.is_finite());
+            assert_eq!(engine.stats().full_rebuilds, 1);
+        }
+    }
+}

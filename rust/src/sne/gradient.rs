@@ -66,6 +66,18 @@ pub fn attractive_forces<const DIM: usize>(
 /// `qZ = (1+d²)^-1`; returns the normalizer `Z = Σ_{k≠l} (1+d²)^-1`
 /// (ordered pairs). O(N²), parallel over i.
 pub fn repulsive_exact<const DIM: usize>(pool: &ThreadPool, y: &[f32], n: usize, out: &mut [f64]) -> f64 {
+    repulsive_exact_with::<DIM>(pool, y, n, out, &mut Vec::new())
+}
+
+/// [`repulsive_exact`] with a caller-owned Z-reduction buffer — the
+/// engine keeps it across iterations so steady state allocates nothing.
+pub fn repulsive_exact_with<const DIM: usize>(
+    pool: &ThreadPool,
+    y: &[f32],
+    n: usize,
+    out: &mut [f64],
+    z_parts: &mut Vec<f64>,
+) -> f64 {
     assert!(y.len() >= n * DIM);
     assert_eq!(out.len(), n * DIM);
     let oc = SendPtr(out.as_mut_ptr());
@@ -73,7 +85,8 @@ pub fn repulsive_exact<const DIM: usize>(pool: &ThreadPool, y: &[f32], n: usize,
     // afterwards — thread scheduling cannot perturb the result.
     const CHUNK: usize = 16;
     let n_chunks = n.div_ceil(CHUNK);
-    let mut z_parts = vec![0f64; n_chunks];
+    z_parts.clear();
+    z_parts.resize(n_chunks, 0f64);
     let zc = SendPtr(z_parts.as_mut_ptr());
     pool.scope_chunks(n, CHUNK, |lo, hi| {
         let _ = (&oc, &zc);
@@ -123,8 +136,9 @@ pub fn repulsive_bh<const DIM: usize>(
     repulsive_bh_with_tree(pool, &tree, y, n, theta, out)
 }
 
-/// Same, reusing an already-built tree (the runner rebuilds the tree once
-/// per iteration and shares it between cost and gradient evaluation).
+/// Same, reusing an already-built tree (the engine rebuilds or refits the
+/// tree once per iteration and shares it between cost and gradient
+/// evaluation).
 pub fn repulsive_bh_with_tree<const DIM: usize>(
     pool: &ThreadPool,
     tree: &BhTree<DIM>,
@@ -133,12 +147,27 @@ pub fn repulsive_bh_with_tree<const DIM: usize>(
     theta: f32,
     out: &mut [f64],
 ) -> f64 {
+    repulsive_bh_with_tree_scratch::<DIM>(pool, tree, y, n, theta, out, &mut Vec::new())
+}
+
+/// [`repulsive_bh_with_tree`] with a caller-owned Z-reduction buffer (see
+/// [`repulsive_exact_with`]).
+pub fn repulsive_bh_with_tree_scratch<const DIM: usize>(
+    pool: &ThreadPool,
+    tree: &BhTree<DIM>,
+    y: &[f32],
+    n: usize,
+    theta: f32,
+    out: &mut [f64],
+    z_parts: &mut Vec<f64>,
+) -> f64 {
     assert_eq!(out.len(), n * DIM);
     let oc = SendPtr(out.as_mut_ptr());
     // Deterministic Z reduction (see repulsive_exact).
     const CHUNK: usize = 64;
     let n_chunks = n.div_ceil(CHUNK);
-    let mut z_parts = vec![0f64; n_chunks];
+    z_parts.clear();
+    z_parts.resize(n_chunks, 0f64);
     let zc = SendPtr(z_parts.as_mut_ptr());
     pool.scope_chunks(n, CHUNK, |lo, hi| {
         let _ = (&oc, &zc);
@@ -159,6 +188,11 @@ pub fn repulsive_bh_with_tree<const DIM: usize>(
 
 /// Full gradient of Eq. 8: `grad = 4 (F_attr − F_repZ / Z)`, written into
 /// `grad` (row-major `n × DIM`). Returns Z (useful for the KL cost).
+///
+/// Thin compatibility wrapper over a throwaway
+/// [`ForceEngine`](super::engine::ForceEngine) — the training loop keeps a
+/// persistent engine instead, so its tree arenas and scratch survive
+/// across iterations.
 pub fn gradient<const DIM: usize>(
     pool: &ThreadPool,
     p: &Csr,
@@ -172,17 +206,8 @@ pub fn gradient<const DIM: usize>(
 ) -> f64 {
     assert_eq!(grad.len(), n * DIM);
     attractive_forces::<DIM>(pool, p, y, attr_scratch);
-    rep_scratch.iter_mut().for_each(|v| *v = 0.0);
-    let z = match method {
-        RepulsionMethod::Exact => repulsive_exact::<DIM>(pool, y, n, rep_scratch),
-        RepulsionMethod::BarnesHut { theta } => {
-            repulsive_bh::<DIM>(pool, y, n, theta, mode, rep_scratch)
-        }
-        RepulsionMethod::DualTree { rho } => {
-            let mut tree = BhTree::<DIM>::build_parallel(pool, y, n, mode);
-            tree.repulsion_dual(rho, rep_scratch)
-        }
-    };
+    let mut engine = super::engine::ForceEngine::<DIM>::new(n, method, mode);
+    let z = engine.repulsive_into(pool, y, rep_scratch);
     let zinv = 1.0 / z.max(f64::MIN_POSITIVE);
     for (g, (a, r)) in grad.iter_mut().zip(attr_scratch.iter().zip(rep_scratch.iter())) {
         *g = 4.0 * (a - r * zinv);

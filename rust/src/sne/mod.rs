@@ -2,12 +2,14 @@
 //! strategies, the optimizer, and the [`TsneRunner`] that ties them into
 //! the paper's full training loop.
 
+pub mod engine;
 pub mod gradient;
 pub mod input;
 pub mod optimizer;
 pub mod perplexity;
 pub mod sparse;
 
+pub use engine::{DynForceEngine, EngineStats, ForceEngine};
 pub use gradient::RepulsionMethod;
 pub use sparse::Csr;
 
@@ -133,12 +135,20 @@ pub struct IterStats {
 pub struct RunStats {
     pub input_stage: input::InputStageStats,
     pub gradient_secs: f64,
-    /// Cumulative Barnes-Hut tree rebuild time across all iterations
-    /// (Morton sort + bottom-up assembly; zero for the exact method).
+    /// Cumulative Barnes-Hut tree build + refit time across all
+    /// iterations (Morton re-key/re-sort + bottom-up assembly; zero for
+    /// the exact method).
     pub tree_secs: f64,
     /// Cumulative repulsive-force evaluation time across all iterations
-    /// (tree traversal, dual-tree walk, or exact O(N²) sum).
+    /// (tree traversal, dual-tree walk, or exact O(N²) sum), net of the
+    /// tree work above.
     pub repulsion_secs: f64,
+    /// Iterations whose tree rebuild took the incremental refit path
+    /// (adaptive Morton re-sort over the previous iteration's arena).
+    pub tree_refits: usize,
+    /// Iterations that ran the from-scratch sort (first build + disorder
+    /// fallbacks).
+    pub tree_rebuilds: usize,
     pub total_secs: f64,
     pub final_kl: Option<f64>,
     pub iters: usize,
@@ -245,11 +255,15 @@ impl TsneRunner {
         let mut exaggerating = ex > 1.0;
 
         let mut grad = vec![0f64; n * dim];
-        let mut attr = vec![0f64; n * dim];
-        let mut rep = vec![0f64; n * dim];
         let mut last_kl = None;
-        let mut tree_secs = 0f64;
-        let mut repulsion_secs = 0f64;
+
+        // The persistent force engine owns all per-iteration state — tree
+        // node arena, Morton key/index buffers, force scratch, Z-reduction
+        // slots — so steady-state iterations allocate nothing. The tree is
+        // refit incrementally from the previous iteration (bit-identical
+        // to a from-scratch build) and shared between the gradient and any
+        // same-iteration cost evaluation.
+        let mut engine = DynForceEngine::new(dim, n, method, self.config.cell_size);
 
         for it in 0..self.config.iters {
             let it_sw = Stopwatch::start();
@@ -258,66 +272,19 @@ impl TsneRunner {
                 exaggerating = false;
             }
 
-            // Gradient: attractive via the pluggable backend, repulsive via
-            // the configured tree strategy. The Barnes-Hut tree is rebuilt
-            // once per iteration (Morton sort + parallel bottom-up
-            // assembly) and shared by the whole traversal pass; the two
-            // phases are timed separately so the pipeline can report where
-            // the iteration budget goes.
-            self.attractive.compute(&self.pool, p, &y, dim, &mut attr);
-            rep.iter_mut().for_each(|v| *v = 0.0);
-            let rep_sw = Stopwatch::start();
-            let z = match (dim, method) {
-                (2, RepulsionMethod::Exact) => gradient::repulsive_exact::<2>(&self.pool, &y, n, &mut rep),
-                (3, RepulsionMethod::Exact) => gradient::repulsive_exact::<3>(&self.pool, &y, n, &mut rep),
-                (2, RepulsionMethod::BarnesHut { theta }) => {
-                    let sw = Stopwatch::start();
-                    let tree =
-                        crate::spatial::BhTree::<2>::build_parallel(&self.pool, &y, n, self.config.cell_size);
-                    tree_secs += sw.elapsed_secs();
-                    gradient::repulsive_bh_with_tree::<2>(&self.pool, &tree, &y, n, theta, &mut rep)
-                }
-                (3, RepulsionMethod::BarnesHut { theta }) => {
-                    let sw = Stopwatch::start();
-                    let tree =
-                        crate::spatial::BhTree::<3>::build_parallel(&self.pool, &y, n, self.config.cell_size);
-                    tree_secs += sw.elapsed_secs();
-                    gradient::repulsive_bh_with_tree::<3>(&self.pool, &tree, &y, n, theta, &mut rep)
-                }
-                (2, RepulsionMethod::DualTree { rho }) => {
-                    let sw = Stopwatch::start();
-                    let mut tree =
-                        crate::spatial::BhTree::<2>::build_parallel(&self.pool, &y, n, self.config.cell_size);
-                    tree_secs += sw.elapsed_secs();
-                    tree.repulsion_dual(rho, &mut rep)
-                }
-                (3, RepulsionMethod::DualTree { rho }) => {
-                    let sw = Stopwatch::start();
-                    let mut tree =
-                        crate::spatial::BhTree::<3>::build_parallel(&self.pool, &y, n, self.config.cell_size);
-                    tree_secs += sw.elapsed_secs();
-                    tree.repulsion_dual(rho, &mut rep)
-                }
-                _ => unreachable!(),
-            };
-            repulsion_secs += rep_sw.elapsed_secs();
-            let zinv = 1.0 / z.max(f64::MIN_POSITIVE);
+            let z = engine.gradient(&self.pool, self.attractive.as_ref(), p, &y, &mut grad);
             let mut gnorm = 0f64;
-            for i in 0..n * dim {
-                grad[i] = 4.0 * (attr[i] - rep[i] * zinv);
-                gnorm += grad[i] * grad[i];
+            for g in grad.iter() {
+                gnorm += g * g;
             }
 
-            opt.step(&mut y, &grad);
-            optimizer::Optimizer::recenter(&mut y, n, dim);
+            opt.step(&self.pool, &mut y, &grad);
+            optimizer::Optimizer::recenter(&self.pool, &mut y, n, dim);
 
             let kl = if self.config.cost_every > 0
                 && (it % self.config.cost_every == 0 || it + 1 == self.config.iters)
             {
-                let c = match dim {
-                    2 => gradient::kl_cost::<2>(&self.pool, p, &y, z),
-                    _ => gradient::kl_cost::<3>(&self.pool, p, &y, z),
-                };
+                let c = engine.kl_cost(&self.pool, p, &y, z);
                 last_kl = Some(c);
                 Some(c)
             } else {
@@ -343,10 +310,12 @@ impl TsneRunner {
             p.scale(1.0 / ex);
         }
         self.stats.gradient_secs = sw.elapsed_secs();
-        // `repulsion_secs` was measured around the whole repulsive phase;
-        // report traversal time net of the tree rebuilds timed within it.
-        self.stats.tree_secs = tree_secs;
-        self.stats.repulsion_secs = (repulsion_secs - tree_secs).max(0.0);
+        // The engine times tree work and traversal separately.
+        let estats = engine.stats();
+        self.stats.tree_secs = estats.tree_secs;
+        self.stats.repulsion_secs = estats.repulsion_secs;
+        self.stats.tree_refits = estats.refits;
+        self.stats.tree_rebuilds = estats.full_rebuilds;
         self.stats.final_kl = last_kl;
         self.stats.iters = self.config.iters;
         Ok(y)

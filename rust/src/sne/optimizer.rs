@@ -2,6 +2,16 @@
 //! gains (Jacobs 1988), exactly the scheme of the paper's experimental
 //! setup: initial step size 200, momentum 0.5 for the first 250
 //! iterations then 0.8, gains up/down by +0.2 / ×0.8 clipped at 0.01.
+//!
+//! Both [`Optimizer::step`] and [`Optimizer::recenter`] run on the thread
+//! pool: they are O(n·dim) passes inside every iteration, so at scale
+//! they would otherwise cap the parallel speedup of the force engine.
+//! The update is elementwise (bit-identical under any chunking) and the
+//! recenter mean uses fixed per-slot partial sums reduced in slot order,
+//! so results never depend on scheduling.
+
+use crate::util::pool::SendPtr;
+use crate::util::ThreadPool;
 
 /// Optimizer state for an `n × dim` embedding.
 #[derive(Debug, Clone)]
@@ -47,44 +57,92 @@ impl Optimizer {
 
     /// Apply one update: `y ← y + μ·v − η·gain·grad` with Jacobs gains
     /// (gain += 0.2 when gradient and velocity disagree in sign, gain ×=
-    /// 0.8 when they agree; floor 0.01).
-    pub fn step(&mut self, y: &mut [f32], grad: &[f64]) {
+    /// 0.8 when they agree; floor 0.01). Elementwise, so the pool chunking
+    /// is bit-identical to the serial loop.
+    pub fn step(&mut self, pool: &ThreadPool, y: &mut [f32], grad: &[f64]) {
         assert_eq!(y.len(), grad.len());
         assert_eq!(y.len(), self.velocity.len());
         let mu = self.momentum();
-        for i in 0..y.len() {
-            let g = grad[i];
-            let v = self.velocity[i];
-            // Sign comparison as in the reference implementation.
-            let gain = &mut self.gains[i];
-            if (g > 0.0) != (v > 0.0) {
-                *gain += 0.2;
-            } else {
-                *gain *= 0.8;
+        let eta = self.eta;
+        let yc = SendPtr(y.as_mut_ptr());
+        let vc = SendPtr(self.velocity.as_mut_ptr());
+        let gc = SendPtr(self.gains.as_mut_ptr());
+        pool.scope_chunks(y.len(), 4096, |lo, hi| {
+            let _ = (&yc, &vc, &gc);
+            for i in lo..hi {
+                // SAFETY (all accesses): chunks are disjoint index ranges;
+                // each slot of y/velocity/gains is touched by exactly one
+                // job.
+                unsafe {
+                    let g = grad[i];
+                    let v = *vc.0.add(i);
+                    // Sign comparison as in the reference implementation.
+                    let gain = gc.0.add(i);
+                    if (g > 0.0) != (v > 0.0) {
+                        *gain += 0.2;
+                    } else {
+                        *gain *= 0.8;
+                    }
+                    if *gain < 0.01 {
+                        *gain = 0.01;
+                    }
+                    let nv = mu * v - eta * *gain * g;
+                    *vc.0.add(i) = nv;
+                    *yc.0.add(i) += nv as f32;
+                }
             }
-            if *gain < 0.01 {
-                *gain = 0.01;
-            }
-            let nv = mu * v - self.eta * *gain * g;
-            self.velocity[i] = nv;
-            y[i] += nv as f32;
-        }
+        });
         self.iter += 1;
     }
 
     /// Recenter the embedding at the origin (t-SNE's gradient is
     /// translation invariant, so without recentering the cloud drifts).
-    pub fn recenter(y: &mut [f32], n: usize, dim: usize) {
-        for d in 0..dim {
-            let mut mean = 0f64;
-            for i in 0..n {
-                mean += y[i * dim + d] as f64;
-            }
-            mean /= n as f64;
-            for i in 0..n {
-                y[i * dim + d] -= mean as f32;
-            }
+    /// The mean is reduced over fixed per-chunk slots in slot order, so
+    /// the result is scheduling-independent; no heap allocation.
+    pub fn recenter(pool: &ThreadPool, y: &mut [f32], n: usize, dim: usize) {
+        const SLOTS: usize = 64;
+        assert!(dim <= 4, "recenter supports dim <= 4");
+        assert!(y.len() >= n * dim);
+        if n == 0 {
+            return;
         }
+        let chunk = n.div_ceil(SLOTS).max(1);
+        let mut parts = [[0f64; 4]; SLOTS];
+        let pc = SendPtr(parts.as_mut_ptr());
+        pool.scope_chunks(n, chunk, |lo, hi| {
+            let _ = &pc;
+            // Sub-chunk on the fixed grid so the slot structure (and with
+            // it the f64 reduction order) is identical for any thread
+            // count — the single-thread fast path hands one merged range.
+            let mut c0 = lo;
+            while c0 < hi {
+                let c1 = (c0 + chunk).min(hi);
+                let mut sums = [0f64; 4];
+                for i in c0..c1 {
+                    for d in 0..dim {
+                        sums[d] += y[i * dim + d] as f64;
+                    }
+                }
+                // SAFETY: slots follow the fixed grid; each written once.
+                unsafe { *pc.0.add(c0 / chunk) = sums };
+                c0 = c1;
+            }
+        });
+        let mut mean = [0f32; 4];
+        for d in 0..dim {
+            let total: f64 = parts.iter().map(|s| s[d]).sum();
+            mean[d] = (total / n as f64) as f32;
+        }
+        let yc = SendPtr(y.as_mut_ptr());
+        pool.scope_chunks(n, chunk, |lo, hi| {
+            let _ = &yc;
+            for i in lo..hi {
+                for d in 0..dim {
+                    // SAFETY: disjoint rows across chunks.
+                    unsafe { *yc.0.add(i * dim + d) -= mean[d] };
+                }
+            }
+        });
     }
 }
 
@@ -94,12 +152,13 @@ mod tests {
 
     #[test]
     fn momentum_switches_at_250() {
+        let pool = ThreadPool::new(1);
         let mut opt = Optimizer::new(1, 2, 200.0);
         assert_eq!(opt.momentum(), 0.5);
         let mut y = vec![0f32; 2];
         let g = vec![0.0f64; 2];
         for _ in 0..250 {
-            opt.step(&mut y, &g);
+            opt.step(&pool, &mut y, &g);
         }
         assert_eq!(opt.momentum(), 0.8);
     }
@@ -107,12 +166,13 @@ mod tests {
     #[test]
     fn descends_a_quadratic() {
         // Minimize f(y) = ||y - c||² with gradient 2(y - c).
+        let pool = ThreadPool::new(2);
         let c = [3.0f32, -2.0];
         let mut y = vec![0f32, 0.0];
         let mut opt = Optimizer::new(1, 2, 0.05);
         for _ in 0..500 {
             let g = vec![2.0 * (y[0] - c[0]) as f64, 2.0 * (y[1] - c[1]) as f64];
-            opt.step(&mut y, &g);
+            opt.step(&pool, &mut y, &g);
         }
         assert!((y[0] - c[0]).abs() < 1e-2, "{y:?}");
         assert!((y[1] - c[1]).abs() < 1e-2, "{y:?}");
@@ -120,6 +180,7 @@ mod tests {
 
     #[test]
     fn gains_floor_at_001() {
+        let pool = ThreadPool::new(1);
         let mut opt = Optimizer::new(1, 1, 1.0);
         let mut y = vec![0f32];
         // Constant positive gradient: after the first step velocity is
@@ -128,27 +189,55 @@ mod tests {
         // gradient signs to force gain decay instead.
         for i in 0..100 {
             let g = if i % 2 == 0 { 1.0 } else { -1.0 };
-            opt.step(&mut y, &[g]);
+            opt.step(&pool, &mut y, &[g]);
         }
         assert!(opt.gains[0] >= 0.01);
     }
 
     #[test]
     fn recenter_zeroes_mean() {
+        let pool = ThreadPool::new(2);
         let mut y = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
-        Optimizer::recenter(&mut y, 3, 2);
+        Optimizer::recenter(&pool, &mut y, 3, 2);
         let mx: f32 = (0..3).map(|i| y[i * 2]).sum::<f32>() / 3.0;
         let my: f32 = (0..3).map(|i| y[i * 2 + 1]).sum::<f32>() / 3.0;
         assert!(mx.abs() < 1e-6 && my.abs() < 1e-6);
     }
 
     #[test]
+    fn parallel_step_matches_serial_reference() {
+        // The pool chunking must be a pure reorganization: compare a
+        // many-element step against a 1-thread pool run.
+        let n = 10_000;
+        let dims = 2;
+        let mut rng = crate::util::Pcg32::seeded(7);
+        let y0: Vec<f32> = (0..n * dims).map(|_| rng.normal() as f32).collect();
+        let g: Vec<f64> = (0..n * dims).map(|_| rng.normal()).collect();
+        let run = |threads: usize| {
+            let pool = ThreadPool::new(threads);
+            let mut opt = Optimizer::new(n, dims, 200.0);
+            let mut y = y0.clone();
+            for _ in 0..3 {
+                opt.step(&pool, &mut y, &g);
+                Optimizer::recenter(&pool, &mut y, n, dims);
+            }
+            (y, opt.velocity.clone(), opt.gains.clone())
+        };
+        let (y1, v1, g1) = run(1);
+        let (y4, v4, g4) = run(4);
+        assert_eq!(y1, y4);
+        assert_eq!(v1, v4);
+        assert_eq!(g1, g4);
+    }
+
+    #[test]
     fn zero_gradient_preserves_velocity_decay() {
+        let pool = ThreadPool::new(1);
         let mut opt = Optimizer::new(1, 1, 1.0);
         let mut y = vec![0f32];
-        opt.step(&mut y, &[-1.0]); // builds velocity
+        opt.step(&pool, &mut y, &[-1.0]); // builds velocity
         let v1 = opt.velocity[0];
-        opt.step(&mut y, &[0.0]);
+        opt.step(&pool, &mut y, &[0.0]);
         assert!((opt.velocity[0] - v1 * 0.5).abs() < 1e-12);
     }
 }

@@ -15,6 +15,11 @@
 use crate::util::pool::SendPtr;
 use crate::util::ThreadPool;
 
+/// Minimum row count for the pool-parallel counting transpose inside
+/// [`Csr::symmetrize_parallel`]; below it the serial scatter is faster
+/// than paying the per-chunk count arrays.
+pub const PAR_TRANSPOSE_MIN: usize = 4 * 1024;
+
 /// CSR matrix with f32 values and u32 column indices.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Csr {
@@ -177,11 +182,19 @@ impl Csr {
     /// Streaming symmetrization: same result as [`Csr::symmetrize`]
     /// (bit-identical values), computed without the N-vector scatter.
     ///
-    /// Two-pass counting transpose (count columns → prefix sum → scatter
-    /// in source-row order, which leaves every transpose row sorted),
-    /// then a pool-parallel sorted merge of row i of C with row i of Cᵀ:
-    /// a first merge walk sizes each output row, a second writes
+    /// Counting transpose (count columns → prefix sum → scatter in
+    /// source-row order, which leaves every transpose row sorted), then a
+    /// pool-parallel sorted merge of row i of C with row i of Cᵀ: a first
+    /// merge walk sizes each output row, a second writes
     /// `p_{j|i}·s + p_{i|j}·s` (s = 1/2N) into its final slot.
+    ///
+    /// Above [`PAR_TRANSPOSE_MIN`] rows the transpose itself runs on the
+    /// pool as a parallel counting sort: row chunks count columns into
+    /// per-chunk arrays, a column-major offset merge turns them into
+    /// per-chunk cursors, and each chunk scatters its own entries. Within
+    /// a column, chunks appear in ascending row order and rows ascend
+    /// within a chunk, so the slot layout — and therefore every output
+    /// bit — is identical to the serial scatter.
     ///
     /// Precondition: every row's columns are strictly ascending (no
     /// duplicates) — both in-tree constructors guarantee this
@@ -197,23 +210,27 @@ impl Csr {
         );
         // --- Counting transpose: t = Cᵀ in CSR form. ---
         let mut t_indptr = vec![0u32; n + 1];
-        for &c in &self.indices {
-            t_indptr[c as usize + 1] += 1;
-        }
-        for i in 0..n {
-            t_indptr[i + 1] += t_indptr[i];
-        }
-        let mut cursor: Vec<u32> = t_indptr[..n].to_vec();
         let mut t_indices = vec![0u32; nnz];
         let mut t_values = vec![0f32; nnz];
-        for i in 0..n {
-            let (cols, vals) = self.row(i);
-            for (&j, &v) in cols.iter().zip(vals) {
-                let slot = cursor[j as usize] as usize;
-                cursor[j as usize] += 1;
-                // Scattering in ascending i keeps transpose rows sorted.
-                t_indices[slot] = i as u32;
-                t_values[slot] = v;
+        if pool.n_threads() > 1 && n >= PAR_TRANSPOSE_MIN {
+            self.transpose_parallel(pool, &mut t_indptr, &mut t_indices, &mut t_values);
+        } else {
+            for &c in &self.indices {
+                t_indptr[c as usize + 1] += 1;
+            }
+            for i in 0..n {
+                t_indptr[i + 1] += t_indptr[i];
+            }
+            let mut cursor: Vec<u32> = t_indptr[..n].to_vec();
+            for i in 0..n {
+                let (cols, vals) = self.row(i);
+                for (&j, &v) in cols.iter().zip(vals) {
+                    let slot = cursor[j as usize] as usize;
+                    cursor[j as usize] += 1;
+                    // Scattering in ascending i keeps transpose rows sorted.
+                    t_indices[slot] = i as u32;
+                    t_values[slot] = v;
+                }
             }
         }
         let t_row = |i: usize| {
@@ -292,6 +309,108 @@ impl Csr {
             }
         });
         Csr { n_rows: n, indptr, indices, values }
+    }
+
+    /// Pool-parallel counting transpose (the Amdahl-cap fix for the
+    /// symmetrize stage at paper scale): C contiguous row chunks each
+    /// count their columns into a private `n`-wide array, a column-major
+    /// merge converts the counts into per-chunk write cursors (and the
+    /// global `t_indptr`), and each chunk scatters its own entries
+    /// through its cursors. Bit-identical to the serial scatter: within a
+    /// column, chunk order is ascending source row, and each chunk
+    /// scatters rows in ascending order.
+    fn transpose_parallel(
+        &self,
+        pool: &ThreadPool,
+        t_indptr: &mut [u32],
+        t_indices: &mut [u32],
+        t_values: &mut [f32],
+    ) {
+        let n = self.n_rows;
+        // Cap the chunk count: each chunk owns an n-wide u32 count array.
+        let chunks = pool.n_threads().min(8).max(2);
+        let rows_per = n.div_ceil(chunks);
+        let row_lo = |c: usize| (c * rows_per).min(n);
+        // --- Pass 1: per-chunk column counts. ---
+        let mut counts = vec![0u32; chunks * n];
+        {
+            let cc = SendPtr(counts.as_mut_ptr());
+            pool.scoped(|scope| {
+                for c in 0..chunks {
+                    let (lo, hi) = (row_lo(c), row_lo(c + 1));
+                    let cc = &cc;
+                    scope.run(move || {
+                        let base = c * n;
+                        for i in lo..hi {
+                            for &j in self.row(i).0 {
+                                // SAFETY: chunk c owns counts[c*n..(c+1)*n].
+                                unsafe { *cc.0.add(base + j as usize) += 1 };
+                            }
+                        }
+                    });
+                }
+            });
+        }
+        // --- Pass 2: column totals → t_indptr prefix sum (serial O(n)),
+        // then per-chunk cursors via a column-major running offset. ---
+        for j in 0..n {
+            let mut total = 0u32;
+            for c in 0..chunks {
+                total += counts[c * n + j];
+            }
+            t_indptr[j + 1] = total;
+        }
+        for j in 0..n {
+            t_indptr[j + 1] += t_indptr[j];
+        }
+        {
+            let cc = SendPtr(counts.as_mut_ptr());
+            let t_indptr_ref = &*t_indptr;
+            pool.scope_chunks(n, 4096, |jlo, jhi| {
+                let _ = &cc;
+                for j in jlo..jhi {
+                    let mut run = t_indptr_ref[j];
+                    for c in 0..chunks {
+                        // SAFETY: column j's slots across all chunks are
+                        // owned by the job covering j.
+                        unsafe {
+                            let p = cc.0.add(c * n + j);
+                            let cnt = *p;
+                            *p = run;
+                            run += cnt;
+                        }
+                    }
+                }
+            });
+        }
+        // --- Pass 3: per-chunk scatter through the cursors. ---
+        let cc = SendPtr(counts.as_mut_ptr());
+        let ic = SendPtr(t_indices.as_mut_ptr());
+        let vc = SendPtr(t_values.as_mut_ptr());
+        pool.scoped(|scope| {
+            for c in 0..chunks {
+                let (lo, hi) = (row_lo(c), row_lo(c + 1));
+                let (cc, ic, vc) = (&cc, &ic, &vc);
+                scope.run(move || {
+                    let base = c * n;
+                    for i in lo..hi {
+                        let (cols, vals) = self.row(i);
+                        for (&j, &v) in cols.iter().zip(vals) {
+                            // SAFETY: cursor ranges [cursor, cursor+count)
+                            // are disjoint across (chunk, column) pairs by
+                            // construction; each slot written once.
+                            unsafe {
+                                let cur = cc.0.add(base + j as usize);
+                                let slot = *cur as usize;
+                                *cur += 1;
+                                *ic.0.add(slot) = i as u32;
+                                *vc.0.add(slot) = v;
+                            }
+                        }
+                    }
+                });
+            }
+        });
     }
 
     /// Check structural symmetry of values: p_ij == p_ji for every stored
@@ -462,6 +581,22 @@ mod tests {
             // Bit-identical: same pattern, same value bits.
             assert_eq!(streamed, oracle, "n={n} k={k}");
         }
+    }
+
+    #[test]
+    fn parallel_transpose_path_matches_scatter_oracle() {
+        // Above PAR_TRANSPOSE_MIN the counting transpose runs on the pool
+        // (per-chunk counts + offset merge); output must stay bit-equal.
+        let pool = ThreadPool::new(4);
+        let n = PAR_TRANSPOSE_MIN + 513;
+        let (cols, vals) = random_knn_rows(n, 9, 7);
+        let cond = Csr::from_knn(&pool, n, 9, &cols, &vals);
+        let oracle = cond.symmetrize();
+        let streamed = cond.symmetrize_parallel(&pool);
+        assert_eq!(streamed, oracle);
+        // Thread count must not matter either.
+        let pool2 = ThreadPool::new(2);
+        assert_eq!(cond.symmetrize_parallel(&pool2), oracle);
     }
 
     #[test]

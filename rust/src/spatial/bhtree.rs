@@ -120,8 +120,8 @@ pub struct BhTree<const DIM: usize> {
     nodes: Vec<Node<DIM>>,
     mode: CellSizeMode,
     n: usize,
-    /// Points in DFS-leaf order (for dual-tree range queries); built by
-    /// [`BhTree::build_ranges`].
+    /// Points in DFS-leaf order (for dual-tree range queries); built
+    /// eagerly on every (re)build so the dual traversal takes `&self`.
     order: Vec<u32>,
     /// Per-node `[start, end)` into `order` (parallel to `nodes`).
     ranges: Vec<(u32, u32)>,
@@ -137,6 +137,54 @@ pub struct BhTree<const DIM: usize> {
     t_count: Vec<u32>,
     t_first: Vec<u32>,
     t_point: Vec<u32>,
+    /// Persistent construction state, reused by [`BhTree::refit`] so
+    /// steady-state rebuilds allocate nothing.
+    build: BuildScratch<DIM>,
+}
+
+/// Persistent construction buffers: everything a (re)build needs, kept
+/// across iterations. After the first build at a given n the capacities
+/// stabilize and refits perform zero heap allocation.
+struct BuildScratch<const DIM: usize> {
+    /// Morton `(key, index)` pairs, sorted — kept after every build so a
+    /// refit can re-key in the previous (nearly sorted) order.
+    keys: Vec<(u64, u32)>,
+    /// Full-sort merge scratch / adaptive-resort backbone buffer.
+    scratch: Vec<(u64, u32)>,
+    /// Out-of-order entries peeled off by the adaptive re-sort.
+    displaced: Vec<(u64, u32)>,
+    /// Per-chunk partial bounding boxes.
+    bbox_parts: Vec<([f32; DIM], [f32; DIM])>,
+    /// Per-frontier-subtree node arenas (+ depth-cap hit counts) for the
+    /// parallel bottom-up assembly.
+    arenas: Vec<(Vec<Node<DIM>>, usize)>,
+    frontier: Vec<BuildTask>,
+    next_frontier: Vec<BuildTask>,
+    serial_interiors: Vec<usize>,
+}
+
+impl<const DIM: usize> BuildScratch<DIM> {
+    fn new() -> Self {
+        BuildScratch {
+            keys: Vec::new(),
+            scratch: Vec::new(),
+            displaced: Vec::new(),
+            bbox_parts: Vec::new(),
+            arenas: Vec::new(),
+            frontier: Vec::new(),
+            next_frontier: Vec::new(),
+            serial_interiors: Vec::new(),
+        }
+    }
+}
+
+/// One frontier task of the parallel bottom-up assembly.
+#[derive(Clone, Copy)]
+struct BuildTask {
+    id: usize,
+    lo: usize,
+    hi: usize,
+    depth: usize,
 }
 
 /// Disjoint-write raw-pointer wrapper for pool closures (soundness
@@ -147,6 +195,15 @@ unsafe impl<T: Send> Sync for RawMut<T> {}
 
 /// Build ranges at least this large use the parallel path.
 const PAR_BUILD_MIN: usize = 8 * 1024;
+
+/// [`BhTree::refit`] falls back to the from-scratch sort when more than
+/// `n / REFIT_DISORDER_DENOM` keys are out of order after re-keying.
+pub const REFIT_DISORDER_DENOM: usize = 8;
+
+/// Minimum point count for the fanned-out dual-tree traversal; below it
+/// [`BhTree::repulsion_dual_parallel`] runs the serial walk (still
+/// allocation-free through the caller's scratch).
+const PAR_DUAL_MIN: usize = 4 * 1024;
 
 impl<const DIM: usize> BhTree<DIM> {
     /// Number of children per interior node.
@@ -180,42 +237,302 @@ impl<const DIM: usize> BhTree<DIM> {
     fn build_impl(y: &[f32], n: usize, mode: CellSizeMode, pool: Option<&ThreadPool>) -> Self {
         assert!(y.len() >= n * DIM);
         assert!(n > 0, "cannot build tree over zero points");
-        let pool = pool.filter(|p| p.n_threads() > 1 && n >= PAR_BUILD_MIN);
-        let (center, half) = bounding_cell::<DIM>(y, n, pool);
-        let sorted = morton_sorted::<DIM>(y, n, &center, &half, pool);
-        let (nodes, depth_cap_hits) = match pool {
-            Some(pool) => build_nodes_parallel::<DIM>(pool, y, &sorted, center, half),
-            None => {
-                let b = SubtreeBuilder::<DIM>::run(y, &sorted, center, half, 0, n, 0);
-                (b.nodes, b.depth_cap_hits)
-            }
-        };
         let mut tree = BhTree {
-            nodes,
+            nodes: Vec::new(),
             mode,
             n,
             order: Vec::new(),
             ranges: Vec::new(),
-            depth_cap_hits,
+            depth_cap_hits: 0,
             t_com: Vec::new(),
             t_r2: Vec::new(),
             t_count: Vec::new(),
             t_first: Vec::new(),
             t_point: Vec::new(),
+            build: BuildScratch::new(),
         };
-        tree.finalize();
+        let pool = tree.active_pool(pool);
+        let (center, half) = tree.bounding_cell(y, pool);
+        tree.compute_keys(y, &center, &half, pool, false);
+        tree.sort_keys_full(pool);
+        tree.assemble(pool, y, center, half);
         tree
     }
 
+    /// Rebuild the tree in place for a new embedding of the same point
+    /// count, reusing every arena and buffer from the previous build.
+    ///
+    /// The Morton keys are recomputed (the bounding cell moves every
+    /// iteration) in the previous *sorted order*, which is nearly sorted
+    /// when the embedding drifted little between iterations. An adaptive
+    /// merge then restores sortedness in O(n + d·log d) for d displaced
+    /// entries, falling back to the from-scratch parallel sort when d
+    /// exceeds `n / REFIT_DISORDER_DENOM`. The sort key is the unique
+    /// total order `(key, index)`, so both paths — and therefore the
+    /// whole rebuilt tree — are bit-identical to [`BhTree::build_parallel`]
+    /// on the same data (`build_parallel` stays the oracle).
+    ///
+    /// Returns `true` when the adaptive (refit) path was taken.
+    pub fn refit(&mut self, pool: Option<&ThreadPool>, y: &[f32]) -> bool {
+        assert!(y.len() >= self.n * DIM);
+        assert_eq!(self.build.keys.len(), self.n, "refit requires a previous build");
+        let pool = self.active_pool(pool);
+        let (center, half) = self.bounding_cell(y, pool);
+        self.compute_keys(y, &center, &half, pool, true);
+        let adaptive = self.adaptive_resort(pool);
+        if !adaptive {
+            self.sort_keys_full(pool);
+        }
+        self.assemble(pool, y, center, half);
+        adaptive
+    }
+
+    /// Pool gate shared by build and refit: parallel paths only engage
+    /// above the size threshold and with real worker parallelism.
+    fn active_pool<'a>(&self, pool: Option<&'a ThreadPool>) -> Option<&'a ThreadPool> {
+        pool.filter(|p| p.n_threads() > 1 && self.n >= PAR_BUILD_MIN)
+    }
+
+    /// Root cell of the point set (see module docs); partial boxes land in
+    /// the persistent `bbox_parts` buffer on the parallel path.
+    fn bounding_cell(&mut self, y: &[f32], pool: Option<&ThreadPool>) -> ([f32; DIM], [f32; DIM]) {
+        let n = self.n;
+        let mut lo = [f32::INFINITY; DIM];
+        let mut hi = [f32::NEG_INFINITY; DIM];
+        match pool {
+            Some(pool) => {
+                // Per-chunk partial boxes, combined in slot order (min/max
+                // is order-independent anyway, but keep the reduction fixed).
+                const CHUNK: usize = 16 * 1024;
+                let n_chunks = n.div_ceil(CHUNK);
+                let parts = &mut self.build.bbox_parts;
+                parts.clear();
+                parts.resize(n_chunks, (lo, hi));
+                let pc = RawMut(parts.as_mut_ptr());
+                pool.scope_chunks(n, CHUNK, |a, b| {
+                    let _ = &pc;
+                    let mut plo = [f32::INFINITY; DIM];
+                    let mut phi = [f32::NEG_INFINITY; DIM];
+                    for i in a..b {
+                        for d in 0..DIM {
+                            let v = y[i * DIM + d];
+                            plo[d] = plo[d].min(v);
+                            phi[d] = phi[d].max(v);
+                        }
+                    }
+                    // SAFETY: one chunk writes exactly one slot.
+                    unsafe { *pc.0.add(a / CHUNK) = (plo, phi) };
+                });
+                for &(plo, phi) in parts.iter() {
+                    for d in 0..DIM {
+                        lo[d] = lo[d].min(plo[d]);
+                        hi[d] = hi[d].max(phi[d]);
+                    }
+                }
+            }
+            None => {
+                for i in 0..n {
+                    for d in 0..DIM {
+                        let v = y[i * DIM + d];
+                        lo[d] = lo[d].min(v);
+                        hi[d] = hi[d].max(v);
+                    }
+                }
+            }
+        }
+        let mut center = [0f32; DIM];
+        let mut half = [0f32; DIM];
+        for d in 0..DIM {
+            center[d] = 0.5 * (lo[d] + hi[d]);
+            half[d] = ((hi[d] - lo[d]) * 0.5).max(1e-5) * (1.0 + 1e-4);
+        }
+        (center, half)
+    }
+
+    /// Fill `keys` with `(morton_key, index)` pairs. With `rekey == false`
+    /// the indices are the identity (fresh build); with `rekey == true`
+    /// the existing slot order is kept and only the keys are recomputed —
+    /// the refit path, which leaves the array nearly sorted.
+    fn compute_keys(
+        &mut self,
+        y: &[f32],
+        center: &[f32; DIM],
+        half: &[f32; DIM],
+        pool: Option<&ThreadPool>,
+        rekey: bool,
+    ) {
+        let n = self.n;
+        let (origin, inv_step) = key_params::<DIM>(center, half);
+        let keys = &mut self.build.keys;
+        if !rekey {
+            keys.clear();
+            keys.resize(n, (0, 0));
+        }
+        debug_assert_eq!(keys.len(), n);
+        let key_of = |i: u32| {
+            let mut p = [0f32; DIM];
+            p.copy_from_slice(&y[i as usize * DIM..(i as usize + 1) * DIM]);
+            morton_key::<DIM>(&p, &origin, &inv_step)
+        };
+        match pool {
+            Some(pool) => {
+                let kc = RawMut(keys.as_mut_ptr());
+                pool.scope_chunks(n, 4096, |lo, hi| {
+                    let _ = &kc;
+                    for s in lo..hi {
+                        // SAFETY: disjoint slots across chunks.
+                        unsafe {
+                            let idx = if rekey { (*kc.0.add(s)).1 } else { s as u32 };
+                            *kc.0.add(s) = (key_of(idx), idx);
+                        }
+                    }
+                });
+            }
+            None => {
+                for s in 0..n {
+                    let idx = if rekey { keys[s].1 } else { s as u32 };
+                    keys[s] = (key_of(idx), idx);
+                }
+            }
+        }
+    }
+
+    /// From-scratch sort of `keys` (parallel merge sort on the pool, or
+    /// `sort_unstable` serially), through the persistent scratch buffer.
+    fn sort_keys_full(&mut self, pool: Option<&ThreadPool>) {
+        let BuildScratch { keys, scratch, .. } = &mut self.build;
+        match pool {
+            Some(pool) => {
+                scratch.clear();
+                scratch.resize(keys.len(), (0, 0));
+                par_merge_sort(pool, keys, scratch);
+            }
+            None => keys.sort_unstable(),
+        }
+    }
+
+    /// Re-sort `keys` exploiting near-sortedness: one pass peels the
+    /// greedy ascending backbone into `scratch` and the out-of-order rest
+    /// into `displaced`; the (small) displaced list is sorted and merged
+    /// back. Aborts — returning false with `keys` untouched — when the
+    /// displaced count exceeds `n / REFIT_DISORDER_DENOM`; the caller then
+    /// runs the from-scratch sort. Keys are a unique total order, so the
+    /// merged result is bit-identical to `sort_unstable` whenever this
+    /// returns true.
+    fn adaptive_resort(&mut self, pool: Option<&ThreadPool>) -> bool {
+        let n = self.n;
+        let BuildScratch { keys, scratch, displaced, .. } = &mut self.build;
+        let max_displaced = n / REFIT_DISORDER_DENOM;
+        scratch.clear();
+        displaced.clear();
+        // Fixed-capacity displaced buffer: sized to the abort threshold up
+        // front so fluctuating disorder never reallocates it.
+        if displaced.capacity() < max_displaced {
+            displaced.reserve_exact(max_displaced);
+        }
+        for &kv in keys.iter() {
+            match scratch.last() {
+                Some(&last) if kv < last => {
+                    if displaced.len() >= max_displaced {
+                        return false;
+                    }
+                    displaced.push(kv);
+                }
+                _ => scratch.push(kv),
+            }
+        }
+        if displaced.is_empty() {
+            return true; // already sorted; keys untouched
+        }
+        displaced.sort_unstable();
+        match pool {
+            Some(pool) if scratch.len() >= PAR_BUILD_MIN => {
+                // Partition the merge at backbone split points: everything
+                // left of scratch[b1] (in either input) merges left of it.
+                let jobs = pool.n_threads().min(8);
+                let kc = RawMut(keys.as_mut_ptr());
+                pool.scoped(|scope| {
+                    let (mut b0, mut d0) = (0usize, 0usize);
+                    for t in 1..=jobs {
+                        let b1 = scratch.len() * t / jobs;
+                        let d1 = if b1 >= scratch.len() {
+                            displaced.len()
+                        } else {
+                            displaced.partition_point(|&x| x < scratch[b1])
+                        };
+                        let out0 = b0 + d0;
+                        let a = &scratch[b0..b1];
+                        let b = &displaced[d0..d1];
+                        let kc = &kc;
+                        scope.run(move || {
+                            // SAFETY: output ranges are disjoint and cover
+                            // 0..n in order (out0 advances by each job's
+                            // total input length).
+                            let out = unsafe {
+                                std::slice::from_raw_parts_mut(kc.0.add(out0), a.len() + b.len())
+                            };
+                            merge_runs(a, b, out);
+                        });
+                        b0 = b1;
+                        d0 = d1;
+                    }
+                });
+            }
+            _ => merge_runs(scratch, displaced, keys),
+        }
+        true
+    }
+
+    /// Assemble nodes from the sorted keys (into the reused arenas), then
+    /// refresh the traversal SoA and the DFS order/ranges.
+    fn assemble(&mut self, pool: Option<&ThreadPool>, y: &[f32], center: [f32; DIM], half: [f32; DIM]) {
+        // Node counts drift by a handful between refits; 50% headroom over
+        // the previous count keeps steady-state reallocation at zero.
+        let prev = self.nodes.len();
+        if self.nodes.capacity() < prev + prev / 2 {
+            self.nodes.reserve_exact(prev / 2);
+        }
+        {
+            let BuildScratch { keys, arenas, frontier, next_frontier, serial_interiors, .. } =
+                &mut self.build;
+            self.depth_cap_hits = match pool {
+                Some(pool) => build_nodes_parallel::<DIM>(
+                    pool,
+                    y,
+                    keys,
+                    center,
+                    half,
+                    &mut self.nodes,
+                    arenas,
+                    frontier,
+                    next_frontier,
+                    serial_interiors,
+                ),
+                None => SubtreeBuilder::<DIM>::run(y, keys, &mut self.nodes, center, half, 0, self.n, 0),
+            };
+        }
+        self.finalize();
+        self.build_order_ranges();
+    }
+
     /// Build the traversal SoA: finalized center-of-mass, squared cell
-    /// size, counts, child links. One pass, O(nodes).
+    /// size, counts, child links. One pass, O(nodes); buffers reused, with
+    /// the same 50% headroom rule as the node arena (see `assemble`).
     fn finalize(&mut self) {
         let m = self.nodes.len();
-        self.t_com = Vec::with_capacity(m);
-        self.t_r2 = Vec::with_capacity(m);
-        self.t_count = Vec::with_capacity(m);
-        self.t_first = Vec::with_capacity(m);
-        self.t_point = Vec::with_capacity(m);
+        let want = m + m / 2;
+        self.t_com.clear();
+        self.t_r2.clear();
+        self.t_count.clear();
+        self.t_first.clear();
+        self.t_point.clear();
+        if self.t_com.capacity() < m {
+            self.t_com.reserve_exact(want);
+            self.t_r2.reserve_exact(want);
+            self.t_count.reserve_exact(want);
+            self.t_first.reserve_exact(want);
+            self.t_point.reserve_exact(want);
+        }
         for node in &self.nodes {
             self.t_com.push(if node.count > 0 { node.com() } else { [0.0; DIM] });
             self.t_r2.push(node.r2(self.mode));
@@ -362,13 +679,18 @@ impl<const DIM: usize> BhTree<DIM> {
     }
 
     /// Build the DFS point ordering and per-node `[start, end)` ranges
-    /// used by the dual-tree traversal. Idempotent.
-    pub fn build_ranges(&mut self) {
-        if !self.order.is_empty() {
-            return;
+    /// used by the dual-tree traversal. Runs eagerly on every (re)build so
+    /// the dual traversal is `&self` and cost + gradient evaluation can
+    /// share one immutable tree.
+    fn build_order_ranges(&mut self) {
+        let m = self.nodes.len();
+        self.order.clear();
+        self.ranges.clear();
+        if self.ranges.capacity() < m {
+            // Same 50% headroom rule as the node arena (see `assemble`).
+            self.ranges.reserve_exact(m + m / 2);
         }
-        self.ranges = vec![(0, 0); self.nodes.len()];
-        self.order = Vec::with_capacity(self.n);
+        self.ranges.resize(m, (0, 0));
         self.range_rec(0);
     }
 
@@ -391,21 +713,29 @@ impl<const DIM: usize> BhTree<DIM> {
         self.ranges[id as usize] = (start, self.order.len() as u32);
     }
 
-    /// Dual-tree repulsion (paper appendix, Eq. 10): simultaneous DFS over
-    /// node pairs; a pair whose cells satisfy
-    /// `max(r1, r2) / ||com1 − com2|| < ρ` contributes one summary
-    /// interaction applied to every point of both cells.
+    /// Core of the dual-tree traversal: processes pairs from `stack` until
+    /// it drains. Summary interactions accumulate into `acc`, an
+    /// *order-space* buffer (`n × DIM`, position `pos` holds the force for
+    /// `order[pos]`) — every summary then writes one contiguous range.
+    /// `touched` is widened to the order-position span that received
+    /// writes.
     ///
-    /// `forces` is `n × DIM` (f64), `rho` the trade-off parameter. Returns
-    /// the estimate of Z (sum over ordered pairs, matching what the
-    /// point-cell traversal accumulates over all i).
-    pub fn repulsion_dual(&mut self, rho: f32, forces: &mut [f64]) -> f64 {
-        self.build_ranges();
-        assert_eq!(forces.len(), self.n * DIM);
+    /// When `defer` is `Some((cutoff, seeds))`, pairs that would *split*
+    /// and whose larger side holds at most `cutoff` points are pushed to
+    /// `seeds` instead of expanding — the top-level fan-out used by
+    /// [`BhTree::repulsion_dual_parallel`]. Since a pair's processing
+    /// depends only on the pair itself, walking the seeds later (in any
+    /// grouping) applies exactly the summary multiset the uninterrupted
+    /// serial walk would.
+    fn dual_walk(
+        &self,
+        rho2: f32,
+        stack: &mut Vec<(u32, u32)>,
+        mut defer: Option<(u32, &mut Vec<(u32, u32)>)>,
+        acc: &mut [f64],
+        touched: &mut (u32, u32),
+    ) -> f64 {
         let mut z = 0f64;
-        let mut stack: Vec<(u32, u32)> = Vec::with_capacity(1024);
-        stack.push((0, 0));
-        let rho2 = rho * rho;
         while let Some((a, b)) = stack.pop() {
             let na = &self.nodes[a as usize];
             let nb = &self.nodes[b as usize];
@@ -421,6 +751,12 @@ impl<const DIM: usize> BhTree<DIM> {
                     let m = na.count as f64;
                     z += m * (m - 1.0);
                     continue;
+                }
+                if let Some((cutoff, seeds)) = defer.as_mut() {
+                    if na.count <= *cutoff {
+                        seeds.push((a, b));
+                        continue;
+                    }
                 }
                 let first = na.first_child;
                 for i in 0..Self::FANOUT {
@@ -450,13 +786,21 @@ impl<const DIM: usize> BhTree<DIM> {
                 z += na.count as f64 * w * q;
                 let qq = w * q * q;
                 let (s, e) = self.ranges[a as usize];
-                for &pi in &self.order[s as usize..e as usize] {
-                    let row = pi as usize * DIM;
+                touched.0 = touched.0.min(s);
+                touched.1 = touched.1.max(e);
+                for pos in s as usize..e as usize {
+                    let row = pos * DIM;
                     for d in 0..DIM {
-                        forces[row + d] += qq * diff[d] as f64;
+                        acc[row + d] += qq * diff[d] as f64;
                     }
                 }
             } else {
+                if let Some((cutoff, seeds)) = defer.as_mut() {
+                    if na.count.max(nb.count) <= *cutoff {
+                        seeds.push((a, b));
+                        continue;
+                    }
+                }
                 // Split the larger cell (by size measure); leaves split the
                 // other side.
                 let split_a = !na.is_leaf() && (nb.is_leaf() || na.r2(self.mode) >= nb.r2(self.mode));
@@ -473,6 +817,176 @@ impl<const DIM: usize> BhTree<DIM> {
                 }
             }
         }
+        z
+    }
+
+    /// Dual-tree repulsion (paper appendix, Eq. 10): simultaneous DFS over
+    /// node pairs; a pair whose cells satisfy
+    /// `max(r1, r2) / ||com1 − com2|| < ρ` contributes one summary
+    /// interaction applied to every point of both cells.
+    ///
+    /// `forces` is `n × DIM` (f64), `rho` the trade-off parameter. Returns
+    /// the estimate of Z (sum over ordered pairs, matching what the
+    /// point-cell traversal accumulates over all i). Serial reference walk;
+    /// [`BhTree::repulsion_dual_parallel`] fans the same decomposition out
+    /// on the pool.
+    pub fn repulsion_dual(&self, rho: f32, forces: &mut [f64]) -> f64 {
+        assert_eq!(forces.len(), self.n * DIM);
+        let mut acc = vec![0f64; self.n * DIM];
+        let mut stack: Vec<(u32, u32)> = Vec::with_capacity(1024);
+        stack.push((0, 0));
+        let mut touched = (u32::MAX, 0u32);
+        let z = self.dual_walk(rho * rho, &mut stack, None, &mut acc, &mut touched);
+        if touched.0 < touched.1 {
+            for pos in touched.0 as usize..touched.1 as usize {
+                let row = self.order[pos] as usize * DIM;
+                for d in 0..DIM {
+                    forces[row + d] += acc[pos * DIM + d];
+                }
+            }
+        }
+        z
+    }
+
+    /// Pool-parallel dual-tree repulsion: a serial top expansion collects
+    /// pair seeds (applying the few large summaries it meets inline), the
+    /// seeds fan out round-robin over a fixed number of slots, and each
+    /// slot walks its seeds into a private order-space accumulator from
+    /// `ws`. A final snapped-segment reduction sums the slot buffers into
+    /// `forces` (and re-zeroes them for the next call). Slot assignment
+    /// and all reduction orders are fixed, so for a given pool size the
+    /// result is deterministic regardless of scheduling; it matches
+    /// [`BhTree::repulsion_dual`] up to f64 summation order.
+    pub fn repulsion_dual_parallel(
+        &self,
+        pool: &ThreadPool,
+        rho: f32,
+        forces: &mut [f64],
+        ws: &mut DualTreeScratch,
+    ) -> f64 {
+        assert_eq!(forces.len(), self.n * DIM);
+        let rho2 = rho * rho;
+        if pool.n_threads() <= 1 || self.n < PAR_DUAL_MIN {
+            // Serial walk through the caller's scratch (allocation-free).
+            ws.ensure(self.n * DIM, 0);
+            let buf = &mut ws.bufs[0];
+            let stack = &mut ws.stacks[0];
+            stack.clear();
+            stack.push((0, 0));
+            let mut touched = (u32::MAX, 0u32);
+            let z = self.dual_walk(rho2, stack, None, buf, &mut touched);
+            if touched.0 < touched.1 {
+                for pos in touched.0 as usize..touched.1 as usize {
+                    let row = self.order[pos] as usize * DIM;
+                    for d in 0..DIM {
+                        forces[row + d] += buf[pos * DIM + d];
+                        buf[pos * DIM + d] = 0.0;
+                    }
+                }
+            }
+            return z;
+        }
+        let slots = (pool.n_threads() * 2).min(32);
+        ws.ensure(self.n * DIM, slots);
+        // --- Top expansion: same pair-DFS, stopping at task-sized pairs. ---
+        let cutoff = (self.n / (pool.n_threads() * 8)).max(512) as u32;
+        ws.seeds.clear();
+        let (top_stack, slot_stacks) = ws.stacks.split_last_mut().expect("stacks sized by ensure");
+        let (top_buf, slot_bufs) = ws.bufs.split_last_mut().expect("bufs sized by ensure");
+        let (top_touched, slot_touched) =
+            ws.touched.split_last_mut().expect("touched sized by ensure");
+        top_stack.clear();
+        top_stack.push((0, 0));
+        *top_touched = (u32::MAX, 0);
+        let top_z =
+            self.dual_walk(rho2, top_stack, Some((cutoff, &mut ws.seeds)), top_buf, top_touched);
+        // --- Fan out: seed s goes to slot s % slots; the assignment
+        // depends only on seed order, never on scheduling. ---
+        let seeds = &ws.seeds;
+        let zs = &mut ws.z;
+        pool.scoped(|scope| {
+            for (s, ((buf, stack), (tch, zslot))) in slot_bufs
+                .iter_mut()
+                .zip(slot_stacks.iter_mut())
+                .zip(slot_touched.iter_mut().zip(zs.iter_mut()))
+                .enumerate()
+            {
+                scope.run(move || {
+                    stack.clear();
+                    let mut i = s;
+                    while i < seeds.len() {
+                        stack.push(seeds[i]);
+                        i += slots;
+                    }
+                    *tch = (u32::MAX, 0);
+                    *zslot = self.dual_walk(rho2, stack, None, buf, tch);
+                });
+            }
+        });
+        // --- Deterministic reductions: Z in slot order, forces by summing
+        // the slot buffers (top buffer last) per order position. ---
+        let mut z = top_z;
+        for zv in ws.z.iter() {
+            z += *zv;
+        }
+        let mut lo = ws.touched[slots].0;
+        let mut hi = ws.touched[slots].1;
+        for t in ws.touched[..slots].iter() {
+            lo = lo.min(t.0);
+            hi = hi.max(t.1);
+        }
+        if lo >= hi {
+            return z;
+        }
+        // Segment boundaries snapped past runs of equal point ids
+        // (collapsed duplicates are contiguous in `order`), so each output
+        // row is written by exactly one job.
+        let DualTreeScratch { bufs, segs, buf_ptrs, .. } = ws;
+        segs.clear();
+        let chunk = ((hi - lo) as usize / (pool.n_threads() * 4)).max(1024);
+        let mut start = lo as usize;
+        while start < hi as usize {
+            let mut end = (start + chunk).min(hi as usize);
+            while end < hi as usize && self.order[end] == self.order[end - 1] {
+                end += 1;
+            }
+            segs.push((start, end));
+            start = end;
+        }
+        buf_ptrs.clear();
+        for b in bufs.iter_mut() {
+            buf_ptrs.push(RawMut(b.as_mut_ptr()));
+        }
+        let bp: &[RawMut<f64>] = buf_ptrs;
+        let order = &self.order;
+        let fc = RawMut(forces.as_mut_ptr());
+        pool.scoped(|scope| {
+            for &(s0, s1) in segs.iter() {
+                let fc = &fc;
+                scope.run(move || {
+                    for pos in s0..s1 {
+                        let row = order[pos] as usize * DIM;
+                        for d in 0..DIM {
+                            let mut sum = 0f64;
+                            for buf in bp.iter() {
+                                // SAFETY: segments are disjoint position
+                                // ranges; each buffer slot is read and
+                                // re-zeroed exactly once.
+                                unsafe {
+                                    let p = buf.0.add(pos * DIM + d);
+                                    sum += *p;
+                                    *p = 0.0;
+                                }
+                            }
+                            // SAFETY: equal point ids are contiguous in
+                            // `order` and segments snap past them, so each
+                            // force row belongs to exactly one segment.
+                            unsafe { *fc.0.add(row + d) += sum };
+                        }
+                    }
+                });
+            }
+        });
         z
     }
 
@@ -493,68 +1007,137 @@ impl<const DIM: usize> BhTree<DIM> {
             }
         }
     }
+
+    /// Structural equality of the full built state — node arena, DFS
+    /// order/ranges, and traversal SoA, node for node. The oracle check
+    /// for [`BhTree::refit`]: a refit tree must be indistinguishable from
+    /// a from-scratch [`BhTree::build_parallel`] on the same data.
+    pub fn arena_eq(&self, other: &Self) -> bool {
+        self.n == other.n
+            && self.depth_cap_hits == other.depth_cap_hits
+            && self.nodes == other.nodes
+            && self.order == other.order
+            && self.ranges == other.ranges
+            && self.t_com == other.t_com
+            && self.t_r2 == other.t_r2
+            && self.t_count == other.t_count
+            && self.t_first == other.t_first
+            && self.t_point == other.t_point
+            && self.build.keys == other.build.keys
+    }
+
+    /// Capacities of every owned buffer — the arena-capacity snapshot the
+    /// steady-state no-allocation tests compare across iterations.
+    pub fn capacities(&self) -> Vec<usize> {
+        let b = &self.build;
+        let mut caps = vec![
+            self.nodes.capacity(),
+            self.order.capacity(),
+            self.ranges.capacity(),
+            self.t_com.capacity(),
+            self.t_r2.capacity(),
+            self.t_count.capacity(),
+            self.t_first.capacity(),
+            self.t_point.capacity(),
+            b.keys.capacity(),
+            b.scratch.capacity(),
+            b.displaced.capacity(),
+            b.bbox_parts.capacity(),
+            b.arenas.capacity(),
+            b.frontier.capacity(),
+            b.next_frontier.capacity(),
+            b.serial_interiors.capacity(),
+        ];
+        for (arena, _) in &b.arenas {
+            caps.push(arena.capacity());
+        }
+        caps
+    }
+}
+
+/// Reusable workspace for [`BhTree::repulsion_dual_parallel`]: per-slot
+/// order-space force accumulators (kept all-zero between calls), pair
+/// stacks, Z slots, the seed list, and reduction segments. Create once
+/// per run — after the first call at a given (n, slot count) no further
+/// heap allocation happens.
+pub struct DualTreeScratch {
+    seeds: Vec<(u32, u32)>,
+    stacks: Vec<Vec<(u32, u32)>>,
+    bufs: Vec<Vec<f64>>,
+    touched: Vec<(u32, u32)>,
+    z: Vec<f64>,
+    segs: Vec<(usize, usize)>,
+    buf_ptrs: Vec<RawMut<f64>>,
+}
+
+impl DualTreeScratch {
+    pub fn new() -> Self {
+        DualTreeScratch {
+            seeds: Vec::new(),
+            stacks: Vec::new(),
+            bufs: Vec::new(),
+            touched: Vec::new(),
+            z: Vec::new(),
+            segs: Vec::new(),
+            buf_ptrs: Vec::new(),
+        }
+    }
+
+    /// Size for `slots` worker slots plus the top-expansion slot, each
+    /// with an order-space accumulator of `len` f64 (zero-initialized; the
+    /// reduction pass restores the all-zero invariant after every use).
+    fn ensure(&mut self, len: usize, slots: usize) {
+        if self.bufs.len() != slots + 1 || self.bufs[0].len() != len {
+            self.bufs = (0..slots + 1).map(|_| vec![0f64; len]).collect();
+        }
+        if self.stacks.len() != slots + 1 {
+            self.stacks = (0..slots + 1).map(|_| Vec::with_capacity(256)).collect();
+        }
+        self.touched.resize(slots + 1, (u32::MAX, 0));
+        self.z.clear();
+        self.z.resize(slots, 0.0);
+    }
+
+    /// Buffer capacities for the no-allocation snapshot tests.
+    pub fn capacities(&self) -> Vec<usize> {
+        let mut caps = vec![
+            self.seeds.capacity(),
+            self.stacks.capacity(),
+            self.bufs.capacity(),
+            self.touched.capacity(),
+            self.z.capacity(),
+            self.segs.capacity(),
+            self.buf_ptrs.capacity(),
+        ];
+        for s in &self.stacks {
+            caps.push(s.capacity());
+        }
+        for b in &self.bufs {
+            caps.push(b.capacity());
+        }
+        caps
+    }
+}
+
+impl Default for DualTreeScratch {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 // ---------------------------------------------------------------------------
 // Morton-ordered bottom-up construction.
 // ---------------------------------------------------------------------------
 
-/// Root cell (center, half-widths) of the point set: the bounding box,
-/// inflated so boundary points are strictly inside, with a floored
-/// half-width so a degenerate (all-equal) axis still subdivides.
-fn bounding_cell<const DIM: usize>(
-    y: &[f32],
-    n: usize,
-    pool: Option<&ThreadPool>,
-) -> ([f32; DIM], [f32; DIM]) {
-    let mut lo = [f32::INFINITY; DIM];
-    let mut hi = [f32::NEG_INFINITY; DIM];
-    match pool {
-        Some(pool) => {
-            // Per-chunk partial boxes, combined in slot order (min/max is
-            // order-independent anyway, but keep the reduction fixed).
-            const CHUNK: usize = 16 * 1024;
-            let n_chunks = n.div_ceil(CHUNK);
-            let mut parts = vec![(lo, hi); n_chunks];
-            let pc = RawMut(parts.as_mut_ptr());
-            pool.scope_chunks(n, CHUNK, |a, b| {
-                let _ = &pc;
-                let mut plo = [f32::INFINITY; DIM];
-                let mut phi = [f32::NEG_INFINITY; DIM];
-                for i in a..b {
-                    for d in 0..DIM {
-                        let v = y[i * DIM + d];
-                        plo[d] = plo[d].min(v);
-                        phi[d] = phi[d].max(v);
-                    }
-                }
-                // SAFETY: one chunk writes exactly one slot.
-                unsafe { *pc.0.add(a / CHUNK) = (plo, phi) };
-            });
-            for (plo, phi) in parts {
-                for d in 0..DIM {
-                    lo[d] = lo[d].min(plo[d]);
-                    hi[d] = hi[d].max(phi[d]);
-                }
-            }
-        }
-        None => {
-            for i in 0..n {
-                for d in 0..DIM {
-                    let v = y[i * DIM + d];
-                    lo[d] = lo[d].min(v);
-                    hi[d] = hi[d].max(v);
-                }
-            }
-        }
-    }
-    let mut center = [0f32; DIM];
-    let mut half = [0f32; DIM];
+/// Quantization parameters of the Morton grid over the root cell.
+fn key_params<const DIM: usize>(center: &[f32; DIM], half: &[f32; DIM]) -> ([f64; DIM], [f64; DIM]) {
+    let mut origin = [0f64; DIM];
+    let mut inv_step = [0f64; DIM];
     for d in 0..DIM {
-        center[d] = 0.5 * (lo[d] + hi[d]);
-        half[d] = ((hi[d] - lo[d]) * 0.5).max(1e-5) * (1.0 + 1e-4);
+        origin[d] = center[d] as f64 - half[d] as f64;
+        inv_step[d] = (1u64 << BhTree::<DIM>::KEY_BITS) as f64 / (2.0 * half[d] as f64);
     }
-    (center, half)
+    (origin, inv_step)
 }
 
 /// Interleave the quantized per-axis cells of one point into a Morton key.
@@ -577,55 +1160,15 @@ fn morton_key<const DIM: usize>(p: &[f32; DIM], origin: &[f64; DIM], inv_step: &
     key
 }
 
-/// Compute and sort the `(key, index)` pairs. The index participates in
-/// the ordering, making it total: ties between coincident points resolve
-/// to dataset order, exactly like the old first-arrival insertion, and
-/// serial/parallel sorts agree bit-for-bit.
-fn morton_sorted<const DIM: usize>(
-    y: &[f32],
-    n: usize,
-    center: &[f32; DIM],
-    half: &[f32; DIM],
-    pool: Option<&ThreadPool>,
-) -> Vec<(u64, u32)> {
-    let mut origin = [0f64; DIM];
-    let mut inv_step = [0f64; DIM];
-    for d in 0..DIM {
-        origin[d] = center[d] as f64 - half[d] as f64;
-        inv_step[d] = (1u64 << BhTree::<DIM>::KEY_BITS) as f64 / (2.0 * half[d] as f64);
-    }
-    let mut keys: Vec<(u64, u32)> = vec![(0, 0); n];
-    let key_at = |i: usize| {
-        let mut p = [0f32; DIM];
-        p.copy_from_slice(&y[i * DIM..(i + 1) * DIM]);
-        (morton_key::<DIM>(&p, &origin, &inv_step), i as u32)
-    };
-    match pool {
-        Some(pool) => {
-            let kc = RawMut(keys.as_mut_ptr());
-            pool.scope_chunks(n, 4096, |lo, hi| {
-                let _ = &kc;
-                for i in lo..hi {
-                    // SAFETY: disjoint indices across chunks.
-                    unsafe { *kc.0.add(i) = key_at(i) };
-                }
-            });
-            par_merge_sort(pool, &mut keys);
-        }
-        None => {
-            for (i, slot) in keys.iter_mut().enumerate() {
-                *slot = key_at(i);
-            }
-            keys.sort_unstable();
-        }
-    }
-    keys
-}
-
 /// Parallel merge sort: sort equal chunks on the pool, then merge pairs of
-/// runs (also on the pool) doubling the run width each round.
-fn par_merge_sort(pool: &ThreadPool, keys: &mut [(u64, u32)]) {
+/// runs (also on the pool) doubling the run width each round. `scratch`
+/// must be the same length as `keys` (caller-owned so refits reuse it).
+/// The `(key, index)` ordering is total — ties between coincident points
+/// resolve to dataset order, exactly like the old first-arrival
+/// insertion — so serial and parallel sorts agree bit-for-bit.
+fn par_merge_sort(pool: &ThreadPool, keys: &mut [(u64, u32)], scratch: &mut [(u64, u32)]) {
     let n = keys.len();
+    assert_eq!(scratch.len(), n);
     let chunk = n.div_ceil(pool.n_threads().min(16)).max(4096);
     if chunk >= n {
         keys.sort_unstable();
@@ -640,7 +1183,6 @@ fn par_merge_sort(pool: &ThreadPool, keys: &mut [(u64, u32)]) {
             run.sort_unstable();
         });
     }
-    let mut scratch: Vec<(u64, u32)> = vec![(0, 0); n];
     let mut width = chunk;
     let mut in_keys = true;
     while width < n {
@@ -673,7 +1215,7 @@ fn par_merge_sort(pool: &ThreadPool, keys: &mut [(u64, u32)]) {
         in_keys = !in_keys;
     }
     if !in_keys {
-        keys.copy_from_slice(&scratch);
+        keys.copy_from_slice(scratch);
     }
 }
 
@@ -693,29 +1235,35 @@ fn merge_runs(a: &[(u64, u32)], b: &[(u64, u32)], out: &mut [(u64, u32)]) {
 }
 
 /// Bottom-up assembly of one subtree from a contiguous slice of the
-/// Morton-sorted point array. `nodes[0]` is the subtree root.
+/// Morton-sorted point array, into a caller-owned (reusable) arena.
+/// `nodes[0]` is the subtree root.
 struct SubtreeBuilder<'a, const DIM: usize> {
     y: &'a [f32],
     sorted: &'a [(u64, u32)],
-    nodes: Vec<Node<DIM>>,
+    nodes: &'a mut Vec<Node<DIM>>,
     depth_cap_hits: usize,
 }
 
 impl<'a, const DIM: usize> SubtreeBuilder<'a, DIM> {
     const FANOUT: usize = 1 << DIM;
 
+    /// Clear `nodes` (keeping its capacity) and build the subtree over
+    /// `sorted[lo..hi]` into it. Returns the depth-cap hit count.
     fn run(
         y: &'a [f32],
         sorted: &'a [(u64, u32)],
+        nodes: &'a mut Vec<Node<DIM>>,
         center: [f32; DIM],
         half: [f32; DIM],
         lo: usize,
         hi: usize,
         depth: usize,
-    ) -> Self {
-        let mut b = SubtreeBuilder { y, sorted, nodes: vec![Node::empty(center, half)], depth_cap_hits: 0 };
+    ) -> usize {
+        nodes.clear();
+        nodes.push(Node::empty(center, half));
+        let mut b = SubtreeBuilder { y, sorted, nodes, depth_cap_hits: 0 };
         b.fill(0, lo, hi, depth);
-        b
+        b.depth_cap_hits
     }
 
     #[inline]
@@ -818,28 +1366,31 @@ fn child_bounds<const DIM: usize>(
 
 /// Parallel node assembly: expand a BFS frontier of (node, range, depth)
 /// tasks until there is enough parallelism, build each frontier subtree
-/// in its own arena on the pool, then stitch the arenas into the flat
-/// array and roll counts/mass up through the serially-built top levels.
+/// in its own (persistent, reused) arena on the pool, then stitch the
+/// arenas into the flat array and roll counts/mass up through the
+/// serially-built top levels. Returns the depth-cap hit count; all
+/// intermediate buffers are caller-owned so refits allocate nothing in
+/// steady state.
+#[allow(clippy::too_many_arguments)]
 fn build_nodes_parallel<const DIM: usize>(
     pool: &ThreadPool,
     y: &[f32],
     sorted: &[(u64, u32)],
     center: [f32; DIM],
     half: [f32; DIM],
-) -> (Vec<Node<DIM>>, usize) {
+    nodes: &mut Vec<Node<DIM>>,
+    arenas: &mut Vec<(Vec<Node<DIM>>, usize)>,
+    frontier: &mut Vec<BuildTask>,
+    next_frontier: &mut Vec<BuildTask>,
+    serial_interiors: &mut Vec<usize>,
+) -> usize {
     let n = sorted.len();
     let fanout = 1usize << DIM;
-    let mut nodes = vec![Node::empty(center, half)];
-
-    #[derive(Clone, Copy)]
-    struct Task {
-        id: usize,
-        lo: usize,
-        hi: usize,
-        depth: usize,
-    }
-    let mut frontier = vec![Task { id: 0, lo: 0, hi: n, depth: 0 }];
-    let mut serial_interiors: Vec<usize> = Vec::new();
+    nodes.clear();
+    nodes.push(Node::empty(center, half));
+    frontier.clear();
+    frontier.push(BuildTask { id: 0, lo: 0, hi: n, depth: 0 });
+    serial_interiors.clear();
     let target_tasks = pool.n_threads() * 4;
     let big = (n / (pool.n_threads() * 4)).max(1024);
 
@@ -849,14 +1400,15 @@ fn build_nodes_parallel<const DIM: usize>(
         if frontier.len() >= target_tasks {
             break;
         }
-        let mut next = Vec::with_capacity(frontier.len() * fanout);
+        next_frontier.clear();
         let mut expanded_any = false;
-        for task in frontier {
+        for t in 0..frontier.len() {
+            let task = frontier[t];
             let expandable = task.hi - task.lo > big
                 && sorted[task.lo].0 != sorted[task.hi - 1].0
                 && task.depth < BhTree::<DIM>::KEY_BITS;
             if !expandable {
-                next.push(task);
+                next_frontier.push(task);
                 continue;
             }
             expanded_any = true;
@@ -877,11 +1429,11 @@ fn build_nodes_parallel<const DIM: usize>(
             for q in 0..fanout {
                 if bounds[q + 1] > bounds[q] {
                     let depth = task.depth + 1;
-                    next.push(Task { id: first + q, lo: bounds[q], hi: bounds[q + 1], depth });
+                    next_frontier.push(BuildTask { id: first + q, lo: bounds[q], hi: bounds[q + 1], depth });
                 }
             }
         }
-        frontier = next;
+        std::mem::swap(frontier, next_frontier);
         if !expanded_any {
             break;
         }
@@ -889,29 +1441,31 @@ fn build_nodes_parallel<const DIM: usize>(
 
     // Build every frontier subtree in parallel (deterministic: arenas only
     // depend on their range, and stitch order is the frontier order).
-    let mut arenas: Vec<Option<SubtreeBuilder<DIM>>> = frontier.iter().map(|_| None).collect();
+    arenas.resize_with(frontier.len(), || (Vec::new(), 0));
     pool.scoped(|scope| {
         for (task, slot) in frontier.iter().zip(arenas.iter_mut()) {
-            let Task { id, lo, hi, depth } = *task;
+            let BuildTask { id, lo, hi, depth } = *task;
             let (c, h) = (nodes[id].center, nodes[id].half);
             scope.run(move || {
-                *slot = Some(SubtreeBuilder::<DIM>::run(y, sorted, c, h, lo, hi, depth));
+                let (arena, hits) = slot;
+                *hits = SubtreeBuilder::<DIM>::run(y, sorted, arena, c, h, lo, hi, depth);
             });
         }
     });
 
     // Stitch: arena-local index L maps to `base + L - 1`; local 0 is the
-    // frontier node itself and overwrites its placeholder slot.
+    // frontier node itself and overwrites its placeholder slot. Nodes are
+    // copied out so the arenas stay allocated for the next refit.
     let mut depth_cap_hits = 0usize;
-    for (task, arena) in frontier.iter().zip(arenas) {
-        let arena = arena.expect("subtree arena missing");
-        depth_cap_hits += arena.depth_cap_hits;
+    for (task, (arena, hits)) in frontier.iter().zip(arenas.iter()) {
+        depth_cap_hits += *hits;
         let base = nodes.len();
         let remap = |fc: u32| if fc == NO_CHILD { NO_CHILD } else { base as u32 + fc - 1 };
-        let mut root = arena.nodes[0];
+        let mut root = arena[0];
         root.first_child = remap(root.first_child);
         nodes[task.id] = root;
-        for mut node in arena.nodes.into_iter().skip(1) {
+        for node in arena.iter().skip(1) {
+            let mut node = *node;
             node.first_child = remap(node.first_child);
             nodes.push(node);
         }
@@ -934,7 +1488,7 @@ fn build_nodes_parallel<const DIM: usize>(
         nodes[id].count = cnt;
         nodes[id].com_sum = com;
     }
-    (nodes, depth_cap_hits)
+    depth_cap_hits
 }
 
 #[cfg(test)]
@@ -1125,8 +1679,8 @@ mod tests {
     fn ranges_cover_all_points() {
         let n = 333;
         let y = random_embedding(n, 6);
-        let mut tree = BhTree::<2>::build(&y, n);
-        tree.build_ranges();
+        // Order/ranges are built eagerly by construction.
+        let tree = BhTree::<2>::build(&y, n);
         assert_eq!(tree.order.len(), n);
         let (s, e) = tree.ranges[0];
         assert_eq!((s, e), (0, n as u32));
@@ -1142,7 +1696,7 @@ mod tests {
     fn dual_tree_close_to_exact_small_rho() {
         let n = 250;
         let y = random_embedding(n, 7);
-        let mut tree = BhTree::<2>::build(&y, n);
+        let tree = BhTree::<2>::build(&y, n);
         let mut forces = vec![0f64; n * 2];
         let z = tree.repulsion_dual(0.2, &mut forces);
         // Oracle totals.
@@ -1200,14 +1754,14 @@ mod tests {
     fn morton_keys_sorted_and_total() {
         let n = 1000;
         let y = random_embedding(n, 10);
-        let (center, half) = bounding_cell::<2>(&y, n, None);
-        let sorted = morton_sorted::<2>(&y, n, &center, &half, None);
+        let tree = BhTree::<2>::build(&y, n);
+        let sorted = &tree.build.keys;
         assert_eq!(sorted.len(), n);
         for w in sorted.windows(2) {
             assert!(w[0] < w[1], "ordering not strictly increasing: {w:?}");
         }
         let mut seen = vec![false; n];
-        for &(_, i) in &sorted {
+        for &(_, i) in sorted.iter() {
             seen[i as usize] = true;
         }
         assert!(seen.iter().all(|&b| b));
@@ -1296,9 +1850,187 @@ mod tests {
             let mut b = a.clone();
             a.sort_unstable();
             if !b.is_empty() {
-                par_merge_sort(&pool, &mut b);
+                let mut scratch = vec![(0u64, 0u32); n];
+                par_merge_sort(&pool, &mut b, &mut scratch);
             }
             assert_eq!(a, b, "n={n}");
+        }
+    }
+
+    /// Drift every coordinate by `sigma`-scaled noise.
+    fn drifted(y: &[f32], sigma: f32, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::seeded(seed);
+        y.iter().map(|v| v + rng.normal() as f32 * sigma).collect()
+    }
+
+    #[test]
+    fn refit_zero_drift_is_adaptive_and_bit_identical() {
+        let pool = ThreadPool::new(4);
+        let n = PAR_BUILD_MIN + 321;
+        let y = random_embedding(n, 20);
+        let mut tree = BhTree::<2>::build_parallel(&pool, &y, n, CellSizeMode::Diagonal);
+        let adaptive = tree.refit(Some(&pool), &y);
+        assert!(adaptive, "unchanged embedding must take the adaptive path");
+        let fresh = BhTree::<2>::build_parallel(&pool, &y, n, CellSizeMode::Diagonal);
+        assert!(tree.arena_eq(&fresh), "refit diverged from the build oracle");
+    }
+
+    #[test]
+    fn refit_is_bit_identical_across_drift_magnitudes() {
+        // Small drifts should mostly take the adaptive path; a full
+        // resample must fall back to the from-scratch sort. Either way the
+        // rebuilt tree must equal the oracle node for node.
+        let pool = ThreadPool::new(4);
+        let n = PAR_BUILD_MIN + 777;
+        let y0 = random_embedding(n, 21);
+        let mut tree = BhTree::<2>::build_parallel(&pool, &y0, n, CellSizeMode::Diagonal);
+        let mut seen_fallback = false;
+        for (i, sigma) in [1e-6f32, 1e-4, 1e-2, 0.5, 10.0].iter().enumerate() {
+            let y1 = drifted(&y0, *sigma, 22 + i as u64);
+            let adaptive = tree.refit(Some(&pool), &y1);
+            seen_fallback |= !adaptive;
+            let fresh = BhTree::<2>::build_parallel(&pool, &y1, n, CellSizeMode::Diagonal);
+            assert!(tree.arena_eq(&fresh), "sigma={sigma}: refit diverged from oracle");
+            // Continue drifting from y0 so each case is an independent
+            // magnitude, not cumulative noise.
+            tree.refit(Some(&pool), &y0);
+        }
+        // σ=10 rewrites the whole layout: the disorder threshold must trip.
+        assert!(seen_fallback, "large drift never hit the fallback threshold");
+    }
+
+    #[test]
+    fn refit_serial_matches_serial_build() {
+        let n = 700; // below PAR_BUILD_MIN: serial paths
+        let y0 = random_embedding(n, 24);
+        let y1 = drifted(&y0, 0.05, 25);
+        let mut tree = BhTree::<2>::build(&y0, n);
+        tree.refit(None, &y1);
+        let fresh = BhTree::<2>::build(&y1, n);
+        assert!(tree.arena_eq(&fresh));
+    }
+
+    #[test]
+    fn refit_octree_matches_oracle() {
+        let pool = ThreadPool::new(4);
+        let n = PAR_BUILD_MIN;
+        let mut rng = Pcg32::seeded(26);
+        let y0: Vec<f32> = (0..n * 3).map(|_| rng.normal() as f32).collect();
+        let y1 = drifted(&y0, 1e-3, 27);
+        let mut tree = BhTree::<3>::build_parallel(&pool, &y0, n, CellSizeMode::MaxWidth);
+        tree.refit(Some(&pool), &y1);
+        let fresh = BhTree::<3>::build_parallel(&pool, &y1, n, CellSizeMode::MaxWidth);
+        assert!(tree.arena_eq(&fresh));
+    }
+
+    #[test]
+    fn refit_with_duplicates_matches_oracle() {
+        let pool = ThreadPool::new(4);
+        let n = PAR_BUILD_MIN;
+        let mut rng = Pcg32::seeded(28);
+        let mut y0 = Vec::with_capacity(n * 2);
+        for _ in 0..n / 2 {
+            let (a, b) = (rng.normal() as f32, rng.normal() as f32);
+            y0.extend_from_slice(&[a, b, a, b]);
+        }
+        // Drift pairs together so duplicates stay coincident.
+        let mut y1 = y0.clone();
+        for i in 0..n / 2 {
+            let (dx, dy) = (rng.normal() as f32 * 1e-3, rng.normal() as f32 * 1e-3);
+            for j in [2 * i, 2 * i + 1] {
+                y1[j * 2] += dx;
+                y1[j * 2 + 1] += dy;
+            }
+        }
+        let mut tree = BhTree::<2>::build_parallel(&pool, &y0, n, CellSizeMode::Diagonal);
+        tree.refit(Some(&pool), &y1);
+        let fresh = BhTree::<2>::build_parallel(&pool, &y1, n, CellSizeMode::Diagonal);
+        assert!(tree.arena_eq(&fresh));
+    }
+
+    #[test]
+    fn refit_steady_state_does_not_grow_capacities() {
+        let pool = ThreadPool::new(4);
+        let n = PAR_BUILD_MIN + 100;
+        let y0 = random_embedding(n, 29);
+        let mut tree = BhTree::<2>::build_parallel(&pool, &y0, n, CellSizeMode::Diagonal);
+        // Warm up the arenas across a few iterations of drift.
+        let mut y = y0.clone();
+        for i in 0..4 {
+            y = drifted(&y, 1e-4, 30 + i);
+            tree.refit(Some(&pool), &y);
+        }
+        let caps = tree.capacities();
+        for i in 4..10 {
+            y = drifted(&y, 1e-4, 30 + i);
+            tree.refit(Some(&pool), &y);
+            assert_eq!(tree.capacities(), caps, "iteration {i} reallocated an arena");
+        }
+    }
+
+    #[test]
+    fn dual_parallel_matches_serial_and_is_deterministic() {
+        let pool = ThreadPool::new(4);
+        let n = PAR_BUILD_MIN; // ≥ PAR_DUAL_MIN: real fan-out path
+        let y = random_embedding(n, 31);
+        let tree = BhTree::<2>::build_parallel(&pool, &y, n, CellSizeMode::Diagonal);
+        let mut serial = vec![0f64; n * 2];
+        let zs = tree.repulsion_dual(0.3, &mut serial);
+        let mut ws = DualTreeScratch::new();
+        let mut par = vec![0f64; n * 2];
+        let zp = tree.repulsion_dual_parallel(&pool, 0.3, &mut par, &mut ws);
+        // Same summary multiset, different f64 accumulation order.
+        assert!((zp - zs).abs() <= 1e-9 * zs.abs().max(1.0), "z {zp} vs {zs}");
+        for (i, (a, b)) in par.iter().zip(&serial).enumerate() {
+            assert!((a - b).abs() <= 1e-9 * (1.0 + b.abs()), "slot {i}: {a} vs {b}");
+        }
+        // Scratch reuse must reproduce the same bits (buffers re-zeroed).
+        let mut par2 = vec![0f64; n * 2];
+        let zp2 = tree.repulsion_dual_parallel(&pool, 0.3, &mut par2, &mut ws);
+        assert_eq!(zp, zp2);
+        assert_eq!(par, par2);
+    }
+
+    #[test]
+    fn dual_parallel_small_n_falls_back_serially() {
+        let pool = ThreadPool::new(4);
+        let n = 300; // below PAR_DUAL_MIN
+        let y = random_embedding(n, 32);
+        let tree = BhTree::<2>::build(&y, n);
+        let mut serial = vec![0f64; n * 2];
+        let zs = tree.repulsion_dual(0.25, &mut serial);
+        let mut ws = DualTreeScratch::new();
+        let mut par = vec![0f64; n * 2];
+        let zp = tree.repulsion_dual_parallel(&pool, 0.25, &mut par, &mut ws);
+        // The fallback runs the identical serial walk: bit-equal.
+        assert_eq!(zs, zp);
+        assert_eq!(serial, par);
+        // And the scratch buffer is re-zeroed for the next call.
+        let mut par2 = vec![0f64; n * 2];
+        let zp2 = tree.repulsion_dual_parallel(&pool, 0.25, &mut par2, &mut ws);
+        assert_eq!(zp, zp2);
+        assert_eq!(par, par2);
+    }
+
+    #[test]
+    fn dual_parallel_with_duplicates_matches_serial() {
+        let pool = ThreadPool::new(4);
+        let n = PAR_BUILD_MIN;
+        let mut rng = Pcg32::seeded(33);
+        let mut y = Vec::with_capacity(n * 2);
+        for _ in 0..n / 2 {
+            let (a, b) = (rng.normal() as f32, rng.normal() as f32);
+            y.extend_from_slice(&[a, b, a, b]);
+        }
+        let tree = BhTree::<2>::build_parallel(&pool, &y, n, CellSizeMode::Diagonal);
+        let mut serial = vec![0f64; n * 2];
+        let zs = tree.repulsion_dual(0.3, &mut serial);
+        let mut ws = DualTreeScratch::new();
+        let mut par = vec![0f64; n * 2];
+        let zp = tree.repulsion_dual_parallel(&pool, 0.3, &mut par, &mut ws);
+        assert!((zp - zs).abs() <= 1e-9 * zs.abs().max(1.0), "z {zp} vs {zs}");
+        for (i, (a, b)) in par.iter().zip(&serial).enumerate() {
+            assert!((a - b).abs() <= 1e-9 * (1.0 + b.abs()), "slot {i}: {a} vs {b}");
         }
     }
 }

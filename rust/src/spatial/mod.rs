@@ -14,13 +14,23 @@
 //! via [`BhTree::build_parallel`] (the per-iteration hot path).
 //!
 //! The tree also records a DFS point ordering with per-node `[start, end)`
-//! ranges so the dual-tree algorithm (paper appendix) can map *cell-cell*
-//! interactions back onto the points they summarize without per-node child
-//! lists.
+//! ranges (built eagerly, so the dual-tree traversal is `&self` and a
+//! cost evaluation can share the gradient's tree) so the dual-tree
+//! algorithm (paper appendix) can map *cell-cell* interactions back onto
+//! the points they summarize without per-node child lists.
+//!
+//! Every construction buffer is persistent: [`BhTree::refit`] rebuilds
+//! the tree for the next iteration's embedding inside the existing
+//! arenas, re-sorting the Morton keys with an adaptive merge when the
+//! order barely changed (the steady state of a t-SNE run) and falling
+//! back to the from-scratch parallel sort past a disorder threshold —
+//! bit-identical to [`BhTree::build_parallel`] either way.
+//! [`DualTreeScratch`] plays the same role for the fanned-out dual-tree
+//! traversal ([`BhTree::repulsion_dual_parallel`]).
 
 mod bhtree;
 
-pub use bhtree::{BhTree, CellSizeMode, NodeStats};
+pub use bhtree::{BhTree, CellSizeMode, DualTreeScratch, NodeStats, REFIT_DISORDER_DENOM};
 
 /// 2-D quadtree specialization used by every 2-D embedding experiment.
 pub type QuadTree = BhTree<2>;

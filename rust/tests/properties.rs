@@ -4,7 +4,7 @@
 use bhsne::knn::{BruteKnn, KnnBackend, VpTreeKnn};
 use bhsne::sne::sparse::Csr;
 use bhsne::sne::{gradient, input, RepulsionMethod};
-use bhsne::spatial::{BhTree, CellSizeMode};
+use bhsne::spatial::{BhTree, CellSizeMode, DualTreeScratch};
 use bhsne::util::quickcheck::{check, Gen, PointCloud, Points, UniformF64};
 use bhsne::util::{Pcg32, ThreadPool};
 use bhsne::vptree::VpTree;
@@ -238,11 +238,112 @@ fn prop_dualtree_z_tracks_exact() {
         let n = p.n;
         let mut exact = vec![0f64; n * 2];
         let z_exact = gradient::repulsive_exact::<2>(&pool, &p.data, n, &mut exact);
-        let mut tree = BhTree::<2>::build(&p.data, n);
+        let tree = BhTree::<2>::build(&p.data, n);
         let mut forces = vec![0f64; n * 2];
         let z_dt = tree.repulsion_dual(0.2, &mut forces);
         if (z_dt - z_exact).abs() > 0.08 * z_exact {
             return Err(format!("dual Z {z_dt} vs exact {z_exact}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tree_refit_is_bit_identical_to_fresh_build() {
+    // Across drift magnitudes — none, tiny (the adaptive-merge regime),
+    // moderate, and a full rewrite (the fallback regime) — refitting the
+    // previous iteration's tree must reproduce the from-scratch build
+    // oracle node for node (compared here through the full traversal
+    // output, which reads every SoA field the gradient path touches).
+    let pool = ThreadPool::new(4);
+    let gen = PointCloud { dim: 2, min_n: 2000, max_n: 9000 };
+    check(110, 6, &gen, |p: &Points| {
+        let n = p.n;
+        let mut rng = Pcg32::seeded(n as u64);
+        let mut tree = BhTree::<2>::build_parallel(&pool, &p.data, n, CellSizeMode::Diagonal);
+        for sigma in [0.0f32, 1e-5, 1e-2, 10.0] {
+            let y1: Vec<f32> =
+                p.data.iter().map(|v| v + rng.normal() as f32 * sigma).collect();
+            tree.refit(Some(&pool), &y1);
+            let fresh = BhTree::<2>::build_parallel(&pool, &y1, n, CellSizeMode::Diagonal);
+            if !tree.arena_eq(&fresh) {
+                return Err(format!("n={n} sigma={sigma}: refit diverged from fresh build"));
+            }
+            for i in (0..n).step_by(97) {
+                let yi = [y1[i * 2], y1[i * 2 + 1]];
+                let mut fa = [0f64; 2];
+                let mut fb = [0f64; 2];
+                let za = tree.repulsion(i as u32, &yi, 0.5, &mut fa);
+                let zb = fresh.repulsion(i as u32, &yi, 0.5, &mut fb);
+                if za != zb || fa != fb {
+                    return Err(format!("n={n} sigma={sigma} i={i}: traversal diverged"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_dualtree_matches_serial_walk() {
+    // The fanned-out dual traversal applies the identical summary
+    // multiset as the serial pair-DFS; only f64 accumulation order may
+    // differ, so forces and Z must agree to ~1e-9.
+    let pool = ThreadPool::new(4);
+    let gen = PointCloud { dim: 2, min_n: 4500, max_n: 9000 };
+    check(111, 4, &gen, |p: &Points| {
+        let n = p.n;
+        let tree = BhTree::<2>::build_parallel(&pool, &p.data, n, CellSizeMode::Diagonal);
+        let mut serial = vec![0f64; n * 2];
+        let z_s = tree.repulsion_dual(0.25, &mut serial);
+        let mut ws = DualTreeScratch::new();
+        let mut par = vec![0f64; n * 2];
+        let z_p = tree.repulsion_dual_parallel(&pool, 0.25, &mut par, &mut ws);
+        if (z_p - z_s).abs() > 1e-9 * z_s.abs().max(1.0) {
+            return Err(format!("n={n}: Z {z_p} vs serial {z_s}"));
+        }
+        for (i, (a, b)) in par.iter().zip(&serial).enumerate() {
+            if (a - b).abs() > 1e-9 * (1.0 + b.abs()) {
+                return Err(format!("n={n} slot {i}: {a} vs serial {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_engine_steady_state_holds_capacity() {
+    // The ForceEngine's arena-capacity snapshot must freeze after
+    // warm-up: steady-state iterations allocate nothing.
+    let pool = ThreadPool::new(4);
+    let gen = UniformF64 { lo: 0.0, hi: 1.0 };
+    check(112, 3, &gen, |&u: &f64| {
+        let n = 8500 + (u * 500.0) as usize;
+        let seed = (u * 1e6) as u64 + 1;
+        let mut rng = Pcg32::seeded(seed);
+        let y0: Vec<f32> = (0..n * 2).map(|_| rng.normal() as f32 * 2.0).collect();
+        let mut engine = bhsne::sne::ForceEngine::<2>::new(
+            n,
+            RepulsionMethod::BarnesHut { theta: 0.5 },
+            CellSizeMode::Diagonal,
+        );
+        let mut y = y0;
+        let mut rep = vec![0f64; n * 2];
+        for _ in 0..4 {
+            engine.repulsive_into(&pool, &y, &mut rep);
+            for v in y.iter_mut() {
+                *v += rng.normal() as f32 * 1e-4;
+            }
+        }
+        let caps = engine.capacities();
+        for it in 4..9 {
+            engine.repulsive_into(&pool, &y, &mut rep);
+            for v in y.iter_mut() {
+                *v += rng.normal() as f32 * 1e-4;
+            }
+            if engine.capacities() != caps {
+                return Err(format!("n={n} iteration {it}: engine arena reallocated"));
+            }
         }
         Ok(())
     });
