@@ -8,8 +8,11 @@
 //!
 //! Besides the human-readable table, the run always writes
 //! `BENCH_micro_hotpath.json` with normalized ns/point figures
-//! (tree-build, force-eval, end-to-end iteration, plus an `input_stage`
-//! block) so CI can archive the perf trajectory across commits.
+//! (tree-build, force-eval, end-to-end iteration, SIMD-vs-scalar kernel
+//! rows, plus an `input_stage` block) so CI can archive the perf
+//! trajectory across commits. A `(simd kernel backend: …)` line reports
+//! which kernel backend the host detected; the `*_scalar_*` rows force
+//! the portable fallback so both paths are always measured.
 //!
 //! Run: `cargo bench --bench micro_hotpath [-- --quick --json]`
 
@@ -18,8 +21,9 @@ use bhsne::sne::gradient;
 use bhsne::sne::sparse::Csr;
 use bhsne::spatial::{CellSizeMode, DualTreeScratch, QuadTree};
 use bhsne::util::bench::{time_reps, BenchOpts, Table};
+use bhsne::util::simd::{self, Backend};
 use bhsne::util::{Pcg32, ThreadPool};
-use bhsne::vptree::VpTree;
+use bhsne::vptree::{Euclidean, Metric, VpTree};
 use std::rc::Rc;
 
 fn random_embedding(n: usize, seed: u64) -> Vec<f32> {
@@ -107,8 +111,11 @@ fn main() {
     });
     push("tree_refit_drift", (refit_secs, rf10, rf90));
 
-    // BH repulsion traversal at several theta (tree built once).
-    let tree = QuadTree::build_parallel(&pool, &yt, n_tree, CellSizeMode::Diagonal);
+    // BH repulsion traversal at several theta (tree built once; the dual
+    // rows below need the DFS order/ranges, which are gated now).
+    let mut tree = QuadTree::build_parallel(&pool, &yt, n_tree, CellSizeMode::Diagonal);
+    tree.ensure_order_ranges(Some(&pool));
+    let tree = tree;
     let mut force_eval = f64::NAN;
     for theta in [0.2f32, 0.5, 1.0] {
         let mut rep = vec![0f64; n_tree * 2];
@@ -149,6 +156,34 @@ fn main() {
         std::hint::black_box(z);
     });
     push("dual_tree_parallel_rho025", (dual_par, dp10, dp90));
+
+    // ---- SIMD kernel layer: the same hot loops with the kernel backend
+    // forced to the portable scalar fallback vs. what the host detected.
+    // The kernels are bit-identical across backends, so these rows only
+    // differ in speed. ----
+    let detected = simd::backend();
+    let mut pc_by_backend = [f64::NAN; 2];
+    let mut dual_by_backend = [f64::NAN; 2];
+    for (slot, be) in [(0usize, Backend::Portable), (1, detected)] {
+        simd::set_backend(Some(be));
+        let label = if slot == 0 { "scalar" } else { "simd" };
+        let mut rep = vec![0f64; n_tree * 2];
+        let timing = time_reps(1, reps, || {
+            rep.iter_mut().for_each(|v| *v = 0.0);
+            let z = gradient::repulsive_bh_with_tree::<2>(&pool, &tree, &yt, n_tree, 0.5, &mut rep);
+            std::hint::black_box(z);
+        });
+        pc_by_backend[slot] = timing.0;
+        push(&format!("point_cell_{label}_theta05"), timing);
+        let timing = time_reps(1, reps, || {
+            dual_forces.iter_mut().for_each(|v| *v = 0.0);
+            let z = tree.repulsion_dual_parallel(&pool, 0.25, &mut dual_forces, &mut dual_ws);
+            std::hint::black_box(z);
+        });
+        dual_by_backend[slot] = timing.0;
+        push(&format!("dual_tree_{label}_rho025"), timing);
+    }
+    simd::set_backend(None);
 
     // Attractive forces, CPU.
     let mut attr = vec![0f64; n * 2];
@@ -203,6 +238,24 @@ fn main() {
     });
     push("vptree_build_parallel_d50", (vp_par, vp10, vp90));
 
+    // Metric kernel: squared-Euclidean over consecutive 50-dim row pairs,
+    // scalar fallback vs. detected SIMD backend (one dist per point).
+    let mut metric_by_backend = [f64::NAN; 2];
+    for (slot, be) in [(0usize, Backend::Portable), (1, detected)] {
+        simd::set_backend(Some(be));
+        let label = if slot == 0 { "scalar" } else { "simd" };
+        let timing = time_reps(1, reps, || {
+            let mut acc = 0f32;
+            for i in 0..n_vp - 1 {
+                acc += Euclidean.dist(&x[i * dim..(i + 1) * dim], &x[(i + 1) * dim..(i + 2) * dim]);
+            }
+            std::hint::black_box(acc);
+        });
+        metric_by_backend[slot] = timing.0;
+        push(&format!("metric_{label}_d50"), timing);
+    }
+    simd::set_backend(None);
+
     let vp = VpTree::build_parallel(&pool, &x, n_vp, dim, 7);
     let k = 90.min(n_vp - 1);
     let (knn_query, kq10, kq90) = time_reps(0, reps.min(3), || {
@@ -230,6 +283,12 @@ fn main() {
     println!(
         "(tree refit under drift: {refit_adaptive} adaptive, {refit_fallback} full re-sorts)"
     );
+    println!(
+        "(simd kernel backend: {} ({}), lanes={}; scalar rows force the portable fallback)",
+        detected.name(),
+        if simd::detected_simd() == Some(detected) { "runtime-detected" } else { "forced / no AVX2" },
+        simd::LANES
+    );
 
     // Machine-readable capture for CI: normalized ns/point hot-path costs.
     let per_point = |secs: f64| secs * 1e9 / n_tree as f64;
@@ -237,12 +296,19 @@ fn main() {
     let json = format!(
         concat!(
             "{{\"bench\":\"micro_hotpath\",\"n\":{},\"threads\":{},",
+            "\"kernel_backend\":\"{}\",",
             "\"tree_build_serial_ns_per_point\":{:.2},",
             "\"tree_build_parallel_ns_per_point\":{:.2},",
             "\"tree_refit_ns_per_point\":{:.2},",
             "\"force_eval_theta05_ns_per_point\":{:.2},",
+            "\"point_cell_scalar_ns_per_point\":{:.2},",
+            "\"point_cell_simd_ns_per_point\":{:.2},",
             "\"dual_tree_serial_ns_per_point\":{:.2},",
             "\"dual_tree_parallel_ns_per_point\":{:.2},",
+            "\"dual_tree_scalar_ns_per_point\":{:.2},",
+            "\"dual_tree_simd_ns_per_point\":{:.2},",
+            "\"metric_scalar_ns_per_point\":{:.2},",
+            "\"metric_simd_ns_per_point\":{:.2},",
             "\"iter_build_plus_eval_ms\":{:.4},",
             "\"input_stage\":{{\"n\":{},",
             "\"vp_build_serial_ns_per_point\":{:.2},",
@@ -253,12 +319,19 @@ fn main() {
         ),
         n_tree,
         pool.n_threads(),
+        detected.name(),
         per_point(build_serial),
         per_point(build_par),
         per_point(refit_secs),
         per_point(force_eval),
+        per_point(pc_by_backend[0]),
+        per_point(pc_by_backend[1]),
         per_point(dual_serial),
         per_point(dual_par),
+        per_point(dual_by_backend[0]),
+        per_point(dual_by_backend[1]),
+        per_point_vp(metric_by_backend[0]),
+        per_point_vp(metric_by_backend[1]),
         iter_secs * 1e3,
         n_vp,
         per_point_vp(vp_serial),

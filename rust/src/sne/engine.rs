@@ -56,6 +56,12 @@ pub struct ForceEngine<const DIM: usize> {
     attr: Vec<f64>,
     /// Repulsive-force accumulator (`n × DIM`, f64).
     rep: Vec<f64>,
+    /// Z from the most recent repulsion pass (the Q normalizer), cached
+    /// for observer-driven cost probes that don't want tree work.
+    cached_z: Option<f64>,
+    /// Set by [`ForceEngine::mark_embedding_moved`] once the optimizer
+    /// steps `y`: the cached Z then describes the *previous* embedding.
+    z_stale: bool,
     pub stats: EngineStats,
 }
 
@@ -73,6 +79,8 @@ impl<const DIM: usize> ForceEngine<DIM> {
             // use `repulsive_into` with caller-owned buffers.
             attr: Vec::new(),
             rep: Vec::new(),
+            cached_z: None,
+            z_stale: false,
             stats: EngineStats::default(),
         }
     }
@@ -103,6 +111,12 @@ impl<const DIM: usize> ForceEngine<DIM> {
                 self.stats.full_rebuilds += 1;
             }
         }
+        // DFS order/ranges are only read by the dual-tree traversal;
+        // the point-cell method skips the O(n) fill entirely. The fill
+        // itself is pool-parallel (bit-identical to the serial oracle).
+        if matches!(self.method, RepulsionMethod::DualTree { .. }) {
+            self.tree.as_mut().expect("tree prepared").ensure_order_ranges(Some(pool));
+        }
         self.stats.tree_secs += sw.elapsed_secs();
     }
 
@@ -112,7 +126,7 @@ impl<const DIM: usize> ForceEngine<DIM> {
     pub fn repulsive_into(&mut self, pool: &ThreadPool, y: &[f32], out: &mut [f64]) -> f64 {
         assert_eq!(out.len(), self.n * DIM);
         out.iter_mut().for_each(|v| *v = 0.0);
-        match self.method {
+        let z = match self.method {
             RepulsionMethod::Exact => {
                 let sw = Stopwatch::start();
                 let z =
@@ -144,7 +158,10 @@ impl<const DIM: usize> ForceEngine<DIM> {
                 self.stats.repulsion_secs += sw.elapsed_secs();
                 z
             }
-        }
+        };
+        self.cached_z = Some(z);
+        self.z_stale = false;
+        z
     }
 
     /// Full gradient of Eq. 8 through the engine's persistent buffers:
@@ -181,6 +198,49 @@ impl<const DIM: usize> ForceEngine<DIM> {
     /// KL divergence KL(P||Q) (Eq. 4) from the sparse entries, with the Z
     /// the iteration's repulsion pass returned.
     pub fn kl_cost(&self, pool: &ThreadPool, p: &Csr, y: &[f32], z: f64) -> f64 {
+        gradient::kl_cost::<DIM>(pool, p, y, z)
+    }
+
+    /// Z from the engine's most recent repulsion pass, if any.
+    pub fn cached_z(&self) -> Option<f64> {
+        self.cached_z
+    }
+
+    /// Whether the cached Z predates an embedding move (see
+    /// [`ForceEngine::mark_embedding_moved`]).
+    pub fn z_is_stale(&self) -> bool {
+        self.z_stale
+    }
+
+    /// Record that `y` changed since the last repulsion pass (the runner
+    /// calls this after every optimizer step): observer probes may keep
+    /// using the cached Z, exact probes must refresh it.
+    pub fn mark_embedding_moved(&mut self) {
+        self.z_stale = true;
+    }
+
+    /// KL(P||Q) using the cached Z of the last repulsion pass — **no tree
+    /// work at all** (O(nnz) over P). This is the observer-probe path:
+    /// between gradient iterations the cached Z is at most one optimizer
+    /// step old, which is exactly the approximation the per-iteration
+    /// cost reporting has always made. Returns `None` before the first
+    /// repulsion pass; check [`ForceEngine::z_is_stale`] when freshness
+    /// matters.
+    pub fn kl_cost_cached(&self, pool: &ThreadPool, p: &Csr, y: &[f32]) -> Option<f64> {
+        self.cached_z.map(|z| gradient::kl_cost::<DIM>(pool, p, y, z))
+    }
+
+    /// KL(P||Q) with a Z that is guaranteed fresh for this `y`: reuses the
+    /// cached Z when nothing moved, otherwise forces a new repulsion pass
+    /// (through the engine's persistent buffers) to recompute it.
+    pub fn kl_cost_exact(&mut self, pool: &ThreadPool, p: &Csr, y: &[f32]) -> f64 {
+        if self.z_stale || self.cached_z.is_none() {
+            let mut rep = std::mem::take(&mut self.rep);
+            rep.resize(self.n * DIM, 0.0);
+            self.repulsive_into(pool, y, &mut rep);
+            self.rep = rep;
+        }
+        let z = self.cached_z.expect("repulsion pass just ran");
         gradient::kl_cost::<DIM>(pool, p, y, z)
     }
 
@@ -233,6 +293,41 @@ impl DynForceEngine {
         match self {
             DynForceEngine::D2(e) => e.kl_cost(pool, p, y, z),
             DynForceEngine::D3(e) => e.kl_cost(pool, p, y, z),
+        }
+    }
+
+    pub fn kl_cost_cached(&self, pool: &ThreadPool, p: &Csr, y: &[f32]) -> Option<f64> {
+        match self {
+            DynForceEngine::D2(e) => e.kl_cost_cached(pool, p, y),
+            DynForceEngine::D3(e) => e.kl_cost_cached(pool, p, y),
+        }
+    }
+
+    pub fn kl_cost_exact(&mut self, pool: &ThreadPool, p: &Csr, y: &[f32]) -> f64 {
+        match self {
+            DynForceEngine::D2(e) => e.kl_cost_exact(pool, p, y),
+            DynForceEngine::D3(e) => e.kl_cost_exact(pool, p, y),
+        }
+    }
+
+    pub fn cached_z(&self) -> Option<f64> {
+        match self {
+            DynForceEngine::D2(e) => e.cached_z(),
+            DynForceEngine::D3(e) => e.cached_z(),
+        }
+    }
+
+    pub fn z_is_stale(&self) -> bool {
+        match self {
+            DynForceEngine::D2(e) => e.z_is_stale(),
+            DynForceEngine::D3(e) => e.z_is_stale(),
+        }
+    }
+
+    pub fn mark_embedding_moved(&mut self) {
+        match self {
+            DynForceEngine::D2(e) => e.mark_embedding_moved(),
+            DynForceEngine::D3(e) => e.mark_embedding_moved(),
         }
     }
 
@@ -343,7 +438,8 @@ mod tests {
             ForceEngine::<2>::new(n, RepulsionMethod::DualTree { rho: 0.25 }, CellSizeMode::Diagonal);
         let mut out = vec![0f64; n * 2];
         let z = engine.repulsive_into(&pool, &y, &mut out);
-        let tree = crate::spatial::BhTree::<2>::build(&y, n);
+        let mut tree = crate::spatial::BhTree::<2>::build(&y, n);
+        tree.ensure_order_ranges(None);
         let mut want = vec![0f64; n * 2];
         let z_want = tree.repulsion_dual(0.25, &mut want);
         assert!((z - z_want).abs() <= 1e-9 * z_want.abs().max(1.0), "{z} vs {z_want}");
@@ -381,6 +477,45 @@ mod tests {
             }
             assert_eq!(engine.capacities(), caps, "iteration {it} grew an engine arena");
         }
+    }
+
+    #[test]
+    fn cached_z_tracks_repulsion_and_staleness() {
+        let pool = ThreadPool::new(2);
+        let n = 300;
+        let p = random_p(n, 4, 11);
+        let mut engine = ForceEngine::<2>::new(
+            n,
+            RepulsionMethod::BarnesHut { theta: 0.5 },
+            CellSizeMode::Diagonal,
+        );
+        let mut y = random_embedding(n, 12);
+        assert!(engine.cached_z().is_none());
+        assert!(engine.kl_cost_cached(&pool, &p, &y).is_none());
+        let mut grad = vec![0f64; n * 2];
+        let z = engine.gradient(&pool, &CpuAttractive, &p, &y, &mut grad);
+        // The cache holds exactly the Z the gradient pass returned, and
+        // the cached probe equals the explicit-z cost bit for bit.
+        assert_eq!(engine.cached_z(), Some(z));
+        assert!(!engine.z_is_stale());
+        let want = engine.kl_cost(&pool, &p, &y, z);
+        assert_eq!(engine.kl_cost_cached(&pool, &p, &y), Some(want));
+        // A fresh probe with nothing moved must not run a new pass.
+        let rebuilds = engine.stats.full_rebuilds + engine.stats.refits;
+        assert_eq!(engine.kl_cost_exact(&pool, &p, &y), want);
+        assert_eq!(engine.stats.full_rebuilds + engine.stats.refits, rebuilds);
+        // After the embedding moves, the cache is stale; an exact probe
+        // forces a new repulsion pass and matches a from-scratch Z.
+        for v in y.iter_mut() {
+            *v += 0.01;
+        }
+        engine.mark_embedding_moved();
+        assert!(engine.z_is_stale());
+        let exact = engine.kl_cost_exact(&pool, &p, &y);
+        assert!(!engine.z_is_stale());
+        let mut scratch = vec![0f64; n * 2];
+        let z_fresh = engine.repulsive_into(&pool, &y, &mut scratch);
+        assert_eq!(engine.kl_cost(&pool, &p, &y, z_fresh), exact);
     }
 
     #[test]

@@ -8,6 +8,7 @@
 use super::sparse::Csr;
 use crate::spatial::{BhTree, CellSizeMode};
 use crate::util::pool::SendPtr;
+use crate::util::simd::{self, LANES, SummaryBatch};
 use crate::util::ThreadPool;
 
 /// Strategy for the repulsive part of the gradient.
@@ -25,7 +26,10 @@ pub enum RepulsionMethod {
 /// `F_attr(i) = Σ_j p_ij · (1+||y_i−y_j||²)^-1 · (y_i − y_j)`.
 ///
 /// O(nnz(P)); parallel over rows. `y` is row-major `n × DIM`; the result
-/// is written into `out` (same layout, f64 accumulation).
+/// is written into `out` (same layout, f64 accumulation). The row inner
+/// loop gathers `LANES` neighbors at a time into a stack SoA block and
+/// runs the vectorized d²/w kernel with lane-blocked accumulation (fixed
+/// reduction order → backend- and thread-count-invariant).
 pub fn attractive_forces<const DIM: usize>(
     pool: &ThreadPool,
     p: &Csr,
@@ -35,25 +39,33 @@ pub fn attractive_forces<const DIM: usize>(
     let n = p.n_rows;
     assert!(y.len() >= n * DIM);
     assert_eq!(out.len(), n * DIM);
+    let be = simd::backend();
     let oc = SendPtr(out.as_mut_ptr());
     pool.scope_chunks(n, 128, |lo, hi| {
         let _ = &oc;
+        let mut pij = [0f32; LANES];
+        let mut diff = [[0f32; LANES]; DIM];
         for i in lo..hi {
             let yi = &y[i * DIM..(i + 1) * DIM];
-            let mut acc = [0f64; DIM];
+            let mut f_acc = [[0f64; LANES]; DIM];
             let (cols, vals) = p.row(i);
-            for (&j, &pij) in cols.iter().zip(vals) {
-                let yj = &y[j as usize * DIM..(j as usize + 1) * DIM];
-                let mut d2 = 0f32;
-                let mut diff = [0f32; DIM];
-                for d in 0..DIM {
-                    diff[d] = yi[d] - yj[d];
-                    d2 += diff[d] * diff[d];
+            let mut base = 0usize;
+            while base < cols.len() {
+                let m = (cols.len() - base).min(LANES);
+                for l in 0..m {
+                    let j = cols[base + l] as usize;
+                    let yj = &y[j * DIM..(j + 1) * DIM];
+                    pij[l] = vals[base + l];
+                    for d in 0..DIM {
+                        diff[d][l] = yi[d] - yj[d];
+                    }
                 }
-                let w = pij as f64 / (1.0 + d2 as f64);
-                for d in 0..DIM {
-                    acc[d] += w * diff[d] as f64;
-                }
+                simd::attractive_block::<DIM>(be, m, &pij, &diff, &mut f_acc);
+                base += m;
+            }
+            let mut acc = [0f64; DIM];
+            for d in 0..DIM {
+                acc[d] = simd::reduce_lanes(&f_acc[d]);
             }
             // SAFETY: disjoint rows across chunks.
             let row = unsafe { std::slice::from_raw_parts_mut(oc.0.add(i * DIM), DIM) };
@@ -162,6 +174,7 @@ pub fn repulsive_bh_with_tree_scratch<const DIM: usize>(
     z_parts: &mut Vec<f64>,
 ) -> f64 {
     assert_eq!(out.len(), n * DIM);
+    let be = simd::backend();
     let oc = SendPtr(out.as_mut_ptr());
     // Deterministic Z reduction (see repulsive_exact).
     const CHUNK: usize = 64;
@@ -169,14 +182,15 @@ pub fn repulsive_bh_with_tree_scratch<const DIM: usize>(
     z_parts.clear();
     z_parts.resize(n_chunks, 0f64);
     let zc = SendPtr(z_parts.as_mut_ptr());
-    pool.scope_chunks(n, CHUNK, |lo, hi| {
+    // One SoA candidate batch per pool worker, reused across its points.
+    pool.scope_chunks_with(n, CHUNK, SummaryBatch::<DIM>::new, |batch, lo, hi| {
         let _ = (&oc, &zc);
         let mut z_local = 0f64;
         for i in lo..hi {
             let mut yi = [0f32; DIM];
             yi.copy_from_slice(&y[i * DIM..(i + 1) * DIM]);
             let mut f = [0f64; DIM];
-            z_local += tree.repulsion(i as u32, &yi, theta, &mut f);
+            z_local += tree.repulsion_with(be, i as u32, &yi, theta, &mut f, batch);
             let row = unsafe { std::slice::from_raw_parts_mut(oc.0.add(i * DIM), DIM) };
             row.copy_from_slice(&f);
         }

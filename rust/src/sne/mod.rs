@@ -280,11 +280,17 @@ impl TsneRunner {
 
             opt.step(&self.pool, &mut y, &grad);
             optimizer::Optimizer::recenter(&self.pool, &mut y, n, dim);
+            // The engine's cached Z now describes the pre-step embedding.
+            engine.mark_embedding_moved();
 
             let kl = if self.config.cost_every > 0
                 && (it % self.config.cost_every == 0 || it + 1 == self.config.iters)
             {
-                let c = engine.kl_cost(&self.pool, p, &y, z);
+                // Observer probe: reuse the Z cached by this iteration's
+                // repulsion pass (one step old — the approximation this
+                // reporting has always made) instead of re-walking the
+                // tree; `kl_cost_exact` is the fresh-Z variant.
+                let c = engine.kl_cost_cached(&self.pool, p, &y).expect("gradient ran");
                 last_kl = Some(c);
                 Some(c)
             } else {

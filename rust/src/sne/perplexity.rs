@@ -8,6 +8,7 @@
 //! midpoint bisection reproduces the reference implementation's behavior.
 
 use crate::util::pool::SendPtr;
+use crate::util::simd::{self, Backend};
 use crate::util::ThreadPool;
 
 /// Result of the conditional-distribution computation.
@@ -24,20 +25,15 @@ pub struct CondP {
 
 /// Shannon entropy (nats) and normalized probabilities for a row of
 /// squared distances at precision `beta`. Returns (H, sum of unnormalized
-/// weights).
+/// weights). The min/weights/sum/dot row math runs through the
+/// lane-blocked [`crate::util::simd`] kernels (the `exp` itself stays the
+/// scalar libm call on every backend, so results are backend-invariant).
 #[inline]
-fn row_entropy(d2: &[f32], beta: f64, out_p: &mut [f64]) -> (f64, f64) {
+fn row_entropy(be: Backend, d2: &[f32], beta: f64, out_p: &mut [f64]) -> (f64, f64) {
     // Subtract the min squared distance before exponentiating: shift
     // invariance of the softmax keeps exp() in range for any beta.
-    let d2min = d2.iter().cloned().fold(f32::INFINITY, f32::min) as f64;
-    let mut sum = 0f64;
-    let mut dot = 0f64; // Σ w·d²
-    for (j, &d) in d2.iter().enumerate() {
-        let w = (-beta * (d as f64 - d2min)).exp();
-        out_p[j] = w;
-        sum += w;
-        dot += w * d as f64;
-    }
+    let d2min = simd::row_min(be, d2) as f64;
+    let (sum, dot) = simd::entropy_weights(be, d2, -beta, d2min, out_p);
     // H = log(sum) + beta * <d²> (after un-shifting the min, the shift
     // cancels in H; derive: H = -Σ p log p with p = w/sum).
     let h = sum.ln() + beta * (dot / sum - d2min);
@@ -55,6 +51,7 @@ pub fn solve_row(
     p_out: &mut [f32],
     scratch: &mut Vec<f64>,
 ) -> (f32, bool) {
+    let be = simd::backend();
     let target = perplexity.ln();
     let k = d2.len();
     debug_assert!(k > 0);
@@ -66,7 +63,7 @@ pub fn solve_row(
     let scratch = &mut scratch[..];
     let mut ok = false;
     for _ in 0..200 {
-        let (h, _) = row_entropy(d2, beta, scratch);
+        let (h, _) = row_entropy(be, d2, beta, scratch);
         let diff = h - target;
         if diff.abs() < tol {
             ok = true;
@@ -82,10 +79,8 @@ pub fn solve_row(
         }
     }
     // Final normalized probabilities at the found β.
-    let (_, sum) = row_entropy(d2, beta, scratch);
-    for j in 0..k {
-        p_out[j] = (scratch[j] / sum) as f32;
-    }
+    let (_, sum) = row_entropy(be, d2, beta, scratch);
+    simd::normalize_weights(be, scratch, sum, &mut p_out[..k]);
     (beta as f32, ok)
 }
 

@@ -10,6 +10,7 @@
 //! per-iteration hot path; [`BhTree::build`] runs the same algorithm
 //! serially.
 
+use crate::util::simd::{self, SummaryBatch};
 use crate::util::ThreadPool;
 
 /// How the cell size `r_cell` in the summary condition (Eq. 9) is
@@ -120,11 +121,15 @@ pub struct BhTree<const DIM: usize> {
     nodes: Vec<Node<DIM>>,
     mode: CellSizeMode,
     n: usize,
-    /// Points in DFS-leaf order (for dual-tree range queries); built
-    /// eagerly on every (re)build so the dual traversal takes `&self`.
+    /// Points in DFS-leaf order (for dual-tree range queries); filled on
+    /// demand by [`BhTree::ensure_order_ranges`] — the point-cell method
+    /// never reads it, so (re)builds skip the O(n) fill entirely.
     order: Vec<u32>,
     /// Per-node `[start, end)` into `order` (parallel to `nodes`).
     ranges: Vec<(u32, u32)>,
+    /// Whether `order`/`ranges` describe the *current* build (every
+    /// build/refit invalidates them; `ensure_order_ranges` rebuilds).
+    ranges_built: bool,
     /// Points that collapsed into a leaf despite a distinct position
     /// (coordinates indistinguishable at Morton-key resolution).
     depth_cap_hits: usize,
@@ -153,6 +158,12 @@ struct BuildScratch<const DIM: usize> {
     scratch: Vec<(u64, u32)>,
     /// Out-of-order entries peeled off by the adaptive re-sort.
     displaced: Vec<(u64, u32)>,
+    /// Per-chunk key maxima of the parallel backbone scan (turned into
+    /// incoming prefix maxima in place by the serial seam stitch).
+    bb_max: Vec<(u64, u32)>,
+    /// Per-chunk kept (backbone) counts, turned into exclusive prefix
+    /// sums (output offsets) in place.
+    bb_kept: Vec<usize>,
     /// Per-chunk partial bounding boxes.
     bbox_parts: Vec<([f32; DIM], [f32; DIM])>,
     /// Per-frontier-subtree node arenas (+ depth-cap hit counts) for the
@@ -169,6 +180,8 @@ impl<const DIM: usize> BuildScratch<DIM> {
             keys: Vec::new(),
             scratch: Vec::new(),
             displaced: Vec::new(),
+            bb_max: Vec::new(),
+            bb_kept: Vec::new(),
             bbox_parts: Vec::new(),
             arenas: Vec::new(),
             frontier: Vec::new(),
@@ -243,6 +256,7 @@ impl<const DIM: usize> BhTree<DIM> {
             n,
             order: Vec::new(),
             ranges: Vec::new(),
+            ranges_built: false,
             depth_cap_hits: 0,
             t_com: Vec::new(),
             t_r2: Vec::new(),
@@ -411,17 +425,23 @@ impl<const DIM: usize> BhTree<DIM> {
         }
     }
 
-    /// Re-sort `keys` exploiting near-sortedness: one pass peels the
-    /// greedy ascending backbone into `scratch` and the out-of-order rest
-    /// into `displaced`; the (small) displaced list is sorted and merged
-    /// back. Aborts — returning false with `keys` untouched — when the
-    /// displaced count exceeds `n / REFIT_DISORDER_DENOM`; the caller then
-    /// runs the from-scratch sort. Keys are a unique total order, so the
-    /// merged result is bit-identical to `sort_unstable` whenever this
-    /// returns true.
+    /// Re-sort `keys` exploiting near-sortedness: peel the greedy
+    /// ascending backbone into `scratch` and the out-of-order rest into
+    /// `displaced`; the (small) displaced list is sorted and merged back.
+    /// Aborts — returning false with `keys` untouched — when the
+    /// displaced count exceeds `n / REFIT_DISORDER_DENOM`; the caller
+    /// then runs the from-scratch sort. Keys are a unique total order, so
+    /// the merged result is bit-identical to `sort_unstable` whenever
+    /// this returns true.
+    ///
+    /// The split runs pool-parallel as a run-boundary scan (an element is
+    /// backbone iff it exceeds the running prefix maximum, so per-chunk
+    /// maxima + a serial seam stitch classify every element
+    /// independently); [`backbone_split_serial`] is the single-pass
+    /// oracle it must match element for element.
     fn adaptive_resort(&mut self, pool: Option<&ThreadPool>) -> bool {
         let n = self.n;
-        let BuildScratch { keys, scratch, displaced, .. } = &mut self.build;
+        let BuildScratch { keys, scratch, displaced, bb_max, bb_kept, .. } = &mut self.build;
         let max_displaced = n / REFIT_DISORDER_DENOM;
         scratch.clear();
         displaced.clear();
@@ -430,16 +450,14 @@ impl<const DIM: usize> BhTree<DIM> {
         if displaced.capacity() < max_displaced {
             displaced.reserve_exact(max_displaced);
         }
-        for &kv in keys.iter() {
-            match scratch.last() {
-                Some(&last) if kv < last => {
-                    if displaced.len() >= max_displaced {
-                        return false;
-                    }
-                    displaced.push(kv);
-                }
-                _ => scratch.push(kv),
+        let ok = match pool {
+            Some(pool) => {
+                backbone_split_parallel(pool, keys, scratch, displaced, bb_max, bb_kept, max_displaced)
             }
+            None => backbone_split_serial(keys, scratch, displaced, max_displaced),
+        };
+        if !ok {
+            return false;
         }
         if displaced.is_empty() {
             return true; // already sorted; keys untouched
@@ -484,7 +502,9 @@ impl<const DIM: usize> BhTree<DIM> {
     }
 
     /// Assemble nodes from the sorted keys (into the reused arenas), then
-    /// refresh the traversal SoA and the DFS order/ranges.
+    /// refresh the traversal SoA. The DFS order/ranges are *not* rebuilt
+    /// here — they are invalidated, and [`BhTree::ensure_order_ranges`]
+    /// refills them only when a dual-tree traversal needs them.
     fn assemble(&mut self, pool: Option<&ThreadPool>, y: &[f32], center: [f32; DIM], half: [f32; DIM]) {
         // Node counts drift by a handful between refits; 50% headroom over
         // the previous count keeps steady-state reallocation at zero.
@@ -512,7 +532,7 @@ impl<const DIM: usize> BhTree<DIM> {
             };
         }
         self.finalize();
-        self.build_order_ranges();
+        self.ranges_built = false;
     }
 
     /// Build the traversal SoA: finalized center-of-mass, squared cell
@@ -570,8 +590,30 @@ impl<const DIM: usize> BhTree<DIM> {
     /// hot path). θ = 0 therefore never summarizes and reproduces exact
     /// t-SNE, as the paper notes.
     pub fn repulsion(&self, index: u32, yi: &[f32; DIM], theta: f32, force: &mut [f64; DIM]) -> f64 {
+        let mut batch = SummaryBatch::new();
+        self.repulsion_with(simd::backend(), index, yi, theta, force, &mut batch)
+    }
+
+    /// [`BhTree::repulsion`] with an explicit kernel backend and a
+    /// caller-owned candidate batch (the gradient loop keeps one per pool
+    /// worker). Accepted cells/leaves are gathered into the SoA batch —
+    /// diff/d²/multiplicity, self-exclusion already applied — and
+    /// evaluated [`crate::util::simd::LANES`] at a time with lane-blocked
+    /// f64 accumulation in a fixed reduction order, so the result is
+    /// identical across backends and thread counts.
+    pub fn repulsion_with(
+        &self,
+        be: simd::Backend,
+        index: u32,
+        yi: &[f32; DIM],
+        theta: f32,
+        force: &mut [f64; DIM],
+        batch: &mut SummaryBatch<DIM>,
+    ) -> f64 {
         let theta2 = theta * theta;
-        let mut z = 0f64;
+        batch.len = 0;
+        let mut z_acc = [0f64; simd::LANES];
+        let mut f_acc = [[0f64; simd::LANES]; DIM];
         // Explicit DFS stack of node ids. Bound: at each level at most
         // FANOUT-1 siblings stay on the stack, so KEY_BITS*(FANOUT-1)+1
         // = 148 for the octree; 512 gives headroom.
@@ -585,27 +627,23 @@ impl<const DIM: usize> BhTree<DIM> {
         let t_r2 = &self.t_r2;
         let t_count = &self.t_count;
         let t_first = &self.t_first;
-        // Summary-term math shared by the stack loop and the inlined leaf
+        // Candidate gather shared by the stack loop and the inlined leaf
         // fast path. Self-exclusion: coincident points collapse into one
         // leaf (whose COM equals the stored position), so the query lies
         // in a leaf iff d² == 0, or the stored index is the query; exclude
         // exactly one copy — unlike the reference C++, which misses
-        // self-exclusion for collapsed duplicates.
+        // self-exclusion for collapsed duplicates. The d²/q/mult math
+        // itself runs batched in the SIMD kernel when the buffer fills.
         macro_rules! summarize {
             ($id:expr, $count:expr, $is_leaf:expr, $d2:expr, $diff:expr) => {{
-                // q via one f32 divide (the f64 divide dominated the
-                // summary path); accumulation stays f64.
-                let qf = 1.0f32 / (1.0 + $d2);
                 let mut mult = $count as f64;
                 if $is_leaf && ($d2 == 0.0 || self.t_point[$id] == index) {
                     mult -= 1.0;
                 }
                 if mult > 0.0 {
-                    let q = qf as f64;
-                    z += mult * q;
-                    let qq = mult * q * q;
-                    for d in 0..DIM {
-                        force[d] += qq * $diff[d] as f64;
+                    batch.push($d2, &$diff, mult);
+                    if batch.is_full() {
+                        batch.flush(be, &mut z_acc, &mut f_acc);
                     }
                 }
             }};
@@ -652,7 +690,11 @@ impl<const DIM: usize> BhTree<DIM> {
                 }
             }
         }
-        z
+        batch.flush(be, &mut z_acc, &mut f_acc);
+        for d in 0..DIM {
+            force[d] += simd::reduce_lanes(&f_acc[d]);
+        }
+        simd::reduce_lanes(&z_acc)
     }
 
     /// Compute tree statistics (walks every node).
@@ -678,39 +720,141 @@ impl<const DIM: usize> BhTree<DIM> {
         s
     }
 
+    /// Whether the DFS order/ranges describe the current build.
+    pub fn has_order_ranges(&self) -> bool {
+        self.ranges_built
+    }
+
     /// Build the DFS point ordering and per-node `[start, end)` ranges
-    /// used by the dual-tree traversal. Runs eagerly on every (re)build so
-    /// the dual traversal is `&self` and cost + gradient evaluation can
-    /// share one immutable tree.
-    fn build_order_ranges(&mut self) {
+    /// the dual-tree traversal reads, if the current build does not have
+    /// them yet. Only the dual-tree method needs this — the point-cell
+    /// traversal never reads order/ranges, so the engine gates this call
+    /// on the method instead of paying the O(n) fill on every (re)build.
+    ///
+    /// Node ranges are a pure function of the subtree point counts
+    /// (child `q` starts where children `< q` end), so the fill runs
+    /// pool-parallel: a serial top-down expansion hands disjoint
+    /// `(subtree, offset)` tasks to the pool, each of which owns a
+    /// disjoint node-id set and a disjoint `order` span. The result is
+    /// bit-identical to the serial recursion ([`BhTree::fill_order_ranges_serial`],
+    /// kept as the oracle and used below the parallel threshold).
+    pub fn ensure_order_ranges(&mut self, pool: Option<&ThreadPool>) {
+        if self.ranges_built {
+            return;
+        }
         let m = self.nodes.len();
         self.order.clear();
+        self.order.resize(self.n, 0);
         self.ranges.clear();
         if self.ranges.capacity() < m {
             // Same 50% headroom rule as the node arena (see `assemble`).
             self.ranges.reserve_exact(m + m / 2);
         }
         self.ranges.resize(m, (0, 0));
-        self.range_rec(0);
+        match self.active_pool(pool) {
+            Some(pool) => self.fill_order_ranges_parallel(pool),
+            None => {
+                self.fill_order_ranges_serial(0, 0);
+            }
+        }
+        self.ranges_built = true;
     }
 
-    fn range_rec(&mut self, id: u32) {
-        let start = self.order.len() as u32;
+    /// Serial order/ranges fill (the oracle): in-order DFS writing each
+    /// leaf's points — a collapsed leaf repeats its stored index
+    /// `multiplicity` times, since the dual tree applies per-point forces
+    /// — at the running offset. Returns the subtree's end offset.
+    fn fill_order_ranges_serial(&mut self, id: u32, offset: u32) -> u32 {
         let node = self.nodes[id as usize];
+        let mut cur = offset;
         if node.is_leaf() {
             if node.point != u32::MAX {
-                // A collapsed leaf stores one index with multiplicity m;
-                // dual-tree applies per-point forces, so repeat it.
                 for _ in 0..node.multiplicity {
-                    self.order.push(node.point);
+                    self.order[cur as usize] = node.point;
+                    cur += 1;
                 }
             }
         } else {
             for c in 0..Self::FANOUT {
-                self.range_rec(node.first_child + c as u32);
+                cur = self.fill_order_ranges_serial(node.first_child + c as u32, cur);
             }
         }
-        self.ranges[id as usize] = (start, self.order.len() as u32);
+        self.ranges[id as usize] = (offset, cur);
+        cur
+    }
+
+    /// Pool-parallel order/ranges fill (see [`BhTree::ensure_order_ranges`]).
+    fn fill_order_ranges_parallel(&mut self, pool: &ThreadPool) {
+        let BhTree { nodes, order, ranges, build, n, .. } = self;
+        let nodes: &[Node<DIM>] = nodes;
+        let BuildScratch { frontier, next_frontier, .. } = build;
+        // Serial top expansion: split big interior nodes until there are
+        // enough tasks, recording their ranges as we go. `lo`/`hi` carry
+        // the subtree's order span (`hi - lo == count`).
+        frontier.clear();
+        frontier.push(BuildTask { id: 0, lo: 0, hi: *n, depth: 0 });
+        let target_tasks = pool.n_threads() * 4;
+        let grain = (*n / (pool.n_threads() * 4)).max(1024);
+        loop {
+            if frontier.len() >= target_tasks {
+                break;
+            }
+            next_frontier.clear();
+            let mut expanded_any = false;
+            for t in frontier.iter() {
+                let node = &nodes[t.id];
+                if node.is_leaf() || t.hi - t.lo <= grain {
+                    next_frontier.push(*t);
+                    continue;
+                }
+                expanded_any = true;
+                ranges[t.id] = (t.lo as u32, t.hi as u32);
+                let mut cur = t.lo;
+                for c in 0..Self::FANOUT {
+                    let child = node.first_child as usize + c;
+                    let cnt = nodes[child].count as usize;
+                    next_frontier.push(BuildTask { id: child, lo: cur, hi: cur + cnt, depth: 0 });
+                    cur += cnt;
+                }
+            }
+            std::mem::swap(frontier, next_frontier);
+            if !expanded_any {
+                break;
+            }
+        }
+        // Parallel subtree fills: disjoint node ids, disjoint order spans.
+        let rc = RawMut(ranges.as_mut_ptr());
+        let oc = RawMut(order.as_mut_ptr());
+        pool.scoped(|scope| {
+            for t in frontier.iter() {
+                let (rc, oc) = (&rc, &oc);
+                let task = *t;
+                scope.run(move || {
+                    let mut stack: Vec<(u32, u32)> = Vec::with_capacity(64);
+                    stack.push((task.id as u32, task.lo as u32));
+                    while let Some((id, off)) = stack.pop() {
+                        let node = &nodes[id as usize];
+                        // SAFETY: each node id belongs to exactly one
+                        // frontier subtree; order spans are disjoint.
+                        unsafe { *rc.0.add(id as usize) = (off, off + node.count) };
+                        if node.is_leaf() {
+                            if node.point != u32::MAX {
+                                for r in 0..node.multiplicity {
+                                    unsafe { *oc.0.add((off + r) as usize) = node.point };
+                                }
+                            }
+                        } else {
+                            let mut cur = off;
+                            for c in 0..Self::FANOUT {
+                                let child = node.first_child + c as u32;
+                                stack.push((child, cur));
+                                cur += nodes[child as usize].count;
+                            }
+                        }
+                    }
+                });
+            }
+        });
     }
 
     /// Core of the dual-tree traversal: processes pairs from `stack` until
@@ -729,6 +873,7 @@ impl<const DIM: usize> BhTree<DIM> {
     /// serial walk would.
     fn dual_walk(
         &self,
+        be: simd::Backend,
         rho2: f32,
         stack: &mut Vec<(u32, u32)>,
         mut defer: Option<(u32, &mut Vec<(u32, u32)>)>,
@@ -788,12 +933,14 @@ impl<const DIM: usize> BhTree<DIM> {
                 let (s, e) = self.ranges[a as usize];
                 touched.0 = touched.0.min(s);
                 touched.1 = touched.1.max(e);
-                for pos in s as usize..e as usize {
-                    let row = pos * DIM;
-                    for d in 0..DIM {
-                        acc[row + d] += qq * diff[d] as f64;
-                    }
+                // Per-axis constant over a contiguous order span: the
+                // vectorized range-add (one exactly-rounded add per slot,
+                // bit-identical across backends).
+                let mut vals = [0f64; DIM];
+                for d in 0..DIM {
+                    vals[d] = qq * diff[d] as f64;
                 }
+                simd::range_add::<DIM>(be, &mut acc[s as usize * DIM..e as usize * DIM], &vals);
             } else {
                 if let Some((cutoff, seeds)) = defer.as_mut() {
                     if na.count.max(nb.count) <= *cutoff {
@@ -832,11 +979,12 @@ impl<const DIM: usize> BhTree<DIM> {
     /// on the pool.
     pub fn repulsion_dual(&self, rho: f32, forces: &mut [f64]) -> f64 {
         assert_eq!(forces.len(), self.n * DIM);
+        assert!(self.ranges_built, "dual-tree traversal needs ensure_order_ranges() after a (re)build");
         let mut acc = vec![0f64; self.n * DIM];
         let mut stack: Vec<(u32, u32)> = Vec::with_capacity(1024);
         stack.push((0, 0));
         let mut touched = (u32::MAX, 0u32);
-        let z = self.dual_walk(rho * rho, &mut stack, None, &mut acc, &mut touched);
+        let z = self.dual_walk(simd::backend(), rho * rho, &mut stack, None, &mut acc, &mut touched);
         if touched.0 < touched.1 {
             for pos in touched.0 as usize..touched.1 as usize {
                 let row = self.order[pos] as usize * DIM;
@@ -865,6 +1013,8 @@ impl<const DIM: usize> BhTree<DIM> {
         ws: &mut DualTreeScratch,
     ) -> f64 {
         assert_eq!(forces.len(), self.n * DIM);
+        assert!(self.ranges_built, "dual-tree traversal needs ensure_order_ranges() after a (re)build");
+        let be = simd::backend();
         let rho2 = rho * rho;
         if pool.n_threads() <= 1 || self.n < PAR_DUAL_MIN {
             // Serial walk through the caller's scratch (allocation-free).
@@ -874,7 +1024,7 @@ impl<const DIM: usize> BhTree<DIM> {
             stack.clear();
             stack.push((0, 0));
             let mut touched = (u32::MAX, 0u32);
-            let z = self.dual_walk(rho2, stack, None, buf, &mut touched);
+            let z = self.dual_walk(be, rho2, stack, None, buf, &mut touched);
             if touched.0 < touched.1 {
                 for pos in touched.0 as usize..touched.1 as usize {
                     let row = self.order[pos] as usize * DIM;
@@ -899,7 +1049,7 @@ impl<const DIM: usize> BhTree<DIM> {
         top_stack.push((0, 0));
         *top_touched = (u32::MAX, 0);
         let top_z =
-            self.dual_walk(rho2, top_stack, Some((cutoff, &mut ws.seeds)), top_buf, top_touched);
+            self.dual_walk(be, rho2, top_stack, Some((cutoff, &mut ws.seeds)), top_buf, top_touched);
         // --- Fan out: seed s goes to slot s % slots; the assignment
         // depends only on seed order, never on scheduling. ---
         let seeds = &ws.seeds;
@@ -919,7 +1069,7 @@ impl<const DIM: usize> BhTree<DIM> {
                         i += slots;
                     }
                     *tch = (u32::MAX, 0);
-                    *zslot = self.dual_walk(rho2, stack, None, buf, tch);
+                    *zslot = self.dual_walk(be, rho2, stack, None, buf, tch);
                 });
             }
         });
@@ -1016,8 +1166,8 @@ impl<const DIM: usize> BhTree<DIM> {
         self.n == other.n
             && self.depth_cap_hits == other.depth_cap_hits
             && self.nodes == other.nodes
-            && self.order == other.order
-            && self.ranges == other.ranges
+            && self.ranges_built == other.ranges_built
+            && (!self.ranges_built || (self.order == other.order && self.ranges == other.ranges))
             && self.t_com == other.t_com
             && self.t_r2 == other.t_r2
             && self.t_count == other.t_count
@@ -1042,6 +1192,8 @@ impl<const DIM: usize> BhTree<DIM> {
             b.keys.capacity(),
             b.scratch.capacity(),
             b.displaced.capacity(),
+            b.bb_max.capacity(),
+            b.bb_kept.capacity(),
             b.bbox_parts.capacity(),
             b.arenas.capacity(),
             b.frontier.capacity(),
@@ -1232,6 +1384,165 @@ fn merge_runs(a: &[(u64, u32)], b: &[(u64, u32)], out: &mut [(u64, u32)]) {
             b[j - 1]
         };
     }
+}
+
+/// Serial greedy backbone split — the oracle for
+/// [`backbone_split_parallel`]. Walks `keys` once, appending each element
+/// to the ascending backbone (`scratch`) when it is ≥ the backbone's
+/// tail, else to `displaced`. Returns false (aborting the adaptive path)
+/// as soon as the displaced count would exceed `max_displaced`.
+fn backbone_split_serial(
+    keys: &[(u64, u32)],
+    scratch: &mut Vec<(u64, u32)>,
+    displaced: &mut Vec<(u64, u32)>,
+    max_displaced: usize,
+) -> bool {
+    for &kv in keys.iter() {
+        match scratch.last() {
+            Some(&last) if kv < last => {
+                if displaced.len() >= max_displaced {
+                    return false;
+                }
+                displaced.push(kv);
+            }
+            _ => scratch.push(kv),
+        }
+    }
+    true
+}
+
+/// Chunk size of the parallel backbone scan.
+const BB_CHUNK: usize = 8 * 1024;
+
+/// Classify `chunk` given the maximum of everything before it (`None`
+/// for the first chunk), calling `f(element, kept)` for each element in
+/// order. Because the greedy backbone's tail always equals the running
+/// prefix maximum of *all* elements seen so far (a kept element becomes
+/// the new maximum; a displaced one is below it), membership is a pure
+/// function of (element, prefix max) — which is what makes the scan
+/// chunk-decomposable.
+#[inline]
+fn bb_classify(chunk: &[(u64, u32)], incoming: Option<(u64, u32)>, mut f: impl FnMut((u64, u32), bool)) {
+    let mut run = incoming;
+    for &kv in chunk.iter() {
+        let kept = match run {
+            Some(m) => kv >= m, // keys are unique, so `>` in practice; `>=` matches the serial tie rule
+            None => true,
+        };
+        if kept {
+            run = Some(kv);
+        }
+        f(kv, kept);
+    }
+}
+
+/// Pool-parallel backbone split, element-for-element identical to
+/// [`backbone_split_serial`]: chunked maxima (parallel) → seam stitch
+/// into incoming prefix maxima (serial, O(chunks)) → per-chunk kept
+/// counts (parallel) → offset prefix sums + abort check (serial) →
+/// classified writes into `scratch`/`displaced` (parallel). `keys` is
+/// never modified, matching the serial abort contract.
+fn backbone_split_parallel(
+    pool: &ThreadPool,
+    keys: &[(u64, u32)],
+    scratch: &mut Vec<(u64, u32)>,
+    displaced: &mut Vec<(u64, u32)>,
+    bb_max: &mut Vec<(u64, u32)>,
+    bb_kept: &mut Vec<usize>,
+    max_displaced: usize,
+) -> bool {
+    let n = keys.len();
+    let n_chunks = n.div_ceil(BB_CHUNK);
+    if n_chunks < 2 {
+        return backbone_split_serial(keys, scratch, displaced, max_displaced);
+    }
+    bb_max.clear();
+    bb_max.resize(n_chunks, (0, 0));
+    bb_kept.clear();
+    bb_kept.resize(n_chunks, 0);
+    // Pass 1 (parallel): per-chunk maxima.
+    {
+        let mc = RawMut(bb_max.as_mut_ptr());
+        pool.scope_chunks(n, BB_CHUNK, |lo, hi| {
+            let _ = &mc;
+            let mut m = keys[lo];
+            for &kv in &keys[lo + 1..hi] {
+                if kv > m {
+                    m = kv;
+                }
+            }
+            // SAFETY: one chunk writes exactly one slot.
+            unsafe { *mc.0.add(lo / BB_CHUNK) = m };
+        });
+    }
+    // Seam stitch (serial over chunks): bb_max[c] becomes the maximum of
+    // all chunks before c; bb_max[0] is unused (no incoming maximum).
+    let mut run = bb_max[0];
+    for c in 1..n_chunks {
+        let cur = bb_max[c];
+        bb_max[c] = run;
+        if cur > run {
+            run = cur;
+        }
+    }
+    // Pass 2 (parallel): kept counts per chunk.
+    {
+        let incoming: &[(u64, u32)] = bb_max;
+        let kc = RawMut(bb_kept.as_mut_ptr());
+        pool.scope_chunks(n, BB_CHUNK, |lo, hi| {
+            let _ = &kc;
+            let c = lo / BB_CHUNK;
+            let inc = if c == 0 { None } else { Some(incoming[c]) };
+            let mut kept = 0usize;
+            bb_classify(&keys[lo..hi], inc, |_, k| kept += usize::from(k));
+            // SAFETY: one chunk writes exactly one slot.
+            unsafe { *kc.0.add(c) = kept };
+        });
+    }
+    // Offsets + abort check (serial over chunks): bb_kept[c] becomes the
+    // backbone offset of chunk c; the displaced offset is the chunk start
+    // minus it (everything before chunk c is either kept or displaced).
+    let mut kept_total = 0usize;
+    for c in 0..n_chunks {
+        let k = bb_kept[c];
+        bb_kept[c] = kept_total;
+        kept_total += k;
+    }
+    let displaced_total = n - kept_total;
+    if displaced_total > max_displaced {
+        return false;
+    }
+    scratch.resize(kept_total, (0, 0));
+    displaced.resize(displaced_total, (0, 0));
+    // Pass 3 (parallel): classified writes, in chunk-concatenation order —
+    // the exact sequences the serial single pass produces.
+    {
+        let incoming: &[(u64, u32)] = bb_max;
+        let offs: &[usize] = bb_kept;
+        let sc = RawMut(scratch.as_mut_ptr());
+        let dc = RawMut(displaced.as_mut_ptr());
+        pool.scope_chunks(n, BB_CHUNK, |lo, hi| {
+            let _ = (&sc, &dc);
+            let c = lo / BB_CHUNK;
+            let inc = if c == 0 { None } else { Some(incoming[c]) };
+            let mut boff = offs[c];
+            let mut doff = lo - offs[c];
+            bb_classify(&keys[lo..hi], inc, |kv, kept| {
+                // SAFETY: chunk output ranges are disjoint by the offset
+                // prefix sums; each slot is written exactly once.
+                unsafe {
+                    if kept {
+                        *sc.0.add(boff) = kv;
+                        boff += 1;
+                    } else {
+                        *dc.0.add(doff) = kv;
+                        doff += 1;
+                    }
+                }
+            });
+        });
+    }
+    true
 }
 
 /// Bottom-up assembly of one subtree from a contiguous slice of the
@@ -1679,8 +1990,11 @@ mod tests {
     fn ranges_cover_all_points() {
         let n = 333;
         let y = random_embedding(n, 6);
-        // Order/ranges are built eagerly by construction.
-        let tree = BhTree::<2>::build(&y, n);
+        // Order/ranges are gated: absent until ensured.
+        let mut tree = BhTree::<2>::build(&y, n);
+        assert!(!tree.has_order_ranges());
+        tree.ensure_order_ranges(None);
+        assert!(tree.has_order_ranges());
         assert_eq!(tree.order.len(), n);
         let (s, e) = tree.ranges[0];
         assert_eq!((s, e), (0, n as u32));
@@ -1696,7 +2010,8 @@ mod tests {
     fn dual_tree_close_to_exact_small_rho() {
         let n = 250;
         let y = random_embedding(n, 7);
-        let tree = BhTree::<2>::build(&y, n);
+        let mut tree = BhTree::<2>::build(&y, n);
+        tree.ensure_order_ranges(None);
         let mut forces = vec![0f64; n * 2];
         let z = tree.repulsion_dual(0.2, &mut forces);
         // Oracle totals.
@@ -1973,7 +2288,8 @@ mod tests {
         let pool = ThreadPool::new(4);
         let n = PAR_BUILD_MIN; // ≥ PAR_DUAL_MIN: real fan-out path
         let y = random_embedding(n, 31);
-        let tree = BhTree::<2>::build_parallel(&pool, &y, n, CellSizeMode::Diagonal);
+        let mut tree = BhTree::<2>::build_parallel(&pool, &y, n, CellSizeMode::Diagonal);
+        tree.ensure_order_ranges(Some(&pool));
         let mut serial = vec![0f64; n * 2];
         let zs = tree.repulsion_dual(0.3, &mut serial);
         let mut ws = DualTreeScratch::new();
@@ -1996,7 +2312,8 @@ mod tests {
         let pool = ThreadPool::new(4);
         let n = 300; // below PAR_DUAL_MIN
         let y = random_embedding(n, 32);
-        let tree = BhTree::<2>::build(&y, n);
+        let mut tree = BhTree::<2>::build(&y, n);
+        tree.ensure_order_ranges(None);
         let mut serial = vec![0f64; n * 2];
         let zs = tree.repulsion_dual(0.25, &mut serial);
         let mut ws = DualTreeScratch::new();
@@ -2013,6 +2330,109 @@ mod tests {
     }
 
     #[test]
+    fn order_ranges_parallel_matches_serial_oracle() {
+        let pool = ThreadPool::new(4);
+        for (seed, dup) in [(40u64, false), (41, true)] {
+            let n = PAR_BUILD_MIN + 333;
+            let y = if dup {
+                let mut rng = Pcg32::seeded(seed);
+                let mut y = Vec::with_capacity(n * 2);
+                for _ in 0..n / 2 {
+                    let (a, b) = (rng.normal() as f32, rng.normal() as f32);
+                    y.extend_from_slice(&[a, b, a, b]);
+                }
+                y.extend_from_slice(&[0.5, 0.5]);
+                y
+            } else {
+                random_embedding(n, seed)
+            };
+            let mut par = BhTree::<2>::build_parallel(&pool, &y, n, CellSizeMode::Diagonal);
+            par.ensure_order_ranges(Some(&pool));
+            let mut ser = BhTree::<2>::build_parallel(&pool, &y, n, CellSizeMode::Diagonal);
+            ser.ensure_order_ranges(None);
+            assert_eq!(par.order, ser.order, "dup={dup}");
+            assert_eq!(par.ranges, ser.ranges, "dup={dup}");
+        }
+    }
+
+    #[test]
+    fn order_ranges_invalidated_by_refit_and_match_fresh() {
+        let pool = ThreadPool::new(4);
+        let n = PAR_BUILD_MIN + 55;
+        let y0 = random_embedding(n, 42);
+        let y1 = drifted(&y0, 1e-3, 43);
+        let mut tree = BhTree::<2>::build_parallel(&pool, &y0, n, CellSizeMode::Diagonal);
+        tree.ensure_order_ranges(Some(&pool));
+        assert!(tree.has_order_ranges());
+        tree.refit(Some(&pool), &y1);
+        assert!(!tree.has_order_ranges(), "refit must invalidate order/ranges");
+        tree.ensure_order_ranges(Some(&pool));
+        let mut fresh = BhTree::<2>::build_parallel(&pool, &y1, n, CellSizeMode::Diagonal);
+        fresh.ensure_order_ranges(Some(&pool));
+        assert!(tree.arena_eq(&fresh), "refit + ensure diverged from fresh build + ensure");
+    }
+
+    #[test]
+    fn backbone_split_parallel_matches_serial() {
+        let pool = ThreadPool::new(4);
+        let mut rng = Pcg32::seeded(44);
+        let n = 3 * BB_CHUNK + 777;
+        for disorder in [0usize, 1, 64, n / 32, n / 4] {
+            // Nearly sorted keys: start sorted, swap `disorder` random pairs.
+            let mut keys: Vec<(u64, u32)> = (0..n).map(|i| ((i as u64) << 8, i as u32)).collect();
+            for _ in 0..disorder {
+                let a = rng.below_usize(n);
+                let b = rng.below_usize(n);
+                keys.swap(a, b);
+            }
+            let max_displaced = n / REFIT_DISORDER_DENOM;
+            let mut s_scr = Vec::new();
+            let mut s_dis = Vec::new();
+            let s_ok = backbone_split_serial(&keys, &mut s_scr, &mut s_dis, max_displaced);
+            let mut p_scr = Vec::new();
+            let mut p_dis = Vec::new();
+            let (mut bb_max, mut bb_kept) = (Vec::new(), Vec::new());
+            let p_ok = backbone_split_parallel(
+                &pool,
+                &keys,
+                &mut p_scr,
+                &mut p_dis,
+                &mut bb_max,
+                &mut bb_kept,
+                max_displaced,
+            );
+            assert_eq!(s_ok, p_ok, "disorder={disorder}");
+            if s_ok {
+                assert_eq!(s_scr, p_scr, "disorder={disorder}");
+                assert_eq!(s_dis, p_dis, "disorder={disorder}");
+            }
+        }
+    }
+
+    #[test]
+    fn repulsion_backends_bit_identical() {
+        use crate::util::simd;
+        let n = 700;
+        let y = random_embedding(n, 45);
+        let tree = BhTree::<2>::build(&y, n);
+        for theta in [0.0f32, 0.5] {
+            for i in (0..n).step_by(29) {
+                let yi = [y[i * 2], y[i * 2 + 1]];
+                let mut batch = simd::SummaryBatch::new();
+                let mut fp = [0f64; 2];
+                let pb = simd::Backend::Portable;
+                let zp = tree.repulsion_with(pb, i as u32, &yi, theta, &mut fp, &mut batch);
+                for be in simd::test_backends() {
+                    let mut f = [0f64; 2];
+                    let z = tree.repulsion_with(be, i as u32, &yi, theta, &mut f, &mut batch);
+                    assert_eq!(z.to_bits(), zp.to_bits(), "theta={theta} i={i} {:?}", be);
+                    assert_eq!(f, fp, "theta={theta} i={i} {:?}", be);
+                }
+            }
+        }
+    }
+
+    #[test]
     fn dual_parallel_with_duplicates_matches_serial() {
         let pool = ThreadPool::new(4);
         let n = PAR_BUILD_MIN;
@@ -2022,7 +2442,8 @@ mod tests {
             let (a, b) = (rng.normal() as f32, rng.normal() as f32);
             y.extend_from_slice(&[a, b, a, b]);
         }
-        let tree = BhTree::<2>::build_parallel(&pool, &y, n, CellSizeMode::Diagonal);
+        let mut tree = BhTree::<2>::build_parallel(&pool, &y, n, CellSizeMode::Diagonal);
+        tree.ensure_order_ranges(Some(&pool));
         let mut serial = vec![0f64; n * 2];
         let zs = tree.repulsion_dual(0.3, &mut serial);
         let mut ws = DualTreeScratch::new();

@@ -13,11 +13,20 @@
 //! bottom-up — serially via [`BhTree::build`], or across the thread pool
 //! via [`BhTree::build_parallel`] (the per-iteration hot path).
 //!
-//! The tree also records a DFS point ordering with per-node `[start, end)`
-//! ranges (built eagerly, so the dual-tree traversal is `&self` and a
-//! cost evaluation can share the gradient's tree) so the dual-tree
-//! algorithm (paper appendix) can map *cell-cell* interactions back onto
-//! the points they summarize without per-node child lists.
+//! The tree can also record a DFS point ordering with per-node
+//! `[start, end)` ranges so the dual-tree algorithm (paper appendix) can
+//! map *cell-cell* interactions back onto the points they summarize
+//! without per-node child lists. The fill is gated behind
+//! [`BhTree::ensure_order_ranges`] (pool-parallel, bit-identical to the
+//! serial recursion) because the point-cell method never reads it —
+//! Barnes-Hut (re)builds skip that O(n) pass entirely.
+//!
+//! The arithmetic inner loops — point-cell d²/q/mult summaries and the
+//! dual-tree range-add — run through the deterministic SIMD kernels of
+//! [`crate::util::simd`]: accepted candidates are gathered into short SoA
+//! batches and evaluated 8 lanes at a time with lane-blocked f64
+//! accumulation in a fixed reduction order, so results are identical
+//! across kernel backends and thread counts.
 //!
 //! Every construction buffer is persistent: [`BhTree::refit`] rebuilds
 //! the tree for the next iteration's embedding inside the existing

@@ -10,6 +10,7 @@ pub mod logger;
 pub mod pool;
 pub mod quickcheck;
 pub mod rng;
+pub mod simd;
 pub mod stats;
 
 pub use pool::ThreadPool;

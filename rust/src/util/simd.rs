@@ -1,0 +1,850 @@
+//! Deterministic fixed-width SIMD kernels for the per-point hot loops.
+//!
+//! Every arithmetic-dominated inner loop in the codebase — the Barnes-Hut
+//! point-cell summary (d²/q/mult), the dual-tree range-add, the CSR
+//! attractive row, the perplexity exp/normalize row math, and the vp-tree
+//! squared-Euclidean metric — routes through this module. Each kernel has
+//! two implementations selected at runtime by [`backend`]:
+//!
+//! * **Avx2** — explicit `core::arch::x86_64` intrinsics, 8 f32 lanes
+//!   (two 4-wide f64 registers for the widened accumulation), gated by
+//!   `is_x86_feature_detected!("avx2")`.
+//! * **Portable** — a plain-Rust unrolled-array fallback that performs
+//!   the *same* operations on the *same* lane layout.
+//!
+//! # Bit-exact backend invariance
+//!
+//! The kernels only use IEEE-754 exactly-rounded operations (add, sub,
+//! mul, div, min, f32↔f64 conversions) and never fused multiply-add, so
+//! each lane of the vector path computes bit-identical results to the
+//! corresponding scalar lane of the portable path. Accumulation is
+//! **lane-blocked**: element `i` of a stream always lands in f64 lane
+//! accumulator `i % LANES`, and the final reduction sums the lanes in
+//! fixed index order. Transcendentals (`exp` in the perplexity row) stay
+//! scalar libm calls shared by both backends. The result of every kernel
+//! is therefore a pure function of its inputs — independent of the chosen
+//! backend and of the caller's thread count — which is what lets the
+//! portable path double as the test oracle for the SIMD path (the same
+//! oracle discipline the tree builds use).
+//!
+//! The backend can be forced with the `BHSNE_SIMD` environment variable
+//! (`portable` forces the fallback; anything else auto-detects) or
+//! overridden in-process via [`set_backend`] (used by the benches to
+//! measure both paths).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Fixed kernel width: 8 f32 lanes (one AVX2 `__m256`).
+pub const LANES: usize = 8;
+
+/// Capacity of a [`SummaryBatch`] (a multiple of [`LANES`], so only the
+/// final flush of a traversal can leave a partial block).
+pub const BATCH: usize = 64;
+
+/// Which kernel implementation executes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Unrolled-array plain Rust (always available; the oracle).
+    Portable,
+    /// `core::arch::x86_64` AVX2 (runtime-detected).
+    Avx2,
+}
+
+impl Backend {
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Portable => "portable",
+            Backend::Avx2 => "avx2",
+        }
+    }
+}
+
+/// 0 = unset, 1 = Portable, 2 = Avx2.
+static OVERRIDE: AtomicU8 = AtomicU8::new(0);
+static DETECTED: AtomicU8 = AtomicU8::new(0);
+
+fn encode(b: Backend) -> u8 {
+    match b {
+        Backend::Portable => 1,
+        Backend::Avx2 => 2,
+    }
+}
+
+fn decode(v: u8) -> Option<Backend> {
+    match v {
+        1 => Some(Backend::Portable),
+        2 => Some(Backend::Avx2),
+        _ => None,
+    }
+}
+
+/// The SIMD backend the hardware supports, or `None` when only the
+/// portable fallback is available (non-x86, or AVX2 missing).
+pub fn detected_simd() -> Option<Backend> {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return Some(Backend::Avx2);
+        }
+    }
+    None
+}
+
+fn detect() -> Backend {
+    if let Ok(v) = std::env::var("BHSNE_SIMD") {
+        if v.eq_ignore_ascii_case("portable") {
+            return Backend::Portable;
+        }
+    }
+    detected_simd().unwrap_or(Backend::Portable)
+}
+
+/// The backend the hot paths use: the [`set_backend`] override if one is
+/// set, else the cached result of runtime detection (honoring
+/// `BHSNE_SIMD=portable`).
+#[inline]
+pub fn backend() -> Backend {
+    if let Some(b) = decode(OVERRIDE.load(Ordering::Relaxed)) {
+        return b;
+    }
+    if let Some(b) = decode(DETECTED.load(Ordering::Relaxed)) {
+        return b;
+    }
+    let b = detect();
+    DETECTED.store(encode(b), Ordering::Relaxed);
+    b
+}
+
+/// Force a backend process-wide (`None` restores detection). Benches use
+/// this to time the scalar and SIMD paths of the same build; because the
+/// kernels are backend-invariant bit for bit, toggling is unobservable to
+/// concurrent computations.
+pub fn set_backend(b: Option<Backend>) {
+    OVERRIDE.store(b.map(encode).unwrap_or(0), Ordering::Relaxed);
+}
+
+/// Backends worth testing on this machine: the portable oracle plus the
+/// detected SIMD backend when present.
+pub fn test_backends() -> Vec<Backend> {
+    let mut v = vec![Backend::Portable];
+    if let Some(b) = detected_simd() {
+        v.push(b);
+    }
+    v
+}
+
+/// Sum the f64 lane accumulators in fixed index order.
+#[inline]
+pub fn reduce_lanes(acc: &[f64; LANES]) -> f64 {
+    let mut s = 0f64;
+    for j in 0..LANES {
+        s += acc[j];
+    }
+    s
+}
+
+/// Sum the f32 lane accumulators in fixed index order.
+#[inline]
+pub fn reduce_lanes_f32(acc: &[f32; LANES]) -> f32 {
+    let mut s = 0f32;
+    for j in 0..LANES {
+        s += acc[j];
+    }
+    s
+}
+
+// ---------------------------------------------------------------------------
+// Barnes-Hut point-cell summary kernel.
+// ---------------------------------------------------------------------------
+
+/// SoA buffer of accepted Barnes-Hut summary interactions for one query
+/// point: per candidate the squared distance, the per-axis difference
+/// `yi − com`, and the (self-exclusion-adjusted) multiplicity. The
+/// traversal pushes candidates and flushes full batches through
+/// [`SummaryBatch::flush`]; lives on the stack or in per-worker scratch.
+pub struct SummaryBatch<const DIM: usize> {
+    pub d2: [f32; BATCH],
+    pub diff: [[f32; BATCH]; DIM],
+    pub mult: [f64; BATCH],
+    pub len: usize,
+}
+
+impl<const DIM: usize> SummaryBatch<DIM> {
+    pub fn new() -> Self {
+        SummaryBatch { d2: [0.0; BATCH], diff: [[0.0; BATCH]; DIM], mult: [0.0; BATCH], len: 0 }
+    }
+
+    #[inline(always)]
+    pub fn is_full(&self) -> bool {
+        self.len == BATCH
+    }
+
+    #[inline(always)]
+    pub fn push(&mut self, d2: f32, diff: &[f32; DIM], mult: f64) {
+        let s = self.len;
+        debug_assert!(s < BATCH);
+        self.d2[s] = d2;
+        for d in 0..DIM {
+            self.diff[d][s] = diff[d];
+        }
+        self.mult[s] = mult;
+        self.len = s + 1;
+    }
+
+    /// Accumulate every buffered candidate into the lane accumulators
+    /// (`z_acc[j] += mult·q`, `f_acc[d][j] += mult·q²·diff[d]` with
+    /// `q = 1/(1+d²)` computed by one f32 divide, lane `j = i % LANES`)
+    /// and reset the buffer.
+    #[inline]
+    pub fn flush(&mut self, be: Backend, z_acc: &mut [f64; LANES], f_acc: &mut [[f64; LANES]; DIM]) {
+        let m = self.len;
+        // `len` is a public field: bound it before the unchecked vector
+        // loads below so a corrupted value can't read past the arrays.
+        assert!(m <= BATCH, "SummaryBatch.len {m} exceeds capacity {BATCH}");
+        self.len = 0;
+        if m == 0 {
+            return;
+        }
+        match be {
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 => unsafe { summary_avx2(self, m, z_acc, f_acc) },
+            _ => summary_portable(self, m, z_acc, f_acc),
+        }
+    }
+}
+
+impl<const DIM: usize> Default for SummaryBatch<DIM> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One candidate into one lane — the shared scalar tail of both backends.
+#[inline(always)]
+fn summary_lane<const DIM: usize>(
+    b: &SummaryBatch<DIM>,
+    i: usize,
+    j: usize,
+    z_acc: &mut [f64; LANES],
+    f_acc: &mut [[f64; LANES]; DIM],
+) {
+    let q = (1.0f32 / (1.0 + b.d2[i])) as f64;
+    let mq = b.mult[i] * q;
+    z_acc[j] += mq;
+    let qq = mq * q;
+    for d in 0..DIM {
+        f_acc[d][j] += qq * b.diff[d][i] as f64;
+    }
+}
+
+fn summary_portable<const DIM: usize>(
+    b: &SummaryBatch<DIM>,
+    m: usize,
+    z_acc: &mut [f64; LANES],
+    f_acc: &mut [[f64; LANES]; DIM],
+) {
+    let blocks = m / LANES;
+    for blk in 0..blocks {
+        let base = blk * LANES;
+        for j in 0..LANES {
+            summary_lane(b, base + j, j, z_acc, f_acc);
+        }
+    }
+    let base = blocks * LANES;
+    for j in 0..m - base {
+        summary_lane(b, base + j, j, z_acc, f_acc);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn summary_avx2<const DIM: usize>(
+    b: &SummaryBatch<DIM>,
+    m: usize,
+    z_acc: &mut [f64; LANES],
+    f_acc: &mut [[f64; LANES]; DIM],
+) {
+    use std::arch::x86_64::*;
+    let one = _mm256_set1_ps(1.0);
+    let mut zlo = _mm256_loadu_pd(z_acc.as_ptr());
+    let mut zhi = _mm256_loadu_pd(z_acc.as_ptr().add(4));
+    let mut flo = [_mm256_setzero_pd(); DIM];
+    let mut fhi = [_mm256_setzero_pd(); DIM];
+    for d in 0..DIM {
+        flo[d] = _mm256_loadu_pd(f_acc[d].as_ptr());
+        fhi[d] = _mm256_loadu_pd(f_acc[d].as_ptr().add(4));
+    }
+    let blocks = m / LANES;
+    for blk in 0..blocks {
+        let base = blk * LANES;
+        let d2v = _mm256_loadu_ps(b.d2.as_ptr().add(base));
+        // q via one f32 divide per lane, exactly like the scalar path.
+        let qv = _mm256_div_ps(one, _mm256_add_ps(one, d2v));
+        let qlo = _mm256_cvtps_pd(_mm256_castps256_ps128(qv));
+        let qhi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(qv));
+        let mlo = _mm256_loadu_pd(b.mult.as_ptr().add(base));
+        let mhi = _mm256_loadu_pd(b.mult.as_ptr().add(base + 4));
+        let mqlo = _mm256_mul_pd(mlo, qlo);
+        let mqhi = _mm256_mul_pd(mhi, qhi);
+        zlo = _mm256_add_pd(zlo, mqlo);
+        zhi = _mm256_add_pd(zhi, mqhi);
+        let qqlo = _mm256_mul_pd(mqlo, qlo);
+        let qqhi = _mm256_mul_pd(mqhi, qhi);
+        for d in 0..DIM {
+            let dv = _mm256_loadu_ps(b.diff[d].as_ptr().add(base));
+            let dlo = _mm256_cvtps_pd(_mm256_castps256_ps128(dv));
+            let dhi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(dv));
+            flo[d] = _mm256_add_pd(flo[d], _mm256_mul_pd(qqlo, dlo));
+            fhi[d] = _mm256_add_pd(fhi[d], _mm256_mul_pd(qqhi, dhi));
+        }
+    }
+    _mm256_storeu_pd(z_acc.as_mut_ptr(), zlo);
+    _mm256_storeu_pd(z_acc.as_mut_ptr().add(4), zhi);
+    for d in 0..DIM {
+        _mm256_storeu_pd(f_acc[d].as_mut_ptr(), flo[d]);
+        _mm256_storeu_pd(f_acc[d].as_mut_ptr().add(4), fhi[d]);
+    }
+    // Tail: identical scalar lane operations to the portable path.
+    let base = blocks * LANES;
+    for j in 0..m - base {
+        summary_lane(b, base + j, j, z_acc, f_acc);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dual-tree range-add kernel.
+// ---------------------------------------------------------------------------
+
+/// Add the per-axis constant `vals` to every `DIM`-row of `acc` (the
+/// dual-tree order-space accumulator slice of one summary interaction).
+/// `acc` must start at a row boundary and have length divisible by `DIM`.
+/// Each element receives exactly one exactly-rounded add, so backends are
+/// trivially bit-identical.
+#[inline]
+pub fn range_add<const DIM: usize>(be: Backend, acc: &mut [f64], vals: &[f64; DIM]) {
+    debug_assert_eq!(acc.len() % DIM, 0);
+    match be {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { range_add_avx2::<DIM>(acc, vals) },
+        _ => range_add_portable::<DIM>(acc, vals),
+    }
+}
+
+fn range_add_portable<const DIM: usize>(acc: &mut [f64], vals: &[f64; DIM]) {
+    for row in acc.chunks_exact_mut(DIM) {
+        for d in 0..DIM {
+            row[d] += vals[d];
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn range_add_avx2<const DIM: usize>(acc: &mut [f64], vals: &[f64; DIM]) {
+    use std::arch::x86_64::*;
+    let n = acc.len();
+    let p = acc.as_mut_ptr();
+    // Fixed-size local copy of the period so the constant indices below
+    // stay in bounds for every DIM monomorphization (the mismatched
+    // branches are dead but still compiled).
+    let mut v3 = [0f64; 3];
+    for d in 0..DIM.min(3) {
+        v3[d] = vals[d];
+    }
+    // The period-DIM pattern tiled across 4-wide f64 registers: DIM = 2
+    // repeats inside one register, DIM = 3 uses the 12-element super-period.
+    if DIM == 2 {
+        let v = _mm256_setr_pd(v3[0], v3[1], v3[0], v3[1]);
+        let n4 = n / 4 * 4;
+        let mut i = 0usize;
+        while i < n4 {
+            _mm256_storeu_pd(p.add(i), _mm256_add_pd(_mm256_loadu_pd(p.add(i)), v));
+            i += 4;
+        }
+        for k in n4..n {
+            acc[k] += v3[k % 2];
+        }
+    } else if DIM == 3 {
+        let p0 = _mm256_setr_pd(v3[0], v3[1], v3[2], v3[0]);
+        let p1 = _mm256_setr_pd(v3[1], v3[2], v3[0], v3[1]);
+        let p2 = _mm256_setr_pd(v3[2], v3[0], v3[1], v3[2]);
+        let n12 = n / 12 * 12;
+        let mut i = 0usize;
+        while i < n12 {
+            _mm256_storeu_pd(p.add(i), _mm256_add_pd(_mm256_loadu_pd(p.add(i)), p0));
+            _mm256_storeu_pd(p.add(i + 4), _mm256_add_pd(_mm256_loadu_pd(p.add(i + 4)), p1));
+            _mm256_storeu_pd(p.add(i + 8), _mm256_add_pd(_mm256_loadu_pd(p.add(i + 8)), p2));
+            i += 12;
+        }
+        for k in n12..n {
+            acc[k] += v3[k % 3];
+        }
+    } else {
+        range_add_portable::<DIM>(acc, vals);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Attractive-force CSR row kernel.
+// ---------------------------------------------------------------------------
+
+/// One gathered block of `m ≤ LANES` CSR neighbors of a row: per lane the
+/// per-axis difference `yi − yj` and `p_ij`; accumulates
+/// `f_acc[d][j] += w·diff[d]` with `w = p_ij / (1 + d²)` (d² summed in
+/// axis order in f32, the divide in f64 — exactly the scalar recipe).
+#[inline]
+pub fn attractive_block<const DIM: usize>(
+    be: Backend,
+    m: usize,
+    pij: &[f32; LANES],
+    diff: &[[f32; LANES]; DIM],
+    f_acc: &mut [[f64; LANES]; DIM],
+) {
+    if m == LANES {
+        match be {
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 => unsafe { attractive_avx2(pij, diff, f_acc) },
+            _ => attractive_portable(m, pij, diff, f_acc),
+        }
+    } else {
+        attractive_portable(m, pij, diff, f_acc);
+    }
+}
+
+fn attractive_portable<const DIM: usize>(
+    m: usize,
+    pij: &[f32; LANES],
+    diff: &[[f32; LANES]; DIM],
+    f_acc: &mut [[f64; LANES]; DIM],
+) {
+    for j in 0..m {
+        let mut d2 = 0f32;
+        for d in 0..DIM {
+            d2 += diff[d][j] * diff[d][j];
+        }
+        let w = pij[j] as f64 / (1.0 + d2 as f64);
+        for d in 0..DIM {
+            f_acc[d][j] += w * diff[d][j] as f64;
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn attractive_avx2<const DIM: usize>(
+    pij: &[f32; LANES],
+    diff: &[[f32; LANES]; DIM],
+    f_acc: &mut [[f64; LANES]; DIM],
+) {
+    use std::arch::x86_64::*;
+    let mut d2v = _mm256_setzero_ps();
+    for d in 0..DIM {
+        let dv = _mm256_loadu_ps(diff[d].as_ptr());
+        d2v = _mm256_add_ps(d2v, _mm256_mul_ps(dv, dv));
+    }
+    let one = _mm256_set1_pd(1.0);
+    let d2lo = _mm256_cvtps_pd(_mm256_castps256_ps128(d2v));
+    let d2hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(d2v));
+    let pv = _mm256_loadu_ps(pij.as_ptr());
+    let plo = _mm256_cvtps_pd(_mm256_castps256_ps128(pv));
+    let phi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(pv));
+    let wlo = _mm256_div_pd(plo, _mm256_add_pd(one, d2lo));
+    let whi = _mm256_div_pd(phi, _mm256_add_pd(one, d2hi));
+    for d in 0..DIM {
+        let dv = _mm256_loadu_ps(diff[d].as_ptr());
+        let dlo = _mm256_cvtps_pd(_mm256_castps256_ps128(dv));
+        let dhi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(dv));
+        let alo = _mm256_add_pd(_mm256_loadu_pd(f_acc[d].as_ptr()), _mm256_mul_pd(wlo, dlo));
+        let ahi = _mm256_add_pd(_mm256_loadu_pd(f_acc[d].as_ptr().add(4)), _mm256_mul_pd(whi, dhi));
+        _mm256_storeu_pd(f_acc[d].as_mut_ptr(), alo);
+        _mm256_storeu_pd(f_acc[d].as_mut_ptr().add(4), ahi);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Perplexity row kernels.
+// ---------------------------------------------------------------------------
+
+/// Lane-blocked minimum of a squared-distance row (no NaN, no −0.0 by
+/// construction — squares — so vector `min` and `f32::min` agree bitwise).
+#[inline]
+pub fn row_min(be: Backend, d2: &[f32]) -> f32 {
+    match be {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { row_min_avx2(d2) },
+        _ => row_min_portable(d2),
+    }
+}
+
+fn row_min_portable(d2: &[f32]) -> f32 {
+    let mut lanes = [f32::INFINITY; LANES];
+    for (i, &d) in d2.iter().enumerate() {
+        let j = i % LANES;
+        lanes[j] = lanes[j].min(d);
+    }
+    let mut m = lanes[0];
+    for j in 1..LANES {
+        m = m.min(lanes[j]);
+    }
+    m
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn row_min_avx2(d2: &[f32]) -> f32 {
+    use std::arch::x86_64::*;
+    let mut lanes = [f32::INFINITY; LANES];
+    let blocks = d2.len() / LANES;
+    if blocks > 0 {
+        let mut mv = _mm256_loadu_ps(lanes.as_ptr());
+        for blk in 0..blocks {
+            mv = _mm256_min_ps(mv, _mm256_loadu_ps(d2.as_ptr().add(blk * LANES)));
+        }
+        _mm256_storeu_ps(lanes.as_mut_ptr(), mv);
+    }
+    for i in blocks * LANES..d2.len() {
+        let j = i % LANES;
+        lanes[j] = lanes[j].min(d2[i]);
+    }
+    let mut m = lanes[0];
+    for j in 1..LANES {
+        m = m.min(lanes[j]);
+    }
+    m
+}
+
+/// Gaussian row weights `w[i] = exp(neg_beta · (d2[i] − d2min))` (the
+/// `exp` is the scalar libm call on both backends) plus the lane-blocked
+/// sums `Σ w` and `Σ w·d²` reduced in fixed order. Returns `(sum, dot)`.
+#[inline]
+pub fn entropy_weights(be: Backend, d2: &[f32], neg_beta: f64, d2min: f64, w: &mut [f64]) -> (f64, f64) {
+    // Hard assert: the AVX2 path does unchecked loads sized by `d2`.
+    assert_eq!(d2.len(), w.len());
+    match be {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { entropy_weights_avx2(d2, neg_beta, d2min, w) },
+        _ => entropy_weights_portable(d2, neg_beta, d2min, w),
+    }
+}
+
+fn entropy_weights_portable(d2: &[f32], neg_beta: f64, d2min: f64, w: &mut [f64]) -> (f64, f64) {
+    let mut sacc = [0f64; LANES];
+    let mut dacc = [0f64; LANES];
+    for (i, &d) in d2.iter().enumerate() {
+        let j = i % LANES;
+        let df = d as f64;
+        let wv = (neg_beta * (df - d2min)).exp();
+        w[i] = wv;
+        sacc[j] += wv;
+        dacc[j] += wv * df;
+    }
+    (reduce_lanes(&sacc), reduce_lanes(&dacc))
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn entropy_weights_avx2(d2: &[f32], neg_beta: f64, d2min: f64, w: &mut [f64]) -> (f64, f64) {
+    use std::arch::x86_64::*;
+    let mut sacc = [0f64; LANES];
+    let mut dacc = [0f64; LANES];
+    let nb = _mm256_set1_pd(neg_beta);
+    let mn = _mm256_set1_pd(d2min);
+    let mut slo = _mm256_setzero_pd();
+    let mut shi = _mm256_setzero_pd();
+    let mut dlo = _mm256_setzero_pd();
+    let mut dhi = _mm256_setzero_pd();
+    let blocks = d2.len() / LANES;
+    for blk in 0..blocks {
+        let base = blk * LANES;
+        let dv = _mm256_loadu_ps(d2.as_ptr().add(base));
+        let dplo = _mm256_cvtps_pd(_mm256_castps256_ps128(dv));
+        let dphi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(dv));
+        let tlo = _mm256_mul_pd(nb, _mm256_sub_pd(dplo, mn));
+        let thi = _mm256_mul_pd(nb, _mm256_sub_pd(dphi, mn));
+        let mut t = [0f64; LANES];
+        _mm256_storeu_pd(t.as_mut_ptr(), tlo);
+        _mm256_storeu_pd(t.as_mut_ptr().add(4), thi);
+        // exp stays the shared scalar libm call.
+        for j in 0..LANES {
+            w[base + j] = t[j].exp();
+        }
+        let wlo = _mm256_loadu_pd(w.as_ptr().add(base));
+        let whi = _mm256_loadu_pd(w.as_ptr().add(base + 4));
+        slo = _mm256_add_pd(slo, wlo);
+        shi = _mm256_add_pd(shi, whi);
+        dlo = _mm256_add_pd(dlo, _mm256_mul_pd(wlo, dplo));
+        dhi = _mm256_add_pd(dhi, _mm256_mul_pd(whi, dphi));
+    }
+    _mm256_storeu_pd(sacc.as_mut_ptr(), slo);
+    _mm256_storeu_pd(sacc.as_mut_ptr().add(4), shi);
+    _mm256_storeu_pd(dacc.as_mut_ptr(), dlo);
+    _mm256_storeu_pd(dacc.as_mut_ptr().add(4), dhi);
+    for i in blocks * LANES..d2.len() {
+        let j = i % LANES;
+        let df = d2[i] as f64;
+        let wv = (neg_beta * (df - d2min)).exp();
+        w[i] = wv;
+        sacc[j] += wv;
+        dacc[j] += wv * df;
+    }
+    (reduce_lanes(&sacc), reduce_lanes(&dacc))
+}
+
+/// `p_out[i] = (w[i] / sum) as f32` — one exactly-rounded divide and one
+/// exactly-rounded narrowing per element on either backend.
+#[inline]
+pub fn normalize_weights(be: Backend, w: &[f64], sum: f64, p_out: &mut [f32]) {
+    // Hard assert: the AVX2 path does unchecked stores sized by `w`.
+    assert_eq!(w.len(), p_out.len());
+    match be {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { normalize_weights_avx2(w, sum, p_out) },
+        _ => normalize_weights_portable(w, sum, p_out),
+    }
+}
+
+fn normalize_weights_portable(w: &[f64], sum: f64, p_out: &mut [f32]) {
+    for i in 0..w.len() {
+        p_out[i] = (w[i] / sum) as f32;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn normalize_weights_avx2(w: &[f64], sum: f64, p_out: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let sv = _mm256_set1_pd(sum);
+    let n4 = w.len() / 4 * 4;
+    let mut i = 0usize;
+    while i < n4 {
+        let q = _mm256_div_pd(_mm256_loadu_pd(w.as_ptr().add(i)), sv);
+        _mm_storeu_ps(p_out.as_mut_ptr().add(i), _mm256_cvtpd_ps(q));
+        i += 4;
+    }
+    for k in n4..w.len() {
+        p_out[k] = (w[k] / sum) as f32;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Squared-Euclidean metric kernel.
+// ---------------------------------------------------------------------------
+
+/// Lane-blocked squared Euclidean distance between two equal-length rows:
+/// element `i` contributes `(a[i]−b[i])²` to f32 lane `i % LANES`, lanes
+/// reduced in fixed index order. Shared by the vp-tree build partitions
+/// and the batched kNN queries (`Euclidean::dist` is its square root).
+#[inline]
+pub fn sq_euclidean(be: Backend, a: &[f32], b: &[f32]) -> f32 {
+    // Hard assert: the AVX2 path does unchecked loads sized by `a`.
+    assert_eq!(a.len(), b.len());
+    match be {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { sq_euclidean_avx2(a, b) },
+        _ => sq_euclidean_portable(a, b),
+    }
+}
+
+fn sq_euclidean_portable(a: &[f32], b: &[f32]) -> f32 {
+    let mut lanes = [0f32; LANES];
+    let n = a.len();
+    let blocks = n / LANES;
+    for blk in 0..blocks {
+        let base = blk * LANES;
+        for j in 0..LANES {
+            let d = a[base + j] - b[base + j];
+            lanes[j] += d * d;
+        }
+    }
+    for i in blocks * LANES..n {
+        let j = i % LANES;
+        let d = a[i] - b[i];
+        lanes[j] += d * d;
+    }
+    reduce_lanes_f32(&lanes)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn sq_euclidean_avx2(a: &[f32], b: &[f32]) -> f32 {
+    use std::arch::x86_64::*;
+    let mut lanes = [0f32; LANES];
+    let n = a.len();
+    let blocks = n / LANES;
+    if blocks > 0 {
+        let mut acc = _mm256_setzero_ps();
+        for blk in 0..blocks {
+            let base = blk * LANES;
+            let av = _mm256_loadu_ps(a.as_ptr().add(base));
+            let bv = _mm256_loadu_ps(b.as_ptr().add(base));
+            let dv = _mm256_sub_ps(av, bv);
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(dv, dv));
+        }
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    }
+    for i in blocks * LANES..n {
+        let j = i % LANES;
+        let d = a[i] - b[i];
+        lanes[j] += d * d;
+    }
+    reduce_lanes_f32(&lanes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::seeded(seed);
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn sq_euclidean_matches_naive_and_backends_agree() {
+        for n in (0usize..=17).chain([50, 128, 257]) {
+            let a = rand_vec(n, 1 + n as u64);
+            let b = rand_vec(n, 100 + n as u64);
+            let want: f64 = a.iter().zip(&b).map(|(&x, &y)| ((x - y) as f64).powi(2)).sum();
+            let got = sq_euclidean(Backend::Portable, &a, &b);
+            assert!((got as f64 - want).abs() <= 1e-4 * want.max(1.0), "n={n}: {got} vs {want}");
+            for be in test_backends() {
+                assert_eq!(sq_euclidean(be, &a, &b).to_bits(), got.to_bits(), "n={n} {:?}", be);
+            }
+        }
+    }
+
+    #[test]
+    fn summary_batch_backends_bit_identical() {
+        let mut rng = Pcg32::seeded(7);
+        for m in (0usize..=17).chain([31, 64]) {
+            let mut batch = SummaryBatch::<3>::new();
+            for _ in 0..m {
+                let diff = [rng.normal() as f32, rng.normal() as f32, rng.normal() as f32];
+                let d2 = diff.iter().map(|d| d * d).sum::<f32>();
+                batch.push(d2, &diff, 1.0 + rng.below(40) as f64);
+            }
+            let snapshot = (batch.d2, batch.diff, batch.mult, batch.len);
+            let mut want_z = [0f64; LANES];
+            let mut want_f = [[0f64; LANES]; 3];
+            batch.flush(Backend::Portable, &mut want_z, &mut want_f);
+            for be in test_backends() {
+                let mut b2 = SummaryBatch::<3>::new();
+                (b2.d2, b2.diff, b2.mult, b2.len) = snapshot;
+                let mut z = [0f64; LANES];
+                let mut f = [[0f64; LANES]; 3];
+                b2.flush(be, &mut z, &mut f);
+                assert_eq!(z, want_z, "m={m} {:?}", be);
+                assert_eq!(f, want_f, "m={m} {:?}", be);
+                assert_eq!(b2.len, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn summary_batch_matches_sequential_math() {
+        // Lane-blocked reduction vs a plain sequential sum: equal to f64
+        // round-off (the values are identical per candidate).
+        let mut rng = Pcg32::seeded(8);
+        let mut batch = SummaryBatch::<2>::new();
+        let mut seq_z = 0f64;
+        let mut seq_f = [0f64; 2];
+        for _ in 0..50 {
+            let diff = [rng.normal() as f32, rng.normal() as f32];
+            let d2 = diff[0] * diff[0] + diff[1] * diff[1];
+            let mult = 1.0 + rng.below(5) as f64;
+            batch.push(d2, &diff, mult);
+            let q = (1.0f32 / (1.0 + d2)) as f64;
+            seq_z += mult * q;
+            for d in 0..2 {
+                seq_f[d] += mult * q * q * diff[d] as f64;
+            }
+        }
+        let mut z = [0f64; LANES];
+        let mut f = [[0f64; LANES]; 2];
+        batch.flush(Backend::Portable, &mut z, &mut f);
+        assert!((reduce_lanes(&z) - seq_z).abs() < 1e-12 * seq_z.abs().max(1.0));
+        for d in 0..2 {
+            assert!((reduce_lanes(&f[d]) - seq_f[d]).abs() < 1e-12 * seq_f[d].abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn range_add_backends_bit_identical() {
+        let mut rng = Pcg32::seeded(9);
+        for len in [0usize, 1, 2, 3, 5, 11, 12, 13, 24, 100] {
+            let base: Vec<f64> = (0..len * 6).map(|_| rng.normal()).collect();
+            // DIM = 2 over the first 2·len slots, DIM = 3 over 3·len.
+            let v2 = [rng.normal(), rng.normal()];
+            let v3 = [rng.normal(), rng.normal(), rng.normal()];
+            let mut want2 = base[..len * 2].to_vec();
+            range_add::<2>(Backend::Portable, &mut want2, &v2);
+            let mut want3 = base[..len * 3].to_vec();
+            range_add::<3>(Backend::Portable, &mut want3, &v3);
+            for be in test_backends() {
+                let mut got2 = base[..len * 2].to_vec();
+                range_add::<2>(be, &mut got2, &v2);
+                assert_eq!(got2, want2, "len={len} {:?}", be);
+                let mut got3 = base[..len * 3].to_vec();
+                range_add::<3>(be, &mut got3, &v3);
+                assert_eq!(got3, want3, "len={len} {:?}", be);
+            }
+        }
+    }
+
+    #[test]
+    fn attractive_block_backends_bit_identical() {
+        let mut rng = Pcg32::seeded(10);
+        for m in 1..=LANES {
+            let mut pij = [0f32; LANES];
+            let mut diff = [[0f32; LANES]; 3];
+            for j in 0..m {
+                pij[j] = rng.uniform_f32();
+                for d in 0..3 {
+                    diff[d][j] = rng.normal() as f32;
+                }
+            }
+            let mut want = [[0f64; LANES]; 3];
+            attractive_portable(m, &pij, &diff, &mut want);
+            for be in test_backends() {
+                let mut got = [[0f64; LANES]; 3];
+                attractive_block::<3>(be, m, &pij, &diff, &mut got);
+                assert_eq!(got, want, "m={m} {:?}", be);
+            }
+        }
+    }
+
+    #[test]
+    fn perplexity_kernels_backends_bit_identical() {
+        let mut rng = Pcg32::seeded(11);
+        for k in (1usize..=17).chain([30, 90]) {
+            let d2: Vec<f32> = (0..k).map(|_| rng.uniform_range(0.0, 30.0) as f32).collect();
+            let beta = rng.uniform_range(0.01, 4.0);
+            let want_min = row_min(Backend::Portable, &d2);
+            let mut want_w = vec![0f64; k];
+            let (ws, wd) = entropy_weights(Backend::Portable, &d2, -beta, want_min as f64, &mut want_w);
+            let mut want_p = vec![0f32; k];
+            normalize_weights(Backend::Portable, &want_w, ws, &mut want_p);
+            for be in test_backends() {
+                assert_eq!(row_min(be, &d2).to_bits(), want_min.to_bits(), "k={k} {:?}", be);
+                let mut w = vec![0f64; k];
+                let (s, d) = entropy_weights(be, &d2, -beta, want_min as f64, &mut w);
+                assert_eq!(w, want_w, "k={k} {:?}", be);
+                assert_eq!(s.to_bits(), ws.to_bits(), "k={k} {:?}", be);
+                assert_eq!(d.to_bits(), wd.to_bits(), "k={k} {:?}", be);
+                let mut p = vec![0f32; k];
+                normalize_weights(be, &w, s, &mut p);
+                assert_eq!(p, want_p, "k={k} {:?}", be);
+            }
+        }
+    }
+
+    #[test]
+    fn backend_override_round_trips() {
+        let prev = backend();
+        set_backend(Some(Backend::Portable));
+        assert_eq!(backend(), Backend::Portable);
+        set_backend(None);
+        assert_eq!(backend(), prev);
+    }
+}

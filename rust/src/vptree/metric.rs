@@ -6,6 +6,8 @@
 //! angular (cosine) metric for relational-embedding use cases mentioned in
 //! the paper's future work.
 
+use crate::util::simd;
+
 /// A metric over f32 rows. Must satisfy the triangle inequality for
 /// vp-tree pruning to be exact.
 pub trait Metric {
@@ -20,31 +22,11 @@ impl Metric for Euclidean {
     #[inline]
     fn dist(&self, a: &[f32], b: &[f32]) -> f32 {
         debug_assert_eq!(a.len(), b.len());
-        // 4-way unrolled accumulation: the compiler vectorizes this loop
-        // (no sqrt inside), and separate accumulators break the dependency
-        // chain. This is the single hottest scalar loop in kNN search.
-        let n = a.len();
-        let mut s0 = 0f32;
-        let mut s1 = 0f32;
-        let mut s2 = 0f32;
-        let mut s3 = 0f32;
-        let chunks = n / 4;
-        for c in 0..chunks {
-            let i = c * 4;
-            let d0 = a[i] - b[i];
-            let d1 = a[i + 1] - b[i + 1];
-            let d2 = a[i + 2] - b[i + 2];
-            let d3 = a[i + 3] - b[i + 3];
-            s0 += d0 * d0;
-            s1 += d1 * d1;
-            s2 += d2 * d2;
-            s3 += d3 * d3;
-        }
-        for i in chunks * 4..n {
-            let d = a[i] - b[i];
-            s0 += d * d;
-        }
-        (s0 + s1 + s2 + s3).sqrt()
+        // The lane-blocked squared-Euclidean kernel (runtime-dispatched
+        // AVX2 or the bit-identical portable fallback) shared by the
+        // vp-tree build partitions and the batched kNN queries. This is
+        // the single hottest scalar loop in kNN search.
+        simd::sq_euclidean(simd::backend(), a, b).sqrt()
     }
 }
 

@@ -238,7 +238,8 @@ fn prop_dualtree_z_tracks_exact() {
         let n = p.n;
         let mut exact = vec![0f64; n * 2];
         let z_exact = gradient::repulsive_exact::<2>(&pool, &p.data, n, &mut exact);
-        let tree = BhTree::<2>::build(&p.data, n);
+        let mut tree = BhTree::<2>::build(&p.data, n);
+        tree.ensure_order_ranges(None);
         let mut forces = vec![0f64; n * 2];
         let z_dt = tree.repulsion_dual(0.2, &mut forces);
         if (z_dt - z_exact).abs() > 0.08 * z_exact {
@@ -293,7 +294,8 @@ fn prop_parallel_dualtree_matches_serial_walk() {
     let gen = PointCloud { dim: 2, min_n: 4500, max_n: 9000 };
     check(111, 4, &gen, |p: &Points| {
         let n = p.n;
-        let tree = BhTree::<2>::build_parallel(&pool, &p.data, n, CellSizeMode::Diagonal);
+        let mut tree = BhTree::<2>::build_parallel(&pool, &p.data, n, CellSizeMode::Diagonal);
+        tree.ensure_order_ranges(Some(&pool));
         let mut serial = vec![0f64; n * 2];
         let z_s = tree.repulsion_dual(0.25, &mut serial);
         let mut ws = DualTreeScratch::new();

@@ -1,0 +1,253 @@
+//! SIMD-vs-scalar oracle properties: every kernel-backed hot path must
+//! produce **bit-identical** results on the runtime-detected SIMD backend
+//! and the portable lane-blocked scalar fallback (which doubles as the
+//! oracle). Covers the point-cell summary, the dual-tree traversal, the
+//! CSR attractive pass, the perplexity row solve, and the vp-tree metric,
+//! across DIM = 2/3, θ ∈ {0, 0.5}, duplicate-heavy clouds, and sizes
+//! around the lane-width remainders (n = 1..17).
+//!
+//! On machines without AVX2 `test_backends()` only contains the portable
+//! backend and these tests degenerate to self-comparisons — the CI matrix
+//! leg with `BHSNE_SIMD=portable` covers that configuration explicitly.
+
+use bhsne::sne::gradient;
+use bhsne::sne::perplexity;
+use bhsne::sne::sparse::Csr;
+use bhsne::spatial::{BhTree, CellSizeMode, DualTreeScratch};
+use bhsne::util::simd::{self, Backend, SummaryBatch};
+use bhsne::util::{Pcg32, ThreadPool};
+use bhsne::vptree::VpTree;
+
+/// Clouds that stress the kernels: uniform, duplicate-heavy (collapsed
+/// leaves and d² = 0 lanes), and a coincident clump.
+fn clouds(n: usize, dim: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Pcg32::seeded(seed);
+    let uniform: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32 * 3.0).collect();
+    let mut dupes = Vec::with_capacity(n * dim);
+    for i in 0..n {
+        if i % 2 == 1 && i > 0 {
+            // Duplicate the previous point.
+            let s = (i - 1) * dim;
+            let prev: Vec<f32> = dupes[s..s + dim].to_vec();
+            dupes.extend_from_slice(&prev);
+        } else {
+            for _ in 0..dim {
+                dupes.push(rng.normal() as f32);
+            }
+        }
+    }
+    let mut clump = vec![1.5f32; n * dim];
+    if n > 1 {
+        for d in 0..dim {
+            clump[(n - 1) * dim + d] = -4.0;
+        }
+    }
+    vec![uniform, dupes, clump]
+}
+
+#[test]
+fn point_cell_simd_matches_scalar_bitwise() {
+    for n in (1usize..=17).chain([300, 1000]) {
+        for (ci, y) in clouds(n, 2, 1 + n as u64).into_iter().enumerate() {
+            let tree = BhTree::<2>::build(&y, n);
+            for theta in [0.0f32, 0.5] {
+                let mut batch = SummaryBatch::new();
+                for i in 0..n.min(64) {
+                    let yi = [y[i * 2], y[i * 2 + 1]];
+                    let mut fp = [0f64; 2];
+                    let pb = Backend::Portable;
+                    let zp = tree.repulsion_with(pb, i as u32, &yi, theta, &mut fp, &mut batch);
+                    for be in simd::test_backends() {
+                        let mut f = [0f64; 2];
+                        let z = tree.repulsion_with(be, i as u32, &yi, theta, &mut f, &mut batch);
+                        assert_eq!(z.to_bits(), zp.to_bits(), "n={n} cloud={ci} theta={theta} i={i}");
+                        assert_eq!(f, fp, "n={n} cloud={ci} theta={theta} i={i}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn point_cell_simd_matches_scalar_bitwise_octree() {
+    for n in (1usize..=17).chain([500]) {
+        for (ci, y) in clouds(n, 3, 100 + n as u64).into_iter().enumerate() {
+            let tree = BhTree::<3>::build(&y, n);
+            for theta in [0.0f32, 0.5] {
+                let mut batch = SummaryBatch::new();
+                for i in 0..n.min(40) {
+                    let yi = [y[i * 3], y[i * 3 + 1], y[i * 3 + 2]];
+                    let mut fp = [0f64; 3];
+                    let pb = Backend::Portable;
+                    let zp = tree.repulsion_with(pb, i as u32, &yi, theta, &mut fp, &mut batch);
+                    for be in simd::test_backends() {
+                        let mut f = [0f64; 3];
+                        let z = tree.repulsion_with(be, i as u32, &yi, theta, &mut f, &mut batch);
+                        assert_eq!(z.to_bits(), zp.to_bits(), "n={n} cloud={ci} theta={theta} i={i}");
+                        assert_eq!(f, fp, "n={n} cloud={ci} theta={theta} i={i}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Run `f` once per test backend with the process-wide backend forced,
+/// returning the collected results; restores auto-detection afterwards.
+/// A mutex serializes every test that toggles the global backend — if a
+/// concurrent test could flip it mid-run, a real SIMD-vs-scalar
+/// divergence might compare a mixed run against itself and pass flakily.
+fn with_each_backend<R>(mut f: impl FnMut() -> R) -> Vec<R> {
+    use std::sync::Mutex;
+    static TOGGLE: Mutex<()> = Mutex::new(());
+    let _guard = TOGGLE.lock().unwrap_or_else(|e| e.into_inner());
+    let mut out = Vec::new();
+    for be in simd::test_backends() {
+        simd::set_backend(Some(be));
+        out.push(f());
+    }
+    simd::set_backend(None);
+    out
+}
+
+#[test]
+fn dual_tree_simd_matches_scalar_bitwise() {
+    let pool = ThreadPool::new(4);
+    for n in [2usize, 7, 16, 17, 300, 5000] {
+        for (ci, y) in clouds(n, 2, 7 + n as u64).into_iter().enumerate() {
+            let results = with_each_backend(|| {
+                let mut tree = BhTree::<2>::build(&y, n);
+                tree.ensure_order_ranges(None);
+                let mut serial = vec![0f64; n * 2];
+                let zs = tree.repulsion_dual(0.3, &mut serial);
+                let mut ws = DualTreeScratch::new();
+                let mut par = vec![0f64; n * 2];
+                let zp = tree.repulsion_dual_parallel(&pool, 0.3, &mut par, &mut ws);
+                (zs, serial, zp, par)
+            });
+            for r in &results[1..] {
+                assert_eq!(r.0.to_bits(), results[0].0.to_bits(), "n={n} cloud={ci} serial z");
+                assert_eq!(r.1, results[0].1, "n={n} cloud={ci} serial forces");
+                assert_eq!(r.2.to_bits(), results[0].2.to_bits(), "n={n} cloud={ci} parallel z");
+                assert_eq!(r.3, results[0].3, "n={n} cloud={ci} parallel forces");
+            }
+        }
+    }
+}
+
+#[test]
+fn attractive_simd_matches_scalar_bitwise() {
+    let pool = ThreadPool::new(2);
+    let mut rng = Pcg32::seeded(21);
+    for n in (1usize..=17).chain([200]) {
+        // Row lengths straddle the lane width: k in {0, 1, .., n-1}.
+        let mut rows: Vec<Vec<(u32, f32)>> = vec![Vec::new(); n];
+        for i in 0..n {
+            let k = rng.below_usize(n.min(17));
+            for _ in 0..k {
+                let j = rng.below_usize(n);
+                if j != i {
+                    rows[i].push((j as u32, rng.uniform_f32()));
+                }
+            }
+        }
+        let p = Csr::from_rows(n, rows);
+        let y: Vec<f32> = (0..n * 2).map(|_| rng.normal() as f32).collect();
+        let results = with_each_backend(|| {
+            let mut out = vec![0f64; n * 2];
+            gradient::attractive_forces::<2>(&pool, &p, &y, &mut out);
+            out
+        });
+        for r in &results[1..] {
+            assert_eq!(r, &results[0], "n={n}");
+        }
+    }
+}
+
+#[test]
+fn perplexity_simd_matches_scalar_bitwise() {
+    let mut rng = Pcg32::seeded(23);
+    for k in (1usize..=17).chain([30, 90]) {
+        let mut d2: Vec<f32> = (0..k).map(|_| rng.uniform_range(0.0, 40.0) as f32).collect();
+        if k > 3 {
+            d2[1] = d2[0]; // duplicate distances
+            d2[2] = 0.0;
+        }
+        let perp = (k as f64 * 0.5).max(1.5).min(k as f64);
+        let results = with_each_backend(|| {
+            let mut p = vec![0f32; k];
+            let mut scratch = Vec::new();
+            let (beta, ok) = perplexity::solve_row(&d2, perp, 1e-5, &mut p, &mut scratch);
+            (beta, ok, p)
+        });
+        for r in &results[1..] {
+            assert_eq!(r.0.to_bits(), results[0].0.to_bits(), "k={k} beta");
+            assert_eq!(r.1, results[0].1, "k={k} ok");
+            assert_eq!(r.2, results[0].2, "k={k} p row");
+        }
+    }
+}
+
+#[test]
+fn metric_simd_matches_scalar_bitwise_through_knn() {
+    let pool = ThreadPool::new(2);
+    let mut rng = Pcg32::seeded(29);
+    for (n, dim) in [(40usize, 1usize), (60, 7), (60, 8), (60, 9), (120, 17), (150, 50)] {
+        let mut x: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32).collect();
+        // A few duplicate rows to force distance ties.
+        for d in 0..dim {
+            x[dim + d] = x[d];
+        }
+        let k = 5.min(n - 1);
+        let results = with_each_backend(|| {
+            let tree = VpTree::build(&x, n, dim, 31);
+            tree.knn_all(&pool, k)
+        });
+        for r in &results[1..] {
+            assert_eq!(r.0, results[0].0, "n={n} dim={dim} indices");
+            assert_eq!(r.1, results[0].1, "n={n} dim={dim} distances");
+        }
+    }
+}
+
+#[test]
+fn full_bh_gradient_simd_matches_scalar_bitwise() {
+    let pool = ThreadPool::new(4);
+    let mut rng = Pcg32::seeded(37);
+    let n = 600;
+    let y: Vec<f32> = (0..n * 2).map(|_| rng.normal() as f32).collect();
+    let mut rows: Vec<Vec<(u32, f32)>> = vec![Vec::new(); n];
+    for i in 0..n {
+        for _ in 0..5 {
+            let j = rng.below_usize(n);
+            if j != i {
+                let v = rng.uniform_f32();
+                rows[i].push((j as u32, v));
+                rows[j].push((i as u32, v));
+            }
+        }
+    }
+    let p = Csr::from_rows(n, rows);
+    let results = with_each_backend(|| {
+        let mut grad = vec![0f64; n * 2];
+        let mut a = vec![0f64; n * 2];
+        let mut r = vec![0f64; n * 2];
+        let z = gradient::gradient::<2>(
+            &pool,
+            &p,
+            &y,
+            n,
+            gradient::RepulsionMethod::BarnesHut { theta: 0.5 },
+            CellSizeMode::Diagonal,
+            &mut grad,
+            &mut a,
+            &mut r,
+        );
+        (z, grad)
+    });
+    for r in &results[1..] {
+        assert_eq!(r.0.to_bits(), results[0].0.to_bits(), "Z");
+        assert_eq!(r.1, results[0].1, "gradient");
+    }
+}
