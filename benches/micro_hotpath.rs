@@ -3,8 +3,10 @@
 //! repulsion traversal at several θ, the combined build+traverse
 //! iteration cost, attractive forces (CPU vs XLA artifact), the §4.1
 //! input-similarity stage (vp-tree build serial vs pool-parallel,
-//! batched all-kNN, perplexity solve, streaming symmetrize), and the
-//! dense exact repulsion.
+//! batched all-kNN, perplexity solve, streaming symmetrize), the dense
+//! exact repulsion, and the model-serving transform (fit once, then
+//! place held-out batches into the frozen map — emits
+//! `transform_ns_per_point`).
 //!
 //! Besides the human-readable table, the run always writes
 //! `BENCH_micro_hotpath.json` with normalized ns/point figures
@@ -16,9 +18,11 @@
 //!
 //! Run: `cargo bench --bench micro_hotpath [-- --quick --json]`
 
+use bhsne::data::synthetic::{gaussian_mixture, SyntheticSpec};
 use bhsne::runtime::{Runtime, SneEngine};
 use bhsne::sne::gradient;
 use bhsne::sne::sparse::Csr;
+use bhsne::sne::{TransformOptions, TsneConfig, TsneRunner};
 use bhsne::spatial::{CellSizeMode, DualTreeScratch, QuadTree};
 use bhsne::util::bench::{time_reps, BenchOpts, Table};
 use bhsne::util::simd::{self, Backend};
@@ -279,6 +283,36 @@ fn main() {
     });
     push("symmetrize_streaming", (symmetrize, sy10, sy90));
 
+    // ---- Model serving: frozen-reference out-of-sample transform. One
+    // short fit builds the model, then held-out batches are placed into
+    // the frozen map (kNN attach + perplexity row + barycenter init +
+    // frozen-reference gradient loop) — the serving hot path. ----
+    let n_fit = opts.pick(4_000usize, 1_200);
+    let n_query = opts.pick(1_000usize, 300);
+    let serve_data = gaussian_mixture(&SyntheticSpec {
+        n: n_fit + n_query,
+        dim: 20,
+        classes: 5,
+        seed: 13,
+        ..Default::default()
+    });
+    let (x_fit, x_query) = serve_data.x.split_at(n_fit * serve_data.dim);
+    let fit_cfg = TsneConfig {
+        iters: opts.pick(150usize, 60),
+        exaggeration_iters: 40,
+        cost_every: 0,
+        seed: 5,
+        ..Default::default()
+    };
+    let mut runner = TsneRunner::new(fit_cfg);
+    let model = runner.fit(x_fit, serve_data.dim).expect("bench fit");
+    let topts = TransformOptions::default();
+    let (transform_secs, tr10, tr90) = time_reps(0, reps.min(3), || {
+        let r = model.transform_with(&pool, x_query, serve_data.dim, &topts).expect("transform");
+        std::hint::black_box(r.y[0]);
+    });
+    push("model_transform", (transform_secs, tr10, tr90));
+
     table.emit(&opts);
     println!(
         "(tree refit under drift: {refit_adaptive} adaptive, {refit_fallback} full re-sorts)"
@@ -309,6 +343,7 @@ fn main() {
             "\"dual_tree_simd_ns_per_point\":{:.2},",
             "\"metric_scalar_ns_per_point\":{:.2},",
             "\"metric_simd_ns_per_point\":{:.2},",
+            "\"transform_ns_per_point\":{:.2},",
             "\"iter_build_plus_eval_ms\":{:.4},",
             "\"input_stage\":{{\"n\":{},",
             "\"vp_build_serial_ns_per_point\":{:.2},",
@@ -332,6 +367,7 @@ fn main() {
         per_point(dual_by_backend[1]),
         per_point_vp(metric_by_backend[0]),
         per_point_vp(metric_by_backend[1]),
+        transform_secs * 1e9 / n_query as f64,
         iter_secs * 1e3,
         n_vp,
         per_point_vp(vp_serial),

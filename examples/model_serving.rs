@@ -1,0 +1,93 @@
+//! Model serving: fit once, persist, reload, and place a stream of
+//! held-out points into the frozen map — the out-of-sample path the
+//! fit/transform model layer exists for.
+//!
+//! Doubles as the CI smoke test for the model format and the
+//! frozen-reference transform: the run asserts that the save→load round
+//! trip is bit-identical on the vp-tree arena, that every placement is
+//! finite, and that the held-out placements' 1-NN label error stays
+//! within 0.1 of the fitted embedding's own 1-NN error. Set
+//! `MODEL_SERVING_QUICK=1` for the reduced-size CI configuration.
+//!
+//!     cargo run --release --example model_serving
+
+use bhsne::data::synthetic::{gaussian_mixture, SyntheticSpec};
+use bhsne::eval;
+use bhsne::sne::{TransformOptions, TsneConfig, TsneModel, TsneRunner};
+use bhsne::util::ThreadPool;
+
+fn main() -> anyhow::Result<()> {
+    bhsne::util::logger::init(None);
+    let quick = std::env::var("MODEL_SERVING_QUICK").is_ok_and(|v| v == "1");
+
+    // 1. Reference corpus + held-out queries from the same mixture.
+    let n_fit = if quick { 500 } else { 2000 };
+    let n_query = if quick { 150 } else { 500 };
+    let data = gaussian_mixture(&SyntheticSpec {
+        n: n_fit + n_query,
+        dim: 16,
+        classes: 4,
+        class_sep: 5.0,
+        seed: 21,
+        ..Default::default()
+    });
+    let (x_fit, x_query) = data.x.split_at(n_fit * data.dim);
+    let (l_fit, l_query) = data.labels.split_at(n_fit);
+
+    // 2. Fit once on the reference corpus.
+    let cfg = TsneConfig {
+        iters: if quick { 200 } else { 400 },
+        exaggeration_iters: if quick { 60 } else { 120 },
+        cost_every: 0,
+        perplexity: 20.0,
+        seed: 7,
+        ..Default::default()
+    };
+    let mut runner = TsneRunner::new(cfg);
+    let mut model = runner.fit(x_fit, data.dim)?;
+    model.labels = l_fit.to_vec();
+    println!(
+        "fit: n={} dim={} in {:.2}s (input {:.2}s, gradient {:.2}s)",
+        model.n,
+        model.dim,
+        model.stats.total_secs,
+        model.stats.input_stage.knn_secs + model.stats.input_stage.perplexity_secs,
+        model.stats.gradient_secs
+    );
+
+    // 3. Persist and reload — the serving hand-off.
+    let path = std::path::PathBuf::from("out/model_serving.bhsne");
+    model.save(&path)?;
+    let loaded = TsneModel::load(&path)?;
+    assert_eq!(model.vp, loaded.vp, "vp-tree arena must round-trip bit-identically");
+    assert_eq!(model.embedding, loaded.embedding, "embedding must round-trip bit-identically");
+    let bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+    let mib = bytes as f64 / (1024.0 * 1024.0);
+    println!("model: {} ({mib:.2} MiB), round trip bit-identical", path.display());
+
+    // 4. Transform the held-out stream against the frozen map.
+    let pool = ThreadPool::for_host();
+    let r = loaded.transform_with(&pool, x_query, data.dim, &TransformOptions::default())?;
+    assert!(r.y.iter().all(|v| v.is_finite()), "non-finite placement");
+    assert_eq!(r.stats.perplexity_failures, 0, "bandwidth search failed on a query row");
+    println!(
+        "transform: {} queries in {:.3}s ({:.1} us/point; attach {:.3}s, opt {:.3}s)",
+        n_query,
+        r.stats.total_secs,
+        r.stats.total_secs * 1e6 / n_query as f64,
+        r.stats.attach_secs,
+        r.stats.opt_secs
+    );
+
+    // 5. Placement quality: held-out 1-NN label error vs the fitted map's.
+    let fitted_err = eval::one_nn_error(&pool, &loaded.embedding, loaded.out_dim(), l_fit);
+    let placement_err = loaded.placement_1nn_error(&pool, &r.y, l_query)?;
+    println!("fitted 1-NN error    : {fitted_err:.4}");
+    println!("placement 1-NN error : {placement_err:.4}");
+    anyhow::ensure!(
+        placement_err <= fitted_err + 0.1,
+        "held-out placement error {placement_err:.4} exceeds fitted error {fitted_err:.4} + 0.1"
+    );
+    println!("OK: held-out placements track the fitted map");
+    Ok(())
+}

@@ -1,5 +1,19 @@
-//! Embedding snapshot I/O: TSV (human/plot-friendly) and a compact binary
-//! format used by the pipeline's periodic snapshots.
+//! Embedding snapshot I/O — TSV (human/plot-friendly) and a compact
+//! binary format used by the pipeline's periodic snapshots — plus the
+//! versioned model format `bhsne fit` persists.
+//!
+//! # Model format (`.bhsne`, version 1)
+//!
+//! Little-endian throughout: a magic + version header followed by framed
+//! sections, each `tag:u32, payload_len:u64, crc32:u32, payload`, closed
+//! by a zero-length `END` section. Payloads are CRC-checked before they
+//! are parsed, so bit rot and truncation fail loudly instead of producing
+//! a silently-wrong model. The vp-tree arena serializes as raw node
+//! records ([`crate::vptree::VpArena`]), so a loaded model answers kNN
+//! queries with no rebuild. Version policy: the reader accepts exactly
+//! the versions it knows how to parse (currently 1) and rejects anything
+//! else — adding sections bumps the version, and old readers fail with a
+//! clear "unsupported version" error rather than misparse.
 
 use anyhow::{bail, Context, Result};
 use byteorder::{LittleEndian, ReadBytesExt, WriteBytesExt};
@@ -120,6 +134,481 @@ pub fn read_snapshot(path: impl AsRef<Path>) -> Result<Snapshot> {
     Ok(Snapshot { y, dim, labels, iter })
 }
 
+// ---------------------------------------------------------------------
+// Model format
+// ---------------------------------------------------------------------
+
+use crate::pca::Pca;
+use crate::sne::input::InputStageStats;
+use crate::sne::sparse::Csr;
+use crate::sne::{KnnChoice, RepulsionMethod, RunStats, TsneConfig, TsneModel};
+use crate::spatial::CellSizeMode;
+use crate::vptree::VpArena;
+
+const MODEL_MAGIC: u32 = 0x4d53_4842; // "BHSM" read little-endian
+const MODEL_VERSION: u32 = 1;
+
+const SEC_END: u32 = 0;
+const SEC_CONFIG: u32 = 1;
+const SEC_DATA: u32 = 2;
+const SEC_VPTREE: u32 = 3;
+const SEC_CSR: u32 = 4;
+const SEC_EMBED: u32 = 5;
+const SEC_LABELS: u32 = 6;
+const SEC_STATS: u32 = 7;
+const SEC_PCA: u32 = 8;
+
+/// Hard cap on a single section payload (16 GiB) — rejects implausible
+/// lengths from corrupt headers before allocating.
+const MAX_SECTION: u64 = 1 << 34;
+
+/// CRC-32 (IEEE 802.3, the zlib polynomial) over a byte slice.
+fn crc32(data: &[u8]) -> u32 {
+    static TABLE: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, slot) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                let mask = (c & 1).wrapping_neg();
+                c = (c >> 1) ^ (0xEDB8_8320 & mask);
+            }
+            *slot = c;
+        }
+        t
+    });
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc = (crc >> 8) ^ table[((crc ^ b as u32) & 0xFF) as usize];
+    }
+    !crc
+}
+
+fn write_section(w: &mut impl Write, tag: u32, payload: &[u8]) -> std::io::Result<()> {
+    w.write_u32::<LittleEndian>(tag)?;
+    w.write_u64::<LittleEndian>(payload.len() as u64)?;
+    w.write_u32::<LittleEndian>(crc32(payload))?;
+    w.write_all(payload)
+}
+
+fn write_f64(w: &mut impl Write, v: f64) -> std::io::Result<()> {
+    w.write_u64::<LittleEndian>(v.to_bits())
+}
+
+fn read_f64(r: &mut impl Read) -> std::io::Result<f64> {
+    Ok(f64::from_bits(r.read_u64::<LittleEndian>()?))
+}
+
+fn write_u8(w: &mut impl Write, v: u8) -> std::io::Result<()> {
+    w.write_all(&[v])
+}
+
+fn read_u8(r: &mut impl Read) -> std::io::Result<u8> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b)?;
+    Ok(b[0])
+}
+
+// Bulk array codecs: fixed 64 KiB conversion chunks + write_all (or one
+// read_exact) instead of a per-element trait call — SEC_DATA alone is
+// tens of millions of f32s at the scale the format targets, and a
+// full-array byte temp would double the section's transient memory.
+
+const WRITE_CHUNK_ELEMS: usize = 16 * 1024; // × 4 bytes = 64 KiB buffer
+
+fn write_f32s(w: &mut impl Write, xs: &[f32]) -> std::io::Result<()> {
+    let mut buf = [0u8; WRITE_CHUNK_ELEMS * 4];
+    for chunk in xs.chunks(WRITE_CHUNK_ELEMS) {
+        let mut o = 0;
+        for &v in chunk {
+            buf[o..o + 4].copy_from_slice(&v.to_le_bytes());
+            o += 4;
+        }
+        w.write_all(&buf[..o])?;
+    }
+    Ok(())
+}
+
+fn read_f32s(r: &mut &[u8], count: usize) -> Result<Vec<f32>> {
+    // Bound against the bytes actually present before allocating — a
+    // corrupt-but-CRC-valid header must error, not abort on a huge Vec.
+    anyhow::ensure!(
+        count.checked_mul(4).is_some_and(|b| b <= r.len()),
+        "array of {count} f32s exceeds section payload ({} bytes left)",
+        r.len()
+    );
+    let mut bytes = vec![0u8; count * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+fn write_u32s(w: &mut impl Write, xs: &[u32]) -> std::io::Result<()> {
+    let mut buf = [0u8; WRITE_CHUNK_ELEMS * 4];
+    for chunk in xs.chunks(WRITE_CHUNK_ELEMS) {
+        let mut o = 0;
+        for &v in chunk {
+            buf[o..o + 4].copy_from_slice(&v.to_le_bytes());
+            o += 4;
+        }
+        w.write_all(&buf[..o])?;
+    }
+    Ok(())
+}
+
+fn read_u32s(r: &mut &[u8], count: usize) -> Result<Vec<u32>> {
+    anyhow::ensure!(
+        count.checked_mul(4).is_some_and(|b| b <= r.len()),
+        "array of {count} u32s exceeds section payload ({} bytes left)",
+        r.len()
+    );
+    let mut bytes = vec![0u8; count * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes.chunks_exact(4).map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+fn encode_config(cfg: &TsneConfig) -> Vec<u8> {
+    let mut b = Vec::with_capacity(80);
+    let w = &mut b;
+    w.write_u32::<LittleEndian>(cfg.out_dim as u32).unwrap();
+    write_f64(w, cfg.perplexity).unwrap();
+    w.write_u32::<LittleEndian>(cfg.theta.to_bits()).unwrap();
+    w.write_u64::<LittleEndian>(cfg.iters as u64).unwrap();
+    w.write_u32::<LittleEndian>(cfg.exaggeration.to_bits()).unwrap();
+    w.write_u64::<LittleEndian>(cfg.exaggeration_iters as u64).unwrap();
+    write_f64(w, cfg.eta).unwrap();
+    w.write_u64::<LittleEndian>(cfg.seed).unwrap();
+    let (rep_tag, rep_param) = match cfg.repulsion {
+        None => (0u8, 0f32),
+        Some(RepulsionMethod::Exact) => (1, 0.0),
+        Some(RepulsionMethod::BarnesHut { theta }) => (2, theta),
+        Some(RepulsionMethod::DualTree { rho }) => (3, rho),
+    };
+    write_u8(w, rep_tag).unwrap();
+    w.write_u32::<LittleEndian>(rep_param.to_bits()).unwrap();
+    let knn_tag: u8 = match cfg.knn {
+        KnnChoice::VpTree => 0,
+        KnnChoice::Brute => 1,
+    };
+    write_u8(w, knn_tag).unwrap();
+    let cell_tag: u8 = match cfg.cell_size {
+        CellSizeMode::Diagonal => 0,
+        CellSizeMode::MaxWidth => 1,
+    };
+    write_u8(w, cell_tag).unwrap();
+    w.write_u64::<LittleEndian>(cfg.cost_every as u64).unwrap();
+    b
+}
+
+fn decode_config(r: &mut impl Read) -> Result<TsneConfig> {
+    let out_dim = r.read_u32::<LittleEndian>()? as usize;
+    let perplexity = read_f64(r)?;
+    let theta = f32::from_bits(r.read_u32::<LittleEndian>()?);
+    let iters = r.read_u64::<LittleEndian>()? as usize;
+    let exaggeration = f32::from_bits(r.read_u32::<LittleEndian>()?);
+    let exaggeration_iters = r.read_u64::<LittleEndian>()? as usize;
+    let eta = read_f64(r)?;
+    let seed = r.read_u64::<LittleEndian>()?;
+    let rep_tag = read_u8(r)?;
+    let rep_param = f32::from_bits(r.read_u32::<LittleEndian>()?);
+    let repulsion = match rep_tag {
+        0 => None,
+        1 => Some(RepulsionMethod::Exact),
+        2 => Some(RepulsionMethod::BarnesHut { theta: rep_param }),
+        3 => Some(RepulsionMethod::DualTree { rho: rep_param }),
+        other => bail!("unknown repulsion tag {other}"),
+    };
+    let knn = match read_u8(r)? {
+        0 => KnnChoice::VpTree,
+        1 => KnnChoice::Brute,
+        other => bail!("unknown knn tag {other}"),
+    };
+    let cell_size = match read_u8(r)? {
+        0 => CellSizeMode::Diagonal,
+        1 => CellSizeMode::MaxWidth,
+        other => bail!("unknown cell-size tag {other}"),
+    };
+    let cost_every = r.read_u64::<LittleEndian>()? as usize;
+    Ok(TsneConfig {
+        out_dim,
+        perplexity,
+        theta,
+        iters,
+        exaggeration,
+        exaggeration_iters,
+        eta,
+        seed,
+        repulsion,
+        knn,
+        cell_size,
+        cost_every,
+    })
+}
+
+fn encode_stats(s: &RunStats) -> Vec<u8> {
+    let mut b = Vec::with_capacity(140);
+    let w = &mut b;
+    let i = &s.input_stage;
+    for v in [i.knn_secs, i.knn_build_secs, i.knn_query_secs, i.perplexity_secs, i.symmetrize_secs] {
+        write_f64(w, v).unwrap();
+    }
+    w.write_u64::<LittleEndian>(i.perplexity_failures as u64).unwrap();
+    w.write_u64::<LittleEndian>(i.nnz as u64).unwrap();
+    for v in [s.gradient_secs, s.tree_secs, s.repulsion_secs, s.total_secs] {
+        write_f64(w, v).unwrap();
+    }
+    w.write_u64::<LittleEndian>(s.tree_refits as u64).unwrap();
+    w.write_u64::<LittleEndian>(s.tree_rebuilds as u64).unwrap();
+    write_u8(w, s.final_kl.is_some() as u8).unwrap();
+    write_f64(w, s.final_kl.unwrap_or(0.0)).unwrap();
+    w.write_u64::<LittleEndian>(s.iters as u64).unwrap();
+    b
+}
+
+fn decode_stats(r: &mut impl Read) -> Result<RunStats> {
+    // Struct literal fields evaluate in source order — the read order
+    // mirrors encode_stats exactly.
+    let input = InputStageStats {
+        knn_secs: read_f64(r)?,
+        knn_build_secs: read_f64(r)?,
+        knn_query_secs: read_f64(r)?,
+        perplexity_secs: read_f64(r)?,
+        symmetrize_secs: read_f64(r)?,
+        perplexity_failures: r.read_u64::<LittleEndian>()? as usize,
+        nnz: r.read_u64::<LittleEndian>()? as usize,
+    };
+    let gradient_secs = read_f64(r)?;
+    let tree_secs = read_f64(r)?;
+    let repulsion_secs = read_f64(r)?;
+    let total_secs = read_f64(r)?;
+    let tree_refits = r.read_u64::<LittleEndian>()? as usize;
+    let tree_rebuilds = r.read_u64::<LittleEndian>()? as usize;
+    let has_kl = read_u8(r)? != 0;
+    let kl = read_f64(r)?;
+    let iters = r.read_u64::<LittleEndian>()? as usize;
+    Ok(RunStats {
+        input_stage: input,
+        gradient_secs,
+        tree_secs,
+        repulsion_secs,
+        tree_refits,
+        tree_rebuilds,
+        total_secs,
+        final_kl: if has_kl { Some(kl) } else { None },
+        iters,
+    })
+}
+
+fn encode_csr(p: &Csr) -> Vec<u8> {
+    let mut b = Vec::with_capacity(16 + 4 * (p.indptr.len() + 2 * p.indices.len()));
+    let w = &mut b;
+    w.write_u64::<LittleEndian>(p.n_rows as u64).unwrap();
+    w.write_u64::<LittleEndian>(p.indices.len() as u64).unwrap();
+    write_u32s(w, &p.indptr).unwrap();
+    write_u32s(w, &p.indices).unwrap();
+    write_f32s(w, &p.values).unwrap();
+    b
+}
+
+fn decode_csr(r: &mut &[u8]) -> Result<Csr> {
+    let n_rows = r.read_u64::<LittleEndian>()? as usize;
+    let nnz = r.read_u64::<LittleEndian>()? as usize;
+    anyhow::ensure!(n_rows < (1 << 33) && nnz < (1 << 34), "implausible CSR size {n_rows}x{nnz}");
+    let indptr = read_u32s(r, n_rows + 1)?;
+    anyhow::ensure!(
+        indptr.first() == Some(&0) && indptr.last() == Some(&(nnz as u32)),
+        "CSR indptr endpoints corrupt"
+    );
+    anyhow::ensure!(indptr.windows(2).all(|w| w[0] <= w[1]), "CSR indptr not monotone");
+    let indices = read_u32s(r, nnz)?;
+    let values = read_f32s(r, nnz)?;
+    Ok(Csr { n_rows, indptr, indices, values })
+}
+
+fn encode_pca(p: &Pca) -> Vec<u8> {
+    let mut b = Vec::with_capacity(8 + 4 * (p.mean.len() + p.components.len()) + 8 * p.eigenvalues.len());
+    let w = &mut b;
+    w.write_u32::<LittleEndian>(p.dim as u32).unwrap();
+    w.write_u32::<LittleEndian>(p.k as u32).unwrap();
+    write_f32s(w, &p.mean).unwrap();
+    write_f32s(w, &p.components).unwrap();
+    for &e in &p.eigenvalues {
+        write_f64(w, e).unwrap();
+    }
+    b
+}
+
+fn decode_pca(r: &mut &[u8]) -> Result<Pca> {
+    let dim = r.read_u32::<LittleEndian>()? as usize;
+    let k = r.read_u32::<LittleEndian>()? as usize;
+    anyhow::ensure!(dim > 0 && k > 0 && k <= dim, "implausible PCA shape {dim}x{k}");
+    let mean = read_f32s(r, dim)?;
+    let components = read_f32s(r, dim * k)?;
+    let mut eigenvalues = vec![0f64; k];
+    for e in eigenvalues.iter_mut() {
+        *e = read_f64(r)?;
+    }
+    Ok(Pca { mean, components, dim, k, eigenvalues })
+}
+
+/// Persist a fitted model. See the module docs for the format.
+pub fn write_model(path: impl AsRef<Path>, model: &TsneModel) -> Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating {}", path.as_ref().display()))?;
+    let mut w = BufWriter::new(f);
+    w.write_u32::<LittleEndian>(MODEL_MAGIC)?;
+    w.write_u32::<LittleEndian>(MODEL_VERSION)?;
+
+    write_section(&mut w, SEC_CONFIG, &encode_config(&model.config))?;
+
+    let mut data = Vec::with_capacity(12 + 4 * model.x.len());
+    data.write_u64::<LittleEndian>(model.n as u64)?;
+    data.write_u32::<LittleEndian>(model.dim as u32)?;
+    write_f32s(&mut data, &model.x)?;
+    write_section(&mut w, SEC_DATA, &data)?;
+
+    let mut vp = Vec::new();
+    model.vp.write_into(&mut vp)?;
+    write_section(&mut w, SEC_VPTREE, &vp)?;
+
+    write_section(&mut w, SEC_CSR, &encode_csr(&model.p))?;
+
+    let mut embed = Vec::with_capacity(12 + 4 * model.embedding.len());
+    embed.write_u64::<LittleEndian>(model.n as u64)?;
+    embed.write_u32::<LittleEndian>(model.config.out_dim as u32)?;
+    write_f32s(&mut embed, &model.embedding)?;
+    write_section(&mut w, SEC_EMBED, &embed)?;
+
+    write_section(&mut w, SEC_LABELS, &model.labels)?;
+
+    write_section(&mut w, SEC_STATS, &encode_stats(&model.stats))?;
+
+    if let Some(pca) = &model.pca {
+        write_section(&mut w, SEC_PCA, &encode_pca(pca))?;
+    }
+
+    write_section(&mut w, SEC_END, &[])?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a model written by [`write_model`]. Every section payload is
+/// CRC-verified before parsing; truncation, bit corruption, a wrong
+/// magic, and unknown versions/sections all fail with a descriptive
+/// error.
+pub fn read_model(path: impl AsRef<Path>) -> Result<TsneModel> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {}", path.as_ref().display()))?;
+    let mut r = BufReader::new(f);
+    let magic = r.read_u32::<LittleEndian>().context("model header truncated")?;
+    if magic != MODEL_MAGIC {
+        bail!("bad model magic {magic:#x} (not a .bhsne model file)");
+    }
+    let version = r.read_u32::<LittleEndian>().context("model header truncated")?;
+    if version != MODEL_VERSION {
+        bail!("unsupported model version {version} (this build reads {MODEL_VERSION})");
+    }
+
+    let mut config: Option<TsneConfig> = None;
+    let mut data: Option<(usize, usize, Vec<f32>)> = None;
+    let mut vp: Option<VpArena> = None;
+    let mut p: Option<Csr> = None;
+    let mut embedding: Option<(usize, usize, Vec<f32>)> = None;
+    let mut labels: Option<Vec<u8>> = None;
+    let mut stats: Option<RunStats> = None;
+    let mut pca: Option<Pca> = None;
+
+    loop {
+        let tag = r.read_u32::<LittleEndian>().context("model truncated before END section")?;
+        let len = r.read_u64::<LittleEndian>().context("model section header truncated")?;
+        anyhow::ensure!(len <= MAX_SECTION, "implausible section length {len} (tag {tag})");
+        let want_crc = r.read_u32::<LittleEndian>().context("model section header truncated")?;
+        let mut payload = vec![0u8; len as usize];
+        r.read_exact(&mut payload)
+            .with_context(|| format!("model section {tag} truncated (wanted {len} bytes)"))?;
+        let got_crc = crc32(&payload);
+        anyhow::ensure!(
+            got_crc == want_crc,
+            "model section {tag} checksum mismatch ({got_crc:#x} != {want_crc:#x})"
+        );
+        if tag == SEC_LABELS {
+            // Raw byte section: take the payload as-is, no copy.
+            labels = Some(payload);
+            continue;
+        }
+        let mut pr: &[u8] = &payload;
+        match tag {
+            SEC_END => break,
+            SEC_CONFIG => config = Some(decode_config(&mut pr)?),
+            SEC_DATA => {
+                let n = pr.read_u64::<LittleEndian>()? as usize;
+                let dim = pr.read_u32::<LittleEndian>()? as usize;
+                anyhow::ensure!(
+                    n.checked_mul(dim).is_some_and(|v| v < (1 << 34)),
+                    "implausible data shape {n}x{dim}"
+                );
+                data = Some((n, dim, read_f32s(&mut pr, n * dim)?));
+            }
+            SEC_VPTREE => vp = Some(VpArena::read_from(&mut pr)?),
+            SEC_CSR => p = Some(decode_csr(&mut pr)?),
+            SEC_EMBED => {
+                let n = pr.read_u64::<LittleEndian>()? as usize;
+                let od = pr.read_u32::<LittleEndian>()? as usize;
+                anyhow::ensure!(
+                    n.checked_mul(od).is_some_and(|v| v < (1 << 34)),
+                    "implausible embedding shape {n}x{od}"
+                );
+                embedding = Some((n, od, read_f32s(&mut pr, n * od)?));
+            }
+            SEC_STATS => stats = Some(decode_stats(&mut pr)?),
+            SEC_PCA => pca = Some(decode_pca(&mut pr)?),
+            other => bail!("unknown model section tag {other} (version {version})"),
+        }
+        // Fail-loudly contract: a decoder that leaves bytes behind means
+        // writer/reader drift within one version — reject, don't drop.
+        anyhow::ensure!(
+            pr.is_empty(),
+            "model section {tag} has {} trailing bytes after decode",
+            pr.len()
+        );
+    }
+
+    let config = config.context("model missing CONFIG section")?;
+    let (n, dim, x) = data.context("model missing DATA section")?;
+    let vp = vp.context("model missing VPTREE section")?;
+    let p = p.context("model missing CSR section")?;
+    let (en, eod, embedding) = embedding.context("model missing EMBED section")?;
+    let labels = labels.context("model missing LABELS section")?;
+    let stats = stats.context("model missing STATS section")?;
+
+    // Cross-section shape validation: a model that passes here is safe to
+    // query.
+    anyhow::ensure!(en == n, "embedding rows {en} != data rows {n}");
+    anyhow::ensure!(eod == config.out_dim, "embedding dim {eod} != config out_dim {}", config.out_dim);
+    anyhow::ensure!(vp.len() == n, "vp-tree size {} != data rows {n}", vp.len());
+    anyhow::ensure!(vp.dim() == dim, "vp-tree dim {} != data dim {dim}", vp.dim());
+    anyhow::ensure!(p.n_rows == n, "P rows {} != data rows {n}", p.n_rows);
+    anyhow::ensure!(
+        config.out_dim == 2 || config.out_dim == 3,
+        "model out_dim {} unsupported (2 or 3)",
+        config.out_dim
+    );
+    anyhow::ensure!(
+        p.indices.iter().all(|&c| (c as usize) < n),
+        "P column index out of range (corrupt CSR would index past {n} rows)"
+    );
+    anyhow::ensure!(
+        labels.is_empty() || labels.len() == n,
+        "labels length {} != data rows {n}",
+        labels.len()
+    );
+    Ok(TsneModel { config, dim, n, x, labels, pca, vp, p, embedding, stats })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -169,5 +658,158 @@ mod tests {
         std::fs::write(&p, b"not a snapshot at all").unwrap();
         assert!(read_snapshot(&p).is_err());
         std::fs::remove_file(&p).ok();
+    }
+
+    // ---- model format ----
+
+    use crate::util::Pcg32;
+    use crate::vptree::VpTree;
+
+    /// A small hand-built model (no fit needed — io tests stay cheap).
+    fn tiny_model(with_pca: bool) -> TsneModel {
+        let (n, dim) = (40usize, 3usize);
+        let mut rng = Pcg32::seeded(11);
+        let x: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32).collect();
+        let vp = VpTree::build(&x, n, dim, 9).into_arena();
+        let mut rows: Vec<Vec<(u32, f32)>> = vec![Vec::new(); n];
+        for i in 0..n {
+            let j = (i + 1) % n;
+            rows[i].push((j as u32, 0.5 / n as f32));
+            rows[j].push((i as u32, 0.5 / n as f32));
+        }
+        let p = Csr::from_rows(n, rows);
+        let embedding: Vec<f32> = (0..n * 2).map(|_| rng.normal() as f32).collect();
+        let labels: Vec<u8> = (0..n as u8).map(|i| i % 3).collect();
+        let mut stats = RunStats { iters: 123, final_kl: Some(1.25), ..Default::default() };
+        stats.input_stage.nnz = p.nnz();
+        stats.tree_refits = 7;
+        let pca = with_pca.then(|| Pca {
+            mean: vec![0.5; 6],
+            components: vec![0.25; 6 * 3],
+            dim: 6,
+            k: 3,
+            eigenvalues: vec![3.0, 2.0, 1.0],
+        });
+        TsneModel {
+            config: TsneConfig { seed: 77, ..Default::default() },
+            dim,
+            n,
+            x,
+            labels,
+            pca,
+            vp,
+            p,
+            embedding,
+            stats,
+        }
+    }
+
+    fn assert_models_equal(a: &TsneModel, b: &TsneModel) {
+        // Bit-identical round trip of every persisted artifact.
+        assert_eq!(a.n, b.n);
+        assert_eq!(a.dim, b.dim);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.vp, b.vp, "vp-tree arena not bit-identical");
+        assert_eq!(a.p, b.p, "Csr not bit-identical");
+        assert_eq!(a.embedding, b.embedding, "embedding not bit-identical");
+        assert_eq!(a.config.out_dim, b.config.out_dim);
+        assert_eq!(a.config.perplexity.to_bits(), b.config.perplexity.to_bits());
+        assert_eq!(a.config.theta.to_bits(), b.config.theta.to_bits());
+        assert_eq!(a.config.iters, b.config.iters);
+        assert_eq!(a.config.exaggeration_iters, b.config.exaggeration_iters);
+        assert_eq!(a.config.eta.to_bits(), b.config.eta.to_bits());
+        assert_eq!(a.config.seed, b.config.seed);
+        assert_eq!(a.config.repulsion, b.config.repulsion);
+        assert_eq!(a.config.knn, b.config.knn);
+        assert_eq!(a.config.cell_size, b.config.cell_size);
+        assert_eq!(a.config.cost_every, b.config.cost_every);
+        assert_eq!(a.stats.iters, b.stats.iters);
+        assert_eq!(a.stats.final_kl, b.stats.final_kl);
+        assert_eq!(a.stats.tree_refits, b.stats.tree_refits);
+        assert_eq!(a.stats.input_stage.nnz, b.stats.input_stage.nnz);
+        assert_eq!(a.pca.is_some(), b.pca.is_some());
+        if let (Some(pa), Some(pb)) = (&a.pca, &b.pca) {
+            assert_eq!(pa.mean, pb.mean);
+            assert_eq!(pa.components, pb.components);
+            assert_eq!(pa.eigenvalues, pb.eigenvalues);
+            assert_eq!((pa.dim, pa.k), (pb.dim, pb.k));
+        }
+    }
+
+    #[test]
+    fn model_roundtrip_bit_identical() {
+        for with_pca in [false, true] {
+            let model = tiny_model(with_pca);
+            let path = tmp(&format!("model-{with_pca}.bhsne"));
+            write_model(&path, &model).unwrap();
+            let back = read_model(&path).unwrap();
+            assert_models_equal(&model, &back);
+            std::fs::remove_file(&path).ok();
+        }
+    }
+
+    #[test]
+    fn model_rejects_wrong_magic() {
+        let model = tiny_model(false);
+        let path = tmp("model-magic.bhsne");
+        write_model(&path, &model).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[0] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = read_model(&path).unwrap_err();
+        assert!(format!("{err}").contains("magic"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn model_rejects_unknown_version() {
+        let model = tiny_model(false);
+        let path = tmp("model-version.bhsne");
+        write_model(&path, &model).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[4..8].copy_from_slice(&99u32.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = read_model(&path).unwrap_err();
+        assert!(format!("{err}").contains("version"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn model_rejects_truncation_anywhere() {
+        let model = tiny_model(true);
+        let path = tmp("model-trunc.bhsne");
+        write_model(&path, &model).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // Truncating at any prefix must error (the END sentinel means a
+        // clean EOF is never a valid model).
+        for frac in [0.1, 0.5, 0.9, 0.999] {
+            let cut = ((bytes.len() as f64) * frac) as usize;
+            std::fs::write(&path, &bytes[..cut]).unwrap();
+            assert!(read_model(&path).is_err(), "accepted a model truncated to {cut} bytes");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn model_rejects_payload_corruption() {
+        let model = tiny_model(false);
+        let path = tmp("model-crc.bhsne");
+        write_model(&path, &model).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // Flip one byte somewhere inside the DATA payload (past the
+        // header + first section frame) and expect a checksum error.
+        for at in [64usize, bytes.len() / 2, bytes.len() - 40] {
+            let mut corrupted = bytes.clone();
+            corrupted[at] ^= 0x01;
+            std::fs::write(&path, &corrupted).unwrap();
+            let err = read_model(&path).unwrap_err();
+            let msg = format!("{err}");
+            assert!(
+                msg.contains("checksum") || msg.contains("truncated") || msg.contains("section"),
+                "byte {at}: unexpected error {msg}"
+            );
+        }
+        std::fs::remove_file(&path).ok();
     }
 }

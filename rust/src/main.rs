@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!   embed     run one embedding job (dataset → PCA → BH-SNE → eval)
+//!   fit       run an embedding job and persist the model (`.bhsne`)
+//!   transform load a model and place held-out points into its frozen map
 //!   sweep     parameter sweeps (θ, ρ, N) reproducing the paper's figures
 //!   quadtree  dump the quadtree of a small embedding (Figure 1)
 //!   info      show artifact/runtime status
@@ -10,9 +12,12 @@
 //! overridden by CLI flags.
 
 use bhsne::data;
-use bhsne::pipeline::{run_job, run_sweep, JobConfig};
+use bhsne::pipeline::{
+    run_fit_job, run_job, run_sweep, run_transform_job, JobConfig, TransformJobConfig,
+};
 use bhsne::runtime::SneEngine;
-use bhsne::sne::{RepulsionMethod, TsneConfig};
+use bhsne::sne::{RepulsionMethod, TransformOptions, TsneConfig};
+use bhsne::spatial::CellSizeMode;
 use bhsne::util::args::{parse, ArgError, CommandSpec};
 use bhsne::util::config::Config;
 
@@ -34,6 +39,8 @@ fn top_help() -> String {
      USAGE:\n  bhsne <COMMAND> [OPTIONS]\n\n\
      COMMANDS:\n  \
      embed     run one embedding job\n  \
+     fit       run one embedding job and write the model (.bhsne)\n  \
+     transform load a model and embed held-out points into its frozen map\n  \
      sweep     run a parameter sweep (theta | rho | size)\n  \
      quadtree  visualize the quadtree of a small embedding (Figure 1)\n  \
      info      artifact/runtime status\n\n\
@@ -49,6 +56,8 @@ fn run(args: &[String]) -> anyhow::Result<()> {
     let rest = &args[1..];
     match cmd.as_str() {
         "embed" => cmd_embed(rest),
+        "fit" => cmd_fit(rest),
+        "transform" => cmd_transform(rest),
         "sweep" => cmd_sweep(rest),
         "quadtree" => cmd_quadtree(rest),
         "info" => cmd_info(rest),
@@ -60,37 +69,60 @@ fn run(args: &[String]) -> anyhow::Result<()> {
     }
 }
 
+/// The t-SNE/job options shared by `embed` and `fit`.
+fn tsne_job_opts(spec: CommandSpec) -> CommandSpec {
+    spec.opt(
+        "dataset",
+        "mnist-like",
+        "dataset name (mnist|mnist-like|cifar-like|norb-like|timit-like|gaussians|swiss-roll)",
+    )
+    .opt("n", "5000", "number of points")
+    .opt("theta", "0.5", "BH trade-off (0 = exact t-SNE)")
+    .opt("rho", "-1", "use dual-tree repulsion with this rho (>0 enables)")
+    .opt("perplexity", "30", "perplexity u")
+    .opt("iters", "1000", "gradient iterations")
+    .opt("exaggeration", "12", "early exaggeration alpha")
+    .opt("exaggeration-iters", "250", "iterations the exaggeration applies for")
+    .opt("eta", "200", "learning rate")
+    .opt("seed", "42", "RNG seed")
+    .opt("out-dim", "2", "embedding dimensionality (2 or 3)")
+    .opt("cost-every", "50", "KL cost evaluation interval (0 = never)")
+    .opt("cell-size", "diagonal", "BH cell-size measure (diagonal | max-width)")
+    .opt("out", "out/run", "output directory")
+    .opt("data-dir", "data", "directory with real datasets (IDX)")
+    .opt("snapshot-every", "0", "snapshot interval in iterations")
+    .opt("threads", "0", "worker threads (0 = all cores)")
+    .opt("config", "", "TOML config file (CLI flags override)")
+    .flag("xla", "offload regular ops to AOT XLA artifacts")
+    .flag("brute-knn", "use brute-force kNN instead of the vp-tree")
+}
+
 fn embed_spec() -> CommandSpec {
-    CommandSpec::new("embed", "run one embedding job")
-        .opt(
-            "dataset",
-            "mnist-like",
-            "dataset name (mnist|mnist-like|cifar-like|norb-like|timit-like|gaussians|swiss-roll)",
-        )
-        .opt("n", "5000", "number of points")
-        .opt("theta", "0.5", "BH trade-off (0 = exact t-SNE)")
-        .opt("rho", "-1", "use dual-tree repulsion with this rho (>0 enables)")
-        .opt("perplexity", "30", "perplexity u")
-        .opt("iters", "1000", "gradient iterations")
-        .opt("exaggeration", "12", "early exaggeration alpha")
-        .opt("eta", "200", "learning rate")
-        .opt("seed", "42", "RNG seed")
-        .opt("out-dim", "2", "embedding dimensionality (2 or 3)")
-        .opt("out", "out/run", "output directory")
-        .opt("data-dir", "data", "directory with real datasets (IDX)")
-        .opt("snapshot-every", "0", "snapshot interval in iterations")
-        .opt("threads", "0", "worker threads (0 = all cores)")
-        .opt("config", "", "TOML config file (CLI flags override)")
-        .flag("xla", "offload regular ops to AOT XLA artifacts")
-        .flag("brute-knn", "use brute-force kNN instead of the vp-tree")
+    tsne_job_opts(CommandSpec::new("embed", "run one embedding job"))
+}
+
+fn fit_spec() -> CommandSpec {
+    tsne_job_opts(CommandSpec::new(
+        "fit",
+        "run one embedding job and persist the model for out-of-sample transform",
+    ))
+    .opt("model", "out/model.bhsne", "output model path")
+}
+
+fn parse_cell_size(s: &str) -> anyhow::Result<CellSizeMode> {
+    match s {
+        "diagonal" => Ok(CellSizeMode::Diagonal),
+        "max-width" | "maxwidth" => Ok(CellSizeMode::MaxWidth),
+        other => anyhow::bail!("unknown cell-size {other:?} (expected diagonal | max-width)"),
+    }
 }
 
 fn job_from_parsed(p: &bhsne::util::args::Parsed) -> anyhow::Result<JobConfig> {
-    // Start from optional config file.
+    // Precedence: explicit CLI flag > config-file key > CLI spec default.
     let mut cfg = JobConfig::default();
     let config_path = p.str("config").unwrap_or("");
-    if !config_path.is_empty() {
-        let file = Config::load(config_path)?;
+    let file = if config_path.is_empty() { None } else { Some(Config::load(config_path)?) };
+    if let Some(file) = &file {
         cfg.dataset = file.str_or("job.dataset", &cfg.dataset);
         cfg.n = file.usize_or("job.n", cfg.n);
         cfg.data_dir = file.str_or("job.data_dir", &cfg.data_dir);
@@ -100,22 +132,59 @@ fn job_from_parsed(p: &bhsne::util::args::Parsed) -> anyhow::Result<JobConfig> {
         cfg.tsne.exaggeration = file.float_or("tsne.exaggeration", cfg.tsne.exaggeration as f64) as f32;
         cfg.tsne.eta = file.float_or("tsne.eta", cfg.tsne.eta);
         cfg.tsne.seed = file.int_or("tsne.seed", cfg.tsne.seed as i64) as u64;
+        cfg.tsne.exaggeration_iters =
+            file.usize_or("tsne.exaggeration_iters", cfg.tsne.exaggeration_iters);
+        cfg.tsne.cost_every = file.usize_or("tsne.cost_every", cfg.tsne.cost_every);
+        let cell = file.str_or("tsne.cell_size", "");
+        if !cell.is_empty() {
+            cfg.tsne.cell_size = parse_cell_size(&cell)?;
+        }
         cfg.use_xla = file.bool_or("job.xla", cfg.use_xla);
     }
-    // CLI overrides.
-    cfg.dataset = p.str("dataset").unwrap_or(&cfg.dataset).to_string();
-    cfg.n = p.get("n").map_err(anyhow::Error::msg)?;
-    cfg.data_dir = p.str("data-dir").unwrap_or(&cfg.data_dir).to_string();
-    cfg.tsne.theta = p.get("theta").map_err(anyhow::Error::msg)?;
+    // A CLI value applies unless it is a mere spec default shadowing a
+    // key the config file did set.
+    let use_cli =
+        |flag: &str, key: &str| p.provided(flag) || !file.as_ref().is_some_and(|f| f.get(key).is_some());
+    if use_cli("dataset", "job.dataset") {
+        cfg.dataset = p.str("dataset").unwrap_or(&cfg.dataset).to_string();
+    }
+    if use_cli("n", "job.n") {
+        cfg.n = p.get("n").map_err(anyhow::Error::msg)?;
+    }
+    if use_cli("data-dir", "job.data_dir") {
+        cfg.data_dir = p.str("data-dir").unwrap_or(&cfg.data_dir).to_string();
+    }
+    if use_cli("theta", "tsne.theta") {
+        cfg.tsne.theta = p.get("theta").map_err(anyhow::Error::msg)?;
+    }
     let rho: f32 = p.get("rho").map_err(anyhow::Error::msg)?;
     if rho > 0.0 {
         cfg.tsne.repulsion = Some(RepulsionMethod::DualTree { rho });
     }
-    cfg.tsne.perplexity = p.get("perplexity").map_err(anyhow::Error::msg)?;
-    cfg.tsne.iters = p.get("iters").map_err(anyhow::Error::msg)?;
-    cfg.tsne.exaggeration = p.get("exaggeration").map_err(anyhow::Error::msg)?;
-    cfg.tsne.eta = p.get("eta").map_err(anyhow::Error::msg)?;
-    cfg.tsne.seed = p.get("seed").map_err(anyhow::Error::msg)?;
+    if use_cli("perplexity", "tsne.perplexity") {
+        cfg.tsne.perplexity = p.get("perplexity").map_err(anyhow::Error::msg)?;
+    }
+    if use_cli("iters", "tsne.iters") {
+        cfg.tsne.iters = p.get("iters").map_err(anyhow::Error::msg)?;
+    }
+    if use_cli("exaggeration", "tsne.exaggeration") {
+        cfg.tsne.exaggeration = p.get("exaggeration").map_err(anyhow::Error::msg)?;
+    }
+    if use_cli("exaggeration-iters", "tsne.exaggeration_iters") {
+        cfg.tsne.exaggeration_iters = p.get("exaggeration-iters").map_err(anyhow::Error::msg)?;
+    }
+    if use_cli("cost-every", "tsne.cost_every") {
+        cfg.tsne.cost_every = p.get("cost-every").map_err(anyhow::Error::msg)?;
+    }
+    if use_cli("cell-size", "tsne.cell_size") {
+        cfg.tsne.cell_size = parse_cell_size(p.str("cell-size").unwrap_or("diagonal"))?;
+    }
+    if use_cli("eta", "tsne.eta") {
+        cfg.tsne.eta = p.get("eta").map_err(anyhow::Error::msg)?;
+    }
+    if use_cli("seed", "tsne.seed") {
+        cfg.tsne.seed = p.get("seed").map_err(anyhow::Error::msg)?;
+    }
     cfg.tsne.out_dim = p.get("out-dim").map_err(anyhow::Error::msg)?;
     cfg.snapshot_every = p.get("snapshot-every").map_err(anyhow::Error::msg)?;
     cfg.threads = p.get("threads").map_err(anyhow::Error::msg)?;
@@ -152,6 +221,94 @@ fn cmd_embed(args: &[String]) -> anyhow::Result<()> {
         println!("tree rebuilds    : {refits:.0} incremental refits, {rebuilds:.0} full");
     }
     println!("{}", r.metrics.render());
+    Ok(())
+}
+
+fn cmd_fit(args: &[String]) -> anyhow::Result<()> {
+    let spec = fit_spec();
+    let p = match parse(&spec, "bhsne", args) {
+        Ok(p) => p,
+        Err(ArgError::Help(h)) => {
+            print!("{h}");
+            return Ok(());
+        }
+        Err(e) => anyhow::bail!("{e}"),
+    };
+    let cfg = job_from_parsed(&p)?;
+    let model_path = std::path::PathBuf::from(p.str("model").unwrap_or("out/model.bhsne"));
+    let (r, model) = run_fit_job(cfg, Some(&model_path))?;
+    let model_bytes = std::fs::metadata(&model_path).map(|m| m.len()).unwrap_or(0);
+    println!("dataset          : {}", r.dataset_name);
+    println!("points           : {}", r.n);
+    println!("1-NN error       : {:.4}", r.one_nn_error);
+    println!("final KL         : {:?}", r.final_kl);
+    println!("embed time (s)   : {:.2}", r.timings.embed_secs);
+    println!(
+        "model            : {} ({:.1} MiB, n={} dim={} pca={})",
+        model_path.display(),
+        model_bytes as f64 / (1024.0 * 1024.0),
+        model.n,
+        model.dim,
+        if model.pca.is_some() { "yes" } else { "no" }
+    );
+    println!("{}", r.metrics.render());
+    Ok(())
+}
+
+fn cmd_transform(args: &[String]) -> anyhow::Result<()> {
+    let spec = CommandSpec::new(
+        "transform",
+        "load a fitted model and place held-out points into its frozen map",
+    )
+    .opt("model", "out/model.bhsne", "model file written by `bhsne fit`")
+    .opt("dataset", "gaussians", "dataset family the model was fit on")
+    .opt("n", "500", "held-out query rows (taken past the fitted prefix, same corpus seed)")
+    .opt("iters", "60", "frozen-reference gradient iterations (0 = barycenter only)")
+    .opt("eta", "0.1", "transform step size")
+    .opt("out", "", "output directory for transform.tsv (empty = none)")
+    .opt("data-dir", "data", "directory with real datasets (IDX)")
+    .opt("threads", "0", "worker threads (0 = all cores)");
+    let p = match parse(&spec, "bhsne", args) {
+        Ok(p) => p,
+        Err(ArgError::Help(h)) => {
+            print!("{h}");
+            return Ok(());
+        }
+        Err(e) => anyhow::bail!("{e}"),
+    };
+    let out = p.str("out").unwrap_or("");
+    let cfg = TransformJobConfig {
+        model_path: p.str("model").unwrap_or("out/model.bhsne").into(),
+        dataset: p.str("dataset").unwrap_or("gaussians").to_string(),
+        n: p.get("n").map_err(anyhow::Error::msg)?,
+        data_dir: p.str("data-dir").unwrap_or("data").to_string(),
+        threads: p.get("threads").map_err(anyhow::Error::msg)?,
+        out_dir: if out.is_empty() { None } else { Some(out.into()) },
+        opts: TransformOptions {
+            iters: p.get("iters").map_err(anyhow::Error::msg)?,
+            eta: p.get("eta").map_err(anyhow::Error::msg)?,
+            ..Default::default()
+        },
+    };
+    let t = run_transform_job(cfg)?;
+    let per_point_us = t.transform_secs * 1e6 / t.n.max(1) as f64;
+    println!("queries            : {}", t.n);
+    println!("model load (s)     : {:.3}", t.load_secs);
+    println!("transform (s)      : {:.3} ({per_point_us:.1} us/point)", t.transform_secs);
+    println!(
+        "attach/opt (s)     : {:.3} / {:.3}",
+        t.stats.attach_secs, t.stats.opt_secs
+    );
+    match (t.placement_1nn_error, t.fitted_1nn_error, t.input_nn_agreement) {
+        (Some(err), Some(fitted), Some(agree)) => {
+            println!("placement 1-NN err : {err:.4} (fitted embedding: {fitted:.4})");
+            println!("input-NN agreement : {agree:.4}");
+        }
+        _ => println!("placement quality  : n/a (model carries no labels)"),
+    }
+    let finite = t.y.iter().all(|v| v.is_finite());
+    println!("placements finite  : {finite}");
+    anyhow::ensure!(finite, "transform produced non-finite placements");
     Ok(())
 }
 

@@ -131,15 +131,33 @@ pub fn reduce_if_needed(
     target_dim: usize,
     seed: u64,
 ) -> (Vec<f32>, usize) {
+    let (z, k, _) = reduce_if_needed_keeping(pool, x, n, dim, target_dim, seed);
+    (z, k)
+}
+
+/// [`reduce_if_needed`] that also returns the fitted projection state —
+/// the model layer persists it so serving-side queries can be projected
+/// with the exact transform the fit used. One copy of the subsample
+/// policy lives here for both paths.
+pub fn reduce_if_needed_keeping(
+    pool: &ThreadPool,
+    x: &[f32],
+    n: usize,
+    dim: usize,
+    target_dim: usize,
+    seed: u64,
+) -> (Vec<f32>, usize, Option<Pca>) {
     if dim <= target_dim {
-        return (x[..n * dim].to_vec(), dim);
+        return (x[..n * dim].to_vec(), dim, None);
     }
     // Fit on a subsample: 50 components are estimated accurately from a
     // few thousand rows, and the fit is O(iters·n·dim·k) — the dominant
     // preprocessing cost for NORB-sized inputs.
     let fit_n = n.min(2000);
     let pca = fit(pool, x, fit_n, dim, target_dim, seed);
-    (transform(pool, &pca, x, n), target_dim)
+    let z = transform(pool, &pca, x, n);
+    let k = pca.k;
+    (z, k, Some(pca))
 }
 
 /// out[i] = (x_i − mean) · V  (n × k), parallel over rows.

@@ -1,12 +1,15 @@
-//! One embedding job: the full staged experiment.
+//! One embedding job: the full staged experiment — plus the fit/transform
+//! model-serving stages (`run_fit_job` persists a [`TsneModel`],
+//! `run_transform_job` loads one and places held-out points into the
+//! frozen map).
 
 use super::metrics::MetricsRegistry;
 use crate::data::{self, Dataset};
 use crate::eval;
 use crate::runtime::{SneEngine, XlaAttractive};
-use crate::sne::{TsneConfig, TsneRunner};
+use crate::sne::{KnnChoice, TransformOptions, TransformStats, TsneConfig, TsneModel, TsneRunner};
 use crate::util::{Stopwatch, ThreadPool};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
 /// Configuration of one end-to-end embedding job.
@@ -56,11 +59,15 @@ impl Default for JobConfig {
 impl JobConfig {
     pub fn describe(&self) -> String {
         format!(
-            "{} n={} theta={} iters={} {}",
+            "{} n={} theta={} iters={} knn={} {}",
             self.dataset,
             self.n,
             self.tsne.theta,
             self.tsne.iters,
+            match self.tsne.knn {
+                KnnChoice::VpTree => "vptree",
+                KnnChoice::Brute => "brute",
+            },
             if self.use_xla { "xla" } else { "cpu" }
         )
     }
@@ -119,7 +126,10 @@ pub fn run_job(cfg: JobConfig) -> anyhow::Result<JobResult> {
             crate::pca::reduce_if_needed(&pool, &ds.x, ds.n, ds.dim, cfg.pca_target, cfg.tsne.seed)
         }
     } else {
-        (ds.x.clone(), ds.dim)
+        // No PCA: move the rows out instead of cloning — at the
+        // million-point scale the ROADMAP targets this was a full copy of
+        // the dataset. Later stages only touch labels/n/name.
+        (std::mem::take(&mut ds.x), ds.dim)
     };
     let pca_secs = sw.elapsed_secs();
     metrics.observe("pca_secs", pca_secs);
@@ -226,6 +236,293 @@ pub fn run_job(cfg: JobConfig) -> anyhow::Result<JobResult> {
     })
 }
 
+/// Execute a fit job: dataset → PCA (state captured into the model) →
+/// `TsneRunner::fit` → evaluation → persist the model. The returned
+/// [`TsneModel`] carries the dataset labels and, when PCA ran, the
+/// projection — so raw-space queries can be served against it.
+pub fn run_fit_job(cfg: JobConfig, model_out: Option<&Path>) -> anyhow::Result<(JobResult, TsneModel)> {
+    let total_sw = Stopwatch::start();
+    let mut metrics = MetricsRegistry::new();
+    let pool = super::make_pool(cfg.threads);
+
+    // ---- Stage 1: dataset ----
+    let sw = Stopwatch::start();
+    let mut ds: Dataset = data::by_name(&cfg.dataset, cfg.n, cfg.tsne.seed, &cfg.data_dir)?;
+    ds.truncate(cfg.n);
+    let dataset_secs = sw.elapsed_secs();
+    metrics.observe("dataset_secs", dataset_secs);
+    log::info!("fit dataset {} n={} dim={}", ds.name, ds.n, ds.dim);
+
+    // ---- Stage 2: PCA, keeping the projection for serving ----
+    let sw = Stopwatch::start();
+    let (x, dim, pca_state) = if cfg.pca_target > 0 && ds.dim > cfg.pca_target {
+        crate::pca::reduce_if_needed_keeping(&pool, &ds.x, ds.n, ds.dim, cfg.pca_target, cfg.tsne.seed)
+    } else {
+        (std::mem::take(&mut ds.x), ds.dim, None)
+    };
+    let pca_secs = sw.elapsed_secs();
+    metrics.observe("pca_secs", pca_secs);
+
+    // ---- Stage 3: fit ----
+    let sw = Stopwatch::start();
+    let mut runner = TsneRunner::with_pool(cfg.tsne.clone(), pool);
+    if cfg.use_xla {
+        match SneEngine::from_env() {
+            Ok(engine) => {
+                let engine = Rc::new(engine);
+                if engine.supports_attractive(ds.n) {
+                    log::info!("attractive forces: XLA artifact path");
+                    runner.set_attractive_backend(Box::new(XlaAttractive::new(engine)));
+                } else {
+                    log::info!("no attractive artifact for n={}; using CPU", ds.n);
+                }
+            }
+            Err(e) => log::warn!("XLA runtime unavailable ({e}); using CPU"),
+        }
+    }
+    if cfg.snapshot_every > 0 {
+        if let Some(dir) = cfg.out_dir.clone() {
+            std::fs::create_dir_all(&dir)?;
+            let every = cfg.snapshot_every;
+            let labels = ds.labels.clone();
+            let out_dim = cfg.tsne.out_dim;
+            runner.set_observer(Box::new(move |s, y| {
+                if s.iter % every == 0 {
+                    let p = dir.join(format!("snapshot_{:05}.bin", s.iter));
+                    if let Err(e) = crate::data::io::write_snapshot(&p, y, out_dim, &labels, s.iter as u64)
+                    {
+                        log::warn!("snapshot failed: {e}");
+                    }
+                }
+                if let Some(kl) = s.kl {
+                    log::info!("iter {:4} KL {kl:.4} |g| {:.3e}", s.iter, s.grad_norm);
+                }
+            }));
+        }
+    }
+    let mut model = runner.fit(&x, dim)?;
+    model.labels = ds.labels.clone();
+    model.pca = pca_state;
+    let embed_secs = sw.elapsed_secs();
+    metrics.observe("embed_secs", embed_secs);
+    let input = &runner.stats.input_stage;
+    metrics.observe_all(&[
+        ("knn_secs", input.knn_secs),
+        ("knn_build_secs", input.knn_build_secs),
+        ("knn_query_secs", input.knn_query_secs),
+        ("perplexity_secs", input.perplexity_secs),
+        ("symmetrize_secs", input.symmetrize_secs),
+        ("gradient_secs", runner.stats.gradient_secs),
+        ("tree_secs", runner.stats.tree_secs),
+        ("repulsion_secs", runner.stats.repulsion_secs),
+        ("tree_refits", runner.stats.tree_refits as f64),
+        ("tree_rebuilds", runner.stats.tree_rebuilds as f64),
+    ]);
+
+    // ---- Stage 4: evaluate ----
+    let sw = Stopwatch::start();
+    let eval_n = if cfg.eval_cap == 0 { ds.n } else { ds.n.min(cfg.eval_cap) };
+    let one_nn = eval::one_nn_error(
+        runner.pool(),
+        &model.embedding[..eval_n * cfg.tsne.out_dim],
+        cfg.tsne.out_dim,
+        &ds.labels[..eval_n],
+    );
+    let eval_secs = sw.elapsed_secs();
+    metrics.observe("eval_secs", eval_secs);
+    metrics.observe("one_nn_error", one_nn);
+
+    // ---- Stage 5: persist ----
+    if let Some(path) = model_out {
+        let sw = Stopwatch::start();
+        model.save(path)?;
+        metrics.observe("model_save_secs", sw.elapsed_secs());
+        log::info!("model written to {}", path.display());
+    }
+    if let Some(dir) = &cfg.out_dir {
+        std::fs::create_dir_all(dir)?;
+        let tsv = dir.join("embedding.tsv");
+        crate::data::io::write_tsv(tsv, &model.embedding, cfg.tsne.out_dim, &ds.labels)?;
+    }
+
+    let timings = StageTimings {
+        dataset_secs,
+        pca_secs,
+        embed_secs,
+        eval_secs,
+        total_secs: total_sw.elapsed_secs(),
+    };
+    let result = JobResult {
+        embedding: model.embedding.clone(),
+        out_dim: cfg.tsne.out_dim,
+        labels: ds.labels,
+        one_nn_error: one_nn,
+        final_kl: runner.stats.final_kl,
+        timings,
+        metrics,
+        dataset_name: ds.name,
+        n: ds.n,
+    };
+    Ok((result, model))
+}
+
+/// Configuration of a transform (serving) job: load a persisted model and
+/// place a batch of held-out points into its frozen map.
+///
+/// Held-out queries are the **tail rows** of the fit corpus: the dataset
+/// is re-generated (or re-read) with the model's own seed, extended by
+/// `n` rows past the fitted prefix, and only those unseen tail rows are
+/// transformed. Synthetic generators draw their class structure from the
+/// seed, so this is the only scheme whose held-out labels live in the
+/// same mixture the model was fit on. Caveat: families that normalize
+/// over the whole matrix (`mnist-like` etc.) rescale slightly with the
+/// row count, so the regenerated prefix is not bit-equal to the fitted
+/// corpus there — `run_transform_job` detects and warns about that, and
+/// the placement metrics become approximate (streaming generators like
+/// `gaussians` are exact).
+#[derive(Debug, Clone)]
+pub struct TransformJobConfig {
+    /// Path of the `.bhsne` model written by a fit job.
+    pub model_path: PathBuf,
+    /// Dataset family the model was fit on.
+    pub dataset: String,
+    /// Number of held-out query rows (taken past the fitted prefix).
+    pub n: usize,
+    pub data_dir: String,
+    pub threads: usize,
+    /// Write `transform.tsv` (placements + labels) here when set.
+    pub out_dir: Option<PathBuf>,
+    pub opts: TransformOptions,
+}
+
+impl Default for TransformJobConfig {
+    fn default() -> Self {
+        TransformJobConfig {
+            model_path: PathBuf::from("out/model.bhsne"),
+            dataset: "gaussians".into(),
+            n: 500,
+            data_dir: "data".into(),
+            threads: 0,
+            out_dir: None,
+            opts: TransformOptions::default(),
+        }
+    }
+}
+
+/// Everything a transform job produces, placement quality included.
+#[derive(Debug)]
+pub struct TransformJobResult {
+    /// Query placements, row-major `n × out_dim`.
+    pub y: Vec<f32>,
+    pub out_dim: usize,
+    /// Query labels (from the held-out dataset).
+    pub labels: Vec<u8>,
+    pub n: usize,
+    /// Fraction of queries whose nearest reference point in the embedding
+    /// has a different label than the query (needs model labels).
+    pub placement_1nn_error: Option<f64>,
+    /// Fraction of queries whose embedding-space nearest reference agrees
+    /// in label with their input-space nearest reference — the smoke
+    /// metric CI asserts on (needs model labels).
+    pub input_nn_agreement: Option<f64>,
+    /// The fitted embedding's own 1-NN error, for the agreement bar.
+    pub fitted_1nn_error: Option<f64>,
+    pub load_secs: f64,
+    pub transform_secs: f64,
+    pub stats: TransformStats,
+}
+
+/// Execute a transform job end to end: load model → generate held-out
+/// queries → project into the model's input space → frozen-reference
+/// transform → placement quality.
+pub fn run_transform_job(cfg: TransformJobConfig) -> anyhow::Result<TransformJobResult> {
+    let pool = super::make_pool(cfg.threads);
+    let sw = Stopwatch::start();
+    let model = TsneModel::load(&cfg.model_path)?;
+    let load_secs = sw.elapsed_secs();
+    log::info!(
+        "model loaded: n={} dim={} out_dim={} ({} labels, pca {})",
+        model.n,
+        model.dim,
+        model.out_dim(),
+        model.labels.len(),
+        if model.pca.is_some() { "yes" } else { "no" }
+    );
+
+    // Re-generate the fit corpus with the model's seed, extended by the
+    // requested query count, and keep only the unseen tail rows (see the
+    // struct docs for why a fresh seed would be a different mixture).
+    let total = model.n + cfg.n;
+    let ds: Dataset = data::by_name(&cfg.dataset, total, model.config.seed, &cfg.data_dir)?;
+    anyhow::ensure!(
+        ds.n > model.n,
+        "dataset {} has only {} rows — none beyond the {} the model was fit on",
+        cfg.dataset,
+        ds.n,
+        model.n
+    );
+    let m = ds.n - model.n;
+    let xq_raw = &ds.x[model.n * ds.dim..];
+    let labels_q = &ds.labels[model.n..];
+    // Generators that normalize over the whole matrix (mnist-like and
+    // friends rescale by global mean/variance) produce a slightly
+    // different scaling at n+m rows than at n — the regenerated prefix
+    // then no longer equals the model's reference rows and the metrics
+    // below are approximate. Surface that instead of staying silent.
+    // (Only checkable without PCA, where model.x is the raw prefix.)
+    if model.pca.is_none() && ds.dim == model.dim && ds.x[..model.n * ds.dim] != model.x[..] {
+        log::warn!(
+            "regenerated corpus prefix differs from the model's reference rows \
+             (globally-normalized generators rescale with n); placement metrics are approximate"
+        );
+    }
+    let (xq, qdim) = model.project_input(&pool, xq_raw, ds.dim)?;
+
+    let sw = Stopwatch::start();
+    let r = model.transform_with(&pool, &xq, qdim, &cfg.opts)?;
+    let transform_secs = sw.elapsed_secs();
+
+    let (placement_1nn_error, input_nn_agreement, fitted_1nn_error) = if model.labels.len() == model.n
+    {
+        // One embedding-space NN pass feeds both metrics.
+        let emb_nn = model.embedding_nn(&pool, &r.y)?;
+        let wrong = emb_nn
+            .iter()
+            .zip(labels_q)
+            .filter(|&(&e, &l)| model.labels[e as usize] != l)
+            .count();
+        let err = wrong as f64 / m.max(1) as f64;
+        let agree = emb_nn
+            .iter()
+            .zip(&r.nn_input)
+            .filter(|&(&e, &i)| model.labels[e as usize] == model.labels[i as usize])
+            .count() as f64
+            / m.max(1) as f64;
+        let fitted = eval::one_nn_error(&pool, &model.embedding, model.out_dim(), &model.labels);
+        (Some(err), Some(agree), Some(fitted))
+    } else {
+        (None, None, None)
+    };
+
+    if let Some(dir) = &cfg.out_dir {
+        std::fs::create_dir_all(dir)?;
+        crate::data::io::write_tsv(dir.join("transform.tsv"), &r.y, model.out_dim(), labels_q)?;
+    }
+
+    Ok(TransformJobResult {
+        y: r.y,
+        out_dim: model.out_dim(),
+        labels: labels_q.to_vec(),
+        n: m,
+        placement_1nn_error,
+        input_nn_agreement,
+        fitted_1nn_error,
+        load_secs,
+        transform_secs,
+        stats: r.stats,
+    })
+}
+
 /// PCA via the XLA projection artifact: fit on a subsample in Rust (the
 /// fit is one-time build cost), project all rows through the artifact.
 fn try_xla_pca(pool: &ThreadPool, ds: &Dataset, target: usize, seed: u64) -> Option<Vec<f32>> {
@@ -295,6 +592,59 @@ mod tests {
         assert_eq!(dim, 2);
         assert_eq!(y.len(), labels.len() * 2);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fit_then_transform_job_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("bhsne-fitjob-{}", std::process::id()));
+        let model_path = dir.join("model.bhsne");
+        let cfg = JobConfig {
+            dataset: "gaussians".into(),
+            n: 220,
+            tsne: TsneConfig {
+                iters: 80,
+                exaggeration_iters: 25,
+                cost_every: 40,
+                perplexity: 12.0,
+                seed: 5,
+                ..Default::default()
+            },
+            pca_target: 0,
+            eval_cap: 0,
+            ..Default::default()
+        };
+        let (result, model) = run_fit_job(cfg, Some(&model_path)).unwrap();
+        assert_eq!(result.embedding, model.embedding);
+        assert_eq!(model.labels.len(), 220);
+        assert!(model_path.exists());
+
+        let tcfg = TransformJobConfig {
+            model_path: model_path.clone(),
+            dataset: "gaussians".into(),
+            n: 60,
+            out_dir: Some(dir.clone()),
+            ..Default::default()
+        };
+        let t = run_transform_job(tcfg).unwrap();
+        assert_eq!(t.y.len(), 60 * 2);
+        assert!(t.y.iter().all(|v| v.is_finite()));
+        let placement = t.placement_1nn_error.unwrap();
+        let fitted = t.fitted_1nn_error.unwrap();
+        assert!(
+            placement <= fitted + 0.1,
+            "placement err {placement} vs fitted {fitted}"
+        );
+        assert!(t.input_nn_agreement.unwrap() > 0.5);
+        assert!(dir.join("transform.tsv").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn describe_names_knn_backend() {
+        let mut cfg = JobConfig::default();
+        assert!(cfg.describe().contains("knn=vptree"));
+        cfg.tsne.knn = KnnChoice::Brute;
+        assert!(cfg.describe().contains("knn=brute"));
     }
 
     #[test]

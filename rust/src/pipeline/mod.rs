@@ -8,7 +8,10 @@
 mod job;
 mod metrics;
 
-pub use job::{run_job, JobConfig, JobResult, StageTimings};
+pub use job::{
+    run_fit_job, run_job, run_transform_job, JobConfig, JobResult, StageTimings,
+    TransformJobConfig, TransformJobResult,
+};
 pub use metrics::MetricsRegistry;
 
 use crate::util::{Stopwatch, ThreadPool};

@@ -46,6 +46,12 @@ pub struct ForceEngine<const DIM: usize> {
     n: usize,
     method: RepulsionMethod,
     mode: CellSizeMode,
+    /// Movable row range `[lo, hi)`. Defaults to `0..n`; the model
+    /// layer's frozen-reference `transform` narrows it so reference
+    /// points contribute repulsion (they are in the tree) but receive no
+    /// force accumulation and never move. Z is then summed over
+    /// movable-vs-all ordered pairs only.
+    movable: (usize, usize),
     /// The persistent tree; built on first use, refit in place afterwards.
     tree: Option<BhTree<DIM>>,
     /// Dual-tree traversal workspace (slot accumulators, stacks, seeds).
@@ -67,10 +73,31 @@ pub struct ForceEngine<const DIM: usize> {
 
 impl<const DIM: usize> ForceEngine<DIM> {
     pub fn new(n: usize, method: RepulsionMethod, mode: CellSizeMode) -> Self {
+        Self::with_movable(n, method, mode, 0, n)
+    }
+
+    /// Engine whose force accumulation is restricted to the movable rows
+    /// `lo..hi` — the frozen-reference gradient contract used by
+    /// [`crate::sne::TsneModel::transform`]. The dual-tree method
+    /// computes cell-cell interactions for every point at once and cannot
+    /// restrict accumulation, so it requires the full range.
+    pub fn with_movable(
+        n: usize,
+        method: RepulsionMethod,
+        mode: CellSizeMode,
+        lo: usize,
+        hi: usize,
+    ) -> Self {
+        assert!(lo <= hi && hi <= n, "movable range {lo}..{hi} out of 0..{n}");
+        assert!(
+            !matches!(method, RepulsionMethod::DualTree { .. }) || (lo == 0 && hi == n),
+            "dual-tree repulsion cannot restrict force accumulation to a movable sub-range"
+        );
         ForceEngine {
             n,
             method,
             mode,
+            movable: (lo, hi),
             tree: None,
             dual: DualTreeScratch::new(),
             z_parts: Vec::new(),
@@ -91,6 +118,11 @@ impl<const DIM: usize> ForceEngine<DIM> {
 
     pub fn method(&self) -> RepulsionMethod {
         self.method
+    }
+
+    /// The movable row range `[lo, hi)` forces accumulate for.
+    pub fn movable(&self) -> (usize, usize) {
+        self.movable
     }
 
     /// Build the tree for `y`, or refit the previous iteration's tree in
@@ -124,13 +156,38 @@ impl<const DIM: usize> ForceEngine<DIM> {
     /// (`F_repZ`) into it per the configured method; returns Z. `out` is
     /// row-major `n × DIM`.
     pub fn repulsive_into(&mut self, pool: &ThreadPool, y: &[f32], out: &mut [f64]) -> f64 {
+        self.repulsive_rowz_into(pool, y, out, None)
+    }
+
+    /// [`ForceEngine::repulsive_into`] that additionally writes each
+    /// movable row's own Z contribution into `row_z[i]` when provided
+    /// (frozen rows left untouched). The frozen-reference transform
+    /// normalizes each query by its own `z_i` so placements do not depend
+    /// on the batch size. Not supported for the dual-tree method (whose
+    /// cell-cell accumulation has no per-row Z).
+    pub fn repulsive_rowz_into(
+        &mut self,
+        pool: &ThreadPool,
+        y: &[f32],
+        out: &mut [f64],
+        row_z: Option<&mut [f64]>,
+    ) -> f64 {
         assert_eq!(out.len(), self.n * DIM);
         out.iter_mut().for_each(|v| *v = 0.0);
+        let (mlo, mhi) = self.movable;
         let z = match self.method {
             RepulsionMethod::Exact => {
                 let sw = Stopwatch::start();
-                let z =
-                    gradient::repulsive_exact_with::<DIM>(pool, y, self.n, out, &mut self.z_parts);
+                let z = gradient::repulsive_exact_range_rowz_with::<DIM>(
+                    pool,
+                    y,
+                    self.n,
+                    mlo,
+                    mhi,
+                    out,
+                    &mut self.z_parts,
+                    row_z,
+                );
                 self.stats.repulsion_secs += sw.elapsed_secs();
                 z
             }
@@ -138,19 +195,23 @@ impl<const DIM: usize> ForceEngine<DIM> {
                 self.prepare_tree(pool, y);
                 let sw = Stopwatch::start();
                 let tree = self.tree.as_ref().expect("tree prepared");
-                let z = gradient::repulsive_bh_with_tree_scratch::<DIM>(
+                let z = gradient::repulsive_bh_range_rowz_with_tree_scratch::<DIM>(
                     pool,
                     tree,
                     y,
                     self.n,
+                    mlo,
+                    mhi,
                     theta,
                     out,
                     &mut self.z_parts,
+                    row_z,
                 );
                 self.stats.repulsion_secs += sw.elapsed_secs();
                 z
             }
             RepulsionMethod::DualTree { rho } => {
+                assert!(row_z.is_none(), "dual-tree repulsion has no per-row Z decomposition");
                 self.prepare_tree(pool, y);
                 let sw = Stopwatch::start();
                 let tree = self.tree.as_ref().expect("tree prepared");
@@ -268,9 +329,21 @@ pub enum DynForceEngine {
 impl DynForceEngine {
     /// Panics unless `dim` is 2 or 3 (the runner validates beforehand).
     pub fn new(dim: usize, n: usize, method: RepulsionMethod, mode: CellSizeMode) -> Self {
+        Self::with_movable(dim, n, method, mode, 0, n)
+    }
+
+    /// [`ForceEngine::with_movable`], dimension-erased.
+    pub fn with_movable(
+        dim: usize,
+        n: usize,
+        method: RepulsionMethod,
+        mode: CellSizeMode,
+        lo: usize,
+        hi: usize,
+    ) -> Self {
         match dim {
-            2 => DynForceEngine::D2(ForceEngine::new(n, method, mode)),
-            3 => DynForceEngine::D3(ForceEngine::new(n, method, mode)),
+            2 => DynForceEngine::D2(ForceEngine::with_movable(n, method, mode, lo, hi)),
+            3 => DynForceEngine::D3(ForceEngine::with_movable(n, method, mode, lo, hi)),
             _ => panic!("unsupported embedding dimension {dim}"),
         }
     }
@@ -293,6 +366,20 @@ impl DynForceEngine {
         match self {
             DynForceEngine::D2(e) => e.kl_cost(pool, p, y, z),
             DynForceEngine::D3(e) => e.kl_cost(pool, p, y, z),
+        }
+    }
+
+    /// [`ForceEngine::repulsive_rowz_into`], dimension-erased.
+    pub fn repulsive_rowz_into(
+        &mut self,
+        pool: &ThreadPool,
+        y: &[f32],
+        out: &mut [f64],
+        row_z: Option<&mut [f64]>,
+    ) -> f64 {
+        match self {
+            DynForceEngine::D2(e) => e.repulsive_rowz_into(pool, y, out, row_z),
+            DynForceEngine::D3(e) => e.repulsive_rowz_into(pool, y, out, row_z),
         }
     }
 
@@ -516,6 +603,90 @@ mod tests {
         let mut scratch = vec![0f64; n * 2];
         let z_fresh = engine.repulsive_into(&pool, &y, &mut scratch);
         assert_eq!(engine.kl_cost(&pool, &p, &y, z_fresh), exact);
+    }
+
+    /// Frozen-reference contract: a movable-range engine must leave
+    /// frozen rows untouched, match the full-range pass bit for bit on
+    /// the movable rows (per-point traversals are independent), and
+    /// return exactly the movable rows' share of Z.
+    #[test]
+    fn movable_range_freezes_reference_rows() {
+        let pool = ThreadPool::new(4);
+        let n = 600;
+        let (lo, hi) = (450, 600);
+        let y = random_embedding(n, 21);
+        for method in [RepulsionMethod::BarnesHut { theta: 0.5 }, RepulsionMethod::Exact] {
+            let mut full = ForceEngine::<2>::new(n, method, CellSizeMode::Diagonal);
+            let mut out_full = vec![0f64; n * 2];
+            full.repulsive_into(&pool, &y, &mut out_full);
+            let mut part = ForceEngine::<2>::with_movable(n, method, CellSizeMode::Diagonal, lo, hi);
+            let mut out_part = vec![0f64; n * 2];
+            let z_part = part.repulsive_into(&pool, &y, &mut out_part);
+            assert!(out_part[..lo * 2].iter().all(|&v| v == 0.0), "{method:?}: frozen rows moved");
+            assert_eq!(out_part[lo * 2..], out_full[lo * 2..], "{method:?}");
+            // Per-row z contributions summed serially over the movable
+            // range (tolerance: reduction order differs from the chunked
+            // deterministic sum).
+            let mut z_want = 0f64;
+            match method {
+                RepulsionMethod::BarnesHut { theta } => {
+                    let tree = crate::spatial::BhTree::<2>::build(&y, n);
+                    for i in lo..hi {
+                        let yi = [y[i * 2], y[i * 2 + 1]];
+                        let mut f = [0f64; 2];
+                        z_want += tree.repulsion(i as u32, &yi, theta, &mut f);
+                    }
+                }
+                _ => {
+                    for i in lo..hi {
+                        for j in 0..n {
+                            if j != i {
+                                let dx = (y[i * 2] - y[j * 2]) as f64;
+                                let dy = (y[i * 2 + 1] - y[j * 2 + 1]) as f64;
+                                z_want += 1.0 / (1.0 + dx * dx + dy * dy);
+                            }
+                        }
+                    }
+                }
+            }
+            assert!(
+                (z_part - z_want).abs() <= 1e-9 * z_want.abs().max(1.0),
+                "{method:?}: z {z_part} vs {z_want}"
+            );
+        }
+    }
+
+    /// The per-row Z decomposition must cover the scalar Z exactly (same
+    /// additions, different grouping — tolerance covers the reduction
+    /// order) and leave frozen rows' slots untouched.
+    #[test]
+    fn row_z_decomposes_total_z() {
+        let pool = ThreadPool::new(4);
+        let n = 500;
+        let (lo, hi) = (380, 500);
+        let y = random_embedding(n, 23);
+        for method in [RepulsionMethod::BarnesHut { theta: 0.5 }, RepulsionMethod::Exact] {
+            let mut engine = ForceEngine::<2>::with_movable(n, method, CellSizeMode::Diagonal, lo, hi);
+            let mut out = vec![0f64; n * 2];
+            let mut row_z = vec![0f64; n];
+            let z = engine.repulsive_rowz_into(&pool, &y, &mut out, Some(&mut row_z));
+            assert!(row_z[..lo].iter().all(|&v| v == 0.0), "{method:?}: frozen row_z written");
+            let sum: f64 = row_z[lo..hi].iter().sum();
+            assert!((sum - z).abs() <= 1e-9 * z.abs().max(1.0), "{method:?}: {sum} vs {z}");
+            assert!(row_z[lo..hi].iter().all(|&v| v > 0.0), "{method:?}: non-positive row z");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "dual-tree")]
+    fn movable_range_rejects_dual_tree() {
+        let _ = ForceEngine::<2>::with_movable(
+            100,
+            RepulsionMethod::DualTree { rho: 0.25 },
+            CellSizeMode::Diagonal,
+            50,
+            100,
+        );
     }
 
     #[test]

@@ -90,22 +90,71 @@ pub fn repulsive_exact_with<const DIM: usize>(
     out: &mut [f64],
     z_parts: &mut Vec<f64>,
 ) -> f64 {
+    repulsive_exact_range_with::<DIM>(pool, y, n, 0, n, out, z_parts)
+}
+
+/// [`repulsive_exact_with`] restricted to the movable rows `lo..hi` — the
+/// frozen-reference contract of the model layer's `transform`: every
+/// point in `y` contributes repulsion (appears as a `j` term), but force
+/// accumulation and Z terms are computed only for rows in the range.
+/// `out` still spans all `n` rows; frozen rows are left untouched.
+/// Returns `Z = Σ_{i ∈ [lo,hi)} Σ_{j≠i} (1+d²)^-1` (movable-vs-all
+/// ordered pairs). With `lo..hi = 0..n` this is bit-identical to the
+/// full pass (same chunk layout, same reduction order).
+pub fn repulsive_exact_range_with<const DIM: usize>(
+    pool: &ThreadPool,
+    y: &[f32],
+    n: usize,
+    lo: usize,
+    hi: usize,
+    out: &mut [f64],
+    z_parts: &mut Vec<f64>,
+) -> f64 {
+    repulsive_exact_range_rowz_with::<DIM>(pool, y, n, lo, hi, out, z_parts, None)
+}
+
+/// [`repulsive_exact_range_with`] that additionally writes each movable
+/// row's own Z contribution (`z_i = Σ_{j≠i} (1+d²)^-1`) into `row_z[i]`
+/// when provided (`row_z` spans all `n` rows; frozen rows are left
+/// untouched). The model layer's transform normalizes every query by its
+/// own `z_i`, so placements do not depend on how many queries share the
+/// batch.
+pub fn repulsive_exact_range_rowz_with<const DIM: usize>(
+    pool: &ThreadPool,
+    y: &[f32],
+    n: usize,
+    lo: usize,
+    hi: usize,
+    out: &mut [f64],
+    z_parts: &mut Vec<f64>,
+    row_z: Option<&mut [f64]>,
+) -> f64 {
     assert!(y.len() >= n * DIM);
     assert_eq!(out.len(), n * DIM);
+    assert!(lo <= hi && hi <= n, "movable range {lo}..{hi} out of 0..{n}");
+    let count = hi - lo;
+    z_parts.clear();
+    if count == 0 {
+        return 0.0;
+    }
+    let rz = row_z.map(|s| {
+        assert_eq!(s.len(), n);
+        SendPtr(s.as_mut_ptr())
+    });
     let oc = SendPtr(out.as_mut_ptr());
     // Deterministic Z reduction: one slot per chunk, summed in order
     // afterwards — thread scheduling cannot perturb the result.
     const CHUNK: usize = 16;
-    let n_chunks = n.div_ceil(CHUNK);
-    z_parts.clear();
+    let n_chunks = count.div_ceil(CHUNK);
     z_parts.resize(n_chunks, 0f64);
     let zc = SendPtr(z_parts.as_mut_ptr());
-    pool.scope_chunks(n, CHUNK, |lo, hi| {
-        let _ = (&oc, &zc);
+    pool.scope_chunks(count, CHUNK, |clo, chi| {
+        let _ = (&oc, &zc, &rz);
         let mut z_local = 0f64;
-        for i in lo..hi {
+        for i in lo + clo..lo + chi {
             let yi = &y[i * DIM..(i + 1) * DIM];
             let mut acc = [0f64; DIM];
+            let mut z_row = 0f64;
             for j in 0..n {
                 if j == i {
                     continue;
@@ -118,17 +167,22 @@ pub fn repulsive_exact_with<const DIM: usize>(
                     d2 += diff[d] * diff[d];
                 }
                 let q = 1.0 / (1.0 + d2 as f64);
-                z_local += q;
+                z_row += q;
                 let qq = q * q;
                 for d in 0..DIM {
                     acc[d] += qq * diff[d] as f64;
                 }
             }
+            z_local += z_row;
+            if let Some(rz) = &rz {
+                // SAFETY: disjoint rows across chunks.
+                unsafe { *rz.0.add(i) = z_row };
+            }
             let row = unsafe { std::slice::from_raw_parts_mut(oc.0.add(i * DIM), DIM) };
             row.copy_from_slice(&acc);
         }
         // SAFETY: one chunk writes exactly one slot.
-        unsafe { *zc.0.add(lo / CHUNK) = z_local };
+        unsafe { *zc.0.add(clo / CHUNK) = z_local };
     });
     z_parts.iter().sum()
 }
@@ -173,29 +227,84 @@ pub fn repulsive_bh_with_tree_scratch<const DIM: usize>(
     out: &mut [f64],
     z_parts: &mut Vec<f64>,
 ) -> f64 {
+    repulsive_bh_range_with_tree_scratch::<DIM>(pool, tree, y, n, 0, n, theta, out, z_parts)
+}
+
+/// [`repulsive_bh_with_tree_scratch`] restricted to the movable rows
+/// `lo..hi` (frozen-reference transform): the tree summarizes **all** `n`
+/// points — frozen reference rows keep contributing repulsion through the
+/// cell summaries — but only rows in the range are traversed, so only
+/// they accumulate force and Z terms. `out` still spans all `n` rows;
+/// frozen rows are left untouched. With `lo..hi = 0..n` this is
+/// bit-identical to the full pass.
+pub fn repulsive_bh_range_with_tree_scratch<const DIM: usize>(
+    pool: &ThreadPool,
+    tree: &BhTree<DIM>,
+    y: &[f32],
+    n: usize,
+    lo: usize,
+    hi: usize,
+    theta: f32,
+    out: &mut [f64],
+    z_parts: &mut Vec<f64>,
+) -> f64 {
+    repulsive_bh_range_rowz_with_tree_scratch::<DIM>(
+        pool, tree, y, n, lo, hi, theta, out, z_parts, None,
+    )
+}
+
+/// [`repulsive_bh_range_with_tree_scratch`] that additionally writes each
+/// movable row's own Z contribution into `row_z[i]` when provided (see
+/// [`repulsive_exact_range_rowz_with`] for the contract).
+pub fn repulsive_bh_range_rowz_with_tree_scratch<const DIM: usize>(
+    pool: &ThreadPool,
+    tree: &BhTree<DIM>,
+    y: &[f32],
+    n: usize,
+    lo: usize,
+    hi: usize,
+    theta: f32,
+    out: &mut [f64],
+    z_parts: &mut Vec<f64>,
+    row_z: Option<&mut [f64]>,
+) -> f64 {
     assert_eq!(out.len(), n * DIM);
+    assert!(lo <= hi && hi <= n, "movable range {lo}..{hi} out of 0..{n}");
+    let count = hi - lo;
+    z_parts.clear();
+    if count == 0 {
+        return 0.0;
+    }
+    let rz = row_z.map(|s| {
+        assert_eq!(s.len(), n);
+        SendPtr(s.as_mut_ptr())
+    });
     let be = simd::backend();
     let oc = SendPtr(out.as_mut_ptr());
     // Deterministic Z reduction (see repulsive_exact).
     const CHUNK: usize = 64;
-    let n_chunks = n.div_ceil(CHUNK);
-    z_parts.clear();
+    let n_chunks = count.div_ceil(CHUNK);
     z_parts.resize(n_chunks, 0f64);
     let zc = SendPtr(z_parts.as_mut_ptr());
     // One SoA candidate batch per pool worker, reused across its points.
-    pool.scope_chunks_with(n, CHUNK, SummaryBatch::<DIM>::new, |batch, lo, hi| {
-        let _ = (&oc, &zc);
+    pool.scope_chunks_with(count, CHUNK, SummaryBatch::<DIM>::new, |batch, clo, chi| {
+        let _ = (&oc, &zc, &rz);
         let mut z_local = 0f64;
-        for i in lo..hi {
+        for i in lo + clo..lo + chi {
             let mut yi = [0f32; DIM];
             yi.copy_from_slice(&y[i * DIM..(i + 1) * DIM]);
             let mut f = [0f64; DIM];
-            z_local += tree.repulsion_with(be, i as u32, &yi, theta, &mut f, batch);
+            let z_row = tree.repulsion_with(be, i as u32, &yi, theta, &mut f, batch);
+            z_local += z_row;
+            if let Some(rz) = &rz {
+                // SAFETY: disjoint rows across chunks.
+                unsafe { *rz.0.add(i) = z_row };
+            }
             let row = unsafe { std::slice::from_raw_parts_mut(oc.0.add(i * DIM), DIM) };
             row.copy_from_slice(&f);
         }
         // SAFETY: one chunk writes exactly one slot.
-        unsafe { *zc.0.add(lo / CHUNK) = z_local };
+        unsafe { *zc.0.add(clo / CHUNK) = z_local };
     });
     z_parts.iter().sum()
 }

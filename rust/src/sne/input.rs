@@ -13,8 +13,10 @@
 
 use super::perplexity::conditional_probabilities;
 use super::sparse::Csr;
-use crate::knn::{KnnBackend, KnnResult};
+use super::KnnChoice;
+use crate::knn::{BruteKnn, KnnBackend, KnnResult};
 use crate::util::{Stopwatch, ThreadPool};
+use crate::vptree::{VpArena, VpTree};
 
 /// Timing breakdown of the input-similarity stage (reported by the
 /// pipeline and the benches).
@@ -48,14 +50,87 @@ pub fn joint_probabilities(
     backend: &dyn KnnBackend,
     seed: u64,
 ) -> (Csr, InputStageStats) {
-    let k_req = (3.0 * perplexity).floor() as usize;
-    let k_req = k_req.min(n - 1).max(1);
+    let k_req = knn_width(n, perplexity);
     let mut stats = InputStageStats::default();
 
     let sw = Stopwatch::start();
-    let KnnResult { indices, mut distances, k, build_secs, query_secs } =
-        backend.knn_all(pool, x, n, dim, k_req, seed);
+    let knn = backend.knn_all(pool, x, n, dim, k_req, seed);
     stats.knn_secs = sw.elapsed_secs();
+
+    let p = joint_from_knn(pool, knn, n, perplexity, &mut stats);
+    (p, stats)
+}
+
+/// The §4.1 input stage, keeping the fitted vp-tree: what
+/// [`crate::sne::TsneRunner::fit`] runs. The vp-tree is always built —
+/// it is the model artifact out-of-sample `transform` queries against —
+/// and also answers the training kNN unless the brute-force backend was
+/// requested (in which case brute answers the queries and the tree is
+/// kept for serving only).
+pub struct InputArtifacts {
+    /// Symmetrized joint P (sums to 1).
+    pub p: Csr,
+    pub stats: InputStageStats,
+    /// The fitted input-space vp-tree, detached from the data rows.
+    pub vp: VpArena,
+}
+
+/// [`joint_probabilities`] variant that returns the built vp-tree arena
+/// alongside P (the fit path). `n ≥ 2` (enforced by the runner).
+pub fn joint_probabilities_with_tree(
+    pool: &ThreadPool,
+    x: &[f32],
+    n: usize,
+    dim: usize,
+    perplexity: f64,
+    knn: KnnChoice,
+    seed: u64,
+) -> InputArtifacts {
+    let k_req = knn_width(n, perplexity);
+    let mut stats = InputStageStats::default();
+
+    let sw = Stopwatch::start();
+    let tree = VpTree::build_parallel(pool, x, n, dim, seed);
+    let build_secs = sw.elapsed_secs();
+    let knn_result = match knn {
+        KnnChoice::VpTree => {
+            let sw = Stopwatch::start();
+            let (indices, distances) = tree.knn_all(pool, k_req);
+            KnnResult {
+                indices,
+                distances,
+                k: k_req.min(n - 1),
+                build_secs,
+                query_secs: sw.elapsed_secs(),
+            }
+        }
+        KnnChoice::Brute => {
+            let mut r = BruteKnn.knn_all(pool, x, n, dim, k_req, seed);
+            r.build_secs = build_secs; // the tree is still a fit cost
+            r
+        }
+    };
+    stats.knn_secs = build_secs + knn_result.query_secs;
+    let p = joint_from_knn(pool, knn_result, n, perplexity, &mut stats);
+    InputArtifacts { p, stats, vp: tree.into_arena() }
+}
+
+/// Neighbor-list width ⌊3u⌋ clamped to the dataset (paper §4.1).
+fn knn_width(n: usize, perplexity: f64) -> usize {
+    let k = (3.0 * perplexity).floor() as usize;
+    k.min(n - 1).max(1)
+}
+
+/// Shared tail of the input stage: squared distances → bandwidth solve →
+/// streaming conditional CSR → counting-transpose symmetrization.
+fn joint_from_knn(
+    pool: &ThreadPool,
+    knn: KnnResult,
+    n: usize,
+    perplexity: f64,
+    stats: &mut InputStageStats,
+) -> Csr {
+    let KnnResult { indices, mut distances, k, build_secs, query_secs } = knn;
     stats.knn_build_secs = build_secs;
     stats.knn_query_secs = query_secs;
 
@@ -63,8 +138,7 @@ pub fn joint_probabilities(
     // empty distribution — return it cleanly instead of handing empty
     // rows to the bandwidth search.
     if k == 0 {
-        let empty = Csr { n_rows: n, indptr: vec![0u32; n + 1], indices: Vec::new(), values: Vec::new() };
-        return (empty, stats);
+        return Csr { n_rows: n, indptr: vec![0u32; n + 1], indices: Vec::new(), values: Vec::new() };
     }
 
     // Squared distances for the Gaussian kernel, in place — the kNN
@@ -73,7 +147,14 @@ pub fn joint_probabilities(
     for d in distances.iter_mut() {
         *d *= *d;
     }
-    let cond = conditional_probabilities(pool, &distances, n, k, perplexity.min(k as f64), 1e-5);
+    let cond = conditional_probabilities(
+        pool,
+        &distances,
+        n,
+        k,
+        perplexity.min(k as f64),
+        super::perplexity::DEFAULT_TOL,
+    );
     stats.perplexity_failures = cond.failures;
     stats.perplexity_secs = sw.elapsed_secs();
 
@@ -84,7 +165,7 @@ pub fn joint_probabilities(
     let joint = conditional.symmetrize_parallel(pool);
     stats.symmetrize_secs = sw.elapsed_secs();
     stats.nnz = joint.nnz();
-    (joint, stats)
+    joint
 }
 
 #[cfg(test)]
@@ -181,6 +262,33 @@ mod tests {
         assert_eq!(p.row(0).0.len(), 0);
         assert_eq!(stats.nnz, 0);
         assert_eq!(stats.perplexity_failures, 0);
+    }
+
+    #[test]
+    fn with_tree_variant_matches_plain_stage() {
+        let (n, dim) = (350, 6);
+        let x = random_data(n, dim, 11);
+        let pool = ThreadPool::new(4);
+        let (p_plain, _) = joint_probabilities(&pool, &x, n, dim, 12.0, &VpTreeKnn, 7);
+        let art = joint_probabilities_with_tree(&pool, &x, n, dim, 12.0, crate::sne::KnnChoice::VpTree, 7);
+        // Same seed → same vp-tree → same kNN rows → identical P.
+        assert_eq!(p_plain, art.p);
+        assert_eq!(art.vp.len(), n);
+        assert_eq!(art.vp.dim(), dim);
+        // The arena must answer queries without a rebuild.
+        let view = art.vp.view(&x);
+        let nn = view.knn(&x[0..dim], 3, Some(0));
+        assert_eq!(nn.len(), 3);
+    }
+
+    #[test]
+    fn with_tree_brute_backend_still_keeps_tree() {
+        let (n, dim) = (120, 4);
+        let x = random_data(n, dim, 13);
+        let pool = ThreadPool::new(2);
+        let art = joint_probabilities_with_tree(&pool, &x, n, dim, 8.0, crate::sne::KnnChoice::Brute, 5);
+        assert!((art.p.sum() - 1.0).abs() < 1e-4);
+        assert_eq!(art.vp.len(), n);
     }
 
     #[test]

@@ -5,12 +5,14 @@
 pub mod engine;
 pub mod gradient;
 pub mod input;
+pub mod model;
 pub mod optimizer;
 pub mod perplexity;
 pub mod sparse;
 
 pub use engine::{DynForceEngine, EngineStats, ForceEngine};
 pub use gradient::RepulsionMethod;
+pub use model::{TransformOptions, TransformResult, TransformStats, TsneModel};
 pub use sparse::Csr;
 
 use crate::knn::{BruteKnn, KnnBackend, VpTreeKnn};
@@ -200,33 +202,87 @@ impl TsneRunner {
     }
 
     /// Embed `x` (row-major `n × dim`). Returns the embedding, row-major
-    /// `n × out_dim`.
+    /// `n × out_dim`. Thin wrapper over the fit path ([`TsneRunner::fit`]
+    /// minus the model assembly — no copy of `x` or serving artifacts are
+    /// kept, and the brute-force backend skips the vp-tree build) —
+    /// callers who want to keep serving out-of-sample queries (or persist
+    /// the run) should call `fit` and hold on to the [`TsneModel`].
     pub fn run(&mut self, x: &[f32], dim: usize) -> anyhow::Result<Vec<f32>> {
+        Ok(self.fit_core(x, dim, false)?.0)
+    }
+
+    /// The full fit: input similarities (Eq. 6/7) → gradient descent,
+    /// keeping every frozen artifact the serving path needs — the fitted
+    /// vp-tree (no rebuild on load), the joint P, the final embedding,
+    /// the config, and the run stats — as a persistable [`TsneModel`]
+    /// (which owns a copy of the reference rows).
+    pub fn fit(&mut self, x: &[f32], dim: usize) -> anyhow::Result<TsneModel> {
+        let (y, vp, p) = self.fit_core(x, dim, true)?;
+        Ok(TsneModel {
+            config: self.config.clone(),
+            dim,
+            n: x.len() / dim,
+            x: x.to_vec(),
+            labels: Vec::new(),
+            pca: None,
+            vp: vp.expect("fit keeps the vp-tree"),
+            p,
+            embedding: y,
+            stats: self.stats.clone(),
+        })
+    }
+
+    /// Shared fit machinery: returns `(embedding, vp-tree arena, joint P)`
+    /// without copying `x` or assembling a model. `keep_tree` is what the
+    /// fit path sets: the vp-tree becomes the serving artifact (and is
+    /// built even for the brute backend); the run path skips it so
+    /// `--brute-knn` keeps avoiding tree construction entirely.
+    fn fit_core(
+        &mut self,
+        x: &[f32],
+        dim: usize,
+        keep_tree: bool,
+    ) -> anyhow::Result<(Vec<f32>, Option<crate::vptree::VpArena>, Csr)> {
         let n = x.len() / dim;
         anyhow::ensure!(n * dim == x.len(), "x length {} not divisible by dim {dim}", x.len());
         anyhow::ensure!(n >= 2, "need at least 2 points");
         let total_sw = Stopwatch::start();
 
         // ---- Input similarities (Eq. 6/7) ----
-        let backend: &dyn KnnBackend = match self.config.knn {
-            KnnChoice::VpTree => &VpTreeKnn,
-            KnnChoice::Brute => &BruteKnn,
+        let (mut p, vp) = if keep_tree {
+            let artifacts = input::joint_probabilities_with_tree(
+                &self.pool,
+                x,
+                n,
+                dim,
+                self.config.perplexity,
+                self.config.knn,
+                self.config.seed,
+            );
+            self.stats.input_stage = artifacts.stats;
+            (artifacts.p, Some(artifacts.vp))
+        } else {
+            let backend: &dyn KnnBackend = match self.config.knn {
+                KnnChoice::VpTree => &VpTreeKnn,
+                KnnChoice::Brute => &BruteKnn,
+            };
+            let (p, stats) = input::joint_probabilities(
+                &self.pool,
+                x,
+                n,
+                dim,
+                self.config.perplexity,
+                backend,
+                self.config.seed,
+            );
+            self.stats.input_stage = stats;
+            (p, None)
         };
-        let (mut p, input_stats) = input::joint_probabilities(
-            &self.pool,
-            x,
-            n,
-            dim,
-            self.config.perplexity,
-            backend,
-            self.config.seed,
-        );
-        self.stats.input_stage = input_stats;
 
-        // ---- Optimize ----
+        // ---- Optimize (leaves P un-exaggerated) ----
         let y = self.optimize(&mut p, n)?;
         self.stats.total_secs = total_sw.elapsed_secs();
-        Ok(y)
+        Ok((y, vp, p))
     }
 
     /// Run the gradient loop on a pre-computed joint distribution

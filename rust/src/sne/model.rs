@@ -1,0 +1,706 @@
+//! Fit/transform model layer: the persistable product of a t-SNE fit and
+//! the frozen-reference out-of-sample embedding.
+//!
+//! [`TsneModel`] is what [`crate::sne::TsneRunner::fit`] produces. It owns
+//! the frozen artifacts of the run: the config, the (post-PCA) reference
+//! rows, the fitted input-space vp-tree arena (serialized as-is — a
+//! loaded model answers kNN queries with **no rebuild**), the symmetrized
+//! joint P, the final embedding, the run stats, and optionally the labels
+//! and the PCA projection the pipeline applied before fitting. The model
+//! serializes via a versioned, checksummed little-endian binary format
+//! (see [`crate::data::io::write_model`]).
+//!
+//! # Out-of-sample transform
+//!
+//! [`TsneModel::transform`] places new points into the existing map
+//! without re-running the O(N log N) optimization, reusing exactly the
+//! machinery §4.1 builds for the fit:
+//!
+//! 1. **Attach** — each query is kNN-searched against the fitted vp-tree
+//!    (batched, one warm [`SearchScratch`] per worker) and its perplexity
+//!    row is solved with the same kernel-backed bisection
+//!    ([`solve_row`]) the fit used. This stage performs **zero heap
+//!    allocation per query** (asserted by tests via the scratch capacity
+//!    snapshots).
+//! 2. **Initialize** — each query starts at the similarity-weighted
+//!    barycenter of its neighbors' fitted positions.
+//! 3. **Frozen-reference gradient loop** — the Barnes-Hut tree is built
+//!    over the *union* of reference and query points, but the force
+//!    engine's movable range is narrowed to the query rows: frozen
+//!    reference points contribute repulsion through the cell summaries
+//!    yet receive no force accumulation and never move. Each query is
+//!    normalized by its **own** Z (`z_i = Σ_{j≠i} (1+d²)^-1`, via the
+//!    engine's per-row-Z repulsion pass) and its attraction row sums
+//!    to 1, so a query's dynamics are those of embedding it alone against
+//!    the frozen map — placements do not depend on how many queries share
+//!    the batch (batched queries still repel each other through the
+//!    union tree, a second-order effect). Reference rows of the
+//!    attraction CSR are empty — their attractive force is identically
+//!    zero.
+//!
+//! The loop is deterministic (no RNG anywhere in the transform path), so
+//! transforming the same queries against the same model always yields the
+//! same placements.
+
+use super::engine::DynForceEngine;
+use super::gradient::RepulsionMethod;
+use super::perplexity::{solve_row, DEFAULT_TOL};
+use super::sparse::Csr;
+use super::{AttractiveBackend, CpuAttractive, RunStats, TsneConfig};
+use crate::pca::Pca;
+use crate::util::pool::SendPtr;
+use crate::util::{Stopwatch, ThreadPool};
+use crate::vptree::{SearchScratch, VpArena, VpTree};
+use std::path::Path;
+
+/// A fitted, persistable t-SNE model: everything needed to serve
+/// out-of-sample [`TsneModel::transform`] queries against a frozen map.
+#[derive(Debug, Clone)]
+pub struct TsneModel {
+    /// The configuration the model was fit with.
+    pub config: TsneConfig,
+    /// Input dimensionality of the reference rows (post-PCA if the
+    /// pipeline reduced them).
+    pub dim: usize,
+    /// Number of reference points.
+    pub n: usize,
+    /// Reference rows, row-major `n × dim` — the corpus the vp-tree was
+    /// built over and transform queries are matched against.
+    pub x: Vec<f32>,
+    /// Reference labels (empty when the fit had none). Used by placement
+    /// quality evaluation, not by `transform` itself.
+    pub labels: Vec<u8>,
+    /// The PCA projection applied before the fit, when the pipeline
+    /// reduced the input. Raw-space queries must go through
+    /// [`TsneModel::project_input`] before `transform`.
+    pub pca: Option<Pca>,
+    /// Fitted input-space vp-tree arena (dataset-detached; queries view
+    /// it against `x` with no rebuild).
+    pub vp: VpArena,
+    /// Symmetrized joint similarity P of the fit (sums to 1).
+    pub p: Csr,
+    /// Final embedding, row-major `n × config.out_dim`.
+    pub embedding: Vec<f32>,
+    /// Timing/counters of the fit.
+    pub stats: RunStats,
+}
+
+/// Knobs of the frozen-reference transform loop. The defaults favor
+/// stability: each query row of P sums to 1, which makes the attractive
+/// stiffness O(1) (unlike training, where rows sum to ~1/n), so the step
+/// size must stay well below the training η.
+#[derive(Debug, Clone)]
+pub struct TransformOptions {
+    /// Gradient iterations of the frozen-reference loop (0 = barycenter
+    /// init only).
+    pub iters: usize,
+    /// Step size. See the struct docs — this is *not* on the training-η
+    /// scale.
+    pub eta: f64,
+    /// Momentum for the first half of the loop.
+    pub momentum: f64,
+    /// Momentum after the switch at `iters / 2`.
+    pub final_momentum: f64,
+}
+
+impl Default for TransformOptions {
+    fn default() -> Self {
+        TransformOptions { iters: 60, eta: 0.1, momentum: 0.5, final_momentum: 0.8 }
+    }
+}
+
+/// Timing breakdown of one transform call.
+#[derive(Debug, Clone, Default)]
+pub struct TransformStats {
+    /// kNN + perplexity row solve (the zero-allocation attach stage).
+    pub attach_secs: f64,
+    /// Frozen-reference gradient loop (tree refits included).
+    pub opt_secs: f64,
+    pub total_secs: f64,
+    /// Rows whose bandwidth search did not reach tolerance.
+    pub perplexity_failures: usize,
+}
+
+/// Everything a transform call produces.
+#[derive(Debug, Clone)]
+pub struct TransformResult {
+    /// Query placements, row-major `m × out_dim`.
+    pub y: Vec<f32>,
+    /// Nearest reference row (input space) per query — the attach stage
+    /// computes it anyway, and placement-quality checks compare against
+    /// it.
+    pub nn_input: Vec<u32>,
+    pub stats: TransformStats,
+}
+
+/// Attach a block of query rows: batched kNN against the fitted tree
+/// followed by the kernel-backed perplexity row solve, writing straight
+/// into the row-major `rows × k` output arrays. On a warm
+/// `scratch`/`solve_scratch` this performs **zero heap allocation per
+/// query** — the transform hot path, exposed for the allocation tests.
+/// `d2` receives *squared* neighbor distances; `prow` rows sum to 1.
+/// Returns the number of rows whose bandwidth search failed.
+pub fn attach_rows(
+    tree: &VpTree<'_>,
+    xq: &[f32],
+    dim: usize,
+    k: usize,
+    perplexity: f64,
+    scratch: &mut SearchScratch,
+    solve_scratch: &mut Vec<f64>,
+    idx: &mut [u32],
+    d2: &mut [f32],
+    prow: &mut [f32],
+) -> usize {
+    let rows = xq.len() / dim;
+    assert_eq!(xq.len(), rows * dim);
+    assert_eq!(idx.len(), rows * k);
+    assert_eq!(d2.len(), rows * k);
+    assert_eq!(prow.len(), rows * k);
+    let mut failures = 0usize;
+    for i in 0..rows {
+        let q = &xq[i * dim..(i + 1) * dim];
+        let oi = &mut idx[i * k..(i + 1) * k];
+        let od = &mut d2[i * k..(i + 1) * k];
+        let got = tree.knn_into(q, k, None, scratch, oi, od);
+        debug_assert_eq!(got, k, "reference corpus has >= k rows");
+        for d in od.iter_mut() {
+            *d *= *d;
+        }
+        let (_, ok) = solve_row(od, perplexity, DEFAULT_TOL, &mut prow[i * k..(i + 1) * k], solve_scratch);
+        if !ok {
+            failures += 1;
+        }
+    }
+    failures
+}
+
+impl TsneModel {
+    /// Output dimensionality of the embedding.
+    pub fn out_dim(&self) -> usize {
+        self.config.out_dim
+    }
+
+    /// Neighbor-list width the transform attaches with: ⌊3u⌋ clamped to
+    /// the reference size (queries are not in the tree, so all `n`
+    /// reference rows are candidates).
+    pub fn transform_k(&self) -> usize {
+        let k = (3.0 * self.config.perplexity).floor() as usize;
+        k.min(self.n).max(1)
+    }
+
+    /// Persist to the versioned binary model format (see
+    /// [`crate::data::io::write_model`]).
+    pub fn save(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        crate::data::io::write_model(path, self)
+    }
+
+    /// Load a model written by [`TsneModel::save`].
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<TsneModel> {
+        crate::data::io::read_model(path)
+    }
+
+    /// Map raw-space query rows into the model's input space: applies the
+    /// stored PCA projection when the fit used one, otherwise validates
+    /// the dimensionality and passes the rows through. Returns the rows
+    /// and their (model-space) dimensionality.
+    pub fn project_input<'q>(
+        &self,
+        pool: &ThreadPool,
+        xq: &'q [f32],
+        dim: usize,
+    ) -> anyhow::Result<(std::borrow::Cow<'q, [f32]>, usize)> {
+        match &self.pca {
+            Some(pca) => {
+                anyhow::ensure!(
+                    dim == pca.dim,
+                    "query dim {dim} does not match the model's raw input dim {}",
+                    pca.dim
+                );
+                let m = xq.len() / dim;
+                anyhow::ensure!(m * dim == xq.len(), "xq length not divisible by dim");
+                Ok((std::borrow::Cow::Owned(crate::pca::transform(pool, pca, xq, m)), pca.k))
+            }
+            None => {
+                anyhow::ensure!(
+                    dim == self.dim,
+                    "query dim {dim} does not match the model's input dim {}",
+                    self.dim
+                );
+                Ok((std::borrow::Cow::Borrowed(xq), dim))
+            }
+        }
+    }
+
+    /// Embed `xq` (row-major `m × dim`, already in the model's input
+    /// space — see [`TsneModel::project_input`]) into the frozen map with
+    /// default options and a host-sized pool. Returns row-major
+    /// `m × out_dim` placements.
+    pub fn transform(&self, xq: &[f32], dim: usize) -> anyhow::Result<Vec<f32>> {
+        let pool = ThreadPool::for_host();
+        Ok(self.transform_with(&pool, xq, dim, &TransformOptions::default())?.y)
+    }
+
+    /// Full-control transform: explicit pool and options, detailed
+    /// result. See the module docs for the three stages and the
+    /// frozen-reference gradient contract.
+    pub fn transform_with(
+        &self,
+        pool: &ThreadPool,
+        xq: &[f32],
+        dim: usize,
+        opts: &TransformOptions,
+    ) -> anyhow::Result<TransformResult> {
+        anyhow::ensure!(
+            dim == self.dim,
+            "query dim {dim} does not match model input dim {} (raw queries go through project_input)",
+            self.dim
+        );
+        let m = xq.len() / dim;
+        anyhow::ensure!(m * dim == xq.len(), "xq length {} not divisible by dim {dim}", xq.len());
+        anyhow::ensure!(m >= 1, "need at least one query row");
+        let out_dim = self.config.out_dim;
+        anyhow::ensure!(
+            self.embedding.len() == self.n * out_dim,
+            "model embedding shape mismatch: {} != {} * {out_dim}",
+            self.embedding.len(),
+            self.n
+        );
+        let total_sw = Stopwatch::start();
+        let mut stats = TransformStats::default();
+
+        // ---- Stage 1: attach (kNN + perplexity rows, zero alloc/query).
+        let k = self.transform_k();
+        let perplexity = self.config.perplexity.min(k as f64);
+        let mut idx = vec![0u32; m * k];
+        let mut d2 = vec![0f32; m * k];
+        let mut prow = vec![0f32; m * k];
+        let view = self.vp.view(&self.x);
+        let sw = Stopwatch::start();
+        {
+            use std::sync::atomic::{AtomicUsize, Ordering};
+            let failures = AtomicUsize::new(0);
+            let ic = SendPtr(idx.as_mut_ptr());
+            let dc = SendPtr(d2.as_mut_ptr());
+            let pc = SendPtr(prow.as_mut_ptr());
+            let fref = &failures;
+            let view_ref = &view;
+            pool.scope_chunks_with(
+                m,
+                16,
+                || (SearchScratch::new(k), Vec::with_capacity(k)),
+                |(scratch, solve), lo, hi| {
+                    let _ = (&ic, &dc, &pc);
+                    let rows = hi - lo;
+                    // SAFETY: chunk row ranges are disjoint across workers.
+                    let (bi, bd, bp) = unsafe {
+                        (
+                            std::slice::from_raw_parts_mut(ic.0.add(lo * k), rows * k),
+                            std::slice::from_raw_parts_mut(dc.0.add(lo * k), rows * k),
+                            std::slice::from_raw_parts_mut(pc.0.add(lo * k), rows * k),
+                        )
+                    };
+                    let f = attach_rows(
+                        view_ref,
+                        &xq[lo * dim..hi * dim],
+                        dim,
+                        k,
+                        perplexity,
+                        scratch,
+                        solve,
+                        bi,
+                        bd,
+                        bp,
+                    );
+                    if f > 0 {
+                        fref.fetch_add(f, Ordering::Relaxed);
+                    }
+                },
+            );
+            stats.perplexity_failures = failures.load(Ordering::Relaxed);
+        }
+        stats.attach_secs = sw.elapsed_secs();
+        let nn_input: Vec<u32> = (0..m).map(|i| idx[i * k]).collect();
+
+        // ---- Stage 2: barycenter init over the fitted positions.
+        let n_union = self.n + m;
+        let mut y = vec![0f32; n_union * out_dim];
+        y[..self.n * out_dim].copy_from_slice(&self.embedding);
+        for i in 0..m {
+            let mut acc = [0f64; 3];
+            for j in 0..k {
+                let r = idx[i * k + j] as usize;
+                let w = prow[i * k + j] as f64;
+                for d in 0..out_dim {
+                    acc[d] += w * self.embedding[r * out_dim + d] as f64;
+                }
+            }
+            for d in 0..out_dim {
+                y[(self.n + i) * out_dim + d] = acc[d] as f32;
+            }
+        }
+
+        // ---- Stage 3: frozen-reference gradient loop.
+        let sw = Stopwatch::start();
+        if opts.iters > 0 {
+            // Attraction CSR over the union: reference rows empty, query
+            // row i holds its (column-sorted) conditional similarities.
+            let mut indptr = vec![0u32; n_union + 1];
+            for i in 0..m {
+                indptr[self.n + i + 1] = ((i + 1) * k) as u32;
+            }
+            let mut indices = vec![0u32; m * k];
+            let mut values = vec![0f32; m * k];
+            let mut sort_scratch: Vec<(u32, f32)> = Vec::with_capacity(k);
+            for i in 0..m {
+                sort_scratch.clear();
+                for j in 0..k {
+                    sort_scratch.push((idx[i * k + j], prow[i * k + j]));
+                }
+                sort_scratch.sort_unstable_by_key(|&(c, _)| c);
+                for (j, &(c, v)) in sort_scratch.iter().enumerate() {
+                    indices[i * k + j] = c;
+                    values[i * k + j] = v;
+                }
+            }
+            let p_union = Csr { n_rows: n_union, indptr, indices, values };
+
+            // The dual-tree walk computes every point's force at once and
+            // cannot freeze a sub-range; transform maps it to point-cell
+            // Barnes-Hut at the configured θ.
+            let method = match self.config.repulsion_method() {
+                RepulsionMethod::DualTree { .. } => {
+                    if self.config.theta > 0.0 {
+                        RepulsionMethod::BarnesHut { theta: self.config.theta }
+                    } else {
+                        RepulsionMethod::BarnesHut { theta: 0.5 }
+                    }
+                }
+                other => other,
+            };
+            let mut engine = DynForceEngine::with_movable(
+                out_dim,
+                n_union,
+                method,
+                self.config.cell_size,
+                self.n,
+                n_union,
+            );
+            let mut attr = vec![0f64; n_union * out_dim];
+            let mut rep = vec![0f64; n_union * out_dim];
+            let mut row_z = vec![0f64; n_union];
+            let mut vel = vec![0f64; m * out_dim];
+            let switch = opts.iters / 2;
+            for it in 0..opts.iters {
+                CpuAttractive.compute(pool, &p_union, &y, out_dim, &mut attr);
+                engine.repulsive_rowz_into(pool, &y, &mut rep, Some(&mut row_z));
+                let mom = if it < switch { opts.momentum } else { opts.final_momentum };
+                // Per-query gradient 4(F_attr − F_repZ/z_i): each query
+                // normalizes by its own z_i, so its dynamics match being
+                // embedded alone against the frozen map regardless of the
+                // batch size.
+                for qi in 0..m {
+                    let g0 = (self.n + qi) * out_dim;
+                    let zinv = 1.0 / row_z[self.n + qi].max(f64::MIN_POSITIVE);
+                    for d in 0..out_dim {
+                        let grad = 4.0 * (attr[g0 + d] - rep[g0 + d] * zinv);
+                        let v = qi * out_dim + d;
+                        vel[v] = mom * vel[v] - opts.eta * grad;
+                        y[g0 + d] += vel[v] as f32;
+                    }
+                }
+                engine.mark_embedding_moved();
+            }
+        }
+        stats.opt_secs = sw.elapsed_secs();
+        stats.total_secs = total_sw.elapsed_secs();
+
+        let yq = y[self.n * out_dim..].to_vec();
+        Ok(TransformResult { y: yq, nn_input, stats })
+    }
+
+    /// Placement quality: fraction of queries whose nearest *reference*
+    /// point in the embedding carries a different label. Requires the
+    /// model to have labels.
+    pub fn placement_1nn_error(
+        &self,
+        pool: &ThreadPool,
+        yq: &[f32],
+        labels_q: &[u8],
+    ) -> anyhow::Result<f64> {
+        anyhow::ensure!(
+            self.labels.len() == self.n,
+            "model has no reference labels; refit with labels to evaluate placement"
+        );
+        let nn = self.embedding_nn(pool, yq)?;
+        let m = labels_q.len();
+        let wrong = (0..m).filter(|&i| self.labels[nn[i] as usize] != labels_q[i]).count();
+        Ok(wrong as f64 / m.max(1) as f64)
+    }
+
+    /// Nearest reference point (embedding space) for each query placement
+    /// — the serving-side 1-NN lookup.
+    pub fn embedding_nn(&self, pool: &ThreadPool, yq: &[f32]) -> anyhow::Result<Vec<u32>> {
+        let out_dim = self.config.out_dim;
+        let m = yq.len() / out_dim;
+        anyhow::ensure!(m * out_dim == yq.len(), "yq length not divisible by out_dim");
+        let tree = VpTree::build_parallel(pool, &self.embedding, self.n, out_dim, self.config.seed);
+        let mut nn = vec![0u32; m];
+        let nc = SendPtr(nn.as_mut_ptr());
+        let tree_ref = &tree;
+        pool.scope_chunks_with(
+            m,
+            32,
+            || SearchScratch::new(1),
+            |scratch, lo, hi| {
+                let _ = &nc;
+                let mut oi = [0u32; 1];
+                let mut od = [0f32; 1];
+                for i in lo..hi {
+                    let got = tree_ref.knn_into(
+                        &yq[i * out_dim..(i + 1) * out_dim],
+                        1,
+                        None,
+                        scratch,
+                        &mut oi,
+                        &mut od,
+                    );
+                    debug_assert_eq!(got, 1);
+                    // SAFETY: disjoint slots across chunks.
+                    unsafe { *nc.0.add(i) = oi[0] };
+                }
+            },
+        );
+        Ok(nn)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{gaussian_mixture, SyntheticSpec};
+    use crate::eval;
+    use crate::sne::TsneRunner;
+
+    fn fit_small(n: usize, seed: u64) -> (TsneModel, crate::data::Dataset) {
+        let spec =
+            SyntheticSpec { n, dim: 8, classes: 3, class_sep: 6.0, seed, ..Default::default() };
+        let data = gaussian_mixture(&spec);
+        let cfg = TsneConfig {
+            iters: 150,
+            exaggeration_iters: 40,
+            cost_every: 50,
+            perplexity: 15.0,
+            seed: 3,
+            ..Default::default()
+        };
+        let mut runner = TsneRunner::new(cfg);
+        let mut model = runner.fit(&data.x, data.dim).unwrap();
+        model.labels = data.labels.clone();
+        (model, data)
+    }
+
+    #[test]
+    fn fit_produces_consistent_model() {
+        let (model, data) = fit_small(240, 5);
+        assert_eq!(model.n, 240);
+        assert_eq!(model.dim, data.dim);
+        assert_eq!(model.x, data.x);
+        assert_eq!(model.embedding.len(), 240 * 2);
+        assert_eq!(model.vp.len(), 240);
+        assert!((model.p.sum() - 1.0).abs() < 1e-4);
+        assert!(model.stats.final_kl.is_some());
+        assert!(model.embedding.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn run_is_a_thin_wrapper_over_fit() {
+        let spec = SyntheticSpec { n: 120, dim: 6, classes: 2, seed: 9, ..Default::default() };
+        let data = gaussian_mixture(&spec);
+        let cfg = TsneConfig {
+            iters: 60,
+            exaggeration_iters: 15,
+            cost_every: 30,
+            seed: 4,
+            ..Default::default()
+        };
+        let y_run = TsneRunner::new(cfg.clone()).run(&data.x, data.dim).unwrap();
+        let model = TsneRunner::new(cfg).fit(&data.x, data.dim).unwrap();
+        assert_eq!(y_run, model.embedding);
+    }
+
+    #[test]
+    fn transform_training_points_land_near_fitted_positions() {
+        let (model, data) = fit_small(300, 6);
+        // Transform a subsample of the training rows themselves.
+        let take = 40usize;
+        let q: Vec<f32> = data.x[..take * data.dim].to_vec();
+        let yq = model.transform(&q, data.dim).unwrap();
+        assert!(yq.iter().all(|v| v.is_finite()));
+        // Embedding diameter.
+        let (mut lo, mut hi) = ([f32::MAX; 2], [f32::MIN; 2]);
+        for i in 0..model.n {
+            for d in 0..2 {
+                lo[d] = lo[d].min(model.embedding[i * 2 + d]);
+                hi[d] = hi[d].max(model.embedding[i * 2 + d]);
+            }
+        }
+        let diam = (((hi[0] - lo[0]).powi(2) + (hi[1] - lo[1]).powi(2)) as f64).sqrt();
+        let mut dists: Vec<f64> = (0..take)
+            .map(|i| {
+                let dx = (yq[i * 2] - model.embedding[i * 2]) as f64;
+                let dy = (yq[i * 2 + 1] - model.embedding[i * 2 + 1]) as f64;
+                (dx * dx + dy * dy).sqrt()
+            })
+            .collect();
+        dists.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = dists[take / 2];
+        let worst = *dists.last().unwrap();
+        // "Small radius": well inside the local cluster scale, not merely
+        // inside the map. Thresholds are generous against run-to-run
+        // layout variation; the held-out agreement test is the sharp
+        // functional check.
+        assert!(median < 0.2 * diam, "median {median} vs diameter {diam}");
+        assert!(worst < 0.6 * diam, "worst {worst} vs diameter {diam}");
+        // And every training query's nearest input-space neighbor is
+        // itself (distance 0).
+        let pool = ThreadPool::new(2);
+        let r = model
+            .transform_with(&pool, &q, data.dim, &TransformOptions::default())
+            .unwrap();
+        for (i, &nn) in r.nn_input.iter().enumerate() {
+            assert_eq!(nn as usize, i, "training query {i} did not find itself");
+        }
+    }
+
+    #[test]
+    fn transform_held_out_agreement_tracks_fitted_quality() {
+        // Fit on the first rows of a mixture; hold out the tail. The
+        // transformed placements' 1-NN label error must stay within 0.1
+        // of the fitted embedding's own 1-NN error (the acceptance bar).
+        let spec = SyntheticSpec {
+            n: 360,
+            dim: 8,
+            classes: 3,
+            class_sep: 6.0,
+            seed: 12,
+            ..Default::default()
+        };
+        let data = gaussian_mixture(&spec);
+        let n_fit = 300usize;
+        let cfg = TsneConfig {
+            iters: 180,
+            exaggeration_iters: 50,
+            cost_every: 0,
+            perplexity: 15.0,
+            seed: 8,
+            ..Default::default()
+        };
+        let mut runner = TsneRunner::new(cfg);
+        let mut model = runner.fit(&data.x[..n_fit * data.dim], data.dim).unwrap();
+        model.labels = data.labels[..n_fit].to_vec();
+        let pool = ThreadPool::new(4);
+        let q = &data.x[n_fit * data.dim..];
+        let q_labels = &data.labels[n_fit..];
+        let r = model.transform_with(&pool, q, data.dim, &TransformOptions::default()).unwrap();
+        assert!(r.y.iter().all(|v| v.is_finite()));
+        assert_eq!(r.stats.perplexity_failures, 0);
+        let placement_err = model.placement_1nn_error(&pool, &r.y, q_labels).unwrap();
+        let fitted_err =
+            eval::one_nn_error(&pool, &model.embedding, 2, &model.labels);
+        assert!(
+            placement_err <= fitted_err + 0.1,
+            "placement 1-NN error {placement_err} vs fitted {fitted_err}"
+        );
+    }
+
+    #[test]
+    fn attach_stage_allocates_nothing_on_warm_scratch() {
+        let (model, data) = fit_small(200, 7);
+        let k = model.transform_k();
+        let view = model.vp.view(&model.x);
+        let rows = 24usize;
+        let q = &data.x[..rows * data.dim];
+        let mut idx = vec![0u32; rows * k];
+        let mut d2 = vec![0f32; rows * k];
+        let mut prow = vec![0f32; rows * k];
+        let mut scratch = SearchScratch::new(k);
+        let mut solve: Vec<f64> = Vec::with_capacity(k);
+        // Warm-up pass, then snapshot.
+        attach_rows(&view, q, data.dim, k, 15.0, &mut scratch, &mut solve, &mut idx, &mut d2, &mut prow);
+        let caps = (scratch.capacities(), solve.capacity());
+        for _ in 0..3 {
+            let failures = attach_rows(
+                &view, q, data.dim, k, 15.0, &mut scratch, &mut solve, &mut idx, &mut d2, &mut prow,
+            );
+            assert_eq!(failures, 0);
+            assert_eq!((scratch.capacities(), solve.capacity()), caps, "attach stage allocated");
+        }
+        // Rows are valid distributions over real neighbors.
+        for i in 0..rows {
+            let s: f32 = prow[i * k..(i + 1) * k].iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "row {i} sums to {s}");
+            assert!(idx[i * k..(i + 1) * k].iter().all(|&c| (c as usize) < model.n));
+        }
+    }
+
+    #[test]
+    fn transform_is_deterministic() {
+        let (model, data) = fit_small(180, 8);
+        let q = &data.x[..20 * data.dim];
+        let a = model.transform(q, data.dim).unwrap();
+        let b = model.transform(q, data.dim).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn transform_placement_is_batch_size_independent() {
+        // Per-query Z normalization: a query placed alone must land where
+        // it lands inside a batch (up to the second-order query-query
+        // repulsion through the union tree).
+        let (model, data) = fit_small(250, 11);
+        let pool = ThreadPool::new(2);
+        let opts = TransformOptions::default();
+        let batch = &data.x[..12 * data.dim];
+        let alone = model.transform_with(&pool, &batch[..data.dim], data.dim, &opts).unwrap();
+        let batched = model.transform_with(&pool, batch, data.dim, &opts).unwrap();
+        let (mut lo, mut hi) = (f32::MAX, f32::MIN);
+        for &v in &model.embedding {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        let diam = (hi - lo) as f64 * std::f64::consts::SQRT_2;
+        let dx = (alone.y[0] - batched.y[0]) as f64;
+        let dy = (alone.y[1] - batched.y[1]) as f64;
+        let dist = (dx * dx + dy * dy).sqrt();
+        assert!(dist < 0.05 * diam, "alone-vs-batched drift {dist} (diameter ~{diam})");
+    }
+
+    #[test]
+    fn transform_rejects_bad_dim() {
+        let (model, _) = fit_small(60, 9);
+        assert!(model.transform(&[0.0f32; 7], 7).is_err());
+        assert!(model.transform(&[], model.dim).is_err());
+    }
+
+    #[test]
+    fn barycenter_only_transform_matches_neighbors() {
+        // iters = 0 short-circuits the gradient loop: placements are pure
+        // similarity-weighted barycenters — finite and inside the hull.
+        let (model, data) = fit_small(150, 10);
+        let pool = ThreadPool::new(2);
+        let opts = TransformOptions { iters: 0, ..Default::default() };
+        let r = model.transform_with(&pool, &data.x[..10 * data.dim], data.dim, &opts).unwrap();
+        let (mut lo, mut hi) = (f32::MAX, f32::MIN);
+        for &v in &model.embedding {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        for &v in &r.y {
+            assert!(v.is_finite() && v >= lo && v <= hi, "{v} outside [{lo}, {hi}]");
+        }
+    }
+}

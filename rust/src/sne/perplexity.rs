@@ -11,6 +11,11 @@ use crate::util::pool::SendPtr;
 use crate::util::simd::{self, Backend};
 use crate::util::ThreadPool;
 
+/// Bisection tolerance |H(β) − log u| the pipeline uses everywhere (the
+/// reference implementation's value). Exposed so the model layer's
+/// out-of-sample row solves match the fit path exactly.
+pub const DEFAULT_TOL: f64 = 1e-5;
+
 /// Result of the conditional-distribution computation.
 #[derive(Debug, Clone)]
 pub struct CondP {

@@ -90,6 +90,8 @@ impl CommandSpec {
 #[derive(Debug, Clone, Default)]
 pub struct Parsed {
     values: BTreeMap<String, String>,
+    /// Option names the user explicitly supplied (vs spec defaults).
+    explicit: std::collections::BTreeSet<String>,
     flags: Vec<String>,
     pub positional: Vec<String>,
 }
@@ -97,6 +99,13 @@ pub struct Parsed {
 impl Parsed {
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
+    }
+
+    /// Whether `--name` was explicitly supplied on the command line
+    /// (seeded spec defaults return false). Lets callers layer precedence
+    /// as explicit CLI > config file > spec default.
+    pub fn provided(&self, name: &str) -> bool {
+        self.explicit.contains(name)
     }
 
     pub fn str(&self, name: &str) -> Option<&str> {
@@ -175,6 +184,7 @@ pub fn parse(spec: &CommandSpec, prog: &str, args: &[String]) -> Result<Parsed, 
                     }
                 };
                 parsed.values.insert(name.to_string(), val);
+                parsed.explicit.insert(name.to_string());
             } else {
                 if inline_val.is_some() {
                     return Err(ArgError::Invalid(format!("--{name} takes no value")));
@@ -222,6 +232,9 @@ mod tests {
         assert_eq!(p.get::<f64>("theta").unwrap(), 0.5);
         assert_eq!(p.str("dataset"), Some("mnist"));
         assert!(!p.flag("verbose"));
+        // Seeded defaults are not "provided"; explicit values are.
+        assert!(!p.provided("theta"));
+        assert!(p.provided("dataset"));
     }
 
     #[test]

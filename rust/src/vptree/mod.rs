@@ -33,6 +33,12 @@
 //!   performs no per-query allocation.
 //! * The metric is pluggable ([`Metric`]); Euclidean over `f32` rows is
 //!   the default and what every experiment uses, matching the paper.
+//! * The node arena detaches from the borrowed dataset: a built tree
+//!   converts into an owned [`VpArena`] (what [`crate::sne::TsneModel`]
+//!   persists — the arena serializes as raw little-endian node records, so
+//!   a loaded model answers queries with **no rebuild**), and
+//!   [`VpArena::view`] re-attaches it to a dataset slice as a borrowing
+//!   [`VpTree`] in O(1).
 
 mod metric;
 mod search;
@@ -42,6 +48,8 @@ pub use search::{NeighborHeap, SearchScratch};
 
 use crate::util::pool::SendPtr;
 use crate::util::{Pcg32, ThreadPool};
+use byteorder::{LittleEndian, ReadBytesExt, WriteBytesExt};
+use std::borrow::Cow;
 
 const NO_CHILD: u32 = u32::MAX;
 
@@ -114,13 +122,135 @@ struct Subtree<'t> {
 }
 
 /// A built vantage-point tree over a borrowed row-major dataset.
+///
+/// The node arena is copy-on-write: trees built in place own it, while
+/// [`VpArena::view`] re-attaches a persisted arena without cloning.
 pub struct VpTree<'a, M: Metric = Euclidean> {
     data: &'a [f32],
     dim: usize,
     n: usize,
-    nodes: Vec<Node>,
+    nodes: Cow<'a, [Node]>,
     root: u32,
     metric: M,
+}
+
+/// An owned, dataset-detached vp-tree node arena — the persistable form
+/// of a built [`VpTree`].
+///
+/// The arena is a pure function of `(n, dim, seed, data)`; it stores no
+/// row data itself, only the node records (vantage index, ball radius,
+/// child links). [`VpArena::view`] rebinds it to the dataset slice it was
+/// built over (same `n × dim` rows) in O(1), so persisted models answer
+/// kNN queries without any rebuild. Serialization is raw little-endian
+/// node records (`item:u32, radius:f32-bits, left:u32, right:u32`), so a
+/// save/load round trip is bit-identical.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VpArena {
+    nodes: Vec<Node>,
+    root: u32,
+    n: usize,
+    dim: usize,
+}
+
+impl VpArena {
+    /// Number of indexed points.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Dimensionality of the rows the arena was built over.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Re-attach the arena to its dataset (the same row-major `n × dim`
+    /// slice it was built over) as a borrowing [`VpTree`]. O(1) — the
+    /// node arena is borrowed, not cloned.
+    pub fn view<'a>(&'a self, data: &'a [f32]) -> VpTree<'a, Euclidean> {
+        assert!(data.len() >= self.n * self.dim, "data shorter than n*dim");
+        VpTree {
+            data,
+            dim: self.dim,
+            n: self.n,
+            nodes: Cow::Borrowed(&self.nodes),
+            root: self.root,
+            metric: Euclidean,
+        }
+    }
+
+    /// Serialize as little-endian records (header + one 16-byte record
+    /// per node). The inverse of [`VpArena::read_from`].
+    pub fn write_into(&self, w: &mut impl std::io::Write) -> std::io::Result<()> {
+        w.write_u64::<LittleEndian>(self.n as u64)?;
+        w.write_u32::<LittleEndian>(self.dim as u32)?;
+        w.write_u32::<LittleEndian>(self.root)?;
+        w.write_u64::<LittleEndian>(self.nodes.len() as u64)?;
+        for node in &self.nodes {
+            w.write_u32::<LittleEndian>(node.item)?;
+            w.write_u32::<LittleEndian>(node.radius.to_bits())?;
+            w.write_u32::<LittleEndian>(node.left)?;
+            w.write_u32::<LittleEndian>(node.right)?;
+        }
+        Ok(())
+    }
+
+    /// Deserialize an arena written by [`VpArena::write_into`]. Validates
+    /// the structural invariants (arena length = n, root and child links
+    /// in range) so a corrupted payload fails here instead of during a
+    /// search.
+    pub fn read_from(r: &mut impl std::io::Read) -> anyhow::Result<VpArena> {
+        let n = r.read_u64::<LittleEndian>()? as usize;
+        let dim = r.read_u32::<LittleEndian>()? as usize;
+        let root = r.read_u32::<LittleEndian>()?;
+        let n_nodes = r.read_u64::<LittleEndian>()? as usize;
+        anyhow::ensure!(n_nodes == n, "vp arena node count {n_nodes} != n {n}");
+        anyhow::ensure!(n > 0 && dim > 0, "empty vp arena");
+        // Bound before allocating: a corrupt header must fail with an
+        // error, not abort on an absurd Vec::with_capacity.
+        anyhow::ensure!(n_nodes < (1 << 33), "implausible vp arena size {n_nodes}");
+        anyhow::ensure!((root as usize) < n, "vp arena root {root} out of range");
+        // Capacity hint capped: a corrupt header claiming a huge arena
+        // then fails on the record reads long before the Vec grows —
+        // never an up-front multi-GiB allocation.
+        let mut nodes = Vec::with_capacity(n_nodes.min(1 << 20));
+        // Structural validation beyond index ranges: items must form a
+        // permutation of 0..n (else some points are silently unreachable
+        // from every search), and no node may be referenced as a child
+        // twice or be the root — with at most one parent each and a
+        // parentless root, no reachable cycle can exist, so the iterative
+        // search DFS always terminates.
+        let mut seen_item = vec![false; n];
+        let mut has_parent = vec![false; n];
+        for i in 0..n_nodes {
+            let item = r.read_u32::<LittleEndian>()?;
+            let radius = f32::from_bits(r.read_u32::<LittleEndian>()?);
+            let left = r.read_u32::<LittleEndian>()?;
+            let right = r.read_u32::<LittleEndian>()?;
+            anyhow::ensure!((item as usize) < n, "vp arena node {i}: item {item} out of range");
+            anyhow::ensure!(!seen_item[item as usize], "vp arena node {i}: duplicate item {item}");
+            seen_item[item as usize] = true;
+            for link in [left, right] {
+                anyhow::ensure!(
+                    link == NO_CHILD || (link as usize) < n,
+                    "vp arena node {i}: child link {link} out of range"
+                );
+                if link != NO_CHILD {
+                    anyhow::ensure!(link != root, "vp arena node {i}: root referenced as child");
+                    anyhow::ensure!(
+                        !has_parent[link as usize],
+                        "vp arena node {i}: node {link} has two parents"
+                    );
+                    has_parent[link as usize] = true;
+                }
+            }
+            nodes.push(Node { item, radius, left, right });
+        }
+        Ok(VpArena { nodes, root, n, dim })
+    }
 }
 
 impl<'a> VpTree<'a, Euclidean> {
@@ -150,7 +280,7 @@ impl<'a, M: Metric> VpTree<'a, M> {
         let mut nodes = vec![EMPTY_NODE; n];
         let mut scratch: Vec<(f32, u32)> = Vec::with_capacity(n.saturating_sub(1));
         Self::build_range(data, dim, &metric, &mut items, &mut nodes, 0, &picks, &mut scratch);
-        VpTree { data, dim, n, nodes, root: 0, metric }
+        VpTree { data, dim, n, nodes: Cow::Owned(nodes), root: 0, metric }
     }
 
     /// Parallel build: the top partitions run their distance passes on the
@@ -215,7 +345,14 @@ impl<'a, M: Metric> VpTree<'a, M> {
                 });
             }
         });
-        VpTree { data, dim, n, nodes, root: 0, metric }
+        VpTree { data, dim, n, nodes: Cow::Owned(nodes), root: 0, metric }
+    }
+
+    /// Detach the owned node arena from the borrowed dataset — what the
+    /// model layer persists. O(1) when the tree owns its arena (every
+    /// built tree does); clones only for arena-backed views.
+    pub fn into_arena(self) -> VpArena {
+        VpArena { nodes: self.nodes.into_owned(), root: self.root, n: self.n, dim: self.dim }
     }
 
     fn row(data: &[f32], dim: usize, i: u32) -> &[f32] {
@@ -754,6 +891,51 @@ mod tests {
         let nn1 = t1.knn(&data[0..dim], 8, Some(0));
         let nn2 = t2.knn(&data[0..dim], 8, Some(0));
         assert_eq!(nn1, nn2);
+    }
+
+    #[test]
+    fn arena_view_answers_identically_to_built_tree() {
+        let (n, dim, k) = (250, 4, 9);
+        let data = random_points(n, dim, 31);
+        let built = VpTree::build(&data, n, dim, 17);
+        let arena = VpTree::build(&data, n, dim, 17).into_arena();
+        assert_eq!(arena.len(), n);
+        assert_eq!(arena.dim(), dim);
+        let view = arena.view(&data);
+        for q in (0..n).step_by(7) {
+            let row = &data[q * dim..(q + 1) * dim];
+            assert_eq!(
+                built.knn(row, k, Some(q as u32)),
+                view.knn(row, k, Some(q as u32)),
+                "query {q}"
+            );
+        }
+    }
+
+    #[test]
+    fn arena_serialization_roundtrips_bit_identically() {
+        let (n, dim) = (300, 5);
+        let data = random_points(n, dim, 33);
+        let arena = VpTree::build(&data, n, dim, 5).into_arena();
+        let mut buf = Vec::new();
+        arena.write_into(&mut buf).unwrap();
+        let back = VpArena::read_from(&mut &buf[..]).unwrap();
+        assert_eq!(arena, back);
+        // Truncated payload must fail cleanly, not panic.
+        for cut in [0usize, 8, buf.len() / 2, buf.len() - 1] {
+            assert!(VpArena::read_from(&mut &buf[..cut]).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn arena_rejects_out_of_range_links() {
+        let data = random_points(12, 2, 3);
+        let arena = VpTree::build(&data, 12, 2, 3).into_arena();
+        let mut buf = Vec::new();
+        arena.write_into(&mut buf).unwrap();
+        // Corrupt the first node's item index (offset 24 = 8 + 4 + 4 + 8).
+        buf[24..28].copy_from_slice(&u32::MAX.to_le_bytes()[..4]);
+        assert!(VpArena::read_from(&mut &buf[..]).is_err());
     }
 
     #[test]

@@ -26,6 +26,13 @@ impl SearchScratch {
     pub fn new(k: usize) -> Self {
         SearchScratch { heap: NeighborHeap::new(k.max(1)), stack: Vec::with_capacity(64) }
     }
+
+    /// Capacity snapshot of the backing buffers — warm queries must leave
+    /// it unchanged (the zero-per-query-allocation assertion used by the
+    /// model-layer transform tests).
+    pub fn capacities(&self) -> [usize; 2] {
+        [self.heap.capacity(), self.stack.capacity()]
+    }
 }
 
 impl NeighborHeap {
@@ -67,6 +74,11 @@ impl NeighborHeap {
 
     pub fn len(&self) -> usize {
         self.heap.len()
+    }
+
+    /// Capacity of the backing candidate buffer (allocation tracking).
+    pub fn capacity(&self) -> usize {
+        self.heap.capacity()
     }
 
     pub fn is_empty(&self) -> bool {

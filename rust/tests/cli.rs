@@ -82,6 +82,100 @@ fn embed_with_config_file() {
 }
 
 #[test]
+fn fit_then_transform_roundtrip() {
+    let dir = tmpdir("fit-transform");
+    let model = dir.join("model.bhsne");
+    let out = bhsne()
+        .args([
+            "fit",
+            "--dataset", "gaussians",
+            "--n", "200",
+            "--iters", "60",
+            "--exaggeration-iters", "20",
+            "--cost-every", "30",
+            "--perplexity", "12",
+            "--model",
+        ])
+        .arg(&model)
+        .args(["--out"])
+        .arg(dir.join("fit-out"))
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("model"), "{s}");
+    assert!(model.exists());
+
+    let out = bhsne()
+        .args(["transform", "--dataset", "gaussians", "--n", "50", "--model"])
+        .arg(&model)
+        .args(["--out"])
+        .arg(dir.join("tr-out"))
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("placement 1-NN err"), "{s}");
+    assert!(s.contains("placements finite  : true"), "{s}");
+    assert!(dir.join("tr-out").join("transform.tsv").exists());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn transform_rejects_missing_model() {
+    let out = bhsne()
+        .args(["transform", "--model", "/nonexistent/model.bhsne", "--n", "10"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn embed_accepts_new_tuning_flags() {
+    let dir = tmpdir("embed-flags");
+    let out = bhsne()
+        .args([
+            "embed",
+            "--dataset", "gaussians",
+            "--n", "120",
+            "--iters", "30",
+            "--cost-every", "10",
+            "--exaggeration-iters", "10",
+            "--cell-size", "max-width",
+            "--out",
+        ])
+        .arg(&dir)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn config_file_keys_survive_without_cli_override() {
+    // tsne.cost_every / tsne.exaggeration_iters / tsne.cell_size from the
+    // file must not be clobbered by CLI spec defaults.
+    let dir = tmpdir("cfg-keys");
+    let cfg_path = dir.join("run.toml");
+    let toml = concat!(
+        "[job]\ndataset = \"gaussians\"\nn = 90\n\n",
+        "[tsne]\niters = 20\ncost_every = 5\nexaggeration_iters = 5\ncell_size = \"max-width\"\n",
+    );
+    std::fs::write(&cfg_path, toml).unwrap();
+    let out = bhsne()
+        .args(["embed", "--config"])
+        .arg(&cfg_path)
+        .args(["--out"])
+        .arg(dir.join("out"))
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("points           : 90"), "{s}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn sweep_theta_prints_table() {
     let out = bhsne()
         .args([
