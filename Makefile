@@ -1,0 +1,25 @@
+# Convenience targets mirroring the CI jobs. The bench gate is the one
+# piece of CI that is genuinely two steps (capture, then check), so it
+# gets a local entry point; everything else is a one-liner kept here for
+# discoverability.
+
+.PHONY: build test bench check-bench lint
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+# Machine-readable hot-path capture (writes BENCH_micro_hotpath.json).
+bench:
+	cargo bench --bench micro_hotpath -- --quick --json
+
+# The CI perf-trajectory gate: key presence, finite/positive figures,
+# and the simd <= 1.15 * scalar regression ratios.
+check-bench: bench
+	bash scripts/check_bench.sh BENCH_micro_hotpath.json
+
+lint:
+	cargo fmt --all --check
+	cargo clippy --workspace -- -D warnings -A clippy::style -A clippy::complexity

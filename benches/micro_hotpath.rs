@@ -4,7 +4,10 @@
 //! iteration cost, attractive forces (CPU vs XLA artifact), the §4.1
 //! input-similarity stage (vp-tree build serial vs pool-parallel,
 //! batched all-kNN, perplexity solve, streaming symmetrize), the dense
-//! exact repulsion, and the model-serving transform (fit once, then
+//! exact repulsion, the grid-interpolation repulsion stages (charge
+//! spread and force gather per kernel backend, plus the full
+//! prepare→spread→convolve→gather pass), and the model-serving
+//! transform (fit once, then
 //! place held-out batches into the frozen map — emits
 //! `transform_ns_per_point`).
 //!
@@ -22,7 +25,7 @@ use bhsne::data::synthetic::{gaussian_mixture, SyntheticSpec};
 use bhsne::runtime::{Runtime, SneEngine};
 use bhsne::sne::gradient;
 use bhsne::sne::sparse::Csr;
-use bhsne::sne::{TransformOptions, TsneConfig, TsneRunner};
+use bhsne::sne::{InterpGrid, TransformOptions, TsneConfig, TsneRunner};
 use bhsne::spatial::{CellSizeMode, DualTreeScratch, QuadTree};
 use bhsne::util::bench::{time_reps, BenchOpts, Table};
 use bhsne::util::simd::{self, Backend};
@@ -189,6 +192,47 @@ fn main() {
     }
     simd::set_backend(None);
 
+    // ---- Grid-interpolation repulsion (the O(N) third force method):
+    // charge spreading and force gather measured per kernel backend, plus
+    // the full prepare→spread→convolve→gather pass on the detected
+    // backend. The cap of 20 keeps the kernel-matrix convolution small so
+    // the rows isolate the N-proportional stages.
+    let mut interp = InterpGrid::<2>::new(20);
+    let mut interp_forces = vec![0f64; n_tree * 2];
+    let mut interp_zp: Vec<f64> = Vec::new();
+    let mut ispread_by_backend = [f64::NAN; 2];
+    let mut igather_by_backend = [f64::NAN; 2];
+    for (slot, be) in [(0usize, Backend::Portable), (1, detected)] {
+        simd::set_backend(Some(be));
+        let label = if slot == 0 { "scalar" } else { "simd" };
+        let timing = time_reps(1, reps, || {
+            interp.prepare(&pool, &yt, n_tree);
+            interp.spread(&pool, &yt, n_tree);
+            std::hint::black_box(interp.node_count());
+        });
+        ispread_by_backend[slot] = timing.0;
+        push(&format!("interp_spread_{label}_iv20"), timing);
+        interp.convolve(&pool);
+        let timing = time_reps(1, reps, || {
+            interp_forces.iter_mut().for_each(|v| *v = 0.0);
+            let z = interp.gather(
+                &pool, &yt, n_tree, 0, n_tree, &mut interp_forces, &mut interp_zp, None,
+            );
+            std::hint::black_box(z);
+        });
+        igather_by_backend[slot] = timing.0;
+        push(&format!("interp_gather_{label}_iv20"), timing);
+    }
+    simd::set_backend(None);
+    let (interp_total, it10, it90) = time_reps(1, reps, || {
+        interp_forces.iter_mut().for_each(|v| *v = 0.0);
+        let z = interp.repulsion(
+            &pool, &yt, n_tree, 0, n_tree, &mut interp_forces, &mut interp_zp, None,
+        );
+        std::hint::black_box(z);
+    });
+    push("interp_total_iv20", (interp_total, it10, it90));
+
     // Attractive forces, CPU.
     let mut attr = vec![0f64; n * 2];
     push("attractive_cpu", time_reps(1, reps, || {
@@ -343,6 +387,11 @@ fn main() {
             "\"dual_tree_simd_ns_per_point\":{:.2},",
             "\"metric_scalar_ns_per_point\":{:.2},",
             "\"metric_simd_ns_per_point\":{:.2},",
+            "\"interp_spread_scalar_ns_per_point\":{:.2},",
+            "\"interp_spread_simd_ns_per_point\":{:.2},",
+            "\"interp_gather_scalar_ns_per_point\":{:.2},",
+            "\"interp_gather_simd_ns_per_point\":{:.2},",
+            "\"interp_total_ns_per_point\":{:.2},",
             "\"transform_ns_per_point\":{:.2},",
             "\"iter_build_plus_eval_ms\":{:.4},",
             "\"input_stage\":{{\"n\":{},",
@@ -367,6 +416,11 @@ fn main() {
         per_point(dual_by_backend[1]),
         per_point_vp(metric_by_backend[0]),
         per_point_vp(metric_by_backend[1]),
+        per_point(ispread_by_backend[0]),
+        per_point(ispread_by_backend[1]),
+        per_point(igather_by_backend[0]),
+        per_point(igather_by_backend[1]),
+        per_point(interp_total),
         transform_secs * 1e9 / n_query as f64,
         iter_secs * 1e3,
         n_vp,

@@ -3,17 +3,29 @@
 //!
 //! Doubles as the CI smoke test: the run asserts that the KL cost is
 //! finite and decreased over training, exiting non-zero otherwise. Set
-//! `QUICKSTART_QUICK=1` for the reduced-size CI configuration.
+//! `QUICKSTART_QUICK=1` for the reduced-size CI configuration and
+//! `QUICKSTART_METHOD` (`bh` | `dualtree` | `interp` | `exact`) to pick
+//! the repulsion method — the CI matrix gates the KL trajectory on all
+//! three approximate methods.
 //!
 //!     cargo run --release --example quickstart
 
 use bhsne::data::synthetic::{gaussian_mixture, SyntheticSpec};
 use bhsne::eval;
-use bhsne::sne::{TsneConfig, TsneRunner};
+use bhsne::sne::{RepulsionMethod, TsneConfig, TsneRunner};
 
 fn main() -> anyhow::Result<()> {
     bhsne::util::logger::init(None);
     let quick = std::env::var("QUICKSTART_QUICK").is_ok_and(|v| v == "1");
+    let method = std::env::var("QUICKSTART_METHOD").unwrap_or_else(|_| "bh".into());
+    let repulsion = match method.as_str() {
+        "bh" => None, // config default: Barnes-Hut at theta
+        "exact" => Some(RepulsionMethod::Exact),
+        "dualtree" => Some(RepulsionMethod::DualTree { rho: 0.25 }),
+        "interp" => Some(RepulsionMethod::Interpolation { intervals: 50 }),
+        other => anyhow::bail!("unknown QUICKSTART_METHOD {other:?}"),
+    };
+    println!("force method      : {method}");
 
     // 1. Data: 2000 points, 5 classes, 20 dims (reduced under QUICK).
     let data = gaussian_mixture(&SyntheticSpec {
@@ -31,6 +43,7 @@ fn main() -> anyhow::Result<()> {
         iters,
         exaggeration_iters: 250.min(iters / 2),
         cost_every: 25,
+        repulsion,
         ..Default::default()
     };
     let exaggeration_iters = cfg.exaggeration_iters;

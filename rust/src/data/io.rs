@@ -282,6 +282,10 @@ fn encode_config(cfg: &TsneConfig) -> Vec<u8> {
         Some(RepulsionMethod::Exact) => (1, 0.0),
         Some(RepulsionMethod::BarnesHut { theta }) => (2, theta),
         Some(RepulsionMethod::DualTree { rho }) => (3, rho),
+        // The interval cap is an integer but rides the same f32 param
+        // slot; visualization-scale caps (≤ 120 after the per-DIM clamp)
+        // are exactly representable.
+        Some(RepulsionMethod::Interpolation { intervals }) => (4, intervals as f32),
     };
     write_u8(w, rep_tag).unwrap();
     w.write_u32::<LittleEndian>(rep_param.to_bits()).unwrap();
@@ -315,6 +319,7 @@ fn decode_config(r: &mut impl Read) -> Result<TsneConfig> {
         1 => Some(RepulsionMethod::Exact),
         2 => Some(RepulsionMethod::BarnesHut { theta: rep_param }),
         3 => Some(RepulsionMethod::DualTree { rho: rep_param }),
+        4 => Some(RepulsionMethod::Interpolation { intervals: rep_param as usize }),
         other => bail!("unknown repulsion tag {other}"),
     };
     let knn = match read_u8(r)? {
@@ -745,6 +750,27 @@ mod tests {
             write_model(&path, &model).unwrap();
             let back = read_model(&path).unwrap();
             assert_models_equal(&model, &back);
+            std::fs::remove_file(&path).ok();
+        }
+    }
+
+    /// Every repulsion variant survives the config tag/param encoding,
+    /// including the integer interval cap riding the f32 param slot.
+    #[test]
+    fn model_roundtrip_preserves_repulsion_method() {
+        for method in [
+            None,
+            Some(RepulsionMethod::Exact),
+            Some(RepulsionMethod::BarnesHut { theta: 0.35 }),
+            Some(RepulsionMethod::DualTree { rho: 0.15 }),
+            Some(RepulsionMethod::Interpolation { intervals: 37 }),
+        ] {
+            let mut model = tiny_model(false);
+            model.config.repulsion = method;
+            let path = tmp("model-repulsion.bhsne");
+            write_model(&path, &model).unwrap();
+            let back = read_model(&path).unwrap();
+            assert_eq!(back.config.repulsion, method);
             std::fs::remove_file(&path).ok();
         }
     }

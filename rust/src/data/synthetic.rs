@@ -93,7 +93,8 @@ pub fn mnist_like(spec: &SyntheticSpec) -> Dataset {
         ..spec.clone()
     };
     let mut d = gaussian_mixture(&s);
-    squash_unit(&mut d.x);
+    let (mean, std) = calibration_stats(&d, |n| gaussian_mixture(&SyntheticSpec { n, ..s.clone() }));
+    squash_unit_with(&mut d.x, mean, std);
     // Real MNIST contains genuinely ambiguous digits; a clean Gaussian
     // mixture converges to 0% 1-NN error. 4% label noise reproduces the
     // few-percent error floor the paper reports, without which Figures
@@ -118,7 +119,8 @@ pub fn cifar_like(spec: &SyntheticSpec) -> Dataset {
         ..spec.clone()
     };
     let mut d = gaussian_mixture(&s);
-    squash_unit(&mut d.x);
+    let (mean, std) = calibration_stats(&d, |n| gaussian_mixture(&SyntheticSpec { n, ..s.clone() }));
+    squash_unit_with(&mut d.x, mean, std);
     // The paper's CIFAR-10 embedding shows heavily mixed classes; 30%
     // label noise on top of the weak separation reproduces that regime.
     label_noise(&mut d, 0.30, s.seed);
@@ -130,6 +132,15 @@ pub fn cifar_like(spec: &SyntheticSpec) -> Dataset {
 /// manifold is a 3-torus (lighting × elevation × azimuth) mimicking
 /// NORB's smooth pose variation, embedded by a random linear map.
 pub fn norb_like(spec: &SyntheticSpec) -> Dataset {
+    let mut ds = norb_raw(spec);
+    let (mean, std) = calibration_stats(&ds, |n| norb_raw(&SyntheticSpec { n, ..spec.clone() }));
+    squash_unit_with(&mut ds.x, mean, std);
+    ds
+}
+
+/// The un-normalized NORB core ([`norb_like`] squashes it with
+/// calibration statistics).
+fn norb_raw(spec: &SyntheticSpec) -> Dataset {
     let d = 9216usize;
     let c = 5usize;
     let mut rng = Pcg32::new(spec.seed, 0x6e62 /* "nb" */);
@@ -166,9 +177,7 @@ pub fn norb_like(spec: &SyntheticSpec) -> Dataset {
             x[i * d + j] = v as f32;
         }
     }
-    let mut ds = Dataset { x, n: spec.n, dim: d, labels, name: "norb-like".into() };
-    squash_unit(&mut ds.x);
-    ds
+    Dataset { x, n: spec.n, dim: d, labels, name: "norb-like".into() }
 }
 
 /// TIMIT stand-in: 39 phone classes, D = 39 MFCC-like features, with
@@ -232,14 +241,37 @@ fn label_noise(d: &mut Dataset, frac: f64, seed: u64) {
     }
 }
 
-/// Squash features into [0, 1] per dataset (pixel-like ranges) with a
-/// logistic map centered at the data mean.
-fn squash_unit(x: &mut [f32]) {
+/// Rows the normalization statistics are measured on (see
+/// [`calibration_stats`]).
+const NORM_CALIBRATION_ROWS: usize = 256;
+
+/// Mean/std for the logistic squash, measured on a fixed
+/// [`NORM_CALIBRATION_ROWS`]-row calibration slab so featurization never
+/// depends on the requested row count. This is what makes transform-time
+/// rows exact: a held-out row generated as part of an `n + m` corpus gets
+/// byte-identical features to the same row generated during the `n`-row
+/// fit. The generators draw class structure first and rows sequentially
+/// (prefix-stable), so when the dataset already has enough rows the
+/// stats come straight from its prefix; otherwise `regen` produces the
+/// slab with the same seed.
+fn calibration_stats(ds: &Dataset, regen: impl FnOnce(usize) -> Dataset) -> (f64, f64) {
+    let slab;
+    let x = if ds.n >= NORM_CALIBRATION_ROWS {
+        &ds.x[..NORM_CALIBRATION_ROWS * ds.dim]
+    } else {
+        slab = regen(NORM_CALIBRATION_ROWS);
+        &slab.x[..]
+    };
     let mean = x.iter().map(|&v| v as f64).sum::<f64>() / x.len() as f64;
     let var = x.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / x.len() as f64;
-    let s = var.sqrt().max(1e-9);
+    (mean, var.sqrt().max(1e-9))
+}
+
+/// Squash features into [0, 1] (pixel-like ranges) with a logistic map
+/// using externally supplied statistics (see [`calibration_stats`]).
+fn squash_unit_with(x: &mut [f32], mean: f64, std: f64) {
     for v in x.iter_mut() {
-        *v = (1.0 / (1.0 + (-(((*v as f64) - mean) / s)).exp())) as f32;
+        *v = (1.0 / (1.0 + (-(((*v as f64) - mean) / std)).exp())) as f32;
     }
 }
 
@@ -323,6 +355,30 @@ mod tests {
             counts[l as usize] += 1;
         }
         assert_eq!(counts, [25, 25, 25, 25]);
+    }
+
+    /// The transform-exactness contract: generating `n + m` rows must
+    /// reproduce the first `n` rows' features byte for byte, including
+    /// for the globally-normalized families — the calibration-slab
+    /// statistics make the squash independent of the requested row
+    /// count, on both sides of the slab size.
+    #[test]
+    fn normalized_families_are_prefix_exact() {
+        for (base, extra) in [(300usize, 100usize), (100, 400)] {
+            let small = SyntheticSpec { n: base, seed: 13, ..Default::default() };
+            let large = SyntheticSpec { n: base + extra, seed: 13, ..Default::default() };
+            for gen in [mnist_like, cifar_like, norb_like, timit_like, gaussian_mixture] {
+                let a = gen(&small);
+                let b = gen(&large);
+                assert_eq!(
+                    a.x,
+                    b.x[..base * a.dim],
+                    "{}: prefix features drift with n (base {base})",
+                    a.name
+                );
+                assert_eq!(a.labels, b.labels[..base], "{}: prefix labels drift", a.name);
+            }
+        }
     }
 
     #[test]

@@ -9,7 +9,30 @@
 //!   info      show artifact/runtime status
 //!
 //! Configuration comes from an optional TOML-subset file (`--config`)
-//! overridden by CLI flags.
+//! overridden by CLI flags. Recognized config keys and their flags:
+//!
+//! | config key                | CLI flag               |
+//! |---------------------------|------------------------|
+//! | `job.dataset`             | `--dataset`            |
+//! | `job.n`                   | `--n`                  |
+//! | `job.data_dir`            | `--data-dir`           |
+//! | `job.xla`                 | `--xla`                |
+//! | `tsne.theta`              | `--theta`              |
+//! | `tsne.force_method`       | `--force-method`       |
+//! | `tsne.intervals`          | `--intervals`          |
+//! | `tsne.perplexity`         | `--perplexity`         |
+//! | `tsne.iters`              | `--iters`              |
+//! | `tsne.exaggeration`       | `--exaggeration`       |
+//! | `tsne.exaggeration_iters` | `--exaggeration-iters` |
+//! | `tsne.cost_every`         | `--cost-every`         |
+//! | `tsne.cell_size`          | `--cell-size`          |
+//! | `tsne.eta`                | `--eta`                |
+//! | `tsne.seed`               | `--seed`               |
+//!
+//! `--force-method` (`exact` | `bh` | `dualtree` | `interp`) picks the
+//! repulsion approximation; `--intervals` caps the grid resolution of
+//! the `interp` method. An explicit method wins over the legacy `--rho`
+//! dual-tree shortcut.
 
 use bhsne::data;
 use bhsne::pipeline::{
@@ -79,6 +102,18 @@ fn tsne_job_opts(spec: CommandSpec) -> CommandSpec {
     .opt("n", "5000", "number of points")
     .opt("theta", "0.5", "BH trade-off (0 = exact t-SNE)")
     .opt("rho", "-1", "use dual-tree repulsion with this rho (>0 enables)")
+    .opt(
+        "force-method",
+        "",
+        "repulsion method (exact | bh | dualtree | interp); default bh at --theta, \
+         or exact when theta = 0",
+    )
+    .opt(
+        "intervals",
+        "50",
+        "grid interval cap per dimension for --force-method interp (resolution \
+         adapts to the embedding's bounding box up to this cap)",
+    )
     .opt("perplexity", "30", "perplexity u")
     .opt("iters", "1000", "gradient iterations")
     .opt("exaggeration", "12", "early exaggeration alpha")
@@ -115,6 +150,29 @@ fn parse_cell_size(s: &str) -> anyhow::Result<CellSizeMode> {
         "max-width" | "maxwidth" => Ok(CellSizeMode::MaxWidth),
         other => anyhow::bail!("unknown cell-size {other:?} (expected diagonal | max-width)"),
     }
+}
+
+/// Resolve a `--force-method` name into a [`RepulsionMethod`], reusing
+/// the already-parsed knob each method cares about (`theta` for bh,
+/// `rho` for dualtree with the sweep default when unset, the interval
+/// cap for interp).
+fn parse_force_method(
+    s: &str,
+    theta: f32,
+    rho: f32,
+    intervals: usize,
+) -> anyhow::Result<RepulsionMethod> {
+    Ok(match s {
+        "exact" => RepulsionMethod::Exact,
+        "bh" | "barnes-hut" | "barneshut" => RepulsionMethod::BarnesHut { theta },
+        "dualtree" | "dual-tree" => {
+            RepulsionMethod::DualTree { rho: if rho > 0.0 { rho } else { 0.25 } }
+        }
+        "interp" | "interpolation" => RepulsionMethod::Interpolation { intervals },
+        other => {
+            anyhow::bail!("unknown force-method {other:?} (expected exact | bh | dualtree | interp)")
+        }
+    })
 }
 
 fn job_from_parsed(p: &bhsne::util::args::Parsed) -> anyhow::Result<JobConfig> {
@@ -160,6 +218,21 @@ fn job_from_parsed(p: &bhsne::util::args::Parsed) -> anyhow::Result<JobConfig> {
     let rho: f32 = p.get("rho").map_err(anyhow::Error::msg)?;
     if rho > 0.0 {
         cfg.tsne.repulsion = Some(RepulsionMethod::DualTree { rho });
+    }
+    // An explicit method (tsne.force_method / --force-method) wins over
+    // the legacy --rho shortcut above.
+    let intervals: usize = if use_cli("intervals", "tsne.intervals") {
+        p.get("intervals").map_err(anyhow::Error::msg)?
+    } else {
+        file.as_ref().unwrap().usize_or("tsne.intervals", 50)
+    };
+    let method = if use_cli("force-method", "tsne.force_method") {
+        p.str("force-method").unwrap_or("").to_string()
+    } else {
+        file.as_ref().unwrap().str_or("tsne.force_method", "")
+    };
+    if !method.is_empty() {
+        cfg.tsne.repulsion = Some(parse_force_method(&method, cfg.tsne.theta, rho, intervals)?);
     }
     if use_cli("perplexity", "tsne.perplexity") {
         cfg.tsne.perplexity = p.get("perplexity").map_err(anyhow::Error::msg)?;

@@ -374,12 +374,12 @@ pub fn run_fit_job(cfg: JobConfig, model_out: Option<&Path>) -> anyhow::Result<(
 /// `n` rows past the fitted prefix, and only those unseen tail rows are
 /// transformed. Synthetic generators draw their class structure from the
 /// seed, so this is the only scheme whose held-out labels live in the
-/// same mixture the model was fit on. Caveat: families that normalize
-/// over the whole matrix (`mnist-like` etc.) rescale slightly with the
-/// row count, so the regenerated prefix is not bit-equal to the fitted
-/// corpus there — `run_transform_job` detects and warns about that, and
-/// the placement metrics become approximate (streaming generators like
-/// `gaussians` are exact).
+/// same mixture the model was fit on. All families are prefix-exact:
+/// the normalized ones (`mnist-like` etc.) squash with statistics from a
+/// fixed-size calibration slab rather than the whole matrix, so the
+/// regenerated prefix is byte-identical to the fitted corpus and the
+/// placement metrics are exact. `run_transform_job` still verifies the
+/// prefix and warns if it ever drifts.
 #[derive(Debug, Clone)]
 pub struct TransformJobConfig {
     /// Path of the `.bhsne` model written by a fit job.
@@ -464,16 +464,16 @@ pub fn run_transform_job(cfg: TransformJobConfig) -> anyhow::Result<TransformJob
     let m = ds.n - model.n;
     let xq_raw = &ds.x[model.n * ds.dim..];
     let labels_q = &ds.labels[model.n..];
-    // Generators that normalize over the whole matrix (mnist-like and
-    // friends rescale by global mean/variance) produce a slightly
-    // different scaling at n+m rows than at n — the regenerated prefix
-    // then no longer equals the model's reference rows and the metrics
-    // below are approximate. Surface that instead of staying silent.
+    // Every generator is prefix-exact (the normalized families squash
+    // with fixed calibration-slab statistics, not whole-matrix ones), so
+    // the regenerated prefix must equal the model's reference rows byte
+    // for byte. Keep the guard: a drift here means a generator regressed
+    // and the metrics below would silently turn approximate.
     // (Only checkable without PCA, where model.x is the raw prefix.)
     if model.pca.is_none() && ds.dim == model.dim && ds.x[..model.n * ds.dim] != model.x[..] {
         log::warn!(
-            "regenerated corpus prefix differs from the model's reference rows \
-             (globally-normalized generators rescale with n); placement metrics are approximate"
+            "regenerated corpus prefix differs from the model's reference rows — \
+             a generator lost prefix-exactness; placement metrics are approximate"
         );
     }
     let (xq, qdim) = model.project_input(&pool, xq_raw, ds.dim)?;

@@ -21,6 +21,7 @@
 //! hold one engine for either the 2-D quadtree or the 3-D octree.
 
 use super::gradient::{self, RepulsionMethod};
+use super::interp::InterpGrid;
 use super::sparse::Csr;
 use super::AttractiveBackend;
 use crate::spatial::{BhTree, CellSizeMode, DualTreeScratch};
@@ -56,6 +57,10 @@ pub struct ForceEngine<const DIM: usize> {
     tree: Option<BhTree<DIM>>,
     /// Dual-tree traversal workspace (slot accumulators, stacks, seeds).
     dual: DualTreeScratch,
+    /// Grid-interpolation state (nodes, charges, potentials, spread
+    /// slots); created on the first repulsion pass, sized by `intervals`
+    /// alone, reused every iteration after.
+    interp: Option<InterpGrid<DIM>>,
     /// Deterministic Z-reduction slots shared by the exact and BH paths.
     z_parts: Vec<f64>,
     /// Attractive-force accumulator (`n × DIM`, f64).
@@ -78,7 +83,10 @@ impl<const DIM: usize> ForceEngine<DIM> {
 
     /// Engine whose force accumulation is restricted to the movable rows
     /// `lo..hi` — the frozen-reference gradient contract used by
-    /// [`crate::sne::TsneModel::transform`]. The dual-tree method
+    /// [`crate::sne::TsneModel::transform`]. The exact, point-cell BH,
+    /// and grid-interpolation methods all honor the range (frozen rows
+    /// still contribute repulsion — through the tree summaries or the
+    /// spread charges — but accumulate nothing); the dual-tree method
     /// computes cell-cell interactions for every point at once and cannot
     /// restrict accumulation, so it requires the full range.
     pub fn with_movable(
@@ -100,6 +108,7 @@ impl<const DIM: usize> ForceEngine<DIM> {
             movable: (lo, hi),
             tree: None,
             dual: DualTreeScratch::new(),
+            interp: None,
             z_parts: Vec::new(),
             // Sized lazily on the first `gradient` call: the throwaway
             // engines behind the `gradient()` compatibility wrapper only
@@ -219,6 +228,17 @@ impl<const DIM: usize> ForceEngine<DIM> {
                 self.stats.repulsion_secs += sw.elapsed_secs();
                 z
             }
+            RepulsionMethod::Interpolation { intervals } => {
+                // No tree: the grid is the spatial structure. Frozen
+                // reference rows spread charge but sit outside the gather
+                // range, matching the movable-range contract.
+                let grid = self.interp.get_or_insert_with(|| InterpGrid::new(intervals));
+                let sw = Stopwatch::start();
+                let z =
+                    grid.repulsion(pool, y, self.n, mlo, mhi, out, &mut self.z_parts, row_z);
+                self.stats.repulsion_secs += sw.elapsed_secs();
+                z
+            }
         };
         self.cached_z = Some(z);
         self.z_stale = false;
@@ -315,6 +335,9 @@ impl<const DIM: usize> ForceEngine<DIM> {
             caps.extend(tree.capacities());
         }
         caps.extend(self.dual.capacities());
+        if let Some(grid) = &self.interp {
+            caps.extend(grid.capacities());
+        }
         caps
     }
 }
@@ -674,6 +697,98 @@ mod tests {
             let sum: f64 = row_z[lo..hi].iter().sum();
             assert!((sum - z).abs() <= 1e-9 * z.abs().max(1.0), "{method:?}: {sum} vs {z}");
             assert!(row_z[lo..hi].iter().all(|&v| v > 0.0), "{method:?}: non-positive row z");
+        }
+    }
+
+    /// The interpolation arm shares every engine invariant the tree arms
+    /// have: the capacity snapshot freezes after warm-up even while the
+    /// embedding grows (the adaptive resolution runs on buffer prefixes).
+    #[test]
+    fn interp_steady_state_does_not_allocate() {
+        let pool = ThreadPool::new(4);
+        let n = 1500;
+        let p = random_p(n, 3, 26);
+        let mut engine = ForceEngine::<2>::new(
+            n,
+            RepulsionMethod::Interpolation { intervals: 12 },
+            CellSizeMode::Diagonal,
+        );
+        let mut y = random_embedding(n, 27);
+        let mut grad = vec![0f64; n * 2];
+        for _ in 0..4 {
+            engine.gradient(&pool, &CpuAttractive, &p, &y, &mut grad);
+            for v in y.iter_mut() {
+                *v *= 1.05; // growing box: the effective resolution shifts
+            }
+            engine.mark_embedding_moved();
+        }
+        let caps = engine.capacities();
+        for it in 4..10 {
+            engine.gradient(&pool, &CpuAttractive, &p, &y, &mut grad);
+            for v in y.iter_mut() {
+                *v *= 1.05;
+            }
+            engine.mark_embedding_moved();
+            assert_eq!(engine.capacities(), caps, "iteration {it} grew an engine arena");
+        }
+    }
+
+    /// Interpolation honors the movable range: frozen rows spread charge
+    /// but receive nothing, movable rows are bitwise the full pass (both
+    /// gathers interpolate the same potential grids), and Z decomposes
+    /// into the movable rows' row-z (finite, not sign-asserted — the
+    /// φ₁−1 self-term subtraction may leave isolated rows slightly
+    /// negative).
+    #[test]
+    fn interp_movable_range_and_row_z() {
+        let pool = ThreadPool::new(4);
+        let n = 600;
+        let (lo, hi) = (450, 600);
+        let y = random_embedding(n, 21);
+        let method = RepulsionMethod::Interpolation { intervals: 12 };
+        let mut full = ForceEngine::<2>::new(n, method, CellSizeMode::Diagonal);
+        let mut out_full = vec![0f64; n * 2];
+        let mut rz_full = vec![0f64; n];
+        full.repulsive_rowz_into(&pool, &y, &mut out_full, Some(&mut rz_full));
+        let mut part = ForceEngine::<2>::with_movable(n, method, CellSizeMode::Diagonal, lo, hi);
+        let mut out_part = vec![0f64; n * 2];
+        let mut rz_part = vec![0f64; n];
+        let z_part = part.repulsive_rowz_into(&pool, &y, &mut out_part, Some(&mut rz_part));
+        assert!(out_part[..lo * 2].iter().all(|&v| v == 0.0), "frozen rows moved");
+        assert!(rz_part[..lo].iter().all(|&v| v == 0.0), "frozen row_z written");
+        assert_eq!(out_part[lo * 2..], out_full[lo * 2..]);
+        assert_eq!(rz_part[lo..], rz_full[lo..]);
+        assert!(rz_part[lo..].iter().all(|v| v.is_finite()));
+        let z_want: f64 = rz_full[lo..hi].iter().sum();
+        assert!(
+            (z_part - z_want).abs() <= 1e-9 * z_want.abs().max(1.0),
+            "z {z_part} vs row-z sum {z_want}"
+        );
+    }
+
+    /// Interpolation through the dyn (runtime-DIM) engine in 2-D and 3-D.
+    #[test]
+    fn dyn_engine_interp_dispatches_both_dims() {
+        let pool = ThreadPool::new(2);
+        let n = 60;
+        let p = random_p(n, 3, 9);
+        for dim in [2usize, 3] {
+            let mut rng = Pcg32::seeded(40 + dim as u64);
+            let y: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32).collect();
+            // A small cap keeps the debug-build O(m_total²) convolve
+            // cheap, especially for the cubic 3-D grid.
+            let mut engine = DynForceEngine::new(
+                dim,
+                n,
+                RepulsionMethod::Interpolation { intervals: 4 },
+                CellSizeMode::Diagonal,
+            );
+            let mut grad = vec![0f64; n * dim];
+            let z = engine.gradient(&pool, &CpuAttractive, &p, &y, &mut grad);
+            assert!(z.is_finite() && z > 0.0);
+            assert!(grad.iter().all(|g| g.is_finite()));
+            let kl = engine.kl_cost(&pool, &p, &y, z);
+            assert!(kl.is_finite());
         }
     }
 

@@ -1,0 +1,612 @@
+//! FIt-SNE-style O(N) grid-interpolation repulsion — the third force
+//! method next to the point-cell and dual-tree traversals.
+//!
+//! Per iteration the pass runs four stages over a regular grid laid over
+//! the embedding's bounding box (`intervals` cells per dimension, three
+//! Lagrange interpolation nodes per cell):
+//!
+//! 1. **prepare** — bounding box (fixed-slot min/max reduction; exactly
+//!    associative, so grouping cannot perturb it), per-dimension cell
+//!    width, and the node coordinate table.
+//! 2. **spread** — each point's unit mass and its coordinates are spread
+//!    onto its cell's `3^DIM` interpolation nodes with the Lagrange tile
+//!    weights, giving the `DIM+1` charge fields `[c₀ = Σ w,
+//!    c_d = Σ w·y_d]`. Accumulation fans out over a fixed number of
+//!    slot grids summed in slot order afterwards, so the result is
+//!    thread-count-invariant.
+//! 3. **convolve** — the direct node×node kernel product (O(m_total²),
+//!    lane-blocked SIMD rows via [`simd::interp_kernel_row`]): potentials
+//!    `[φ₁ = K₁·c₀, ψ₀ = K₂·c₀, ψ_d = K₂·c_d]` with `K₁ = 1/(1+d²)`,
+//!    `K₂ = K₁²` evaluated between node coordinates. At visualization
+//!    grid sizes the dense product is small and cache-friendly; it is
+//!    also independent of `n` — the O(N) claim.
+//! 4. **gather** — each movable point interpolates the potentials back
+//!    with the same tile weights: its Z contribution is `φ₁ − 1` (the
+//!    self term is exactly `k1(i,i) = 1`; interpolation error can leave a
+//!    lone point's row-z slightly negative, which downstream normalizers
+//!    clamp) and its unnormalized force is
+//!    `F_d = y_d·ψ₀ − ψ_d` (the self term cancels algebraically). The
+//!    Z reduction mirrors the BH row-z contract: fixed 64-point chunks,
+//!    one slot per chunk, summed in order.
+//!
+//! The kernel `1/(1+d²)` has a fixed length scale of one embedding unit,
+//! so accuracy is governed by the *absolute* cell width `h`, not the
+//! interval count: `h ≈ 1` matches Barnes-Hut at θ = 0.5, `h ≤ 0.5` is an
+//! order of magnitude tighter. Because a t-SNE embedding grows from a
+//! tiny blob to a spread-out map over the run, the grid adapts each
+//! iteration: the *effective* interval count is
+//! `clamp(ceil(max-axis width), 10, intervals)`, keeping `h ≤ 1` until
+//! the configured `intervals` cap binds (the FIt-SNE
+//! `intervals_per_integer` / `min_num_intervals` scheme). Every buffer is
+//! sized by the cap alone in [`InterpGrid::new`], so the adaptation costs
+//! no steady-state allocation — stages just run on prefixes.
+//!
+//! Every stage is bit-identical across thread counts and SIMD backends
+//! (the portable kernels in [`crate::util::simd`] are the oracles); the
+//! effective resolution is derived from the exactly-associative bounding
+//! box, so it cannot differ between runs either. Frozen reference rows
+//! (the model layer's `transform`) spread charge like everyone else but
+//! are simply excluded from the gather range, and a movable-range gather
+//! is bitwise equal to the full pass on the shared rows — each point's
+//! output is a pure function of the potentials. The gradient-level tests
+//! gate the error against the exact O(N²) oracle.
+
+use crate::util::pool::SendPtr;
+use crate::util::simd::{self, INTERP_P, LANES};
+use crate::util::ThreadPool;
+
+/// Largest tile a point touches (3^DIM, DIM ≤ 3).
+const MAX_TILE: usize = 27;
+
+/// Fixed fan-out of the spread accumulation: each chunk of points owns
+/// one slot grid, summed in slot order afterwards. Kept small because a
+/// slot is a full `(DIM+1)·m_total` grid.
+const SLOTS: usize = 16;
+
+/// Points per deterministic Z-reduction chunk in the gather pass — the
+/// same granularity the BH row-z path uses.
+const CHUNK: usize = 64;
+
+/// Fixed fan-out of the bounding-box min/max reduction.
+const BBOX_SLOTS: usize = 64;
+
+/// Hard ceiling on total grid nodes; [`InterpGrid::new`] clamps the
+/// interval cap so `(3·cap)^DIM` stays under it. Bounds both the slot
+/// grids' memory (a few tens of MB) and the worst-case O(m_total²)
+/// convolution.
+const MAX_NODES: usize = 1 << 17;
+
+/// Smallest effective interval count the adaptive resolution uses (when
+/// the cap allows it): compact early-exaggeration blobs still get a
+/// comfortably over-resolved grid.
+const MIN_EFF: usize = 10;
+
+/// Grid state for the interpolation repulsion pass. Created once (all
+/// buffers sized by the `intervals` cap, independent of `n`), reused
+/// every iteration; the effective per-iteration resolution adapts to the
+/// bounding box within the cap.
+pub struct InterpGrid<const DIM: usize> {
+    /// Configured interval cap (clamped so the grid fits [`MAX_NODES`]).
+    max_intervals: usize,
+    /// Effective intervals this iteration (set by [`Self::prepare`]).
+    eff: usize,
+    /// Interpolation nodes per dimension this iteration (`3·eff`).
+    m: usize,
+    /// Total grid nodes this iteration (`m^DIM`).
+    m_total: usize,
+    min: [f32; DIM],
+    h: [f32; DIM],
+    inv_h: [f32; DIM],
+    /// Node coordinates, dim-major (`nodes[d·m_total + s]`).
+    nodes: Vec<f32>,
+    /// Spread charges, field-major: `[c₀, c_1.., c_DIM]`.
+    charge: Vec<f64>,
+    /// Node potentials, field-major: `[φ₁, ψ₀, ψ_1.., ψ_DIM]`.
+    pot: Vec<f64>,
+    /// Per-chunk spread partials (`SLOTS` charge-layout grids).
+    slots: Vec<f64>,
+}
+
+impl<const DIM: usize> InterpGrid<DIM> {
+    pub fn new(intervals: usize) -> Self {
+        assert!(intervals >= 1, "interpolation grid needs at least one interval");
+        // Largest cap whose full grid fits MAX_NODES for this DIM
+        // (120 intervals in 2-D, 16 in 3-D).
+        let mut limit = 1usize;
+        while (INTERP_P * (limit + 1)).pow(DIM as u32) <= MAX_NODES {
+            limit += 1;
+        }
+        let cap = intervals.min(limit);
+        let cap_nodes = (INTERP_P * cap).pow(DIM as u32);
+        let eff = MIN_EFF.min(cap);
+        let m = INTERP_P * eff;
+        InterpGrid {
+            max_intervals: cap,
+            eff,
+            m,
+            m_total: m.pow(DIM as u32),
+            min: [0.0; DIM],
+            h: [1.0; DIM],
+            inv_h: [1.0; DIM],
+            nodes: vec![0f32; DIM * cap_nodes],
+            charge: vec![0f64; (DIM + 1) * cap_nodes],
+            pot: vec![0f64; (DIM + 2) * cap_nodes],
+            slots: vec![0f64; SLOTS * (DIM + 1) * cap_nodes],
+        }
+    }
+
+    /// The configured interval cap (after the [`MAX_NODES`] clamp).
+    pub fn intervals(&self) -> usize {
+        self.max_intervals
+    }
+
+    /// Effective intervals chosen by the last [`Self::prepare`].
+    pub fn effective_intervals(&self) -> usize {
+        self.eff
+    }
+
+    /// Total interpolation nodes at the current effective resolution.
+    pub fn node_count(&self) -> usize {
+        self.m_total
+    }
+
+    /// Stage 1: bounding box of `y[..n·DIM]`, the effective resolution
+    /// (`clamp(ceil(max width), MIN_EFF, cap)` — keeps the cell width at
+    /// or under one kernel length until the cap binds), grid geometry,
+    /// and node coordinates. Degenerate box widths are clamped to a tiny
+    /// positive value so `inv_h` stays finite (see
+    /// [`simd::interp_axis_block`]).
+    pub fn prepare(&mut self, pool: &ThreadPool, y: &[f32], n: usize) {
+        assert!(y.len() >= n * DIM);
+        let mut mn = [0f32; DIM];
+        let mut mx = [0f32; DIM];
+        if n > 0 {
+            let chunk = n.div_ceil(BBOX_SLOTS).max(1);
+            let mut parts = [([f32::INFINITY; DIM], [f32::NEG_INFINITY; DIM]); BBOX_SLOTS];
+            let pc = SendPtr(parts.as_mut_ptr());
+            pool.scope_chunks(n, chunk, |lo, hi| {
+                let _ = &pc;
+                let mut cmn = [f32::INFINITY; DIM];
+                let mut cmx = [f32::NEG_INFINITY; DIM];
+                for i in lo..hi {
+                    for d in 0..DIM {
+                        let v = y[i * DIM + d];
+                        cmn[d] = cmn[d].min(v);
+                        cmx[d] = cmx[d].max(v);
+                    }
+                }
+                // SAFETY: one chunk writes exactly one slot.
+                unsafe { *pc.0.add(lo / chunk) = (cmn, cmx) };
+            });
+            mn = [f32::INFINITY; DIM];
+            mx = [f32::NEG_INFINITY; DIM];
+            for part in parts.iter().take(n.div_ceil(chunk)) {
+                for d in 0..DIM {
+                    mn[d] = mn[d].min(part.0[d]);
+                    mx[d] = mx[d].max(part.1[d]);
+                }
+            }
+        }
+        let mut wmax = 0f32;
+        for d in 0..DIM {
+            wmax = wmax.max(mx[d] - mn[d]);
+        }
+        let floor = MIN_EFF.min(self.max_intervals);
+        self.eff = (wmax.ceil() as usize).clamp(floor, self.max_intervals);
+        self.m = INTERP_P * self.eff;
+        self.m_total = self.m.pow(DIM as u32);
+        for d in 0..DIM {
+            let width = (mx[d] - mn[d]).max(1e-12);
+            self.min[d] = mn[d];
+            self.h[d] = width / self.eff as f32;
+            self.inv_h[d] = 1.0 / self.h[d];
+        }
+        for d in 0..DIM {
+            let stride = self.m.pow((DIM - 1 - d) as u32);
+            let base = d * self.m_total;
+            for s in 0..self.m_total {
+                let idx = (s / stride) % self.m;
+                let cell = (idx / INTERP_P) as f32;
+                let t = simd::INTERP_T[idx % INTERP_P];
+                self.nodes[base + s] = self.min[d] + (cell + t) * self.h[d];
+            }
+        }
+    }
+
+    /// Stage 2: spread every point's `DIM+1` charges onto its tile of
+    /// interpolation nodes. All `n` rows spread — frozen reference rows
+    /// contribute repulsion exactly like the tree-based methods.
+    pub fn spread(&mut self, pool: &ThreadPool, y: &[f32], n: usize) {
+        assert!(y.len() >= n * DIM);
+        let stride = (DIM + 1) * self.m_total;
+        let chunk = n.div_ceil(SLOTS).max(1);
+        let n_chunks = n.div_ceil(chunk.max(1)).min(SLOTS);
+        self.slots[..n_chunks * stride].iter_mut().for_each(|v| *v = 0.0);
+        if n > 0 {
+            let be = simd::backend();
+            let sc = SendPtr(self.slots.as_mut_ptr());
+            let (m, m_total) = (self.m, self.m_total);
+            let (min, inv_h) = (self.min, self.inv_h);
+            let max_cell = self.eff as i32 - 1;
+            pool.scope_chunks(n, chunk, |lo, hi| {
+                let _ = &sc;
+                // SAFETY: one chunk owns exactly one slot grid.
+                let slot = unsafe {
+                    std::slice::from_raw_parts_mut(sc.0.add((lo / chunk) * stride), stride)
+                };
+                let mut xs = [[0f32; LANES]; DIM];
+                let mut cells = [[0i32; LANES]; DIM];
+                let mut ws = [[[0f32; LANES]; INTERP_P]; DIM];
+                let mut tw = [0f32; MAX_TILE];
+                let mut idx = [0usize; MAX_TILE];
+                let mut base = lo;
+                while base < hi {
+                    let mb = (hi - base).min(LANES);
+                    for l in 0..mb {
+                        for d in 0..DIM {
+                            xs[d][l] = y[(base + l) * DIM + d];
+                        }
+                    }
+                    for d in 0..DIM {
+                        simd::interp_axis_block(
+                            be, mb, &xs[d], min[d], inv_h[d], max_cell, &mut cells[d], &mut ws[d],
+                        );
+                    }
+                    for l in 0..mb {
+                        let p = base + l;
+                        let tile = tile_weights::<DIM>(m, &cells, &ws, l, &mut tw, &mut idx);
+                        for t in 0..tile {
+                            let wv = tw[t] as f64;
+                            let node = idx[t];
+                            slot[node] += wv;
+                            for d in 0..DIM {
+                                slot[(d + 1) * m_total + node] += wv * y[p * DIM + d] as f64;
+                            }
+                        }
+                    }
+                    base += mb;
+                }
+            });
+        }
+        // Deterministic reduction: per grid entry, sum the fixed chunk
+        // slots in slot order.
+        let charge = &mut self.charge;
+        let slots = &self.slots;
+        let cc = SendPtr(charge.as_mut_ptr());
+        pool.scope_chunks(stride, 4096, |lo, hi| {
+            let _ = &cc;
+            for e in lo..hi {
+                let mut s = 0f64;
+                for c in 0..n_chunks {
+                    s += slots[c * stride + e];
+                }
+                // SAFETY: entries are disjoint across chunks.
+                unsafe { *cc.0.add(e) = s };
+            }
+        });
+    }
+
+    /// Stage 3: the direct node×node kernel product — each target node's
+    /// potentials are one lane-blocked row over all source nodes.
+    pub fn convolve(&mut self, pool: &ThreadPool) {
+        let be = simd::backend();
+        let m_total = self.m_total;
+        let nodes = &self.nodes[..DIM * m_total];
+        let charge = &self.charge[..(DIM + 1) * m_total];
+        let pc = SendPtr(self.pot.as_mut_ptr());
+        pool.scope_chunks(m_total, 8, |lo, hi| {
+            let _ = &pc;
+            let mut out = [0f64; 5];
+            for t in lo..hi {
+                let mut tc = [0f32; DIM];
+                for d in 0..DIM {
+                    tc[d] = nodes[d * m_total + t];
+                }
+                simd::interp_kernel_row::<DIM>(be, &tc, nodes, charge, m_total, &mut out[..DIM + 2]);
+                for (f, &v) in out[..DIM + 2].iter().enumerate() {
+                    // SAFETY: target columns are disjoint across chunks.
+                    unsafe { *pc.0.add(f * m_total + t) = v };
+                }
+            }
+        });
+    }
+
+    /// Stage 4: interpolate the potentials back to the movable rows
+    /// `lo..hi`, writing forces into `out` (frozen rows untouched) and
+    /// each row's Z into `row_z[i]` when provided. Returns the movable
+    /// rows' Z sum via the deterministic chunk reduction. With
+    /// `lo..hi = 0..n` this is bitwise the full pass; any sub-range is
+    /// bitwise equal to the full pass on the rows it covers.
+    #[allow(clippy::too_many_arguments)]
+    pub fn gather(
+        &self,
+        pool: &ThreadPool,
+        y: &[f32],
+        n: usize,
+        lo: usize,
+        hi: usize,
+        out: &mut [f64],
+        z_parts: &mut Vec<f64>,
+        row_z: Option<&mut [f64]>,
+    ) -> f64 {
+        assert!(y.len() >= n * DIM);
+        assert_eq!(out.len(), n * DIM);
+        assert!(lo <= hi && hi <= n, "movable range {lo}..{hi} out of 0..{n}");
+        let count = hi - lo;
+        z_parts.clear();
+        if count == 0 {
+            return 0.0;
+        }
+        let rz = row_z.map(|s| {
+            assert_eq!(s.len(), n);
+            SendPtr(s.as_mut_ptr())
+        });
+        let be = simd::backend();
+        let oc = SendPtr(out.as_mut_ptr());
+        let n_chunks = count.div_ceil(CHUNK);
+        z_parts.resize(n_chunks, 0f64);
+        let zc = SendPtr(z_parts.as_mut_ptr());
+        let (m, m_total) = (self.m, self.m_total);
+        let (min, inv_h) = (self.min, self.inv_h);
+        let max_cell = self.eff as i32 - 1;
+        let pot = &self.pot;
+        pool.scope_chunks(count, CHUNK, |clo, chi| {
+            let _ = (&oc, &zc, &rz);
+            let mut z_local = 0f64;
+            let mut xs = [[0f32; LANES]; DIM];
+            let mut cells = [[0i32; LANES]; DIM];
+            let mut ws = [[[0f32; LANES]; INTERP_P]; DIM];
+            let mut tw = [0f32; MAX_TILE];
+            let mut idx = [0usize; MAX_TILE];
+            let mut vals = [0f64; MAX_TILE];
+            let mut base = clo;
+            while base < chi {
+                let mb = (chi - base).min(LANES);
+                for l in 0..mb {
+                    let i = lo + base + l;
+                    for d in 0..DIM {
+                        xs[d][l] = y[i * DIM + d];
+                    }
+                }
+                for d in 0..DIM {
+                    simd::interp_axis_block(
+                        be, mb, &xs[d], min[d], inv_h[d], max_cell, &mut cells[d], &mut ws[d],
+                    );
+                }
+                for l in 0..mb {
+                    let i = lo + base + l;
+                    let tile = tile_weights::<DIM>(m, &cells, &ws, l, &mut tw, &mut idx);
+                    for t in 0..tile {
+                        vals[t] = pot[idx[t]];
+                    }
+                    // φ₁ minus the exactly-known self term k1(i,i) = 1.
+                    let z_row = simd::interp_gather_dot(be, &tw[..tile], &vals[..tile]) - 1.0;
+                    for t in 0..tile {
+                        vals[t] = pot[m_total + idx[t]];
+                    }
+                    let psi0 = simd::interp_gather_dot(be, &tw[..tile], &vals[..tile]);
+                    let mut f = [0f64; DIM];
+                    for d in 0..DIM {
+                        for t in 0..tile {
+                            vals[t] = pot[(2 + d) * m_total + idx[t]];
+                        }
+                        let psid = simd::interp_gather_dot(be, &tw[..tile], &vals[..tile]);
+                        f[d] = y[i * DIM + d] as f64 * psi0 - psid;
+                    }
+                    z_local += z_row;
+                    if let Some(rz) = &rz {
+                        // SAFETY: disjoint rows across chunks.
+                        unsafe { *rz.0.add(i) = z_row };
+                    }
+                    let row = unsafe { std::slice::from_raw_parts_mut(oc.0.add(i * DIM), DIM) };
+                    row.copy_from_slice(&f);
+                }
+                base += mb;
+            }
+            // SAFETY: one chunk writes exactly one slot.
+            unsafe { *zc.0.add(clo / CHUNK) = z_local };
+        });
+        z_parts.iter().sum()
+    }
+
+    /// The full per-iteration pass: prepare → spread → convolve → gather.
+    /// Matches the repulsion contract of the tree-based methods (`out`
+    /// pre-zeroed by the engine, returns Z over the movable rows).
+    #[allow(clippy::too_many_arguments)]
+    pub fn repulsion(
+        &mut self,
+        pool: &ThreadPool,
+        y: &[f32],
+        n: usize,
+        lo: usize,
+        hi: usize,
+        out: &mut [f64],
+        z_parts: &mut Vec<f64>,
+        row_z: Option<&mut [f64]>,
+    ) -> f64 {
+        self.prepare(pool, y, n);
+        self.spread(pool, y, n);
+        self.convolve(pool);
+        self.gather(pool, y, n, lo, hi, out, z_parts, row_z)
+    }
+
+    /// Capacity snapshot of every owned buffer — all sized by `intervals`
+    /// in the constructor, so steady-state iterations leave it unchanged.
+    pub fn capacities(&self) -> [usize; 4] {
+        [self.nodes.capacity(), self.charge.capacity(), self.pot.capacity(), self.slots.capacity()]
+    }
+}
+
+/// Expand lane `l`'s per-dimension cells/weights into the flat tile:
+/// weight product in fixed left-to-right dimension order, node index
+/// row-major with the last dimension fastest. Returns the tile size
+/// (`3^DIM`). Pure function of the axis-kernel outputs, so a point's
+/// tile never depends on which lane or chunk processed it.
+#[inline(always)]
+fn tile_weights<const DIM: usize>(
+    m: usize,
+    cells: &[[i32; LANES]; DIM],
+    ws: &[[[f32; LANES]; INTERP_P]; DIM],
+    l: usize,
+    tw: &mut [f32; MAX_TILE],
+    idx: &mut [usize; MAX_TILE],
+) -> usize {
+    let tile = INTERP_P.pow(DIM as u32);
+    for t in 0..tile {
+        let mut w = 1.0f32;
+        let mut node = 0usize;
+        let mut div = tile;
+        let mut rem = t;
+        for d in 0..DIM {
+            div /= INTERP_P;
+            let k = rem / div;
+            rem %= div;
+            w = if d == 0 { ws[d][k][l] } else { w * ws[d][k][l] };
+            node = node * m + (cells[d][l] as usize * INTERP_P + k);
+        }
+        tw[t] = w;
+        idx[t] = node;
+    }
+    tile
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn random_embedding(n: usize, dim: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::seeded(seed);
+        (0..n * dim).map(|_| rng.normal() as f32 * 2.0).collect()
+    }
+
+    /// The spread tile weights partition unity, so the total mass on the
+    /// grid is the number of points (up to f32 weight round-off).
+    #[test]
+    fn spread_conserves_mass_and_center() {
+        let pool = ThreadPool::new(4);
+        for n in [1usize, 7, 64, 500] {
+            let y = random_embedding(n, 2, n as u64);
+            let mut g = InterpGrid::<2>::new(7);
+            g.prepare(&pool, &y, n);
+            g.spread(&pool, &y, n);
+            let mass: f64 = g.charge[..g.m_total].iter().sum();
+            assert!((mass - n as f64).abs() < 1e-3 * n as f64, "n={n} mass={mass}");
+            // The coordinate charges sum to the coordinate sums.
+            for d in 0..2 {
+                let want: f64 = (0..n).map(|i| y[i * 2 + d] as f64).sum();
+                let got: f64 = g.charge[(d + 1) * g.m_total..(d + 2) * g.m_total].iter().sum();
+                assert!(
+                    (got - want).abs() < 1e-3 * want.abs().max(1.0),
+                    "n={n} d={d}: {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    /// Node coordinates tile the bounding box: every point's cell nodes
+    /// bracket it within one cell width.
+    #[test]
+    fn grid_covers_bounding_box() {
+        let pool = ThreadPool::new(2);
+        let y = random_embedding(300, 3, 5);
+        let mut g = InterpGrid::<3>::new(4);
+        g.prepare(&pool, &y, 300);
+        for d in 0..3 {
+            let lo = y.chunks(3).map(|p| p[d]).fold(f32::INFINITY, f32::min);
+            let hi = y.chunks(3).map(|p| p[d]).fold(f32::NEG_INFINITY, f32::max);
+            let first = g.nodes[d * g.m_total];
+            let last = g.nodes[(d + 1) * g.m_total - 1];
+            assert!(first >= lo - g.h[d] && first <= lo + g.h[d], "d={d}");
+            assert!(last >= hi - g.h[d] && last <= hi + g.h[d], "d={d}");
+        }
+    }
+
+    /// The whole pass is invariant to the pool's thread count, bit for
+    /// bit (fixed-slot spread, fixed-chunk gather).
+    #[test]
+    fn repulsion_thread_count_invariant() {
+        for n in [1usize, 13, 200] {
+            let y = random_embedding(n, 2, 31 + n as u64);
+            let mut want_out = vec![0f64; n * 2];
+            let mut want_rz = vec![0f64; n];
+            let p1 = ThreadPool::new(1);
+            let mut g1 = InterpGrid::<2>::new(6);
+            let mut zp = Vec::new();
+            let want_z =
+                g1.repulsion(&p1, &y, n, 0, n, &mut want_out, &mut zp, Some(&mut want_rz));
+            for threads in [2usize, 5] {
+                let pool = ThreadPool::new(threads);
+                let mut g = InterpGrid::<2>::new(6);
+                let mut out = vec![0f64; n * 2];
+                let mut rz = vec![0f64; n];
+                let mut zp = Vec::new();
+                let z = g.repulsion(&pool, &y, n, 0, n, &mut out, &mut zp, Some(&mut rz));
+                assert_eq!(z.to_bits(), want_z.to_bits(), "n={n} threads={threads}");
+                assert_eq!(out, want_out, "n={n} threads={threads}");
+                assert_eq!(rz, want_rz, "n={n} threads={threads}");
+            }
+        }
+    }
+
+    /// The effective resolution follows the bounding box (floor for
+    /// compact blobs, `ceil(width)` in between, the cap for huge maps)
+    /// without ever touching buffer capacities, and the cap itself is
+    /// clamped per-DIM so the node count stays bounded.
+    #[test]
+    fn resolution_tracks_bounding_box() {
+        assert_eq!(InterpGrid::<2>::new(1000).intervals(), 120);
+        assert_eq!(InterpGrid::<3>::new(50).intervals(), 16);
+        let pool = ThreadPool::new(3);
+        let mut g = InterpGrid::<2>::new(50);
+        let caps = g.capacities();
+        let scaled = |seed: u64, s: f32| -> Vec<f32> {
+            random_embedding(200, 2, seed).iter().map(|v| v * s).collect()
+        };
+        let y = scaled(1, 0.01);
+        g.prepare(&pool, &y, 200);
+        assert_eq!(g.effective_intervals(), 10, "compact blob pins the floor");
+        // σ = 4 → width ≈ 20-25 over 200 draws: inside (10, 50).
+        let y = scaled(2, 2.0);
+        g.prepare(&pool, &y, 200);
+        let width = (0..2)
+            .map(|d| {
+                let lo = y.chunks(2).map(|p| p[d]).fold(f32::INFINITY, f32::min);
+                let hi = y.chunks(2).map(|p| p[d]).fold(f32::NEG_INFINITY, f32::max);
+                hi - lo
+            })
+            .fold(0f32, f32::max);
+        assert_eq!(g.effective_intervals(), (width.ceil() as usize).clamp(10, 50));
+        assert!(g.effective_intervals() > 10 && g.effective_intervals() < 50);
+        let y = scaled(3, 1000.0);
+        let mut out = vec![0f64; 200 * 2];
+        let mut zp = Vec::new();
+        let z = g.repulsion(&pool, &y, 200, 0, 200, &mut out, &mut zp, None);
+        assert_eq!(g.effective_intervals(), 50, "huge map hits the cap");
+        assert!(z.is_finite() && out.iter().all(|v| v.is_finite()));
+        assert_eq!(g.capacities(), caps, "adaptation must not reallocate");
+    }
+
+    /// A movable-range gather equals the full pass bitwise on the rows it
+    /// covers and leaves frozen rows untouched.
+    #[test]
+    fn partial_gather_matches_full_bitwise() {
+        let pool = ThreadPool::new(4);
+        let n = 150;
+        let (lo, hi) = (110, 150);
+        let y = random_embedding(n, 2, 77);
+        let mut g = InterpGrid::<2>::new(9);
+        let mut zp = Vec::new();
+        let mut full = vec![0f64; n * 2];
+        let mut full_rz = vec![0f64; n];
+        g.repulsion(&pool, &y, n, 0, n, &mut full, &mut zp, Some(&mut full_rz));
+        let mut part = vec![0f64; n * 2];
+        let mut part_rz = vec![0f64; n];
+        let z = g.gather(&pool, &y, n, lo, hi, &mut part, &mut zp, Some(&mut part_rz));
+        assert!(part[..lo * 2].iter().all(|&v| v == 0.0));
+        assert_eq!(part[lo * 2..], full[lo * 2..]);
+        assert_eq!(part_rz[lo..], full_rz[lo..]);
+        let want: f64 = zp.iter().sum();
+        assert_eq!(z.to_bits(), want.to_bits());
+    }
+}

@@ -5,6 +5,7 @@
 pub mod engine;
 pub mod gradient;
 pub mod input;
+pub mod interp;
 pub mod model;
 pub mod optimizer;
 pub mod perplexity;
@@ -12,6 +13,7 @@ pub mod sparse;
 
 pub use engine::{DynForceEngine, EngineStats, ForceEngine};
 pub use gradient::RepulsionMethod;
+pub use interp::InterpGrid;
 pub use model::{TransformOptions, TransformResult, TransformStats, TsneModel};
 pub use sparse::Csr;
 
@@ -488,6 +490,32 @@ mod tests {
         for theta in [0.0f32, 0.5] {
             let mut cfg = tiny_config(150);
             cfg.theta = theta;
+            cfg.cost_every = 150; // only final
+            let mut runner = TsneRunner::new(cfg);
+            let y = runner.run(&data.x, data.dim).unwrap();
+            errs.push(crate::eval::one_nn_error(runner.pool(), &y, 2, &data.labels));
+            kls.push(runner.stats.final_kl.unwrap());
+        }
+        assert!((errs[0] - errs[1]).abs() < 0.1, "1-NN errors diverged: {errs:?}");
+        assert!(kls.iter().all(|&k| k < 2.0), "KLs did not converge: {kls:?}");
+    }
+
+    /// Same quality bar for the grid-interpolation method: a full run
+    /// must land within the paper's 1-NN comparison band of the exact
+    /// run and reach a converged KL. The small cap keeps the debug-build
+    /// convolve cheap; the adaptive resolution still holds the cell
+    /// width near one kernel length at this scale.
+    #[test]
+    fn exact_and_interp_runs_similar_quality() {
+        let spec = SyntheticSpec { n: 150, dim: 5, classes: 3, seed: 8, ..Default::default() };
+        let data = gaussian_mixture(&spec);
+        let mut errs = Vec::new();
+        let mut kls = Vec::new();
+        for method in
+            [RepulsionMethod::Exact, RepulsionMethod::Interpolation { intervals: 10 }]
+        {
+            let mut cfg = tiny_config(150);
+            cfg.repulsion = Some(method);
             cfg.cost_every = 150; // only final
             let mut runner = TsneRunner::new(cfg);
             let y = runner.run(&data.x, data.dim).unwrap();

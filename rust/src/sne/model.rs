@@ -367,7 +367,10 @@ impl TsneModel {
 
             // The dual-tree walk computes every point's force at once and
             // cannot freeze a sub-range; transform maps it to point-cell
-            // Barnes-Hut at the configured θ.
+            // Barnes-Hut at the configured θ. Exact, Barnes-Hut, and grid
+            // interpolation all honor the movable range natively (frozen
+            // reference rows contribute repulsion but receive no force)
+            // and pass through unchanged.
             let method = match self.config.repulsion_method() {
                 RepulsionMethod::DualTree { .. } => {
                     if self.config.theta > 0.0 {

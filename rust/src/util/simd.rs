@@ -2,9 +2,11 @@
 //!
 //! Every arithmetic-dominated inner loop in the codebase — the Barnes-Hut
 //! point-cell summary (d²/q/mult), the dual-tree range-add, the CSR
-//! attractive row, the perplexity exp/normalize row math, and the vp-tree
-//! squared-Euclidean metric — routes through this module. Each kernel has
-//! two implementations selected at runtime by [`backend`]:
+//! attractive row, the perplexity exp/normalize row math, the vp-tree
+//! squared-Euclidean metric, and the grid-interpolation repulsion stages
+//! (axis placement, node-kernel row, weight·value gather) — routes
+//! through this module. Each kernel has two implementations selected at
+//! runtime by [`backend`]:
 //!
 //! * **Avx2** — explicit `core::arch::x86_64` intrinsics, 8 f32 lanes
 //!   (two 4-wide f64 registers for the widened accumulation), gated by
@@ -690,6 +692,317 @@ unsafe fn sq_euclidean_avx2(a: &[f32], b: &[f32]) -> f32 {
     reduce_lanes_f32(&lanes)
 }
 
+// ---------------------------------------------------------------------------
+// Grid-interpolation repulsion kernels (FIt-SNE-style O(N) method).
+// ---------------------------------------------------------------------------
+
+/// Lagrange interpolation nodes per grid interval.
+pub const INTERP_P: usize = 3;
+
+/// Fractional in-cell positions of the three interpolation nodes.
+pub const INTERP_T: [f32; INTERP_P] = [1.0 / 6.0, 0.5, 5.0 / 6.0];
+
+/// The three Lagrange basis weights at in-cell fraction `f` (exactly
+/// rounded sub/mul with fixed left-to-right association — the AVX2 twin
+/// mirrors it op for op). The weights sum to ~1 for any `f` in the cell,
+/// including the clamped extrapolation at the bounding-box edge.
+#[inline(always)]
+pub fn interp_axis_weights(f: f32) -> [f32; INTERP_P] {
+    let a = f - INTERP_T[0];
+    let b = f - INTERP_T[1];
+    let c = f - INTERP_T[2];
+    [(b * c) * 4.5, (a * c) * -9.0, (a * b) * 4.5]
+}
+
+/// Per-lane grid placement for one axis of `m ≤ LANES` points:
+/// `u = (x − min)·inv_h`, `cell = clamp(trunc(u), 0, max_cell)`, in-cell
+/// fraction `f = u − cell`, then the three Lagrange weights of `f`. The
+/// caller guarantees `x ≥ min` and a finite positive `inv_h` (degenerate
+/// boxes are widened before this runs), so `u ≥ 0`, truncation equals
+/// floor, and the f32→i32 cast can never see NaN — the one input where
+/// the portable cast (0) and `_mm256_cvttps_epi32` (i32::MIN) disagree.
+#[inline]
+pub fn interp_axis_block(
+    be: Backend,
+    m: usize,
+    x: &[f32; LANES],
+    min: f32,
+    inv_h: f32,
+    max_cell: i32,
+    cell: &mut [i32; LANES],
+    w: &mut [[f32; LANES]; INTERP_P],
+) {
+    if m == LANES {
+        match be {
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 => unsafe { interp_axis_avx2(x, min, inv_h, max_cell, cell, w) },
+            _ => interp_axis_portable(m, x, min, inv_h, max_cell, cell, w),
+        }
+    } else {
+        interp_axis_portable(m, x, min, inv_h, max_cell, cell, w);
+    }
+}
+
+fn interp_axis_portable(
+    m: usize,
+    x: &[f32; LANES],
+    min: f32,
+    inv_h: f32,
+    max_cell: i32,
+    cell: &mut [i32; LANES],
+    w: &mut [[f32; LANES]; INTERP_P],
+) {
+    for j in 0..m {
+        let u = (x[j] - min) * inv_h;
+        let c = (u as i32).min(max_cell).max(0);
+        let f = u - c as f32;
+        let wj = interp_axis_weights(f);
+        cell[j] = c;
+        for k in 0..INTERP_P {
+            w[k][j] = wj[k];
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn interp_axis_avx2(
+    x: &[f32; LANES],
+    min: f32,
+    inv_h: f32,
+    max_cell: i32,
+    cell: &mut [i32; LANES],
+    w: &mut [[f32; LANES]; INTERP_P],
+) {
+    use std::arch::x86_64::*;
+    let u = _mm256_mul_ps(
+        _mm256_sub_ps(_mm256_loadu_ps(x.as_ptr()), _mm256_set1_ps(min)),
+        _mm256_set1_ps(inv_h),
+    );
+    // min-then-max matches the scalar `.min(max_cell).max(0)` order.
+    let c = _mm256_max_epi32(
+        _mm256_min_epi32(_mm256_cvttps_epi32(u), _mm256_set1_epi32(max_cell)),
+        _mm256_setzero_si256(),
+    );
+    _mm256_storeu_si256(cell.as_mut_ptr() as *mut __m256i, c);
+    let f = _mm256_sub_ps(u, _mm256_cvtepi32_ps(c));
+    let a = _mm256_sub_ps(f, _mm256_set1_ps(INTERP_T[0]));
+    let b = _mm256_sub_ps(f, _mm256_set1_ps(INTERP_T[1]));
+    let cc = _mm256_sub_ps(f, _mm256_set1_ps(INTERP_T[2]));
+    _mm256_storeu_ps(w[0].as_mut_ptr(), _mm256_mul_ps(_mm256_mul_ps(b, cc), _mm256_set1_ps(4.5)));
+    _mm256_storeu_ps(w[1].as_mut_ptr(), _mm256_mul_ps(_mm256_mul_ps(a, cc), _mm256_set1_ps(-9.0)));
+    _mm256_storeu_ps(w[2].as_mut_ptr(), _mm256_mul_ps(_mm256_mul_ps(a, b), _mm256_set1_ps(4.5)));
+}
+
+/// One target node's row of the direct node×node kernel product: for the
+/// target at `tc`, accumulate over every source node `s` the t-kernel
+/// `k1 = 1/(1+d²)` (one f32 divide, widened — the BH summary recipe) and
+/// `k2 = k1²` against the spread charges, producing the `DIM+2`
+/// potentials `out = [φ₁ = Σ k1·c₀, ψ₀ = Σ k2·c₀, ψ_d = Σ k2·c_d]`.
+/// `nodes` is dim-major (`nodes[d·m_total + s]`), `charge` field-major
+/// (`charge[f·m_total + s]`). Lane-blocked accumulation (source `s` lands
+/// in lane `s % LANES`) with the fixed reduction order.
+#[inline]
+pub fn interp_kernel_row<const DIM: usize>(
+    be: Backend,
+    tc: &[f32; DIM],
+    nodes: &[f32],
+    charge: &[f64],
+    m_total: usize,
+    out: &mut [f64],
+) {
+    // Hard asserts: the AVX2 path does unchecked loads sized by `m_total`.
+    assert_eq!(nodes.len(), DIM * m_total);
+    assert_eq!(charge.len(), (DIM + 1) * m_total);
+    assert_eq!(out.len(), DIM + 2);
+    match be {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { interp_kernel_row_avx2::<DIM>(tc, nodes, charge, m_total, out) },
+        _ => interp_kernel_row_portable::<DIM>(tc, nodes, charge, m_total, out),
+    }
+}
+
+/// One source node into one lane — the shared scalar tail of both
+/// backends.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn interp_kernel_lane<const DIM: usize>(
+    tc: &[f32; DIM],
+    nodes: &[f32],
+    charge: &[f64],
+    m_total: usize,
+    s: usize,
+    j: usize,
+    phi: &mut [f64; LANES],
+    psi0: &mut [f64; LANES],
+    psid: &mut [[f64; LANES]; DIM],
+) {
+    let mut d2 = 0f32;
+    for d in 0..DIM {
+        let df = tc[d] - nodes[d * m_total + s];
+        d2 += df * df;
+    }
+    let k1 = (1.0f32 / (1.0 + d2)) as f64;
+    let k2 = k1 * k1;
+    let c0 = charge[s];
+    phi[j] += k1 * c0;
+    psi0[j] += k2 * c0;
+    for d in 0..DIM {
+        psid[d][j] += k2 * charge[(d + 1) * m_total + s];
+    }
+}
+
+fn interp_kernel_row_portable<const DIM: usize>(
+    tc: &[f32; DIM],
+    nodes: &[f32],
+    charge: &[f64],
+    m_total: usize,
+    out: &mut [f64],
+) {
+    let mut phi = [0f64; LANES];
+    let mut psi0 = [0f64; LANES];
+    let mut psid = [[0f64; LANES]; DIM];
+    let blocks = m_total / LANES;
+    for blk in 0..blocks {
+        let base = blk * LANES;
+        for j in 0..LANES {
+            interp_kernel_lane::<DIM>(
+                tc, nodes, charge, m_total, base + j, j, &mut phi, &mut psi0, &mut psid,
+            );
+        }
+    }
+    let base = blocks * LANES;
+    for j in 0..m_total - base {
+        interp_kernel_lane::<DIM>(tc, nodes, charge, m_total, base + j, j, &mut phi, &mut psi0, &mut psid);
+    }
+    out[0] = reduce_lanes(&phi);
+    out[1] = reduce_lanes(&psi0);
+    for d in 0..DIM {
+        out[2 + d] = reduce_lanes(&psid[d]);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn interp_kernel_row_avx2<const DIM: usize>(
+    tc: &[f32; DIM],
+    nodes: &[f32],
+    charge: &[f64],
+    m_total: usize,
+    out: &mut [f64],
+) {
+    use std::arch::x86_64::*;
+    let one = _mm256_set1_ps(1.0);
+    let mut tcv = [_mm256_setzero_ps(); DIM];
+    for d in 0..DIM {
+        tcv[d] = _mm256_set1_ps(tc[d]);
+    }
+    let mut philo = _mm256_setzero_pd();
+    let mut phihi = _mm256_setzero_pd();
+    let mut p0lo = _mm256_setzero_pd();
+    let mut p0hi = _mm256_setzero_pd();
+    let mut pdlo = [_mm256_setzero_pd(); DIM];
+    let mut pdhi = [_mm256_setzero_pd(); DIM];
+    let blocks = m_total / LANES;
+    for blk in 0..blocks {
+        let base = blk * LANES;
+        let mut d2v = _mm256_setzero_ps();
+        for d in 0..DIM {
+            let dv = _mm256_sub_ps(tcv[d], _mm256_loadu_ps(nodes.as_ptr().add(d * m_total + base)));
+            d2v = _mm256_add_ps(d2v, _mm256_mul_ps(dv, dv));
+        }
+        // k1 via one f32 divide per lane, exactly like the scalar path.
+        let k1v = _mm256_div_ps(one, _mm256_add_ps(one, d2v));
+        let k1lo = _mm256_cvtps_pd(_mm256_castps256_ps128(k1v));
+        let k1hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(k1v));
+        let k2lo = _mm256_mul_pd(k1lo, k1lo);
+        let k2hi = _mm256_mul_pd(k1hi, k1hi);
+        let c0lo = _mm256_loadu_pd(charge.as_ptr().add(base));
+        let c0hi = _mm256_loadu_pd(charge.as_ptr().add(base + 4));
+        philo = _mm256_add_pd(philo, _mm256_mul_pd(k1lo, c0lo));
+        phihi = _mm256_add_pd(phihi, _mm256_mul_pd(k1hi, c0hi));
+        p0lo = _mm256_add_pd(p0lo, _mm256_mul_pd(k2lo, c0lo));
+        p0hi = _mm256_add_pd(p0hi, _mm256_mul_pd(k2hi, c0hi));
+        for d in 0..DIM {
+            let cdlo = _mm256_loadu_pd(charge.as_ptr().add((d + 1) * m_total + base));
+            let cdhi = _mm256_loadu_pd(charge.as_ptr().add((d + 1) * m_total + base + 4));
+            pdlo[d] = _mm256_add_pd(pdlo[d], _mm256_mul_pd(k2lo, cdlo));
+            pdhi[d] = _mm256_add_pd(pdhi[d], _mm256_mul_pd(k2hi, cdhi));
+        }
+    }
+    let mut phi = [0f64; LANES];
+    let mut psi0 = [0f64; LANES];
+    let mut psid = [[0f64; LANES]; DIM];
+    _mm256_storeu_pd(phi.as_mut_ptr(), philo);
+    _mm256_storeu_pd(phi.as_mut_ptr().add(4), phihi);
+    _mm256_storeu_pd(psi0.as_mut_ptr(), p0lo);
+    _mm256_storeu_pd(psi0.as_mut_ptr().add(4), p0hi);
+    for d in 0..DIM {
+        _mm256_storeu_pd(psid[d].as_mut_ptr(), pdlo[d]);
+        _mm256_storeu_pd(psid[d].as_mut_ptr().add(4), pdhi[d]);
+    }
+    // Tail: identical scalar lane operations to the portable path.
+    let base = blocks * LANES;
+    for j in 0..m_total - base {
+        interp_kernel_lane::<DIM>(tc, nodes, charge, m_total, base + j, j, &mut phi, &mut psi0, &mut psid);
+    }
+    out[0] = reduce_lanes(&phi);
+    out[1] = reduce_lanes(&psi0);
+    for d in 0..DIM {
+        out[2 + d] = reduce_lanes(&psid[d]);
+    }
+}
+
+/// Lane-blocked dot product of f32 interpolation weights against f64
+/// grid values: `Σ (w[i] as f64)·v[i]` with element `i` in f64 lane
+/// `i % LANES`, lanes reduced in fixed order. The gather stage runs it
+/// once per potential field over one point's tile of node values.
+#[inline]
+pub fn interp_gather_dot(be: Backend, w: &[f32], v: &[f64]) -> f64 {
+    // Hard assert: the AVX2 path does unchecked loads sized by `w`.
+    assert_eq!(w.len(), v.len());
+    match be {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { interp_gather_dot_avx2(w, v) },
+        _ => interp_gather_dot_portable(w, v),
+    }
+}
+
+fn interp_gather_dot_portable(w: &[f32], v: &[f64]) -> f64 {
+    let mut acc = [0f64; LANES];
+    for i in 0..w.len() {
+        acc[i % LANES] += w[i] as f64 * v[i];
+    }
+    reduce_lanes(&acc)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn interp_gather_dot_avx2(w: &[f32], v: &[f64]) -> f64 {
+    use std::arch::x86_64::*;
+    let mut acc = [0f64; LANES];
+    let n = w.len();
+    let blocks = n / LANES;
+    if blocks > 0 {
+        let mut alo = _mm256_setzero_pd();
+        let mut ahi = _mm256_setzero_pd();
+        for blk in 0..blocks {
+            let base = blk * LANES;
+            let wv = _mm256_loadu_ps(w.as_ptr().add(base));
+            let wlo = _mm256_cvtps_pd(_mm256_castps256_ps128(wv));
+            let whi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(wv));
+            alo = _mm256_add_pd(alo, _mm256_mul_pd(wlo, _mm256_loadu_pd(v.as_ptr().add(base))));
+            ahi = _mm256_add_pd(ahi, _mm256_mul_pd(whi, _mm256_loadu_pd(v.as_ptr().add(base + 4))));
+        }
+        _mm256_storeu_pd(acc.as_mut_ptr(), alo);
+        _mm256_storeu_pd(acc.as_mut_ptr().add(4), ahi);
+    }
+    for i in blocks * LANES..n {
+        acc[i % LANES] += w[i] as f64 * v[i];
+    }
+    reduce_lanes(&acc)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -835,6 +1148,87 @@ mod tests {
                 let mut p = vec![0f32; k];
                 normalize_weights(be, &w, s, &mut p);
                 assert_eq!(p, want_p, "k={k} {:?}", be);
+            }
+        }
+    }
+
+    #[test]
+    fn interp_axis_block_backends_bit_identical() {
+        let mut rng = Pcg32::seeded(12);
+        for m in 1..=LANES {
+            for trial in 0..8 {
+                let min = rng.normal() as f32;
+                let inv_h = rng.uniform_range(0.05, 40.0) as f32;
+                let max_cell = 1 + rng.below(30) as i32;
+                let mut x = [min; LANES];
+                for j in 0..m {
+                    // x ≥ min by construction (the caller's contract),
+                    // including the exact-edge case x == min.
+                    x[j] = min + if trial == 0 && j == 0 { 0.0 } else { rng.uniform_f32() * 3.0 };
+                }
+                let mut want_c = [0i32; LANES];
+                let mut want_w = [[0f32; LANES]; INTERP_P];
+                interp_axis_portable(m, &x, min, inv_h, max_cell, &mut want_c, &mut want_w);
+                for be in test_backends() {
+                    let mut c = [0i32; LANES];
+                    let mut w = [[0f32; LANES]; INTERP_P];
+                    interp_axis_block(be, m, &x, min, inv_h, max_cell, &mut c, &mut w);
+                    assert_eq!(c[..m], want_c[..m], "m={m} trial={trial} {:?}", be);
+                    for k in 0..INTERP_P {
+                        assert_eq!(w[k][..m], want_w[k][..m], "m={m} k={k} {:?}", be);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn interp_axis_weights_partition_unity() {
+        for f in [0.0f32, 1.0 / 6.0, 0.3, 0.5, 5.0 / 6.0, 0.99, 1.0] {
+            let w = interp_axis_weights(f);
+            let s: f32 = w.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "f={f} sum={s}");
+        }
+    }
+
+    #[test]
+    fn interp_kernel_row_backends_bit_identical() {
+        fn check<const DIM: usize>(seed: u64) {
+            let mut rng = Pcg32::seeded(seed);
+            for m_total in (1usize..=17).chain([64, 100]) {
+                let nodes = {
+                    let mut rng2 = Pcg32::seeded(seed + m_total as u64);
+                    (0..DIM * m_total).map(|_| rng2.normal() as f32 * 2.0).collect::<Vec<_>>()
+                };
+                let charge: Vec<f64> = (0..(DIM + 1) * m_total).map(|_| rng.normal()).collect();
+                let mut tc = [0f32; DIM];
+                for d in 0..DIM {
+                    tc[d] = rng.normal() as f32;
+                }
+                let mut want = vec![0f64; DIM + 2];
+                interp_kernel_row_portable::<DIM>(&tc, &nodes, &charge, m_total, &mut want);
+                for be in test_backends() {
+                    let mut out = vec![0f64; DIM + 2];
+                    interp_kernel_row::<DIM>(be, &tc, &nodes, &charge, m_total, &mut out);
+                    let wb: Vec<u64> = want.iter().map(|v| v.to_bits()).collect();
+                    let ob: Vec<u64> = out.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(ob, wb, "DIM={DIM} m_total={m_total} {:?}", be);
+                }
+            }
+        }
+        check::<2>(13);
+        check::<3>(14);
+    }
+
+    #[test]
+    fn interp_gather_dot_backends_bit_identical() {
+        let mut rng = Pcg32::seeded(15);
+        for len in (0usize..=17).chain([27, 64]) {
+            let w: Vec<f32> = (0..len).map(|_| rng.normal() as f32).collect();
+            let v: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
+            let want = interp_gather_dot_portable(&w, &v);
+            for be in test_backends() {
+                assert_eq!(interp_gather_dot(be, &w, &v).to_bits(), want.to_bits(), "len={len} {:?}", be);
             }
         }
     }

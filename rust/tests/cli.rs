@@ -176,6 +176,70 @@ fn config_file_keys_survive_without_cli_override() {
 }
 
 #[test]
+fn embed_with_interp_force_method() {
+    let dir = tmpdir("embed-interp");
+    let out = bhsne()
+        .args([
+            "embed",
+            "--dataset", "gaussians",
+            "--n", "130",
+            "--iters", "30",
+            "--cost-every", "10",
+            "--force-method", "interp",
+            "--intervals", "8",
+            "--out",
+        ])
+        .arg(&dir)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("1-NN error"), "{s}");
+    assert!(dir.join("embedding.tsv").exists());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn force_method_from_config_file() {
+    // tsne.force_method / tsne.intervals from the file must apply when
+    // the CLI leaves both at their spec defaults.
+    let dir = tmpdir("cfg-force");
+    let cfg_path = dir.join("run.toml");
+    let toml = concat!(
+        "[job]\ndataset = \"gaussians\"\nn = 110\n\n",
+        "[tsne]\niters = 25\nforce_method = \"interp\"\nintervals = 6\n",
+    );
+    std::fs::write(&cfg_path, toml).unwrap();
+    let out = bhsne()
+        .args(["embed", "--config"])
+        .arg(&cfg_path)
+        .args(["--out"])
+        .arg(dir.join("out"))
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("points           : 110"), "{s}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn embed_rejects_unknown_force_method() {
+    let out = bhsne()
+        .args([
+            "embed",
+            "--dataset", "gaussians",
+            "--n", "50",
+            "--iters", "5",
+            "--force-method", "bogus",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown force-method"));
+}
+
+#[test]
 fn sweep_theta_prints_table() {
     let out = bhsne()
         .args([

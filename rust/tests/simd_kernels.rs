@@ -211,6 +211,36 @@ fn metric_simd_matches_scalar_bitwise_through_knn() {
     }
 }
 
+/// The whole interpolation pass (axis placement → spread → node-kernel
+/// convolve → gather) across the stress clouds plus an exactly collinear
+/// cloud, whose second dimension collapses the bounding box onto the
+/// clamped minimum width. Sizes straddle the lane remainders.
+#[test]
+fn interp_repulsion_simd_matches_scalar_bitwise() {
+    use bhsne::sne::InterpGrid;
+    let pool = ThreadPool::new(4);
+    for n in (1usize..=17).chain([300, 1000]) {
+        let mut all = clouds(n, 2, 43 + n as u64);
+        let step = 3.0 / (n as f32 - 1.0).max(1.0);
+        all.push((0..n).flat_map(|i| [i as f32 * step, 1.5]).collect());
+        for (ci, y) in all.into_iter().enumerate() {
+            let results = with_each_backend(|| {
+                let mut g = InterpGrid::<2>::new(9);
+                let mut out = vec![0f64; n * 2];
+                let mut rz = vec![0f64; n];
+                let mut zp = Vec::new();
+                let z = g.repulsion(&pool, &y, n, 0, n, &mut out, &mut zp, Some(&mut rz));
+                (z, out, rz)
+            });
+            for r in &results[1..] {
+                assert_eq!(r.0.to_bits(), results[0].0.to_bits(), "n={n} cloud={ci} z");
+                assert_eq!(r.1, results[0].1, "n={n} cloud={ci} forces");
+                assert_eq!(r.2, results[0].2, "n={n} cloud={ci} row z");
+            }
+        }
+    }
+}
+
 #[test]
 fn full_bh_gradient_simd_matches_scalar_bitwise() {
     let pool = ThreadPool::new(4);

@@ -1,0 +1,120 @@
+#!/usr/bin/env bash
+# Perf-trajectory regression gate over the machine-readable bench capture.
+#
+#   bash scripts/check_bench.sh [BENCH_micro_hotpath.json]
+#
+# Run locally via `make check-bench` (benches first, then gates) or point
+# it at an existing capture. Three gates, in order:
+#
+#   1. Key presence — every figure CI archives must exist, including the
+#      grid-interpolation stage rows (`interp_*`).
+#   2. Sanity — every `*_ns_per_point` figure in the capture is a finite,
+#      strictly positive number (catches NaN/inf from a skipped or
+#      miswired bench section).
+#   3. SIMD regression — each `*_simd_ns_per_point` row must not exceed
+#      1.15x its `*_scalar_ns_per_point` twin. The 15% headroom absorbs
+#      runner noise while still failing a kernel that silently fell back
+#      to scalar code. Skipped when `kernel_backend` is "portable": there
+#      both rows measure the same code path and the ratio is pure noise.
+#
+# Plain bash + grep + awk on the single-line JSON; no jq dependency.
+set -u
+
+json_file="${1:-BENCH_micro_hotpath.json}"
+if [ ! -f "$json_file" ]; then
+    echo "check_bench: $json_file not found" >&2
+    echo "check_bench: generate it with: cargo bench --bench micro_hotpath -- --quick --json" >&2
+    exit 1
+fi
+json=$(cat "$json_file")
+
+fail=0
+err() {
+    echo "check_bench: FAIL: $*" >&2
+    fail=1
+}
+
+# Value of a top-level scalar key (first occurrence wins; the nested
+# `table` blob comes last, so top-level figures always match first).
+value_of() {
+    printf '%s' "$json" | grep -o "\"$1\":[^,}]*" | head -n 1 | cut -d: -f2
+}
+
+# ---- 1. Required keys: tree/force engine, SIMD kernel rows, the
+# grid-interpolation stages, input stage, and model serving. ----
+required_keys="
+kernel_backend
+tree_build_serial_ns_per_point
+tree_build_parallel_ns_per_point
+tree_refit_ns_per_point
+force_eval_theta05_ns_per_point
+point_cell_scalar_ns_per_point
+point_cell_simd_ns_per_point
+dual_tree_serial_ns_per_point
+dual_tree_parallel_ns_per_point
+dual_tree_scalar_ns_per_point
+dual_tree_simd_ns_per_point
+metric_scalar_ns_per_point
+metric_simd_ns_per_point
+interp_spread_scalar_ns_per_point
+interp_spread_simd_ns_per_point
+interp_gather_scalar_ns_per_point
+interp_gather_simd_ns_per_point
+interp_total_ns_per_point
+transform_ns_per_point
+input_stage
+vp_build_serial_ns_per_point
+vp_build_parallel_ns_per_point
+knn_query_ns_per_point
+symmetrize_ns_per_point
+"
+for key in $required_keys; do
+    case "$json" in
+        *"\"$key\""*) ;;
+        *) err "$json_file missing key \"$key\"" ;;
+    esac
+done
+
+# ---- 2. Every *_ns_per_point figure must be finite and positive. The
+# scan covers all such keys in the capture, not just the required list,
+# so new rows are gated the day they land. ----
+np_keys=$(printf '%s' "$json" | grep -o '"[a-z0-9_]*_ns_per_point"' | tr -d '"' | sort -u)
+for key in $np_keys; do
+    v=$(value_of "$key")
+    case "$v" in
+        '' | *[!0-9.]* | . | *.*.*)
+            # Empty, NaN, inf, negative, or otherwise non-numeric.
+            err "\"$key\" is not a finite positive number: '${v:-<missing>}'"
+            continue
+            ;;
+    esac
+    if ! awk -v v="$v" 'BEGIN { exit !(v > 0) }'; then
+        err "\"$key\" must be strictly positive, got $v"
+    fi
+done
+
+# ---- 3. SIMD-vs-scalar regression ratios. ----
+backend=$(printf '%s' "$json" | grep -o '"kernel_backend":"[^"]*"' | cut -d'"' -f4)
+if [ "$backend" = "portable" ]; then
+    echo "check_bench: kernel_backend=portable — scalar and simd rows ran the same code path; skipping ratio gates"
+else
+    for pair in point_cell dual_tree metric interp_spread interp_gather; do
+        s=$(value_of "${pair}_scalar_ns_per_point")
+        v=$(value_of "${pair}_simd_ns_per_point")
+        if [ -z "$s" ] || [ -z "$v" ]; then
+            err "cannot compute ${pair} simd/scalar ratio (scalar='$s' simd='$v')"
+            continue
+        fi
+        if awk -v s="$s" -v v="$v" 'BEGIN { exit !(v <= 1.15 * s) }'; then
+            echo "check_bench: ok   ${pair}: simd $v <= 1.15 * scalar $s ns/point"
+        else
+            err "${pair}: simd $v ns/point exceeds 1.15 * scalar $s ns/point (backend $backend)"
+        fi
+    done
+fi
+
+if [ "$fail" -ne 0 ]; then
+    echo "check_bench: $json_file FAILED the perf-trajectory gate" >&2
+    exit 1
+fi
+echo "check_bench: $json_file passed (backend $backend, all figures finite and positive)"
