@@ -3,7 +3,7 @@
 # gets a local entry point; everything else is a one-liner kept here for
 # discoverability.
 
-.PHONY: build test bench check-bench lint
+.PHONY: build test bench check-bench crash-drill lint
 
 build:
 	cargo build --release
@@ -19,6 +19,12 @@ bench:
 # and the simd <= 1.15 * scalar regression ratios.
 check-bench: bench
 	bash scripts/check_bench.sh BENCH_micro_hotpath.json
+
+# The CI crash-resume drill: kill a fit mid-run (BHSNE_FAULT=kill@60),
+# resume from the checkpoint, and byte-compare the resumed .bhsne
+# against an uninterrupted reference run's.
+crash-drill: build
+	bash scripts/crash_resume_smoke.sh
 
 lint:
 	cargo fmt --all --check

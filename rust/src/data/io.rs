@@ -1,24 +1,44 @@
 //! Embedding snapshot I/O — TSV (human/plot-friendly) and a compact
 //! binary format used by the pipeline's periodic snapshots — plus the
-//! versioned model format `bhsne fit` persists.
+//! versioned model format `bhsne fit` persists and the run-checkpoint
+//! format the crash-safe run layer writes.
 //!
-//! # Model format (`.bhsne`, version 1)
+//! # Model format (`.bhsne`, version 2)
 //!
 //! Little-endian throughout: a magic + version header followed by framed
 //! sections, each `tag:u32, payload_len:u64, crc32:u32, payload`, closed
-//! by a zero-length `END` section. Payloads are CRC-checked before they
-//! are parsed, so bit rot and truncation fail loudly instead of producing
-//! a silently-wrong model. The vp-tree arena serializes as raw node
-//! records ([`crate::vptree::VpArena`]), so a loaded model answers kNN
-//! queries with no rebuild. Version policy: the reader accepts exactly
-//! the versions it knows how to parse (currently 1) and rejects anything
-//! else — adding sections bumps the version, and old readers fail with a
-//! clear "unsupported version" error rather than misparse.
+//! by a zero-length `END` section. Every section checksum is verified
+//! before `read_model` returns, so bit rot and truncation fail loudly
+//! instead of producing a silently-wrong model. The vp-tree arena
+//! serializes as raw node records ([`crate::vptree::VpArena`]), so a
+//! loaded model answers kNN queries with no rebuild.
+//!
+//! Version 2 changes (the crash-safe run layer):
+//! - Saves are **atomic**: temp sibling + fsync + rename (+ directory
+//!   fsync), so a crash or IO error mid-save leaves either the old file
+//!   or no file — never a torn one.
+//! - Sections are **streamed** through an incremental-CRC section writer
+//!   with a patched-up header, so peak save memory is one 64 KiB
+//!   conversion block instead of the largest section; the reader streams
+//!   section payloads the same way.
+//! - The STATS section persists only **run-deterministic** fields
+//!   (iterations, final KL, input nnz, perplexity failures). Wall-clock
+//!   timings and tree refit/rebuild counters stay in the in-memory
+//!   [`RunStats`] only — they necessarily differ between an interrupted
+//!   + resumed run and an uninterrupted one, and a `.bhsne` file is
+//!   required to be a pure function of (data, config).
+//!
+//! Version policy: the reader accepts exactly the versions it knows how
+//! to parse (currently 2) and rejects anything else — adding sections or
+//! changing payloads bumps the version, and old readers fail with a
+//! clear "unsupported version" error rather than misparse. Checkpoint
+//! files carry their own magic + version under the same policy.
 
+use crate::util::fault;
 use anyhow::{bail, Context, Result};
 use byteorder::{LittleEndian, ReadBytesExt, WriteBytesExt};
-use std::io::{BufRead, BufReader, BufWriter, Read, Write};
-use std::path::Path;
+use std::io::{BufRead, BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
 
 /// Write `n × dim` embedding rows with labels as TSV:
 /// `y_0 <tab> ... <tab> y_{dim-1} <tab> label`.
@@ -76,6 +96,8 @@ pub fn read_tsv(path: impl AsRef<Path>) -> Result<(Vec<f32>, usize, Vec<u8>)> {
 const SNAP_MAGIC: u32 = 0x42_48_53_4e; // "BHSN"
 
 /// Binary snapshot: magic, version, n, dim, iter, f32 rows, u8 labels.
+/// Written atomically — a periodic snapshot that dies mid-write must not
+/// clobber the previous good one.
 pub fn write_snapshot(
     path: impl AsRef<Path>,
     y: &[f32],
@@ -85,18 +107,18 @@ pub fn write_snapshot(
 ) -> Result<()> {
     let n = labels.len();
     assert!(y.len() >= n * dim);
-    let f = std::fs::File::create(path.as_ref())?;
-    let mut w = BufWriter::new(f);
-    w.write_u32::<LittleEndian>(SNAP_MAGIC)?;
-    w.write_u32::<LittleEndian>(1)?; // version
-    w.write_u64::<LittleEndian>(n as u64)?;
-    w.write_u32::<LittleEndian>(dim as u32)?;
-    w.write_u64::<LittleEndian>(iter)?;
-    for &v in &y[..n * dim] {
-        w.write_f32::<LittleEndian>(v)?;
-    }
-    w.write_all(labels)?;
-    Ok(())
+    atomic_write(path.as_ref(), |w| {
+        w.write_u32::<LittleEndian>(SNAP_MAGIC)?;
+        w.write_u32::<LittleEndian>(1)?; // version
+        w.write_u64::<LittleEndian>(n as u64)?;
+        w.write_u32::<LittleEndian>(dim as u32)?;
+        w.write_u64::<LittleEndian>(iter)?;
+        for &v in &y[..n * dim] {
+            w.write_f32::<LittleEndian>(v)?;
+        }
+        w.write_all(labels)?;
+        Ok(())
+    })
 }
 
 /// Parsed snapshot.
@@ -146,7 +168,7 @@ use crate::spatial::CellSizeMode;
 use crate::vptree::VpArena;
 
 const MODEL_MAGIC: u32 = 0x4d53_4842; // "BHSM" read little-endian
-const MODEL_VERSION: u32 = 1;
+const MODEL_VERSION: u32 = 2;
 
 const SEC_END: u32 = 0;
 const SEC_CONFIG: u32 = 1;
@@ -162,10 +184,9 @@ const SEC_PCA: u32 = 8;
 /// lengths from corrupt headers before allocating.
 const MAX_SECTION: u64 = 1 << 34;
 
-/// CRC-32 (IEEE 802.3, the zlib polynomial) over a byte slice.
-fn crc32(data: &[u8]) -> u32 {
+fn crc_table() -> &'static [u32; 256] {
     static TABLE: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
-    let table = TABLE.get_or_init(|| {
+    TABLE.get_or_init(|| {
         let mut t = [0u32; 256];
         for (i, slot) in t.iter_mut().enumerate() {
             let mut c = i as u32;
@@ -176,19 +197,173 @@ fn crc32(data: &[u8]) -> u32 {
             *slot = c;
         }
         t
-    });
-    let mut crc = 0xFFFF_FFFFu32;
-    for &b in data {
-        crc = (crc >> 8) ^ table[((crc ^ b as u32) & 0xFF) as usize];
-    }
-    !crc
+    })
 }
 
-fn write_section(w: &mut impl Write, tag: u32, payload: &[u8]) -> std::io::Result<()> {
+/// Incremental CRC-32 (IEEE 802.3, the zlib polynomial) — streamed
+/// section payloads never exist as one contiguous buffer.
+pub(crate) struct Crc32 {
+    crc: u32,
+}
+
+impl Crc32 {
+    pub(crate) fn new() -> Self {
+        Crc32 { crc: 0xFFFF_FFFF }
+    }
+
+    pub(crate) fn update(&mut self, data: &[u8]) {
+        let table = crc_table();
+        for &b in data {
+            self.crc = (self.crc >> 8) ^ table[((self.crc ^ b as u32) & 0xFF) as usize];
+        }
+    }
+
+    pub(crate) fn finalize(&self) -> u32 {
+        !self.crc
+    }
+}
+
+/// One-shot CRC-32 over a byte slice.
+fn crc32(data: &[u8]) -> u32 {
+    let mut c = Crc32::new();
+    c.update(data);
+    c.finalize()
+}
+
+// ---------------------------------------------------------------------
+// Atomic writes + streamed CRC sections
+// ---------------------------------------------------------------------
+
+/// The sink every durable artifact writes through: a buffered temp file
+/// behind the fault-injection layer (a transparent passthrough when no
+/// write fault is armed).
+pub(crate) type AtomicSink = fault::FaultWriter<BufWriter<std::fs::File>>;
+
+fn tmp_sibling(path: &Path) -> PathBuf {
+    let mut name = path.file_name().map(|s| s.to_os_string()).unwrap_or_else(|| "out".into());
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
+/// Write a file atomically: stream into a temp sibling, fsync, rename
+/// over the target, fsync the directory. An error (or crash) at **any**
+/// byte offset leaves the target either absent or fully intact at its
+/// previous content — never torn. The temp file is removed on error.
+pub(crate) fn atomic_write(path: &Path, f: impl FnOnce(&mut AtomicSink) -> Result<()>) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let tmp = tmp_sibling(path);
+    let file = std::fs::File::create(&tmp).with_context(|| format!("creating temp file {}", tmp.display()))?;
+    let mut w = fault::FaultWriter::new(BufWriter::new(file), fault::take_write_fault());
+    let res = f(&mut w).and_then(|()| w.flush().map_err(anyhow::Error::from));
+    match res {
+        Ok(()) => {
+            let file = w
+                .into_inner()
+                .into_inner()
+                .map_err(|e| anyhow::anyhow!("flushing {}: {}", tmp.display(), e.error()))?;
+            // Data must be durable before the rename makes it visible —
+            // otherwise a crash could publish an empty/partial file.
+            file.sync_all().with_context(|| format!("fsync {}", tmp.display()))?;
+            drop(file);
+            std::fs::rename(&tmp, path).with_context(|| format!("renaming into {}", path.display()))?;
+            #[cfg(unix)]
+            if let Some(parent) = path.parent() {
+                let dir = if parent.as_os_str().is_empty() { Path::new(".") } else { parent };
+                if let Ok(d) = std::fs::File::open(dir) {
+                    let _ = d.sync_all();
+                }
+            }
+            Ok(())
+        }
+        Err(e) => {
+            drop(w);
+            let _ = std::fs::remove_file(&tmp);
+            Err(e)
+        }
+    }
+}
+
+/// Streamed payload of one section: counts bytes and folds them into an
+/// incremental CRC as they pass through to the underlying sink.
+struct SectionBody<'a, W: Write> {
+    w: &'a mut W,
+    crc: Crc32,
+    len: u64,
+}
+
+impl<W: Write> Write for SectionBody<'_, W> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let n = self.w.write(buf)?;
+        self.crc.update(&buf[..n]);
+        self.len += n as u64;
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.w.flush()
+    }
+}
+
+/// Write one CRC-framed section without materializing its payload: a
+/// placeholder `len`/`crc` header goes out first, the closure streams the
+/// payload, and the header is patched in place afterwards. Peak memory is
+/// whatever the closure buffers (the array codecs use 64 KiB blocks).
+fn write_section_streaming<W: Write + Seek>(
+    w: &mut W,
+    tag: u32,
+    f: impl FnOnce(&mut SectionBody<'_, W>) -> Result<()>,
+) -> Result<()> {
     w.write_u32::<LittleEndian>(tag)?;
-    w.write_u64::<LittleEndian>(payload.len() as u64)?;
-    w.write_u32::<LittleEndian>(crc32(payload))?;
-    w.write_all(payload)
+    let header_pos = w.stream_position()?;
+    w.write_u64::<LittleEndian>(0)?; // length, patched below
+    w.write_u32::<LittleEndian>(0)?; // crc, patched below
+    let mut body = SectionBody { w, crc: Crc32::new(), len: 0 };
+    f(&mut body)?;
+    let len = body.len;
+    let crc = body.crc.finalize();
+    let end = w.stream_position()?;
+    w.seek(SeekFrom::Start(header_pos))?;
+    w.write_u64::<LittleEndian>(len)?;
+    w.write_u32::<LittleEndian>(crc)?;
+    w.seek(SeekFrom::Start(end))?;
+    Ok(())
+}
+
+/// Streamed section payload on the read side: hands out at most the
+/// framed `len` bytes and folds everything it yields into an incremental
+/// CRC, verified against the header after decode. Decoders never see
+/// bytes past their section, and the arrays they build are dropped (the
+/// whole load errors) if the checksum disagrees — a corrupt payload is
+/// never *accepted*, it just fails after parsing instead of before.
+struct SectionReader<'a, R: Read> {
+    r: &'a mut R,
+    remaining: u64,
+    crc: Crc32,
+}
+
+impl<R: Read> SectionReader<'_, R> {
+    /// Bytes left in this section — the pre-allocation bound for array
+    /// decodes (a corrupt count must error, not abort on a huge Vec).
+    fn remaining(&self) -> usize {
+        usize::try_from(self.remaining).unwrap_or(usize::MAX)
+    }
+}
+
+impl<R: Read> Read for SectionReader<'_, R> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let cap = (buf.len() as u64).min(self.remaining) as usize;
+        if cap == 0 {
+            return Ok(0);
+        }
+        let n = self.r.read(&mut buf[..cap])?;
+        self.crc.update(&buf[..n]);
+        self.remaining -= n as u64;
+        Ok(n)
+    }
 }
 
 fn write_f64(w: &mut impl Write, v: f64) -> std::io::Result<()> {
@@ -229,17 +404,25 @@ fn write_f32s(w: &mut impl Write, xs: &[f32]) -> std::io::Result<()> {
     Ok(())
 }
 
-fn read_f32s(r: &mut &[u8], count: usize) -> Result<Vec<f32>> {
+fn read_f32s<R: Read>(r: &mut SectionReader<'_, R>, count: usize) -> Result<Vec<f32>> {
     // Bound against the bytes actually present before allocating — a
-    // corrupt-but-CRC-valid header must error, not abort on a huge Vec.
+    // corrupt header must error, not abort on a huge Vec. Conversion runs
+    // in fixed 64 KiB blocks, never a full-array byte temp.
     anyhow::ensure!(
-        count.checked_mul(4).is_some_and(|b| b <= r.len()),
+        count.checked_mul(4).is_some_and(|b| b <= r.remaining()),
         "array of {count} f32s exceeds section payload ({} bytes left)",
-        r.len()
+        r.remaining()
     );
-    let mut bytes = vec![0u8; count * 4];
-    r.read_exact(&mut bytes)?;
-    Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    let mut out = Vec::with_capacity(count);
+    let mut buf = [0u8; WRITE_CHUNK_ELEMS * 4];
+    let mut left = count;
+    while left > 0 {
+        let take = left.min(WRITE_CHUNK_ELEMS);
+        r.read_exact(&mut buf[..take * 4])?;
+        out.extend(buf[..take * 4].chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])));
+        left -= take;
+    }
+    Ok(out)
 }
 
 fn write_u32s(w: &mut impl Write, xs: &[u32]) -> std::io::Result<()> {
@@ -255,15 +438,55 @@ fn write_u32s(w: &mut impl Write, xs: &[u32]) -> std::io::Result<()> {
     Ok(())
 }
 
-fn read_u32s(r: &mut &[u8], count: usize) -> Result<Vec<u32>> {
+fn read_u32s<R: Read>(r: &mut SectionReader<'_, R>, count: usize) -> Result<Vec<u32>> {
     anyhow::ensure!(
-        count.checked_mul(4).is_some_and(|b| b <= r.len()),
+        count.checked_mul(4).is_some_and(|b| b <= r.remaining()),
         "array of {count} u32s exceeds section payload ({} bytes left)",
-        r.len()
+        r.remaining()
     );
-    let mut bytes = vec![0u8; count * 4];
-    r.read_exact(&mut bytes)?;
-    Ok(bytes.chunks_exact(4).map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    let mut out = Vec::with_capacity(count);
+    let mut buf = [0u8; WRITE_CHUNK_ELEMS * 4];
+    let mut left = count;
+    while left > 0 {
+        let take = left.min(WRITE_CHUNK_ELEMS);
+        r.read_exact(&mut buf[..take * 4])?;
+        out.extend(buf[..take * 4].chunks_exact(4).map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])));
+        left -= take;
+    }
+    Ok(out)
+}
+
+fn write_f64s(w: &mut impl Write, xs: &[f64]) -> std::io::Result<()> {
+    let mut buf = [0u8; WRITE_CHUNK_ELEMS * 8];
+    for chunk in xs.chunks(WRITE_CHUNK_ELEMS) {
+        let mut o = 0;
+        for &v in chunk {
+            buf[o..o + 8].copy_from_slice(&v.to_le_bytes());
+            o += 8;
+        }
+        w.write_all(&buf[..o])?;
+    }
+    Ok(())
+}
+
+fn read_f64s<R: Read>(r: &mut SectionReader<'_, R>, count: usize) -> Result<Vec<f64>> {
+    anyhow::ensure!(
+        count.checked_mul(8).is_some_and(|b| b <= r.remaining()),
+        "array of {count} f64s exceeds section payload ({} bytes left)",
+        r.remaining()
+    );
+    let mut out = Vec::with_capacity(count);
+    let mut buf = [0u8; WRITE_CHUNK_ELEMS * 8];
+    let mut left = count;
+    while left > 0 {
+        let take = left.min(WRITE_CHUNK_ELEMS);
+        r.read_exact(&mut buf[..take * 8])?;
+        out.extend(buf[..take * 8].chunks_exact(8).map(|c| {
+            f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]])
+        }));
+        left -= take;
+    }
+    Ok(out)
 }
 
 fn encode_config(cfg: &TsneConfig) -> Vec<u8> {
@@ -349,72 +572,41 @@ fn decode_config(r: &mut impl Read) -> Result<TsneConfig> {
     })
 }
 
+/// v2 STATS payload: run-deterministic fields only. Wall-clock timings
+/// and tree refit/rebuild counters deliberately do NOT persist — they
+/// differ between an interrupted+resumed run and an uninterrupted one,
+/// and the format guarantees a `.bhsne` file is a pure function of
+/// (data, config). [`decode_stats`] fills the volatile fields with
+/// zeros.
 fn encode_stats(s: &RunStats) -> Vec<u8> {
-    let mut b = Vec::with_capacity(140);
+    let mut b = Vec::with_capacity(40);
     let w = &mut b;
-    let i = &s.input_stage;
-    for v in [i.knn_secs, i.knn_build_secs, i.knn_query_secs, i.perplexity_secs, i.symmetrize_secs] {
-        write_f64(w, v).unwrap();
-    }
-    w.write_u64::<LittleEndian>(i.perplexity_failures as u64).unwrap();
-    w.write_u64::<LittleEndian>(i.nnz as u64).unwrap();
-    for v in [s.gradient_secs, s.tree_secs, s.repulsion_secs, s.total_secs] {
-        write_f64(w, v).unwrap();
-    }
-    w.write_u64::<LittleEndian>(s.tree_refits as u64).unwrap();
-    w.write_u64::<LittleEndian>(s.tree_rebuilds as u64).unwrap();
+    w.write_u64::<LittleEndian>(s.iters as u64).unwrap();
     write_u8(w, s.final_kl.is_some() as u8).unwrap();
     write_f64(w, s.final_kl.unwrap_or(0.0)).unwrap();
-    w.write_u64::<LittleEndian>(s.iters as u64).unwrap();
+    w.write_u64::<LittleEndian>(s.input_stage.nnz as u64).unwrap();
+    w.write_u64::<LittleEndian>(s.input_stage.perplexity_failures as u64).unwrap();
     b
 }
 
 fn decode_stats(r: &mut impl Read) -> Result<RunStats> {
-    // Struct literal fields evaluate in source order — the read order
-    // mirrors encode_stats exactly.
-    let input = InputStageStats {
-        knn_secs: read_f64(r)?,
-        knn_build_secs: read_f64(r)?,
-        knn_query_secs: read_f64(r)?,
-        perplexity_secs: read_f64(r)?,
-        symmetrize_secs: read_f64(r)?,
-        perplexity_failures: r.read_u64::<LittleEndian>()? as usize,
-        nnz: r.read_u64::<LittleEndian>()? as usize,
-    };
-    let gradient_secs = read_f64(r)?;
-    let tree_secs = read_f64(r)?;
-    let repulsion_secs = read_f64(r)?;
-    let total_secs = read_f64(r)?;
-    let tree_refits = r.read_u64::<LittleEndian>()? as usize;
-    let tree_rebuilds = r.read_u64::<LittleEndian>()? as usize;
+    let iters = r.read_u64::<LittleEndian>()? as usize;
     let has_kl = read_u8(r)? != 0;
     let kl = read_f64(r)?;
-    let iters = r.read_u64::<LittleEndian>()? as usize;
+    let input = InputStageStats {
+        nnz: r.read_u64::<LittleEndian>()? as usize,
+        perplexity_failures: r.read_u64::<LittleEndian>()? as usize,
+        ..Default::default()
+    };
     Ok(RunStats {
         input_stage: input,
-        gradient_secs,
-        tree_secs,
-        repulsion_secs,
-        tree_refits,
-        tree_rebuilds,
-        total_secs,
         final_kl: if has_kl { Some(kl) } else { None },
         iters,
+        ..Default::default()
     })
 }
 
-fn encode_csr(p: &Csr) -> Vec<u8> {
-    let mut b = Vec::with_capacity(16 + 4 * (p.indptr.len() + 2 * p.indices.len()));
-    let w = &mut b;
-    w.write_u64::<LittleEndian>(p.n_rows as u64).unwrap();
-    w.write_u64::<LittleEndian>(p.indices.len() as u64).unwrap();
-    write_u32s(w, &p.indptr).unwrap();
-    write_u32s(w, &p.indices).unwrap();
-    write_f32s(w, &p.values).unwrap();
-    b
-}
-
-fn decode_csr(r: &mut &[u8]) -> Result<Csr> {
+fn decode_csr<R: Read>(r: &mut SectionReader<'_, R>) -> Result<Csr> {
     let n_rows = r.read_u64::<LittleEndian>()? as usize;
     let nnz = r.read_u64::<LittleEndian>()? as usize;
     anyhow::ensure!(n_rows < (1 << 33) && nnz < (1 << 34), "implausible CSR size {n_rows}x{nnz}");
@@ -442,7 +634,7 @@ fn encode_pca(p: &Pca) -> Vec<u8> {
     b
 }
 
-fn decode_pca(r: &mut &[u8]) -> Result<Pca> {
+fn decode_pca<R: Read>(r: &mut SectionReader<'_, R>) -> Result<Pca> {
     let dim = r.read_u32::<LittleEndian>()? as usize;
     let k = r.read_u32::<LittleEndian>()? as usize;
     anyhow::ensure!(dim > 0 && k > 0 && k <= dim, "implausible PCA shape {dim}x{k}");
@@ -455,50 +647,71 @@ fn decode_pca(r: &mut &[u8]) -> Result<Pca> {
     Ok(Pca { mean, components, dim, k, eigenvalues })
 }
 
-/// Persist a fitted model. See the module docs for the format.
+/// Persist a fitted model. See the module docs for the format. The write
+/// is atomic (temp sibling + fsync + rename) and streams every section
+/// in 64 KiB blocks — a crash or injected IO error at any byte offset
+/// leaves the target path absent or holding its previous content, and
+/// peak save memory is one conversion block, not the largest section.
 pub fn write_model(path: impl AsRef<Path>, model: &TsneModel) -> Result<()> {
-    if let Some(parent) = path.as_ref().parent() {
-        if !parent.as_os_str().is_empty() {
-            std::fs::create_dir_all(parent)?;
+    let path = path.as_ref();
+    atomic_write(path, |w| {
+        w.write_u32::<LittleEndian>(MODEL_MAGIC)?;
+        w.write_u32::<LittleEndian>(MODEL_VERSION)?;
+
+        write_section_streaming(w, SEC_CONFIG, |b| {
+            b.write_all(&encode_config(&model.config))?;
+            Ok(())
+        })?;
+
+        write_section_streaming(w, SEC_DATA, |b| {
+            b.write_u64::<LittleEndian>(model.n as u64)?;
+            b.write_u32::<LittleEndian>(model.dim as u32)?;
+            write_f32s(b, &model.x)?;
+            Ok(())
+        })?;
+
+        write_section_streaming(w, SEC_VPTREE, |b| {
+            model.vp.write_into(b)?;
+            Ok(())
+        })?;
+
+        write_section_streaming(w, SEC_CSR, |b| {
+            b.write_u64::<LittleEndian>(model.p.n_rows as u64)?;
+            b.write_u64::<LittleEndian>(model.p.indices.len() as u64)?;
+            write_u32s(b, &model.p.indptr)?;
+            write_u32s(b, &model.p.indices)?;
+            write_f32s(b, &model.p.values)?;
+            Ok(())
+        })?;
+
+        write_section_streaming(w, SEC_EMBED, |b| {
+            b.write_u64::<LittleEndian>(model.n as u64)?;
+            b.write_u32::<LittleEndian>(model.config.out_dim as u32)?;
+            write_f32s(b, &model.embedding)?;
+            Ok(())
+        })?;
+
+        write_section_streaming(w, SEC_LABELS, |b| {
+            b.write_all(&model.labels)?;
+            Ok(())
+        })?;
+
+        write_section_streaming(w, SEC_STATS, |b| {
+            b.write_all(&encode_stats(&model.stats))?;
+            Ok(())
+        })?;
+
+        if let Some(pca) = &model.pca {
+            write_section_streaming(w, SEC_PCA, |b| {
+                b.write_all(&encode_pca(pca))?;
+                Ok(())
+            })?;
         }
-    }
-    let f = std::fs::File::create(path.as_ref())
-        .with_context(|| format!("creating {}", path.as_ref().display()))?;
-    let mut w = BufWriter::new(f);
-    w.write_u32::<LittleEndian>(MODEL_MAGIC)?;
-    w.write_u32::<LittleEndian>(MODEL_VERSION)?;
 
-    write_section(&mut w, SEC_CONFIG, &encode_config(&model.config))?;
-
-    let mut data = Vec::with_capacity(12 + 4 * model.x.len());
-    data.write_u64::<LittleEndian>(model.n as u64)?;
-    data.write_u32::<LittleEndian>(model.dim as u32)?;
-    write_f32s(&mut data, &model.x)?;
-    write_section(&mut w, SEC_DATA, &data)?;
-
-    let mut vp = Vec::new();
-    model.vp.write_into(&mut vp)?;
-    write_section(&mut w, SEC_VPTREE, &vp)?;
-
-    write_section(&mut w, SEC_CSR, &encode_csr(&model.p))?;
-
-    let mut embed = Vec::with_capacity(12 + 4 * model.embedding.len());
-    embed.write_u64::<LittleEndian>(model.n as u64)?;
-    embed.write_u32::<LittleEndian>(model.config.out_dim as u32)?;
-    write_f32s(&mut embed, &model.embedding)?;
-    write_section(&mut w, SEC_EMBED, &embed)?;
-
-    write_section(&mut w, SEC_LABELS, &model.labels)?;
-
-    write_section(&mut w, SEC_STATS, &encode_stats(&model.stats))?;
-
-    if let Some(pca) = &model.pca {
-        write_section(&mut w, SEC_PCA, &encode_pca(pca))?;
-    }
-
-    write_section(&mut w, SEC_END, &[])?;
-    w.flush()?;
-    Ok(())
+        write_section_streaming(w, SEC_END, |_| Ok(()))?;
+        Ok(())
+    })
+    .map_err(|e| e.context(format!("writing model {}", path.display())))
 }
 
 /// Load a model written by [`write_model`]. Every section payload is
@@ -532,54 +745,60 @@ pub fn read_model(path: impl AsRef<Path>) -> Result<TsneModel> {
         let len = r.read_u64::<LittleEndian>().context("model section header truncated")?;
         anyhow::ensure!(len <= MAX_SECTION, "implausible section length {len} (tag {tag})");
         let want_crc = r.read_u32::<LittleEndian>().context("model section header truncated")?;
-        let mut payload = vec![0u8; len as usize];
-        r.read_exact(&mut payload)
-            .with_context(|| format!("model section {tag} truncated (wanted {len} bytes)"))?;
-        let got_crc = crc32(&payload);
+        // Stream the payload through the decoder with an incremental CRC;
+        // the section is only *accepted* once the checksum verifies below
+        // — on mismatch the whole load errors and the decoded arrays are
+        // dropped. Decode errors on corrupt bytes (bad tags, shapes) can
+        // fire before the CRC check; the section context marks them.
+        let mut sr = SectionReader { r: &mut r, remaining: len, crc: Crc32::new() };
+        let decoded: Result<()> = (|| {
+            match tag {
+                SEC_END => {}
+                SEC_CONFIG => config = Some(decode_config(&mut sr)?),
+                SEC_DATA => {
+                    let n = sr.read_u64::<LittleEndian>()? as usize;
+                    let dim = sr.read_u32::<LittleEndian>()? as usize;
+                    anyhow::ensure!(
+                        n.checked_mul(dim).is_some_and(|v| v < (1 << 34)),
+                        "implausible data shape {n}x{dim}"
+                    );
+                    data = Some((n, dim, read_f32s(&mut sr, n * dim)?));
+                }
+                SEC_VPTREE => vp = Some(VpArena::read_from(&mut sr)?),
+                SEC_CSR => p = Some(decode_csr(&mut sr)?),
+                SEC_EMBED => {
+                    let n = sr.read_u64::<LittleEndian>()? as usize;
+                    let od = sr.read_u32::<LittleEndian>()? as usize;
+                    anyhow::ensure!(
+                        n.checked_mul(od).is_some_and(|v| v < (1 << 34)),
+                        "implausible embedding shape {n}x{od}"
+                    );
+                    embedding = Some((n, od, read_f32s(&mut sr, n * od)?));
+                }
+                SEC_LABELS => {
+                    let mut v = vec![0u8; sr.remaining()];
+                    sr.read_exact(&mut v)?;
+                    labels = Some(v);
+                }
+                SEC_STATS => stats = Some(decode_stats(&mut sr)?),
+                SEC_PCA => pca = Some(decode_pca(&mut sr)?),
+                other => bail!("unknown model section tag {other} (version {version})"),
+            }
+            // Fail-loudly contract: a decoder that leaves bytes behind
+            // means writer/reader drift within one version.
+            anyhow::ensure!(sr.remaining == 0, "{} trailing bytes after decode", sr.remaining);
+            Ok(())
+        })();
+        decoded
+            .map_err(|e| e.context(format!("model section {tag} failed to decode (len {len})")))?;
+        let got_crc = sr.crc.finalize();
         anyhow::ensure!(
             got_crc == want_crc,
             "model section {tag} checksum mismatch ({got_crc:#x} != {want_crc:#x})"
         );
-        if tag == SEC_LABELS {
-            // Raw byte section: take the payload as-is, no copy.
-            labels = Some(payload);
-            continue;
+        if tag == SEC_END {
+            break;
         }
-        let mut pr: &[u8] = &payload;
-        match tag {
-            SEC_END => break,
-            SEC_CONFIG => config = Some(decode_config(&mut pr)?),
-            SEC_DATA => {
-                let n = pr.read_u64::<LittleEndian>()? as usize;
-                let dim = pr.read_u32::<LittleEndian>()? as usize;
-                anyhow::ensure!(
-                    n.checked_mul(dim).is_some_and(|v| v < (1 << 34)),
-                    "implausible data shape {n}x{dim}"
-                );
-                data = Some((n, dim, read_f32s(&mut pr, n * dim)?));
-            }
-            SEC_VPTREE => vp = Some(VpArena::read_from(&mut pr)?),
-            SEC_CSR => p = Some(decode_csr(&mut pr)?),
-            SEC_EMBED => {
-                let n = pr.read_u64::<LittleEndian>()? as usize;
-                let od = pr.read_u32::<LittleEndian>()? as usize;
-                anyhow::ensure!(
-                    n.checked_mul(od).is_some_and(|v| v < (1 << 34)),
-                    "implausible embedding shape {n}x{od}"
-                );
-                embedding = Some((n, od, read_f32s(&mut pr, n * od)?));
-            }
-            SEC_STATS => stats = Some(decode_stats(&mut pr)?),
-            SEC_PCA => pca = Some(decode_pca(&mut pr)?),
-            other => bail!("unknown model section tag {other} (version {version})"),
-        }
-        // Fail-loudly contract: a decoder that leaves bytes behind means
-        // writer/reader drift within one version — reject, don't drop.
-        anyhow::ensure!(
-            pr.is_empty(),
-            "model section {tag} has {} trailing bytes after decode",
-            pr.len()
-        );
     }
 
     let config = config.context("model missing CONFIG section")?;
@@ -612,6 +831,197 @@ pub fn read_model(path: impl AsRef<Path>) -> Result<TsneModel> {
         labels.len()
     );
     Ok(TsneModel { config, dim, n, x, labels, pca, vp, p, embedding, stats })
+}
+
+// ---------------------------------------------------------------------
+// Run checkpoints
+// ---------------------------------------------------------------------
+
+const CKPT_MAGIC: u32 = 0x4b53_4842; // "BHSK" read little-endian
+const CKPT_VERSION: u32 = 1;
+
+const CK_META: u32 = 1;
+const CK_EMBED: u32 = 2;
+const CK_VELOCITY: u32 = 3;
+const CK_GAINS: u32 = 4;
+
+/// Everything the optimizer loop needs to resume mid-run and replay the
+/// remaining iterations bit-identically: the embedding, the optimizer's
+/// velocity/gain arrays, the iteration counter, the (possibly backed-off)
+/// learning rate, the watchdog retry budget, the RNG state, and a
+/// fingerprint binding the checkpoint to one (config, data) pair.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunCheckpoint {
+    /// Completed iterations — resume starts at this iteration index.
+    pub iter: usize,
+    pub n: usize,
+    /// Embedding dimensionality (`out_dim`).
+    pub dim: usize,
+    /// Learning rate at checkpoint time (watchdog backoff may have cut it).
+    pub eta: f64,
+    /// Watchdog retries already consumed.
+    pub retries: u32,
+    /// [`run_fingerprint`] of the run that wrote this checkpoint.
+    pub fingerprint: u64,
+    pub rng_state: u64,
+    pub rng_inc: u64,
+    pub y: Vec<f32>,
+    pub velocity: Vec<f64>,
+    pub gains: Vec<f64>,
+}
+
+/// Fingerprint binding a checkpoint to one run: config CRC in the high
+/// half, a CRC over the input-similarity structure (n, nnz, CSR arrays)
+/// in the low half. Computed over the *un-exaggerated* P so it is stable
+/// across the early-exaggeration phase. Resuming under a different
+/// config or different input data fails loudly instead of silently
+/// blending two runs.
+pub fn run_fingerprint(cfg: &TsneConfig, n: usize, p: &Csr) -> u64 {
+    let hi = crc32(&encode_config(cfg)) as u64;
+    let mut c = Crc32::new();
+    c.update(&(n as u64).to_le_bytes());
+    c.update(&(p.indices.len() as u64).to_le_bytes());
+    for &v in &p.indptr {
+        c.update(&v.to_le_bytes());
+    }
+    for &v in &p.indices {
+        c.update(&v.to_le_bytes());
+    }
+    for &v in &p.values {
+        c.update(&v.to_le_bytes());
+    }
+    (hi << 32) | c.finalize() as u64
+}
+
+/// Persist a run checkpoint. Same framing and guarantees as the model
+/// format: CRC-framed sections, atomic temp-sibling + fsync + rename
+/// publish — an interrupted save leaves the previous checkpoint intact.
+pub fn write_checkpoint(path: impl AsRef<Path>, ck: &RunCheckpoint) -> Result<()> {
+    let path = path.as_ref();
+    atomic_write(path, |w| {
+        w.write_u32::<LittleEndian>(CKPT_MAGIC)?;
+        w.write_u32::<LittleEndian>(CKPT_VERSION)?;
+        write_section_streaming(w, CK_META, |b| {
+            b.write_u64::<LittleEndian>(ck.iter as u64)?;
+            b.write_u64::<LittleEndian>(ck.n as u64)?;
+            b.write_u32::<LittleEndian>(ck.dim as u32)?;
+            write_f64(b, ck.eta)?;
+            b.write_u32::<LittleEndian>(ck.retries)?;
+            b.write_u64::<LittleEndian>(ck.fingerprint)?;
+            b.write_u64::<LittleEndian>(ck.rng_state)?;
+            b.write_u64::<LittleEndian>(ck.rng_inc)?;
+            Ok(())
+        })?;
+        write_section_streaming(w, CK_EMBED, |b| {
+            write_f32s(b, &ck.y)?;
+            Ok(())
+        })?;
+        write_section_streaming(w, CK_VELOCITY, |b| {
+            write_f64s(b, &ck.velocity)?;
+            Ok(())
+        })?;
+        write_section_streaming(w, CK_GAINS, |b| {
+            write_f64s(b, &ck.gains)?;
+            Ok(())
+        })?;
+        write_section_streaming(w, SEC_END, |_| Ok(()))?;
+        Ok(())
+    })
+    .map_err(|e| e.context(format!("writing checkpoint {}", path.display())))
+}
+
+/// Load a checkpoint written by [`write_checkpoint`]. Every section is
+/// CRC-verified; array lengths come from the (already-verified) META
+/// section, so a corrupt frame can never allocate unbounded memory.
+pub fn read_checkpoint(path: impl AsRef<Path>) -> Result<RunCheckpoint> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {}", path.as_ref().display()))?;
+    let mut r = BufReader::new(f);
+    let magic = r.read_u32::<LittleEndian>().context("checkpoint header truncated")?;
+    if magic != CKPT_MAGIC {
+        bail!("bad checkpoint magic {magic:#x} (not a bhsne checkpoint)");
+    }
+    let version = r.read_u32::<LittleEndian>().context("checkpoint header truncated")?;
+    if version != CKPT_VERSION {
+        bail!("unsupported checkpoint version {version} (this build reads {CKPT_VERSION})");
+    }
+
+    let mut meta: Option<RunCheckpoint> = None;
+    let mut y: Option<Vec<f32>> = None;
+    let mut velocity: Option<Vec<f64>> = None;
+    let mut gains: Option<Vec<f64>> = None;
+
+    loop {
+        let tag = r.read_u32::<LittleEndian>().context("checkpoint truncated before END section")?;
+        let len = r.read_u64::<LittleEndian>().context("checkpoint section header truncated")?;
+        anyhow::ensure!(len <= MAX_SECTION, "implausible section length {len} (tag {tag})");
+        let want_crc = r.read_u32::<LittleEndian>().context("checkpoint section header truncated")?;
+        let mut sr = SectionReader { r: &mut r, remaining: len, crc: Crc32::new() };
+        let decoded: Result<()> = (|| {
+            match tag {
+                SEC_END => {}
+                CK_META => {
+                    let iter = sr.read_u64::<LittleEndian>()? as usize;
+                    let n = sr.read_u64::<LittleEndian>()? as usize;
+                    let dim = sr.read_u32::<LittleEndian>()? as usize;
+                    let eta = read_f64(&mut sr)?;
+                    let retries = sr.read_u32::<LittleEndian>()?;
+                    let fingerprint = sr.read_u64::<LittleEndian>()?;
+                    let rng_state = sr.read_u64::<LittleEndian>()?;
+                    let rng_inc = sr.read_u64::<LittleEndian>()?;
+                    anyhow::ensure!(
+                        n.checked_mul(dim).is_some_and(|v| v < (1 << 34)),
+                        "implausible checkpoint shape {n}x{dim}"
+                    );
+                    anyhow::ensure!(rng_inc & 1 == 1, "checkpoint RNG increment is even (corrupt)");
+                    meta = Some(RunCheckpoint {
+                        iter,
+                        n,
+                        dim,
+                        eta,
+                        retries,
+                        fingerprint,
+                        rng_state,
+                        rng_inc,
+                        y: Vec::new(),
+                        velocity: Vec::new(),
+                        gains: Vec::new(),
+                    });
+                }
+                CK_EMBED | CK_VELOCITY | CK_GAINS => {
+                    let count = {
+                        let m = meta.as_ref().context("checkpoint array section before META")?;
+                        m.n * m.dim
+                    };
+                    match tag {
+                        CK_EMBED => y = Some(read_f32s(&mut sr, count)?),
+                        CK_VELOCITY => velocity = Some(read_f64s(&mut sr, count)?),
+                        _ => gains = Some(read_f64s(&mut sr, count)?),
+                    }
+                }
+                other => bail!("unknown checkpoint section tag {other} (version {version})"),
+            }
+            anyhow::ensure!(sr.remaining == 0, "{} trailing bytes after decode", sr.remaining);
+            Ok(())
+        })();
+        decoded.map_err(|e| {
+            e.context(format!("checkpoint section {tag} failed to decode (len {len})"))
+        })?;
+        let got_crc = sr.crc.finalize();
+        anyhow::ensure!(
+            got_crc == want_crc,
+            "checkpoint section {tag} checksum mismatch ({got_crc:#x} != {want_crc:#x})"
+        );
+        if tag == SEC_END {
+            break;
+        }
+    }
+
+    let mut ck = meta.context("checkpoint missing META section")?;
+    ck.y = y.context("checkpoint missing EMBED section")?;
+    ck.velocity = velocity.context("checkpoint missing VELOCITY section")?;
+    ck.gains = gains.context("checkpoint missing GAINS section")?;
+    Ok(ck)
 }
 
 #[cfg(test)]
@@ -731,7 +1141,6 @@ mod tests {
         assert_eq!(a.config.cost_every, b.config.cost_every);
         assert_eq!(a.stats.iters, b.stats.iters);
         assert_eq!(a.stats.final_kl, b.stats.final_kl);
-        assert_eq!(a.stats.tree_refits, b.stats.tree_refits);
         assert_eq!(a.stats.input_stage.nnz, b.stats.input_stage.nnz);
         assert_eq!(a.pca.is_some(), b.pca.is_some());
         if let (Some(pa), Some(pb)) = (&a.pca, &b.pca) {
@@ -750,6 +1159,10 @@ mod tests {
             write_model(&path, &model).unwrap();
             let back = read_model(&path).unwrap();
             assert_models_equal(&model, &back);
+            // Volatile stats (timings, refit counters) deliberately do not
+            // persist: a .bhsne file is a pure function of (data, config).
+            assert_eq!(back.stats.tree_refits, 0);
+            assert_eq!(back.stats.total_secs, 0.0);
             std::fs::remove_file(&path).ok();
         }
     }
@@ -815,6 +1228,94 @@ mod tests {
             assert!(read_model(&path).is_err(), "accepted a model truncated to {cut} bytes");
         }
         std::fs::remove_file(&path).ok();
+    }
+
+    // ---- checkpoint format ----
+
+    fn tiny_checkpoint() -> RunCheckpoint {
+        let (n, dim) = (17usize, 2usize);
+        let mut rng = Pcg32::seeded(5);
+        RunCheckpoint {
+            iter: 42,
+            n,
+            dim,
+            eta: 100.0,
+            retries: 1,
+            fingerprint: 0xDEAD_BEEF_CAFE_F00D,
+            rng_state: 0x0123_4567_89AB_CDEF,
+            rng_inc: 0x1357_9BDF_0246_8ACD, // odd
+            y: (0..n * dim).map(|_| rng.normal() as f32).collect(),
+            velocity: (0..n * dim).map(|_| rng.normal()).collect(),
+            gains: (0..n * dim).map(|_| rng.uniform()).collect(),
+        }
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_bit_identical() {
+        let ck = tiny_checkpoint();
+        let path = tmp("ckpt.bin");
+        write_checkpoint(&path, &ck).unwrap();
+        let back = read_checkpoint(&path).unwrap();
+        assert_eq!(ck, back);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn checkpoint_rejects_magic_version_truncation_and_corruption() {
+        let ck = tiny_checkpoint();
+        let path = tmp("ckpt-bad.bin");
+        write_checkpoint(&path, &ck).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+
+        let mut wrong_magic = bytes.clone();
+        wrong_magic[0] ^= 0xFF;
+        std::fs::write(&path, &wrong_magic).unwrap();
+        assert!(format!("{}", read_checkpoint(&path).unwrap_err()).contains("magic"));
+
+        let mut wrong_version = bytes.clone();
+        wrong_version[4..8].copy_from_slice(&99u32.to_le_bytes());
+        std::fs::write(&path, &wrong_version).unwrap();
+        assert!(format!("{}", read_checkpoint(&path).unwrap_err()).contains("version"));
+
+        for frac in [0.2, 0.6, 0.95] {
+            let cut = ((bytes.len() as f64) * frac) as usize;
+            std::fs::write(&path, &bytes[..cut]).unwrap();
+            assert!(read_checkpoint(&path).is_err(), "accepted checkpoint cut to {cut} bytes");
+        }
+
+        for at in [20usize, bytes.len() / 2, bytes.len() - 30] {
+            let mut corrupted = bytes.clone();
+            corrupted[at] ^= 0x10;
+            std::fs::write(&path, &corrupted).unwrap();
+            let err = read_checkpoint(&path).unwrap_err();
+            let msg = format!("{err}");
+            assert!(
+                msg.contains("checksum")
+                    || msg.contains("truncated")
+                    || msg.contains("section")
+                    || msg.contains("corrupt"),
+                "byte {at}: unexpected error {msg}"
+            );
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_config_and_data() {
+        let n = 8;
+        let rows: Vec<Vec<(u32, f32)>> = (0..n).map(|i| vec![((i as u32 + 1) % n as u32, 0.1)]).collect();
+        let p = Csr::from_rows(n, rows);
+        let cfg = TsneConfig::default();
+        let base = run_fingerprint(&cfg, n, &p);
+        assert_eq!(base, run_fingerprint(&cfg, n, &p), "fingerprint must be deterministic");
+
+        let mut cfg2 = cfg.clone();
+        cfg2.seed += 1;
+        assert_ne!(base, run_fingerprint(&cfg2, n, &p), "config change must change fingerprint");
+
+        let mut p2 = p.clone();
+        p2.values[0] += 0.01;
+        assert_ne!(base, run_fingerprint(&cfg, n, &p2), "data change must change fingerprint");
     }
 
     #[test]

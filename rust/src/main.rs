@@ -28,11 +28,22 @@
 //! | `tsne.cell_size`          | `--cell-size`          |
 //! | `tsne.eta`                | `--eta`                |
 //! | `tsne.seed`               | `--seed`               |
+//! | `run.checkpoint`          | `--checkpoint`         |
+//! | `run.checkpoint_every`    | `--checkpoint-every`   |
 //!
 //! `--force-method` (`exact` | `bh` | `dualtree` | `interp`) picks the
 //! repulsion approximation; `--intervals` caps the grid resolution of
 //! the `interp` method. An explicit method wins over the legacy `--rho`
 //! dual-tree shortcut.
+//!
+//! `--checkpoint PATH` arms the crash-safe run layer on `embed`/`fit`:
+//! every `--checkpoint-every` completed iterations the optimizer state
+//! (embedding, gains/velocity, RNG, iteration counter, config+data
+//! fingerprint) is written atomically to PATH. `--resume` restarts a
+//! killed run from PATH; the resumed run replays the remaining
+//! iterations bit-identically to an uninterrupted one, so the final
+//! embedding and `.bhsne` model match byte for byte. A checkpoint from
+//! a different config or dataset is rejected, never silently used.
 
 use bhsne::data;
 use bhsne::pipeline::{
@@ -128,6 +139,9 @@ fn tsne_job_opts(spec: CommandSpec) -> CommandSpec {
     .opt("snapshot-every", "0", "snapshot interval in iterations")
     .opt("threads", "0", "worker threads (0 = all cores)")
     .opt("config", "", "TOML config file (CLI flags override)")
+    .opt("checkpoint", "", "crash-safe checkpoint file (empty = disabled)")
+    .opt("checkpoint-every", "100", "checkpoint save interval in completed iterations (0 = never write)")
+    .flag("resume", "resume from --checkpoint when it exists and matches this run")
     .flag("xla", "offload regular ops to AOT XLA artifacts")
     .flag("brute-knn", "use brute-force kNN instead of the vp-tree")
 }
@@ -198,6 +212,11 @@ fn job_from_parsed(p: &bhsne::util::args::Parsed) -> anyhow::Result<JobConfig> {
             cfg.tsne.cell_size = parse_cell_size(&cell)?;
         }
         cfg.use_xla = file.bool_or("job.xla", cfg.use_xla);
+        let ckpt = file.str_or("run.checkpoint", "");
+        if !ckpt.is_empty() {
+            cfg.checkpoint = Some(ckpt.into());
+        }
+        cfg.checkpoint_every = file.usize_or("run.checkpoint_every", cfg.checkpoint_every);
     }
     // A CLI value applies unless it is a mere spec default shadowing a
     // key the config file did set.
@@ -257,6 +276,18 @@ fn job_from_parsed(p: &bhsne::util::args::Parsed) -> anyhow::Result<JobConfig> {
     }
     if use_cli("seed", "tsne.seed") {
         cfg.tsne.seed = p.get("seed").map_err(anyhow::Error::msg)?;
+    }
+    if use_cli("checkpoint", "run.checkpoint") {
+        let ckpt = p.str("checkpoint").unwrap_or("");
+        if !ckpt.is_empty() {
+            cfg.checkpoint = Some(ckpt.into());
+        }
+    }
+    if use_cli("checkpoint-every", "run.checkpoint_every") {
+        cfg.checkpoint_every = p.get("checkpoint-every").map_err(anyhow::Error::msg)?;
+    }
+    if p.flag("resume") {
+        cfg.resume = true;
     }
     cfg.tsne.out_dim = p.get("out-dim").map_err(anyhow::Error::msg)?;
     cfg.snapshot_every = p.get("snapshot-every").map_err(anyhow::Error::msg)?;

@@ -7,7 +7,9 @@ use super::metrics::MetricsRegistry;
 use crate::data::{self, Dataset};
 use crate::eval;
 use crate::runtime::{SneEngine, XlaAttractive};
-use crate::sne::{KnnChoice, TransformOptions, TransformStats, TsneConfig, TsneModel, TsneRunner};
+use crate::sne::{
+    CheckpointSpec, KnnChoice, TransformOptions, TransformStats, TsneConfig, TsneModel, TsneRunner,
+};
 use crate::util::{Stopwatch, ThreadPool};
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
@@ -37,6 +39,13 @@ pub struct JobConfig {
     /// Evaluate 1-NN error on at most this many points (0 = all; the
     /// metric is O(N log N) but evaluation on millions is wasteful).
     pub eval_cap: usize,
+    /// Crash-safe run checkpoint file (None = checkpointing off).
+    pub checkpoint: Option<PathBuf>,
+    /// Write the checkpoint every this many completed iterations.
+    pub checkpoint_every: usize,
+    /// Resume from `checkpoint` when it exists and matches this run's
+    /// (config, data) fingerprint.
+    pub resume: bool,
 }
 
 impl Default for JobConfig {
@@ -52,8 +61,27 @@ impl Default for JobConfig {
             use_xla: false,
             threads: 0,
             eval_cap: 10_000,
+            checkpoint: None,
+            checkpoint_every: 100,
+            resume: false,
         }
     }
+}
+
+/// Install the job's [`CheckpointSpec`] on a runner, creating the parent
+/// directory of the checkpoint file so the first atomic save succeeds.
+fn set_job_checkpoint(runner: &mut TsneRunner, cfg: &JobConfig) -> anyhow::Result<()> {
+    if let Some(path) = &cfg.checkpoint {
+        if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+            std::fs::create_dir_all(dir)?;
+        }
+        runner.set_checkpoint(Some(CheckpointSpec {
+            path: path.clone(),
+            every: cfg.checkpoint_every,
+            resume: cfg.resume,
+        }));
+    }
+    Ok(())
 }
 
 impl JobConfig {
@@ -137,6 +165,7 @@ pub fn run_job(cfg: JobConfig) -> anyhow::Result<JobResult> {
     // ---- Stage 3: optimize ----
     let sw = Stopwatch::start();
     let mut runner = TsneRunner::with_pool(cfg.tsne.clone(), pool);
+    set_job_checkpoint(&mut runner, &cfg)?;
     if cfg.use_xla {
         match SneEngine::from_env() {
             Ok(engine) => {
@@ -266,6 +295,7 @@ pub fn run_fit_job(cfg: JobConfig, model_out: Option<&Path>) -> anyhow::Result<(
     // ---- Stage 3: fit ----
     let sw = Stopwatch::start();
     let mut runner = TsneRunner::with_pool(cfg.tsne.clone(), pool);
+    set_job_checkpoint(&mut runner, &cfg)?;
     if cfg.use_xla {
         match SneEngine::from_env() {
             Ok(engine) => {

@@ -134,6 +134,23 @@ impl<const DIM: usize> ForceEngine<DIM> {
         self.movable
     }
 
+    /// Graceful degradation: switch the repulsion strategy to point-cell
+    /// Barnes-Hut mid-run. The numerical-health watchdog calls this when
+    /// grid interpolation goes degenerate (non-finite potentials); the
+    /// tree builds lazily on the next repulsion pass and the grid's
+    /// buffers are dropped. No-op for the tree/exact methods. Returns
+    /// whether the method actually changed.
+    pub fn degrade_to_bh(&mut self, theta: f32) -> bool {
+        if !matches!(self.method, RepulsionMethod::Interpolation { .. }) {
+            return false;
+        }
+        self.method = RepulsionMethod::BarnesHut { theta };
+        self.interp = None;
+        self.cached_z = None;
+        self.z_stale = false;
+        true
+    }
+
     /// Build the tree for `y`, or refit the previous iteration's tree in
     /// place — bit-identical to a from-scratch `build_parallel` either
     /// way (see [`BhTree::refit`]).
@@ -438,6 +455,23 @@ impl DynForceEngine {
         match self {
             DynForceEngine::D2(e) => e.mark_embedding_moved(),
             DynForceEngine::D3(e) => e.mark_embedding_moved(),
+        }
+    }
+
+    /// The repulsion method currently in effect (may differ from the
+    /// config after a watchdog degradation).
+    pub fn method(&self) -> RepulsionMethod {
+        match self {
+            DynForceEngine::D2(e) => e.method(),
+            DynForceEngine::D3(e) => e.method(),
+        }
+    }
+
+    /// [`ForceEngine::degrade_to_bh`], dimension-erased.
+    pub fn degrade_to_bh(&mut self, theta: f32) -> bool {
+        match self {
+            DynForceEngine::D2(e) => e.degrade_to_bh(theta),
+            DynForceEngine::D3(e) => e.degrade_to_bh(theta),
         }
     }
 
@@ -790,6 +824,38 @@ mod tests {
             let kl = engine.kl_cost(&pool, &p, &y, z);
             assert!(kl.is_finite());
         }
+    }
+
+    /// Watchdog degradation: an interpolation engine switched to BH keeps
+    /// running and matches a from-scratch BH engine bit for bit.
+    #[test]
+    fn degrade_to_bh_switches_method_and_matches_fresh_engine() {
+        let pool = ThreadPool::new(2);
+        let n = 200;
+        let p = random_p(n, 3, 33);
+        let y = random_embedding(n, 34);
+        let mut engine = DynForceEngine::new(
+            2,
+            n,
+            RepulsionMethod::Interpolation { intervals: 8 },
+            CellSizeMode::Diagonal,
+        );
+        let mut grad = vec![0f64; n * 2];
+        engine.gradient(&pool, &CpuAttractive, &p, &y, &mut grad);
+        assert!(engine.degrade_to_bh(0.5));
+        assert_eq!(engine.method(), RepulsionMethod::BarnesHut { theta: 0.5 });
+        assert!(!engine.degrade_to_bh(0.5), "second degrade must be a no-op");
+        let z = engine.gradient(&pool, &CpuAttractive, &p, &y, &mut grad);
+        let mut fresh = DynForceEngine::new(
+            2,
+            n,
+            RepulsionMethod::BarnesHut { theta: 0.5 },
+            CellSizeMode::Diagonal,
+        );
+        let mut grad_fresh = vec![0f64; n * 2];
+        let z_fresh = fresh.gradient(&pool, &CpuAttractive, &p, &y, &mut grad_fresh);
+        assert_eq!(z, z_fresh);
+        assert_eq!(grad, grad_fresh);
     }
 
     #[test]

@@ -1,0 +1,102 @@
+//! Structured error taxonomy for the run path.
+//!
+//! Ad-hoc `anyhow!`/`ensure!` strings are fine for CLI plumbing, but the
+//! fault-tolerant run layer needs errors callers can classify: the
+//! watchdog distinguishes "diverged after bounded retries" from "the
+//! input itself is poisoned", and the resume path distinguishes "no
+//! checkpoint" from "checkpoint belongs to a different run". `SneError`
+//! implements [`std::error::Error`], so it converts into `anyhow::Error`
+//! via `?` on every existing signature.
+
+use std::fmt;
+
+/// Errors the t-SNE run layer can surface. Display text is part of the
+/// contract — tests (and shell scripts grepping stderr) match on it, and
+/// the vendored anyhow shim has no downcasting.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SneError {
+    /// The input matrix contains a NaN/Inf at `(row, col)`. Caught at the
+    /// front door before perplexity search can propagate it everywhere.
+    NonFiniteInput { row: usize, col: usize },
+    /// `x.len()` is not divisible by the declared dimensionality.
+    ShapeMismatch { len: usize, dim: usize },
+    /// Fewer than two input rows — no pairwise similarities exist.
+    TooFewPoints { n: usize },
+    /// Embedding dimensionality outside the supported {2, 3}.
+    UnsupportedOutDim { out_dim: usize },
+    /// The watchdog saw a non-finite gradient / embedding / cost and the
+    /// recovery budget (rollback + learning-rate backoff) is exhausted.
+    Diverged { iter: usize, retries: u32 },
+    /// A checkpoint parsed cleanly but belongs to a different run
+    /// (config/data fingerprint or shape disagrees).
+    CheckpointMismatch { reason: String },
+    /// A deliberately injected fault fired (tests + crash drills only).
+    InjectedFault { what: String, iter: usize },
+}
+
+impl fmt::Display for SneError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SneError::NonFiniteInput { row, col } => {
+                write!(f, "non-finite input value at row {row}, col {col}")
+            }
+            SneError::ShapeMismatch { len, dim } => {
+                write!(f, "x length {len} not divisible by dim {dim}")
+            }
+            SneError::TooFewPoints { n } => {
+                write!(f, "need at least 2 points, got {n}")
+            }
+            SneError::UnsupportedOutDim { out_dim } => {
+                write!(f, "out_dim must be 2 or 3 (paper §6), got {out_dim}")
+            }
+            SneError::Diverged { iter, retries } => {
+                write!(
+                    f,
+                    "optimization diverged at iteration {iter}: non-finite state persisted \
+                     after {retries} rollback/backoff retries"
+                )
+            }
+            SneError::CheckpointMismatch { reason } => {
+                write!(f, "checkpoint does not match this run: {reason}")
+            }
+            SneError::InjectedFault { what, iter } => {
+                write!(f, "injected fault '{what}' fired at iteration {iter}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SneError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_text_is_stable() {
+        // The run layer's tests classify errors by Display text (the
+        // vendored anyhow shim has no downcasting) — lock the prefixes.
+        let cases: Vec<(SneError, &str)> = vec![
+            (SneError::NonFiniteInput { row: 3, col: 7 }, "non-finite input value at row 3"),
+            (SneError::ShapeMismatch { len: 10, dim: 3 }, "not divisible by dim"),
+            (SneError::TooFewPoints { n: 1 }, "at least 2 points"),
+            (SneError::UnsupportedOutDim { out_dim: 5 }, "out_dim must be 2 or 3"),
+            (SneError::Diverged { iter: 12, retries: 3 }, "optimization diverged"),
+            (SneError::CheckpointMismatch { reason: "fingerprint".into() }, "checkpoint does not match"),
+            (SneError::InjectedFault { what: "grad-nan".into(), iter: 5 }, "injected fault"),
+        ];
+        for (e, needle) in cases {
+            assert!(e.to_string().contains(needle), "{e}");
+        }
+    }
+
+    #[test]
+    fn converts_into_anyhow() {
+        fn fails() -> anyhow::Result<()> {
+            Err(SneError::TooFewPoints { n: 0 })?;
+            Ok(())
+        }
+        let err = fails().unwrap_err();
+        assert!(err.to_string().contains("at least 2 points"));
+    }
+}

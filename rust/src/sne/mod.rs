@@ -3,6 +3,7 @@
 //! the paper's full training loop.
 
 pub mod engine;
+pub mod error;
 pub mod gradient;
 pub mod input;
 pub mod interp;
@@ -12,14 +13,16 @@ pub mod perplexity;
 pub mod sparse;
 
 pub use engine::{DynForceEngine, EngineStats, ForceEngine};
+pub use error::SneError;
 pub use gradient::RepulsionMethod;
 pub use interp::InterpGrid;
 pub use model::{TransformOptions, TransformResult, TransformStats, TsneModel};
 pub use sparse::Csr;
 
+use crate::data::io;
 use crate::knn::{BruteKnn, KnnBackend, VpTreeKnn};
 use crate::spatial::CellSizeMode;
-use crate::util::{Pcg32, Stopwatch, ThreadPool};
+use crate::util::{fault, simd, Pcg32, Stopwatch, ThreadPool};
 
 /// Pluggable attractive-force backend. The default computes on the Rust
 /// thread pool; the runtime module provides an XLA-offloaded
@@ -134,6 +137,27 @@ pub struct IterStats {
     pub exaggerating: bool,
 }
 
+/// Where and how often the run loop persists crash-recovery checkpoints.
+///
+/// Checkpoints are CRC-framed and written atomically (temp sibling +
+/// fsync + rename), so a process killed at any byte offset of a save
+/// leaves the previous checkpoint intact. A run resumed from a
+/// checkpoint replays the remaining iterations **bit-identically** to an
+/// uninterrupted run (fault-free runs only; watchdog recoveries are
+/// exempt — they deliberately change the trajectory).
+#[derive(Debug, Clone)]
+pub struct CheckpointSpec {
+    /// Checkpoint file path (atomically overwritten in place).
+    pub path: std::path::PathBuf,
+    /// Save every `every` completed iterations (0 = never write, but the
+    /// in-memory watchdog rollback snapshot still refreshes).
+    pub every: usize,
+    /// Resume from `path` when it exists. A checkpoint whose fingerprint
+    /// disagrees with this run's (config, data) fails with
+    /// [`SneError::CheckpointMismatch`]; a missing file starts fresh.
+    pub resume: bool,
+}
+
 /// Aggregate timing of a finished run.
 #[derive(Debug, Clone, Default)]
 pub struct RunStats {
@@ -156,6 +180,16 @@ pub struct RunStats {
     pub total_secs: f64,
     pub final_kl: Option<f64>,
     pub iters: usize,
+    /// Watchdog recoveries this run (rollback + learning-rate backoff or
+    /// method degradation). Volatile: not persisted in `.bhsne`.
+    pub recoveries: usize,
+    /// The interpolation grid went degenerate and the engine fell back to
+    /// Barnes-Hut mid-run. Volatile: not persisted.
+    pub degraded_to_bh: bool,
+    /// Iteration this run resumed from, if it started from a checkpoint.
+    /// Volatile: not persisted (a resumed run's artifacts are required to
+    /// be byte-identical to an uninterrupted run's).
+    pub resumed_at: Option<usize>,
 }
 
 /// The Barnes-Hut-SNE training loop.
@@ -164,6 +198,7 @@ pub struct TsneRunner {
     pool: ThreadPool,
     attractive: Box<dyn AttractiveBackend>,
     observer: Option<Box<dyn FnMut(&IterStats, &[f32])>>,
+    checkpoint: Option<CheckpointSpec>,
     pub stats: RunStats,
 }
 
@@ -174,6 +209,7 @@ impl TsneRunner {
             pool: ThreadPool::for_host(),
             attractive: Box::new(CpuAttractive),
             observer: None,
+            checkpoint: None,
             stats: RunStats::default(),
         }
     }
@@ -185,6 +221,7 @@ impl TsneRunner {
             pool,
             attractive: Box::new(CpuAttractive),
             observer: None,
+            checkpoint: None,
             stats: RunStats::default(),
         }
     }
@@ -192,6 +229,12 @@ impl TsneRunner {
     /// Swap in a different attractive-force backend (XLA runtime).
     pub fn set_attractive_backend(&mut self, b: Box<dyn AttractiveBackend>) {
         self.attractive = b;
+    }
+
+    /// Configure crash-safe checkpoint/resume (`None` disables saving;
+    /// the in-memory watchdog rollback is always on).
+    pub fn set_checkpoint(&mut self, spec: Option<CheckpointSpec>) {
+        self.checkpoint = spec;
     }
 
     /// Register a per-iteration observer (progress bars, snapshots).
@@ -245,9 +288,20 @@ impl TsneRunner {
         dim: usize,
         keep_tree: bool,
     ) -> anyhow::Result<(Vec<f32>, Option<crate::vptree::VpArena>, Csr)> {
+        if dim == 0 || x.len() % dim != 0 {
+            return Err(SneError::ShapeMismatch { len: x.len(), dim }.into());
+        }
         let n = x.len() / dim;
-        anyhow::ensure!(n * dim == x.len(), "x length {} not divisible by dim {dim}", x.len());
-        anyhow::ensure!(n >= 2, "need at least 2 points");
+        if n < 2 {
+            return Err(SneError::TooFewPoints { n }.into());
+        }
+        // Input-validation front door: one pass over the rows. A NaN/Inf
+        // here would otherwise poison the perplexity search and every
+        // distance derived from it, surfacing much later as a mysterious
+        // divergence.
+        if let Some(bad) = x.iter().position(|v| !v.is_finite()) {
+            return Err(SneError::NonFiniteInput { row: bad / dim, col: bad % dim }.into());
+        }
         let total_sw = Stopwatch::start();
 
         // ---- Input similarities (Eq. 6/7) ----
@@ -289,28 +343,99 @@ impl TsneRunner {
 
     /// Run the gradient loop on a pre-computed joint distribution
     /// (exposed so the pipeline can split stages and so tests can inject
-    /// exact P). `p` is temporarily exaggerated in place.
+    /// exact P). `p` is temporarily exaggerated in place and restored
+    /// bit-exactly afterwards.
+    ///
+    /// This is the crash-safe run layer. Every iteration passes a
+    /// numerical-health watchdog: the embedding must be finite before any
+    /// spatial structure is built from it, the gradient and normalizer
+    /// before the step, and the KL at each probe. A failed check triggers
+    /// bounded recovery — roll back to the last validated snapshot, halve
+    /// the learning rate (or first degrade a degenerate interpolation
+    /// grid to Barnes-Hut), and retry; the budget exhausts into
+    /// [`SneError::Diverged`]. With a [`CheckpointSpec`], progress also
+    /// persists atomically to disk and a killed run resumes
+    /// bit-identically (fault-free runs only — recoveries deliberately
+    /// change the trajectory).
     pub fn optimize(&mut self, p: &mut Csr, n: usize) -> anyhow::Result<Vec<f32>> {
+        /// Recoveries allowed before the run gives up with
+        /// [`SneError::Diverged`].
+        const MAX_RETRIES: u32 = 3;
+        /// In-memory rollback-snapshot cadence when no disk checkpoint
+        /// cadence is configured.
+        const SNAPSHOT_EVERY_DEFAULT: usize = 25;
+
         let dim = self.config.out_dim;
-        anyhow::ensure!(dim == 2 || dim == 3, "out_dim must be 2 or 3 (paper §6)");
+        if dim != 2 && dim != 3 {
+            return Err(SneError::UnsupportedOutDim { out_dim: dim }.into());
+        }
         let method = self.config.repulsion_method();
         let sw = Stopwatch::start();
+        self.stats.recoveries = 0;
+        self.stats.degraded_to_bh = false;
+        self.stats.resumed_at = None;
 
-        // Init y ~ N(0, 1e-4) (σ = 0.01), per the paper.
+        // Binds checkpoints to this exact (config, data) pair; computed
+        // over the un-exaggerated P so it is phase-independent.
+        let fingerprint = io::run_fingerprint(&self.config, n, p);
+        let ckspec = self.checkpoint.clone();
+
+        // Init y ~ N(0, 1e-4) (σ = 0.01), per the paper — unless
+        // resuming, in which case every draw is skipped and the
+        // checkpointed RNG state is restored instead.
         let mut rng = Pcg32::seeded(self.config.seed);
         let mut y = vec![0f32; n * dim];
-        rng.fill_normal(&mut y, 1e-2);
-
         let mut opt = optimizer::Optimizer::new(n, dim, self.config.eta);
         opt.momentum_switch = self.config.exaggeration_iters;
 
-        // Early exaggeration: multiply all p_ij by α for the first
-        // `exaggeration_iters` iterations.
+        let mut retries: u32 = 0;
+        let mut start_iter = 0usize;
+        if let Some(spec) = ckspec.as_ref().filter(|s| s.resume && s.path.exists()) {
+            let ck = io::read_checkpoint(&spec.path)?;
+            if ck.fingerprint != fingerprint {
+                return Err(SneError::CheckpointMismatch {
+                    reason: format!(
+                        "fingerprint {:#018x} != run fingerprint {:#018x} \
+                         (different config or input data)",
+                        ck.fingerprint, fingerprint
+                    ),
+                }
+                .into());
+            }
+            if ck.n != n || ck.dim != dim || ck.iter > self.config.iters {
+                return Err(SneError::CheckpointMismatch {
+                    reason: format!(
+                        "checkpoint shape {}x{} at iteration {} vs run shape {n}x{dim} \
+                         with {} iterations",
+                        ck.n, ck.dim, ck.iter, self.config.iters
+                    ),
+                }
+                .into());
+            }
+            y.copy_from_slice(&ck.y);
+            opt.restore(&ck.velocity, &ck.gains, ck.iter);
+            opt.eta = ck.eta;
+            retries = ck.retries;
+            rng = Pcg32::from_state(ck.rng_state, ck.rng_inc);
+            start_iter = ck.iter;
+            self.stats.resumed_at = Some(ck.iter);
+            log::info!("resuming from {} at iteration {}", spec.path.display(), ck.iter);
+        }
+        if self.stats.resumed_at.is_none() {
+            rng.fill_normal(&mut y, 1e-2);
+        }
+
+        // Early exaggeration: multiply all p_ij by α while it <
+        // `exaggeration_iters`. The pristine values are kept aside and
+        // restored bit-exactly at the switch — `v·α·(1/α)` is not always
+        // `v` in floats, and resume byte-identity requires the
+        // post-exaggeration P to be exactly the original.
         let ex = self.config.exaggeration.max(1.0);
-        if ex > 1.0 {
+        let pristine = (ex > 1.0).then(|| p.values.clone());
+        let mut exaggerating = ex > 1.0 && start_iter < self.config.exaggeration_iters;
+        if exaggerating {
             p.scale(ex);
         }
-        let mut exaggerating = ex > 1.0;
 
         let mut grad = vec![0f64; n * dim];
         let mut last_kl = None;
@@ -323,55 +448,194 @@ impl TsneRunner {
         // same-iteration cost evaluation.
         let mut engine = DynForceEngine::new(dim, n, method, self.config.cell_size);
 
-        for it in 0..self.config.iters {
-            let it_sw = Stopwatch::start();
-            if exaggerating && it >= self.config.exaggeration_iters {
-                p.scale(1.0 / ex);
-                exaggerating = false;
-            }
+        // Last validated state — the watchdog's rollback target.
+        // Refreshed on the snapshot cadence only after the embedding
+        // passes a finite check: a rollback target must never itself be
+        // poisoned.
+        let snap_every = match &ckspec {
+            Some(s) if s.every > 0 => s.every,
+            _ => SNAPSHOT_EVERY_DEFAULT,
+        };
+        let mut snap_y = y.clone();
+        let (sv, sg, si) = opt.state();
+        let mut snap_v = sv.to_vec();
+        let mut snap_g = sg.to_vec();
+        let mut snap_iter = si;
 
-            let z = engine.gradient(&self.pool, self.attractive.as_ref(), p, &y, &mut grad);
-            let mut gnorm = 0f64;
-            for g in grad.iter() {
-                gnorm += g * g;
-            }
+        let be = simd::backend();
+        let mut it = start_iter;
 
-            opt.step(&self.pool, &mut y, &grad);
-            optimizer::Optimizer::recenter(&self.pool, &mut y, n, dim);
-            // The engine's cached Z now describes the pre-step embedding.
-            engine.mark_embedding_moved();
-
-            let kl = if self.config.cost_every > 0
-                && (it % self.config.cost_every == 0 || it + 1 == self.config.iters)
-            {
-                // Observer probe: reuse the Z cached by this iteration's
-                // repulsion pass (one step old — the approximation this
-                // reporting has always made) instead of re-walking the
-                // tree; `kl_cost_exact` is the fresh-Z variant.
-                let c = engine.kl_cost_cached(&self.pool, p, &y).expect("gradient ran");
-                last_kl = Some(c);
-                Some(c)
-            } else {
-                None
-            };
-
-            if let Some(obs) = &mut self.observer {
-                obs(
-                    &IterStats {
-                        iter: it,
-                        kl,
-                        grad_norm: gnorm.sqrt(),
-                        z,
-                        secs: it_sw.elapsed_secs(),
-                        exaggerating,
-                    },
-                    &y,
-                );
-            }
+        // Bounded rollback + backoff. A degenerate interpolation grid
+        // degrades to Barnes-Hut first (the grid, not the step size, is
+        // then the culprit); otherwise the learning rate halves. The
+        // exaggeration phase is re-derived for the rollback target.
+        macro_rules! recover {
+            ($what:expr) => {{
+                retries += 1;
+                if retries > MAX_RETRIES {
+                    return Err(SneError::Diverged { iter: it, retries: retries - 1 }.into());
+                }
+                let theta = if self.config.theta > 0.0 { self.config.theta } else { 0.5 };
+                if engine.degrade_to_bh(theta) {
+                    self.stats.degraded_to_bh = true;
+                    log::warn!(
+                        "watchdog: {} at iteration {it}; degrading interpolation to \
+                         Barnes-Hut, rolling back to iteration {snap_iter} \
+                         (retry {retries}/{MAX_RETRIES})",
+                        $what
+                    );
+                } else {
+                    opt.eta *= 0.5;
+                    log::warn!(
+                        "watchdog: {} at iteration {it}; halving eta to {}, rolling back \
+                         to iteration {snap_iter} (retry {retries}/{MAX_RETRIES})",
+                        $what,
+                        opt.eta
+                    );
+                }
+                self.stats.recoveries += 1;
+                y.copy_from_slice(&snap_y);
+                opt.restore(&snap_v, &snap_g, snap_iter);
+                let should_ex = ex > 1.0 && snap_iter < self.config.exaggeration_iters;
+                if should_ex != exaggerating {
+                    p.values.copy_from_slice(pristine.as_ref().expect("ex > 1"));
+                    if should_ex {
+                        p.scale(ex);
+                    }
+                    exaggerating = should_ex;
+                }
+                engine.mark_embedding_moved();
+                it = snap_iter;
+            }};
         }
-        // Leave P un-exaggerated even when iters < exaggeration_iters.
+
+        'run: loop {
+            while it < self.config.iters {
+                let it_sw = Stopwatch::start();
+                if exaggerating && it >= self.config.exaggeration_iters {
+                    p.values.copy_from_slice(pristine.as_ref().expect("ex > 1"));
+                    exaggerating = false;
+                }
+
+                // Watchdog gate 1: the embedding must be finite before any
+                // spatial structure is built from it (NaN coordinates make
+                // Morton keys and grid bins nonsense).
+                if !simd::sumsq_f32(be, &y).is_finite() {
+                    recover!("non-finite embedding");
+                    continue;
+                }
+
+                let z = engine.gradient(&self.pool, self.attractive.as_ref(), p, &y, &mut grad);
+                fault::maybe_grad_nan(it, &mut grad);
+
+                // Watchdog gate 2: gradient and normalizer, checked before
+                // the step so a poisoned gradient never reaches y. The
+                // squared norm runs on the SIMD kernel (portable twin
+                // bit-identical); a finite-gradient run cannot overflow it
+                // unless it is already divergent, which is exactly what
+                // the check catches.
+                let gnorm_sq = simd::sumsq_f64(be, &grad);
+                if !gnorm_sq.is_finite() || !z.is_finite() {
+                    recover!("non-finite gradient or normalizer");
+                    continue;
+                }
+
+                opt.step(&self.pool, &mut y, &grad);
+                optimizer::Optimizer::recenter(&self.pool, &mut y, n, dim);
+                // The engine's cached Z now describes the pre-step embedding.
+                engine.mark_embedding_moved();
+                fault::maybe_embed_nan(it, &mut y);
+
+                let kl = if self.config.cost_every > 0
+                    && (it % self.config.cost_every == 0 || it + 1 == self.config.iters)
+                {
+                    // Observer probe: reuse the Z cached by this iteration's
+                    // repulsion pass (one step old — the approximation this
+                    // reporting has always made) instead of re-walking the
+                    // tree; `kl_cost_exact` is the fresh-Z variant.
+                    let c = engine.kl_cost_cached(&self.pool, p, &y).expect("gradient ran");
+                    // Watchdog gate 3: a non-finite KL means P or Q went
+                    // bad in a way the gradient gates missed.
+                    if !c.is_finite() {
+                        recover!("non-finite KL cost");
+                        continue;
+                    }
+                    last_kl = Some(c);
+                    Some(c)
+                } else {
+                    None
+                };
+
+                if let Some(obs) = &mut self.observer {
+                    obs(
+                        &IterStats {
+                            iter: it,
+                            kl,
+                            grad_norm: gnorm_sq.sqrt(),
+                            z,
+                            secs: it_sw.elapsed_secs(),
+                            exaggerating,
+                        },
+                        &y,
+                    );
+                }
+
+                // Snapshot / checkpoint cadence: capture the post-step
+                // state of `completed` iterations, gated on the new
+                // embedding checking out.
+                let completed = it + 1;
+                if completed % snap_every == 0 && simd::sumsq_f32(be, &y).is_finite() {
+                    snap_y.copy_from_slice(&y);
+                    let (v, g, oit) = opt.state();
+                    snap_v.copy_from_slice(v);
+                    snap_g.copy_from_slice(g);
+                    snap_iter = oit;
+                    if let Some(spec) = &ckspec {
+                        if spec.every > 0 && completed % spec.every == 0 {
+                            let (rng_state, rng_inc) = rng.state();
+                            io::write_checkpoint(
+                                &spec.path,
+                                &io::RunCheckpoint {
+                                    iter: completed,
+                                    n,
+                                    dim,
+                                    eta: opt.eta,
+                                    retries,
+                                    fingerprint,
+                                    rng_state,
+                                    rng_inc,
+                                    y: snap_y.clone(),
+                                    velocity: snap_v.clone(),
+                                    gains: snap_g.clone(),
+                                },
+                            )?;
+                        }
+                    }
+                }
+
+                // Crash drills: `kill@N` aborts inside the probe,
+                // `stop-iter@N` surfaces as a structured error.
+                if fault::maybe_stop_iter(it).is_some() {
+                    return Err(SneError::InjectedFault { what: "stop-iter".into(), iter: it }.into());
+                }
+
+                it += 1;
+            }
+
+            // Final health gate: a fault on the very last iteration can
+            // slip past the per-iteration gates (which run before the
+            // step); the embedding a run returns is always finite.
+            if !simd::sumsq_f32(be, &y).is_finite() {
+                recover!("non-finite final embedding");
+                continue 'run;
+            }
+            break;
+        }
+
+        // Leave P un-exaggerated (bit-exactly the input values) even when
+        // iters < exaggeration_iters.
         if exaggerating {
-            p.scale(1.0 / ex);
+            p.values.copy_from_slice(pristine.as_ref().expect("ex > 1"));
         }
         self.stats.gradient_secs = sw.elapsed_secs();
         // The engine times tree work and traversal separately.

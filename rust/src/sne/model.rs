@@ -256,9 +256,25 @@ impl TsneModel {
             "query dim {dim} does not match model input dim {} (raw queries go through project_input)",
             self.dim
         );
+        if xq.len() % dim != 0 {
+            return Err(crate::sne::SneError::ShapeMismatch { len: xq.len(), dim }.into());
+        }
         let m = xq.len() / dim;
-        anyhow::ensure!(m * dim == xq.len(), "xq length {} not divisible by dim {dim}", xq.len());
-        anyhow::ensure!(m >= 1, "need at least one query row");
+        if m == 0 {
+            // An empty batch is a valid (trivial) transform, not an error —
+            // streaming callers hand over whatever the upstream batcher
+            // produced.
+            return Ok(TransformResult {
+                y: Vec::new(),
+                nn_input: Vec::new(),
+                stats: TransformStats::default(),
+            });
+        }
+        // Same front door as the fit path: non-finite queries fail loudly
+        // before they can poison the kNN attach.
+        if let Some(bad) = xq.iter().position(|v| !v.is_finite()) {
+            return Err(crate::sne::SneError::NonFiniteInput { row: bad / dim, col: bad % dim }.into());
+        }
         let out_dim = self.config.out_dim;
         anyhow::ensure!(
             self.embedding.len() == self.n * out_dim,

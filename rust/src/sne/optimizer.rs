@@ -95,6 +95,23 @@ impl Optimizer {
         self.iter += 1;
     }
 
+    /// Borrow the full mutable state `(velocity, gains, iter)` for
+    /// checkpoint serialization and in-memory snapshots.
+    pub fn state(&self) -> (&[f64], &[f64], usize) {
+        (&self.velocity, &self.gains, self.iter)
+    }
+
+    /// Restore state captured by [`Optimizer::state`] (or decoded from a
+    /// checkpoint). Restored runs replay bit-identically because the
+    /// update is a pure function of `(velocity, gains, iter, eta, grad)`.
+    pub fn restore(&mut self, velocity: &[f64], gains: &[f64], iter: usize) {
+        assert_eq!(velocity.len(), self.velocity.len(), "velocity length mismatch");
+        assert_eq!(gains.len(), self.gains.len(), "gains length mismatch");
+        self.velocity.copy_from_slice(velocity);
+        self.gains.copy_from_slice(gains);
+        self.iter = iter;
+    }
+
     /// Recenter the embedding at the origin (t-SNE's gradient is
     /// translation invariant, so without recentering the cloud drifts).
     /// The mean is reduced over fixed per-chunk slots in slot order, so
@@ -228,6 +245,35 @@ mod tests {
         assert_eq!(y1, y4);
         assert_eq!(v1, v4);
         assert_eq!(g1, g4);
+    }
+
+    #[test]
+    fn restored_state_replays_bit_identical_steps() {
+        let pool = ThreadPool::new(2);
+        let n = 500;
+        let mut rng = crate::util::Pcg32::seeded(13);
+        let mut y = (0..n * 2).map(|_| rng.normal() as f32).collect::<Vec<_>>();
+        let mut opt = Optimizer::new(n, 2, 200.0);
+        let grads: Vec<Vec<f64>> = (0..6).map(|_| (0..n * 2).map(|_| rng.normal()).collect()).collect();
+        for g in &grads[..3] {
+            opt.step(&pool, &mut y, g);
+        }
+        let (v, ga, it) = opt.state();
+        let (v, ga) = (v.to_vec(), ga.to_vec());
+        let y_snap = y.clone();
+        for g in &grads[3..] {
+            opt.step(&pool, &mut y, g);
+        }
+        let mut opt2 = Optimizer::new(n, 2, 200.0);
+        opt2.restore(&v, &ga, it);
+        let mut y2 = y_snap;
+        for g in &grads[3..] {
+            opt2.step(&pool, &mut y2, g);
+        }
+        assert_eq!(y, y2);
+        assert_eq!(opt.velocity, opt2.velocity);
+        assert_eq!(opt.gains, opt2.gains);
+        assert_eq!(opt.iter, opt2.iter);
     }
 
     #[test]

@@ -1,0 +1,284 @@
+//! Injectable IO/compute fault layer for crash-safety testing.
+//!
+//! Production code calls the tiny `maybe_*` probes at its fault points
+//! (gradient computed, iteration finished, bytes written); with no fault
+//! armed they are a relaxed atomic load and nothing else. Tests — and the
+//! CI crash-resume drill — arm faults either programmatically via
+//! [`inject`] or through the `BHSNE_FAULT` environment variable, read
+//! once at first probe:
+//!
+//! ```text
+//! BHSNE_FAULT=grad-nan@17        # NaN into the gradient at iteration 17
+//! BHSNE_FAULT=stop-iter@25       # error out of the run loop at iteration 25
+//! BHSNE_FAULT=kill@25            # abort() the process at iteration 25
+//! BHSNE_FAULT=write-err@123      # io::Error once 123 bytes were written
+//! BHSNE_FAULT=kill-write@123     # abort() mid-write at byte 123
+//! ```
+//!
+//! Several specs may be comma-separated. Every fault is **one-shot**: it
+//! fires once and disarms, so a recovery/resume replay of the same
+//! iteration runs clean — which is exactly the semantics a transient
+//! fault drill needs.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+/// One injectable fault.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Fault {
+    /// Overwrite gradient element 0 with NaN at iteration `iter`.
+    GradNan { iter: usize },
+    /// Overwrite an embedding coordinate with NaN after the step of
+    /// iteration `iter` (poisons the *next* iteration's tree/grid input).
+    EmbedNan { iter: usize },
+    /// Return an error from the run loop at iteration `iter` — an
+    /// in-process stand-in for the process dying mid-run.
+    StopIter { iter: usize },
+    /// `std::process::abort()` at iteration `iter` (subprocess drills).
+    Kill { iter: usize },
+    /// Fail with `io::Error` once `offset` bytes have passed through a
+    /// [`FaultWriter`].
+    WriteErr { offset: u64 },
+    /// `std::process::abort()` once `offset` bytes have passed through a
+    /// [`FaultWriter`] — a real torn write.
+    KillWrite { offset: u64 },
+}
+
+/// Armed faults. `ARMED` short-circuits the probes when the list is empty
+/// so the production hot loop pays one relaxed load per probe.
+static FAULTS: Mutex<Vec<Fault>> = Mutex::new(Vec::new());
+static ARMED: AtomicBool = AtomicBool::new(false);
+static ENV_READ: AtomicBool = AtomicBool::new(false);
+
+fn lock() -> std::sync::MutexGuard<'static, Vec<Fault>> {
+    FAULTS.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Arm a fault (one-shot). Test-facing; production never calls this.
+pub fn inject(f: Fault) {
+    let mut faults = lock();
+    faults.push(f);
+    ARMED.store(true, Ordering::Release);
+}
+
+/// Disarm everything (tests call this in cleanup).
+pub fn clear() {
+    lock().clear();
+    ARMED.store(false, Ordering::Release);
+}
+
+/// Parse one `kind@arg` spec. Unknown kinds/args are reported, not
+/// ignored — a typo'd drill must not silently pass.
+fn parse_spec(spec: &str) -> Result<Fault, String> {
+    let (kind, arg) = spec.split_once('@').ok_or_else(|| format!("fault spec '{spec}' missing '@'"))?;
+    let num: u64 = arg.trim().parse().map_err(|_| format!("fault spec '{spec}': bad number '{arg}'"))?;
+    match kind.trim() {
+        "grad-nan" => Ok(Fault::GradNan { iter: num as usize }),
+        "embed-nan" => Ok(Fault::EmbedNan { iter: num as usize }),
+        "stop-iter" => Ok(Fault::StopIter { iter: num as usize }),
+        "kill" => Ok(Fault::Kill { iter: num as usize }),
+        "write-err" => Ok(Fault::WriteErr { offset: num }),
+        "kill-write" => Ok(Fault::KillWrite { offset: num }),
+        other => Err(format!("unknown fault kind '{other}' in '{spec}'")),
+    }
+}
+
+/// Read `BHSNE_FAULT` once (first probe) and arm whatever it specifies.
+fn ensure_env_read() {
+    if ENV_READ.swap(true, Ordering::AcqRel) {
+        return;
+    }
+    if let Ok(v) = std::env::var("BHSNE_FAULT") {
+        for spec in v.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            match parse_spec(spec) {
+                Ok(f) => inject(f),
+                Err(e) => panic!("BHSNE_FAULT: {e}"),
+            }
+        }
+    }
+}
+
+#[inline]
+fn armed() -> bool {
+    ensure_env_read();
+    ARMED.load(Ordering::Acquire)
+}
+
+fn take(pred: impl Fn(&Fault) -> bool) -> Option<Fault> {
+    let mut faults = lock();
+    let pos = faults.iter().position(pred)?;
+    let f = faults.remove(pos);
+    if faults.is_empty() {
+        ARMED.store(false, Ordering::Release);
+    }
+    Some(f)
+}
+
+/// Probe: inject a NaN into the gradient at this iteration?
+#[inline]
+pub fn maybe_grad_nan(iter: usize, grad: &mut [f64]) {
+    if !armed() {
+        return;
+    }
+    if take(|f| matches!(f, Fault::GradNan { iter: i } if *i == iter)).is_some() {
+        if let Some(g) = grad.first_mut() {
+            *g = f64::NAN;
+        }
+    }
+}
+
+/// Probe: poison an embedding coordinate after this iteration's step?
+#[inline]
+pub fn maybe_embed_nan(iter: usize, y: &mut [f32]) {
+    if !armed() {
+        return;
+    }
+    if take(|f| matches!(f, Fault::EmbedNan { iter: i } if *i == iter)).is_some() {
+        if let Some(v) = y.first_mut() {
+            *v = f32::NAN;
+        }
+    }
+}
+
+/// Probe: die at the end of this iteration? An armed `Kill` aborts the
+/// process right here; an armed `StopIter` yields `Some(())` for the
+/// caller to turn into an error.
+#[inline]
+pub fn maybe_stop_iter(iter: usize) -> Option<()> {
+    if !armed() {
+        return None;
+    }
+    if take(|f| matches!(f, Fault::Kill { iter: i } if *i == iter)).is_some() {
+        std::process::abort();
+    }
+    take(|f| matches!(f, Fault::StopIter { iter: i } if *i == iter)).map(|_| ())
+}
+
+/// Take an armed write fault, if any, for a new [`FaultWriter`].
+pub fn take_write_fault() -> Option<Fault> {
+    if !armed() {
+        return None;
+    }
+    take(|f| matches!(f, Fault::WriteErr { .. } | Fault::KillWrite { .. }))
+}
+
+/// A `Write + Seek` wrapper that counts bytes pushed through `write` and
+/// fires an armed write fault at the chosen cumulative offset: either a
+/// torn write (`io::Error` after a partial write) or a process abort.
+/// With `fault: None` it is a transparent passthrough.
+pub struct FaultWriter<W> {
+    inner: W,
+    written: u64,
+    fault: Option<Fault>,
+}
+
+impl<W> FaultWriter<W> {
+    pub fn new(inner: W, fault: Option<Fault>) -> Self {
+        FaultWriter { inner, written: 0, fault }
+    }
+
+    pub fn into_inner(self) -> W {
+        self.inner
+    }
+}
+
+impl<W: std::io::Write> std::io::Write for FaultWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let cut = match self.fault {
+            Some(Fault::WriteErr { offset }) | Some(Fault::KillWrite { offset }) => {
+                if self.written + buf.len() as u64 > offset {
+                    Some((offset - self.written.min(offset)) as usize)
+                } else {
+                    None
+                }
+            }
+            _ => None,
+        };
+        match cut {
+            Some(keep) => {
+                // Tear the write: push through the prefix, then die.
+                if keep > 0 {
+                    self.inner.write_all(&buf[..keep])?;
+                    let _ = self.inner.flush();
+                }
+                if matches!(self.fault, Some(Fault::KillWrite { .. })) {
+                    std::process::abort();
+                }
+                self.fault = None;
+                Err(std::io::Error::other("injected write failure"))
+            }
+            None => {
+                let n = self.inner.write(buf)?;
+                self.written += n as u64;
+                Ok(n)
+            }
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+impl<W: std::io::Seek> std::io::Seek for FaultWriter<W> {
+    fn seek(&mut self, pos: std::io::SeekFrom) -> std::io::Result<u64> {
+        // Byte accounting is over write() traffic, not file position —
+        // header patch-up seeks don't reset the fault clock.
+        self.inner.seek(pos)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(parse_spec("grad-nan@17").unwrap(), Fault::GradNan { iter: 17 });
+        assert_eq!(parse_spec("write-err@0").unwrap(), Fault::WriteErr { offset: 0 });
+        assert_eq!(parse_spec("kill@3").unwrap(), Fault::Kill { iter: 3 });
+        assert!(parse_spec("bogus@1").is_err());
+        assert!(parse_spec("grad-nan").is_err());
+        assert!(parse_spec("grad-nan@x").is_err());
+    }
+
+    #[test]
+    fn grad_nan_fires_once_at_the_right_iteration() {
+        clear();
+        inject(Fault::GradNan { iter: 2 });
+        let mut g = vec![1.0f64; 4];
+        maybe_grad_nan(1, &mut g);
+        assert!(g[0].is_finite());
+        maybe_grad_nan(2, &mut g);
+        assert!(g[0].is_nan());
+        g[0] = 1.0;
+        maybe_grad_nan(2, &mut g); // one-shot: does not re-fire
+        assert!(g[0].is_finite());
+        clear();
+    }
+
+    #[test]
+    fn fault_writer_tears_at_offset() {
+        for offset in 0..12u64 {
+            let mut sink = Vec::new();
+            let mut w = FaultWriter::new(&mut sink, Some(Fault::WriteErr { offset }));
+            let payload = b"hello crash world";
+            let res = w.write_all(payload);
+            assert!(res.is_err(), "offset={offset}");
+            drop(w);
+            assert_eq!(sink.len() as u64, offset, "partial prefix only");
+            assert_eq!(&sink[..], &payload[..offset as usize]);
+        }
+    }
+
+    #[test]
+    fn fault_writer_passthrough_without_fault() {
+        let mut sink = Vec::new();
+        let mut w = FaultWriter::new(&mut sink, None);
+        w.write_all(b"abc").unwrap();
+        w.write_all(b"def").unwrap();
+        drop(w);
+        assert_eq!(sink, b"abcdef");
+    }
+}

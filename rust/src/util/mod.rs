@@ -6,6 +6,7 @@
 pub mod args;
 pub mod bench;
 pub mod config;
+pub mod fault;
 pub mod logger;
 pub mod pool;
 pub mod quickcheck;

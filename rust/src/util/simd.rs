@@ -1003,6 +1003,105 @@ unsafe fn interp_gather_dot_avx2(w: &[f32], v: &[f64]) -> f64 {
     reduce_lanes(&acc)
 }
 
+/// Lane-blocked sum of squares of an f64 slice: `Σ xs[i]²` with element
+/// `i` in lane `i % LANES`, lanes reduced in fixed order. The run-layer
+/// watchdog uses it as the per-iteration gradient-norm health probe — a
+/// single NaN/Inf anywhere in the gradient propagates to the result, so
+/// one finite-check on the return value covers the whole vector.
+#[inline]
+pub fn sumsq_f64(be: Backend, xs: &[f64]) -> f64 {
+    match be {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { sumsq_f64_avx2(xs) },
+        _ => sumsq_f64_portable(xs),
+    }
+}
+
+fn sumsq_f64_portable(xs: &[f64]) -> f64 {
+    let mut acc = [0f64; LANES];
+    for i in 0..xs.len() {
+        acc[i % LANES] += xs[i] * xs[i];
+    }
+    reduce_lanes(&acc)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn sumsq_f64_avx2(xs: &[f64]) -> f64 {
+    use std::arch::x86_64::*;
+    let mut acc = [0f64; LANES];
+    let n = xs.len();
+    let blocks = n / LANES;
+    if blocks > 0 {
+        let mut alo = _mm256_setzero_pd();
+        let mut ahi = _mm256_setzero_pd();
+        for blk in 0..blocks {
+            let base = blk * LANES;
+            let lo = _mm256_loadu_pd(xs.as_ptr().add(base));
+            let hi = _mm256_loadu_pd(xs.as_ptr().add(base + 4));
+            alo = _mm256_add_pd(alo, _mm256_mul_pd(lo, lo));
+            ahi = _mm256_add_pd(ahi, _mm256_mul_pd(hi, hi));
+        }
+        _mm256_storeu_pd(acc.as_mut_ptr(), alo);
+        _mm256_storeu_pd(acc.as_mut_ptr().add(4), ahi);
+    }
+    for i in blocks * LANES..n {
+        acc[i % LANES] += xs[i] * xs[i];
+    }
+    reduce_lanes(&acc)
+}
+
+/// Lane-blocked sum of squares of an f32 slice accumulated in f64:
+/// `Σ (xs[i] as f64)²`, element `i` in lane `i % LANES`, fixed-order
+/// reduction. Used as the embedding finite-check: for finite f32 inputs
+/// the f64 accumulation cannot overflow, so a non-finite result means a
+/// non-finite coordinate.
+#[inline]
+pub fn sumsq_f32(be: Backend, xs: &[f32]) -> f64 {
+    match be {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { sumsq_f32_avx2(xs) },
+        _ => sumsq_f32_portable(xs),
+    }
+}
+
+fn sumsq_f32_portable(xs: &[f32]) -> f64 {
+    let mut acc = [0f64; LANES];
+    for i in 0..xs.len() {
+        let v = xs[i] as f64;
+        acc[i % LANES] += v * v;
+    }
+    reduce_lanes(&acc)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn sumsq_f32_avx2(xs: &[f32]) -> f64 {
+    use std::arch::x86_64::*;
+    let mut acc = [0f64; LANES];
+    let n = xs.len();
+    let blocks = n / LANES;
+    if blocks > 0 {
+        let mut alo = _mm256_setzero_pd();
+        let mut ahi = _mm256_setzero_pd();
+        for blk in 0..blocks {
+            let base = blk * LANES;
+            let v = _mm256_loadu_ps(xs.as_ptr().add(base));
+            let vlo = _mm256_cvtps_pd(_mm256_castps256_ps128(v));
+            let vhi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(v));
+            alo = _mm256_add_pd(alo, _mm256_mul_pd(vlo, vlo));
+            ahi = _mm256_add_pd(ahi, _mm256_mul_pd(vhi, vhi));
+        }
+        _mm256_storeu_pd(acc.as_mut_ptr(), alo);
+        _mm256_storeu_pd(acc.as_mut_ptr().add(4), ahi);
+    }
+    for i in blocks * LANES..n {
+        let v = xs[i] as f64;
+        acc[i % LANES] += v * v;
+    }
+    reduce_lanes(&acc)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -688,6 +688,32 @@ mod tests {
     }
 
     #[test]
+    fn pick_sequence_replays_from_restored_rng_state() {
+        // Checkpoint contract: a Pcg32 rebuilt from its serialized state
+        // must replay the vantage-point pick sequence bit-identically.
+        for &(n, seed) in &[(1usize, 0u64), (57, 9), (777, 31)] {
+            let picks = vantage_picks(n, seed);
+            let (s, i) = Pcg32::new(seed, 0x7674).state();
+            let mut rng = Pcg32::from_state(s, i);
+            let mut replay = Vec::with_capacity(n);
+            let mut stack: Vec<u32> = vec![n as u32];
+            while let Some(m) = stack.pop() {
+                replay.push(rng.below(m));
+                let rest = m - 1;
+                if rest > 0 {
+                    let mid = (rest - 1) / 2;
+                    let left = mid + 1;
+                    if rest - left > 0 {
+                        stack.push(rest - left);
+                    }
+                    stack.push(left);
+                }
+            }
+            assert_eq!(picks, replay, "n={n} seed={seed}");
+        }
+    }
+
+    #[test]
     fn knn_matches_brute_force_uniform() {
         let (n, dim, k) = (300, 4, 10);
         let data = random_points(n, dim, 1);

@@ -1,0 +1,423 @@
+//! Crash-safety contract of the run layer, driven by the fault-injection
+//! harness (`bhsne::util::fault`):
+//!
+//! * **Resume byte-identity** — a run killed at iteration k and resumed
+//!   from its checkpoint produces a final embedding (and `.bhsne` model
+//!   file) byte-identical to an uninterrupted run, for several kill
+//!   points and on every SIMD backend the machine has.
+//! * **Watchdog recovery** — a NaN injected into the gradient or the
+//!   embedding mid-run is detected, rolled back, and retried (learning
+//!   rate backoff, or interpolation→Barnes-Hut degradation); the run
+//!   still completes with a finite embedding and KL. An exhausted retry
+//!   budget surfaces as a structured "diverged" error, never a panic.
+//! * **Atomic publishes** — a write failure at *any* byte offset of a
+//!   checkpoint/model save leaves the target either absent or intact at
+//!   its previous content, with no temp-file litter.
+//! * **Input front door** — non-finite/misshapen inputs are rejected
+//!   before the pipeline, empty transform batches succeed trivially, and
+//!   duplicate-only clouds embed under all three force methods.
+//!
+//! Fault state and the SIMD-backend override are process-global, so
+//! every test serializes on one mutex; this file is the only test binary
+//! that arms faults.
+
+use bhsne::data::io::{self, RunCheckpoint};
+use bhsne::sne::{CheckpointSpec, RepulsionMethod, TransformOptions, TsneConfig, TsneRunner};
+use bhsne::util::fault::{self, Fault};
+use bhsne::util::simd;
+use bhsne::util::{Pcg32, ThreadPool};
+use std::path::PathBuf;
+use std::sync::{Mutex, MutexGuard};
+
+/// Faults and the backend override are global: serialize every test.
+fn serial() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("bhsne-crash-{}-{name}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn gaussian_cloud(n: usize, dim: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::seeded(seed);
+    let mut x = vec![0f32; n * dim];
+    rng.fill_normal(&mut x, 1.0);
+    x
+}
+
+/// A run short enough to repeat many times but long enough to cross the
+/// early-exaggeration switch, several cost probes, and ≥2 checkpoints.
+fn quick_config(seed: u64) -> TsneConfig {
+    TsneConfig {
+        perplexity: 8.0,
+        iters: 60,
+        exaggeration_iters: 20,
+        cost_every: 10,
+        seed,
+        ..TsneConfig::default()
+    }
+}
+
+fn bits32(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+// ---------------------------------------------------------------------
+// Resume byte-identity
+// ---------------------------------------------------------------------
+
+#[test]
+fn resume_is_byte_identical_across_kill_points_and_backends() {
+    let _g = serial();
+    fault::clear();
+    let dir = tmp_dir("resume");
+    let x = gaussian_cloud(160, 5, 11);
+
+    for be in simd::test_backends() {
+        simd::set_backend(Some(be));
+        // Kill one iteration after a checkpoint and deep between two.
+        for (case, stop_at, resume_from) in [(0usize, 22usize, 20usize), (1, 45, 40)] {
+            let cfg = quick_config(7);
+
+            let mut reference = TsneRunner::new(cfg.clone());
+            let y_ref = reference.run(&x, 5).unwrap();
+
+            // Interrupted run: checkpoint every 20 iterations, killed
+            // (in-process stand-in for the process dying) at `stop_at`.
+            let ck = dir.join(format!("ck-{}-{case}.bin", be.name()));
+            std::fs::remove_file(&ck).ok();
+            let mut interrupted = TsneRunner::new(cfg.clone());
+            interrupted.set_checkpoint(Some(CheckpointSpec { path: ck.clone(), every: 20, resume: false }));
+            fault::inject(Fault::StopIter { iter: stop_at });
+            let err = interrupted.run(&x, 5).unwrap_err();
+            assert!(err.to_string().contains("injected fault"), "{err}");
+            assert!(ck.exists(), "no checkpoint left behind by the killed run");
+
+            let mut resumed = TsneRunner::new(cfg.clone());
+            resumed.set_checkpoint(Some(CheckpointSpec { path: ck.clone(), every: 20, resume: true }));
+            let y_res = resumed.run(&x, 5).unwrap();
+            assert_eq!(resumed.stats.resumed_at, Some(resume_from), "backend {}", be.name());
+            assert_eq!(
+                bits32(&y_ref),
+                bits32(&y_res),
+                "resumed embedding diverged (backend {}, killed at {stop_at})",
+                be.name()
+            );
+            assert_eq!(
+                reference.stats.final_kl.unwrap().to_bits(),
+                resumed.stats.final_kl.unwrap().to_bits()
+            );
+        }
+    }
+    simd::set_backend(None);
+    fault::clear();
+}
+
+#[test]
+fn resumed_fit_writes_byte_identical_model() {
+    let _g = serial();
+    fault::clear();
+    let dir = tmp_dir("resume-model");
+    let x = gaussian_cloud(120, 4, 23);
+    let cfg = quick_config(3);
+
+    let model_ref = dir.join("ref.bhsne");
+    let mut reference = TsneRunner::new(cfg.clone());
+    reference.fit(&x, 4).unwrap().save(&model_ref).unwrap();
+
+    let ck = dir.join("fit-ck.bin");
+    std::fs::remove_file(&ck).ok();
+    let mut interrupted = TsneRunner::new(cfg.clone());
+    interrupted.set_checkpoint(Some(CheckpointSpec { path: ck.clone(), every: 20, resume: false }));
+    fault::inject(Fault::StopIter { iter: 45 });
+    assert!(interrupted.fit(&x, 4).is_err());
+
+    let model_res = dir.join("res.bhsne");
+    let mut resumed = TsneRunner::new(cfg.clone());
+    resumed.set_checkpoint(Some(CheckpointSpec { path: ck, every: 20, resume: true }));
+    resumed.fit(&x, 4).unwrap().save(&model_res).unwrap();
+
+    assert_eq!(
+        std::fs::read(&model_ref).unwrap(),
+        std::fs::read(&model_res).unwrap(),
+        "resumed .bhsne file differs from the uninterrupted run's"
+    );
+    fault::clear();
+}
+
+#[test]
+fn checkpoint_from_a_different_run_is_rejected() {
+    let _g = serial();
+    fault::clear();
+    let dir = tmp_dir("mismatch");
+    let x = gaussian_cloud(100, 4, 5);
+    let ck = dir.join("ck.bin");
+    std::fs::remove_file(&ck).ok();
+
+    let cfg = quick_config(9);
+    let mut writer = TsneRunner::new(cfg.clone());
+    writer.set_checkpoint(Some(CheckpointSpec { path: ck.clone(), every: 20, resume: false }));
+    writer.run(&x, 4).unwrap();
+    assert!(ck.exists());
+
+    // Different config (seed participates in the fingerprint).
+    let mut other_cfg = TsneRunner::new(quick_config(10));
+    other_cfg.set_checkpoint(Some(CheckpointSpec { path: ck.clone(), every: 20, resume: true }));
+    let err = other_cfg.run(&x, 4).unwrap_err();
+    assert!(err.to_string().contains("checkpoint does not match"), "{err}");
+
+    // Different input data.
+    let mut x2 = x.clone();
+    x2[17] += 0.5;
+    let mut other_data = TsneRunner::new(cfg.clone());
+    other_data.set_checkpoint(Some(CheckpointSpec { path: ck.clone(), every: 20, resume: true }));
+    let err = other_data.run(&x2, 4).unwrap_err();
+    assert!(err.to_string().contains("checkpoint does not match"), "{err}");
+
+    // Checkpoint from beyond this run's iteration budget.
+    let mut short = TsneRunner::new(TsneConfig { iters: 30, ..cfg.clone() });
+    short.set_checkpoint(Some(CheckpointSpec { path: ck.clone(), every: 20, resume: true }));
+    let err = short.run(&x, 4).unwrap_err();
+    assert!(err.to_string().contains("checkpoint does not match"), "{err}");
+
+    // A missing checkpoint file starts fresh instead of failing.
+    let mut fresh = TsneRunner::new(cfg);
+    fresh.set_checkpoint(Some(CheckpointSpec {
+        path: dir.join("never-written.bin"),
+        every: 20,
+        resume: true,
+    }));
+    let y = fresh.run(&x, 4).unwrap();
+    assert!(fresh.stats.resumed_at.is_none());
+    assert!(y.iter().all(|v| v.is_finite()));
+}
+
+// ---------------------------------------------------------------------
+// Numerical-health watchdog
+// ---------------------------------------------------------------------
+
+#[test]
+fn grad_nan_recovers_via_rollback_and_backoff() {
+    let _g = serial();
+    fault::clear();
+    let x = gaussian_cloud(140, 4, 31);
+    let mut runner = TsneRunner::new(quick_config(13));
+    fault::inject(Fault::GradNan { iter: 30 });
+    let y = runner.run(&x, 4).unwrap();
+    assert_eq!(runner.stats.recoveries, 1);
+    assert!(!runner.stats.degraded_to_bh, "BH run must back off eta, not degrade");
+    assert!(y.iter().all(|v| v.is_finite()));
+    let kl = runner.stats.final_kl.expect("cost probes ran");
+    assert!(kl.is_finite() && kl >= 0.0, "KL {kl}");
+    fault::clear();
+}
+
+#[test]
+fn embed_nan_on_interp_run_degrades_to_barnes_hut() {
+    let _g = serial();
+    fault::clear();
+    let x = gaussian_cloud(140, 4, 37);
+    let cfg = TsneConfig {
+        repulsion: Some(RepulsionMethod::Interpolation { intervals: 16 }),
+        ..quick_config(17)
+    };
+    let mut runner = TsneRunner::new(cfg);
+    fault::inject(Fault::EmbedNan { iter: 30 });
+    let y = runner.run(&x, 4).unwrap();
+    assert!(runner.stats.recoveries >= 1);
+    assert!(runner.stats.degraded_to_bh, "interp run must degrade to BH before eta backoff");
+    assert!(y.iter().all(|v| v.is_finite()));
+    assert!(runner.stats.final_kl.expect("cost probes ran").is_finite());
+    fault::clear();
+}
+
+#[test]
+fn persistent_faults_exhaust_into_structured_diverged_error() {
+    let _g = serial();
+    fault::clear();
+    let x = gaussian_cloud(120, 4, 41);
+    let mut runner = TsneRunner::new(quick_config(19));
+    // Each one-shot fault re-fires on the rollback replay of iteration
+    // 10; the fourth trips the retry budget (MAX_RETRIES = 3).
+    for _ in 0..4 {
+        fault::inject(Fault::GradNan { iter: 10 });
+    }
+    let err = runner.run(&x, 4).unwrap_err();
+    assert!(err.to_string().contains("optimization diverged"), "{err}");
+    assert_eq!(runner.stats.recoveries, 3);
+    fault::clear();
+}
+
+// ---------------------------------------------------------------------
+// Atomic publishes under write faults
+// ---------------------------------------------------------------------
+
+#[test]
+fn checkpoint_write_cut_at_every_offset_never_corrupts_the_target() {
+    let _g = serial();
+    fault::clear();
+    let dir = tmp_dir("torn-ckpt");
+    let path = dir.join("ck.bin");
+    let tmp = dir.join("ck.bin.tmp");
+    let ck = RunCheckpoint {
+        iter: 40,
+        n: 6,
+        dim: 2,
+        eta: 180.0,
+        retries: 1,
+        fingerprint: 0xDEAD_BEEF_0BAD_F00D,
+        rng_state: 0x0123_4567_89AB_CDEF,
+        rng_inc: 0x2B47_FED8_8766_BB05,
+        y: (0..12).map(|i| i as f32 * 0.5 - 3.0).collect(),
+        velocity: (0..12).map(|i| i as f64 * -0.25).collect(),
+        gains: (0..12).map(|i| 1.0 + i as f64 * 0.1).collect(),
+    };
+    io::write_checkpoint(&path, &ck).unwrap();
+    let reference = std::fs::read(&path).unwrap();
+
+    // Cut the write at every offset (and past the end, where the fault
+    // never fires and the save must simply succeed bit-identically).
+    for offset in 0..(reference.len() as u64 + 96) {
+        fault::inject(Fault::WriteErr { offset });
+        let res = io::write_checkpoint(&path, &ck);
+        assert!(!tmp.exists(), "temp litter at offset {offset}");
+        assert_eq!(
+            std::fs::read(&path).unwrap(),
+            reference,
+            "target corrupted by a write cut at offset {offset}"
+        );
+        if (offset as usize) < reference.len() {
+            assert!(res.is_err(), "cut inside the file must fail the save (offset {offset})");
+        }
+        fault::clear();
+    }
+    assert_eq!(io::read_checkpoint(&path).unwrap(), ck);
+
+    // A fresh target that never finished writing must stay absent.
+    let fresh = dir.join("fresh.bin");
+    for offset in [0u64, 5, 60] {
+        fault::inject(Fault::WriteErr { offset });
+        assert!(io::write_checkpoint(&fresh, &ck).is_err());
+        assert!(!fresh.exists(), "torn first write published a file (offset {offset})");
+        fault::clear();
+    }
+    io::write_checkpoint(&fresh, &ck).unwrap();
+    assert_eq!(io::read_checkpoint(&fresh).unwrap(), ck);
+}
+
+#[test]
+fn model_save_survives_write_cuts_at_sampled_offsets() {
+    let _g = serial();
+    fault::clear();
+    let dir = tmp_dir("torn-model");
+    let path = dir.join("m.bhsne");
+    let tmp = dir.join("m.bhsne.tmp");
+
+    let x = gaussian_cloud(60, 4, 47);
+    let mut runner = TsneRunner::new(TsneConfig { iters: 25, ..quick_config(29) });
+    let model = runner.fit(&x, 4).unwrap();
+    model.save(&path).unwrap();
+    let reference = std::fs::read(&path).unwrap();
+
+    // Same atomic sink as the full-sweep checkpoint test; sample the
+    // (much larger) model file: every offset through the header and
+    // first frames, a stride through the body, and the tail.
+    let len = reference.len() as u64;
+    let offsets = (0..256u64).chain((256..len).step_by(97)).chain(len.saturating_sub(64)..len);
+    for offset in offsets {
+        fault::inject(Fault::WriteErr { offset });
+        assert!(model.save(&path).is_err(), "offset {offset}");
+        assert!(!tmp.exists(), "temp litter at offset {offset}");
+        assert_eq!(
+            std::fs::read(&path).unwrap(),
+            reference,
+            "model corrupted by a write cut at offset {offset}"
+        );
+        fault::clear();
+    }
+    model.save(&path).unwrap();
+    assert_eq!(std::fs::read(&path).unwrap(), reference);
+    bhsne::sne::TsneModel::load(&path).unwrap();
+}
+
+// ---------------------------------------------------------------------
+// Input front door + degenerate clouds
+// ---------------------------------------------------------------------
+
+#[test]
+fn non_finite_and_misshapen_inputs_are_rejected_up_front() {
+    let _g = serial();
+    fault::clear();
+    let mut x = gaussian_cloud(50, 4, 53);
+    x[4 * 7 + 2] = f32::NAN;
+    let err = TsneRunner::new(quick_config(1)).run(&x, 4).unwrap_err();
+    assert!(err.to_string().contains("non-finite input value at row 7, col 2"), "{err}");
+
+    let err = TsneRunner::new(quick_config(1)).run(&[1.0, 2.0, 3.0], 2).unwrap_err();
+    assert!(err.to_string().contains("not divisible by dim"), "{err}");
+
+    let err = TsneRunner::new(quick_config(1)).run(&[1.0, 2.0], 2).unwrap_err();
+    assert!(err.to_string().contains("at least 2 points"), "{err}");
+
+    let cfg = TsneConfig { out_dim: 4, ..quick_config(1) };
+    let err = TsneRunner::new(cfg).run(&gaussian_cloud(50, 4, 53), 4).unwrap_err();
+    assert!(err.to_string().contains("out_dim must be 2 or 3"), "{err}");
+}
+
+#[test]
+fn transform_handles_empty_batch_and_rejects_nan_queries() {
+    let _g = serial();
+    fault::clear();
+    let x = gaussian_cloud(60, 4, 59);
+    let mut runner = TsneRunner::new(TsneConfig { iters: 25, ..quick_config(2) });
+    let model = runner.fit(&x, 4).unwrap();
+    let pool = ThreadPool::new(2);
+
+    let r = model.transform_with(&pool, &[], 4, &TransformOptions::default()).unwrap();
+    assert!(r.y.is_empty());
+    assert!(r.nn_input.is_empty());
+
+    let err = model
+        .transform_with(&pool, &[0.1, f32::NAN, 0.3, 0.4], 4, &TransformOptions::default())
+        .unwrap_err();
+    assert!(err.to_string().contains("non-finite input value at row 0, col 1"), "{err}");
+
+    let err = model
+        .transform_with(&pool, &[0.1, 0.2, 0.3], 4, &TransformOptions::default())
+        .unwrap_err();
+    assert!(err.to_string().contains("not divisible by dim"), "{err}");
+}
+
+#[test]
+fn duplicate_only_cloud_embeds_under_all_force_methods() {
+    let _g = serial();
+    fault::clear();
+    // Forty copies of one point: every pairwise distance is zero, the
+    // perplexity solve falls back to uniform rows, and the spatial
+    // structures must collapse the coincident points instead of hanging.
+    let mut x = Vec::with_capacity(40 * 3);
+    for _ in 0..40 {
+        x.extend_from_slice(&[1.5f32, -2.0, 0.25]);
+    }
+    for method in [
+        RepulsionMethod::Exact,
+        RepulsionMethod::BarnesHut { theta: 0.5 },
+        RepulsionMethod::Interpolation { intervals: 16 },
+    ] {
+        let cfg = TsneConfig {
+            perplexity: 5.0,
+            iters: 30,
+            exaggeration_iters: 10,
+            cost_every: 10,
+            repulsion: Some(method),
+            ..TsneConfig::default()
+        };
+        let mut runner = TsneRunner::new(cfg);
+        let y = runner.run(&x, 3).unwrap();
+        assert_eq!(y.len(), 40 * 2);
+        assert!(y.iter().all(|v| v.is_finite()), "{method:?} produced non-finite output");
+    }
+}

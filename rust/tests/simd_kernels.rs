@@ -242,6 +242,48 @@ fn interp_repulsion_simd_matches_scalar_bitwise() {
 }
 
 #[test]
+fn sumsq_kernels_match_scalar_bitwise() {
+    let mut rng = Pcg32::seeded(91);
+    for n in (0usize..=17).chain([64, 300, 1001]) {
+        let xs64: Vec<f64> = (0..n).map(|_| rng.normal() * 10.0).collect();
+        let xs32: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 10.0).collect();
+        // Portable oracle: lane-blocked accumulation, fixed-order reduce.
+        let mut acc = [0f64; simd::LANES];
+        for (i, &v) in xs64.iter().enumerate() {
+            acc[i % simd::LANES] += v * v;
+        }
+        let want64 = simd::reduce_lanes(&acc);
+        let mut acc = [0f64; simd::LANES];
+        for (i, &v) in xs32.iter().enumerate() {
+            acc[i % simd::LANES] += v as f64 * v as f64;
+        }
+        let want32 = simd::reduce_lanes(&acc);
+        for be in simd::test_backends() {
+            assert_eq!(simd::sumsq_f64(be, &xs64).to_bits(), want64.to_bits(), "n={n} be={be:?}");
+            assert_eq!(simd::sumsq_f32(be, &xs32).to_bits(), want32.to_bits(), "n={n} be={be:?}");
+        }
+    }
+}
+
+#[test]
+fn sumsq_kernels_propagate_non_finite() {
+    for n in [1usize, 7, 9, 64, 129] {
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            for pos in [0, n / 2, n - 1] {
+                let mut xs64 = vec![1.0f64; n];
+                xs64[pos] = bad;
+                let mut xs32 = vec![1.0f32; n];
+                xs32[pos] = bad as f32;
+                for be in simd::test_backends() {
+                    assert!(!simd::sumsq_f64(be, &xs64).is_finite(), "n={n} pos={pos}");
+                    assert!(!simd::sumsq_f32(be, &xs32).is_finite(), "n={n} pos={pos}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn full_bh_gradient_simd_matches_scalar_bitwise() {
     let pool = ThreadPool::new(4);
     let mut rng = Pcg32::seeded(37);

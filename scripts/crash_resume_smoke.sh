@@ -1,0 +1,88 @@
+#!/usr/bin/env bash
+# Crash-resume drill over the real binary: kill a fit mid-run with the
+# fault-injection env hook, resume it from the on-disk checkpoint, and
+# hold the resume contract:
+#
+#   1. The killed run dies hard (abort, non-zero exit) but leaves a
+#      checkpoint behind.
+#   2. The resumed run completes, its KL trajectory is finite and
+#      decreasing, and its final KL is a finite number.
+#   3. The resumed run's .bhsne model is byte-identical to the model of
+#      an uninterrupted reference run — resume is bit-exact, not merely
+#      "close".
+#   4. The resumed model round-trips: `bhsne transform` loads it and
+#      places held-out points (the binary itself asserts placements are
+#      finite).
+#
+#   bash scripts/crash_resume_smoke.sh [out_dir]
+#
+# Requires the release binary (cargo build --release). Override its
+# location with BHSNE_BIN.
+set -u
+
+BIN="${BHSNE_BIN:-target/release/bhsne}"
+OUT="${1:-out/crash_drill}"
+if [ ! -x "$BIN" ]; then
+    echo "crash_resume_smoke: $BIN not found — run: cargo build --release" >&2
+    exit 1
+fi
+rm -rf "$OUT"
+mkdir -p "$OUT"
+
+# Short everything: small corpus, 120 iterations, checkpoint every 25,
+# killed at iteration 60 (so the resume starts from checkpoint 50).
+COMMON=(--dataset gaussians --n 400 --perplexity 10 --iters 120
+    --exaggeration-iters 40 --cost-every 20 --seed 9 --threads 2
+    --snapshot-every 40)
+
+fail() {
+    echo "crash_resume_smoke: FAIL: $*" >&2
+    exit 1
+}
+
+echo "== reference fit (uninterrupted) =="
+"$BIN" fit "${COMMON[@]}" --out "$OUT/ref" --model "$OUT/ref.bhsne" \
+    >"$OUT/ref.log" 2>&1 || fail "reference fit failed (see $OUT/ref.log)"
+
+echo "== killed fit (BHSNE_FAULT=kill@60) =="
+BHSNE_FAULT=kill@60 "$BIN" fit "${COMMON[@]}" --out "$OUT/killed" \
+    --model "$OUT/killed.bhsne" \
+    --checkpoint "$OUT/ck.bin" --checkpoint-every 25 \
+    >"$OUT/killed.log" 2>&1
+killed_rc=$?
+[ "$killed_rc" -ne 0 ] || fail "the kill@60 fault did not kill the run"
+[ -f "$OUT/ck.bin" ] || fail "killed run left no checkpoint behind"
+[ ! -f "$OUT/killed.bhsne" ] || fail "killed run published a model file"
+echo "   killed with exit code $killed_rc, checkpoint present"
+
+echo "== resumed fit =="
+"$BIN" fit "${COMMON[@]}" --out "$OUT/res" --model "$OUT/res.bhsne" \
+    --checkpoint "$OUT/ck.bin" --checkpoint-every 25 --resume \
+    >"$OUT/res.log" 2>&1 || fail "resumed fit failed (see $OUT/res.log)"
+grep -q "resuming from" "$OUT/res.log" || fail "resumed run did not pick up the checkpoint"
+
+# KL trajectory of the resumed run: every probe finite, last < first
+# (the first probe lands in early exaggeration, so the drop is large).
+if grep -E 'KL (NaN|-?inf)' "$OUT/res.log" >/dev/null; then
+    fail "non-finite KL probe in the resumed run's log"
+fi
+kls=$(grep -o 'KL [0-9][0-9.]*' "$OUT/res.log" | awk '{print $2}')
+[ -n "$kls" ] || fail "resumed run logged no KL probes"
+first_kl=$(printf '%s\n' "$kls" | head -n 1)
+last_kl=$(printf '%s\n' "$kls" | tail -n 1)
+awk -v a="$first_kl" -v b="$last_kl" 'BEGIN { exit !(b < a) }' \
+    || fail "KL did not decrease across the resumed run ($first_kl -> $last_kl)"
+echo "   KL $first_kl -> $last_kl (finite, decreasing)"
+
+echo "== byte-compare resumed model vs uninterrupted reference =="
+cmp "$OUT/ref.bhsne" "$OUT/res.bhsne" \
+    || fail "resumed .bhsne differs from the uninterrupted reference"
+echo "   models byte-identical"
+
+echo "== model round-trip (load + transform held-out points) =="
+"$BIN" transform --model "$OUT/res.bhsne" --dataset gaussians --n 50 --threads 2 \
+    >"$OUT/transform.log" 2>&1 || fail "transform on the resumed model failed"
+grep -q "placements finite  : true" "$OUT/transform.log" \
+    || fail "transform placements not reported finite"
+
+echo "crash_resume_smoke: PASS (killed at 60, resumed from 50, model bit-exact)"
