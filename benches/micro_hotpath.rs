@@ -3,7 +3,8 @@
 //! repulsion traversal at several θ, the combined build+traverse
 //! iteration cost, attractive forces (CPU vs XLA artifact), the §4.1
 //! input-similarity stage (vp-tree build serial vs pool-parallel,
-//! batched all-kNN, perplexity solve, streaming symmetrize), the dense
+//! batched all-kNN, HNSW build/query with recall against the exact
+//! rows, perplexity solve, streaming symmetrize), the dense
 //! exact repulsion, the grid-interpolation repulsion stages (charge
 //! spread and force gather per kernel backend, plus the full
 //! prepare→spread→convolve→gather pass), and the model-serving
@@ -22,6 +23,7 @@
 //! Run: `cargo bench --bench micro_hotpath [-- --quick --json]`
 
 use bhsne::data::synthetic::{gaussian_mixture, SyntheticSpec};
+use bhsne::knn::{recall_at_k, HnswGraph, HnswParams, KnnResult};
 use bhsne::runtime::{Runtime, SneEngine};
 use bhsne::sne::gradient;
 use bhsne::sne::sparse::Csr;
@@ -327,6 +329,36 @@ fn main() {
     });
     push("symmetrize_streaming", (symmetrize, sy10, sy90));
 
+    // ---- HNSW approximate backend on the same corpus: graph build and
+    // batched all-kNN query timed separately, recall scored against the
+    // exact vp-tree rows above (tie-robust: an approximate neighbor at
+    // the exact k-th distance counts as a hit). ----
+    let hnsw_params = HnswParams::with_m(16);
+    let hnsw_ef = 300usize;
+    let (hnsw_build, hb10, hb90) = time_reps(1, reps.min(3), || {
+        let g = HnswGraph::build(&pool, &x, n_vp, dim, &hnsw_params, 7);
+        std::hint::black_box(g.len());
+    });
+    push("hnsw_build_m16_d50", (hnsw_build, hb10, hb90));
+    let graph = HnswGraph::build(&pool, &x, n_vp, dim, &hnsw_params, 7);
+    let (hnsw_query, hq10, hq90) = time_reps(0, reps.min(3), || {
+        let (i, _) = graph.knn_all(&pool, &x, k, hnsw_ef);
+        std::hint::black_box(i[0]);
+    });
+    push("hnsw_knn90_all_ef300", (hnsw_query, hq10, hq90));
+    let (h_idx, h_dst) = graph.knn_all(&pool, &x, k, hnsw_ef);
+    let mk_result = |indices: Vec<u32>, distances: Vec<f32>, backend| KnnResult {
+        indices,
+        distances,
+        k,
+        build_secs: 0.0,
+        query_secs: 0.0,
+        backend,
+    };
+    let exact_rows = mk_result(knn_idx.clone(), knn_dst.clone(), "vptree");
+    let approx_rows = mk_result(h_idx, h_dst, "hnsw");
+    let hnsw_recall = recall_at_k(&exact_rows, &approx_rows);
+
     // ---- Model serving: frozen-reference out-of-sample transform. One
     // short fit builds the model, then held-out batches are placed into
     // the frozen map (kNN attach + perplexity row + barycenter init +
@@ -360,6 +392,9 @@ fn main() {
     table.emit(&opts);
     println!(
         "(tree refit under drift: {refit_adaptive} adaptive, {refit_fallback} full re-sorts)"
+    );
+    println!(
+        "(hnsw recall@{k} vs exact vp-tree rows: {hnsw_recall:.4} at m=16 ef={hnsw_ef})"
     );
     println!(
         "(simd kernel backend: {} ({}), lanes={}; scalar rows force the portable fallback)",
@@ -398,6 +433,9 @@ fn main() {
             "\"vp_build_serial_ns_per_point\":{:.2},",
             "\"vp_build_parallel_ns_per_point\":{:.2},",
             "\"knn_query_ns_per_point\":{:.2},",
+            "\"hnsw_build_ns_per_point\":{:.2},",
+            "\"hnsw_query_ns_per_point\":{:.2},",
+            "\"hnsw_recall_at_k\":{:.4},",
             "\"symmetrize_ns_per_point\":{:.2}}},",
             "\"table\":{}}}"
         ),
@@ -427,6 +465,9 @@ fn main() {
         per_point_vp(vp_serial),
         per_point_vp(vp_par),
         per_point_vp(knn_query),
+        per_point_vp(hnsw_build),
+        per_point_vp(hnsw_query),
+        hnsw_recall,
         per_point_vp(symmetrize),
         table.to_json(),
     );

@@ -5,13 +5,28 @@
 //! 1.1M-point / <4h claim onto this machine.
 //!
 //!     cargo run --release --example large_scale [-- max_n]
+//!
+//! Setting `BHSNE_HNSW_SMOKE=<n>` switches to the CI smoke mode instead:
+//! one n-point fit through the approximate HNSW input stage
+//! (`--knn-backend hnsw` on the CLI), asserting that the KL trace is
+//! finite and decreasing and that input-stage recall@k on a sampled
+//! subset stays at or above 0.90 against an exact linear scan.
 
+use bhsne::data::synthetic::{gaussian_mixture, SyntheticSpec};
+use bhsne::knn::{recall_at_k, HnswGraph, HnswParams, HnswScratch, KnnResult};
 use bhsne::pipeline::{run_job, JobConfig};
-use bhsne::sne::TsneConfig;
+use bhsne::sne::{KnnChoice, TsneConfig, TsneRunner};
 use bhsne::util::stats::linear_fit;
+use bhsne::util::{Pcg32, ThreadPool};
+use bhsne::vptree::{Euclidean, Metric};
+use std::cell::RefCell;
+use std::rc::Rc;
 
 fn main() -> anyhow::Result<()> {
     bhsne::util::logger::init(None);
+    if let Some(n) = std::env::var("BHSNE_HNSW_SMOKE").ok().and_then(|s| s.parse().ok()) {
+        return hnsw_smoke(n);
+    }
     let max_n: usize = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())
@@ -78,5 +93,122 @@ fn main() -> anyhow::Result<()> {
         );
     }
     println!("(paper: 70k MNIST in 645s; 1.1M TIMIT in <4h on a 2013 workstation)");
+    Ok(())
+}
+
+/// CI smoke for the approximate input stage at a few-hundred-k scale:
+/// a full fit with `KnnChoice::Hnsw`, then hard assertions on the KL
+/// trace and on sampled recall against an exact scan.
+fn hnsw_smoke(n: usize) -> anyhow::Result<()> {
+    anyhow::ensure!(n >= 1_000, "BHSNE_HNSW_SMOKE={n} too small for a meaningful smoke");
+    let dim = 24;
+    let pool = ThreadPool::for_host();
+    let t0 = std::time::Instant::now();
+    let data = gaussian_mixture(&SyntheticSpec {
+        n,
+        dim,
+        classes: 10,
+        seed: 42,
+        ..Default::default()
+    });
+    println!("smoke corpus: {n} points, dim {dim} ({:.1}s)", t0.elapsed().as_secs_f64());
+
+    // ---- Stage 1: sampled recall vs an exact linear scan. The graph is
+    // built with the same knobs and seed the fit below uses, and HNSW
+    // construction is deterministic, so this measures the exact graph
+    // the fit queries. ----
+    let k = 90usize.min(n - 1);
+    let ef = 300usize.max(k + 1);
+    let params = HnswParams::default();
+    let t0 = std::time::Instant::now();
+    let graph = HnswGraph::build(&pool, &data.x, n, dim, &params, 42);
+    println!("hnsw build: {:.1}s", t0.elapsed().as_secs_f64());
+
+    let sample = 256usize.min(n);
+    let mut rng = Pcg32::seeded(99);
+    let rows: Vec<usize> = (0..sample).map(|_| rng.below_usize(n)).collect();
+    let mut scratch = HnswScratch::new(n, graph.m(), ef);
+    let mut a_idx = vec![0u32; sample * k];
+    let mut a_dst = vec![0f32; sample * k];
+    let mut e_idx = vec![0u32; sample * k];
+    let mut e_dst = vec![0f32; sample * k];
+    let t0 = std::time::Instant::now();
+    for (s, &row) in rows.iter().enumerate() {
+        let q = &data.x[row * dim..(row + 1) * dim];
+        let got = graph.knn_into(
+            &data.x,
+            q,
+            k,
+            ef,
+            Some(row as u32),
+            &mut scratch,
+            &mut a_idx[s * k..(s + 1) * k],
+            &mut a_dst[s * k..(s + 1) * k],
+        );
+        anyhow::ensure!(got == k, "hnsw returned a short row ({got} < {k})");
+        // Exact top-k by linear scan (the oracle).
+        let mut all: Vec<(f32, u32)> = (0..n as u32)
+            .filter(|&j| j != row as u32)
+            .map(|j| (Euclidean.dist(q, &data.x[j as usize * dim..(j as usize + 1) * dim]), j))
+            .collect();
+        all.select_nth_unstable_by(k - 1, |a, b| {
+            a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1))
+        });
+        all.truncate(k);
+        all.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        for (j, &(d, i)) in all.iter().enumerate() {
+            e_idx[s * k + j] = i;
+            e_dst[s * k + j] = d;
+        }
+    }
+    let mk = |indices, distances, backend| KnnResult {
+        indices,
+        distances,
+        k,
+        build_secs: 0.0,
+        query_secs: 0.0,
+        backend,
+    };
+    let recall = recall_at_k(&mk(e_idx, e_dst, "brute"), &mk(a_idx, a_dst, "hnsw"));
+    println!("recall@{k} on {sample} sampled rows: {recall:.4} ({:.1}s)", t0.elapsed().as_secs_f64());
+    anyhow::ensure!(recall >= 0.90, "hnsw recall {recall:.4} below the 0.90 smoke bar");
+
+    // ---- Stage 2: the full fit through the hnsw input stage, KL traced
+    // through the iteration observer. ----
+    let cfg = TsneConfig {
+        iters: 150,
+        exaggeration_iters: 50,
+        cost_every: 25,
+        knn: KnnChoice::Hnsw,
+        seed: 42,
+        ..Default::default()
+    };
+    let mut runner = TsneRunner::with_pool(cfg, pool);
+    let kls: Rc<RefCell<Vec<f64>>> = Rc::new(RefCell::new(Vec::new()));
+    let sink = Rc::clone(&kls);
+    runner.set_observer(Box::new(move |s, _y| {
+        if let Some(kl) = s.kl {
+            sink.borrow_mut().push(kl);
+        }
+    }));
+    let t0 = std::time::Instant::now();
+    let y = runner.run(&data.x, dim)?;
+    println!(
+        "fit: {:.1}s (input stage backend {}, knn {:.1}s)",
+        t0.elapsed().as_secs_f64(),
+        runner.stats.input_stage.backend,
+        runner.stats.input_stage.knn_secs
+    );
+    anyhow::ensure!(runner.stats.input_stage.backend == "hnsw", "fit did not use the hnsw backend");
+    anyhow::ensure!(y.iter().all(|v| v.is_finite()), "non-finite embedding coordinates");
+    let kls = kls.borrow();
+    println!("KL trace: {:?}", &kls[..]);
+    anyhow::ensure!(kls.len() >= 2, "KL trace too short ({} samples)", kls.len());
+    anyhow::ensure!(kls.iter().all(|kl| kl.is_finite()), "non-finite KL in trace");
+    anyhow::ensure!(
+        kls.last().unwrap() < kls.first().unwrap(),
+        "KL did not decrease over the run: {kls:?}"
+    );
+    println!("hnsw smoke passed: recall {recall:.4}, final KL {:.4}", kls.last().unwrap());
     Ok(())
 }

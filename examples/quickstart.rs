@@ -9,6 +9,11 @@
 //! three approximate methods.
 //!
 //!     cargo run --release --example quickstart
+//!
+//! At this size the exact vp-tree input stage is instant; for
+//! million-point-direction inputs, switch the CLI to the approximate
+//! graph backend with `bhsne embed --knn-backend hnsw` (knobs `--knn-m`
+//! and `--knn-ef`; see `examples/large_scale.rs` for the scaling study).
 
 use bhsne::data::synthetic::{gaussian_mixture, SyntheticSpec};
 use bhsne::eval;

@@ -3,7 +3,7 @@
 //! versioned model format `bhsne fit` persists and the run-checkpoint
 //! format the crash-safe run layer writes.
 //!
-//! # Model format (`.bhsne`, version 2)
+//! # Model format (`.bhsne`, version 3)
 //!
 //! Little-endian throughout: a magic + version header followed by framed
 //! sections, each `tag:u32, payload_len:u64, crc32:u32, payload`, closed
@@ -28,8 +28,19 @@
 //!   + resumed run and an uninterrupted one, and a `.bhsne` file is
 //!   required to be a pure function of (data, config).
 //!
+//! Version 3 changes (the pluggable kNN backend):
+//! - The CONFIG payload gains the kNN backend tag value 2 (HNSW) and two
+//!   trailing u32 knobs (`knn_ef`, `knn_m`).
+//! - A new optional HNSW section persists the fitted approximate-kNN
+//!   graph ([`crate::knn::HnswGraph`]), so an HNSW-fitted model serves
+//!   `transform` queries with no rebuild.
+//! - Raw byte payloads stream through the same bounded 64 KiB window on
+//!   the **read** side as the writer uses, so loading a large `.bhsne`
+//!   never materializes a section as one transient buffer (and a corrupt
+//!   length cannot pre-allocate unbounded memory).
+//!
 //! Version policy: the reader accepts exactly the versions it knows how
-//! to parse (currently 2) and rejects anything else — adding sections or
+//! to parse (currently 3) and rejects anything else — adding sections or
 //! changing payloads bumps the version, and old readers fail with a
 //! clear "unsupported version" error rather than misparse. Checkpoint
 //! files carry their own magic + version under the same policy.
@@ -160,6 +171,7 @@ pub fn read_snapshot(path: impl AsRef<Path>) -> Result<Snapshot> {
 // Model format
 // ---------------------------------------------------------------------
 
+use crate::knn::HnswGraph;
 use crate::pca::Pca;
 use crate::sne::input::InputStageStats;
 use crate::sne::sparse::Csr;
@@ -168,7 +180,7 @@ use crate::spatial::CellSizeMode;
 use crate::vptree::VpArena;
 
 const MODEL_MAGIC: u32 = 0x4d53_4842; // "BHSM" read little-endian
-const MODEL_VERSION: u32 = 2;
+const MODEL_VERSION: u32 = 3;
 
 const SEC_END: u32 = 0;
 const SEC_CONFIG: u32 = 1;
@@ -179,6 +191,7 @@ const SEC_EMBED: u32 = 5;
 const SEC_LABELS: u32 = 6;
 const SEC_STATS: u32 = 7;
 const SEC_PCA: u32 = 8;
+const SEC_HNSW: u32 = 9;
 
 /// Hard cap on a single section payload (16 GiB) — rejects implausible
 /// lengths from corrupt headers before allocating.
@@ -425,6 +438,29 @@ fn read_f32s<R: Read>(r: &mut SectionReader<'_, R>, count: usize) -> Result<Vec<
     Ok(out)
 }
 
+/// Read `count` raw bytes through the bounded 64 KiB window — the read
+/// twin of the streamed section writer. The capacity hint is capped, so
+/// a corrupt length errors (via the remaining-bytes bound) instead of
+/// pre-allocating unbounded memory, and the payload never exists as a
+/// transient buffer beyond its final destination.
+fn read_bytes<R: Read>(r: &mut SectionReader<'_, R>, count: usize) -> Result<Vec<u8>> {
+    anyhow::ensure!(
+        count <= r.remaining(),
+        "byte array of {count} exceeds section payload ({} bytes left)",
+        r.remaining()
+    );
+    let mut out = Vec::with_capacity(count.min(1 << 20));
+    let mut buf = [0u8; WRITE_CHUNK_ELEMS * 4];
+    let mut left = count;
+    while left > 0 {
+        let take = left.min(buf.len());
+        r.read_exact(&mut buf[..take])?;
+        out.extend_from_slice(&buf[..take]);
+        left -= take;
+    }
+    Ok(out)
+}
+
 fn write_u32s(w: &mut impl Write, xs: &[u32]) -> std::io::Result<()> {
     let mut buf = [0u8; WRITE_CHUNK_ELEMS * 4];
     for chunk in xs.chunks(WRITE_CHUNK_ELEMS) {
@@ -515,8 +551,11 @@ fn encode_config(cfg: &TsneConfig) -> Vec<u8> {
     let knn_tag: u8 = match cfg.knn {
         KnnChoice::VpTree => 0,
         KnnChoice::Brute => 1,
+        KnnChoice::Hnsw => 2,
     };
     write_u8(w, knn_tag).unwrap();
+    w.write_u32::<LittleEndian>(cfg.knn_ef as u32).unwrap();
+    w.write_u32::<LittleEndian>(cfg.knn_m as u32).unwrap();
     let cell_tag: u8 = match cfg.cell_size {
         CellSizeMode::Diagonal => 0,
         CellSizeMode::MaxWidth => 1,
@@ -548,8 +587,11 @@ fn decode_config(r: &mut impl Read) -> Result<TsneConfig> {
     let knn = match read_u8(r)? {
         0 => KnnChoice::VpTree,
         1 => KnnChoice::Brute,
+        2 => KnnChoice::Hnsw,
         other => bail!("unknown knn tag {other}"),
     };
+    let knn_ef = r.read_u32::<LittleEndian>()? as usize;
+    let knn_m = r.read_u32::<LittleEndian>()? as usize;
     let cell_size = match read_u8(r)? {
         0 => CellSizeMode::Diagonal,
         1 => CellSizeMode::MaxWidth,
@@ -567,6 +609,8 @@ fn decode_config(r: &mut impl Read) -> Result<TsneConfig> {
         seed,
         repulsion,
         knn,
+        knn_ef,
+        knn_m,
         cell_size,
         cost_every,
     })
@@ -708,6 +752,13 @@ pub fn write_model(path: impl AsRef<Path>, model: &TsneModel) -> Result<()> {
             })?;
         }
 
+        if let Some(hnsw) = &model.hnsw {
+            write_section_streaming(w, SEC_HNSW, |b| {
+                hnsw.write_into(b)?;
+                Ok(())
+            })?;
+        }
+
         write_section_streaming(w, SEC_END, |_| Ok(()))?;
         Ok(())
     })
@@ -739,6 +790,7 @@ pub fn read_model(path: impl AsRef<Path>) -> Result<TsneModel> {
     let mut labels: Option<Vec<u8>> = None;
     let mut stats: Option<RunStats> = None;
     let mut pca: Option<Pca> = None;
+    let mut hnsw: Option<HnswGraph> = None;
 
     loop {
         let tag = r.read_u32::<LittleEndian>().context("model truncated before END section")?;
@@ -776,12 +828,12 @@ pub fn read_model(path: impl AsRef<Path>) -> Result<TsneModel> {
                     embedding = Some((n, od, read_f32s(&mut sr, n * od)?));
                 }
                 SEC_LABELS => {
-                    let mut v = vec![0u8; sr.remaining()];
-                    sr.read_exact(&mut v)?;
-                    labels = Some(v);
+                    let count = sr.remaining();
+                    labels = Some(read_bytes(&mut sr, count)?);
                 }
                 SEC_STATS => stats = Some(decode_stats(&mut sr)?),
                 SEC_PCA => pca = Some(decode_pca(&mut sr)?),
+                SEC_HNSW => hnsw = Some(HnswGraph::read_from(&mut sr)?),
                 other => bail!("unknown model section tag {other} (version {version})"),
             }
             // Fail-loudly contract: a decoder that leaves bytes behind
@@ -830,7 +882,11 @@ pub fn read_model(path: impl AsRef<Path>) -> Result<TsneModel> {
         "labels length {} != data rows {n}",
         labels.len()
     );
-    Ok(TsneModel { config, dim, n, x, labels, pca, vp, p, embedding, stats })
+    if let Some(g) = &hnsw {
+        anyhow::ensure!(g.len() == n, "hnsw graph size {} != data rows {n}", g.len());
+        anyhow::ensure!(g.dim() == dim, "hnsw graph dim {} != data dim {dim}", g.dim());
+    }
+    Ok(TsneModel { config, dim, n, x, labels, pca, vp, hnsw, p, embedding, stats })
 }
 
 // ---------------------------------------------------------------------
@@ -1113,10 +1169,24 @@ mod tests {
             labels,
             pca,
             vp,
+            hnsw: None,
             p,
             embedding,
             stats,
         }
+    }
+
+    /// tiny_model plus a fitted HNSW graph riding in the optional section.
+    fn tiny_model_with_hnsw() -> TsneModel {
+        let mut model = tiny_model(false);
+        model.config.knn = crate::sne::KnnChoice::Hnsw;
+        model.config.knn_ef = 173;
+        model.config.knn_m = 8;
+        let pool = crate::util::ThreadPool::new(1);
+        let params = crate::knn::HnswParams::with_m(8);
+        model.hnsw =
+            Some(crate::knn::HnswGraph::build(&pool, &model.x, model.n, model.dim, &params, 77));
+        model
     }
 
     fn assert_models_equal(a: &TsneModel, b: &TsneModel) {
@@ -1137,6 +1207,8 @@ mod tests {
         assert_eq!(a.config.seed, b.config.seed);
         assert_eq!(a.config.repulsion, b.config.repulsion);
         assert_eq!(a.config.knn, b.config.knn);
+        assert_eq!(a.config.knn_ef, b.config.knn_ef);
+        assert_eq!(a.config.knn_m, b.config.knn_m);
         assert_eq!(a.config.cell_size, b.config.cell_size);
         assert_eq!(a.config.cost_every, b.config.cost_every);
         assert_eq!(a.stats.iters, b.stats.iters);
@@ -1149,6 +1221,7 @@ mod tests {
             assert_eq!(pa.eigenvalues, pb.eigenvalues);
             assert_eq!((pa.dim, pa.k), (pb.dim, pb.k));
         }
+        assert_eq!(a.hnsw, b.hnsw, "hnsw graph not bit-identical");
     }
 
     #[test]
@@ -1165,6 +1238,22 @@ mod tests {
             assert_eq!(back.stats.total_secs, 0.0);
             std::fs::remove_file(&path).ok();
         }
+    }
+
+    /// An HNSW-fitted model round-trips its graph section bit-identically
+    /// (v3 format: SEC_HNSW plus knn_ef/knn_m in the config payload), and
+    /// a model without the section loads with `hnsw: None`.
+    #[test]
+    fn model_roundtrip_with_hnsw_graph() {
+        let model = tiny_model_with_hnsw();
+        let path = tmp("model-hnsw.bhsne");
+        write_model(&path, &model).unwrap();
+        let back = read_model(&path).unwrap();
+        assert!(back.hnsw.is_some());
+        assert_eq!(back.config.knn, crate::sne::KnnChoice::Hnsw);
+        assert_eq!((back.config.knn_ef, back.config.knn_m), (173, 8));
+        assert_models_equal(&model, &back);
+        std::fs::remove_file(&path).ok();
     }
 
     /// Every repulsion variant survives the config tag/param encoding,

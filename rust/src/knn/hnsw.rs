@@ -1,0 +1,996 @@
+//! HNSW approximate k-nearest-neighbor graph (Malkov & Yashunin 2016)
+//! — the input-stage backend that takes the §4.1 similarity computation
+//! from exact O(uN log N) with a large constant to approximate
+//! near-linear cost, the step GPGPU-SNE (arXiv 1805.10817) identifies as
+//! what unlocks million-point t-SNE end to end.
+//!
+//! Design constraints inherited from the rest of the codebase:
+//!
+//! * **Deterministic across thread counts.** Every stochastic choice —
+//!   the per-point level draws — is precomputed up front from one seeded
+//!   stream (the same replay discipline as the vp-tree's
+//!   `vantage_picks`). The build then proceeds in *frozen generations*:
+//!   points are inserted in index order in generations of geometrically
+//!   doubling size; within a generation every point's candidate search
+//!   runs pool-parallel against the read-only graph of prior
+//!   generations, and the resulting links (including back-links and
+//!   their pruning) are applied serially in index order. The adjacency
+//!   arrays are therefore a pure function of `(x, n, dim, knobs, seed)`
+//!   — **bitwise-equal across thread counts** (tested), like every other
+//!   parallel path in the repo.
+//! * **Zero-allocation queries.** All per-query state lives in a
+//!   reusable [`HnswScratch`] (visited-epoch stamps, candidate min-heap,
+//!   result [`NeighborHeap`], batch-gather buffers) following the PR-2
+//!   [`crate::vptree::SearchScratch`] contract, with a `capacities()`
+//!   snapshot for the no-alloc assertions.
+//! * **Batched metric evaluation.** Neighbor expansions gather the
+//!   unvisited adjacency row and evaluate it through
+//!   [`Metric::dist_batch`] — one kernel dispatch per expansion instead
+//!   of one per distance.
+//! * **Quality measured, never assumed.** The exact vp-tree stays the
+//!   recall oracle: [`crate::knn::recall_at_k`] scores every approximate
+//!   result set against it, the bench emits `hnsw_recall_at_k`, and CI
+//!   gates it ≥ 0.90.
+//!
+//! The graph serializes like [`crate::vptree::VpArena`] (raw
+//! little-endian records, validated on read), so a fitted model carries
+//! it in the `.bhsne` file and serves `transform` queries with no
+//! rebuild.
+
+use super::{KnnBackend, KnnResult};
+use crate::util::pool::SendPtr;
+use crate::util::{Pcg32, Stopwatch, ThreadPool};
+use crate::vptree::{Euclidean, Metric, NeighborHeap};
+use byteorder::{LittleEndian, ReadBytesExt, WriteBytesExt};
+
+/// Default max links per node per layer (the paper's M). Layer 0 keeps
+/// up to 2M.
+pub const DEFAULT_M: usize = 16;
+/// Default search breadth (ef_search). Sized for the t-SNE input stage,
+/// where k = ⌊3·perplexity⌋ = 90 at the default perplexity: recall@90
+/// ≥ 0.90 needs a comfortable margin over k.
+pub const DEFAULT_EF_SEARCH: usize = 300;
+/// Floor for the construction-time search breadth.
+const EF_CONSTRUCTION_MIN: usize = 100;
+/// Level draws above this are clamped (P < M^-24 at any sane M).
+const MAX_LEVEL: usize = 24;
+/// RNG stream for the level draws ("hl").
+const LEVEL_STREAM: u64 = 0x686c;
+/// First generation size; later generations double.
+const GEN_MIN: usize = 32;
+
+const NO_LINK: u32 = u32::MAX;
+
+/// Construction knobs for [`HnswGraph::build`].
+#[derive(Debug, Clone, Copy)]
+pub struct HnswParams {
+    /// Max links per node per layer (layer 0 keeps 2M).
+    pub m: usize,
+    /// Candidate-list breadth while wiring each new point in.
+    pub ef_construction: usize,
+}
+
+impl Default for HnswParams {
+    fn default() -> Self {
+        HnswParams::with_m(DEFAULT_M)
+    }
+}
+
+impl HnswParams {
+    /// Params from the user-facing `tsne.knn_m` knob alone;
+    /// `ef_construction` derives from it.
+    pub fn with_m(m: usize) -> Self {
+        HnswParams { m, ef_construction: EF_CONSTRUCTION_MIN.max(2 * m) }
+    }
+}
+
+/// A layered navigable-small-world graph over a borrowed row-major
+/// dataset (the graph stores adjacency only, like [`crate::vptree::VpArena`]
+/// stores nodes only — callers pass the rows back in to query).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HnswGraph {
+    n: usize,
+    dim: usize,
+    m: u32,
+    max_level: u8,
+    /// Entry point: the lowest-indexed point whose level reached
+    /// `max_level` first during the serial link application.
+    entry: u32,
+    /// Per-point layer draw (0 = base layer only).
+    levels: Vec<u8>,
+    /// Layer-0 adjacency, stride `2m`, `NO_LINK`-padded.
+    base: Vec<u32>,
+    /// Slot offset of each point's upper-layer adjacency in `upper`
+    /// (stride `m` per layer, layers 1..=level); `NO_LINK` for
+    /// level-0 points.
+    upper_off: Vec<u32>,
+    /// Upper-layer adjacency, `NO_LINK`-padded.
+    upper: Vec<u32>,
+}
+
+/// Reusable per-worker query/build scratch: zero heap allocations on a
+/// warm scratch (PR-2 contract; `capacities()` is the assertion hook).
+#[derive(Debug)]
+pub struct HnswScratch {
+    /// Visited stamps, one per dataset point, compared against `epoch`.
+    stamp: Vec<u32>,
+    epoch: u32,
+    /// Candidate min-heap ordered by `(distance, index)`.
+    cand: Vec<(f32, u32)>,
+    /// Result set of the layer search (bounded max-heap of size ef).
+    found: NeighborHeap,
+    /// Unvisited-neighbor gather for one batched metric call.
+    batch_ids: Vec<u32>,
+    batch_d: Vec<f32>,
+    /// Drained sorted layer-search results.
+    out_idx: Vec<u32>,
+    out_dst: Vec<f32>,
+    /// Heuristic-selection kept / passed-over lists ((dist, idx)).
+    keep: Vec<(f32, u32)>,
+    skipped: Vec<(f32, u32)>,
+}
+
+impl HnswScratch {
+    /// Scratch for queries over `n` points with up-to-`ef` searches on a
+    /// graph with `m` links per node.
+    pub fn new(n: usize, m: usize, ef: usize) -> Self {
+        let ef = ef.max(1);
+        HnswScratch {
+            stamp: vec![0u32; n],
+            epoch: 0,
+            cand: Vec::with_capacity(ef * 2),
+            found: NeighborHeap::new(ef),
+            batch_ids: Vec::with_capacity(2 * m),
+            batch_d: vec![0f32; 2 * m],
+            out_idx: vec![0u32; ef],
+            out_dst: vec![0f32; ef],
+            keep: Vec::with_capacity(m),
+            skipped: Vec::with_capacity(ef),
+        }
+    }
+
+    /// Capacity snapshot — warm queries must leave it unchanged.
+    pub fn capacities(&self) -> [usize; 7] {
+        [
+            self.stamp.len(),
+            self.cand.capacity(),
+            self.found.capacity(),
+            self.batch_ids.capacity(),
+            self.out_idx.len(),
+            self.keep.capacity(),
+            self.skipped.capacity(),
+        ]
+    }
+
+    fn next_epoch(&mut self) {
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            self.stamp.iter_mut().for_each(|s| *s = 0);
+            self.epoch = 1;
+        }
+    }
+
+    #[inline]
+    fn visited(&self, i: u32) -> bool {
+        self.stamp[i as usize] == self.epoch
+    }
+
+    #[inline]
+    fn mark(&mut self, i: u32) {
+        self.stamp[i as usize] = self.epoch;
+    }
+}
+
+/// Min-heap ordering by `(distance, index)` — the index tiebreak keeps
+/// every pop deterministic on duplicate-heavy data.
+#[inline]
+fn heap_less(a: (f32, u32), b: (f32, u32)) -> bool {
+    a.0 < b.0 || (a.0 == b.0 && a.1 < b.1)
+}
+
+fn heap_push(v: &mut Vec<(f32, u32)>, e: (f32, u32)) {
+    v.push(e);
+    let mut i = v.len() - 1;
+    while i > 0 {
+        let parent = (i - 1) / 2;
+        if heap_less(v[i], v[parent]) {
+            v.swap(i, parent);
+            i = parent;
+        } else {
+            break;
+        }
+    }
+}
+
+fn heap_pop(v: &mut Vec<(f32, u32)>) -> Option<(f32, u32)> {
+    if v.is_empty() {
+        return None;
+    }
+    let top = v.swap_remove(0);
+    let n = v.len();
+    let mut i = 0usize;
+    loop {
+        let l = 2 * i + 1;
+        let r = 2 * i + 2;
+        let mut smallest = i;
+        if l < n && heap_less(v[l], v[smallest]) {
+            smallest = l;
+        }
+        if r < n && heap_less(v[r], v[smallest]) {
+            smallest = r;
+        }
+        if smallest == i {
+            break;
+        }
+        v.swap(i, smallest);
+        i = smallest;
+    }
+    Some(top)
+}
+
+#[inline]
+fn xrow(x: &[f32], dim: usize, i: u32) -> &[f32] {
+    &x[i as usize * dim..(i as usize + 1) * dim]
+}
+
+impl HnswGraph {
+    /// Number of indexed points.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Dimensionality of the rows the graph was built over.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Max links per node per layer (layer 0 holds up to twice this).
+    pub fn m(&self) -> usize {
+        self.m as usize
+    }
+
+    /// Adjacency row of `p` at `layer` (`NO_LINK`-padded).
+    #[inline]
+    fn row(&self, p: u32, layer: usize) -> &[u32] {
+        let m = self.m as usize;
+        if layer == 0 {
+            &self.base[p as usize * 2 * m..(p as usize + 1) * 2 * m]
+        } else {
+            let off = self.upper_off[p as usize] as usize + (layer - 1) * m;
+            &self.upper[off..off + m]
+        }
+    }
+
+    fn row_mut(&mut self, p: u32, layer: usize) -> &mut [u32] {
+        let m = self.m as usize;
+        if layer == 0 {
+            &mut self.base[p as usize * 2 * m..(p as usize + 1) * 2 * m]
+        } else {
+            let off = self.upper_off[p as usize] as usize + (layer - 1) * m;
+            &mut self.upper[off..off + m]
+        }
+    }
+
+    /// Build the graph over `n` rows of `dim` columns, pool-parallel and
+    /// bitwise-deterministic across thread counts (see module docs for
+    /// the frozen-generation scheme).
+    pub fn build(
+        pool: &ThreadPool,
+        x: &[f32],
+        n: usize,
+        dim: usize,
+        params: &HnswParams,
+        seed: u64,
+    ) -> HnswGraph {
+        assert!(x.len() >= n * dim, "data shorter than n*dim");
+        assert!(n > 0, "empty dataset");
+        assert!(params.m >= 2, "hnsw m must be at least 2");
+        let m = params.m;
+        let ef_c = params.ef_construction.max(m).max(EF_CONSTRUCTION_MIN);
+
+        // All level draws up front from one dedicated seeded stream —
+        // the vantage_picks replay discipline: the build consumes no
+        // other randomness, so insertion order and levels are fixed
+        // before any parallelism starts.
+        let ml = 1.0 / (m as f64).ln();
+        let mut rng = Pcg32::new(seed, LEVEL_STREAM);
+        let levels: Vec<u8> = (0..n)
+            .map(|_| {
+                let u: f64 = rng.uniform();
+                // 1-u ∈ (0, 1] keeps the log finite.
+                ((-(1.0 - u).ln() * ml).floor() as usize).min(MAX_LEVEL) as u8
+            })
+            .collect();
+
+        // Exact adjacency arenas, laid out from the level draws.
+        let mut upper_off = vec![NO_LINK; n];
+        let mut upper_slots = 0usize;
+        for (i, &l) in levels.iter().enumerate() {
+            if l > 0 {
+                upper_off[i] = upper_slots as u32;
+                upper_slots += l as usize * m;
+            }
+        }
+        let mut g = HnswGraph {
+            n,
+            dim,
+            m: m as u32,
+            max_level: levels[0],
+            entry: 0,
+            levels,
+            base: vec![NO_LINK; n * 2 * m],
+            upper_off,
+            upper: vec![NO_LINK; upper_slots],
+        };
+
+        let mut prune_tmp: Vec<(f32, u32)> = Vec::with_capacity(2 * m + 1);
+        let mut start = 1usize;
+        while start < n {
+            let end = n.min((2 * start).max(start + GEN_MIN));
+            let gen_len = end - start;
+            // Frozen snapshot the whole generation searches against.
+            let lf = g.max_level as usize;
+            let ep0 = g.entry;
+
+            // Per-point selected-neighbor output slots (disjoint ranges;
+            // layers 0..=min(level, lf), stride m, NO_LINK-padded).
+            let mut off = vec![0u32; gen_len + 1];
+            for j in 0..gen_len {
+                let lay_top = (g.levels[start + j] as usize).min(lf);
+                off[j + 1] = off[j] + ((lay_top + 1) * m) as u32;
+            }
+            let mut sel = vec![NO_LINK; off[gen_len] as usize];
+            let sp = SendPtr(sel.as_mut_ptr());
+            let off_ro: &[u32] = &off;
+            let gref = &g;
+            pool.scope_chunks_with(
+                gen_len,
+                8,
+                || HnswScratch::new(n, m, ef_c),
+                |s, lo, hi| {
+                    let _ = &sp;
+                    for j in lo..hi {
+                        let p = (start + j) as u32;
+                        let q = xrow(x, dim, p);
+                        let lay_top = (gref.levels[p as usize] as usize).min(lf);
+                        let mut ep = ep0;
+                        let mut ep_d = Euclidean.dist(q, xrow(x, dim, ep0));
+                        for layer in (lay_top + 1..=lf).rev() {
+                            (ep, ep_d) = gref.greedy_at(x, q, layer, ep, ep_d);
+                        }
+                        for layer in (0..=lay_top).rev() {
+                            s.found.reset(ef_c);
+                            gref.search_layer(x, q, ep, ep_d, layer, ef_c, s);
+                            let cnt = {
+                                let HnswScratch { found, out_idx, out_dst, .. } = s;
+                                found.drain_sorted_into(out_idx, out_dst)
+                            };
+                            debug_assert!(cnt > 0);
+                            ep = s.out_idx[0];
+                            ep_d = s.out_dst[0];
+                            select_neighbors(x, dim, cnt, m, s);
+                            let slot0 = off_ro[j] as usize + layer * m;
+                            for (slot, &(_, id)) in s.keep.iter().enumerate() {
+                                // SAFETY: per-point ranges are disjoint;
+                                // each slot written at most once.
+                                unsafe { *sp.0.add(slot0 + slot) = id };
+                            }
+                        }
+                    }
+                },
+            );
+
+            // Serial link application in index order: forward links,
+            // back-links with keep-closest pruning, entry promotion.
+            // Pure function of `sel` — thread-count invariant.
+            for j in 0..gen_len {
+                let p = (start + j) as u32;
+                let lay_top = (g.levels[p as usize] as usize).min(lf);
+                for layer in 0..=lay_top {
+                    let slot0 = off[j] as usize + layer * m;
+                    for s_i in 0..m {
+                        let q = sel[slot0 + s_i];
+                        if q == NO_LINK {
+                            break;
+                        }
+                        g.append_link(p, q, layer);
+                        g.backlink(x, q, p, layer, &mut prune_tmp);
+                    }
+                }
+                if g.levels[p as usize] > g.max_level {
+                    g.max_level = g.levels[p as usize];
+                    g.entry = p;
+                }
+            }
+            start = end;
+        }
+        g
+    }
+
+    /// Append `q` to `p`'s row at `layer` (capacity is never exceeded:
+    /// forward rows receive at most m selected links).
+    fn append_link(&mut self, p: u32, q: u32, layer: usize) {
+        let row = self.row_mut(p, layer);
+        for slot in row.iter_mut() {
+            if *slot == NO_LINK {
+                *slot = q;
+                return;
+            }
+        }
+        debug_assert!(false, "forward row overflow");
+    }
+
+    /// Add the back-link `q → p`; when `q`'s row is full, keep the
+    /// cap closest of (existing ∪ p) by `(distance, index)` — simple
+    /// keep-closest pruning, deterministic on ties.
+    fn backlink(&mut self, x: &[f32], q: u32, p: u32, layer: usize, tmp: &mut Vec<(f32, u32)>) {
+        let dim = self.dim;
+        let row = self.row_mut(q, layer);
+        for slot in row.iter_mut() {
+            if *slot == NO_LINK {
+                *slot = p;
+                return;
+            }
+        }
+        let qr = xrow(x, dim, q);
+        tmp.clear();
+        for &nb in row.iter() {
+            tmp.push((Euclidean.dist(qr, xrow(x, dim, nb)), nb));
+        }
+        tmp.push((Euclidean.dist(qr, xrow(x, dim, p)), p));
+        tmp.sort_unstable_by(|a, b| {
+            a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal).then(a.1.cmp(&b.1))
+        });
+        for (slot, &(_, id)) in tmp[..row.len()].iter().enumerate() {
+            row[slot] = id;
+        }
+    }
+
+    /// Greedy walk at one upper layer: move to the `(dist, index)`-least
+    /// neighbor until no neighbor improves — the standard HNSW descent,
+    /// with the index tiebreak guaranteeing termination and determinism.
+    fn greedy_at(&self, x: &[f32], q: &[f32], layer: usize, ep: u32, ep_d: f32) -> (u32, f32) {
+        let be_batch = |ids: &[u32], out: &mut [f32]| {
+            Euclidean.dist_batch(q, x, self.dim, ids, out);
+        };
+        let mut cur = ep;
+        let mut cur_d = ep_d;
+        let mut ids = [0u32; 64];
+        let mut ds = [0f32; 64];
+        loop {
+            let row = self.row(cur, layer);
+            let mut cnt = 0usize;
+            for &nb in row {
+                if nb == NO_LINK {
+                    break;
+                }
+                ids[cnt] = nb;
+                cnt += 1;
+            }
+            if cnt == 0 {
+                return (cur, cur_d);
+            }
+            be_batch(&ids[..cnt], &mut ds[..cnt]);
+            let mut best = (cur_d, cur);
+            for j in 0..cnt {
+                if heap_less((ds[j], ids[j]), best) {
+                    best = (ds[j], ids[j]);
+                }
+            }
+            if best.1 == cur {
+                return (cur, cur_d);
+            }
+            cur = best.1;
+            cur_d = best.0;
+        }
+    }
+
+    /// Best-first ef-search at one layer (Malkov alg. 2). Results
+    /// accumulate in `s.found` (caller resets it to `ef`); neighbor
+    /// expansions are gathered and evaluated through one batched metric
+    /// call each. Zero allocations on a warm scratch.
+    fn search_layer(
+        &self,
+        x: &[f32],
+        q: &[f32],
+        ep: u32,
+        ep_d: f32,
+        layer: usize,
+        ef: usize,
+        s: &mut HnswScratch,
+    ) {
+        s.next_epoch();
+        s.mark(ep);
+        s.found.offer(ep, ep_d);
+        s.cand.clear();
+        heap_push(&mut s.cand, (ep_d, ep));
+        while let Some((cd, c)) = heap_pop(&mut s.cand) {
+            // τ is the furthest kept result once ef are held (+∞ while
+            // underfull) — the standard stop condition.
+            if cd > s.found.tau() {
+                break;
+            }
+            s.batch_ids.clear();
+            for &nb in self.row(c, layer) {
+                if nb == NO_LINK {
+                    break;
+                }
+                if !s.visited(nb) {
+                    s.mark(nb);
+                    s.batch_ids.push(nb);
+                }
+            }
+            let cnt = s.batch_ids.len();
+            if cnt == 0 {
+                continue;
+            }
+            Euclidean.dist_batch(q, x, self.dim, &s.batch_ids, &mut s.batch_d[..cnt]);
+            for j in 0..cnt {
+                let (nb, d) = (s.batch_ids[j], s.batch_d[j]);
+                if d < s.found.tau() {
+                    s.found.offer(nb, d);
+                    heap_push(&mut s.cand, (d, nb));
+                }
+            }
+            let _ = ef; // breadth is carried by the heap's reset size
+        }
+    }
+
+    /// k nearest neighbors of `query` written into `out_idx`/`out_dst`
+    /// (first `k` slots, ascending by distance), reusing the caller's
+    /// scratch — zero allocations when the scratch was sized for
+    /// `max(ef, k)`. `exclude` skips one dataset item (self-exclusion).
+    /// In the rare case the graph search surfaces fewer than `k`
+    /// candidates (a point isolated by pruning), the row falls back to
+    /// an exact linear scan so callers always get full rows.
+    #[allow(clippy::too_many_arguments)]
+    pub fn knn_into(
+        &self,
+        x: &[f32],
+        query: &[f32],
+        k: usize,
+        ef: usize,
+        exclude: Option<u32>,
+        s: &mut HnswScratch,
+        out_idx: &mut [u32],
+        out_dst: &mut [f32],
+    ) -> usize {
+        assert_eq!(query.len(), self.dim);
+        let k = k.min(self.n - usize::from(exclude.is_some()));
+        if k == 0 {
+            return 0;
+        }
+        // Room for the excluded self on top of the requested breadth.
+        let ef = ef.max(k + usize::from(exclude.is_some()));
+        debug_assert!(s.out_idx.len() >= ef, "scratch sized below ef");
+        let mut ep = self.entry;
+        let mut ep_d = Euclidean.dist(query, xrow(x, self.dim, ep));
+        for layer in (1..=self.max_level as usize).rev() {
+            (ep, ep_d) = self.greedy_at(x, query, layer, ep, ep_d);
+        }
+        s.found.reset(ef);
+        self.search_layer(x, query, ep, ep_d, 0, ef, s);
+        let cnt = {
+            let HnswScratch { found, out_idx: oi, out_dst: od, .. } = s;
+            found.drain_sorted_into(oi, od)
+        };
+        let mut got = 0usize;
+        for j in 0..cnt {
+            if got == k {
+                break;
+            }
+            if exclude == Some(s.out_idx[j]) {
+                continue;
+            }
+            out_idx[got] = s.out_idx[j];
+            out_dst[got] = s.out_dst[j];
+            got += 1;
+        }
+        if got < k {
+            // Exact fallback for the isolated-point corner: scan all
+            // rows (deterministic, still allocation-free).
+            s.found.reset(k);
+            for i in 0..self.n as u32 {
+                if exclude == Some(i) {
+                    continue;
+                }
+                s.found.offer(i, Euclidean.dist(query, xrow(x, self.dim, i)));
+            }
+            let HnswScratch { found, out_idx: oi, out_dst: od, .. } = s;
+            got = found.drain_sorted_into(oi, od).min(k);
+            out_idx[..got].copy_from_slice(&s.out_idx[..got]);
+            out_dst[..got].copy_from_slice(&s.out_dst[..got]);
+        }
+        got
+    }
+
+    /// All-pairs kNN over the indexed rows (self excluded), pool-parallel
+    /// with one reused scratch per worker — the approximate twin of
+    /// [`crate::vptree::VpTree::knn_all`]. Output rows are full and
+    /// ascending by distance; `k` clamps to `n - 1`.
+    pub fn knn_all(&self, pool: &ThreadPool, x: &[f32], k: usize, ef: usize) -> (Vec<u32>, Vec<f32>) {
+        let k = k.min(self.n - 1);
+        let n = self.n;
+        let mut idx = vec![0u32; n * k];
+        let mut dst = vec![0f32; n * k];
+        if k == 0 {
+            return (idx, dst);
+        }
+        let ip = SendPtr(idx.as_mut_ptr());
+        let dp = SendPtr(dst.as_mut_ptr());
+        let m = self.m as usize;
+        let ef = ef.max(k + 1);
+        pool.scope_chunks_with(
+            n,
+            16,
+            || HnswScratch::new(n, m, ef),
+            |s, lo, hi| {
+                let _ = (&ip, &dp);
+                for i in lo..hi {
+                    let q = xrow(x, self.dim, i as u32);
+                    // SAFETY: disjoint rows across chunks.
+                    let (oi, od) = unsafe {
+                        (
+                            std::slice::from_raw_parts_mut(ip.0.add(i * k), k),
+                            std::slice::from_raw_parts_mut(dp.0.add(i * k), k),
+                        )
+                    };
+                    let got = self.knn_into(x, q, k, ef, Some(i as u32), s, oi, od);
+                    debug_assert_eq!(got, k);
+                }
+            },
+        );
+        (idx, dst)
+    }
+
+    /// Serialize as little-endian records (the inverse of
+    /// [`HnswGraph::read_from`]); a save/load round trip is
+    /// bit-identical.
+    pub fn write_into(&self, w: &mut impl std::io::Write) -> std::io::Result<()> {
+        w.write_u64::<LittleEndian>(self.n as u64)?;
+        w.write_u32::<LittleEndian>(self.dim as u32)?;
+        w.write_u32::<LittleEndian>(self.m)?;
+        w.write_u32::<LittleEndian>(self.max_level as u32)?;
+        w.write_u32::<LittleEndian>(self.entry)?;
+        w.write_all(&self.levels)?;
+        w.write_u64::<LittleEndian>(self.upper.len() as u64)?;
+        for &v in &self.base {
+            w.write_u32::<LittleEndian>(v)?;
+        }
+        for &v in &self.upper {
+            w.write_u32::<LittleEndian>(v)?;
+        }
+        Ok(())
+    }
+
+    /// Deserialize a graph written by [`HnswGraph::write_into`],
+    /// validating the structural invariants (strides, link ranges,
+    /// level consistency of upper-layer rows, entry at the top level)
+    /// so a corrupted payload fails here instead of during a search.
+    pub fn read_from(r: &mut impl std::io::Read) -> anyhow::Result<HnswGraph> {
+        let n = r.read_u64::<LittleEndian>()? as usize;
+        let dim = r.read_u32::<LittleEndian>()? as usize;
+        let m = r.read_u32::<LittleEndian>()?;
+        let max_level = r.read_u32::<LittleEndian>()?;
+        let entry = r.read_u32::<LittleEndian>()?;
+        anyhow::ensure!(n > 0 && dim > 0, "empty hnsw graph");
+        anyhow::ensure!(n < (1 << 33), "implausible hnsw size {n}");
+        anyhow::ensure!((2..=4096).contains(&m), "hnsw m {m} out of range");
+        anyhow::ensure!(max_level as usize <= MAX_LEVEL, "hnsw max level {max_level} out of range");
+        anyhow::ensure!((entry as usize) < n, "hnsw entry {entry} out of range");
+        let mut levels = vec![0u8; n];
+        r.read_exact(&mut levels)?;
+        anyhow::ensure!(
+            levels[entry as usize] as u32 == max_level,
+            "hnsw entry level {} != max level {max_level}",
+            levels[entry as usize]
+        );
+        let m_us = m as usize;
+        let mut upper_off = vec![NO_LINK; n];
+        let mut upper_slots = 0usize;
+        for (i, &l) in levels.iter().enumerate() {
+            anyhow::ensure!(l as u32 <= max_level, "hnsw level {l} at {i} above max {max_level}");
+            if l > 0 {
+                upper_off[i] = upper_slots as u32;
+                upper_slots += l as usize * m_us;
+            }
+        }
+        let upper_len = r.read_u64::<LittleEndian>()? as usize;
+        anyhow::ensure!(
+            upper_len == upper_slots,
+            "hnsw upper arena {upper_len} != level-implied {upper_slots}"
+        );
+        let mut base = Vec::with_capacity((n * 2 * m_us).min(1 << 22));
+        for _ in 0..n * 2 * m_us {
+            base.push(r.read_u32::<LittleEndian>()?);
+        }
+        let mut upper = Vec::with_capacity(upper_slots.min(1 << 22));
+        for _ in 0..upper_slots {
+            upper.push(r.read_u32::<LittleEndian>()?);
+        }
+        let g = HnswGraph {
+            n,
+            dim,
+            m,
+            max_level: max_level as u8,
+            entry,
+            levels,
+            base,
+            upper_off,
+            upper,
+        };
+        // Link validation: in range, never self, and an upper-layer row
+        // may only reference points that exist at that layer.
+        for p in 0..n as u32 {
+            for layer in 0..=g.levels[p as usize] as usize {
+                for &nb in g.row(p, layer) {
+                    if nb == NO_LINK {
+                        continue;
+                    }
+                    anyhow::ensure!((nb as usize) < n, "hnsw link {nb} out of range");
+                    anyhow::ensure!(nb != p, "hnsw self-link at {p}");
+                    anyhow::ensure!(
+                        g.levels[nb as usize] as usize >= layer,
+                        "hnsw layer-{layer} link {p}→{nb} to a level-{} point",
+                        g.levels[nb as usize]
+                    );
+                }
+            }
+        }
+        Ok(g)
+    }
+}
+
+/// Malkov's select-neighbors heuristic over the drained candidates in
+/// `s.out_idx/out_dst[..cnt]` (ascending): keep a candidate iff it is
+/// closer to the query point than to every already-kept neighbor, then
+/// fill remaining slots from the passed-over list in order. Result in
+/// `s.keep` (≤ m entries, ascending-biased), deterministic on ties.
+fn select_neighbors(x: &[f32], dim: usize, cnt: usize, m: usize, s: &mut HnswScratch) {
+    s.keep.clear();
+    s.skipped.clear();
+    let mut kept_ids = [0u32; 64];
+    let mut kept_d = [0f32; 64];
+    debug_assert!(m <= 64);
+    for j in 0..cnt {
+        if s.keep.len() >= m {
+            break;
+        }
+        let (c, dc) = (s.out_idx[j], s.out_dst[j]);
+        let nk = s.keep.len();
+        kept_ids[..nk]
+            .iter_mut()
+            .zip(s.keep.iter())
+            .for_each(|(slot, &(_, id))| *slot = id);
+        Euclidean.dist_batch(xrow(x, dim, c), x, dim, &kept_ids[..nk], &mut kept_d[..nk]);
+        if kept_d[..nk].iter().all(|&dk| dk >= dc) {
+            s.keep.push((dc, c));
+        } else {
+            s.skipped.push((dc, c));
+        }
+    }
+    let mut fill = 0usize;
+    while s.keep.len() < m && fill < s.skipped.len() {
+        s.keep.push(s.skipped[fill]);
+        fill += 1;
+    }
+}
+
+/// HNSW all-pairs kNN backend with explicit knobs.
+pub struct HnswKnn {
+    pub m: usize,
+    pub ef_construction: usize,
+    pub ef_search: usize,
+}
+
+impl Default for HnswKnn {
+    fn default() -> Self {
+        HnswKnn::with_knobs(DEFAULT_M, DEFAULT_EF_SEARCH)
+    }
+}
+
+impl HnswKnn {
+    /// Backend from the user-facing knobs (`tsne.knn_m`, `tsne.knn_ef`).
+    pub fn with_knobs(m: usize, ef_search: usize) -> Self {
+        let p = HnswParams::with_m(m);
+        HnswKnn { m: p.m, ef_construction: p.ef_construction, ef_search }
+    }
+}
+
+impl KnnBackend for HnswKnn {
+    fn name(&self) -> &'static str {
+        "hnsw"
+    }
+
+    fn knn_all(
+        &self,
+        pool: &ThreadPool,
+        x: &[f32],
+        n: usize,
+        dim: usize,
+        k: usize,
+        seed: u64,
+    ) -> KnnResult {
+        let sw = Stopwatch::start();
+        let params = HnswParams { m: self.m, ef_construction: self.ef_construction };
+        let graph = HnswGraph::build(pool, x, n, dim, &params, seed);
+        let build_secs = sw.elapsed_secs();
+        let sw = Stopwatch::start();
+        let (indices, distances) = graph.knn_all(pool, x, k, self.ef_search);
+        KnnResult {
+            indices,
+            distances,
+            k: k.min(n - 1),
+            build_secs,
+            query_secs: sw.elapsed_secs(),
+            backend: self.name(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::knn::{recall_at_k, BruteKnn, KnnBackend};
+    use crate::util::Pcg32;
+
+    fn random_data(n: usize, dim: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::seeded(seed);
+        (0..n * dim).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn clustered_data(n: usize, dim: usize, classes: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::seeded(seed);
+        let mut x = Vec::with_capacity(n * dim);
+        for i in 0..n {
+            let c = (i % classes) as f32 * 25.0;
+            for _ in 0..dim {
+                x.push(c + rng.normal() as f32);
+            }
+        }
+        x
+    }
+
+    #[test]
+    fn build_is_bitwise_deterministic_across_thread_counts() {
+        let (n, dim) = (1500, 8);
+        let x = random_data(n, dim, 3);
+        let params = HnswParams::default();
+        let g1 = HnswGraph::build(&ThreadPool::new(1), &x, n, dim, &params, 17);
+        let g4 = HnswGraph::build(&ThreadPool::new(4), &x, n, dim, &params, 17);
+        let g7 = HnswGraph::build(&ThreadPool::new(7), &x, n, dim, &params, 17);
+        assert_eq!(g1, g4, "1 vs 4 threads");
+        assert_eq!(g1, g7, "1 vs 7 threads");
+    }
+
+    #[test]
+    fn build_deterministic_on_duplicate_heavy_data() {
+        // Maximal distance ties: every tiebreak must be index-based.
+        let (n, dim) = (900, 4);
+        let mut x = vec![1.0f32; n * dim];
+        for v in x.iter_mut().skip(n * dim / 2) {
+            *v = 2.0;
+        }
+        let params = HnswParams::default();
+        let g1 = HnswGraph::build(&ThreadPool::new(1), &x, n, dim, &params, 5);
+        let g3 = HnswGraph::build(&ThreadPool::new(3), &x, n, dim, &params, 5);
+        assert_eq!(g1, g3);
+    }
+
+    #[test]
+    fn recall_against_exact_oracle() {
+        let (n, dim, k) = (2000, 16, 20);
+        let x = clustered_data(n, dim, 10, 7);
+        let pool = ThreadPool::new(4);
+        let exact = BruteKnn.knn_all(&pool, &x, n, dim, k, 9);
+        let approx = HnswKnn::default().knn_all(&pool, &x, n, dim, k, 9);
+        let r = recall_at_k(&exact, &approx);
+        assert!(r >= 0.90, "recall {r} below gate");
+        assert_eq!(approx.backend, "hnsw");
+        assert!(approx.build_secs > 0.0);
+        assert!(approx.query_secs > 0.0);
+    }
+
+    #[test]
+    fn rows_sorted_self_free_and_full() {
+        let (n, dim, k) = (600, 6, 12);
+        let x = random_data(n, dim, 11);
+        let pool = ThreadPool::new(3);
+        let r = HnswKnn::default().knn_all(&pool, &x, n, dim, k, 2);
+        assert_eq!(r.k, k);
+        for i in 0..n {
+            for j in 0..k {
+                assert_ne!(r.indices[i * k + j], i as u32, "self-loop at row {i}");
+                if j > 0 {
+                    assert!(r.distances[i * k + j] >= r.distances[i * k + j - 1]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_and_degenerate_datasets() {
+        let pool = ThreadPool::new(2);
+        // n = 1: empty rows.
+        let r = HnswKnn::default().knn_all(&pool, &[0.1, 0.2], 1, 2, 5, 1);
+        assert_eq!(r.k, 0);
+        assert!(r.indices.is_empty());
+        // n = 2: one neighbor each.
+        let r = HnswKnn::default().knn_all(&pool, &[0.0, 0.0, 3.0, 4.0], 2, 2, 8, 1);
+        assert_eq!(r.k, 1);
+        assert_eq!(r.indices, vec![1, 0]);
+        assert_eq!(r.distances, vec![5.0, 5.0]);
+        // k > n-1 clamps.
+        let x = random_data(6, 3, 4);
+        let r = HnswKnn::default().knn_all(&pool, &x, 6, 3, 100, 2);
+        assert_eq!(r.k, 5);
+    }
+
+    #[test]
+    fn small_n_matches_exact_exactly() {
+        // ef ≥ n means the layer-0 search visits everything reachable;
+        // distances must match the brute oracle bit for bit.
+        let (n, dim, k) = (120, 5, 8);
+        let x = random_data(n, dim, 21);
+        let pool = ThreadPool::new(2);
+        let exact = BruteKnn.knn_all(&pool, &x, n, dim, k, 3);
+        let approx = HnswKnn::default().knn_all(&pool, &x, n, dim, k, 3);
+        let r = recall_at_k(&exact, &approx);
+        assert_eq!(r, 1.0, "full-coverage search must be exact");
+    }
+
+    #[test]
+    fn serialization_roundtrips_bit_identically() {
+        let (n, dim) = (400, 6);
+        let x = random_data(n, dim, 13);
+        let pool = ThreadPool::new(2);
+        let g = HnswGraph::build(&pool, &x, n, dim, &HnswParams::default(), 9);
+        let mut buf = Vec::new();
+        g.write_into(&mut buf).unwrap();
+        let back = HnswGraph::read_from(&mut &buf[..]).unwrap();
+        assert_eq!(g, back);
+        // Truncations fail cleanly.
+        for cut in [0usize, 12, buf.len() / 2, buf.len() - 1] {
+            assert!(HnswGraph::read_from(&mut &buf[..cut]).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn read_rejects_corrupt_links() {
+        let (n, dim) = (100, 3);
+        let x = random_data(n, dim, 15);
+        let pool = ThreadPool::new(1);
+        let g = HnswGraph::build(&pool, &x, n, dim, &HnswParams::default(), 4);
+        let mut buf = Vec::new();
+        g.write_into(&mut buf).unwrap();
+        // Corrupt a base-adjacency record: header is 28 bytes + n level
+        // bytes + 8 bytes upper length, then base u32s.
+        let base0 = 28 + n + 8;
+        buf[base0..base0 + 4].copy_from_slice(&(n as u32 + 7).to_le_bytes());
+        assert!(HnswGraph::read_from(&mut &buf[..]).is_err());
+    }
+
+    #[test]
+    fn warm_queries_allocate_nothing() {
+        let (n, dim, k) = (800, 8, 10);
+        let x = random_data(n, dim, 31);
+        let pool = ThreadPool::new(2);
+        let g = HnswGraph::build(&pool, &x, n, dim, &HnswParams::default(), 6);
+        let ef = 64usize;
+        let mut s = HnswScratch::new(n, g.m(), ef);
+        let mut oi = vec![0u32; k];
+        let mut od = vec![0f32; k];
+        // Warm up once, snapshot, then assert stability over many rows.
+        g.knn_into(&x, xrow(&x, dim, 0), k, ef, Some(0), &mut s, &mut oi, &mut od);
+        let caps = s.capacities();
+        for i in 1..200u32 {
+            let got = g.knn_into(&x, xrow(&x, dim, i), k, ef, Some(i), &mut s, &mut oi, &mut od);
+            assert_eq!(got, k);
+            assert_eq!(s.capacities(), caps, "allocation at row {i}");
+        }
+    }
+}

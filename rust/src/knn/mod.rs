@@ -9,6 +9,10 @@ use crate::util::pool::SendPtr;
 use crate::util::{Stopwatch, ThreadPool};
 use crate::vptree::VpTree;
 
+pub mod hnsw;
+
+pub use hnsw::{HnswGraph, HnswKnn, HnswParams, HnswScratch, DEFAULT_EF_SEARCH, DEFAULT_M};
+
 /// Output of an all-pairs kNN query: row-major `n × k` neighbor indices
 /// and distances, each row ascending by distance, self excluded.
 #[derive(Debug, Clone)]
@@ -23,6 +27,31 @@ pub struct KnnResult {
     pub build_secs: f64,
     /// Batched query time.
     pub query_secs: f64,
+    /// Which backend produced this result ([`KnnBackend::name`]).
+    pub backend: &'static str,
+}
+
+/// Mean recall@k of `approx` against the exact oracle `exact`, tie-robust:
+/// a row's hit count is the number of approximate distances no greater
+/// than the row's k-th exact distance, so exact backends score exactly
+/// 1.0 even on duplicate-heavy data where the identity of the k-th
+/// neighbor is ambiguous. Both results must cover the same dataset with
+/// the same row width.
+pub fn recall_at_k(exact: &KnnResult, approx: &KnnResult) -> f64 {
+    assert_eq!(exact.k, approx.k, "row widths differ");
+    assert_eq!(exact.indices.len(), approx.indices.len(), "row counts differ");
+    let k = exact.k;
+    if k == 0 || exact.indices.is_empty() {
+        return 1.0;
+    }
+    let n = exact.indices.len() / k;
+    let mut hits = 0usize;
+    for i in 0..n {
+        // Rows are ascending: the k-th exact distance is the row's last.
+        let kth = exact.distances[i * k + k - 1];
+        hits += approx.distances[i * k..(i + 1) * k].iter().filter(|&&d| d <= kth).count();
+    }
+    hits as f64 / (n * k) as f64
 }
 
 /// Strategy interface for all-pairs kNN.
@@ -62,7 +91,14 @@ impl KnnBackend for VpTreeKnn {
         let sw = Stopwatch::start();
         let (indices, distances) = tree.knn_all(pool, k);
         let query_secs = sw.elapsed_secs();
-        KnnResult { indices, distances, k: k.min(n - 1), build_secs, query_secs }
+        KnnResult {
+            indices,
+            distances,
+            k: k.min(n - 1),
+            build_secs,
+            query_secs,
+            backend: self.name(),
+        }
     }
 }
 
@@ -89,7 +125,14 @@ impl KnnBackend for BruteKnn {
         let mut distances = vec![0f32; n * k];
         if k == 0 {
             // n = 1: no possible neighbor — cleanly empty rows.
-            return KnnResult { indices, distances, k, build_secs: 0.0, query_secs: 0.0 };
+            return KnnResult {
+                indices,
+                distances,
+                k,
+                build_secs: 0.0,
+                query_secs: 0.0,
+                backend: self.name(),
+            };
         }
         let sw = Stopwatch::start();
         let ic = SendPtr(indices.as_mut_ptr());
@@ -125,7 +168,14 @@ impl KnnBackend for BruteKnn {
                 }
             }
         });
-        KnnResult { indices, distances, k, build_secs: 0.0, query_secs: sw.elapsed_secs() }
+        KnnResult {
+            indices,
+            distances,
+            k,
+            build_secs: 0.0,
+            query_secs: sw.elapsed_secs(),
+            backend: self.name(),
+        }
     }
 }
 
@@ -182,6 +232,77 @@ mod tests {
         let r = BruteKnn.knn_all(&pool, &x, n, dim, 10, 4);
         assert_eq!(r.k, 4);
         assert_eq!(r.indices.len(), n * 4);
+    }
+
+    #[test]
+    fn backend_names_ride_along_in_results() {
+        let (n, dim, k) = (40, 3, 5);
+        let x = random_data(n, dim, 6);
+        let pool = ThreadPool::new(2);
+        assert_eq!(VpTreeKnn.knn_all(&pool, &x, n, dim, k, 1).backend, "vptree");
+        assert_eq!(BruteKnn.knn_all(&pool, &x, n, dim, k, 1).backend, "brute");
+        assert_eq!(HnswKnn::default().knn_all(&pool, &x, n, dim, k, 1).backend, "hnsw");
+    }
+
+    fn duplicate_heavy_data(n: usize, dim: usize) -> Vec<f32> {
+        // A third of the points are exact copies of one row — maximal
+        // distance ties, the case where identity-based recall breaks.
+        let mut x = random_data(n, dim, 8);
+        for i in 0..n / 3 {
+            for d in 0..dim {
+                x[i * dim + d] = 1.25;
+            }
+        }
+        x
+    }
+
+    #[test]
+    fn recall_property_exact_backends_score_exactly_one() {
+        let pool = ThreadPool::new(4);
+        let (n, dim, k) = (300, 5, 15);
+        let clouds = [
+            random_data(n, dim, 4),
+            duplicate_heavy_data(n, dim),
+            // Clustered: ten tight blobs.
+            {
+                let mut rng = Pcg32::seeded(12);
+                (0..n * dim)
+                    .map(|j| (j / dim % 10) as f32 * 20.0 + rng.normal() as f32)
+                    .collect()
+            },
+        ];
+        for (c, x) in clouds.iter().enumerate() {
+            let brute = BruteKnn.knn_all(&pool, x, n, dim, k, 7);
+            let vp = VpTreeKnn.knn_all(&pool, x, n, dim, k, 7);
+            assert_eq!(recall_at_k(&brute, &brute), 1.0, "cloud {c}: brute self-recall");
+            assert_eq!(recall_at_k(&brute, &vp), 1.0, "cloud {c}: vp-tree is exact");
+        }
+    }
+
+    #[test]
+    fn recall_property_hnsw_meets_gate_at_default_knobs() {
+        let pool = ThreadPool::new(4);
+        let (n, dim, k) = (1200, 10, 20);
+        let clouds = [random_data(n, dim, 14), duplicate_heavy_data(n, dim), {
+            let mut rng = Pcg32::seeded(19);
+            (0..n * dim)
+                .map(|j| (j / dim % 8) as f32 * 15.0 + rng.normal() as f32)
+                .collect()
+        }];
+        for (c, x) in clouds.iter().enumerate() {
+            let exact = BruteKnn.knn_all(&pool, x, n, dim, k, 5);
+            let approx = HnswKnn::default().knn_all(&pool, x, n, dim, k, 5);
+            let r = recall_at_k(&exact, &approx);
+            assert!(r >= 0.90, "cloud {c}: hnsw recall {r} below gate");
+        }
+    }
+
+    #[test]
+    fn recall_handles_degenerate_widths() {
+        let pool = ThreadPool::new(1);
+        let x = vec![0.5f32, -0.5];
+        let r = BruteKnn.knn_all(&pool, &x, 1, 2, 3, 1);
+        assert_eq!(recall_at_k(&r, &r), 1.0);
     }
 
     #[test]

@@ -26,6 +26,9 @@
 //! | `tsne.exaggeration_iters` | `--exaggeration-iters` |
 //! | `tsne.cost_every`         | `--cost-every`         |
 //! | `tsne.cell_size`          | `--cell-size`          |
+//! | `tsne.knn_backend`        | `--knn-backend`        |
+//! | `tsne.knn_ef`             | `--knn-ef`             |
+//! | `tsne.knn_m`              | `--knn-m`              |
 //! | `tsne.eta`                | `--eta`                |
 //! | `tsne.seed`               | `--seed`               |
 //! | `run.checkpoint`          | `--checkpoint`         |
@@ -35,6 +38,15 @@
 //! repulsion approximation; `--intervals` caps the grid resolution of
 //! the `interp` method. An explicit method wins over the legacy `--rho`
 //! dual-tree shortcut.
+//!
+//! `--knn-backend` (`exact` | `hnsw`) picks the input-stage neighbor
+//! search: `exact` is the vp-tree of the paper; `hnsw` answers the kNN
+//! queries from a layered small-world graph, trading exactness
+//! (recall ≥ 0.90 at the default knobs) for near-linear scaling on
+//! million-point inputs. `--knn-m` sets the graph degree and `--knn-ef`
+//! the search breadth; both only apply to `hnsw`. The legacy
+//! `--brute-knn` flag still selects the O(N²) scan and wins over
+//! `--knn-backend` when both are given.
 //!
 //! `--checkpoint PATH` arms the crash-safe run layer on `embed`/`fit`:
 //! every `--checkpoint-every` completed iterations the optimizer state
@@ -144,6 +156,22 @@ fn tsne_job_opts(spec: CommandSpec) -> CommandSpec {
     .flag("resume", "resume from --checkpoint when it exists and matches this run")
     .flag("xla", "offload regular ops to AOT XLA artifacts")
     .flag("brute-knn", "use brute-force kNN instead of the vp-tree")
+    .opt(
+        "knn-backend",
+        "exact",
+        "input-stage kNN backend (exact = vp-tree | hnsw = approximate graph search)",
+    )
+    .opt("knn-ef", "300", "hnsw search breadth ef (only with --knn-backend hnsw)")
+    .opt("knn-m", "16", "hnsw graph degree M (only with --knn-backend hnsw)")
+}
+
+fn parse_knn_backend(s: &str) -> anyhow::Result<bhsne::sne::KnnChoice> {
+    match s {
+        "exact" | "vptree" | "vp-tree" => Ok(bhsne::sne::KnnChoice::VpTree),
+        "hnsw" => Ok(bhsne::sne::KnnChoice::Hnsw),
+        "brute" => Ok(bhsne::sne::KnnChoice::Brute),
+        other => anyhow::bail!("unknown knn-backend {other:?} (expected exact | hnsw | brute)"),
+    }
 }
 
 fn embed_spec() -> CommandSpec {
@@ -211,6 +239,12 @@ fn job_from_parsed(p: &bhsne::util::args::Parsed) -> anyhow::Result<JobConfig> {
         if !cell.is_empty() {
             cfg.tsne.cell_size = parse_cell_size(&cell)?;
         }
+        let knn = file.str_or("tsne.knn_backend", "");
+        if !knn.is_empty() {
+            cfg.tsne.knn = parse_knn_backend(&knn)?;
+        }
+        cfg.tsne.knn_ef = file.usize_or("tsne.knn_ef", cfg.tsne.knn_ef);
+        cfg.tsne.knn_m = file.usize_or("tsne.knn_m", cfg.tsne.knn_m);
         cfg.use_xla = file.bool_or("job.xla", cfg.use_xla);
         let ckpt = file.str_or("run.checkpoint", "");
         if !ckpt.is_empty() {
@@ -296,6 +330,18 @@ fn job_from_parsed(p: &bhsne::util::args::Parsed) -> anyhow::Result<JobConfig> {
     if p.flag("xla") {
         cfg.use_xla = true;
     }
+    // The spec defaults for the knn options equal the struct defaults, so
+    // a config-file key only ever loses to an explicitly provided flag.
+    if p.provided("knn-backend") {
+        cfg.tsne.knn = parse_knn_backend(p.str("knn-backend").unwrap_or("exact"))?;
+    }
+    if p.provided("knn-ef") {
+        cfg.tsne.knn_ef = p.get("knn-ef").map_err(anyhow::Error::msg)?;
+    }
+    if p.provided("knn-m") {
+        cfg.tsne.knn_m = p.get("knn-m").map_err(anyhow::Error::msg)?;
+    }
+    // The legacy flag wins: scripts that pass it expect the exact scan.
     if p.flag("brute-knn") {
         cfg.tsne.knn = bhsne::sne::KnnChoice::Brute;
     }

@@ -86,18 +86,34 @@ fn set_job_checkpoint(runner: &mut TsneRunner, cfg: &JobConfig) -> anyhow::Resul
 
 impl JobConfig {
     pub fn describe(&self) -> String {
+        let knn = match self.tsne.knn {
+            KnnChoice::VpTree => "vptree".to_string(),
+            KnnChoice::Brute => "brute".to_string(),
+            KnnChoice::Hnsw => {
+                format!("hnsw(m={},ef={})", self.tsne.knn_m, self.tsne.knn_ef)
+            }
+        };
         format!(
             "{} n={} theta={} iters={} knn={} {}",
             self.dataset,
             self.n,
             self.tsne.theta,
             self.tsne.iters,
-            match self.tsne.knn {
-                KnnChoice::VpTree => "vptree",
-                KnnChoice::Brute => "brute",
-            },
+            knn,
             if self.use_xla { "xla" } else { "cpu" }
         )
+    }
+}
+
+/// Numeric code for the input-stage kNN backend so it can ride in the
+/// f64-only metrics registry next to the stage timings (0 = vptree,
+/// 1 = brute, 2 = hnsw; -1 = stage did not report).
+fn knn_backend_code(name: &str) -> f64 {
+    match name {
+        "vptree" => 0.0,
+        "brute" => 1.0,
+        "hnsw" => 2.0,
+        _ => -1.0,
     }
 }
 
@@ -204,7 +220,9 @@ pub fn run_job(cfg: JobConfig) -> anyhow::Result<JobResult> {
     let embed_secs = sw.elapsed_secs();
     metrics.observe("embed_secs", embed_secs);
     let input = &runner.stats.input_stage;
+    log::info!("input stage knn backend: {}", input.backend);
     metrics.observe_all(&[
+        ("knn_backend_code", knn_backend_code(input.backend)),
         ("knn_secs", input.knn_secs),
         ("knn_build_secs", input.knn_build_secs),
         ("knn_query_secs", input.knn_query_secs),
@@ -336,7 +354,9 @@ pub fn run_fit_job(cfg: JobConfig, model_out: Option<&Path>) -> anyhow::Result<(
     let embed_secs = sw.elapsed_secs();
     metrics.observe("embed_secs", embed_secs);
     let input = &runner.stats.input_stage;
+    log::info!("input stage knn backend: {}", input.backend);
     metrics.observe_all(&[
+        ("knn_backend_code", knn_backend_code(input.backend)),
         ("knn_secs", input.knn_secs),
         ("knn_build_secs", input.knn_build_secs),
         ("knn_query_secs", input.knn_query_secs),
@@ -675,6 +695,41 @@ mod tests {
         assert!(cfg.describe().contains("knn=vptree"));
         cfg.tsne.knn = KnnChoice::Brute;
         assert!(cfg.describe().contains("knn=brute"));
+        cfg.tsne.knn = KnnChoice::Hnsw;
+        cfg.tsne.knn_m = 24;
+        cfg.tsne.knn_ef = 450;
+        assert!(cfg.describe().contains("knn=hnsw(m=24,ef=450)"));
+    }
+
+    #[test]
+    fn backend_code_covers_all_backends() {
+        assert_eq!(knn_backend_code("vptree"), 0.0);
+        assert_eq!(knn_backend_code("brute"), 1.0);
+        assert_eq!(knn_backend_code("hnsw"), 2.0);
+        assert_eq!(knn_backend_code(""), -1.0);
+    }
+
+    #[test]
+    fn hnsw_job_reports_backend_metric() {
+        let cfg = JobConfig {
+            dataset: "gaussians".into(),
+            n: 300,
+            tsne: TsneConfig {
+                iters: 40,
+                exaggeration_iters: 10,
+                cost_every: 20,
+                perplexity: 10.0,
+                knn: KnnChoice::Hnsw,
+                seed: 9,
+                ..Default::default()
+            },
+            pca_target: 0,
+            eval_cap: 0,
+            ..Default::default()
+        };
+        let r = run_job(cfg).unwrap();
+        assert_eq!(r.metrics.mean("knn_backend_code"), Some(2.0));
+        assert!(r.final_kl.unwrap().is_finite());
     }
 
     #[test]

@@ -14,7 +14,7 @@
 use super::perplexity::conditional_probabilities;
 use super::sparse::Csr;
 use super::KnnChoice;
-use crate::knn::{BruteKnn, KnnBackend, KnnResult};
+use crate::knn::{BruteKnn, HnswGraph, HnswParams, KnnBackend, KnnResult};
 use crate::util::{Stopwatch, ThreadPool};
 use crate::vptree::{VpArena, VpTree};
 
@@ -28,6 +28,9 @@ pub struct InputStageStats {
     pub knn_build_secs: f64,
     /// Batched query time.
     pub knn_query_secs: f64,
+    /// Which kNN backend answered the training queries
+    /// ([`crate::knn::KnnBackend::name`]; empty until the stage runs).
+    pub backend: &'static str,
     pub perplexity_secs: f64,
     pub symmetrize_secs: f64,
     pub perplexity_failures: usize,
@@ -73,10 +76,16 @@ pub struct InputArtifacts {
     pub stats: InputStageStats,
     /// The fitted input-space vp-tree, detached from the data rows.
     pub vp: VpArena,
+    /// The fitted HNSW graph when the approximate backend ran — the
+    /// serving artifact out-of-sample `transform` queries use instead of
+    /// the vp-tree (persisted in its own `.bhsne` section).
+    pub hnsw: Option<HnswGraph>,
 }
 
 /// [`joint_probabilities`] variant that returns the built vp-tree arena
-/// alongside P (the fit path). `n ≥ 2` (enforced by the runner).
+/// (and, for the hnsw backend, the built graph) alongside P — the fit
+/// path. `n ≥ 2` (enforced by the runner). `knn_ef`/`knn_m` are the
+/// hnsw knobs (ignored by the exact backends).
 pub fn joint_probabilities_with_tree(
     pool: &ThreadPool,
     x: &[f32],
@@ -84,6 +93,8 @@ pub fn joint_probabilities_with_tree(
     dim: usize,
     perplexity: f64,
     knn: KnnChoice,
+    knn_ef: usize,
+    knn_m: usize,
     seed: u64,
 ) -> InputArtifacts {
     let k_req = knn_width(n, perplexity);
@@ -92,6 +103,7 @@ pub fn joint_probabilities_with_tree(
     let sw = Stopwatch::start();
     let tree = VpTree::build_parallel(pool, x, n, dim, seed);
     let build_secs = sw.elapsed_secs();
+    let mut hnsw = None;
     let knn_result = match knn {
         KnnChoice::VpTree => {
             let sw = Stopwatch::start();
@@ -102,6 +114,7 @@ pub fn joint_probabilities_with_tree(
                 k: k_req.min(n - 1),
                 build_secs,
                 query_secs: sw.elapsed_secs(),
+                backend: "vptree",
             }
         }
         KnnChoice::Brute => {
@@ -109,10 +122,29 @@ pub fn joint_probabilities_with_tree(
             r.build_secs = build_secs; // the tree is still a fit cost
             r
         }
+        KnnChoice::Hnsw => {
+            let sw = Stopwatch::start();
+            let graph = HnswGraph::build(pool, x, n, dim, &HnswParams::with_m(knn_m), seed);
+            let hnsw_build = sw.elapsed_secs();
+            let sw = Stopwatch::start();
+            let (indices, distances) = graph.knn_all(pool, x, k_req, knn_ef);
+            let r = KnnResult {
+                indices,
+                distances,
+                k: k_req.min(n - 1),
+                // The vp-tree stays a fit cost: it remains the exact
+                // oracle artifact even when hnsw answers the queries.
+                build_secs: build_secs + hnsw_build,
+                query_secs: sw.elapsed_secs(),
+                backend: "hnsw",
+            };
+            hnsw = Some(graph);
+            r
+        }
     };
-    stats.knn_secs = build_secs + knn_result.query_secs;
+    stats.knn_secs = knn_result.build_secs + knn_result.query_secs;
     let p = joint_from_knn(pool, knn_result, n, perplexity, &mut stats);
-    InputArtifacts { p, stats, vp: tree.into_arena() }
+    InputArtifacts { p, stats, vp: tree.into_arena(), hnsw }
 }
 
 /// Neighbor-list width ⌊3u⌋ clamped to the dataset (paper §4.1).
@@ -130,9 +162,10 @@ fn joint_from_knn(
     perplexity: f64,
     stats: &mut InputStageStats,
 ) -> Csr {
-    let KnnResult { indices, mut distances, k, build_secs, query_secs } = knn;
+    let KnnResult { indices, mut distances, k, build_secs, query_secs, backend } = knn;
     stats.knn_build_secs = build_secs;
     stats.knn_query_secs = query_secs;
+    stats.backend = backend;
 
     // Degenerate n = 1: no neighbors exist (k clamped to 0), so P is the
     // empty distribution — return it cleanly instead of handing empty
@@ -270,7 +303,19 @@ mod tests {
         let x = random_data(n, dim, 11);
         let pool = ThreadPool::new(4);
         let (p_plain, _) = joint_probabilities(&pool, &x, n, dim, 12.0, &VpTreeKnn, 7);
-        let art = joint_probabilities_with_tree(&pool, &x, n, dim, 12.0, crate::sne::KnnChoice::VpTree, 7);
+        let art = joint_probabilities_with_tree(
+            &pool,
+            &x,
+            n,
+            dim,
+            12.0,
+            crate::sne::KnnChoice::VpTree,
+            300,
+            16,
+            7,
+        );
+        assert!(art.hnsw.is_none());
+        assert_eq!(art.stats.backend, "vptree");
         // Same seed → same vp-tree → same kNN rows → identical P.
         assert_eq!(p_plain, art.p);
         assert_eq!(art.vp.len(), n);
@@ -286,9 +331,49 @@ mod tests {
         let (n, dim) = (120, 4);
         let x = random_data(n, dim, 13);
         let pool = ThreadPool::new(2);
-        let art = joint_probabilities_with_tree(&pool, &x, n, dim, 8.0, crate::sne::KnnChoice::Brute, 5);
+        let art = joint_probabilities_with_tree(
+            &pool,
+            &x,
+            n,
+            dim,
+            8.0,
+            crate::sne::KnnChoice::Brute,
+            300,
+            16,
+            5,
+        );
         assert!((art.p.sum() - 1.0).abs() < 1e-4);
         assert_eq!(art.vp.len(), n);
+        assert!(art.hnsw.is_none());
+        assert_eq!(art.stats.backend, "brute");
+    }
+
+    #[test]
+    fn hnsw_backend_yields_valid_p_and_keeps_graph() {
+        let (n, dim) = (500, 6);
+        let x = random_data(n, dim, 17);
+        let pool = ThreadPool::new(4);
+        let art = joint_probabilities_with_tree(
+            &pool,
+            &x,
+            n,
+            dim,
+            12.0,
+            crate::sne::KnnChoice::Hnsw,
+            300,
+            16,
+            7,
+        );
+        assert!((art.p.sum() - 1.0).abs() < 1e-4);
+        assert!(art.p.is_symmetric(1e-4));
+        assert_eq!(art.stats.backend, "hnsw");
+        let g = art.hnsw.expect("hnsw backend keeps the graph");
+        assert_eq!(g.len(), n);
+        assert_eq!(g.dim(), dim);
+        // The vp-tree is still fitted — it remains the exact oracle.
+        assert_eq!(art.vp.len(), n);
+        assert!(art.stats.knn_build_secs > 0.0);
+        assert!(art.stats.knn_query_secs > 0.0);
     }
 
     #[test]

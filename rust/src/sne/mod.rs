@@ -20,7 +20,7 @@ pub use model::{TransformOptions, TransformResult, TransformStats, TsneModel};
 pub use sparse::Csr;
 
 use crate::data::io;
-use crate::knn::{BruteKnn, KnnBackend, VpTreeKnn};
+use crate::knn::{BruteKnn, HnswKnn, KnnBackend, VpTreeKnn};
 use crate::spatial::CellSizeMode;
 use crate::util::{fault, simd, Pcg32, Stopwatch, ThreadPool};
 
@@ -58,8 +58,14 @@ impl AttractiveBackend for CpuAttractive {
 /// Which kNN backend builds the input similarities.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum KnnChoice {
+    /// Exact vantage-point tree (the paper's §4.1 structure).
     VpTree,
+    /// Exact O(N²) comparator.
     Brute,
+    /// Approximate HNSW graph — near-linear input stage for
+    /// million-point runs; quality gated by recall@k against the exact
+    /// oracle. Knobs: [`TsneConfig::knn_ef`], [`TsneConfig::knn_m`].
+    Hnsw,
 }
 
 /// Full configuration of one t-SNE run — field defaults mirror the
@@ -87,6 +93,12 @@ pub struct TsneConfig {
     pub repulsion: Option<RepulsionMethod>,
     /// kNN backend for the input stage.
     pub knn: KnnChoice,
+    /// HNSW search breadth `ef_search` (only read when `knn` is
+    /// [`KnnChoice::Hnsw`]; must comfortably exceed ⌊3·perplexity⌋).
+    pub knn_ef: usize,
+    /// HNSW max links per node per layer M (only read when `knn` is
+    /// [`KnnChoice::Hnsw`]).
+    pub knn_m: usize,
     /// Cell-size measure in the BH condition.
     pub cell_size: CellSizeMode,
     /// Compute the KL cost every `cost_every` iterations (0 = never; cost
@@ -107,6 +119,8 @@ impl Default for TsneConfig {
             seed: 42,
             repulsion: None,
             knn: KnnChoice::VpTree,
+            knn_ef: crate::knn::DEFAULT_EF_SEARCH,
+            knn_m: crate::knn::DEFAULT_M,
             cell_size: CellSizeMode::Diagonal,
             cost_every: 50,
         }
@@ -262,7 +276,7 @@ impl TsneRunner {
     /// the config, and the run stats — as a persistable [`TsneModel`]
     /// (which owns a copy of the reference rows).
     pub fn fit(&mut self, x: &[f32], dim: usize) -> anyhow::Result<TsneModel> {
-        let (y, vp, p) = self.fit_core(x, dim, true)?;
+        let (y, vp, hnsw, p) = self.fit_core(x, dim, true)?;
         Ok(TsneModel {
             config: self.config.clone(),
             dim,
@@ -271,6 +285,7 @@ impl TsneRunner {
             labels: Vec::new(),
             pca: None,
             vp: vp.expect("fit keeps the vp-tree"),
+            hnsw,
             p,
             embedding: y,
             stats: self.stats.clone(),
@@ -282,12 +297,18 @@ impl TsneRunner {
     /// fit path sets: the vp-tree becomes the serving artifact (and is
     /// built even for the brute backend); the run path skips it so
     /// `--brute-knn` keeps avoiding tree construction entirely.
+    #[allow(clippy::type_complexity)]
     fn fit_core(
         &mut self,
         x: &[f32],
         dim: usize,
         keep_tree: bool,
-    ) -> anyhow::Result<(Vec<f32>, Option<crate::vptree::VpArena>, Csr)> {
+    ) -> anyhow::Result<(
+        Vec<f32>,
+        Option<crate::vptree::VpArena>,
+        Option<crate::knn::HnswGraph>,
+        Csr,
+    )> {
         if dim == 0 || x.len() % dim != 0 {
             return Err(SneError::ShapeMismatch { len: x.len(), dim }.into());
         }
@@ -305,7 +326,7 @@ impl TsneRunner {
         let total_sw = Stopwatch::start();
 
         // ---- Input similarities (Eq. 6/7) ----
-        let (mut p, vp) = if keep_tree {
+        let (mut p, vp, hnsw) = if keep_tree {
             let artifacts = input::joint_probabilities_with_tree(
                 &self.pool,
                 x,
@@ -313,14 +334,21 @@ impl TsneRunner {
                 dim,
                 self.config.perplexity,
                 self.config.knn,
+                self.config.knn_ef,
+                self.config.knn_m,
                 self.config.seed,
             );
             self.stats.input_stage = artifacts.stats;
-            (artifacts.p, Some(artifacts.vp))
+            (artifacts.p, Some(artifacts.vp), artifacts.hnsw)
         } else {
+            let hnsw_backend;
             let backend: &dyn KnnBackend = match self.config.knn {
                 KnnChoice::VpTree => &VpTreeKnn,
                 KnnChoice::Brute => &BruteKnn,
+                KnnChoice::Hnsw => {
+                    hnsw_backend = HnswKnn::with_knobs(self.config.knn_m, self.config.knn_ef);
+                    &hnsw_backend
+                }
             };
             let (p, stats) = input::joint_probabilities(
                 &self.pool,
@@ -332,13 +360,13 @@ impl TsneRunner {
                 self.config.seed,
             );
             self.stats.input_stage = stats;
-            (p, None)
+            (p, None, None)
         };
 
         // ---- Optimize (leaves P un-exaggerated) ----
         let y = self.optimize(&mut p, n)?;
         self.stats.total_secs = total_sw.elapsed_secs();
-        Ok((y, vp, p))
+        Ok((y, vp, hnsw, p))
     }
 
     /// Run the gradient loop on a pre-computed joint distribution

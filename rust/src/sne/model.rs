@@ -47,6 +47,7 @@ use super::gradient::RepulsionMethod;
 use super::perplexity::{solve_row, DEFAULT_TOL};
 use super::sparse::Csr;
 use super::{AttractiveBackend, CpuAttractive, RunStats, TsneConfig};
+use crate::knn::{HnswGraph, HnswScratch};
 use crate::pca::Pca;
 use crate::util::pool::SendPtr;
 use crate::util::{Stopwatch, ThreadPool};
@@ -77,6 +78,10 @@ pub struct TsneModel {
     /// Fitted input-space vp-tree arena (dataset-detached; queries view
     /// it against `x` with no rebuild).
     pub vp: VpArena,
+    /// Fitted HNSW graph when the fit used the approximate backend — the
+    /// transform attach stage then queries it instead of the vp-tree
+    /// (persisted in its own `.bhsne` section; no rebuild on load).
+    pub hnsw: Option<HnswGraph>,
     /// Symmetrized joint similarity P of the fit (sums to 1).
     pub p: Csr,
     /// Final embedding, row-major `n × config.out_dim`.
@@ -163,6 +168,47 @@ pub fn attach_rows(
         let oi = &mut idx[i * k..(i + 1) * k];
         let od = &mut d2[i * k..(i + 1) * k];
         let got = tree.knn_into(q, k, None, scratch, oi, od);
+        debug_assert_eq!(got, k, "reference corpus has >= k rows");
+        for d in od.iter_mut() {
+            *d *= *d;
+        }
+        let (_, ok) = solve_row(od, perplexity, DEFAULT_TOL, &mut prow[i * k..(i + 1) * k], solve_scratch);
+        if !ok {
+            failures += 1;
+        }
+    }
+    failures
+}
+
+/// [`attach_rows`] twin for HNSW-fitted models: batched approximate kNN
+/// against the fitted graph (zero heap allocation per query on a warm
+/// [`HnswScratch`]), same squared-distance + bandwidth-solve tail.
+#[allow(clippy::too_many_arguments)]
+pub fn attach_rows_hnsw(
+    graph: &HnswGraph,
+    x_ref: &[f32],
+    xq: &[f32],
+    dim: usize,
+    k: usize,
+    ef: usize,
+    perplexity: f64,
+    scratch: &mut HnswScratch,
+    solve_scratch: &mut Vec<f64>,
+    idx: &mut [u32],
+    d2: &mut [f32],
+    prow: &mut [f32],
+) -> usize {
+    let rows = xq.len() / dim;
+    assert_eq!(xq.len(), rows * dim);
+    assert_eq!(idx.len(), rows * k);
+    assert_eq!(d2.len(), rows * k);
+    assert_eq!(prow.len(), rows * k);
+    let mut failures = 0usize;
+    for i in 0..rows {
+        let q = &xq[i * dim..(i + 1) * dim];
+        let oi = &mut idx[i * k..(i + 1) * k];
+        let od = &mut d2[i * k..(i + 1) * k];
+        let got = graph.knn_into(x_ref, q, k, ef, None, scratch, oi, od);
         debug_assert_eq!(got, k, "reference corpus has >= k rows");
         for d in od.iter_mut() {
             *d *= *d;
@@ -291,7 +337,6 @@ impl TsneModel {
         let mut idx = vec![0u32; m * k];
         let mut d2 = vec![0f32; m * k];
         let mut prow = vec![0f32; m * k];
-        let view = self.vp.view(&self.x);
         let sw = Stopwatch::start();
         {
             use std::sync::atomic::{AtomicUsize, Ordering};
@@ -300,39 +345,81 @@ impl TsneModel {
             let dc = SendPtr(d2.as_mut_ptr());
             let pc = SendPtr(prow.as_mut_ptr());
             let fref = &failures;
-            let view_ref = &view;
-            pool.scope_chunks_with(
-                m,
-                16,
-                || (SearchScratch::new(k), Vec::with_capacity(k)),
-                |(scratch, solve), lo, hi| {
-                    let _ = (&ic, &dc, &pc);
-                    let rows = hi - lo;
-                    // SAFETY: chunk row ranges are disjoint across workers.
-                    let (bi, bd, bp) = unsafe {
-                        (
-                            std::slice::from_raw_parts_mut(ic.0.add(lo * k), rows * k),
-                            std::slice::from_raw_parts_mut(dc.0.add(lo * k), rows * k),
-                            std::slice::from_raw_parts_mut(pc.0.add(lo * k), rows * k),
-                        )
-                    };
-                    let f = attach_rows(
-                        view_ref,
-                        &xq[lo * dim..hi * dim],
-                        dim,
-                        k,
-                        perplexity,
-                        scratch,
-                        solve,
-                        bi,
-                        bd,
-                        bp,
-                    );
-                    if f > 0 {
-                        fref.fetch_add(f, Ordering::Relaxed);
-                    }
-                },
-            );
+            if let Some(graph) = &self.hnsw {
+                // HNSW-fitted model: the graph is the serving index, with
+                // the fit-time search breadth (floored at k).
+                let ef = self.config.knn_ef.max(k);
+                let x_ref: &[f32] = &self.x;
+                pool.scope_chunks_with(
+                    m,
+                    16,
+                    || (HnswScratch::new(self.n, graph.m(), ef), Vec::with_capacity(k)),
+                    |(scratch, solve), lo, hi| {
+                        let _ = (&ic, &dc, &pc);
+                        let rows = hi - lo;
+                        // SAFETY: chunk row ranges are disjoint across workers.
+                        let (bi, bd, bp) = unsafe {
+                            (
+                                std::slice::from_raw_parts_mut(ic.0.add(lo * k), rows * k),
+                                std::slice::from_raw_parts_mut(dc.0.add(lo * k), rows * k),
+                                std::slice::from_raw_parts_mut(pc.0.add(lo * k), rows * k),
+                            )
+                        };
+                        let f = attach_rows_hnsw(
+                            graph,
+                            x_ref,
+                            &xq[lo * dim..hi * dim],
+                            dim,
+                            k,
+                            ef,
+                            perplexity,
+                            scratch,
+                            solve,
+                            bi,
+                            bd,
+                            bp,
+                        );
+                        if f > 0 {
+                            fref.fetch_add(f, Ordering::Relaxed);
+                        }
+                    },
+                );
+            } else {
+                let view = self.vp.view(&self.x);
+                let view_ref = &view;
+                pool.scope_chunks_with(
+                    m,
+                    16,
+                    || (SearchScratch::new(k), Vec::with_capacity(k)),
+                    |(scratch, solve), lo, hi| {
+                        let _ = (&ic, &dc, &pc);
+                        let rows = hi - lo;
+                        // SAFETY: chunk row ranges are disjoint across workers.
+                        let (bi, bd, bp) = unsafe {
+                            (
+                                std::slice::from_raw_parts_mut(ic.0.add(lo * k), rows * k),
+                                std::slice::from_raw_parts_mut(dc.0.add(lo * k), rows * k),
+                                std::slice::from_raw_parts_mut(pc.0.add(lo * k), rows * k),
+                            )
+                        };
+                        let f = attach_rows(
+                            view_ref,
+                            &xq[lo * dim..hi * dim],
+                            dim,
+                            k,
+                            perplexity,
+                            scratch,
+                            solve,
+                            bi,
+                            bd,
+                            bp,
+                        );
+                        if f > 0 {
+                            fref.fetch_add(f, Ordering::Relaxed);
+                        }
+                    },
+                );
+            }
             stats.perplexity_failures = failures.load(Ordering::Relaxed);
         }
         stats.attach_secs = sw.elapsed_secs();
@@ -660,6 +747,42 @@ mod tests {
             let s: f32 = prow[i * k..(i + 1) * k].iter().sum();
             assert!((s - 1.0).abs() < 1e-4, "row {i} sums to {s}");
             assert!(idx[i * k..(i + 1) * k].iter().all(|&c| (c as usize) < model.n));
+        }
+    }
+
+    #[test]
+    fn hnsw_fitted_model_serves_transform_through_graph() {
+        let spec = SyntheticSpec {
+            n: 260,
+            dim: 8,
+            classes: 3,
+            class_sep: 6.0,
+            seed: 13,
+            ..Default::default()
+        };
+        let data = gaussian_mixture(&spec);
+        let cfg = TsneConfig {
+            iters: 120,
+            exaggeration_iters: 30,
+            cost_every: 40,
+            perplexity: 12.0,
+            seed: 3,
+            knn: crate::sne::KnnChoice::Hnsw,
+            ..Default::default()
+        };
+        let mut runner = TsneRunner::new(cfg);
+        let model = runner.fit(&data.x, data.dim).unwrap();
+        assert!(model.hnsw.is_some(), "hnsw fit keeps the graph");
+        assert_eq!(model.stats.input_stage.backend, "hnsw");
+        let pool = ThreadPool::new(2);
+        let q = &data.x[..16 * data.dim];
+        let r = model.transform_with(&pool, q, data.dim, &TransformOptions::default()).unwrap();
+        assert!(r.y.iter().all(|v| v.is_finite()));
+        assert_eq!(r.stats.perplexity_failures, 0);
+        // Training queries find themselves through the graph (ef exceeds
+        // n here, so the serving search is effectively exhaustive).
+        for (i, &nn) in r.nn_input.iter().enumerate() {
+            assert_eq!(nn as usize, i, "training query {i} did not find itself");
         }
     }
 

@@ -12,6 +12,19 @@ use crate::util::simd;
 /// vp-tree pruning to be exact.
 pub trait Metric {
     fn dist(&self, a: &[f32], b: &[f32]) -> f32;
+
+    /// Distances from `q` to several dataset rows gathered by index, in
+    /// one call (`out[j] = d(q, row items[j])`). The default loops over
+    /// [`Metric::dist`]; metrics with a per-call dispatch cost (the
+    /// runtime-selected SIMD kernels) override it to hoist the dispatch
+    /// once per batch. Implementations MUST be bit-identical to per-pair
+    /// `dist` calls — the batched vp-tree search relies on that to stay
+    /// bit-equal to its one-at-a-time oracle.
+    fn dist_batch(&self, q: &[f32], data: &[f32], dim: usize, items: &[u32], out: &mut [f32]) {
+        for (slot, &i) in items.iter().enumerate() {
+            out[slot] = self.dist(q, &data[i as usize * dim..(i as usize + 1) * dim]);
+        }
+    }
 }
 
 /// Euclidean (L2) distance.
@@ -27,6 +40,18 @@ impl Metric for Euclidean {
         // vp-tree build partitions and the batched kNN queries. This is
         // the single hottest scalar loop in kNN search.
         simd::sq_euclidean(simd::backend(), a, b).sqrt()
+    }
+
+    #[inline]
+    fn dist_batch(&self, q: &[f32], data: &[f32], dim: usize, items: &[u32], out: &mut [f32]) {
+        // One backend lookup per batch instead of one per pair; each
+        // pair still runs the identical kernel, so values are bitwise
+        // equal to per-pair `dist` calls.
+        let be = simd::backend();
+        for (slot, &i) in items.iter().enumerate() {
+            let row = &data[i as usize * dim..(i as usize + 1) * dim];
+            out[slot] = simd::sq_euclidean(be, q, row).sqrt();
+        }
     }
 }
 

@@ -516,7 +516,8 @@ impl<'a, M: Metric> VpTree<'a, M> {
     /// k nearest neighbors of an arbitrary query row, ascending by
     /// distance. If `exclude` is `Some(i)`, dataset item `i` is skipped
     /// (self-exclusion for all-pairs kNN). Allocating convenience wrapper
-    /// over [`VpTree::knn_into`].
+    /// that runs the one-at-a-time [`VpTree::search`] — the bit-identity
+    /// oracle for the batched-metric path [`VpTree::knn_into`] takes.
     pub fn knn(&self, query: &[f32], k: usize, exclude: Option<u32>) -> Vec<(u32, f32)> {
         assert_eq!(query.len(), self.dim);
         if k == 0 {
@@ -545,7 +546,7 @@ impl<'a, M: Metric> VpTree<'a, M> {
             return 0;
         }
         scratch.heap.reset(k);
-        self.search(self.root, query, exclude, scratch);
+        self.search_batched(self.root, query, exclude, scratch);
         scratch.heap.drain_sorted_into(out_idx, out_dst)
     }
 
@@ -592,6 +593,90 @@ impl<'a, M: Metric> VpTree<'a, M> {
             }
             if near != NO_CHILD {
                 stack.push(near);
+            }
+        }
+    }
+
+    /// Batched-metric twin of [`VpTree::search`]: the distances of the
+    /// children a visit decides to explore are gathered and evaluated in
+    /// one [`Metric::dist_batch`] call (one kernel dispatch per node
+    /// visit instead of one per distance — the SoA amortization the BH
+    /// traversal uses), and stack entries carry their precomputed
+    /// distance so a pop never re-dispatches. The visit order, offer
+    /// sequence, push decisions, and per-pair arithmetic are identical to
+    /// the one-at-a-time path, so the result heap is **bit-identical** —
+    /// `search` stays as the oracle (`batched_search_is_bit_identical`).
+    fn search_batched(
+        &self,
+        root: u32,
+        query: &[f32],
+        exclude: Option<u32>,
+        scratch: &mut SearchScratch,
+    ) {
+        if root == NO_CHILD {
+            return;
+        }
+        let heap = &mut scratch.heap;
+        let stack = &mut scratch.stack;
+        let dists = &mut scratch.dists;
+        stack.clear();
+        dists.clear();
+        let root_node = self.nodes[root as usize];
+        let mut batch_items = [root_node.item, 0];
+        let mut batch_out = [0f32; 2];
+        self.metric.dist_batch(query, self.data, self.dim, &batch_items[..1], &mut batch_out[..1]);
+        stack.push(root);
+        dists.push(batch_out[0]);
+        while let Some(id) = stack.pop() {
+            let node = self.nodes[id as usize];
+            let d = dists.pop().expect("dist stack tracks node stack");
+            if exclude != Some(node.item) {
+                heap.offer(node.item, d);
+            }
+            let tau = heap.tau();
+            let (near, far) = if d < node.radius {
+                (node.left, node.right)
+            } else {
+                (node.right, node.left)
+            };
+            let explore_far = match far {
+                f if f == NO_CHILD => false,
+                _ => {
+                    if d < node.radius {
+                        d + tau >= node.radius
+                    } else {
+                        d - tau <= node.radius
+                    }
+                }
+            };
+            // Same push order as the oracle (far first so near pops
+            // first); both explored children share one batched kernel
+            // call, their distances riding the stack to their pops.
+            let mut m = 0usize;
+            let mut push_ids = [0u32; 2];
+            if explore_far {
+                push_ids[m] = far;
+                m += 1;
+            }
+            if near != NO_CHILD {
+                push_ids[m] = near;
+                m += 1;
+            }
+            if m > 0 {
+                for (slot, &pid) in push_ids[..m].iter().enumerate() {
+                    batch_items[slot] = self.nodes[pid as usize].item;
+                }
+                self.metric.dist_batch(
+                    query,
+                    self.data,
+                    self.dim,
+                    &batch_items[..m],
+                    &mut batch_out[..m],
+                );
+                for slot in 0..m {
+                    stack.push(push_ids[slot]);
+                    dists.push(batch_out[slot]);
+                }
             }
         }
     }
@@ -833,6 +918,33 @@ mod tests {
             assert_eq!(got, want.len());
             for j in 0..got {
                 assert_eq!((oi[j], od[j]), want[j], "q={q} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_search_is_bit_identical() {
+        // knn_into runs the batched-metric DFS; knn runs the
+        // one-at-a-time oracle. Same query → same heap, bit for bit,
+        // including on duplicate-heavy (maximal-tie) clouds.
+        let (n, dim, k) = (400, 7, 12);
+        let mut data = random_points(n, dim, 44);
+        for v in data.iter_mut().take(n * dim / 3) {
+            *v = 1.25; // duplicate-heavy prefix
+        }
+        let tree = VpTree::build(&data, n, dim, 15);
+        let mut scratch = SearchScratch::new(k);
+        let mut oi = vec![0u32; k];
+        let mut od = vec![0f32; k];
+        for q in 0..n {
+            let row = &data[q * dim..(q + 1) * dim];
+            let want = tree.knn(row, k, Some(q as u32));
+            let got = tree.knn_into(row, k, Some(q as u32), &mut scratch, &mut oi, &mut od);
+            assert_eq!(got, want.len(), "q={q}");
+            for j in 0..got {
+                // Bitwise: same items, same distance bit patterns.
+                assert_eq!(oi[j], want[j].0, "q={q} j={j}");
+                assert_eq!(od[j].to_bits(), want[j].1.to_bits(), "q={q} j={j}");
             }
         }
     }

@@ -13,25 +13,32 @@ pub struct NeighborHeap {
     heap: Vec<(f32, u32)>,
 }
 
-/// Reusable scratch for batched kNN queries: the candidate heap and the
-/// DFS node stack survive across queries so each query on a warm scratch
-/// performs zero heap allocations.
+/// Reusable scratch for batched kNN queries: the candidate heap, the DFS
+/// node stack, and its parallel precomputed-distance stack (the batched
+/// search evaluates child distances at the parent visit) survive across
+/// queries so each query on a warm scratch performs zero heap
+/// allocations.
 #[derive(Debug)]
 pub struct SearchScratch {
     pub(crate) heap: NeighborHeap,
     pub(crate) stack: Vec<u32>,
+    pub(crate) dists: Vec<f32>,
 }
 
 impl SearchScratch {
     pub fn new(k: usize) -> Self {
-        SearchScratch { heap: NeighborHeap::new(k.max(1)), stack: Vec::with_capacity(64) }
+        SearchScratch {
+            heap: NeighborHeap::new(k.max(1)),
+            stack: Vec::with_capacity(64),
+            dists: Vec::with_capacity(64),
+        }
     }
 
     /// Capacity snapshot of the backing buffers — warm queries must leave
     /// it unchanged (the zero-per-query-allocation assertion used by the
     /// model-layer transform tests).
-    pub fn capacities(&self) -> [usize; 2] {
-        [self.heap.capacity(), self.stack.capacity()]
+    pub fn capacities(&self) -> [usize; 3] {
+        [self.heap.capacity(), self.stack.capacity(), self.dists.capacity()]
     }
 }
 

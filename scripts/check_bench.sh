@@ -16,6 +16,10 @@
 #      runner noise while still failing a kernel that silently fell back
 #      to scalar code. Skipped when `kernel_backend` is "portable": there
 #      both rows measure the same code path and the ratio is pure noise.
+#   4. HNSW input stage — `hnsw_recall_at_k` must be a finite number in
+#      (0, 1] and at least 0.90 (the approximate backend's quality bar),
+#      and the approximate all-kNN query must beat the exact vp-tree
+#      query at bench scale, or the backend has no reason to exist.
 #
 # Plain bash + grep + awk on the single-line JSON; no jq dependency.
 set -u
@@ -66,6 +70,9 @@ input_stage
 vp_build_serial_ns_per_point
 vp_build_parallel_ns_per_point
 knn_query_ns_per_point
+hnsw_build_ns_per_point
+hnsw_query_ns_per_point
+hnsw_recall_at_k
 symmetrize_ns_per_point
 "
 for key in $required_keys; do
@@ -111,6 +118,36 @@ else
             err "${pair}: simd $v ns/point exceeds 1.15 * scalar $s ns/point (backend $backend)"
         fi
     done
+fi
+
+# ---- 4. HNSW input-stage gates: recall quality and query speedup. ----
+recall=$(value_of "hnsw_recall_at_k")
+case "$recall" in
+    '' | *[!0-9.]* | . | *.*.*)
+        err "\"hnsw_recall_at_k\" is not a finite number: '${recall:-<missing>}'"
+        ;;
+    *)
+        if awk -v r="$recall" 'BEGIN { exit !(r > 0 && r <= 1) }'; then
+            if awk -v r="$recall" 'BEGIN { exit !(r >= 0.90) }'; then
+                echo "check_bench: ok   hnsw recall@k $recall >= 0.90"
+            else
+                err "hnsw_recall_at_k $recall below the 0.90 quality bar"
+            fi
+        else
+            err "hnsw_recall_at_k $recall outside (0, 1]"
+        fi
+        ;;
+esac
+hq=$(value_of "hnsw_query_ns_per_point")
+vq=$(value_of "knn_query_ns_per_point")
+if [ -n "$hq" ] && [ -n "$vq" ]; then
+    if awk -v h="$hq" -v v="$vq" 'BEGIN { exit !(h < v) }'; then
+        echo "check_bench: ok   hnsw query $hq < exact vp-tree query $vq ns/point"
+    else
+        err "hnsw query $hq ns/point not faster than exact vp-tree query $vq ns/point"
+    fi
+else
+    err "cannot compare hnsw vs exact query cost (hnsw='$hq' exact='$vq')"
 fi
 
 if [ "$fail" -ne 0 ]; then
