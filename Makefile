@@ -3,7 +3,7 @@
 # gets a local entry point; everything else is a one-liner kept here for
 # discoverability.
 
-.PHONY: build test bench check-bench crash-drill lint
+.PHONY: build test bench check-bench crash-drill serve-drill lint
 
 build:
 	cargo build --release
@@ -25,6 +25,13 @@ check-bench: bench
 # against an uninterrupted reference run's.
 crash-drill: build
 	bash scripts/crash_resume_smoke.sh
+
+# The CI serve drill: stand up `bhsne serve` on a unix socket, prove the
+# served placements are byte-identical to one-shot transform, inject a
+# worker panic + a stalled batch (BHSNE_FAULT) and assert the server
+# sheds with structured errors, keeps serving, and drains clean.
+serve-drill: build
+	bash scripts/serve_smoke.sh
 
 lint:
 	cargo fmt --all --check

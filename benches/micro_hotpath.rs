@@ -7,10 +7,12 @@
 //! rows, perplexity solve, streaming symmetrize), the dense
 //! exact repulsion, the grid-interpolation repulsion stages (charge
 //! spread and force gather per kernel backend, plus the full
-//! prepare→spread→convolve→gather pass), and the model-serving
+//! prepare→spread→convolve→gather pass), the model-serving
 //! transform (fit once, then
 //! place held-out batches into the frozen map — emits
-//! `transform_ns_per_point`).
+//! `transform_ns_per_point`), and the serve layer itself (concurrent
+//! clients through the admission queue and micro-batch worker pool —
+//! emits `serve_points_per_sec` and `serve_p99_ms`).
 //!
 //! Besides the human-readable table, the run always writes
 //! `BENCH_micro_hotpath.json` with normalized ns/point figures
@@ -25,6 +27,7 @@
 use bhsne::data::synthetic::{gaussian_mixture, SyntheticSpec};
 use bhsne::knn::{recall_at_k, HnswGraph, HnswParams, KnnResult};
 use bhsne::runtime::{Runtime, SneEngine};
+use bhsne::serve::{ServeConfig, Server, Status};
 use bhsne::sne::gradient;
 use bhsne::sne::sparse::Csr;
 use bhsne::sne::{InterpGrid, TransformOptions, TsneConfig, TsneRunner};
@@ -389,6 +392,52 @@ fn main() {
     });
     push("model_transform", (transform_secs, tr10, tr90));
 
+    // ---- Serve layer: the same frozen model behind the admission
+    // queue / micro-batch worker pool, hammered by concurrent in-process
+    // clients. Degradation and deadlines stay off so every request runs
+    // at full fidelity — the figure is the robustness layer's overhead
+    // plus batching, not a shedding artifact. Emits
+    // `serve_points_per_sec` (drive-window saturation) and
+    // `serve_p99_ms` (end-to-end, queue wait included). ----
+    let serve_clients = 4usize;
+    let serve_batch_rows = 25usize;
+    let serve_dim = serve_data.dim;
+    let server = Server::start(
+        model,
+        ServeConfig {
+            queue_depth: 512,
+            deadline_ms: 0,
+            batch_max: 4,
+            degrade_p99_ms: 0.0,
+            workers: 2,
+            threads: 0,
+            opts: topts.clone(),
+        },
+    );
+    let handle = server.handle();
+    let serve_chunks: Vec<&[f32]> = x_query.chunks(serve_batch_rows * serve_dim).collect();
+    let serve_sw = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..serve_clients {
+            let h = handle.clone();
+            let chunks = &serve_chunks;
+            s.spawn(move || {
+                let mut i = c;
+                while i < chunks.len() {
+                    let r = h.submit(chunks[i], serve_dim);
+                    assert_eq!(r.status, Status::Ok, "serve bench request failed: {}", r.message);
+                    i += serve_clients;
+                }
+            });
+        }
+    });
+    let serve_secs = serve_sw.elapsed().as_secs_f64();
+    let serve_snap = server.shutdown();
+    assert!(serve_snap.accepted_accounted_for(), "serve bench stats do not balance");
+    let serve_points_per_sec = n_query as f64 / serve_secs.max(1e-12);
+    let serve_p99_ms = serve_snap.p99_ms;
+    push("serve_drive_window", (serve_secs, serve_secs, serve_secs));
+
     table.emit(&opts);
     println!(
         "(tree refit under drift: {refit_adaptive} adaptive, {refit_fallback} full re-sorts)"
@@ -428,6 +477,8 @@ fn main() {
             "\"interp_gather_simd_ns_per_point\":{:.2},",
             "\"interp_total_ns_per_point\":{:.2},",
             "\"transform_ns_per_point\":{:.2},",
+            "\"serve_points_per_sec\":{:.1},",
+            "\"serve_p99_ms\":{:.3},",
             "\"iter_build_plus_eval_ms\":{:.4},",
             "\"input_stage\":{{\"n\":{},",
             "\"vp_build_serial_ns_per_point\":{:.2},",
@@ -460,6 +511,8 @@ fn main() {
         per_point(igather_by_backend[1]),
         per_point(interp_total),
         transform_secs * 1e9 / n_query as f64,
+        serve_points_per_sec,
+        serve_p99_ms,
         iter_secs * 1e3,
         n_vp,
         per_point_vp(vp_serial),

@@ -79,14 +79,20 @@ fn main() -> anyhow::Result<()> {
         r.stats.opt_secs
     );
 
-    // 5. Placement quality: held-out 1-NN label error vs the fitted map's.
-    let fitted_err = eval::one_nn_error(&pool, &loaded.embedding, loaded.out_dim(), l_fit);
-    let placement_err = loaded.placement_1nn_error(&pool, &r.y, l_query)?;
-    println!("fitted 1-NN error    : {fitted_err:.4}");
-    println!("placement 1-NN error : {placement_err:.4}");
+    // 5. Placement quality: the shared report the transform job and the
+    //    serve drive client print too — one computation, one set of
+    //    numbers everywhere.
+    let q = eval::PlacementQuality::evaluate(&pool, &loaded, &r.y, l_query, Some(&r.nn_input))?;
+    println!("fitted 1-NN error    : {:.4}", q.fitted_1nn_error);
+    println!("placement 1-NN error : {:.4}", q.placement_1nn_error);
+    if let Some(agree) = q.input_nn_agreement {
+        println!("input-NN agreement   : {agree:.4}");
+    }
     anyhow::ensure!(
-        placement_err <= fitted_err + 0.1,
-        "held-out placement error {placement_err:.4} exceeds fitted error {fitted_err:.4} + 0.1"
+        q.placement_1nn_error <= q.fitted_1nn_error + 0.1,
+        "held-out placement error {:.4} exceeds fitted error {:.4} + 0.1",
+        q.placement_1nn_error,
+        q.fitted_1nn_error
     );
     println!("OK: held-out placements track the fitted map");
     Ok(())

@@ -6,7 +6,67 @@
 //! and trustworthiness (Venna & Kaski) for the extended benches.
 
 use crate::knn::{KnnBackend, VpTreeKnn};
+use crate::sne::TsneModel;
 use crate::util::ThreadPool;
+
+/// Placement quality of held-out queries against a fitted model — the
+/// one report shared by the transform job, the serve drive client, and
+/// the `model_serving` example, so every consumer computes (and prints)
+/// the same numbers from the same single embedding-NN pass.
+#[derive(Debug, Clone, Copy)]
+pub struct PlacementQuality {
+    /// Fraction of queries whose nearest *reference* point in the
+    /// embedding carries a different label.
+    pub placement_1nn_error: f64,
+    /// The fitted embedding's own 1-NN error — the bar placement error
+    /// is judged against (a placement can't beat the map it lands in).
+    pub fitted_1nn_error: f64,
+    /// Fraction of queries whose embedding-space nearest reference
+    /// agrees in label with their input-space nearest reference (needs
+    /// the transform's `nn_input` attachment indices).
+    pub input_nn_agreement: Option<f64>,
+}
+
+impl PlacementQuality {
+    /// Evaluate query placements `yq` (labels `labels_q`) against
+    /// `model`. `nn_input` is the transform's input-space attachment
+    /// index per query; pass `None` when only placements are available
+    /// (e.g. replies collected over the serve wire).
+    pub fn evaluate(
+        pool: &ThreadPool,
+        model: &TsneModel,
+        yq: &[f32],
+        labels_q: &[u8],
+        nn_input: Option<&[u32]>,
+    ) -> anyhow::Result<PlacementQuality> {
+        anyhow::ensure!(
+            model.labels.len() == model.n,
+            "model has no reference labels; refit with labels to evaluate placement"
+        );
+        let emb_nn = model.embedding_nn(pool, yq)?;
+        let m = labels_q.len();
+        anyhow::ensure!(
+            emb_nn.len() == m,
+            "placement rows ({}) do not match query labels ({m})",
+            emb_nn.len()
+        );
+        let wrong =
+            emb_nn.iter().zip(labels_q).filter(|&(&e, &l)| model.labels[e as usize] != l).count();
+        let input_nn_agreement = nn_input.map(|nn_in| {
+            emb_nn
+                .iter()
+                .zip(nn_in)
+                .filter(|&(&e, &i)| model.labels[e as usize] == model.labels[i as usize])
+                .count() as f64
+                / m.max(1) as f64
+        });
+        Ok(PlacementQuality {
+            placement_1nn_error: wrong as f64 / m.max(1) as f64,
+            fitted_1nn_error: one_nn_error(pool, &model.embedding, model.out_dim(), &model.labels),
+            input_nn_agreement,
+        })
+    }
+}
 
 /// 1-NN classification error of an embedding (paper's Figures 2/3/6/7).
 pub fn one_nn_error(pool: &ThreadPool, y: &[f32], dim: usize, labels: &[u8]) -> f64 {
@@ -141,6 +201,51 @@ mod tests {
         let pool = ThreadPool::new(2);
         let t = trustworthiness(&pool, &x, 2, &x, 2, n, 10);
         assert!((t - 1.0).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    fn placement_quality_matches_the_model_level_metric() {
+        use crate::data::synthetic::{gaussian_mixture, SyntheticSpec};
+        use crate::sne::{TransformOptions, TsneConfig, TsneRunner};
+        let data = gaussian_mixture(&SyntheticSpec {
+            n: 180,
+            dim: 6,
+            classes: 3,
+            class_sep: 6.0,
+            seed: 9,
+            ..Default::default()
+        });
+        let (x_fit, x_q) = data.x.split_at(150 * data.dim);
+        let (l_fit, l_q) = data.labels.split_at(150);
+        let cfg = TsneConfig {
+            iters: 80,
+            exaggeration_iters: 25,
+            cost_every: 0,
+            perplexity: 10.0,
+            seed: 3,
+            ..Default::default()
+        };
+        let mut runner = TsneRunner::new(cfg);
+        let mut model = runner.fit(x_fit, data.dim).unwrap();
+        model.labels = l_fit.to_vec();
+        let pool = ThreadPool::new(2);
+        let opts = TransformOptions { iters: 10, ..Default::default() };
+        let r = model.transform_with(&pool, x_q, data.dim, &opts).unwrap();
+        let q = PlacementQuality::evaluate(&pool, &model, &r.y, l_q, Some(&r.nn_input)).unwrap();
+        assert_eq!(
+            q.placement_1nn_error,
+            model.placement_1nn_error(&pool, &r.y, l_q).unwrap(),
+            "shared report must agree with the model-level metric"
+        );
+        let agree = q.input_nn_agreement.unwrap();
+        assert!((0.0..=1.0).contains(&agree), "agreement {agree}");
+        assert_eq!(
+            q.fitted_1nn_error,
+            one_nn_error(&pool, &model.embedding, model.out_dim(), &model.labels)
+        );
+        // A label-less model cannot be evaluated — structured error.
+        model.labels.clear();
+        assert!(PlacementQuality::evaluate(&pool, &model, &r.y, l_q, None).is_err());
     }
 
     #[test]

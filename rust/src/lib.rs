@@ -37,6 +37,7 @@ pub mod knn;
 pub mod pca;
 pub mod pipeline;
 pub mod runtime;
+pub mod serve;
 pub mod sne;
 pub mod spatial;
 pub mod util;

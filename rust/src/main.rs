@@ -4,6 +4,8 @@
 //!   embed     run one embedding job (dataset → PCA → BH-SNE → eval)
 //!   fit       run an embedding job and persist the model (`.bhsne`)
 //!   transform load a model and place held-out points into its frozen map
+//!   serve     keep a model loaded behind a fault-tolerant unix socket
+//!   drive     load-drive a running serve socket with held-out queries
 //!   sweep     parameter sweeps (θ, ρ, N) reproducing the paper's figures
 //!   quadtree  dump the quadtree of a small embedding (Figure 1)
 //!   info      show artifact/runtime status
@@ -33,6 +35,25 @@
 //! | `tsne.seed`               | `--seed`               |
 //! | `run.checkpoint`          | `--checkpoint`         |
 //! | `run.checkpoint_every`    | `--checkpoint-every`   |
+//! | `serve.queue_depth`       | `--queue-depth`        |
+//! | `serve.deadline_ms`       | `--deadline-ms`        |
+//! | `serve.batch_max`         | `--batch-max`          |
+//! | `serve.degrade_p99_ms`    | `--degrade-p99-ms`     |
+//! | `serve.workers`           | `--workers`            |
+//!
+//! `bhsne serve` loads a `.bhsne` once and serves transform requests over
+//! a dependency-free length-prefixed protocol on a unix socket. The
+//! server never dies with a poisoned batch (worker panics are isolated
+//! per micro-batch and surface as a structured `WorkerPanicked` reply),
+//! never queues past `serve.queue_depth` (full queue sheds with
+//! `Overloaded` carrying the depth), drops requests whose
+//! `serve.deadline_ms` lapsed in the queue before any placement work, and
+//! steps transform fidelity down (full iters → half → attach-only) when
+//! the sliding p99 crosses `serve.degrade_p99_ms`, re-promoting when load
+//! drains. At full fidelity a served placement is bit-identical to a
+//! one-shot `bhsne transform` of the same rows. Shutdown (a protocol
+//! frame; `bhsne drive --shutdown` sends one) drains accepted work and
+//! flushes final stats atomically to `--stats-out`.
 //!
 //! `--force-method` (`exact` | `bh` | `dualtree` | `interp`) picks the
 //! repulsion approximation; `--intervals` caps the grid resolution of
@@ -59,10 +80,15 @@
 
 use bhsne::data;
 use bhsne::pipeline::{
-    run_fit_job, run_job, run_sweep, run_transform_job, JobConfig, TransformJobConfig,
+    held_out_queries, make_pool, run_fit_job, run_job, run_serve_job, run_sweep,
+    run_transform_job, JobConfig, ServeJobConfig, TransformJobConfig,
 };
 use bhsne::runtime::SneEngine;
-use bhsne::sne::{RepulsionMethod, TransformOptions, TsneConfig};
+use bhsne::serve::{
+    read_response, write_control_request, write_transform_request, ServeConfig, ServeReply,
+    Status, REQ_SHUTDOWN, REQ_STATS,
+};
+use bhsne::sne::{RepulsionMethod, TransformOptions, TsneConfig, TsneModel};
 use bhsne::spatial::CellSizeMode;
 use bhsne::util::args::{parse, ArgError, CommandSpec};
 use bhsne::util::config::Config;
@@ -87,6 +113,8 @@ fn top_help() -> String {
      embed     run one embedding job\n  \
      fit       run one embedding job and write the model (.bhsne)\n  \
      transform load a model and embed held-out points into its frozen map\n  \
+     serve     keep a model loaded behind a fault-tolerant unix socket\n  \
+     drive     load-drive a running serve socket with held-out queries\n  \
      sweep     run a parameter sweep (theta | rho | size)\n  \
      quadtree  visualize the quadtree of a small embedding (Figure 1)\n  \
      info      artifact/runtime status\n\n\
@@ -104,6 +132,8 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         "embed" => cmd_embed(rest),
         "fit" => cmd_fit(rest),
         "transform" => cmd_transform(rest),
+        "serve" => cmd_serve(rest),
+        "drive" => cmd_drive(rest),
         "sweep" => cmd_sweep(rest),
         "quadtree" => cmd_quadtree(rest),
         "info" => cmd_info(rest),
@@ -449,16 +479,234 @@ fn cmd_transform(args: &[String]) -> anyhow::Result<()> {
         "attach/opt (s)     : {:.3} / {:.3}",
         t.stats.attach_secs, t.stats.opt_secs
     );
-    match (t.placement_1nn_error, t.fitted_1nn_error, t.input_nn_agreement) {
-        (Some(err), Some(fitted), Some(agree)) => {
-            println!("placement 1-NN err : {err:.4} (fitted embedding: {fitted:.4})");
-            println!("input-NN agreement : {agree:.4}");
+    match t.quality {
+        Some(q) => {
+            println!(
+                "placement 1-NN err : {:.4} (fitted embedding: {:.4})",
+                q.placement_1nn_error, q.fitted_1nn_error
+            );
+            if let Some(agree) = q.input_nn_agreement {
+                println!("input-NN agreement : {agree:.4}");
+            }
         }
-        _ => println!("placement quality  : n/a (model carries no labels)"),
+        None => println!("placement quality  : n/a (model carries no labels)"),
     }
     let finite = t.y.iter().all(|v| v.is_finite());
     println!("placements finite  : {finite}");
     anyhow::ensure!(finite, "transform produced non-finite placements");
+    Ok(())
+}
+
+fn serve_spec() -> CommandSpec {
+    CommandSpec::new("serve", "keep a fitted model loaded behind a fault-tolerant unix socket")
+        .opt("model", "out/model.bhsne", "model file written by `bhsne fit`")
+        .opt("socket", "out/serve.sock", "unix socket path to bind")
+        .opt(
+            "stats-out",
+            "out/serve_stats.json",
+            "final stats report written atomically on shutdown",
+        )
+        .opt("queue-depth", "64", "admission queue capacity (a full queue sheds with Overloaded)")
+        .opt("deadline-ms", "1000", "per-request deadline from admission in ms (0 = none)")
+        .opt("batch-max", "8", "max requests coalesced into one micro-batch")
+        .opt(
+            "degrade-p99-ms",
+            "250",
+            "degrade fidelity when the sliding p99 crosses this (0 = never degrade)",
+        )
+        .opt("workers", "2", "serve worker threads popping micro-batches")
+        .opt("threads", "0", "compute-pool threads shared by the workers (0 = all cores)")
+        .opt("iters", "60", "full-fidelity transform iterations (degradation level 0)")
+        .opt("eta", "0.1", "transform step size")
+        .opt("config", "", "TOML config file (CLI flags override)")
+}
+
+fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
+    let spec = serve_spec();
+    let p = match parse(&spec, "bhsne", args) {
+        Ok(p) => p,
+        Err(ArgError::Help(h)) => {
+            print!("{h}");
+            return Ok(());
+        }
+        Err(e) => anyhow::bail!("{e}"),
+    };
+    // Precedence mirrors job_from_parsed: explicit CLI flag > config-file
+    // key > CLI spec default.
+    let mut serve = ServeConfig::default();
+    let config_path = p.str("config").unwrap_or("");
+    let file = if config_path.is_empty() { None } else { Some(Config::load(config_path)?) };
+    if let Some(file) = &file {
+        serve.queue_depth = file.usize_or("serve.queue_depth", serve.queue_depth);
+        serve.deadline_ms = file.int_or("serve.deadline_ms", serve.deadline_ms as i64) as u64;
+        serve.batch_max = file.usize_or("serve.batch_max", serve.batch_max);
+        serve.degrade_p99_ms = file.float_or("serve.degrade_p99_ms", serve.degrade_p99_ms);
+        serve.workers = file.usize_or("serve.workers", serve.workers);
+    }
+    let use_cli =
+        |flag: &str, key: &str| p.provided(flag) || !file.as_ref().is_some_and(|f| f.get(key).is_some());
+    if use_cli("queue-depth", "serve.queue_depth") {
+        serve.queue_depth = p.get("queue-depth").map_err(anyhow::Error::msg)?;
+    }
+    if use_cli("deadline-ms", "serve.deadline_ms") {
+        serve.deadline_ms = p.get("deadline-ms").map_err(anyhow::Error::msg)?;
+    }
+    if use_cli("batch-max", "serve.batch_max") {
+        serve.batch_max = p.get("batch-max").map_err(anyhow::Error::msg)?;
+    }
+    if use_cli("degrade-p99-ms", "serve.degrade_p99_ms") {
+        serve.degrade_p99_ms = p.get("degrade-p99-ms").map_err(anyhow::Error::msg)?;
+    }
+    if use_cli("workers", "serve.workers") {
+        serve.workers = p.get("workers").map_err(anyhow::Error::msg)?;
+    }
+    serve.threads = p.get("threads").map_err(anyhow::Error::msg)?;
+    serve.opts = TransformOptions {
+        iters: p.get("iters").map_err(anyhow::Error::msg)?,
+        eta: p.get("eta").map_err(anyhow::Error::msg)?,
+        ..Default::default()
+    };
+    let cfg = ServeJobConfig {
+        model_path: p.str("model").unwrap_or("out/model.bhsne").into(),
+        socket: p.str("socket").unwrap_or("out/serve.sock").into(),
+        stats_out: p.str("stats-out").unwrap_or("out/serve_stats.json").into(),
+        serve,
+    };
+    let snap = run_serve_job(cfg)?;
+    println!("{}", snap.to_json_line());
+    Ok(())
+}
+
+fn drive_spec() -> CommandSpec {
+    CommandSpec::new("drive", "drive a running serve socket with held-out queries (load client)")
+        .opt("socket", "out/serve.sock", "unix socket of a running `bhsne serve`")
+        .opt("model", "out/model.bhsne", "model the server loaded (query generation + quality)")
+        .opt("dataset", "gaussians", "dataset family the model was fit on")
+        .opt("n", "256", "held-out query rows (0 = skip driving; stats/shutdown only)")
+        .opt("batch-rows", "16", "rows per request")
+        .opt("clients", "4", "concurrent client connections")
+        .opt("data-dir", "data", "directory with real datasets (IDX)")
+        .opt("out", "", "write drive.tsv here when every request is ok (empty = none)")
+        .opt("threads", "0", "local threads for query generation/quality (0 = all cores)")
+        .flag("require-ok", "fail unless every request is served ok")
+        .flag("shutdown", "send a graceful shutdown frame when done")
+}
+
+/// Open one client connection and run the batches assigned to it
+/// (round-robin by index) request-by-request, tagging replies with the
+/// batch index so placements can be reassembled in row order.
+fn drive_client(
+    socket: &std::path::Path,
+    chunks: &[&[f32]],
+    dim: usize,
+    first: usize,
+    stride: usize,
+) -> anyhow::Result<Vec<(usize, ServeReply)>> {
+    let stream = std::os::unix::net::UnixStream::connect(socket)?;
+    let mut reader = std::io::BufReader::new(stream.try_clone()?);
+    let mut writer = std::io::BufWriter::new(stream);
+    let mut got = Vec::new();
+    let mut bi = first;
+    while bi < chunks.len() {
+        write_transform_request(&mut writer, chunks[bi], dim)?;
+        got.push((bi, read_response(&mut reader)?));
+        bi += stride;
+    }
+    Ok(got)
+}
+
+fn cmd_drive(args: &[String]) -> anyhow::Result<()> {
+    let spec = drive_spec();
+    let p = match parse(&spec, "bhsne", args) {
+        Ok(p) => p,
+        Err(ArgError::Help(h)) => {
+            print!("{h}");
+            return Ok(());
+        }
+        Err(e) => anyhow::bail!("{e}"),
+    };
+    let socket = std::path::PathBuf::from(p.str("socket").unwrap_or("out/serve.sock"));
+    let n: usize = p.get("n").map_err(anyhow::Error::msg)?;
+    let mut failed = 0usize;
+    if n > 0 {
+        let pool = make_pool(p.get("threads").map_err(anyhow::Error::msg)?);
+        let model = TsneModel::load(p.str("model").unwrap_or("out/model.bhsne"))?;
+        let dataset = p.str("dataset").unwrap_or("gaussians");
+        let data_dir = p.str("data-dir").unwrap_or("data");
+        let (xq, qdim, labels_q) = held_out_queries(&pool, &model, dataset, n, data_dir)?;
+        let batch_rows: usize = p.get("batch-rows").map_err(anyhow::Error::msg)?;
+        let rows_per = batch_rows.max(1);
+        let chunks: Vec<&[f32]> = xq.chunks(rows_per * qdim).collect();
+        let clients: usize = p.get("clients").map_err(anyhow::Error::msg)?;
+        let clients = clients.clamp(1, chunks.len().max(1));
+        let answers: Vec<(usize, ServeReply)> = std::thread::scope(|s| {
+            let joins: Vec<_> = (0..clients)
+                .map(|c| {
+                    let (socket, chunks) = (&socket, &chunks);
+                    s.spawn(move || drive_client(socket, chunks, qdim, c, clients))
+                })
+                .collect();
+            let mut all = Vec::with_capacity(chunks.len());
+            for j in joins {
+                all.extend(j.join().expect("drive client thread panicked")?);
+            }
+            Ok::<_, anyhow::Error>(all)
+        })?;
+        let mut counts = [0usize; 6];
+        for (_, r) in &answers {
+            counts[r.status as usize] += 1;
+        }
+        println!("drive: requests {} answered {}", chunks.len(), answers.len());
+        for s in [
+            Status::Ok,
+            Status::Overloaded,
+            Status::DeadlineExceeded,
+            Status::WorkerPanicked,
+            Status::ShuttingDown,
+            Status::BadRequest,
+        ] {
+            println!("drive: {} {}", s.name(), counts[s as usize]);
+        }
+        failed = answers.len() - counts[Status::Ok as usize];
+        if failed == 0 {
+            let out_dim = model.out_dim();
+            let mut y = vec![0f32; (xq.len() / qdim) * out_dim];
+            for (bi, r) in &answers {
+                let start = bi * rows_per * out_dim;
+                y[start..start + r.y.len()].copy_from_slice(&r.y);
+            }
+            if model.labels.len() == model.n {
+                let q = bhsne::eval::PlacementQuality::evaluate(&pool, &model, &y, &labels_q, None)?;
+                println!(
+                    "drive: placement 1-NN err {:.4} (fitted embedding: {:.4})",
+                    q.placement_1nn_error, q.fitted_1nn_error
+                );
+            }
+            let out = p.str("out").unwrap_or("");
+            if !out.is_empty() {
+                let dir = std::path::PathBuf::from(out);
+                std::fs::create_dir_all(&dir)?;
+                data::io::write_tsv(dir.join("drive.tsv"), &y, out_dim, &labels_q)?;
+                println!("drive: wrote {}", dir.join("drive.tsv").display());
+            }
+        }
+    }
+    // Stats (and the optional shutdown frame) go over a fresh connection
+    // so they work with --n 0 against an idle server too.
+    let stream = std::os::unix::net::UnixStream::connect(&socket)?;
+    let mut reader = std::io::BufReader::new(stream.try_clone()?);
+    let mut writer = std::io::BufWriter::new(stream);
+    write_control_request(&mut writer, REQ_STATS)?;
+    println!("server: {}", read_response(&mut reader)?.message);
+    if p.flag("shutdown") {
+        write_control_request(&mut writer, REQ_SHUTDOWN)?;
+        let r = read_response(&mut reader)?;
+        anyhow::ensure!(r.status == Status::Ok, "shutdown frame rejected: {}", r.message);
+        println!("drive: shutdown sent");
+    }
+    if p.flag("require-ok") && failed > 0 {
+        anyhow::bail!("drive: {failed} request(s) not served ok");
+    }
     Ok(())
 }
 

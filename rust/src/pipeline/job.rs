@@ -1,12 +1,19 @@
-//! One embedding job: the full staged experiment — plus the fit/transform
-//! model-serving stages (`run_fit_job` persists a [`TsneModel`],
-//! `run_transform_job` loads one and places held-out points into the
-//! frozen map).
+//! One embedding job: the full staged experiment — plus the model-serving
+//! stages (`run_fit_job` persists a [`TsneModel`], `run_transform_job`
+//! loads one and places held-out points into the frozen map, and
+//! `run_serve_job` keeps one loaded behind the fault-tolerant socket
+//! server).
+//!
+//! `run_job` and `run_fit_job` differ only in what stage 2/3 keep around
+//! (the PCA state, the frozen model); every stage they share — dataset,
+//! runner setup, metrics capture, evaluation — lives in one helper each,
+//! so the two paths cannot drift apart.
 
 use super::metrics::MetricsRegistry;
 use crate::data::{self, Dataset};
 use crate::eval;
 use crate::runtime::{SneEngine, XlaAttractive};
+use crate::serve::{serve_unix, ServeConfig, Server, StatsSnapshot};
 use crate::sne::{
     CheckpointSpec, KnnChoice, TransformOptions, TransformStats, TsneConfig, TsneModel, TsneRunner,
 };
@@ -84,6 +91,112 @@ fn set_job_checkpoint(runner: &mut TsneRunner, cfg: &JobConfig) -> anyhow::Resul
     Ok(())
 }
 
+// ---- Stages shared by run_job / run_fit_job ---------------------------
+
+/// Stage 1: load the dataset, truncate to the requested size, record the
+/// stage timing.
+fn stage_dataset(
+    cfg: &JobConfig,
+    metrics: &mut MetricsRegistry,
+    stage: &str,
+) -> anyhow::Result<(Dataset, f64)> {
+    let sw = Stopwatch::start();
+    let mut ds: Dataset = data::by_name(&cfg.dataset, cfg.n, cfg.tsne.seed, &cfg.data_dir)?;
+    ds.truncate(cfg.n);
+    let dataset_secs = sw.elapsed_secs();
+    metrics.observe("dataset_secs", dataset_secs);
+    log::info!("{stage} dataset {} n={} dim={}", ds.name, ds.n, ds.dim);
+    Ok((ds, dataset_secs))
+}
+
+/// Stage-3 setup: install the checkpoint spec, the XLA attractive
+/// backend (when allowed and an artifact exists for this size), and the
+/// snapshot observer on a fresh runner.
+fn configure_runner(runner: &mut TsneRunner, cfg: &JobConfig, ds: &Dataset) -> anyhow::Result<()> {
+    set_job_checkpoint(runner, cfg)?;
+    if cfg.use_xla {
+        match SneEngine::from_env() {
+            Ok(engine) => {
+                let engine = Rc::new(engine);
+                if engine.supports_attractive(ds.n) {
+                    log::info!("attractive forces: XLA artifact path");
+                    runner.set_attractive_backend(Box::new(XlaAttractive::new(engine)));
+                } else {
+                    log::info!("no attractive artifact for n={}; using CPU", ds.n);
+                }
+            }
+            Err(e) => log::warn!("XLA runtime unavailable ({e}); using CPU"),
+        }
+    }
+    if cfg.snapshot_every > 0 {
+        if let Some(dir) = cfg.out_dir.clone() {
+            std::fs::create_dir_all(&dir)?;
+            let every = cfg.snapshot_every;
+            let labels = ds.labels.clone();
+            let out_dim = cfg.tsne.out_dim;
+            runner.set_observer(Box::new(move |s, y| {
+                if s.iter % every == 0 {
+                    let p = dir.join(format!("snapshot_{:05}.bin", s.iter));
+                    if let Err(e) =
+                        crate::data::io::write_snapshot(&p, y, out_dim, &labels, s.iter as u64)
+                    {
+                        log::warn!("snapshot failed: {e}");
+                    }
+                }
+                if let Some(kl) = s.kl {
+                    log::info!("iter {:4} KL {kl:.4} |g| {:.3e}", s.iter, s.grad_norm);
+                }
+            }));
+        }
+    }
+    Ok(())
+}
+
+/// Input-stage and force-engine counters, captured identically after a
+/// run or a fit.
+fn observe_runner_metrics(metrics: &mut MetricsRegistry, runner: &TsneRunner) {
+    let input = &runner.stats.input_stage;
+    log::info!("input stage knn backend: {}", input.backend);
+    metrics.observe_all(&[
+        ("knn_backend_code", knn_backend_code(input.backend)),
+        ("knn_secs", input.knn_secs),
+        ("knn_build_secs", input.knn_build_secs),
+        ("knn_query_secs", input.knn_query_secs),
+        ("perplexity_secs", input.perplexity_secs),
+        ("symmetrize_secs", input.symmetrize_secs),
+        ("gradient_secs", runner.stats.gradient_secs),
+        ("tree_secs", runner.stats.tree_secs),
+        ("repulsion_secs", runner.stats.repulsion_secs),
+        // Force-engine rebuild split: how many iterations reused the
+        // previous tree via the incremental refit vs ran a full re-sort.
+        ("tree_refits", runner.stats.tree_refits as f64),
+        ("tree_rebuilds", runner.stats.tree_rebuilds as f64),
+    ]);
+}
+
+/// Stage 4: 1-NN error on at most `eval_cap` points.
+fn stage_eval(
+    runner: &TsneRunner,
+    y: &[f32],
+    labels: &[u8],
+    cfg: &JobConfig,
+    metrics: &mut MetricsRegistry,
+) -> (f64, f64) {
+    let sw = Stopwatch::start();
+    let n = labels.len();
+    let eval_n = if cfg.eval_cap == 0 { n } else { n.min(cfg.eval_cap) };
+    let one_nn = eval::one_nn_error(
+        runner.pool(),
+        &y[..eval_n * cfg.tsne.out_dim],
+        cfg.tsne.out_dim,
+        &labels[..eval_n],
+    );
+    let eval_secs = sw.elapsed_secs();
+    metrics.observe("eval_secs", eval_secs);
+    metrics.observe("one_nn_error", one_nn);
+    (one_nn, eval_secs)
+}
+
 impl JobConfig {
     pub fn describe(&self) -> String {
         let knn = match self.tsne.knn {
@@ -148,12 +261,7 @@ pub fn run_job(cfg: JobConfig) -> anyhow::Result<JobResult> {
     let pool = super::make_pool(cfg.threads);
 
     // ---- Stage 1: dataset ----
-    let sw = Stopwatch::start();
-    let mut ds: Dataset = data::by_name(&cfg.dataset, cfg.n, cfg.tsne.seed, &cfg.data_dir)?;
-    ds.truncate(cfg.n);
-    let dataset_secs = sw.elapsed_secs();
-    metrics.observe("dataset_secs", dataset_secs);
-    log::info!("dataset {} n={} dim={}", ds.name, ds.n, ds.dim);
+    let (mut ds, dataset_secs) = stage_dataset(&cfg, &mut metrics, "embed")?;
 
     // ---- Stage 2: PCA (paper: reduce D>50 to 50) ----
     let sw = Stopwatch::start();
@@ -181,74 +289,14 @@ pub fn run_job(cfg: JobConfig) -> anyhow::Result<JobResult> {
     // ---- Stage 3: optimize ----
     let sw = Stopwatch::start();
     let mut runner = TsneRunner::with_pool(cfg.tsne.clone(), pool);
-    set_job_checkpoint(&mut runner, &cfg)?;
-    if cfg.use_xla {
-        match SneEngine::from_env() {
-            Ok(engine) => {
-                let engine = Rc::new(engine);
-                if engine.supports_attractive(ds.n) {
-                    log::info!("attractive forces: XLA artifact path");
-                    runner.set_attractive_backend(Box::new(XlaAttractive::new(engine)));
-                } else {
-                    log::info!("no attractive artifact for n={}; using CPU", ds.n);
-                }
-            }
-            Err(e) => log::warn!("XLA runtime unavailable ({e}); using CPU"),
-        }
-    }
-    // Snapshot observer.
-    if cfg.snapshot_every > 0 {
-        if let Some(dir) = cfg.out_dir.clone() {
-            std::fs::create_dir_all(&dir)?;
-            let every = cfg.snapshot_every;
-            let labels = ds.labels.clone();
-            let out_dim = cfg.tsne.out_dim;
-            runner.set_observer(Box::new(move |s, y| {
-                if s.iter % every == 0 {
-                    let p = dir.join(format!("snapshot_{:05}.bin", s.iter));
-                    if let Err(e) = crate::data::io::write_snapshot(&p, y, out_dim, &labels, s.iter as u64) {
-                        log::warn!("snapshot failed: {e}");
-                    }
-                }
-                if let Some(kl) = s.kl {
-                    log::info!("iter {:4} KL {kl:.4} |g| {:.3e}", s.iter, s.grad_norm);
-                }
-            }));
-        }
-    }
+    configure_runner(&mut runner, &cfg, &ds)?;
     let y = runner.run(&x, dim)?;
     let embed_secs = sw.elapsed_secs();
     metrics.observe("embed_secs", embed_secs);
-    let input = &runner.stats.input_stage;
-    log::info!("input stage knn backend: {}", input.backend);
-    metrics.observe_all(&[
-        ("knn_backend_code", knn_backend_code(input.backend)),
-        ("knn_secs", input.knn_secs),
-        ("knn_build_secs", input.knn_build_secs),
-        ("knn_query_secs", input.knn_query_secs),
-        ("perplexity_secs", input.perplexity_secs),
-        ("symmetrize_secs", input.symmetrize_secs),
-        ("gradient_secs", runner.stats.gradient_secs),
-        ("tree_secs", runner.stats.tree_secs),
-        ("repulsion_secs", runner.stats.repulsion_secs),
-        // Force-engine rebuild split: how many iterations reused the
-        // previous tree via the incremental refit vs ran a full re-sort.
-        ("tree_refits", runner.stats.tree_refits as f64),
-        ("tree_rebuilds", runner.stats.tree_rebuilds as f64),
-    ]);
+    observe_runner_metrics(&mut metrics, &runner);
 
     // ---- Stage 4: evaluate ----
-    let sw = Stopwatch::start();
-    let eval_n = if cfg.eval_cap == 0 { ds.n } else { ds.n.min(cfg.eval_cap) };
-    let one_nn = eval::one_nn_error(
-        runner.pool(),
-        &y[..eval_n * cfg.tsne.out_dim],
-        cfg.tsne.out_dim,
-        &ds.labels[..eval_n],
-    );
-    let eval_secs = sw.elapsed_secs();
-    metrics.observe("eval_secs", eval_secs);
-    metrics.observe("one_nn_error", one_nn);
+    let (one_nn, eval_secs) = stage_eval(&runner, &y, &ds.labels, &cfg, &mut metrics);
 
     // ---- Persist ----
     if let Some(dir) = &cfg.out_dir {
@@ -293,12 +341,7 @@ pub fn run_fit_job(cfg: JobConfig, model_out: Option<&Path>) -> anyhow::Result<(
     let pool = super::make_pool(cfg.threads);
 
     // ---- Stage 1: dataset ----
-    let sw = Stopwatch::start();
-    let mut ds: Dataset = data::by_name(&cfg.dataset, cfg.n, cfg.tsne.seed, &cfg.data_dir)?;
-    ds.truncate(cfg.n);
-    let dataset_secs = sw.elapsed_secs();
-    metrics.observe("dataset_secs", dataset_secs);
-    log::info!("fit dataset {} n={} dim={}", ds.name, ds.n, ds.dim);
+    let (mut ds, dataset_secs) = stage_dataset(&cfg, &mut metrics, "fit")?;
 
     // ---- Stage 2: PCA, keeping the projection for serving ----
     let sw = Stopwatch::start();
@@ -313,74 +356,16 @@ pub fn run_fit_job(cfg: JobConfig, model_out: Option<&Path>) -> anyhow::Result<(
     // ---- Stage 3: fit ----
     let sw = Stopwatch::start();
     let mut runner = TsneRunner::with_pool(cfg.tsne.clone(), pool);
-    set_job_checkpoint(&mut runner, &cfg)?;
-    if cfg.use_xla {
-        match SneEngine::from_env() {
-            Ok(engine) => {
-                let engine = Rc::new(engine);
-                if engine.supports_attractive(ds.n) {
-                    log::info!("attractive forces: XLA artifact path");
-                    runner.set_attractive_backend(Box::new(XlaAttractive::new(engine)));
-                } else {
-                    log::info!("no attractive artifact for n={}; using CPU", ds.n);
-                }
-            }
-            Err(e) => log::warn!("XLA runtime unavailable ({e}); using CPU"),
-        }
-    }
-    if cfg.snapshot_every > 0 {
-        if let Some(dir) = cfg.out_dir.clone() {
-            std::fs::create_dir_all(&dir)?;
-            let every = cfg.snapshot_every;
-            let labels = ds.labels.clone();
-            let out_dim = cfg.tsne.out_dim;
-            runner.set_observer(Box::new(move |s, y| {
-                if s.iter % every == 0 {
-                    let p = dir.join(format!("snapshot_{:05}.bin", s.iter));
-                    if let Err(e) = crate::data::io::write_snapshot(&p, y, out_dim, &labels, s.iter as u64)
-                    {
-                        log::warn!("snapshot failed: {e}");
-                    }
-                }
-                if let Some(kl) = s.kl {
-                    log::info!("iter {:4} KL {kl:.4} |g| {:.3e}", s.iter, s.grad_norm);
-                }
-            }));
-        }
-    }
+    configure_runner(&mut runner, &cfg, &ds)?;
     let mut model = runner.fit(&x, dim)?;
     model.labels = ds.labels.clone();
     model.pca = pca_state;
     let embed_secs = sw.elapsed_secs();
     metrics.observe("embed_secs", embed_secs);
-    let input = &runner.stats.input_stage;
-    log::info!("input stage knn backend: {}", input.backend);
-    metrics.observe_all(&[
-        ("knn_backend_code", knn_backend_code(input.backend)),
-        ("knn_secs", input.knn_secs),
-        ("knn_build_secs", input.knn_build_secs),
-        ("knn_query_secs", input.knn_query_secs),
-        ("perplexity_secs", input.perplexity_secs),
-        ("symmetrize_secs", input.symmetrize_secs),
-        ("gradient_secs", runner.stats.gradient_secs),
-        ("tree_secs", runner.stats.tree_secs),
-        ("repulsion_secs", runner.stats.repulsion_secs),
-        ("tree_refits", runner.stats.tree_refits as f64),
-        ("tree_rebuilds", runner.stats.tree_rebuilds as f64),
-    ]);
+    observe_runner_metrics(&mut metrics, &runner);
 
     // ---- Stage 4: evaluate ----
-    let sw = Stopwatch::start();
-    let eval_n = if cfg.eval_cap == 0 { ds.n } else { ds.n.min(cfg.eval_cap) };
-    let one_nn = eval::one_nn_error(
-        runner.pool(),
-        &model.embedding[..eval_n * cfg.tsne.out_dim],
-        cfg.tsne.out_dim,
-        &ds.labels[..eval_n],
-    );
-    let eval_secs = sw.elapsed_secs();
-    metrics.observe("eval_secs", eval_secs);
-    metrics.observe("one_nn_error", one_nn);
+    let (one_nn, eval_secs) = stage_eval(&runner, &model.embedding, &ds.labels, &cfg, &mut metrics);
 
     // ---- Stage 5: persist ----
     if let Some(path) = model_out {
@@ -468,27 +453,19 @@ pub struct TransformJobResult {
     /// Query labels (from the held-out dataset).
     pub labels: Vec<u8>,
     pub n: usize,
-    /// Fraction of queries whose nearest reference point in the embedding
-    /// has a different label than the query (needs model labels).
-    pub placement_1nn_error: Option<f64>,
-    /// Fraction of queries whose embedding-space nearest reference agrees
-    /// in label with their input-space nearest reference — the smoke
-    /// metric CI asserts on (needs model labels).
-    pub input_nn_agreement: Option<f64>,
-    /// The fitted embedding's own 1-NN error, for the agreement bar.
-    pub fitted_1nn_error: Option<f64>,
+    /// Shared placement-quality report (`None` when the model carries no
+    /// reference labels).
+    pub quality: Option<eval::PlacementQuality>,
     pub load_secs: f64,
     pub transform_secs: f64,
     pub stats: TransformStats,
 }
 
-/// Execute a transform job end to end: load model → generate held-out
-/// queries → project into the model's input space → frozen-reference
-/// transform → placement quality.
-pub fn run_transform_job(cfg: TransformJobConfig) -> anyhow::Result<TransformJobResult> {
-    let pool = super::make_pool(cfg.threads);
+/// Load a `.bhsne` and log its serving shape — the stage shared by the
+/// transform and serve jobs. Returns the model and the load wall-time.
+fn load_model_stage(path: &Path) -> anyhow::Result<(TsneModel, f64)> {
     let sw = Stopwatch::start();
-    let model = TsneModel::load(&cfg.model_path)?;
+    let model = TsneModel::load(path)?;
     let load_secs = sw.elapsed_secs();
     log::info!(
         "model loaded: n={} dim={} out_dim={} ({} labels, pca {})",
@@ -498,27 +475,38 @@ pub fn run_transform_job(cfg: TransformJobConfig) -> anyhow::Result<TransformJob
         model.labels.len(),
         if model.pca.is_some() { "yes" } else { "no" }
     );
+    Ok((model, load_secs))
+}
 
-    // Re-generate the fit corpus with the model's seed, extended by the
-    // requested query count, and keep only the unseen tail rows (see the
-    // struct docs for why a fresh seed would be a different mixture).
-    let total = model.n + cfg.n;
-    let ds: Dataset = data::by_name(&cfg.dataset, total, model.config.seed, &cfg.data_dir)?;
+/// Re-generate the fit corpus with the model's seed, extended by `n`
+/// rows, and return the unseen tail projected into the model's input
+/// space: `(query rows, their dim, their labels)`. Shared by the
+/// transform job and the serve drive client, so both place exactly the
+/// same held-out points (see [`TransformJobConfig`] for why the tail of
+/// the fitted corpus is the only sound held-out scheme).
+pub fn held_out_queries(
+    pool: &ThreadPool,
+    model: &TsneModel,
+    dataset: &str,
+    n: usize,
+    data_dir: &str,
+) -> anyhow::Result<(Vec<f32>, usize, Vec<u8>)> {
+    let total = model.n + n;
+    let ds: Dataset = data::by_name(dataset, total, model.config.seed, data_dir)?;
     anyhow::ensure!(
         ds.n > model.n,
         "dataset {} has only {} rows — none beyond the {} the model was fit on",
-        cfg.dataset,
+        dataset,
         ds.n,
         model.n
     );
-    let m = ds.n - model.n;
     let xq_raw = &ds.x[model.n * ds.dim..];
-    let labels_q = &ds.labels[model.n..];
+    let labels_q = ds.labels[model.n..].to_vec();
     // Every generator is prefix-exact (the normalized families squash
     // with fixed calibration-slab statistics, not whole-matrix ones), so
     // the regenerated prefix must equal the model's reference rows byte
     // for byte. Keep the guard: a drift here means a generator regressed
-    // and the metrics below would silently turn approximate.
+    // and the placement metrics would silently turn approximate.
     // (Only checkable without PCA, where model.x is the raw prefix.)
     if model.pca.is_none() && ds.dim == model.dim && ds.x[..model.n * ds.dim] != model.x[..] {
         log::warn!(
@@ -526,51 +514,76 @@ pub fn run_transform_job(cfg: TransformJobConfig) -> anyhow::Result<TransformJob
              a generator lost prefix-exactness; placement metrics are approximate"
         );
     }
-    let (xq, qdim) = model.project_input(&pool, xq_raw, ds.dim)?;
+    let (xq, qdim) = model.project_input(pool, xq_raw, ds.dim)?;
+    Ok((xq, qdim, labels_q))
+}
+
+/// Execute a transform job end to end: load model → generate held-out
+/// queries → project into the model's input space → frozen-reference
+/// transform → placement quality.
+pub fn run_transform_job(cfg: TransformJobConfig) -> anyhow::Result<TransformJobResult> {
+    let pool = super::make_pool(cfg.threads);
+    let (model, load_secs) = load_model_stage(&cfg.model_path)?;
+    let (xq, qdim, labels_q) = held_out_queries(&pool, &model, &cfg.dataset, cfg.n, &cfg.data_dir)?;
+    let m = labels_q.len();
 
     let sw = Stopwatch::start();
     let r = model.transform_with(&pool, &xq, qdim, &cfg.opts)?;
     let transform_secs = sw.elapsed_secs();
 
-    let (placement_1nn_error, input_nn_agreement, fitted_1nn_error) = if model.labels.len() == model.n
-    {
-        // One embedding-space NN pass feeds both metrics.
-        let emb_nn = model.embedding_nn(&pool, &r.y)?;
-        let wrong = emb_nn
-            .iter()
-            .zip(labels_q)
-            .filter(|&(&e, &l)| model.labels[e as usize] != l)
-            .count();
-        let err = wrong as f64 / m.max(1) as f64;
-        let agree = emb_nn
-            .iter()
-            .zip(&r.nn_input)
-            .filter(|&(&e, &i)| model.labels[e as usize] == model.labels[i as usize])
-            .count() as f64
-            / m.max(1) as f64;
-        let fitted = eval::one_nn_error(&pool, &model.embedding, model.out_dim(), &model.labels);
-        (Some(err), Some(agree), Some(fitted))
+    let quality = if model.labels.len() == model.n {
+        Some(eval::PlacementQuality::evaluate(&pool, &model, &r.y, &labels_q, Some(&r.nn_input))?)
     } else {
-        (None, None, None)
+        None
     };
 
     if let Some(dir) = &cfg.out_dir {
         std::fs::create_dir_all(dir)?;
-        crate::data::io::write_tsv(dir.join("transform.tsv"), &r.y, model.out_dim(), labels_q)?;
+        crate::data::io::write_tsv(dir.join("transform.tsv"), &r.y, model.out_dim(), &labels_q)?;
     }
 
     Ok(TransformJobResult {
         y: r.y,
         out_dim: model.out_dim(),
-        labels: labels_q.to_vec(),
+        labels: labels_q,
         n: m,
-        placement_1nn_error,
-        input_nn_agreement,
-        fitted_1nn_error,
+        quality,
         load_secs,
         transform_secs,
         stats: r.stats,
     })
+}
+
+/// Configuration of a serve job: load a persisted model once and expose
+/// the transform socket protocol until a shutdown frame arrives.
+#[derive(Debug, Clone)]
+pub struct ServeJobConfig {
+    /// Path of the `.bhsne` model written by a fit job.
+    pub model_path: PathBuf,
+    /// Unix socket path to bind.
+    pub socket: PathBuf,
+    /// Final stats report (atomic single-line JSON) written on shutdown.
+    pub stats_out: PathBuf,
+    /// Serving knobs (queue depth, deadline, batching, degradation).
+    pub serve: ServeConfig,
+}
+
+/// Execute a serve job: load the model once, start the worker pool, and
+/// serve the socket until a shutdown frame drains it. Returns the final
+/// stats snapshot (also flushed atomically to `stats_out`).
+pub fn run_serve_job(cfg: ServeJobConfig) -> anyhow::Result<StatsSnapshot> {
+    let (model, _load_secs) = load_model_stage(&cfg.model_path)?;
+    log::info!(
+        "serve: socket {} queue_depth {} deadline_ms {} batch_max {} degrade_p99_ms {} workers {}",
+        cfg.socket.display(),
+        cfg.serve.queue_depth,
+        cfg.serve.deadline_ms,
+        cfg.serve.batch_max,
+        cfg.serve.degrade_p99_ms,
+        cfg.serve.workers
+    );
+    let server = Server::start(model, cfg.serve.clone());
+    serve_unix(server, &cfg.socket, &cfg.stats_out)
 }
 
 /// PCA via the XLA projection artifact: fit on a subsample in Rust (the
@@ -678,13 +691,14 @@ mod tests {
         let t = run_transform_job(tcfg).unwrap();
         assert_eq!(t.y.len(), 60 * 2);
         assert!(t.y.iter().all(|v| v.is_finite()));
-        let placement = t.placement_1nn_error.unwrap();
-        let fitted = t.fitted_1nn_error.unwrap();
+        let q = t.quality.unwrap();
         assert!(
-            placement <= fitted + 0.1,
-            "placement err {placement} vs fitted {fitted}"
+            q.placement_1nn_error <= q.fitted_1nn_error + 0.1,
+            "placement err {} vs fitted {}",
+            q.placement_1nn_error,
+            q.fitted_1nn_error
         );
-        assert!(t.input_nn_agreement.unwrap() > 0.5);
+        assert!(q.input_nn_agreement.unwrap() > 0.5);
         assert!(dir.join("transform.tsv").exists());
         std::fs::remove_dir_all(&dir).ok();
     }

@@ -9,8 +9,8 @@ mod job;
 mod metrics;
 
 pub use job::{
-    run_fit_job, run_job, run_transform_job, JobConfig, JobResult, StageTimings,
-    TransformJobConfig, TransformJobResult,
+    held_out_queries, run_fit_job, run_job, run_serve_job, run_transform_job, JobConfig, JobResult,
+    ServeJobConfig, StageTimings, TransformJobConfig, TransformJobResult,
 };
 pub use metrics::MetricsRegistry;
 

@@ -1,0 +1,119 @@
+//! Load-aware fidelity control for transform micro-batches.
+//!
+//! The serving analogue of the run layer's interp→BH watchdog
+//! degradation: when the sliding p99 of end-to-end request latency
+//! crosses `serve.degrade_p99_ms`, the controller steps the transform
+//! down one fidelity level — first halving the gradient-iteration
+//! budget, then falling back from the union-tree gradient refit to
+//! attach-only (barycenter) placement, which is the `iters = 0` path of
+//! [`TransformOptions`](crate::sne::TransformOptions). When load drains
+//! and p99 falls below half the threshold, it re-promotes one level at a
+//! time. The asymmetric bands are the hysteresis that keeps the level
+//! from oscillating every batch.
+//!
+//! Degraded placements trade placement fidelity for latency; they are
+//! intentionally *not* bit-identical to full-fidelity transforms. The
+//! bit-identity contract (served == one-shot `bhsne transform`) holds at
+//! level 0, which is why the smoke drill's identity phase runs with
+//! degradation disabled.
+
+/// Fidelity levels, best-first. Level 0 runs the configured iteration
+/// budget, level 1 half of it, level 2 attach-only placement.
+pub const DEGRADE_LEVELS: usize = 3;
+
+/// Hysteretic p99-driven fidelity controller. One per server, shared by
+/// the workers behind a mutex; `threshold_ms <= 0` disables degradation.
+#[derive(Debug)]
+pub struct DegradeController {
+    threshold_ms: f64,
+    base_iters: usize,
+    level: usize,
+    transitions: u64,
+}
+
+impl DegradeController {
+    pub fn new(threshold_ms: f64, base_iters: usize) -> DegradeController {
+        DegradeController { threshold_ms, base_iters, level: 0, transitions: 0 }
+    }
+
+    /// Gradient-iteration budget at the current fidelity level.
+    pub fn iters(&self) -> usize {
+        match self.level {
+            0 => self.base_iters,
+            1 => self.base_iters / 2,
+            _ => 0, // attach-only: no union-tree refit, no gradient loop
+        }
+    }
+
+    /// Current fidelity level (0 = full).
+    pub fn level(&self) -> usize {
+        self.level
+    }
+
+    /// Level changes so far (both directions).
+    pub fn transitions(&self) -> u64 {
+        self.transitions
+    }
+
+    /// Feed the current sliding p99 (end-to-end ms, queue wait included
+    /// so the signal tracks load, not just compute). Degrades one level
+    /// when p99 exceeds the threshold, re-promotes one level when p99
+    /// falls below half of it. Returns `true` when the level changed.
+    pub fn observe_p99(&mut self, p99_ms: f64) -> bool {
+        if self.threshold_ms <= 0.0 || !p99_ms.is_finite() {
+            return false;
+        }
+        let before = self.level;
+        if p99_ms > self.threshold_ms && self.level + 1 < DEGRADE_LEVELS {
+            self.level += 1;
+        } else if p99_ms < 0.5 * self.threshold_ms && self.level > 0 {
+            self.level -= 1;
+        }
+        if self.level != before {
+            self.transitions += 1;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn degrades_stepwise_under_sustained_overload() {
+        let mut c = DegradeController::new(100.0, 60);
+        assert_eq!(c.iters(), 60);
+        assert!(c.observe_p99(150.0));
+        assert_eq!((c.level(), c.iters()), (1, 30));
+        assert!(c.observe_p99(150.0));
+        assert_eq!((c.level(), c.iters()), (2, 0), "floor: attach-only placement");
+        assert!(!c.observe_p99(150.0), "already at the floor");
+        assert_eq!(c.transitions(), 2);
+    }
+
+    #[test]
+    fn repromotes_only_below_half_threshold() {
+        let mut c = DegradeController::new(100.0, 60);
+        c.observe_p99(200.0);
+        assert_eq!(c.level(), 1);
+        // Inside the hysteresis band: neither degrade nor promote.
+        assert!(!c.observe_p99(80.0));
+        assert_eq!(c.level(), 1);
+        assert!(c.observe_p99(40.0), "load drained: promote");
+        assert_eq!((c.level(), c.iters()), (0, 60));
+        assert_eq!(c.transitions(), 2);
+    }
+
+    #[test]
+    fn disabled_controller_never_moves() {
+        let mut c = DegradeController::new(0.0, 60);
+        assert!(!c.observe_p99(1e9));
+        assert_eq!((c.level(), c.iters()), (0, 60));
+        let mut c = DegradeController::new(-1.0, 60);
+        assert!(!c.observe_p99(f64::NAN));
+        assert_eq!(c.level(), 0);
+    }
+}

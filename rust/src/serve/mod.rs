@@ -1,0 +1,641 @@
+//! `bhsne serve` — a fault-tolerant, long-lived serving layer over a
+//! fitted [`TsneModel`].
+//!
+//! The server loads a `.bhsne` once and shares the frozen state — the
+//! vp-tree arena, the optional HNSW graph, the reference embedding the
+//! BH union tree is refit around — across a pool of worker threads.
+//! Incoming transform requests pass a **bounded admission queue**
+//! (backpressure by structured rejection, never unbounded growth), are
+//! coalesced into **micro-batches**, and execute behind a batch-boundary
+//! `catch_unwind` so one poisoned batch cannot take the server down.
+//! Engineering contract, in order of importance:
+//!
+//! 1. **Never die.** Worker panics are isolated per batch
+//!    ([`SneError::WorkerPanicked`]); the worker restarts in place.
+//! 2. **Never grow without bound.** Admission sheds at `queue_depth`
+//!    with [`SneError::Overloaded`] carrying the observed depth.
+//! 3. **Never serve the dead.** Requests whose deadline lapsed in the
+//!    queue are dropped before batch formation
+//!    ([`SneError::DeadlineExceeded`]), so one slow batch can't cascade.
+//! 4. **Degrade before collapsing.** When the sliding p99 crosses
+//!    `degrade_p99_ms` the transform steps down: full iters → half →
+//!    attach-only placement; it re-promotes when load drains (see
+//!    [`batcher`]).
+//! 5. **Exit clean.** Shutdown closes admission, drains every accepted
+//!    request, joins the workers, and flushes the final stats through
+//!    the crash-safe `atomic_write` sink.
+//!
+//! Determinism: placements are computed per request at full fidelity, so
+//! a served placement is **bit-identical** to a one-shot
+//! `bhsne transform` of the same rows (see [`worker`]).
+//!
+//! The wire protocol is dependency-free length-prefixed binary over a
+//! Unix domain socket (all integers little-endian):
+//!
+//! ```text
+//! request   [u8 kind]
+//!   kind 1  transform  [u32 rows][u32 dim][rows*dim f32]
+//!   kind 2  stats      (no payload)
+//!   kind 3  shutdown   (no payload)
+//! response  [u8 status][u32 rows][u32 out_dim][rows*out_dim f32]
+//!           [u32 msg_len][msg utf-8]
+//! ```
+//!
+//! Status bytes are [`Status`]; on non-`Ok` the message carries the
+//! structured [`SneError`] Display text. A stats response is `Ok` with
+//! zero rows and the JSON report in the message field.
+
+pub mod batcher;
+pub mod queue;
+pub mod stats;
+pub mod worker;
+
+pub use batcher::DegradeController;
+pub use queue::{AdmissionQueue, Request, ServeReply, Status};
+pub use stats::{ServeStats, StatsSnapshot};
+
+use std::io::{self, Read, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::Context;
+
+use crate::sne::{SneError, TransformOptions, TsneModel};
+use crate::util::ThreadPool;
+
+use worker::ServerCore;
+
+/// Serving knobs (config keys `serve.*`, CLI flags on `bhsne serve`).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Admission queue capacity; a full queue sheds with `Overloaded`.
+    pub queue_depth: usize,
+    /// Per-request deadline in ms measured from admission; 0 disables.
+    pub deadline_ms: u64,
+    /// Max requests coalesced into one micro-batch.
+    pub batch_max: usize,
+    /// Degrade fidelity when sliding p99 exceeds this; 0 disables.
+    pub degrade_p99_ms: f64,
+    /// Worker threads popping micro-batches.
+    pub workers: usize,
+    /// Compute-pool threads shared by the workers (0 = host size).
+    pub threads: usize,
+    /// Full-fidelity transform options (degradation level 0).
+    pub opts: TransformOptions,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            queue_depth: 64,
+            deadline_ms: 1000,
+            batch_max: 8,
+            degrade_p99_ms: 250.0,
+            workers: 2,
+            threads: 0,
+            opts: TransformOptions::default(),
+        }
+    }
+}
+
+/// A running server: workers + shared frozen model state. Use
+/// [`Server::handle`] for in-process submits (tests, the bench) or
+/// [`serve_unix`] to expose the socket protocol.
+pub struct Server {
+    core: Arc<ServerCore>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Load the shared state and start the worker threads.
+    pub fn start(model: TsneModel, cfg: ServeConfig) -> Server {
+        let pool =
+            if cfg.threads == 0 { ThreadPool::for_host() } else { ThreadPool::new(cfg.threads) };
+        let core = Arc::new(ServerCore {
+            model: Arc::new(model),
+            pool: Arc::new(pool),
+            queue: AdmissionQueue::new(cfg.queue_depth),
+            stats: ServeStats::new(),
+            batch_max: cfg.batch_max,
+            deadline_ms: cfg.deadline_ms,
+            opts: cfg.opts.clone(),
+            degrade: Mutex::new(DegradeController::new(cfg.degrade_p99_ms, cfg.opts.iters)),
+            batch_seq: AtomicU64::new(0),
+            next_id: AtomicU64::new(0),
+        });
+        let workers = worker::spawn_workers(&core, cfg.workers);
+        Server { core, workers }
+    }
+
+    /// Cloneable in-process submitter sharing this server's state.
+    pub fn handle(&self) -> ServerHandle {
+        ServerHandle { core: Arc::clone(&self.core) }
+    }
+
+    /// Graceful shutdown: reject new work, drain every accepted request,
+    /// join the workers, and return the final stats snapshot.
+    pub fn shutdown(mut self) -> StatsSnapshot {
+        self.core.queue.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        self.core.stats.snapshot()
+    }
+}
+
+/// In-process client: validates at the front door, enqueues, and blocks
+/// for the terminal reply. Cheap to clone; safe to use from any thread.
+#[derive(Clone)]
+pub struct ServerHandle {
+    core: Arc<ServerCore>,
+}
+
+impl ServerHandle {
+    /// Submit model-space rows (`rows.len() / dim` queries) and block
+    /// until the terminal reply. Every outcome is a [`ServeReply`]; this
+    /// never panics and never blocks past deadline + batch execution.
+    pub fn submit(&self, rows: &[f32], dim: usize) -> ServeReply {
+        let id = self.core.next_id.fetch_add(1, Ordering::Relaxed);
+        // Front-door validation mirrors transform_with's checks so
+        // malformed frames are rejected before they occupy queue space.
+        if dim == 0 || dim != self.core.model.dim {
+            return ServeReply::bad_request(
+                id,
+                format!(
+                    "query dim {dim} does not match model input dim {} (raw queries go through project_input)",
+                    self.core.model.dim
+                ),
+            );
+        }
+        if rows.len() % dim != 0 {
+            return ServeReply::err(id, &SneError::ShapeMismatch { len: rows.len(), dim });
+        }
+        if let Some(bad) = rows.iter().position(|v| !v.is_finite()) {
+            return ServeReply::err(id, &SneError::NonFiniteInput { row: bad / dim, col: bad % dim });
+        }
+        let deadline = (self.core.deadline_ms > 0)
+            .then(|| Instant::now() + Duration::from_millis(self.core.deadline_ms));
+        let (req, rx) = Request::new(id, rows.to_vec(), dim, deadline);
+        match self.core.queue.push(req) {
+            Ok(()) => {
+                self.core.stats.on_accepted();
+                // A dropped sender can only mean the drain raced a
+                // worker exit; surface it as the shutdown it is.
+                rx.recv().unwrap_or_else(|_| ServeReply::err(id, &SneError::ShuttingDown))
+            }
+            Err((_req, e)) => {
+                match e {
+                    SneError::Overloaded { .. } => self.core.stats.on_overloaded(),
+                    _ => self.core.stats.on_shutdown_rejected(),
+                }
+                ServeReply::err(id, &e)
+            }
+        }
+    }
+
+    /// Point-in-time stats snapshot.
+    pub fn stats(&self) -> StatsSnapshot {
+        self.core.stats.snapshot()
+    }
+
+    /// The served model's embedding dimensionality.
+    pub fn out_dim(&self) -> usize {
+        self.core.model.config.out_dim
+    }
+
+    /// The served model's (model-space) input dimensionality.
+    pub fn dim(&self) -> usize {
+        self.core.model.dim
+    }
+}
+
+// ---- Wire protocol ----------------------------------------------------
+
+/// Request kind byte: transform rows.
+pub const REQ_TRANSFORM: u8 = 1;
+/// Request kind byte: stats report.
+pub const REQ_STATS: u8 = 2;
+/// Request kind byte: graceful shutdown.
+pub const REQ_SHUTDOWN: u8 = 3;
+
+// Framing caps: a corrupt length prefix must fail the frame, not
+// allocate unbounded memory.
+const MAX_ROWS: u32 = 1 << 20;
+const MAX_DIM: u32 = 1 << 16;
+const MAX_MSG: u32 = 1 << 20;
+
+/// One decoded request frame.
+pub enum WireRequest {
+    Transform { rows: Vec<f32>, dim: usize },
+    Stats,
+    Shutdown,
+}
+
+fn read_u32(r: &mut impl Read) -> io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn write_u32(w: &mut impl Write, v: u32) -> io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+fn read_f32s(r: &mut impl Read, count: usize) -> io::Result<Vec<f32>> {
+    let mut out = Vec::with_capacity(count);
+    let mut b = [0u8; 4];
+    for _ in 0..count {
+        r.read_exact(&mut b)?;
+        out.push(f32::from_le_bytes(b));
+    }
+    Ok(out)
+}
+
+fn write_f32s(w: &mut impl Write, vals: &[f32]) -> io::Result<()> {
+    for v in vals {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Encode a transform request frame (client side).
+pub fn write_transform_request(w: &mut impl Write, rows: &[f32], dim: usize) -> io::Result<()> {
+    w.write_all(&[REQ_TRANSFORM])?;
+    let n_rows = if dim > 0 { rows.len() / dim } else { 0 };
+    write_u32(w, n_rows as u32)?;
+    write_u32(w, dim as u32)?;
+    write_f32s(w, rows)?;
+    w.flush()
+}
+
+/// Encode a payload-free control frame (`REQ_STATS` / `REQ_SHUTDOWN`).
+pub fn write_control_request(w: &mut impl Write, kind: u8) -> io::Result<()> {
+    w.write_all(&[kind])?;
+    w.flush()
+}
+
+/// Decode one request frame (server side). `Ok(None)` is a clean EOF at
+/// a frame boundary — the client hung up.
+pub fn read_request(r: &mut impl Read) -> io::Result<Option<WireRequest>> {
+    let mut kind = [0u8; 1];
+    match r.read_exact(&mut kind) {
+        Ok(()) => {}
+        Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e),
+    }
+    match kind[0] {
+        REQ_TRANSFORM => {
+            let rows = read_u32(r)?;
+            let dim = read_u32(r)?;
+            if rows > MAX_ROWS || dim > MAX_DIM {
+                return Err(io::Error::other(format!("oversized frame: rows={rows} dim={dim}")));
+            }
+            let data = read_f32s(r, rows as usize * dim as usize)?;
+            Ok(Some(WireRequest::Transform { rows: data, dim: dim as usize }))
+        }
+        REQ_STATS => Ok(Some(WireRequest::Stats)),
+        REQ_SHUTDOWN => Ok(Some(WireRequest::Shutdown)),
+        other => Err(io::Error::other(format!("unknown request kind byte {other}"))),
+    }
+}
+
+/// Encode a response frame (server side).
+pub fn write_response(w: &mut impl Write, reply: &ServeReply) -> io::Result<()> {
+    w.write_all(&[reply.status as u8])?;
+    let rows = if reply.out_dim > 0 { reply.y.len() / reply.out_dim } else { 0 };
+    write_u32(w, rows as u32)?;
+    write_u32(w, reply.out_dim as u32)?;
+    write_f32s(w, &reply.y)?;
+    write_u32(w, reply.message.len() as u32)?;
+    w.write_all(reply.message.as_bytes())?;
+    w.flush()
+}
+
+/// Decode a response frame (client side).
+pub fn read_response(r: &mut impl Read) -> io::Result<ServeReply> {
+    let mut status = [0u8; 1];
+    r.read_exact(&mut status)?;
+    let status = Status::from_u8(status[0])
+        .ok_or_else(|| io::Error::other(format!("bad status byte {}", status[0])))?;
+    let rows = read_u32(r)?;
+    let out_dim = read_u32(r)?;
+    if rows > MAX_ROWS || out_dim > MAX_DIM {
+        return Err(io::Error::other(format!("oversized frame: rows={rows} out_dim={out_dim}")));
+    }
+    let y = read_f32s(r, rows as usize * out_dim as usize)?;
+    let msg_len = read_u32(r)?;
+    if msg_len > MAX_MSG {
+        return Err(io::Error::other(format!("oversized message: {msg_len} bytes")));
+    }
+    let mut msg = vec![0u8; msg_len as usize];
+    r.read_exact(&mut msg)?;
+    let message = String::from_utf8(msg)
+        .map_err(|_| io::Error::other("response message is not utf-8"))?;
+    Ok(ServeReply { id: 0, status, y, out_dim: out_dim as usize, message })
+}
+
+// ---- Unix socket front end --------------------------------------------
+
+/// How long a connection handler blocks on a read before re-checking
+/// the shutdown flag (see [`PollReader`]).
+const CONN_POLL: Duration = Duration::from_millis(500);
+
+/// Serve the socket protocol until a shutdown frame arrives, then drain
+/// accepted work, flush the final stats atomically to `stats_out`, and
+/// return the final snapshot. Consumes the server.
+pub fn serve_unix(server: Server, socket: &Path, stats_out: &Path) -> anyhow::Result<StatsSnapshot> {
+    // A stale socket file from a killed server would fail the bind.
+    let _ = std::fs::remove_file(socket);
+    if let Some(parent) = socket.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let listener = UnixListener::bind(socket)
+        .with_context(|| format!("bind unix socket {}", socket.display()))?;
+    listener.set_nonblocking(true).context("set serve socket nonblocking")?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let final_handle = server.handle();
+    let mut conns: Vec<thread::JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((stream, _addr)) => {
+                let handle = server.handle();
+                let stop = Arc::clone(&stop);
+                conns.push(
+                    thread::Builder::new()
+                        .name("bhsne-serve-conn".into())
+                        .spawn(move || handle_conn(stream, handle, &stop))
+                        .expect("spawn serve connection handler"),
+                );
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => {
+                return Err(anyhow::Error::from(e).context("accept on serve socket"));
+            }
+        }
+    }
+    // Graceful shutdown: close admission, drain accepted work, join the
+    // workers, then let every connection observe the stop flag and
+    // finish before the final counters are read.
+    let _ = server.shutdown();
+    for c in conns {
+        let _ = c.join();
+    }
+    let snapshot = final_handle.stats();
+    snapshot.write_atomic(stats_out)?;
+    let _ = std::fs::remove_file(socket);
+    Ok(snapshot)
+}
+
+/// Reader over a timeout-bearing stream that retries `WouldBlock` /
+/// `TimedOut` so frame decoding never desyncs mid-frame, while checking
+/// the stop flag on every timeout so idle connections still notice a
+/// shutdown within one poll interval.
+struct PollReader<'a, R> {
+    inner: R,
+    stop: &'a AtomicBool,
+}
+
+impl<R: Read> Read for PollReader<'_, R> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        loop {
+            match self.inner.read(buf) {
+                Err(e)
+                    if e.kind() == io::ErrorKind::WouldBlock
+                        || e.kind() == io::ErrorKind::TimedOut =>
+                {
+                    if self.stop.load(Ordering::Acquire) {
+                        return Err(io::Error::other("server is shutting down"));
+                    }
+                }
+                other => return other,
+            }
+        }
+    }
+}
+
+fn handle_conn(stream: UnixStream, handle: ServerHandle, stop: &AtomicBool) {
+    // The listener is nonblocking but accepted streams must block with a
+    // bounded read timeout so idle connections re-check the stop flag.
+    if stream.set_nonblocking(false).is_err() || stream.set_read_timeout(Some(CONN_POLL)).is_err()
+    {
+        return;
+    }
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = PollReader { inner: io::BufReader::new(read_half), stop };
+    let mut writer = io::BufWriter::new(stream);
+    loop {
+        match read_request(&mut reader) {
+            Ok(None) => break, // client hung up cleanly
+            Ok(Some(WireRequest::Transform { rows, dim })) => {
+                let reply = handle.submit(&rows, dim);
+                if write_response(&mut writer, &reply).is_err() {
+                    break;
+                }
+            }
+            Ok(Some(WireRequest::Stats)) => {
+                let mut reply = ServeReply::ok(0, Vec::new(), 0);
+                reply.message = handle.stats().to_json_line();
+                if write_response(&mut writer, &reply).is_err() {
+                    break;
+                }
+            }
+            Ok(Some(WireRequest::Shutdown)) => {
+                let _ = write_response(&mut writer, &ServeReply::ok(0, Vec::new(), 0));
+                stop.store(true, Ordering::Release);
+                break;
+            }
+            // Protocol error, hard IO error, or stop-while-idle: drop
+            // the connection. (The queue, not the socket, owns request
+            // state, so nothing accepted is lost here.)
+            Err(_) => break,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{gaussian_mixture, SyntheticSpec};
+    use crate::sne::{TsneConfig, TsneRunner};
+
+    fn fit_tiny(seed: u64) -> TsneModel {
+        let spec =
+            SyntheticSpec { n: 160, dim: 8, classes: 3, class_sep: 6.0, seed, ..Default::default() };
+        let data = gaussian_mixture(&spec);
+        let cfg = TsneConfig {
+            iters: 120,
+            exaggeration_iters: 30,
+            cost_every: 50,
+            perplexity: 12.0,
+            seed: 7,
+            ..Default::default()
+        };
+        let mut runner = TsneRunner::new(cfg);
+        let mut model = runner.fit(&data.x, data.dim).unwrap();
+        model.labels = data.labels.clone();
+        model
+    }
+
+    fn quick_serve_cfg() -> ServeConfig {
+        ServeConfig {
+            queue_depth: 32,
+            deadline_ms: 0, // tests control timing explicitly
+            batch_max: 4,
+            degrade_p99_ms: 0.0, // fidelity fixed: identity checks below
+            workers: 2,
+            threads: 2,
+            opts: TransformOptions { iters: 10, ..Default::default() },
+        }
+    }
+
+    #[test]
+    fn served_placement_is_bit_identical_to_direct_transform() {
+        let model = fit_tiny(11);
+        let dim = model.dim;
+        let rows: Vec<f32> = model.x[..8 * dim].to_vec();
+        let opts = TransformOptions { iters: 10, ..Default::default() };
+        let pool = ThreadPool::new(2);
+        let direct = model.transform_with(&pool, &rows, dim, &opts).unwrap();
+        let server = Server::start(model, quick_serve_cfg());
+        let reply = server.handle().submit(&rows, dim);
+        assert_eq!(reply.status, Status::Ok);
+        assert_eq!(reply.y, direct.y, "served placement must be bit-identical");
+        let snap = server.shutdown();
+        assert_eq!(snap.served_requests, 1);
+        assert_eq!(snap.served_points, 8);
+        assert!(snap.accepted_accounted_for());
+    }
+
+    #[test]
+    fn concurrent_submits_all_terminate_and_match_direct() {
+        let model = fit_tiny(13);
+        let dim = model.dim;
+        let opts = TransformOptions { iters: 10, ..Default::default() };
+        let pool = ThreadPool::new(2);
+        let batches: Vec<Vec<f32>> =
+            (0..6).map(|i| model.x[i * dim..(i + 4) * dim].to_vec()).collect();
+        let direct: Vec<Vec<f32>> =
+            batches.iter().map(|b| model.transform_with(&pool, b, dim, &opts).unwrap().y).collect();
+        let server = Server::start(model, quick_serve_cfg());
+        let handle = server.handle();
+        let replies: Vec<ServeReply> = thread::scope(|s| {
+            let joins: Vec<_> = batches
+                .iter()
+                .map(|b| {
+                    let h = handle.clone();
+                    s.spawn(move || h.submit(b, dim))
+                })
+                .collect();
+            joins.into_iter().map(|j| j.join().unwrap()).collect()
+        });
+        for (i, reply) in replies.iter().enumerate() {
+            assert_eq!(reply.status, Status::Ok, "batch {i}: {}", reply.message);
+            assert_eq!(reply.y, direct[i], "batch {i} placement drifted");
+        }
+        let snap = server.shutdown();
+        assert_eq!(snap.served_requests, 6);
+        assert!(snap.accepted_accounted_for());
+    }
+
+    #[test]
+    fn front_door_rejects_malformed_requests() {
+        let model = fit_tiny(17);
+        let dim = model.dim;
+        let server = Server::start(model, quick_serve_cfg());
+        let handle = server.handle();
+        let r = handle.submit(&[1.0; 7], dim); // not divisible by dim
+        assert_eq!(r.status, Status::BadRequest);
+        assert!(r.message.contains("not divisible"), "{}", r.message);
+        let r = handle.submit(&[1.0; 4], dim + 1); // wrong dim
+        assert_eq!(r.status, Status::BadRequest);
+        let mut rows = vec![0.5f32; dim * 2];
+        rows[dim] = f32::NAN;
+        let r = handle.submit(&rows, dim);
+        assert_eq!(r.status, Status::BadRequest);
+        assert!(r.message.contains("non-finite"), "{}", r.message);
+        let snap = server.shutdown();
+        assert_eq!(snap.served_requests, 0);
+        assert_eq!(snap.accepted, 0, "malformed requests never occupy the queue");
+    }
+
+    #[test]
+    fn shutdown_rejects_new_work_after_drain() {
+        let model = fit_tiny(19);
+        let dim = model.dim;
+        let rows = model.x[..4 * dim].to_vec();
+        let server = Server::start(model, quick_serve_cfg());
+        let handle = server.handle();
+        assert_eq!(handle.submit(&rows, dim).status, Status::Ok);
+        let snap = server.shutdown();
+        assert!(snap.accepted_accounted_for());
+        // The core (and its closed queue) outlives the server through
+        // the handle: late submits get the structured shutdown error.
+        let r = handle.submit(&rows, dim);
+        assert_eq!(r.status, Status::ShuttingDown);
+        assert!(r.message.contains("shutting down"), "{}", r.message);
+    }
+
+    #[test]
+    fn wire_frames_round_trip() {
+        let rows = vec![1.5f32, -2.25, 0.0, f32::MIN_POSITIVE, 3.75e-8, 42.0];
+        let mut buf = Vec::new();
+        write_transform_request(&mut buf, &rows, 3).unwrap();
+        let mut cur = io::Cursor::new(&buf);
+        match read_request(&mut cur).unwrap() {
+            Some(WireRequest::Transform { rows: got, dim }) => {
+                assert_eq!(dim, 3);
+                assert_eq!(got.len(), rows.len());
+                for (a, b) in got.iter().zip(&rows) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "f32 bits must survive the wire");
+                }
+            }
+            _ => panic!("expected transform frame"),
+        }
+
+        let reply = ServeReply::ok(9, vec![0.125f32, -7.5], 2);
+        let mut buf = Vec::new();
+        write_response(&mut buf, &reply).unwrap();
+        let got = read_response(&mut io::Cursor::new(&buf)).unwrap();
+        assert_eq!(got.status, Status::Ok);
+        assert_eq!(got.out_dim, 2);
+        assert_eq!(got.y, reply.y);
+
+        let err = ServeReply::err(3, &SneError::Overloaded { depth: 17 });
+        let mut buf = Vec::new();
+        write_response(&mut buf, &err).unwrap();
+        let got = read_response(&mut io::Cursor::new(&buf)).unwrap();
+        assert_eq!(got.status, Status::Overloaded);
+        assert!(got.message.contains("depth 17"), "{}", got.message);
+
+        // Clean EOF at a frame boundary is a hang-up, not an error.
+        assert!(read_request(&mut io::Cursor::new(&[][..])).unwrap().is_none());
+        // Garbage kind byte is a protocol error.
+        assert!(read_request(&mut io::Cursor::new(&[99u8][..])).is_err());
+
+        let mut buf = Vec::new();
+        write_control_request(&mut buf, REQ_SHUTDOWN).unwrap();
+        assert!(matches!(
+            read_request(&mut io::Cursor::new(&buf)).unwrap(),
+            Some(WireRequest::Shutdown)
+        ));
+    }
+
+    #[test]
+    fn oversized_frames_are_rejected_not_allocated() {
+        // rows = u32::MAX with a tiny body: must fail the length gate
+        // before any allocation is attempted.
+        let mut buf = vec![REQ_TRANSFORM];
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        buf.extend_from_slice(&2u32.to_le_bytes());
+        let err = read_request(&mut io::Cursor::new(&buf)).unwrap_err();
+        assert!(err.to_string().contains("oversized"), "{err}");
+    }
+}

@@ -1,0 +1,333 @@
+//! Bounded admission queue: the server's only intake path.
+//!
+//! Robustness contract: admission never blocks and never grows without
+//! bound. A full queue sheds the request at the door with a structured
+//! [`SneError::Overloaded`] carrying the observed depth; a closed queue
+//! (shutdown in progress) rejects with [`SneError::ShuttingDown`] while
+//! workers keep draining what was already accepted. Deadline expiry is
+//! checked at batch formation, so a request that aged out behind a slow
+//! batch is dropped *before* any placement work is spent on it.
+
+use std::collections::VecDeque;
+use std::sync::{mpsc, Condvar, Mutex};
+use std::time::Instant;
+
+use crate::sne::SneError;
+
+/// Terminal status of a serve request. The numeric value doubles as the
+/// wire protocol's status byte.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Status {
+    /// Placement computed; the reply carries `rows × out_dim` floats.
+    Ok = 0,
+    /// Shed at admission: queue full ([`SneError::Overloaded`]).
+    Overloaded = 1,
+    /// Dropped before batch formation ([`SneError::DeadlineExceeded`]).
+    DeadlineExceeded = 2,
+    /// The micro-batch's worker panicked ([`SneError::WorkerPanicked`]).
+    WorkerPanicked = 3,
+    /// Rejected because the server is draining ([`SneError::ShuttingDown`]).
+    ShuttingDown = 4,
+    /// Malformed request (shape/dim/non-finite values); message has detail.
+    BadRequest = 5,
+}
+
+impl Status {
+    /// Decode a wire status byte.
+    pub fn from_u8(b: u8) -> Option<Status> {
+        match b {
+            0 => Some(Status::Ok),
+            1 => Some(Status::Overloaded),
+            2 => Some(Status::DeadlineExceeded),
+            3 => Some(Status::WorkerPanicked),
+            4 => Some(Status::ShuttingDown),
+            5 => Some(Status::BadRequest),
+            _ => None,
+        }
+    }
+
+    /// Stable lowercase name (drive-client tallies grep on these).
+    pub fn name(self) -> &'static str {
+        match self {
+            Status::Ok => "ok",
+            Status::Overloaded => "overloaded",
+            Status::DeadlineExceeded => "deadline",
+            Status::WorkerPanicked => "panicked",
+            Status::ShuttingDown => "shutdown-rejected",
+            Status::BadRequest => "bad-request",
+        }
+    }
+}
+
+/// Terminal reply delivered to the requester — in-process via the
+/// request's channel, or over the wire as a response frame.
+#[derive(Debug, Clone)]
+pub struct ServeReply {
+    pub id: u64,
+    pub status: Status,
+    /// Placements, row-major `rows × out_dim` (empty unless `Ok`).
+    pub y: Vec<f32>,
+    pub out_dim: usize,
+    /// Structured error Display text (empty on `Ok`; stats frames reuse
+    /// this field for their JSON payload).
+    pub message: String,
+}
+
+impl ServeReply {
+    pub fn ok(id: u64, y: Vec<f32>, out_dim: usize) -> ServeReply {
+        ServeReply { id, status: Status::Ok, y, out_dim, message: String::new() }
+    }
+
+    /// Map a structured [`SneError`] onto its wire status; anything
+    /// outside the serving taxonomy is a malformed request.
+    pub fn err(id: u64, e: &SneError) -> ServeReply {
+        let status = match e {
+            SneError::Overloaded { .. } => Status::Overloaded,
+            SneError::DeadlineExceeded { .. } => Status::DeadlineExceeded,
+            SneError::WorkerPanicked { .. } => Status::WorkerPanicked,
+            SneError::ShuttingDown => Status::ShuttingDown,
+            _ => Status::BadRequest,
+        };
+        ServeReply { id, status, y: Vec::new(), out_dim: 0, message: e.to_string() }
+    }
+
+    pub fn bad_request(id: u64, message: String) -> ServeReply {
+        ServeReply { id, status: Status::BadRequest, y: Vec::new(), out_dim: 0, message }
+    }
+}
+
+/// One admitted placement request in flight.
+pub struct Request {
+    pub id: u64,
+    /// Model-space rows, row-major `rows × dim`.
+    pub rows: Vec<f32>,
+    pub dim: usize,
+    pub enqueued: Instant,
+    /// Absolute expiry; `None` disables the deadline for this request.
+    pub deadline: Option<Instant>,
+    reply: mpsc::Sender<ServeReply>,
+}
+
+impl Request {
+    /// Build a request plus the receiver its terminal reply arrives on.
+    pub fn new(
+        id: u64,
+        rows: Vec<f32>,
+        dim: usize,
+        deadline: Option<Instant>,
+    ) -> (Request, mpsc::Receiver<ServeReply>) {
+        let (tx, rx) = mpsc::channel();
+        (Request { id, rows, dim, enqueued: Instant::now(), deadline, reply: tx }, rx)
+    }
+
+    /// Milliseconds this request has been in flight.
+    pub fn waited_ms(&self) -> u64 {
+        self.enqueued.elapsed().as_millis() as u64
+    }
+
+    pub fn succeed(self, y: Vec<f32>, out_dim: usize) {
+        let reply = ServeReply::ok(self.id, y, out_dim);
+        let _ = self.reply.send(reply); // requester may have hung up
+    }
+
+    pub fn fail(self, e: &SneError) {
+        let reply = ServeReply::err(self.id, e);
+        let _ = self.reply.send(reply);
+    }
+
+    pub fn fail_text(self, message: String) {
+        let reply = ServeReply::bad_request(self.id, message);
+        let _ = self.reply.send(reply);
+    }
+}
+
+/// A queue drain: the admitted micro-batch plus the requests whose
+/// deadline expired while they waited (to be failed, not served).
+pub struct Drained {
+    pub batch: Vec<Request>,
+    pub expired: Vec<Request>,
+}
+
+struct QueueState {
+    q: VecDeque<Request>,
+    closed: bool,
+}
+
+/// Bounded MPMC admission queue (mutex + condvar; submitters never wait,
+/// only workers do).
+pub struct AdmissionQueue {
+    cap: usize,
+    state: Mutex<QueueState>,
+    available: Condvar,
+}
+
+impl AdmissionQueue {
+    pub fn new(cap: usize) -> AdmissionQueue {
+        AdmissionQueue {
+            cap: cap.max(1),
+            state: Mutex::new(QueueState { q: VecDeque::new(), closed: false }),
+            available: Condvar::new(),
+        }
+    }
+
+    /// Admit or shed — never blocks, never queues past `cap`. On
+    /// rejection the request is handed back with the structured error so
+    /// the caller can reply without a channel round-trip.
+    pub fn push(&self, req: Request) -> Result<(), (Request, SneError)> {
+        let mut s = self.state.lock().unwrap();
+        if s.closed {
+            return Err((req, SneError::ShuttingDown));
+        }
+        if s.q.len() >= self.cap {
+            let depth = s.q.len();
+            return Err((req, SneError::Overloaded { depth }));
+        }
+        s.q.push_back(req);
+        self.available.notify_one();
+        Ok(())
+    }
+
+    /// Block until work is available or the queue is closed and drained.
+    /// Expired requests are split out of the batch — dropped before any
+    /// placement work, per the deadline contract. `None` means closed
+    /// and empty: the worker should exit.
+    pub fn pop_batch(&self, batch_max: usize) -> Option<Drained> {
+        let batch_max = batch_max.max(1);
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if !s.q.is_empty() {
+                let now = Instant::now();
+                let mut batch = Vec::new();
+                let mut expired = Vec::new();
+                while batch.len() < batch_max {
+                    let Some(req) = s.q.pop_front() else { break };
+                    if req.deadline.is_some_and(|d| now >= d) {
+                        expired.push(req);
+                    } else {
+                        batch.push(req);
+                    }
+                }
+                return Some(Drained { batch, expired });
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.available.wait(s).unwrap();
+        }
+    }
+
+    /// Stop admitting new work and wake every waiting worker so the
+    /// accepted backlog drains and the workers exit.
+    pub fn close(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.closed = true;
+        self.available.notify_all();
+    }
+
+    /// Current queue depth (diagnostics only — racy by nature).
+    pub fn depth(&self) -> usize {
+        self.state.lock().unwrap().q.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn req(id: u64, deadline: Option<Instant>) -> (Request, mpsc::Receiver<ServeReply>) {
+        Request::new(id, vec![0.0; 4], 2, deadline)
+    }
+
+    #[test]
+    fn full_queue_sheds_with_depth_payload() {
+        let q = AdmissionQueue::new(2);
+        let (r0, _rx0) = req(0, None);
+        let (r1, _rx1) = req(1, None);
+        let (r2, _rx2) = req(2, None);
+        q.push(r0).unwrap();
+        q.push(r1).unwrap();
+        let (back, e) = q.push(r2).unwrap_err();
+        assert_eq!(back.id, 2);
+        assert_eq!(e, SneError::Overloaded { depth: 2 });
+        assert_eq!(q.depth(), 2, "shed request never entered the queue");
+    }
+
+    #[test]
+    fn closed_queue_rejects_new_work_but_drains_old() {
+        let q = AdmissionQueue::new(8);
+        let (r0, _rx0) = req(0, None);
+        q.push(r0).unwrap();
+        q.close();
+        let (_, e) = q.push(req(1, None).0).unwrap_err();
+        assert_eq!(e, SneError::ShuttingDown);
+        let d = q.pop_batch(4).expect("accepted work still drains");
+        assert_eq!(d.batch.len(), 1);
+        assert!(q.pop_batch(4).is_none(), "closed and empty: workers exit");
+    }
+
+    #[test]
+    fn expired_requests_are_split_out_before_batch_formation() {
+        let q = AdmissionQueue::new(8);
+        let past = Instant::now() - Duration::from_millis(50);
+        let future = Instant::now() + Duration::from_secs(3600);
+        let (dead, _rx0) = req(0, Some(past));
+        let (live, _rx1) = req(1, Some(future));
+        let (no_deadline, _rx2) = req(2, None);
+        q.push(dead).unwrap();
+        q.push(live).unwrap();
+        q.push(no_deadline).unwrap();
+        let d = q.pop_batch(8).unwrap();
+        assert_eq!(d.expired.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0]);
+        assert_eq!(d.batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2]);
+    }
+
+    #[test]
+    fn batch_max_bounds_the_micro_batch() {
+        let q = AdmissionQueue::new(8);
+        let mut rxs = Vec::new();
+        for i in 0..5 {
+            let (r, rx) = req(i, None);
+            q.push(r).unwrap();
+            rxs.push(rx);
+        }
+        let d = q.pop_batch(2).unwrap();
+        assert_eq!(d.batch.len(), 2);
+        let d = q.pop_batch(2).unwrap();
+        assert_eq!(d.batch.len(), 2);
+        let d = q.pop_batch(2).unwrap();
+        assert_eq!(d.batch.len(), 1);
+    }
+
+    #[test]
+    fn status_bytes_round_trip() {
+        for s in [
+            Status::Ok,
+            Status::Overloaded,
+            Status::DeadlineExceeded,
+            Status::WorkerPanicked,
+            Status::ShuttingDown,
+            Status::BadRequest,
+        ] {
+            assert_eq!(Status::from_u8(s as u8), Some(s));
+        }
+        assert_eq!(Status::from_u8(99), None);
+    }
+
+    #[test]
+    fn reply_maps_structured_errors_to_statuses() {
+        assert_eq!(ServeReply::err(0, &SneError::Overloaded { depth: 4 }).status, Status::Overloaded);
+        assert_eq!(
+            ServeReply::err(0, &SneError::DeadlineExceeded { waited_ms: 9 }).status,
+            Status::DeadlineExceeded
+        );
+        assert_eq!(
+            ServeReply::err(0, &SneError::WorkerPanicked { batch: 1 }).status,
+            Status::WorkerPanicked
+        );
+        assert_eq!(ServeReply::err(0, &SneError::ShuttingDown).status, Status::ShuttingDown);
+        let r = ServeReply::err(0, &SneError::TooFewPoints { n: 1 });
+        assert_eq!(r.status, Status::BadRequest);
+        assert!(r.message.contains("at least 2 points"));
+    }
+}

@@ -1,0 +1,328 @@
+//! Serving counters and latency percentiles.
+//!
+//! Counters are lock-free atomics bumped from the submit path and the
+//! workers; latencies go into a fixed ring of the most recent samples
+//! (end-to-end, enqueue→reply) so the p99 both feeds the degradation
+//! controller as a *sliding* signal and lands in the final report. The
+//! final stats file is flushed through the crash-safe `atomic_write`
+//! sink, so a crash mid-flush can never publish a torn report.
+
+use std::io::Write;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats::percentile;
+
+/// Sliding-window size for latency percentiles. Big enough to smooth a
+/// burst, small enough that the p99 recovers quickly when load drains
+/// (the re-promotion signal).
+const LATENCY_WINDOW: usize = 512;
+
+struct LatencyRing {
+    buf: Vec<f64>,
+    next: usize,
+}
+
+impl LatencyRing {
+    fn record(&mut self, ms: f64) {
+        if self.buf.len() < LATENCY_WINDOW {
+            self.buf.push(ms);
+        } else {
+            self.buf[self.next] = ms;
+        }
+        self.next = (self.next + 1) % LATENCY_WINDOW;
+    }
+
+    fn percentiles(&self) -> Option<(f64, f64, f64)> {
+        if self.buf.is_empty() {
+            return None;
+        }
+        let mut sorted = self.buf.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Some((percentile(&sorted, 50.0), percentile(&sorted, 95.0), percentile(&sorted, 99.0)))
+    }
+}
+
+/// Shared serving counters. One instance per server.
+pub struct ServeStats {
+    started: Instant,
+    accepted: AtomicU64,
+    served_requests: AtomicU64,
+    served_points: AtomicU64,
+    rejected_overloaded: AtomicU64,
+    rejected_deadline: AtomicU64,
+    rejected_shutdown: AtomicU64,
+    bad_requests: AtomicU64,
+    failed_panicked: AtomicU64,
+    worker_restarts: AtomicU64,
+    batches: AtomicU64,
+    degrade_transitions: AtomicU64,
+    degrade_level: AtomicUsize,
+    window: Mutex<LatencyRing>,
+}
+
+impl ServeStats {
+    pub fn new() -> ServeStats {
+        ServeStats {
+            started: Instant::now(),
+            accepted: AtomicU64::new(0),
+            served_requests: AtomicU64::new(0),
+            served_points: AtomicU64::new(0),
+            rejected_overloaded: AtomicU64::new(0),
+            rejected_deadline: AtomicU64::new(0),
+            rejected_shutdown: AtomicU64::new(0),
+            bad_requests: AtomicU64::new(0),
+            failed_panicked: AtomicU64::new(0),
+            worker_restarts: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            degrade_transitions: AtomicU64::new(0),
+            degrade_level: AtomicUsize::new(0),
+            window: Mutex::new(LatencyRing { buf: Vec::with_capacity(LATENCY_WINDOW), next: 0 }),
+        }
+    }
+
+    pub fn on_accepted(&self) {
+        self.accepted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_served(&self, points: usize, latency_ms: f64) {
+        self.served_requests.fetch_add(1, Ordering::Relaxed);
+        self.served_points.fetch_add(points as u64, Ordering::Relaxed);
+        self.window.lock().unwrap().record(latency_ms);
+    }
+
+    pub fn on_overloaded(&self) {
+        self.rejected_overloaded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_deadline_expired(&self) {
+        self.rejected_deadline.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_shutdown_rejected(&self) {
+        self.rejected_shutdown.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_bad_request(&self) {
+        self.bad_requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A worker's batch-boundary `catch_unwind` caught a panic and the
+    /// worker went back to the queue — a restart in all but thread id.
+    /// `batch_requests` is how many requests the poisoned batch failed.
+    pub fn on_worker_restart(&self, batch_requests: usize) {
+        self.worker_restarts.fetch_add(1, Ordering::Relaxed);
+        self.failed_panicked.fetch_add(batch_requests as u64, Ordering::Relaxed);
+    }
+
+    pub fn on_batch(&self) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_degrade_transition(&self, new_level: usize) {
+        self.degrade_transitions.fetch_add(1, Ordering::Relaxed);
+        self.degrade_level.store(new_level, Ordering::Relaxed);
+    }
+
+    /// Sliding p99 over the recent-latency window (`None` until the
+    /// first request completes) — the degradation controller's input.
+    pub fn p99_ms(&self) -> Option<f64> {
+        self.window.lock().unwrap().percentiles().map(|(_, _, p99)| p99)
+    }
+
+    pub fn snapshot(&self) -> StatsSnapshot {
+        let (p50, p95, p99) = self.window.lock().unwrap().percentiles().unwrap_or((0.0, 0.0, 0.0));
+        let uptime = self.started.elapsed().as_secs_f64();
+        let served_points = self.served_points.load(Ordering::Relaxed);
+        StatsSnapshot {
+            uptime_secs: uptime,
+            accepted: self.accepted.load(Ordering::Relaxed),
+            served_requests: self.served_requests.load(Ordering::Relaxed),
+            served_points,
+            rejected_overloaded: self.rejected_overloaded.load(Ordering::Relaxed),
+            rejected_deadline: self.rejected_deadline.load(Ordering::Relaxed),
+            rejected_shutdown: self.rejected_shutdown.load(Ordering::Relaxed),
+            bad_requests: self.bad_requests.load(Ordering::Relaxed),
+            failed_panicked: self.failed_panicked.load(Ordering::Relaxed),
+            worker_restarts: self.worker_restarts.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            degrade_transitions: self.degrade_transitions.load(Ordering::Relaxed),
+            degrade_level: self.degrade_level.load(Ordering::Relaxed),
+            p50_ms: p50,
+            p95_ms: p95,
+            p99_ms: p99,
+            points_per_sec: if uptime > 0.0 { served_points as f64 / uptime } else { 0.0 },
+        }
+    }
+}
+
+impl Default for ServeStats {
+    fn default() -> Self {
+        ServeStats::new()
+    }
+}
+
+/// Point-in-time copy of the serving counters, as reported by the stats
+/// protocol frame and flushed to disk on shutdown.
+#[derive(Debug, Clone)]
+pub struct StatsSnapshot {
+    pub uptime_secs: f64,
+    pub accepted: u64,
+    pub served_requests: u64,
+    pub served_points: u64,
+    pub rejected_overloaded: u64,
+    pub rejected_deadline: u64,
+    pub rejected_shutdown: u64,
+    pub bad_requests: u64,
+    /// Requests failed with `WorkerPanicked` (their batch was poisoned).
+    pub failed_panicked: u64,
+    pub worker_restarts: u64,
+    pub batches: u64,
+    pub degrade_transitions: u64,
+    pub degrade_level: usize,
+    /// Percentiles over the recent-latency window, end-to-end ms
+    /// (enqueue→reply, queue wait included). 0.0 until a request lands.
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    /// Served points over server uptime — a lifetime average, not the
+    /// bench's saturation figure (which times a drive window).
+    pub points_per_sec: f64,
+}
+
+impl StatsSnapshot {
+    /// Single-line JSON, same dialect as the bench capture (plain bash +
+    /// grep parseable).
+    pub fn to_json_line(&self) -> String {
+        format!(
+            concat!(
+                "{{\"serve\":\"stats\",",
+                "\"uptime_secs\":{:.3},",
+                "\"accepted\":{},",
+                "\"served_requests\":{},",
+                "\"served_points\":{},",
+                "\"rejected_overloaded\":{},",
+                "\"rejected_deadline\":{},",
+                "\"rejected_shutdown\":{},",
+                "\"bad_requests\":{},",
+                "\"failed_panicked\":{},",
+                "\"worker_restarts\":{},",
+                "\"batches\":{},",
+                "\"degrade_transitions\":{},",
+                "\"degrade_level\":{},",
+                "\"p50_ms\":{:.3},",
+                "\"p95_ms\":{:.3},",
+                "\"p99_ms\":{:.3},",
+                "\"points_per_sec\":{:.2}}}"
+            ),
+            self.uptime_secs,
+            self.accepted,
+            self.served_requests,
+            self.served_points,
+            self.rejected_overloaded,
+            self.rejected_deadline,
+            self.rejected_shutdown,
+            self.bad_requests,
+            self.failed_panicked,
+            self.worker_restarts,
+            self.batches,
+            self.degrade_transitions,
+            self.degrade_level,
+            self.p50_ms,
+            self.p95_ms,
+            self.p99_ms,
+            self.points_per_sec,
+        )
+    }
+
+    /// Flush through the crash-safe temp-sibling + fsync + rename sink.
+    pub fn write_atomic(&self, path: &Path) -> anyhow::Result<()> {
+        let line = self.to_json_line();
+        crate::data::io::atomic_write(path, |w| {
+            w.write_all(line.as_bytes())?;
+            w.write_all(b"\n")?;
+            Ok(())
+        })
+    }
+
+    /// Accounting identity: every accepted request reached exactly one
+    /// terminal state — served, deadline-dropped, failed by a poisoned
+    /// batch, or failed as malformed. (Shed and shutdown rejections were
+    /// never accepted.) The drain drill asserts this holds at shutdown.
+    pub fn accepted_accounted_for(&self) -> bool {
+        self.accepted
+            == self.served_requests + self.rejected_deadline + self.failed_panicked + self.bad_requests
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_percentiles_track_recent_samples() {
+        let stats = ServeStats::new();
+        assert!(stats.p99_ms().is_none(), "no samples yet");
+        for i in 0..100 {
+            stats.on_served(1, i as f64);
+        }
+        let p99 = stats.p99_ms().unwrap();
+        assert!(p99 > 90.0 && p99 <= 99.0, "p99={p99}");
+        let snap = stats.snapshot();
+        assert!(snap.p50_ms > 40.0 && snap.p50_ms < 60.0, "p50={}", snap.p50_ms);
+        assert!(snap.p95_ms >= snap.p50_ms && snap.p99_ms >= snap.p95_ms);
+        assert_eq!(snap.served_requests, 100);
+        assert_eq!(snap.served_points, 100);
+    }
+
+    #[test]
+    fn ring_wraps_and_forgets_old_samples() {
+        let stats = ServeStats::new();
+        for _ in 0..LATENCY_WINDOW {
+            stats.on_served(1, 1000.0);
+        }
+        // A full window of fast samples displaces the slow burst.
+        for _ in 0..LATENCY_WINDOW {
+            stats.on_served(1, 1.0);
+        }
+        let p99 = stats.p99_ms().unwrap();
+        assert!(p99 < 2.0, "old burst forgotten, p99={p99}");
+    }
+
+    #[test]
+    fn json_line_has_the_report_keys() {
+        let stats = ServeStats::new();
+        stats.on_accepted();
+        stats.on_served(8, 2.5);
+        let line = stats.snapshot().to_json_line();
+        for key in [
+            "\"accepted\":1",
+            "\"served_requests\":1",
+            "\"served_points\":8",
+            "\"p50_ms\":",
+            "\"p99_ms\":",
+            "\"points_per_sec\":",
+            "\"worker_restarts\":0",
+            "\"degrade_level\":0",
+        ] {
+            assert!(line.contains(key), "missing {key} in {line}");
+        }
+        assert!(!line.contains('\n'));
+    }
+
+    #[test]
+    fn atomic_flush_writes_the_file() {
+        let dir = std::env::temp_dir().join("bhsne-serve-stats-test");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("serve_stats.json");
+        let _ = std::fs::remove_file(&path);
+        let stats = ServeStats::new();
+        stats.on_served(4, 1.0);
+        stats.snapshot().write_atomic(&path).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.contains("\"served_points\":4"));
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,126 @@
+//! Serve workers: pop micro-batches, execute placements, isolate panics.
+//!
+//! Each worker loops on [`AdmissionQueue::pop_batch`] and executes the
+//! batch inside `catch_unwind` — the batch boundary of the ISSUE's panic
+//! contract. A poisoned batch fails its own requests with
+//! [`SneError::WorkerPanicked`] and the worker goes straight back to the
+//! queue: the thread survives, so "restart" costs nothing and the server
+//! stays up. The injected `panic-batch@I` / `slow-batch@I` faults fire
+//! here, right where a real bug or stall would.
+//!
+//! Placements are computed **per request**, never on merged rows: the
+//! union-tree gradient has (second-order) query-query repulsion, so
+//! merging would let batch composition leak into results. Per-request
+//! execution is what makes a served placement bit-identical to a
+//! one-shot `bhsne transform` of the same rows.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+use crate::sne::{SneError, TransformOptions, TransformResult, TsneModel};
+use crate::util::{fault, ThreadPool};
+
+use super::batcher::DegradeController;
+use super::queue::{AdmissionQueue, Request};
+use super::stats::ServeStats;
+
+/// Everything the submit path and the workers share. One per server,
+/// behind a single `Arc`.
+pub(crate) struct ServerCore {
+    pub model: Arc<TsneModel>,
+    pub pool: Arc<ThreadPool>,
+    pub queue: AdmissionQueue,
+    pub stats: ServeStats,
+    pub batch_max: usize,
+    pub deadline_ms: u64,
+    /// Full-fidelity transform options (level 0 of the controller).
+    pub opts: TransformOptions,
+    pub degrade: Mutex<DegradeController>,
+    pub batch_seq: AtomicU64,
+    pub next_id: AtomicU64,
+}
+
+pub(crate) fn spawn_workers(core: &Arc<ServerCore>, n: usize) -> Vec<thread::JoinHandle<()>> {
+    (0..n.max(1))
+        .map(|i| {
+            let core = Arc::clone(core);
+            thread::Builder::new()
+                .name(format!("bhsne-serve-{i}"))
+                .spawn(move || worker_loop(&core))
+                .expect("spawn serve worker")
+        })
+        .collect()
+}
+
+fn worker_loop(core: &ServerCore) {
+    while let Some(drained) = core.queue.pop_batch(core.batch_max) {
+        // Deadline-expired requests never reach placement work.
+        for req in drained.expired {
+            let waited_ms = req.waited_ms();
+            core.stats.on_deadline_expired();
+            req.fail(&SneError::DeadlineExceeded { waited_ms });
+        }
+        if drained.batch.is_empty() {
+            continue;
+        }
+        let seq = core.batch_seq.fetch_add(1, Ordering::Relaxed);
+        core.stats.on_batch();
+        // Consult the degradation controller with the sliding p99 of
+        // *completed* requests, then run this batch at the chosen level.
+        let iters = {
+            let mut degrade = core.degrade.lock().unwrap();
+            if let Some(p99) = core.stats.p99_ms() {
+                if degrade.observe_p99(p99) {
+                    core.stats.on_degrade_transition(degrade.level());
+                }
+            }
+            degrade.iters()
+        };
+        let opts = TransformOptions { iters, ..core.opts.clone() };
+        let batch = drained.batch;
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            fault::maybe_panic_batch(seq as usize);
+            if let Some(stall) = fault::maybe_slow_batch(seq as usize) {
+                thread::sleep(stall);
+            }
+            let mut results: Vec<anyhow::Result<TransformResult>> =
+                Vec::with_capacity(batch.len());
+            for req in batch.iter() {
+                results.push(core.model.transform_with(&core.pool, &req.rows, req.dim, &opts));
+            }
+            results
+        }));
+        match outcome {
+            Ok(results) => {
+                let out_dim = core.model.config.out_dim;
+                for (req, res) in batch.into_iter().zip(results) {
+                    match res {
+                        Ok(t) => {
+                            let points = t.y.len() / out_dim.max(1);
+                            let latency_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
+                            core.stats.on_served(points, latency_ms);
+                            req.succeed(t.y, out_dim);
+                        }
+                        Err(e) => {
+                            // Front-door validation should have caught
+                            // this; whatever slipped through is still a
+                            // per-request failure, not a batch poisoning.
+                            core.stats.on_bad_request();
+                            req.fail_text(e.to_string());
+                        }
+                    }
+                }
+            }
+            Err(_) => {
+                // Batch boundary: the poisoned batch fails as a unit,
+                // the worker thread survives and goes back to the queue.
+                core.stats.on_worker_restart(batch.len());
+                for req in batch {
+                    req.fail(&SneError::WorkerPanicked { batch: seq });
+                }
+            }
+        }
+    }
+}

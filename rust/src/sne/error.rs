@@ -32,6 +32,18 @@ pub enum SneError {
     CheckpointMismatch { reason: String },
     /// A deliberately injected fault fired (tests + crash drills only).
     InjectedFault { what: String, iter: usize },
+    /// The serve admission queue is full: the request was shed at the
+    /// door, never queued. Carries the queue depth at rejection time so
+    /// clients can back off proportionally.
+    Overloaded { depth: usize },
+    /// The request's deadline expired while it sat in the admission
+    /// queue; it was dropped before batch formation ever saw it.
+    DeadlineExceeded { waited_ms: u64 },
+    /// The worker processing this request's micro-batch panicked; the
+    /// batch failed as a unit and the worker restarted.
+    WorkerPanicked { batch: u64 },
+    /// The server is draining for shutdown and admits no new work.
+    ShuttingDown,
 }
 
 impl fmt::Display for SneError {
@@ -62,6 +74,18 @@ impl fmt::Display for SneError {
             SneError::InjectedFault { what, iter } => {
                 write!(f, "injected fault '{what}' fired at iteration {iter}")
             }
+            SneError::Overloaded { depth } => {
+                write!(f, "server overloaded: admission queue full at depth {depth}")
+            }
+            SneError::DeadlineExceeded { waited_ms } => {
+                write!(f, "deadline exceeded: request waited {waited_ms} ms in queue")
+            }
+            SneError::WorkerPanicked { batch } => {
+                write!(f, "worker panicked while serving micro-batch {batch}")
+            }
+            SneError::ShuttingDown => {
+                write!(f, "server is shutting down: no new work admitted")
+            }
         }
     }
 }
@@ -84,6 +108,10 @@ mod tests {
             (SneError::Diverged { iter: 12, retries: 3 }, "optimization diverged"),
             (SneError::CheckpointMismatch { reason: "fingerprint".into() }, "checkpoint does not match"),
             (SneError::InjectedFault { what: "grad-nan".into(), iter: 5 }, "injected fault"),
+            (SneError::Overloaded { depth: 64 }, "server overloaded"),
+            (SneError::DeadlineExceeded { waited_ms: 150 }, "deadline exceeded"),
+            (SneError::WorkerPanicked { batch: 2 }, "worker panicked"),
+            (SneError::ShuttingDown, "shutting down"),
         ];
         for (e, needle) in cases {
             assert!(e.to_string().contains(needle), "{e}");

@@ -13,6 +13,8 @@
 //! BHSNE_FAULT=kill@25            # abort() the process at iteration 25
 //! BHSNE_FAULT=write-err@123      # io::Error once 123 bytes were written
 //! BHSNE_FAULT=kill-write@123     # abort() mid-write at byte 123
+//! BHSNE_FAULT=slow-batch@2       # stall the serve worker on micro-batch 2
+//! BHSNE_FAULT=panic-batch@1      # panic the serve worker on micro-batch 1
 //! ```
 //!
 //! Several specs may be comma-separated. Every fault is **one-shot**: it
@@ -42,7 +44,18 @@ pub enum Fault {
     /// `std::process::abort()` once `offset` bytes have passed through a
     /// [`FaultWriter`] — a real torn write.
     KillWrite { offset: u64 },
+    /// Stall the serve worker for [`SLOW_BATCH_MS`] while it processes
+    /// micro-batch `batch` (serve drill: trips deadlines/backpressure).
+    SlowBatch { batch: usize },
+    /// Panic inside the serve worker at micro-batch `batch` (serve
+    /// drill: exercises the `catch_unwind` batch isolation).
+    PanicBatch { batch: usize },
 }
+
+/// How long an armed [`Fault::SlowBatch`] stalls the serve worker. Long
+/// enough that a drill's queued requests age past a tight deadline and
+/// the admission queue backs up behind the stalled worker.
+pub const SLOW_BATCH_MS: u64 = 400;
 
 /// Armed faults. `ARMED` short-circuits the probes when the list is empty
 /// so the production hot loop pays one relaxed load per probe.
@@ -79,6 +92,8 @@ fn parse_spec(spec: &str) -> Result<Fault, String> {
         "kill" => Ok(Fault::Kill { iter: num as usize }),
         "write-err" => Ok(Fault::WriteErr { offset: num }),
         "kill-write" => Ok(Fault::KillWrite { offset: num }),
+        "slow-batch" => Ok(Fault::SlowBatch { batch: num as usize }),
+        "panic-batch" => Ok(Fault::PanicBatch { batch: num as usize }),
         other => Err(format!("unknown fault kind '{other}' in '{spec}'")),
     }
 }
@@ -152,6 +167,31 @@ pub fn maybe_stop_iter(iter: usize) -> Option<()> {
         std::process::abort();
     }
     take(|f| matches!(f, Fault::StopIter { iter: i } if *i == iter)).map(|_| ())
+}
+
+/// Probe: stall the serve worker on this micro-batch? Returns the stall
+/// duration for the caller to sleep (keeping the probe itself cheap and
+/// the sleep visible at the call site).
+#[inline]
+pub fn maybe_slow_batch(batch: usize) -> Option<std::time::Duration> {
+    if !armed() {
+        return None;
+    }
+    take(|f| matches!(f, Fault::SlowBatch { batch: b } if *b == batch))
+        .map(|_| std::time::Duration::from_millis(SLOW_BATCH_MS))
+}
+
+/// Probe: panic the serve worker on this micro-batch? The panic unwinds
+/// into the worker's batch-boundary `catch_unwind`, standing in for any
+/// bug that poisons one micro-batch.
+#[inline]
+pub fn maybe_panic_batch(batch: usize) {
+    if !armed() {
+        return;
+    }
+    if take(|f| matches!(f, Fault::PanicBatch { batch: b } if *b == batch)).is_some() {
+        panic!("injected panic-batch fault at micro-batch {batch}");
+    }
 }
 
 /// Take an armed write fault, if any, for a new [`FaultWriter`].
@@ -238,6 +278,8 @@ mod tests {
         assert_eq!(parse_spec("grad-nan@17").unwrap(), Fault::GradNan { iter: 17 });
         assert_eq!(parse_spec("write-err@0").unwrap(), Fault::WriteErr { offset: 0 });
         assert_eq!(parse_spec("kill@3").unwrap(), Fault::Kill { iter: 3 });
+        assert_eq!(parse_spec("slow-batch@2").unwrap(), Fault::SlowBatch { batch: 2 });
+        assert_eq!(parse_spec("panic-batch@1").unwrap(), Fault::PanicBatch { batch: 1 });
         assert!(parse_spec("bogus@1").is_err());
         assert!(parse_spec("grad-nan").is_err());
         assert!(parse_spec("grad-nan@x").is_err());
@@ -255,6 +297,22 @@ mod tests {
         g[0] = 1.0;
         maybe_grad_nan(2, &mut g); // one-shot: does not re-fire
         assert!(g[0].is_finite());
+        clear();
+    }
+
+    #[test]
+    fn serve_batch_faults_fire_once_at_the_right_batch() {
+        clear();
+        inject(Fault::SlowBatch { batch: 3 });
+        assert!(maybe_slow_batch(2).is_none());
+        let d = maybe_slow_batch(3).expect("fires at batch 3");
+        assert_eq!(d.as_millis() as u64, SLOW_BATCH_MS);
+        assert!(maybe_slow_batch(3).is_none(), "one-shot: does not re-fire");
+        inject(Fault::PanicBatch { batch: 1 });
+        maybe_panic_batch(0); // wrong batch: no panic
+        let caught = std::panic::catch_unwind(|| maybe_panic_batch(1));
+        assert!(caught.is_err(), "panic-batch fires at batch 1");
+        maybe_panic_batch(1); // one-shot: disarmed
         clear();
     }
 

@@ -12,10 +12,33 @@
 //! The pool is work-sharing (an atomic chunk cursor), not work-stealing;
 //! for the embarrassingly-parallel per-point loops here that is within a
 //! few percent of rayon in practice.
+//!
+//! Panic contract: a panicking job is caught at the job boundary (the
+//! worker thread survives and keeps draining the queue) and the first
+//! panic payload is re-raised on the thread that called
+//! [`ThreadPool::scoped`] once every job of the scope has finished. A
+//! panic therefore surfaces deterministically on the scope owner instead
+//! of deadlocking the scope or silently killing a worker.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
+
+/// First panic payload captured from a scope's jobs.
+type PanicPayload = Box<dyn std::any::Any + Send + 'static>;
+
+/// Per-scope completion state: outstanding job count plus the first
+/// captured panic payload, guarded by one mutex so the decrement and the
+/// payload store are a single atomic step.
+struct ScopeState {
+    progress: Mutex<ScopeProgress>,
+    done: Condvar,
+}
+
+struct ScopeProgress {
+    pending: usize,
+    panic: Option<PanicPayload>,
+}
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -91,18 +114,33 @@ impl ThreadPool {
 
     /// Scoped execution: jobs spawned in the scope may borrow from the
     /// caller's stack; the call blocks until every spawned job completes.
+    /// If any job panicked, the first payload is re-raised here, on the
+    /// scope owner's thread, after the whole scope has drained.
     pub fn scoped<'env, F>(&self, f: F)
     where
         F: FnOnce(&Scope<'env, '_>),
     {
-        let pending = Arc::new((Mutex::new(0usize), Condvar::new()));
-        let scope = Scope { pool: self, pending: Arc::clone(&pending), _marker: std::marker::PhantomData };
-        f(&scope);
-        // Wait for all jobs of this scope.
-        let (lock, cv) = &*pending;
-        let mut n = lock.lock().unwrap();
-        while *n > 0 {
-            n = cv.wait(n).unwrap();
+        let state = Arc::new(ScopeState {
+            progress: Mutex::new(ScopeProgress { pending: 0, panic: None }),
+            done: Condvar::new(),
+        });
+        let scope = Scope { pool: self, state: Arc::clone(&state), _marker: std::marker::PhantomData };
+        // The builder itself may unwind after submitting jobs that still
+        // borrow this frame; catch it so we always wait for the scope to
+        // drain before letting the unwind continue.
+        let built = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&scope)));
+        let job_panic = {
+            let mut p = state.progress.lock().unwrap();
+            while p.pending > 0 {
+                p = state.done.wait(p).unwrap();
+            }
+            p.panic.take()
+        };
+        if let Err(payload) = built {
+            std::panic::resume_unwind(payload);
+        }
+        if let Some(payload) = job_panic {
+            std::panic::resume_unwind(payload);
         }
     }
 
@@ -229,7 +267,7 @@ fn worker_loop(shared: Arc<Shared>) {
 /// may borrow the enclosing stack frame.
 pub struct Scope<'env, 'pool> {
     pool: &'pool ThreadPool,
-    pending: Arc<(Mutex<usize>, Condvar)>,
+    state: Arc<ScopeState>,
     _marker: std::marker::PhantomData<&'env ()>,
 }
 
@@ -239,21 +277,26 @@ impl<'env, 'pool> Scope<'env, 'pool> {
     where
         F: FnOnce() + Send + 'env,
     {
-        {
-            let (lock, _) = &*self.pending;
-            *lock.lock().unwrap() += 1;
-        }
-        let pending = Arc::clone(&self.pending);
+        self.state.progress.lock().unwrap().pending += 1;
+        let state = Arc::clone(&self.state);
         // SAFETY: `scoped` blocks until the pending counter returns to zero,
         // so the 'env borrow cannot outlive the frame that owns it. This is
         // the same argument std::thread::scope makes.
         let job: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
-            f();
-            let (lock, cv) = &*pending;
-            let mut n = lock.lock().unwrap();
-            *n -= 1;
-            if *n == 0 {
-                cv.notify_all();
+            // Catch a panicking job at the job boundary: the worker thread
+            // survives and the pending counter still decrements (otherwise
+            // the scope owner would wait on the condvar forever). The
+            // payload is re-raised by `scoped` on the owner's thread.
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+            let mut p = state.progress.lock().unwrap();
+            p.pending -= 1;
+            if let Err(payload) = result {
+                if p.panic.is_none() {
+                    p.panic = Some(payload);
+                }
+            }
+            if p.pending == 0 {
+                state.done.notify_all();
             }
         });
         let job: Job = unsafe { std::mem::transmute(job) };
@@ -366,5 +409,52 @@ mod tests {
         let pool = ThreadPool::new(1);
         let out = pool.map_indexed(64, 8, |i| i + 1);
         assert_eq!(out[63], 64);
+    }
+
+    #[test]
+    fn panicking_chunk_job_surfaces_instead_of_hanging() {
+        let pool = ThreadPool::new(4);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.scope_chunks(1_000, 8, |lo, _hi| {
+                if lo == 0 {
+                    panic!("boom in chunk");
+                }
+            });
+        }));
+        let payload = caught.expect_err("panic in a chunk job must propagate to the caller");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert_eq!(msg, "boom in chunk");
+    }
+
+    #[test]
+    fn scoped_job_panic_reraises_on_scope_owner() {
+        let pool = ThreadPool::new(2);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.scoped(|scope| {
+                scope.run(|| panic!("kapow"));
+                scope.run(|| {}); // a healthy sibling job still completes
+            });
+        }));
+        let payload = caught.expect_err("scoped panic must re-raise on the owner");
+        assert_eq!(payload.downcast_ref::<&str>().copied().unwrap_or(""), "kapow");
+    }
+
+    #[test]
+    fn pool_stays_usable_after_a_job_panic() {
+        let pool = ThreadPool::new(3);
+        for _ in 0..3 {
+            let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                pool.scope_chunks(100, 4, |lo, _| {
+                    if lo == 48 {
+                        panic!("transient");
+                    }
+                });
+            }));
+            assert!(caught.is_err());
+            // Workers survived the contained panic: the next round runs
+            // to completion on the same pool.
+            let out = pool.map_indexed(256, 16, |i| i * 3);
+            assert_eq!(out[255], 765);
+        }
     }
 }

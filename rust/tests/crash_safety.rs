@@ -22,7 +22,9 @@
 //! that arms faults.
 
 use bhsne::data::io::{self, RunCheckpoint};
-use bhsne::sne::{CheckpointSpec, RepulsionMethod, TransformOptions, TsneConfig, TsneRunner};
+use bhsne::sne::{
+    CheckpointSpec, KnnChoice, RepulsionMethod, TransformOptions, TsneConfig, TsneRunner,
+};
 use bhsne::util::fault::{self, Fault};
 use bhsne::util::simd;
 use bhsne::util::{Pcg32, ThreadPool};
@@ -145,6 +147,51 @@ fn resumed_fit_writes_byte_identical_model() {
         std::fs::read(&model_res).unwrap(),
         "resumed .bhsne file differs from the uninterrupted run's"
     );
+    fault::clear();
+}
+
+#[test]
+fn resumed_hnsw_fit_is_byte_identical_and_fingerprints_the_knn_knobs() {
+    let _g = serial();
+    fault::clear();
+    let dir = tmp_dir("resume-hnsw");
+    let x = gaussian_cloud(150, 6, 61);
+    // The approximate input stage must replay deterministically on
+    // resume: the checkpoint stores no P, so the resumed run rebuilds
+    // the HNSW graph and similarities from scratch — byte-identity below
+    // proves that rebuild reproduces the interrupted run's exactly.
+    let cfg = TsneConfig { knn: KnnChoice::Hnsw, knn_ef: 120, knn_m: 8, ..quick_config(21) };
+
+    let model_ref = dir.join("ref.bhsne");
+    let mut reference = TsneRunner::new(cfg.clone());
+    reference.fit(&x, 6).unwrap().save(&model_ref).unwrap();
+
+    let ck = dir.join("hnsw-ck.bin");
+    std::fs::remove_file(&ck).ok();
+    let mut interrupted = TsneRunner::new(cfg.clone());
+    interrupted.set_checkpoint(Some(CheckpointSpec { path: ck.clone(), every: 20, resume: false }));
+    fault::inject(Fault::StopIter { iter: 45 });
+    assert!(interrupted.fit(&x, 6).is_err());
+    assert!(ck.exists(), "no checkpoint left behind by the killed hnsw run");
+
+    let model_res = dir.join("res.bhsne");
+    let mut resumed = TsneRunner::new(cfg.clone());
+    resumed.set_checkpoint(Some(CheckpointSpec { path: ck.clone(), every: 20, resume: true }));
+    resumed.fit(&x, 6).unwrap().save(&model_res).unwrap();
+    assert_eq!(resumed.stats.resumed_at, Some(40));
+    assert_eq!(
+        std::fs::read(&model_ref).unwrap(),
+        std::fs::read(&model_res).unwrap(),
+        "resumed hnsw .bhsne file differs from the uninterrupted run's"
+    );
+
+    // The fingerprint binds the knn knobs: a run whose only difference
+    // is the search breadth must reject the checkpoint, never silently
+    // splice similarities built at one recall into a run at another.
+    let mut other = TsneRunner::new(TsneConfig { knn_ef: 200, ..cfg });
+    other.set_checkpoint(Some(CheckpointSpec { path: ck, every: 20, resume: true }));
+    let err = other.fit(&x, 6).unwrap_err();
+    assert!(err.to_string().contains("checkpoint does not match"), "{err}");
     fault::clear();
 }
 

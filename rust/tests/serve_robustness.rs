@@ -1,0 +1,246 @@
+//! Robustness contract of the serve layer, driven by the fault-injection
+//! harness (`bhsne::util::fault`):
+//!
+//! * **Panic isolation** — a worker panic poisons exactly its own
+//!   micro-batch (`WorkerPanicked`); the worker restarts in place and the
+//!   very next request is served.
+//! * **Deadline enforcement** — requests that age past their deadline
+//!   behind a stalled worker are dropped before batch formation with
+//!   `DeadlineExceeded`, never executed late.
+//! * **Bounded admission** — a full queue sheds with `Overloaded`
+//!   carrying the observed depth instead of growing without bound.
+//! * **Graceful degradation** — sustained p99 pressure steps fidelity
+//!   down to attach-only placement and the server keeps answering.
+//! * **Accounting** — after any storm, every accepted request reached
+//!   exactly one terminal state (`accepted_accounted_for`).
+//!
+//! Fault state is process-global, so every test serializes on one mutex;
+//! this file and `crash_safety.rs` are the only test binaries that arm
+//! faults (they are separate processes, so they cannot interfere).
+
+use bhsne::data::synthetic::{gaussian_mixture, SyntheticSpec};
+use bhsne::serve::{ServeConfig, Server, ServerHandle, Status};
+use bhsne::sne::{TransformOptions, TsneConfig, TsneModel, TsneRunner};
+use bhsne::util::fault::{self, Fault};
+use std::sync::{Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// Faults are global: serialize every test.
+fn serial() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn fit_tiny(seed: u64) -> TsneModel {
+    let spec =
+        SyntheticSpec { n: 160, dim: 8, classes: 3, class_sep: 6.0, seed, ..Default::default() };
+    let data = gaussian_mixture(&spec);
+    let cfg = TsneConfig {
+        iters: 120,
+        exaggeration_iters: 30,
+        cost_every: 50,
+        perplexity: 12.0,
+        seed: 7,
+        ..Default::default()
+    };
+    let mut runner = TsneRunner::new(cfg);
+    let mut model = runner.fit(&data.x, data.dim).unwrap();
+    model.labels = data.labels.clone();
+    model
+}
+
+/// One worker so micro-batch sequence numbers are deterministic.
+fn drill_cfg() -> ServeConfig {
+    ServeConfig {
+        queue_depth: 16,
+        deadline_ms: 0,
+        batch_max: 4,
+        degrade_p99_ms: 0.0,
+        workers: 1,
+        threads: 2,
+        opts: TransformOptions { iters: 10, ..Default::default() },
+    }
+}
+
+/// Spin until the server has popped at least `n` micro-batches — i.e. a
+/// worker is *inside* batch `n - 1` (or past it), so anything submitted
+/// now queues behind it.
+fn wait_for_batches(handle: &ServerHandle, n: u64) {
+    let give_up = Instant::now() + Duration::from_secs(5);
+    while handle.stats().batches < n {
+        assert!(Instant::now() < give_up, "worker never picked up batch {n}");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+#[test]
+fn worker_panic_poisons_one_batch_and_the_server_survives() {
+    let _g = serial();
+    fault::clear();
+    let model = fit_tiny(31);
+    let dim = model.dim;
+    let rows = model.x[..2 * dim].to_vec();
+    let server = Server::start(model, drill_cfg());
+    let handle = server.handle();
+
+    // Batch 0 panics inside the worker's catch_unwind.
+    fault::inject(Fault::PanicBatch { batch: 0 });
+    let r = handle.submit(&rows, dim);
+    assert_eq!(r.status, Status::WorkerPanicked, "{}", r.message);
+    assert!(r.message.contains("worker panicked"), "{}", r.message);
+    assert!(r.message.contains("micro-batch 0"), "{}", r.message);
+
+    // The worker restarted in place: the very next request is served.
+    let r = handle.submit(&rows, dim);
+    assert_eq!(r.status, Status::Ok, "server died with the poisoned batch: {}", r.message);
+    assert!(r.y.iter().all(|v| v.is_finite()));
+
+    let snap = server.shutdown();
+    assert_eq!(snap.worker_restarts, 1);
+    assert_eq!(snap.failed_panicked, 1);
+    assert_eq!(snap.served_requests, 1);
+    assert!(snap.accepted_accounted_for(), "{snap:?}");
+    fault::clear();
+}
+
+#[test]
+fn stalled_worker_expires_queued_deadlines_before_execution() {
+    let _g = serial();
+    fault::clear();
+    let model = fit_tiny(37);
+    let dim = model.dim;
+    let rows = model.x[..2 * dim].to_vec();
+    // Deadline far below the injected 400 ms stall: anything queued
+    // behind the stalled batch must age out.
+    let cfg = ServeConfig { deadline_ms: 100, ..drill_cfg() };
+    assert!(fault::SLOW_BATCH_MS > 3 * cfg.deadline_ms);
+    let server = Server::start(model, cfg);
+    let handle = server.handle();
+
+    fault::inject(Fault::SlowBatch { batch: 0 });
+    let (first, second) = std::thread::scope(|s| {
+        let h = handle.clone();
+        let r = rows.clone();
+        let r1 = s.spawn(move || h.submit(&r, dim));
+        // Only once the single worker is inside the stalled batch 0 does
+        // the second request deterministically queue behind it.
+        wait_for_batches(&handle, 1);
+        let r2 = handle.submit(&rows, dim);
+        (r1.join().unwrap(), r2)
+    });
+
+    // The stalled request was already in execution — it completes late
+    // but successfully. The queued one died waiting.
+    assert_eq!(first.status, Status::Ok, "{}", first.message);
+    assert_eq!(second.status, Status::DeadlineExceeded, "{}", second.message);
+    assert!(second.message.contains("deadline exceeded"), "{}", second.message);
+
+    let snap = server.shutdown();
+    assert_eq!(snap.served_requests, 1);
+    assert_eq!(snap.rejected_deadline, 1);
+    assert!(snap.accepted_accounted_for(), "{snap:?}");
+    fault::clear();
+}
+
+#[test]
+fn full_queue_sheds_with_structured_overload_rejections() {
+    let _g = serial();
+    fault::clear();
+    let model = fit_tiny(41);
+    let dim = model.dim;
+    let rows = model.x[..dim].to_vec();
+    let cfg = ServeConfig { queue_depth: 1, ..drill_cfg() };
+    let server = Server::start(model, cfg);
+    let handle = server.handle();
+
+    fault::inject(Fault::SlowBatch { batch: 0 });
+    let replies = std::thread::scope(|s| {
+        let h = handle.clone();
+        let r = rows.clone();
+        let stalled = s.spawn(move || h.submit(&r, dim));
+        wait_for_batches(&handle, 1);
+        // The worker sleeps 400 ms; these four all hit a depth-1 queue
+        // within that window, so at most one is admitted.
+        let burst: Vec<_> = (0..4)
+            .map(|_| {
+                let h = handle.clone();
+                let r = rows.clone();
+                s.spawn(move || h.submit(&r, dim))
+            })
+            .collect();
+        let mut replies = vec![stalled.join().unwrap()];
+        replies.extend(burst.into_iter().map(|j| j.join().unwrap()));
+        replies
+    });
+
+    let shed: Vec<_> = replies.iter().filter(|r| r.status == Status::Overloaded).collect();
+    let ok = replies.iter().filter(|r| r.status == Status::Ok).count();
+    assert!(shed.len() >= 3, "depth-1 queue admitted a burst: {replies:?}");
+    assert_eq!(ok, replies.len() - shed.len(), "every non-shed reply served: {replies:?}");
+    for r in &shed {
+        assert!(r.message.contains("queue full at depth"), "{}", r.message);
+    }
+
+    let snap = server.shutdown();
+    assert_eq!(snap.rejected_overloaded, shed.len() as u64);
+    assert!(snap.accepted_accounted_for(), "{snap:?}");
+    fault::clear();
+}
+
+#[test]
+fn sustained_pressure_degrades_to_attach_only_and_keeps_serving() {
+    let _g = serial();
+    fault::clear();
+    let model = fit_tiny(43);
+    let dim = model.dim;
+    let rows = model.x[..2 * dim].to_vec();
+    // A threshold every completed request exceeds: the controller must
+    // walk down to the attach-only floor and stay there.
+    let cfg = ServeConfig { degrade_p99_ms: 1e-6, ..drill_cfg() };
+    let server = Server::start(model, cfg);
+    let handle = server.handle();
+
+    for i in 0..5 {
+        let r = handle.submit(&rows, dim);
+        assert_eq!(r.status, Status::Ok, "request {i} failed degraded: {}", r.message);
+        assert!(r.y.iter().all(|v| v.is_finite()), "request {i} non-finite degraded placement");
+    }
+
+    let snap = server.shutdown();
+    // Batch 0 sees no completed latencies yet; batch 1 degrades to
+    // half-iters, batch 2 to attach-only; later batches hold the floor.
+    assert_eq!(snap.degrade_level, 2, "{snap:?}");
+    assert_eq!(snap.degrade_transitions, 2, "{snap:?}");
+    assert_eq!(snap.served_requests, 5);
+    assert!(snap.accepted_accounted_for(), "{snap:?}");
+    fault::clear();
+}
+
+#[test]
+fn mixed_fault_storm_drains_clean() {
+    let _g = serial();
+    fault::clear();
+    let model = fit_tiny(47);
+    let dim = model.dim;
+    let rows = model.x[..2 * dim].to_vec();
+    let server = Server::start(model, drill_cfg());
+    let handle = server.handle();
+
+    // Batch 0 panics, batch 1 stalls, batch 2 is clean — one worker, so
+    // the three sequential submits map to batches 0, 1, 2.
+    fault::inject(Fault::PanicBatch { batch: 0 });
+    fault::inject(Fault::SlowBatch { batch: 1 });
+    assert_eq!(handle.submit(&rows, dim).status, Status::WorkerPanicked);
+    let slow = handle.submit(&rows, dim);
+    assert_eq!(slow.status, Status::Ok, "stall is latency, not failure: {}", slow.message);
+    assert_eq!(handle.submit(&rows, dim).status, Status::Ok);
+
+    let snap = server.shutdown();
+    assert_eq!(snap.worker_restarts, 1);
+    assert_eq!(snap.served_requests, 2);
+    assert_eq!(snap.failed_panicked, 1);
+    assert_eq!(snap.batches, 3);
+    assert!(snap.p99_ms >= 0.9 * fault::SLOW_BATCH_MS as f64, "stall invisible in p99: {snap:?}");
+    assert!(snap.accepted_accounted_for(), "{snap:?}");
+    fault::clear();
+}

@@ -20,6 +20,10 @@
 #      (0, 1] and at least 0.90 (the approximate backend's quality bar),
 #      and the approximate all-kNN query must beat the exact vp-tree
 #      query at bench scale, or the backend has no reason to exist.
+#   5. Serve layer — `serve_points_per_sec` and `serve_p99_ms` must be
+#      finite, strictly positive numbers (the serve drive window ran and
+#      its latency window saw completions; a zero or missing figure means
+#      the section was skipped or the stats plumbing broke).
 #
 # Plain bash + grep + awk on the single-line JSON; no jq dependency.
 set -u
@@ -66,6 +70,8 @@ interp_gather_scalar_ns_per_point
 interp_gather_simd_ns_per_point
 interp_total_ns_per_point
 transform_ns_per_point
+serve_points_per_sec
+serve_p99_ms
 input_stage
 vp_build_serial_ns_per_point
 vp_build_parallel_ns_per_point
@@ -149,6 +155,23 @@ if [ -n "$hq" ] && [ -n "$vq" ]; then
 else
     err "cannot compare hnsw vs exact query cost (hnsw='$hq' exact='$vq')"
 fi
+
+# ---- 5. Serve-layer gates: the drive window must have produced real
+# throughput and latency figures. ----
+for key in serve_points_per_sec serve_p99_ms; do
+    v=$(value_of "$key")
+    case "$v" in
+        '' | *[!0-9.]* | . | *.*.*)
+            err "\"$key\" is not a finite positive number: '${v:-<missing>}'"
+            continue
+            ;;
+    esac
+    if awk -v v="$v" 'BEGIN { exit !(v > 0) }'; then
+        echo "check_bench: ok   $key = $v"
+    else
+        err "\"$key\" must be strictly positive, got $v"
+    fi
+done
 
 if [ "$fail" -ne 0 ]; then
     echo "check_bench: $json_file FAILED the perf-trajectory gate" >&2

@@ -1,0 +1,133 @@
+#!/usr/bin/env bash
+# Serve drill over the real binary: fit a model, stand up `bhsne serve`
+# on a unix socket, and hold the serving robustness contract:
+#
+#   1. Identity — at full fidelity (degradation off) the placements a
+#      driven server returns are byte-identical to a one-shot
+#      `bhsne transform` of the same held-out rows.
+#   2. Fault tolerance — with an injected worker panic and a stalled
+#      micro-batch (BHSNE_FAULT=panic-batch,slow-batch), the server
+#      sheds with structured errors (panicked replies, deadline or
+#      overload rejections) and KEEPS SERVING: a follow-up drive must
+#      succeed end to end.
+#   3. Clean drain — a shutdown frame drains the server, the process
+#      exits 0, the socket file is gone, and the final stats report is
+#      flushed with balanced counters.
+#
+#   bash scripts/serve_smoke.sh [out_dir]
+#
+# Requires the release binary (cargo build --release). Override its
+# location with BHSNE_BIN.
+set -u
+
+BIN="${BHSNE_BIN:-target/release/bhsne}"
+OUT="${1:-out/serve_drill}"
+if [ ! -x "$BIN" ]; then
+    echo "serve_smoke: $BIN not found — run: cargo build --release" >&2
+    exit 1
+fi
+rm -rf "$OUT"
+mkdir -p "$OUT"
+
+fail() {
+    echo "serve_smoke: FAIL: $*" >&2
+    # A server may still be running in the background; don't leak it.
+    [ -n "${SRV_PID:-}" ] && kill "$SRV_PID" 2>/dev/null
+    exit 1
+}
+
+wait_for_socket() {
+    for _ in $(seq 1 150); do
+        [ -S "$1" ] && return 0
+        kill -0 "$SRV_PID" 2>/dev/null || fail "server died before binding $1 (see $2)"
+        sleep 0.1
+    done
+    fail "server never bound $1 (see $2)"
+}
+
+# Count of a drive tally line, e.g. `tally panicked "$log"`.
+tally() {
+    grep "^drive: $1 " "$2" | awk '{print $3}'
+}
+
+echo "== fit the served model =="
+"$BIN" fit --dataset gaussians --n 400 --perplexity 10 --iters 120 \
+    --exaggeration-iters 40 --cost-every 0 --seed 9 --threads 2 \
+    --out "$OUT/fit" --model "$OUT/model.bhsne" \
+    >"$OUT/fit.log" 2>&1 || fail "fit failed (see $OUT/fit.log)"
+
+echo "== phase 1: served placements byte-identical to one-shot transform =="
+"$BIN" serve --model "$OUT/model.bhsne" --socket "$OUT/a.sock" \
+    --stats-out "$OUT/a_stats.json" --deadline-ms 0 --degrade-p99-ms 0 \
+    --workers 2 --threads 2 >"$OUT/serve_a.log" 2>&1 &
+SRV_PID=$!
+wait_for_socket "$OUT/a.sock" "$OUT/serve_a.log"
+
+"$BIN" transform --model "$OUT/model.bhsne" --dataset gaussians --n 64 \
+    --threads 2 --out "$OUT/oneshot" >"$OUT/transform.log" 2>&1 \
+    || fail "one-shot transform failed (see $OUT/transform.log)"
+"$BIN" drive --socket "$OUT/a.sock" --model "$OUT/model.bhsne" \
+    --dataset gaussians --n 64 --batch-rows 64 --clients 1 --threads 2 \
+    --require-ok --out "$OUT/served" >"$OUT/drive_a.log" 2>&1 \
+    || fail "identity drive failed (see $OUT/drive_a.log)"
+cmp "$OUT/oneshot/transform.tsv" "$OUT/served/drive.tsv" \
+    || fail "served placements differ from one-shot transform"
+echo "   placements byte-identical"
+
+"$BIN" drive --socket "$OUT/a.sock" --n 0 --shutdown >"$OUT/shutdown_a.log" 2>&1 \
+    || fail "shutdown drive failed (see $OUT/shutdown_a.log)"
+wait "$SRV_PID"
+rc=$?
+SRV_PID=""
+[ "$rc" -eq 0 ] || fail "server exited $rc after a graceful shutdown"
+[ ! -S "$OUT/a.sock" ] || fail "socket file left behind after shutdown"
+[ -f "$OUT/a_stats.json" ] || fail "no final stats report written"
+echo "   clean drain, stats flushed"
+
+echo "== phase 2: injected worker panic + stalled batch; server survives =="
+BHSNE_FAULT=panic-batch@1,slow-batch@2 \
+    "$BIN" serve --model "$OUT/model.bhsne" --socket "$OUT/b.sock" \
+    --stats-out "$OUT/b_stats.json" --queue-depth 4 --deadline-ms 150 \
+    --batch-max 2 --degrade-p99-ms 0 --workers 1 --threads 2 \
+    >"$OUT/serve_b.log" 2>&1 &
+SRV_PID=$!
+wait_for_socket "$OUT/b.sock" "$OUT/serve_b.log"
+
+# 16 requests from 8 concurrent clients through a depth-4 queue with a
+# 150 ms deadline: the panic poisons one micro-batch, the 400 ms stall
+# expires or overflows queued work. No --require-ok: shedding with
+# structured errors is the expected outcome here.
+"$BIN" drive --socket "$OUT/b.sock" --model "$OUT/model.bhsne" \
+    --dataset gaussians --n 128 --batch-rows 8 --clients 8 --threads 2 \
+    >"$OUT/drive_b.log" 2>&1 || fail "fault drive errored (see $OUT/drive_b.log)"
+panicked=$(tally panicked "$OUT/drive_b.log")
+deadline=$(tally deadline "$OUT/drive_b.log")
+overloaded=$(tally overloaded "$OUT/drive_b.log")
+[ -n "$panicked" ] && [ -n "$deadline" ] && [ -n "$overloaded" ] \
+    || fail "drive tallies missing from $OUT/drive_b.log"
+[ "$panicked" -ge 1 ] || fail "injected panic produced no panicked replies"
+[ $((deadline + overloaded)) -ge 1 ] \
+    || fail "stalled batch produced no deadline/overload shedding"
+echo "   shed with structure: $panicked panicked, $deadline deadline, $overloaded overloaded"
+
+# The server must still serve after the faults: a clean follow-up drive.
+"$BIN" drive --socket "$OUT/b.sock" --model "$OUT/model.bhsne" \
+    --dataset gaussians --n 8 --batch-rows 8 --clients 1 --threads 2 \
+    --require-ok >"$OUT/drive_b2.log" 2>&1 \
+    || fail "server stopped serving after faults (see $OUT/drive_b2.log)"
+echo "   server survived the fault storm"
+
+echo "== phase 3: clean drain with balanced counters =="
+"$BIN" drive --socket "$OUT/b.sock" --n 0 --shutdown >"$OUT/shutdown_b.log" 2>&1 \
+    || fail "shutdown drive failed (see $OUT/shutdown_b.log)"
+wait "$SRV_PID"
+rc=$?
+SRV_PID=""
+[ "$rc" -eq 0 ] || fail "server exited $rc after the fault storm + shutdown"
+[ -f "$OUT/b_stats.json" ] || fail "no final stats report after the fault run"
+grep -q '"p99_ms":' "$OUT/b_stats.json" || fail "stats report missing p99_ms"
+fp=$(grep -o '"failed_panicked":[0-9]*' "$OUT/b_stats.json" | cut -d: -f2)
+[ -n "$fp" ] && [ "$fp" -ge 1 ] \
+    || fail "final stats do not record the panicked batch (failed_panicked='$fp')"
+
+echo "serve_smoke: PASS (identity, fault shedding, survival, clean drain)"
