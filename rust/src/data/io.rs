@@ -886,7 +886,7 @@ pub fn read_model(path: impl AsRef<Path>) -> Result<TsneModel> {
         anyhow::ensure!(g.len() == n, "hnsw graph size {} != data rows {n}", g.len());
         anyhow::ensure!(g.dim() == dim, "hnsw graph dim {} != data dim {dim}", g.dim());
     }
-    Ok(TsneModel { config, dim, n, x, labels, pca, vp, hnsw, p, embedding, stats })
+    Ok(TsneModel { config, dim, n, x, labels, pca, vp, hnsw, p, embedding, stats, frozen: Default::default() })
 }
 
 // ---------------------------------------------------------------------
@@ -1173,6 +1173,7 @@ mod tests {
             p,
             embedding,
             stats,
+            frozen: Default::default(),
         }
     }
 

@@ -40,6 +40,7 @@
 //! | `serve.batch_max`         | `--batch-max`          |
 //! | `serve.degrade_p99_ms`    | `--degrade-p99-ms`     |
 //! | `serve.workers`           | `--workers`            |
+//! | `serve.repulsion`         | `--repulsion`          |
 //!
 //! `bhsne serve` loads a `.bhsne` once and serves transform requests over
 //! a dependency-free length-prefixed protocol on a unix socket. The
@@ -54,6 +55,18 @@
 //! one-shot `bhsne transform` of the same rows. Shutdown (a protocol
 //! frame; `bhsne drive --shutdown` sends one) drains accepted work and
 //! flushes final stats atomically to `--stats-out`.
+//!
+//! `--repulsion` (`frozen` | `compose` | `union`, on `transform` and
+//! `serve`) picks the transform repulsion path. `frozen` (default) runs
+//! each query against the model's reference tree only — built once per
+//! process, shared read-only across serve workers (the stats report
+//! counts `tree_reuses` vs `tree_rebuilds`), and O(m log n) per
+//! iteration, with placements independent of how rows are batched.
+//! `compose` additionally inserts the m movable queries into a small
+//! per-iteration overlay whose cell summaries compose with the frozen
+//! arena at traversal time (query–query repulsion, union semantics).
+//! `union` is the legacy full rebuild of the (reference ∪ queries) tree
+//! every iteration.
 //!
 //! `--force-method` (`exact` | `bh` | `dualtree` | `interp`) picks the
 //! repulsion approximation; `--intervals` caps the grid resolution of
@@ -88,7 +101,7 @@ use bhsne::serve::{
     read_response, write_control_request, write_transform_request, ServeConfig, ServeReply,
     Status, REQ_SHUTDOWN, REQ_STATS,
 };
-use bhsne::sne::{RepulsionMethod, TransformOptions, TsneConfig, TsneModel};
+use bhsne::sne::{RepulsionMethod, TransformOptions, TransformRepulsion, TsneConfig, TsneModel};
 use bhsne::spatial::CellSizeMode;
 use bhsne::util::args::{parse, ArgError, CommandSpec};
 use bhsne::util::config::Config;
@@ -244,6 +257,14 @@ fn parse_force_method(
         other => {
             anyhow::bail!("unknown force-method {other:?} (expected exact | bh | dualtree | interp)")
         }
+    })
+}
+
+/// Map the `--repulsion` / `serve.repulsion` spelling onto the transform
+/// repulsion path with a helpful error.
+fn parse_transform_repulsion(s: &str) -> anyhow::Result<TransformRepulsion> {
+    TransformRepulsion::parse(s).ok_or_else(|| {
+        anyhow::anyhow!("unknown transform repulsion {s:?} (expected frozen | compose | union)")
     })
 }
 
@@ -445,6 +466,7 @@ fn cmd_transform(args: &[String]) -> anyhow::Result<()> {
     .opt("n", "500", "held-out query rows (taken past the fitted prefix, same corpus seed)")
     .opt("iters", "60", "frozen-reference gradient iterations (0 = barycenter only)")
     .opt("eta", "0.1", "transform step size")
+    .opt("repulsion", "frozen", "transform repulsion path (frozen | compose | union)")
     .opt("out", "", "output directory for transform.tsv (empty = none)")
     .opt("data-dir", "data", "directory with real datasets (IDX)")
     .opt("threads", "0", "worker threads (0 = all cores)");
@@ -467,6 +489,7 @@ fn cmd_transform(args: &[String]) -> anyhow::Result<()> {
         opts: TransformOptions {
             iters: p.get("iters").map_err(anyhow::Error::msg)?,
             eta: p.get("eta").map_err(anyhow::Error::msg)?,
+            repulsion: parse_transform_repulsion(p.str("repulsion").unwrap_or("frozen"))?,
             ..Default::default()
         },
     };
@@ -518,6 +541,7 @@ fn serve_spec() -> CommandSpec {
         .opt("threads", "0", "compute-pool threads shared by the workers (0 = all cores)")
         .opt("iters", "60", "full-fidelity transform iterations (degradation level 0)")
         .opt("eta", "0.1", "transform step size")
+        .opt("repulsion", "frozen", "transform repulsion path (frozen | compose | union)")
         .opt("config", "", "TOML config file (CLI flags override)")
 }
 
@@ -561,9 +585,15 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         serve.workers = p.get("workers").map_err(anyhow::Error::msg)?;
     }
     serve.threads = p.get("threads").map_err(anyhow::Error::msg)?;
+    let repulsion_spelling = if use_cli("repulsion", "serve.repulsion") {
+        p.str("repulsion").unwrap_or("frozen").to_string()
+    } else {
+        file.as_ref().map(|f| f.str_or("serve.repulsion", "frozen")).unwrap_or_else(|| "frozen".into())
+    };
     serve.opts = TransformOptions {
         iters: p.get("iters").map_err(anyhow::Error::msg)?,
         eta: p.get("eta").map_err(anyhow::Error::msg)?,
+        repulsion: parse_transform_repulsion(&repulsion_spelling)?,
         ..Default::default()
     };
     let cfg = ServeJobConfig {
@@ -590,6 +620,16 @@ fn drive_spec() -> CommandSpec {
         .opt("threads", "0", "local threads for query generation/quality (0 = all cores)")
         .flag("require-ok", "fail unless every request is served ok")
         .flag("shutdown", "send a graceful shutdown frame when done")
+}
+
+/// Pull one `"key":<integer>` figure out of the server's single-line
+/// JSON stats report (machine-written by `StatsSnapshot::to_json_line`;
+/// dependency-free, so no JSON parser needed here).
+fn json_u64(json: &str, key: &str) -> Option<u64> {
+    let pat = format!("\"{key}\":");
+    let start = json.find(&pat)? + pat.len();
+    let digits: String = json[start..].chars().take_while(|c| c.is_ascii_digit()).collect();
+    digits.parse().ok()
 }
 
 /// Open one client connection and run the batches assigned to it
@@ -697,7 +737,13 @@ fn cmd_drive(args: &[String]) -> anyhow::Result<()> {
     let mut reader = std::io::BufReader::new(stream.try_clone()?);
     let mut writer = std::io::BufWriter::new(stream);
     write_control_request(&mut writer, REQ_STATS)?;
-    println!("server: {}", read_response(&mut reader)?.message);
+    let stats_line = read_response(&mut reader)?.message;
+    println!("server: {stats_line}");
+    if let (Some(reuses), Some(rebuilds)) =
+        (json_u64(&stats_line, "tree_reuses"), json_u64(&stats_line, "tree_rebuilds"))
+    {
+        println!("drive: frozen tree reuses {reuses} rebuilds {rebuilds}");
+    }
     if p.flag("shutdown") {
         write_control_request(&mut writer, REQ_SHUTDOWN)?;
         let r = read_response(&mut reader)?;

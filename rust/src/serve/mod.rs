@@ -511,6 +511,30 @@ mod tests {
         let snap = server.shutdown();
         assert_eq!(snap.served_requests, 1);
         assert_eq!(snap.served_points, 8);
+        // The direct transform above already built the model's frozen
+        // tree, so the served request must have reused it.
+        assert_eq!(snap.tree_reuses, 1);
+        assert_eq!(snap.tree_rebuilds, 0);
+        assert!(snap.accepted_accounted_for());
+    }
+
+    #[test]
+    fn frozen_tree_is_built_once_and_shared_across_requests() {
+        let model = fit_tiny(29);
+        let dim = model.dim;
+        let rows: Vec<f32> = model.x[..4 * dim].to_vec();
+        let server = Server::start(model, quick_serve_cfg());
+        let handle = server.handle();
+        // Sequential submits: the first forces the one-time tree build,
+        // the rest must hit the shared frozen tree.
+        for _ in 0..5 {
+            let reply = handle.submit(&rows, dim);
+            assert_eq!(reply.status, Status::Ok, "{}", reply.message);
+        }
+        let snap = server.shutdown();
+        assert_eq!(snap.served_requests, 5);
+        assert_eq!(snap.tree_rebuilds, 1, "exactly one frozen-tree build per model");
+        assert_eq!(snap.tree_reuses, 4, "all later requests share the frozen tree");
         assert!(snap.accepted_accounted_for());
     }
 

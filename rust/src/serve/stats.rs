@@ -58,6 +58,8 @@ pub struct ServeStats {
     failed_panicked: AtomicU64,
     worker_restarts: AtomicU64,
     batches: AtomicU64,
+    tree_reuses: AtomicU64,
+    tree_rebuilds: AtomicU64,
     degrade_transitions: AtomicU64,
     degrade_level: AtomicUsize,
     window: Mutex<LatencyRing>,
@@ -77,6 +79,8 @@ impl ServeStats {
             failed_panicked: AtomicU64::new(0),
             worker_restarts: AtomicU64::new(0),
             batches: AtomicU64::new(0),
+            tree_reuses: AtomicU64::new(0),
+            tree_rebuilds: AtomicU64::new(0),
             degrade_transitions: AtomicU64::new(0),
             degrade_level: AtomicUsize::new(0),
             window: Mutex::new(LatencyRing { buf: Vec::with_capacity(LATENCY_WINDOW), next: 0 }),
@@ -121,6 +125,19 @@ impl ServeStats {
         self.batches.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// A served request's repulsion ran against the model's frozen
+    /// reference tree without rebuilding it (the steady state).
+    pub fn on_tree_reuse(&self) {
+        self.tree_reuses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A served request triggered the one-time frozen-tree build for its
+    /// model (first transform after load; anything past the first per
+    /// process indicates the cache is not being shared).
+    pub fn on_tree_rebuild(&self) {
+        self.tree_rebuilds.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn on_degrade_transition(&self, new_level: usize) {
         self.degrade_transitions.fetch_add(1, Ordering::Relaxed);
         self.degrade_level.store(new_level, Ordering::Relaxed);
@@ -148,6 +165,8 @@ impl ServeStats {
             failed_panicked: self.failed_panicked.load(Ordering::Relaxed),
             worker_restarts: self.worker_restarts.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
+            tree_reuses: self.tree_reuses.load(Ordering::Relaxed),
+            tree_rebuilds: self.tree_rebuilds.load(Ordering::Relaxed),
             degrade_transitions: self.degrade_transitions.load(Ordering::Relaxed),
             degrade_level: self.degrade_level.load(Ordering::Relaxed),
             p50_ms: p50,
@@ -180,6 +199,11 @@ pub struct StatsSnapshot {
     pub failed_panicked: u64,
     pub worker_restarts: u64,
     pub batches: u64,
+    /// Served requests whose repulsion reused the model's frozen
+    /// reference tree (vs `tree_rebuilds`, which counts the one-time
+    /// builds). Requests on the legacy union path bump neither.
+    pub tree_reuses: u64,
+    pub tree_rebuilds: u64,
     pub degrade_transitions: u64,
     pub degrade_level: usize,
     /// Percentiles over the recent-latency window, end-to-end ms
@@ -210,6 +234,8 @@ impl StatsSnapshot {
                 "\"failed_panicked\":{},",
                 "\"worker_restarts\":{},",
                 "\"batches\":{},",
+                "\"tree_reuses\":{},",
+                "\"tree_rebuilds\":{},",
                 "\"degrade_transitions\":{},",
                 "\"degrade_level\":{},",
                 "\"p50_ms\":{:.3},",
@@ -228,6 +254,8 @@ impl StatsSnapshot {
             self.failed_panicked,
             self.worker_restarts,
             self.batches,
+            self.tree_reuses,
+            self.tree_rebuilds,
             self.degrade_transitions,
             self.degrade_level,
             self.p50_ms,
@@ -306,6 +334,8 @@ mod tests {
             "\"points_per_sec\":",
             "\"worker_restarts\":0",
             "\"degrade_level\":0",
+            "\"tree_reuses\":0",
+            "\"tree_rebuilds\":0",
         ] {
             assert!(line.contains(key), "missing {key} in {line}");
         }

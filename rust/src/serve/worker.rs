@@ -12,14 +12,24 @@
 //! union-tree gradient has (second-order) query-query repulsion, so
 //! merging would let batch composition leak into results. Per-request
 //! execution is what makes a served placement bit-identical to a
-//! one-shot `bhsne transform` of the same rows.
+//! one-shot `bhsne transform` of the same rows. (The default
+//! `FrozenOnly` repulsion is batch-independent by construction, but the
+//! per-request contract keeps the byte-compare guarantee for every
+//! configurable path.)
+//!
+//! Every worker shares the model's **frozen reference tree** — built
+//! once per process, on the first transform — and keeps a private
+//! [`TransformScratch`] alive across micro-batches, so steady-state
+//! requests allocate nothing beyond the returned placement vectors.
+//! Reuse vs (one-time) build is tallied into the `tree_reuses` /
+//! `tree_rebuilds` serve counters.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread;
 
-use crate::sne::{SneError, TransformOptions, TransformResult, TsneModel};
+use crate::sne::{SneError, TransformOptions, TransformResult, TransformScratch, TsneModel};
 use crate::util::{fault, ThreadPool};
 
 use super::batcher::DegradeController;
@@ -55,6 +65,11 @@ pub(crate) fn spawn_workers(core: &Arc<ServerCore>, n: usize) -> Vec<thread::Joi
 }
 
 fn worker_loop(core: &ServerCore) {
+    // Per-worker transform scratch, reused across batches. A panic
+    // mid-transform leaves only drained buffers behind (the cached
+    // engine is `take`n for the duration of a call), so reuse after a
+    // poisoned batch is safe — the next call rebuilds what it needs.
+    let mut scratch = TransformScratch::new();
     while let Some(drained) = core.queue.pop_batch(core.batch_max) {
         // Deadline-expired requests never reach placement work.
         for req in drained.expired {
@@ -88,7 +103,13 @@ fn worker_loop(core: &ServerCore) {
             let mut results: Vec<anyhow::Result<TransformResult>> =
                 Vec::with_capacity(batch.len());
             for req in batch.iter() {
-                results.push(core.model.transform_with(&core.pool, &req.rows, req.dim, &opts));
+                results.push(core.model.transform_with_scratch(
+                    &core.pool,
+                    &req.rows,
+                    req.dim,
+                    &opts,
+                    &mut scratch,
+                ));
             }
             results
         }));
@@ -98,6 +119,13 @@ fn worker_loop(core: &ServerCore) {
                 for (req, res) in batch.into_iter().zip(results) {
                     match res {
                         Ok(t) => {
+                            if t.stats.used_frozen_tree {
+                                if t.stats.tree_rebuilt {
+                                    core.stats.on_tree_rebuild();
+                                } else {
+                                    core.stats.on_tree_reuse();
+                                }
+                            }
                             let points = t.y.len() / out_dim.max(1);
                             let latency_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
                             core.stats.on_served(points, latency_ms);

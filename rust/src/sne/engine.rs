@@ -20,11 +20,13 @@
 //! [`DynForceEngine`] erases the compile-time dimension so the runner can
 //! hold one engine for either the 2-D quadtree or the 3-D octree.
 
+use std::sync::Arc;
+
 use super::gradient::{self, RepulsionMethod};
 use super::interp::InterpGrid;
 use super::sparse::Csr;
 use super::AttractiveBackend;
-use crate::spatial::{BhTree, CellSizeMode, DualTreeScratch};
+use crate::spatial::{BhTree, CellSizeMode, DualTreeScratch, FrozenTree};
 use crate::util::{Stopwatch, ThreadPool};
 
 /// Counters and timings accumulated across a run.
@@ -55,6 +57,22 @@ pub struct ForceEngine<const DIM: usize> {
     movable: (usize, usize),
     /// The persistent tree; built on first use, refit in place afterwards.
     tree: Option<BhTree<DIM>>,
+    /// Frozen reference tree shared read-only across transform calls
+    /// (serve workers hold clones of one `Arc`). `Some` switches the
+    /// Barnes-Hut arm to overlay mode: movable rows traverse this tree in
+    /// query mode instead of a freshly built union tree, so an iteration
+    /// costs O(m log n) with zero reference-tree construction.
+    frozen: Option<Arc<BhTree<DIM>>>,
+    /// Overlay-mode only: when set, movable rows also repel each other
+    /// through a small per-iteration tree over the movable slice
+    /// (composing with the frozen summaries to reproduce union-tree
+    /// semantics). Off by default — frozen-only forces make placements
+    /// bitwise independent of how queries are batched.
+    compose_overlay: bool,
+    /// The per-iteration overlay tree over the movable slice; built on
+    /// the first overlay pass, refit in place afterwards. Only used when
+    /// `compose_overlay` is set.
+    overlay: Option<BhTree<DIM>>,
     /// Dual-tree traversal workspace (slot accumulators, stacks, seeds).
     dual: DualTreeScratch,
     /// Grid-interpolation state (nodes, charges, potentials, spread
@@ -107,6 +125,9 @@ impl<const DIM: usize> ForceEngine<DIM> {
             mode,
             movable: (lo, hi),
             tree: None,
+            frozen: None,
+            compose_overlay: false,
+            overlay: None,
             dual: DualTreeScratch::new(),
             interp: None,
             z_parts: Vec::new(),
@@ -121,8 +142,42 @@ impl<const DIM: usize> ForceEngine<DIM> {
         }
     }
 
+    /// Overlay-mode engine for the frozen-reference transform: the
+    /// reference tree (`frozen`, covering rows `0..lo` of the union
+    /// layout) was built **once per model** and is shared read-only;
+    /// movable rows `lo..hi` traverse it in query mode each iteration,
+    /// plus — when `compose_overlay` — a small per-iteration tree over
+    /// the movable slice itself, so the per-iteration cost is O(m log n)
+    /// with no union-tree rebuild. Requires the point-cell Barnes-Hut
+    /// method (the only strategy whose traversal composes a query pass
+    /// with an overlay pass) and `hi == n` (the frozen rows are exactly
+    /// the tree's rows, in front of the movable batch).
+    pub fn with_frozen(
+        frozen: Arc<BhTree<DIM>>,
+        method: RepulsionMethod,
+        mode: CellSizeMode,
+        lo: usize,
+        hi: usize,
+        compose_overlay: bool,
+    ) -> Self {
+        assert!(
+            matches!(method, RepulsionMethod::BarnesHut { .. }),
+            "frozen-overlay mode requires the point-cell Barnes-Hut method, got {method:?}"
+        );
+        assert_eq!(frozen.len(), lo, "frozen tree rows must be exactly the reference rows 0..lo");
+        let mut e = Self::with_movable(hi, method, mode, lo, hi);
+        e.frozen = Some(frozen);
+        e.compose_overlay = compose_overlay;
+        e
+    }
+
     pub fn n(&self) -> usize {
         self.n
+    }
+
+    /// Whether this engine runs the frozen-overlay transform path.
+    pub fn is_frozen_mode(&self) -> bool {
+        self.frozen.is_some()
     }
 
     pub fn method(&self) -> RepulsionMethod {
@@ -178,6 +233,30 @@ impl<const DIM: usize> ForceEngine<DIM> {
         self.stats.tree_secs += sw.elapsed_secs();
     }
 
+    /// Build or refit the overlay tree over the movable slice of `y`
+    /// (contiguous in the union layout). Same refit discipline and
+    /// refit/rebuild accounting as [`ForceEngine::prepare_tree`], just
+    /// over m points instead of n.
+    fn prepare_overlay(&mut self, pool: &ThreadPool, y: &[f32]) {
+        let (mlo, mhi) = self.movable;
+        let slice = &y[mlo * DIM..mhi * DIM];
+        let sw = Stopwatch::start();
+        match self.overlay.as_mut() {
+            Some(tree) => {
+                if tree.refit(Some(pool), slice) {
+                    self.stats.refits += 1;
+                } else {
+                    self.stats.full_rebuilds += 1;
+                }
+            }
+            None => {
+                self.overlay = Some(BhTree::build_parallel(pool, slice, mhi - mlo, self.mode));
+                self.stats.full_rebuilds += 1;
+            }
+        }
+        self.stats.tree_secs += sw.elapsed_secs();
+    }
+
     /// Zero `out` and accumulate the unnormalized repulsive term
     /// (`F_repZ`) into it per the configured method; returns Z. `out` is
     /// row-major `n × DIM`.
@@ -210,6 +289,32 @@ impl<const DIM: usize> ForceEngine<DIM> {
                     self.n,
                     mlo,
                     mhi,
+                    out,
+                    &mut self.z_parts,
+                    row_z,
+                );
+                self.stats.repulsion_secs += sw.elapsed_secs();
+                z
+            }
+            RepulsionMethod::BarnesHut { theta } if self.frozen.is_some() => {
+                // Frozen-overlay path: no union tree at all. The frozen
+                // reference tree is already built (once per model); the
+                // only tree work is the optional m-point overlay refit.
+                if self.compose_overlay && mhi > mlo {
+                    self.prepare_overlay(pool, y);
+                }
+                let sw = Stopwatch::start();
+                let frozen = self.frozen.as_ref().expect("frozen mode");
+                let overlay = if self.compose_overlay { self.overlay.as_ref() } else { None };
+                let z = gradient::repulsive_frozen_rowz_with::<DIM>(
+                    pool,
+                    frozen,
+                    overlay,
+                    y,
+                    self.n,
+                    mlo,
+                    mhi,
+                    theta,
                     out,
                     &mut self.z_parts,
                     row_z,
@@ -351,6 +456,9 @@ impl<const DIM: usize> ForceEngine<DIM> {
         if let Some(tree) = &self.tree {
             caps.extend(tree.capacities());
         }
+        if let Some(overlay) = &self.overlay {
+            caps.extend(overlay.capacities());
+        }
         caps.extend(self.dual.capacities());
         if let Some(grid) = &self.interp {
             caps.extend(grid.capacities());
@@ -385,6 +493,44 @@ impl DynForceEngine {
             2 => DynForceEngine::D2(ForceEngine::with_movable(n, method, mode, lo, hi)),
             3 => DynForceEngine::D3(ForceEngine::with_movable(n, method, mode, lo, hi)),
             _ => panic!("unsupported embedding dimension {dim}"),
+        }
+    }
+
+    /// [`ForceEngine::with_frozen`], dimension-erased: the frozen tree's
+    /// own variant picks the engine dimension.
+    pub fn with_frozen(
+        frozen: &FrozenTree,
+        method: RepulsionMethod,
+        mode: CellSizeMode,
+        lo: usize,
+        hi: usize,
+        compose_overlay: bool,
+    ) -> Self {
+        match frozen {
+            FrozenTree::D2(t) => DynForceEngine::D2(ForceEngine::with_frozen(
+                t.clone(),
+                method,
+                mode,
+                lo,
+                hi,
+                compose_overlay,
+            )),
+            FrozenTree::D3(t) => DynForceEngine::D3(ForceEngine::with_frozen(
+                t.clone(),
+                method,
+                mode,
+                lo,
+                hi,
+                compose_overlay,
+            )),
+        }
+    }
+
+    /// Whether this engine runs the frozen-overlay transform path.
+    pub fn is_frozen_mode(&self) -> bool {
+        match self {
+            DynForceEngine::D2(e) => e.is_frozen_mode(),
+            DynForceEngine::D3(e) => e.is_frozen_mode(),
         }
     }
 
@@ -867,6 +1013,103 @@ mod tests {
             CellSizeMode::Diagonal,
             50,
             100,
+        );
+    }
+
+    /// Frozen-reference engine (both `FrozenOnly` and the composed
+    /// overlay): bit-identical to the serial frozen twin every iteration,
+    /// frozen rows untouched, and — the serving invariant — the capacity
+    /// snapshot freezes once warm (the overlay refits in place).
+    #[test]
+    fn frozen_engine_matches_serial_twin_and_does_not_allocate() {
+        let pool = ThreadPool::new(4);
+        let n = 700;
+        let (lo, hi) = (560, 700);
+        let base = random_embedding(n, 51);
+        let frozen = Arc::new(crate::spatial::BhTree::<2>::build_parallel(
+            &pool,
+            &base[..lo * 2],
+            lo,
+            CellSizeMode::Diagonal,
+        ));
+        for compose in [false, true] {
+            let mut y = base.clone();
+            let mut engine = ForceEngine::<2>::with_frozen(
+                Arc::clone(&frozen),
+                RepulsionMethod::BarnesHut { theta: 0.5 },
+                CellSizeMode::Diagonal,
+                lo,
+                hi,
+                compose,
+            );
+            assert!(engine.is_frozen_mode());
+            let mut rng = Pcg32::seeded(52);
+            let mut caps = Vec::new();
+            for it in 0..6 {
+                let mut out = vec![0f64; n * 2];
+                let mut row_z = vec![0f64; n];
+                let z = engine.repulsive_rowz_into(&pool, &y, &mut out, Some(&mut row_z));
+                // Serial twin against an independently built overlay —
+                // the engine's in-place refit must match a fresh build.
+                let overlay = compose.then(|| {
+                    crate::spatial::BhTree::<2>::build_parallel(
+                        &pool,
+                        &y[lo * 2..],
+                        hi - lo,
+                        CellSizeMode::Diagonal,
+                    )
+                });
+                let mut want = vec![0f64; n * 2];
+                let mut want_z = vec![0f64; n];
+                let z_want = gradient::repulsive_frozen_rowz_serial::<2>(
+                    &frozen,
+                    overlay.as_ref(),
+                    &y,
+                    n,
+                    lo,
+                    hi,
+                    0.5,
+                    &mut want,
+                    Some(&mut want_z),
+                );
+                assert_eq!(z, z_want, "compose={compose} it={it}");
+                assert_eq!(out, want, "compose={compose} it={it}");
+                assert_eq!(row_z, want_z, "compose={compose} it={it}");
+                assert!(out[..lo * 2].iter().all(|&v| v == 0.0), "frozen rows moved");
+                assert!(row_z[..lo].iter().all(|&v| v == 0.0), "frozen row_z written");
+                // Drift only the movable rows, as the transform loop does.
+                for v in y[lo * 2..].iter_mut() {
+                    *v += rng.normal() as f32 * 1e-3;
+                }
+                engine.mark_embedding_moved();
+                if it == 2 {
+                    caps = engine.capacities();
+                }
+                if it > 2 {
+                    assert_eq!(engine.capacities(), caps, "steady-state iteration {it} allocated");
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "point-cell")]
+    fn frozen_mode_rejects_non_bh_methods() {
+        let pool = ThreadPool::new(1);
+        let y = random_embedding(100, 60);
+        let frozen = Arc::new(crate::spatial::BhTree::<2>::build_parallel(
+            &pool,
+            &y,
+            100,
+            CellSizeMode::Diagonal,
+        ));
+        let _ = ForceEngine::<2>::with_frozen(
+            frozen,
+            RepulsionMethod::Exact,
+            CellSizeMode::Diagonal,
+            100,
+            120,
+            false,
         );
     }
 

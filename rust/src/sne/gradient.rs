@@ -317,6 +317,133 @@ pub fn repulsive_bh_range_rowz_with_tree_scratch<const DIM: usize>(
     z_parts.iter().sum()
 }
 
+/// Frozen-reference repulsion for the movable rows `lo..hi` of the union
+/// layout `y` (row-major `n × DIM`): each movable row traverses the
+/// `frozen` reference tree in query mode ([`BhTree::repulsion_query_with`]
+/// — the queries live outside the tree, so no self-exclusion) and, when
+/// `overlay` is provided, additionally traverses the small overlay tree
+/// built over the movable slice itself (member mode, local index
+/// `i - lo`, self-excluded) so the composed summaries reproduce the
+/// union-tree semantics at θ=0 exactly. With `overlay = None` the
+/// movable rows feel only the frozen reference field, which makes
+/// placements independent of how queries are batched — bitwise, not just
+/// to tolerance. Frozen rows (outside `lo..hi`) are never traversed and
+/// accumulate no force; `out` rows outside the range are left untouched.
+///
+/// Cost per call is O(m log n) traversal with zero tree construction —
+/// the frozen tree is built once per model and the overlay once per
+/// iteration by the engine. Same deterministic reduction as
+/// [`repulsive_bh_range_rowz_with_tree_scratch`]: 64-row chunks, one
+/// Z slot per chunk, summed in order — bit-identical across thread
+/// counts and SIMD backends, and to [`repulsive_frozen_rowz_serial`].
+#[allow(clippy::too_many_arguments)]
+pub fn repulsive_frozen_rowz_with<const DIM: usize>(
+    pool: &ThreadPool,
+    frozen: &BhTree<DIM>,
+    overlay: Option<&BhTree<DIM>>,
+    y: &[f32],
+    n: usize,
+    lo: usize,
+    hi: usize,
+    theta: f32,
+    out: &mut [f64],
+    z_parts: &mut Vec<f64>,
+    row_z: Option<&mut [f64]>,
+) -> f64 {
+    assert_eq!(out.len(), n * DIM);
+    assert!(lo <= hi && hi <= n, "movable range {lo}..{hi} out of 0..{n}");
+    let count = hi - lo;
+    z_parts.clear();
+    if count == 0 {
+        return 0.0;
+    }
+    let rz = row_z.map(|s| {
+        assert_eq!(s.len(), n);
+        SendPtr(s.as_mut_ptr())
+    });
+    let be = simd::backend();
+    let oc = SendPtr(out.as_mut_ptr());
+    const CHUNK: usize = 64;
+    let n_chunks = count.div_ceil(CHUNK);
+    z_parts.resize(n_chunks, 0f64);
+    let zc = SendPtr(z_parts.as_mut_ptr());
+    pool.scope_chunks_with(count, CHUNK, SummaryBatch::<DIM>::new, |batch, clo, chi| {
+        let _ = (&oc, &zc, &rz);
+        let mut z_local = 0f64;
+        for i in lo + clo..lo + chi {
+            let mut yi = [0f32; DIM];
+            yi.copy_from_slice(&y[i * DIM..(i + 1) * DIM]);
+            let mut f = [0f64; DIM];
+            let mut z_row = frozen.repulsion_query_with(be, &yi, theta, &mut f, batch);
+            if let Some(ov) = overlay {
+                z_row += ov.repulsion_with(be, (i - lo) as u32, &yi, theta, &mut f, batch);
+            }
+            z_local += z_row;
+            if let Some(rz) = &rz {
+                // SAFETY: disjoint rows across chunks.
+                unsafe { *rz.0.add(i) = z_row };
+            }
+            let row = unsafe { std::slice::from_raw_parts_mut(oc.0.add(i * DIM), DIM) };
+            row.copy_from_slice(&f);
+        }
+        // SAFETY: one chunk writes exactly one slot.
+        unsafe { *zc.0.add(clo / CHUNK) = z_local };
+    });
+    z_parts.iter().sum()
+}
+
+/// Serial twin of [`repulsive_frozen_rowz_with`]: the same chunked
+/// reduction order without the pool, kept as the determinism oracle the
+/// parallel path is tested bit-identical against.
+#[allow(clippy::too_many_arguments)]
+pub fn repulsive_frozen_rowz_serial<const DIM: usize>(
+    frozen: &BhTree<DIM>,
+    overlay: Option<&BhTree<DIM>>,
+    y: &[f32],
+    n: usize,
+    lo: usize,
+    hi: usize,
+    theta: f32,
+    out: &mut [f64],
+    mut row_z: Option<&mut [f64]>,
+) -> f64 {
+    assert_eq!(out.len(), n * DIM);
+    assert!(lo <= hi && hi <= n, "movable range {lo}..{hi} out of 0..{n}");
+    let count = hi - lo;
+    if count == 0 {
+        return 0.0;
+    }
+    if let Some(rz) = &row_z {
+        assert_eq!(rz.len(), n);
+    }
+    let be = simd::backend();
+    let mut batch = SummaryBatch::<DIM>::new();
+    const CHUNK: usize = 64;
+    let mut z_total = 0f64;
+    let mut clo = 0usize;
+    while clo < count {
+        let chi = (clo + CHUNK).min(count);
+        let mut z_local = 0f64;
+        for i in lo + clo..lo + chi {
+            let mut yi = [0f32; DIM];
+            yi.copy_from_slice(&y[i * DIM..(i + 1) * DIM]);
+            let mut f = [0f64; DIM];
+            let mut z_row = frozen.repulsion_query_with(be, &yi, theta, &mut f, &mut batch);
+            if let Some(ov) = overlay {
+                z_row += ov.repulsion_with(be, (i - lo) as u32, &yi, theta, &mut f, &mut batch);
+            }
+            z_local += z_row;
+            if let Some(rz) = row_z.as_deref_mut() {
+                rz[i] = z_row;
+            }
+            out[i * DIM..(i + 1) * DIM].copy_from_slice(&f);
+        }
+        z_total += z_local;
+        clo = chi;
+    }
+    z_total
+}
+
 /// Full gradient of Eq. 8: `grad = 4 (F_attr − F_repZ / Z)`, written into
 /// `grad` (row-major `n × DIM`). Returns Z (useful for the KL cost).
 ///
@@ -826,6 +953,180 @@ mod tests {
                 "idx {idx}: fd {fd} vs analytic {}",
                 grad[idx]
             );
+        }
+    }
+
+    /// Exact O((n_ref+m)·m) repulsion oracle over the union for the
+    /// movable rows `lo..hi`: unnormalized force Σ_{j≠i} q²(y_i−y_j) and
+    /// per-row Z.
+    fn exact_union_repulsion_oracle(
+        y: &[f32],
+        n: usize,
+        lo: usize,
+        hi: usize,
+    ) -> (Vec<f64>, Vec<f64>) {
+        let mut out = vec![0f64; n * 2];
+        let mut row_z = vec![0f64; n];
+        for i in lo..hi {
+            for j in 0..n {
+                if j == i {
+                    continue;
+                }
+                let dx = (y[i * 2] - y[j * 2]) as f64;
+                let dy = (y[i * 2 + 1] - y[j * 2 + 1]) as f64;
+                let q = 1.0 / (1.0 + dx * dx + dy * dy);
+                row_z[i] += q;
+                out[i * 2] += q * q * dx;
+                out[i * 2 + 1] += q * q * dy;
+            }
+        }
+        (out, row_z)
+    }
+
+    #[test]
+    fn frozen_compose_theta0_matches_exact_union_oracle() {
+        // θ=0 never summarizes: the frozen reference tree visits every
+        // reference leaf and the overlay visits every other query leaf,
+        // so their composition must reproduce the exact union repulsion
+        // (at f32 kernel precision — the summary path's one f32 divide).
+        let n_ref = 48usize;
+        let m = 8usize;
+        let n = n_ref + m;
+        let y = random_embedding(n, 17);
+        let pool = ThreadPool::new(2);
+        let frozen =
+            BhTree::<2>::build_parallel(&pool, &y[..n_ref * 2], n_ref, CellSizeMode::Diagonal);
+        let overlay = BhTree::<2>::build_parallel(&pool, &y[n_ref * 2..], m, CellSizeMode::Diagonal);
+        let mut out = vec![0f64; n * 2];
+        let mut row_z = vec![0f64; n];
+        let mut z_parts = Vec::new();
+        let z = repulsive_frozen_rowz_with::<2>(
+            &pool,
+            &frozen,
+            Some(&overlay),
+            &y,
+            n,
+            n_ref,
+            n,
+            0.0,
+            &mut out,
+            &mut z_parts,
+            Some(&mut row_z),
+        );
+        let (want, want_z) = exact_union_repulsion_oracle(&y, n, n_ref, n);
+        for i in n_ref..n {
+            for d in 0..2 {
+                let (g, w) = (out[i * 2 + d], want[i * 2 + d]);
+                assert!((g - w).abs() < 1e-6 + 1e-5 * w.abs(), "row {i}: got {g} want {w}");
+            }
+            let (g, w) = (row_z[i], want_z[i]);
+            assert!((g - w).abs() < 1e-6 + 1e-5 * w.abs(), "row_z {i}: got {g} want {w}");
+        }
+        let want_total: f64 = want_z[n_ref..].iter().sum();
+        assert!((z - want_total).abs() < 1e-6 + 1e-5 * want_total, "Z {z} vs {want_total}");
+    }
+
+    #[test]
+    fn frozen_only_theta0_matches_reference_only_oracle() {
+        // Without an overlay each movable row sums over the reference
+        // points only — the batch-independent serving field.
+        let n_ref = 40usize;
+        let m = 5usize;
+        let n = n_ref + m;
+        let y = random_embedding(n, 19);
+        let pool = ThreadPool::new(2);
+        let frozen =
+            BhTree::<2>::build_parallel(&pool, &y[..n_ref * 2], n_ref, CellSizeMode::Diagonal);
+        let mut out = vec![0f64; n * 2];
+        let mut row_z = vec![0f64; n];
+        let mut z_parts = Vec::new();
+        repulsive_frozen_rowz_with::<2>(
+            &pool,
+            &frozen,
+            None,
+            &y,
+            n,
+            n_ref,
+            n,
+            0.0,
+            &mut out,
+            &mut z_parts,
+            Some(&mut row_z),
+        );
+        for i in n_ref..n {
+            let (mut wz, mut wx, mut wy) = (0f64, 0f64, 0f64);
+            for j in 0..n_ref {
+                let dx = (y[i * 2] - y[j * 2]) as f64;
+                let dy = (y[i * 2 + 1] - y[j * 2 + 1]) as f64;
+                let q = 1.0 / (1.0 + dx * dx + dy * dy);
+                wz += q;
+                wx += q * q * dx;
+                wy += q * q * dy;
+            }
+            assert!((out[i * 2] - wx).abs() < 1e-6 + 1e-5 * wx.abs(), "row {i} x");
+            assert!((out[i * 2 + 1] - wy).abs() < 1e-6 + 1e-5 * wy.abs(), "row {i} y");
+            assert!((row_z[i] - wz).abs() < 1e-6 + 1e-5 * wz.abs(), "row {i} z");
+        }
+    }
+
+    #[test]
+    fn frozen_rowz_parallel_matches_serial_twin_bitwise() {
+        // The serial twin is the determinism oracle: every thread count
+        // and every SIMD backend must produce its exact bytes.
+        let n_ref = 600usize;
+        let m = 150usize; // spans multiple 64-row chunks
+        let n = n_ref + m;
+        let y = random_embedding(n, 21);
+        let serial_pool = ThreadPool::new(1);
+        let frozen =
+            BhTree::<2>::build_parallel(&serial_pool, &y[..n_ref * 2], n_ref, CellSizeMode::Diagonal);
+        let overlay =
+            BhTree::<2>::build_parallel(&serial_pool, &y[n_ref * 2..], m, CellSizeMode::Diagonal);
+        for with_overlay in [false, true] {
+            let ov = with_overlay.then_some(&overlay);
+            let mut want = vec![0f64; n * 2];
+            let mut want_z = vec![0f64; n];
+            let z_want = repulsive_frozen_rowz_serial::<2>(
+                &frozen,
+                ov,
+                &y,
+                n,
+                n_ref,
+                n,
+                0.5,
+                &mut want,
+                Some(&mut want_z),
+            );
+            for be in crate::util::simd::test_backends() {
+                crate::util::simd::set_backend(Some(be));
+                for threads in [1usize, 2, 4] {
+                    let pool = ThreadPool::new(threads);
+                    let mut out = vec![0f64; n * 2];
+                    let mut row_z = vec![0f64; n];
+                    let mut z_parts = Vec::new();
+                    let z = repulsive_frozen_rowz_with::<2>(
+                        &pool,
+                        &frozen,
+                        ov,
+                        &y,
+                        n,
+                        n_ref,
+                        n,
+                        0.5,
+                        &mut out,
+                        &mut z_parts,
+                        Some(&mut row_z),
+                    );
+                    assert_eq!(z.to_bits(), z_want.to_bits(), "Z drift: {threads} threads, {be:?}");
+                    assert_eq!(
+                        out[n_ref * 2..],
+                        want[n_ref * 2..],
+                        "force drift: overlay={with_overlay} threads={threads} {be:?}"
+                    );
+                    assert_eq!(row_z[n_ref..], want_z[n_ref..], "row_z drift");
+                }
+            }
+            crate::util::simd::set_backend(None);
         }
     }
 }

@@ -16,7 +16,10 @@ pub use engine::{DynForceEngine, EngineStats, ForceEngine};
 pub use error::SneError;
 pub use gradient::RepulsionMethod;
 pub use interp::InterpGrid;
-pub use model::{TransformOptions, TransformResult, TransformStats, TsneModel};
+pub use model::{
+    TransformOptions, TransformRepulsion, TransformResult, TransformScratch, TransformStats,
+    TsneModel,
+};
 pub use sparse::Csr;
 
 use crate::data::io;
@@ -289,6 +292,7 @@ impl TsneRunner {
             p,
             embedding: y,
             stats: self.stats.clone(),
+            frozen: Default::default(),
         })
     }
 

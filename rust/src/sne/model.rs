@@ -24,23 +24,38 @@
 //!    snapshots).
 //! 2. **Initialize** — each query starts at the similarity-weighted
 //!    barycenter of its neighbors' fitted positions.
-//! 3. **Frozen-reference gradient loop** — the Barnes-Hut tree is built
-//!    over the *union* of reference and query points, but the force
-//!    engine's movable range is narrowed to the query rows: frozen
-//!    reference points contribute repulsion through the cell summaries
-//!    yet receive no force accumulation and never move. Each query is
-//!    normalized by its **own** Z (`z_i = Σ_{j≠i} (1+d²)^-1`, via the
-//!    engine's per-row-Z repulsion pass) and its attraction row sums
-//!    to 1, so a query's dynamics are those of embedding it alone against
-//!    the frozen map — placements do not depend on how many queries share
-//!    the batch (batched queries still repel each other through the
-//!    union tree, a second-order effect). Reference rows of the
-//!    attraction CSR are empty — their attractive force is identically
-//!    zero.
+//! 3. **Frozen-reference gradient loop** — by default
+//!    ([`TransformRepulsion::FrozenOnly`]) each query traverses the
+//!    model's **frozen reference tree**: a Barnes-Hut tree over the
+//!    fitted embedding, built **once per model** (lazily, via
+//!    [`TsneModel::frozen_tree`]) and shared read-only across transform
+//!    calls and serve workers. A transform iteration therefore costs
+//!    O(m log n) traversal with zero tree construction, instead of
+//!    rebuilding a union tree over n+m points. Each query is normalized
+//!    by its **own** Z (`z_i`, via the engine's per-row-Z repulsion
+//!    pass) and its attraction row sums to 1, so a query's dynamics are
+//!    **exactly** those of embedding it alone against the frozen map —
+//!    placements are bitwise independent of how queries are batched.
+//!    [`TransformRepulsion::FrozenCompose`] additionally builds a small
+//!    per-iteration overlay tree over the query batch whose summaries
+//!    compose with the frozen arena at traversal time, reproducing the
+//!    union-tree semantics (batched queries repel each other; exact at
+//!    θ=0) while still never touching the reference tree.
+//!    [`TransformRepulsion::Union`] keeps the legacy per-iteration union
+//!    rebuild for comparison. Reference rows of the attraction CSR are
+//!    empty — their attractive force is identically zero — and frozen
+//!    rows receive no repulsive force accumulation either way.
 //!
 //! The loop is deterministic (no RNG anywhere in the transform path), so
 //! transforming the same queries against the same model always yields the
-//! same placements.
+//! same placements — bit-identical across thread counts and SIMD
+//! backends, per the crate-wide determinism contract.
+//!
+//! Serving callers that transform repeatedly should route through
+//! [`TsneModel::transform_with_scratch`] with a long-lived
+//! [`TransformScratch`]: all per-call buffers (and the force engine with
+//! its overlay arena) are then reused, leaving the steady state free of
+//! per-batch allocation.
 
 use super::engine::DynForceEngine;
 use super::gradient::RepulsionMethod;
@@ -49,10 +64,12 @@ use super::sparse::Csr;
 use super::{AttractiveBackend, CpuAttractive, RunStats, TsneConfig};
 use crate::knn::{HnswGraph, HnswScratch};
 use crate::pca::Pca;
+use crate::spatial::{BhTree, CellSizeMode, FrozenTree};
 use crate::util::pool::SendPtr;
 use crate::util::{Stopwatch, ThreadPool};
 use crate::vptree::{SearchScratch, VpArena, VpTree};
 use std::path::Path;
+use std::sync::{Arc, OnceLock};
 
 /// A fitted, persistable t-SNE model: everything needed to serve
 /// out-of-sample [`TsneModel::transform`] queries against a frozen map.
@@ -88,6 +105,52 @@ pub struct TsneModel {
     pub embedding: Vec<f32>,
     /// Timing/counters of the fit.
     pub stats: RunStats,
+    /// Lazily built frozen reference tree over `embedding` — the
+    /// transform repulsion field, built once per model and shared
+    /// read-only across transform calls and serve workers (see
+    /// [`TsneModel::frozen_tree`]). Not persisted: a loaded model
+    /// rebuilds it bit-identically on first use.
+    pub(crate) frozen: OnceLock<FrozenTree>,
+}
+
+/// Which repulsion field the transform gradient loop uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TransformRepulsion {
+    /// Queries feel only the frozen reference tree (built once per
+    /// model). O(m log n) per iteration with zero tree construction, and
+    /// placements are **bitwise** independent of the batch size — each
+    /// query's dynamics are exactly those of embedding it alone.
+    #[default]
+    FrozenOnly,
+    /// Frozen reference tree plus a per-iteration overlay tree over the
+    /// query batch whose summaries compose with the frozen arena at
+    /// traversal time — union-tree semantics (batched queries repel each
+    /// other; exact at θ=0) at O(m log n + m log m) per iteration.
+    FrozenCompose,
+    /// Legacy path: rebuild a Barnes-Hut tree over the n+m union every
+    /// iteration. Kept for accuracy/bench comparison against the
+    /// overlay, and for the non-tree repulsion methods.
+    Union,
+}
+
+impl TransformRepulsion {
+    /// Config-file / CLI spelling.
+    pub fn parse(s: &str) -> Option<TransformRepulsion> {
+        match s {
+            "frozen" => Some(TransformRepulsion::FrozenOnly),
+            "compose" => Some(TransformRepulsion::FrozenCompose),
+            "union" => Some(TransformRepulsion::Union),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransformRepulsion::FrozenOnly => "frozen",
+            TransformRepulsion::FrozenCompose => "compose",
+            TransformRepulsion::Union => "union",
+        }
+    }
 }
 
 /// Knobs of the frozen-reference transform loop. The defaults favor
@@ -106,11 +169,20 @@ pub struct TransformOptions {
     pub momentum: f64,
     /// Momentum after the switch at `iters / 2`.
     pub final_momentum: f64,
+    /// Repulsion field of the gradient loop (default: frozen reference
+    /// tree only).
+    pub repulsion: TransformRepulsion,
 }
 
 impl Default for TransformOptions {
     fn default() -> Self {
-        TransformOptions { iters: 60, eta: 0.1, momentum: 0.5, final_momentum: 0.8 }
+        TransformOptions {
+            iters: 60,
+            eta: 0.1,
+            momentum: 0.5,
+            final_momentum: 0.8,
+            repulsion: TransformRepulsion::default(),
+        }
     }
 }
 
@@ -124,6 +196,82 @@ pub struct TransformStats {
     pub total_secs: f64,
     /// Rows whose bandwidth search did not reach tolerance.
     pub perplexity_failures: usize,
+    /// Whether this call went through the frozen reference tree (the
+    /// `FrozenOnly`/`FrozenCompose` paths with `iters > 0`).
+    pub used_frozen_tree: bool,
+    /// Whether this call had to *build* the frozen tree (first transform
+    /// on this model) rather than reuse the shared one. Serve workers
+    /// aggregate this into the `tree_rebuilds`/`tree_reuses` counters.
+    pub tree_rebuilt: bool,
+}
+
+/// Reusable cross-call scratch for [`TsneModel::transform_with_scratch`]:
+/// every buffer the transform stages need (attach outputs, the union
+/// embedding/force/velocity arrays, the attraction CSR arenas) plus the
+/// force engine itself — whose overlay tree arena and Z-reduction slots
+/// then survive across calls. A warm scratch makes repeated transforms
+/// of same-shaped batches allocation-free outside the returned
+/// placements; results are bit-identical to the scratch-free path.
+#[derive(Default)]
+pub struct TransformScratch {
+    idx: Vec<u32>,
+    d2: Vec<f32>,
+    prow: Vec<f32>,
+    y: Vec<f32>,
+    attr: Vec<f64>,
+    rep: Vec<f64>,
+    row_z: Vec<f64>,
+    vel: Vec<f64>,
+    indptr: Vec<u32>,
+    indices: Vec<u32>,
+    values: Vec<f32>,
+    sort_scratch: Vec<(u32, f32)>,
+    /// Cached engine, keyed by everything that shaped it — reused only
+    /// when the next call matches exactly, so a scratch shared across
+    /// batch sizes or models stays correct.
+    engine: Option<(EngineKey, DynForceEngine)>,
+}
+
+/// Identity of a cached transform engine (see [`TransformScratch`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct EngineKey {
+    n_union: usize,
+    out_dim: usize,
+    method: RepulsionMethod,
+    mode: CellSizeMode,
+    repulsion: TransformRepulsion,
+    /// Address of the frozen tree the engine holds (0 for the union
+    /// path) — ties a frozen-mode engine to one model's tree.
+    frozen_ptr: usize,
+}
+
+impl TransformScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Capacity snapshot over every owned buffer (engine included) — the
+    /// steady-state no-allocation assertion used by tests.
+    pub fn capacities(&self) -> Vec<usize> {
+        let mut caps = vec![
+            self.idx.capacity(),
+            self.d2.capacity(),
+            self.prow.capacity(),
+            self.y.capacity(),
+            self.attr.capacity(),
+            self.rep.capacity(),
+            self.row_z.capacity(),
+            self.vel.capacity(),
+            self.indptr.capacity(),
+            self.indices.capacity(),
+            self.values.capacity(),
+            self.sort_scratch.capacity(),
+        ];
+        if let Some((_, engine)) = &self.engine {
+            caps.extend(engine.capacities());
+        }
+        caps
+    }
 }
 
 /// Everything a transform call produces.
@@ -278,6 +426,30 @@ impl TsneModel {
         }
     }
 
+    /// The frozen Barnes-Hut reference tree over the fitted embedding,
+    /// built on first use (bit-identical regardless of the building
+    /// pool's thread count) and shared read-only afterwards — transform
+    /// calls and serve workers all traverse this one tree. `&self`
+    /// interior initialization, so a model shared behind an `Arc` across
+    /// worker threads builds it exactly once.
+    pub fn frozen_tree(&self, pool: &ThreadPool) -> &FrozenTree {
+        self.frozen.get_or_init(|| match self.config.out_dim {
+            2 => FrozenTree::D2(Arc::new(BhTree::<2>::build_parallel(
+                pool,
+                &self.embedding,
+                self.n,
+                self.config.cell_size,
+            ))),
+            3 => FrozenTree::D3(Arc::new(BhTree::<3>::build_parallel(
+                pool,
+                &self.embedding,
+                self.n,
+                self.config.cell_size,
+            ))),
+            d => panic!("unsupported embedding dimension {d}"),
+        })
+    }
+
     /// Embed `xq` (row-major `m × dim`, already in the model's input
     /// space — see [`TsneModel::project_input`]) into the frozen map with
     /// default options and a host-sized pool. Returns row-major
@@ -289,13 +461,32 @@ impl TsneModel {
 
     /// Full-control transform: explicit pool and options, detailed
     /// result. See the module docs for the three stages and the
-    /// frozen-reference gradient contract.
+    /// frozen-reference gradient contract. Allocates its working buffers
+    /// per call — repeated callers (serve workers) should hold a
+    /// [`TransformScratch`] and use
+    /// [`TsneModel::transform_with_scratch`], which is bit-identical.
     pub fn transform_with(
         &self,
         pool: &ThreadPool,
         xq: &[f32],
         dim: usize,
         opts: &TransformOptions,
+    ) -> anyhow::Result<TransformResult> {
+        self.transform_with_scratch(pool, xq, dim, opts, &mut TransformScratch::new())
+    }
+
+    /// [`TsneModel::transform_with`] with caller-owned scratch: all
+    /// per-call buffers — and the force engine with its overlay tree
+    /// arena — live in `scratch` and are reused across calls. Every
+    /// buffer is fully rewritten (or only its rewritten rows are read),
+    /// so results are bit-identical to a fresh scratch.
+    pub fn transform_with_scratch(
+        &self,
+        pool: &ThreadPool,
+        xq: &[f32],
+        dim: usize,
+        opts: &TransformOptions,
+        scratch: &mut TransformScratch,
     ) -> anyhow::Result<TransformResult> {
         anyhow::ensure!(
             dim == self.dim,
@@ -332,11 +523,16 @@ impl TsneModel {
         let mut stats = TransformStats::default();
 
         // ---- Stage 1: attach (kNN + perplexity rows, zero alloc/query).
+        // Scratch buffers are resized to exact shape; every slot is
+        // written by the attach pass, so reuse is bit-identical to fresh.
         let k = self.transform_k();
         let perplexity = self.config.perplexity.min(k as f64);
-        let mut idx = vec![0u32; m * k];
-        let mut d2 = vec![0f32; m * k];
-        let mut prow = vec![0f32; m * k];
+        scratch.idx.resize(m * k, 0);
+        scratch.d2.resize(m * k, 0.0);
+        scratch.prow.resize(m * k, 0.0);
+        let idx = &mut scratch.idx;
+        let d2 = &mut scratch.d2;
+        let prow = &mut scratch.prow;
         let sw = Stopwatch::start();
         {
             use std::sync::atomic::{AtomicUsize, Ordering};
@@ -427,7 +623,8 @@ impl TsneModel {
 
         // ---- Stage 2: barycenter init over the fitted positions.
         let n_union = self.n + m;
-        let mut y = vec![0f32; n_union * out_dim];
+        scratch.y.resize(n_union * out_dim, 0.0);
+        let y = &mut scratch.y;
         y[..self.n * out_dim].copy_from_slice(&self.embedding);
         for i in 0..m {
             let mut acc = [0f64; 3];
@@ -448,13 +645,16 @@ impl TsneModel {
         if opts.iters > 0 {
             // Attraction CSR over the union: reference rows empty, query
             // row i holds its (column-sorted) conditional similarities.
-            let mut indptr = vec![0u32; n_union + 1];
+            // `clear` + `resize` zero-fills, so the cumulative prefix for
+            // the (empty) reference rows is correct on a reused scratch.
+            scratch.indptr.clear();
+            scratch.indptr.resize(n_union + 1, 0);
             for i in 0..m {
-                indptr[self.n + i + 1] = ((i + 1) * k) as u32;
+                scratch.indptr[self.n + i + 1] = ((i + 1) * k) as u32;
             }
-            let mut indices = vec![0u32; m * k];
-            let mut values = vec![0f32; m * k];
-            let mut sort_scratch: Vec<(u32, f32)> = Vec::with_capacity(k);
+            scratch.indices.resize(m * k, 0);
+            scratch.values.resize(m * k, 0.0);
+            let sort_scratch = &mut scratch.sort_scratch;
             for i in 0..m {
                 sort_scratch.clear();
                 for j in 0..k {
@@ -462,11 +662,16 @@ impl TsneModel {
                 }
                 sort_scratch.sort_unstable_by_key(|&(c, _)| c);
                 for (j, &(c, v)) in sort_scratch.iter().enumerate() {
-                    indices[i * k + j] = c;
-                    values[i * k + j] = v;
+                    scratch.indices[i * k + j] = c;
+                    scratch.values[i * k + j] = v;
                 }
             }
-            let p_union = Csr { n_rows: n_union, indptr, indices, values };
+            let p_union = Csr {
+                n_rows: n_union,
+                indptr: std::mem::take(&mut scratch.indptr),
+                indices: std::mem::take(&mut scratch.indices),
+                values: std::mem::take(&mut scratch.values),
+            };
 
             // The dual-tree walk computes every point's force at once and
             // cannot freeze a sub-range; transform maps it to point-cell
@@ -484,22 +689,69 @@ impl TsneModel {
                 }
                 other => other,
             };
-            let mut engine = DynForceEngine::with_movable(
+            // The frozen-overlay paths need the point-cell traversal;
+            // exact and grid-interpolation configs keep the union-layout
+            // movable-range pass they always had.
+            let repulsion = if matches!(method, RepulsionMethod::BarnesHut { .. }) {
+                opts.repulsion
+            } else {
+                TransformRepulsion::Union
+            };
+            let frozen_ptr = match repulsion {
+                TransformRepulsion::Union => 0usize,
+                _ => {
+                    stats.tree_rebuilt = self.frozen.get().is_none();
+                    stats.used_frozen_tree = true;
+                    match self.frozen_tree(pool) {
+                        FrozenTree::D2(t) => Arc::as_ptr(t) as usize,
+                        FrozenTree::D3(t) => Arc::as_ptr(t) as usize,
+                    }
+                }
+            };
+            let key = EngineKey {
+                n_union,
                 out_dim,
-                n_union,
                 method,
-                self.config.cell_size,
-                self.n,
-                n_union,
-            );
-            let mut attr = vec![0f64; n_union * out_dim];
-            let mut rep = vec![0f64; n_union * out_dim];
-            let mut row_z = vec![0f64; n_union];
-            let mut vel = vec![0f64; m * out_dim];
+                mode: self.config.cell_size,
+                repulsion,
+                frozen_ptr,
+            };
+            let mut engine = match scratch.engine.take() {
+                Some((have, engine)) if have == key => engine,
+                _ => match repulsion {
+                    TransformRepulsion::Union => DynForceEngine::with_movable(
+                        out_dim,
+                        n_union,
+                        method,
+                        self.config.cell_size,
+                        self.n,
+                        n_union,
+                    ),
+                    rep => DynForceEngine::with_frozen(
+                        self.frozen_tree(pool),
+                        method,
+                        self.config.cell_size,
+                        self.n,
+                        n_union,
+                        rep == TransformRepulsion::FrozenCompose,
+                    ),
+                },
+            };
+            scratch.attr.resize(n_union * out_dim, 0.0);
+            scratch.rep.resize(n_union * out_dim, 0.0);
+            scratch.row_z.resize(n_union, 0.0);
+            // Velocity must start at zero every call; the force buffers
+            // are fully rewritten (or only rewritten rows are read).
+            scratch.vel.clear();
+            scratch.vel.resize(m * out_dim, 0.0);
+            let attr = &mut scratch.attr;
+            let rep = &mut scratch.rep;
+            let row_z = &mut scratch.row_z;
+            let vel = &mut scratch.vel;
             let switch = opts.iters / 2;
             for it in 0..opts.iters {
-                CpuAttractive.compute(pool, &p_union, &y, out_dim, &mut attr);
-                engine.repulsive_rowz_into(pool, &y, &mut rep, Some(&mut row_z));
+                CpuAttractive.compute(pool, &p_union, y, out_dim, attr);
+                engine.repulsive_rowz_into(pool, y, rep, Some(row_z));
                 let mom = if it < switch { opts.momentum } else { opts.final_momentum };
                 // Per-query gradient 4(F_attr − F_repZ/z_i): each query
                 // normalizes by its own z_i, so its dynamics match being
@@ -517,11 +769,18 @@ impl TsneModel {
                 }
                 engine.mark_embedding_moved();
             }
+            // Hand the CSR arenas and the engine (overlay tree included)
+            // back to the scratch for the next call.
+            let Csr { indptr, indices, values, .. } = p_union;
+            scratch.indptr = indptr;
+            scratch.indices = indices;
+            scratch.values = values;
+            scratch.engine = Some((key, engine));
         }
         stats.opt_secs = sw.elapsed_secs();
         stats.total_secs = total_sw.elapsed_secs();
 
-        let yq = y[self.n * out_dim..].to_vec();
+        let yq = scratch.y[self.n * out_dim..].to_vec();
         Ok(TransformResult { y: yq, nn_input, stats })
     }
 
@@ -800,25 +1059,110 @@ mod tests {
 
     #[test]
     fn transform_placement_is_batch_size_independent() {
-        // Per-query Z normalization: a query placed alone must land where
-        // it lands inside a batch (up to the second-order query-query
-        // repulsion through the union tree).
+        // Default `FrozenOnly` repulsion: a query interacts only with the
+        // frozen reference map and normalizes by its own Z, so its
+        // placement is *bitwise* independent of batch composition —
+        // m = 1 and m = 64 must produce identical bytes.
         let (model, data) = fit_small(250, 11);
         let pool = ThreadPool::new(2);
         let opts = TransformOptions::default();
-        let batch = &data.x[..12 * data.dim];
+        let batch = &data.x[..64 * data.dim];
         let alone = model.transform_with(&pool, &batch[..data.dim], data.dim, &opts).unwrap();
+        let eight = model.transform_with(&pool, &batch[..8 * data.dim], data.dim, &opts).unwrap();
         let batched = model.transform_with(&pool, batch, data.dim, &opts).unwrap();
+        assert_eq!(alone.y[..], batched.y[..2], "m=1 vs m=64 placement drifted");
+        assert_eq!(eight.y[..], batched.y[..16], "m=8 vs m=64 placements drifted");
+        assert!(batched.stats.used_frozen_tree);
+    }
+
+    #[test]
+    fn transform_scratch_reuse_is_bit_identical_and_allocation_free() {
+        let (model, data) = fit_small(200, 21);
+        let pool = ThreadPool::new(2);
+        let opts = TransformOptions::default();
+        let q1 = &data.x[..8 * data.dim];
+        let q2 = &data.x[8 * data.dim..20 * data.dim];
+        let mut scratch = TransformScratch::new();
+        let r1 = model.transform_with_scratch(&pool, q1, data.dim, &opts, &mut scratch).unwrap();
+        assert!(r1.stats.used_frozen_tree);
+        assert!(r1.stats.tree_rebuilt, "first transform builds the frozen tree");
+        // A reused scratch — across *different* batch sizes — must give
+        // the same bytes as a fresh one.
+        let r2 = model.transform_with_scratch(&pool, q2, data.dim, &opts, &mut scratch).unwrap();
+        assert!(!r2.stats.tree_rebuilt, "frozen tree is shared after the first call");
+        assert_eq!(r1.y, model.transform_with(&pool, q1, data.dim, &opts).unwrap().y);
+        assert_eq!(r2.y, model.transform_with(&pool, q2, data.dim, &opts).unwrap().y);
+        // Steady state: repeating a batch shape allocates nothing.
+        let _ = model.transform_with_scratch(&pool, q2, data.dim, &opts, &mut scratch).unwrap();
+        let caps = scratch.capacities();
+        for _ in 0..3 {
+            let r = model.transform_with_scratch(&pool, q2, data.dim, &opts, &mut scratch).unwrap();
+            assert_eq!(r.y, r2.y, "scratch reuse changed the placement");
+            assert_eq!(scratch.capacities(), caps, "steady-state transform allocated");
+        }
+    }
+
+    #[test]
+    fn transform_is_bit_identical_across_thread_counts() {
+        let (model, data) = fit_small(220, 23);
+        let model4 = model.clone(); // unbuilt frozen tree in both clones
+        let q = &data.x[..16 * data.dim];
+        let opts = TransformOptions::default();
+        let p1 = ThreadPool::new(1);
+        let p4 = ThreadPool::new(4);
+        // Each model builds its own frozen tree with a different pool, so
+        // this covers both the build and the traversal invariance.
+        let a = model.transform_with(&p1, q, data.dim, &opts).unwrap();
+        let b = model4.transform_with(&p4, q, data.dim, &opts).unwrap();
+        assert_eq!(a.y, b.y, "thread count leaked into placements");
+    }
+
+    #[test]
+    fn transform_compose_and_union_paths_agree() {
+        // `FrozenCompose` composes the frozen reference tree with a small
+        // overlay over the batch; `Union` rebuilds one tree over all
+        // n + m points. Same forces up to cell-partition differences at
+        // the configured θ — placements must agree to well under the
+        // local cluster scale.
+        let (model, data) = fit_small(180, 25);
+        let pool = ThreadPool::new(2);
+        let q = &data.x[..12 * data.dim];
+        let compose = TransformOptions {
+            repulsion: TransformRepulsion::FrozenCompose,
+            ..Default::default()
+        };
+        let union = TransformOptions { repulsion: TransformRepulsion::Union, ..Default::default() };
+        let a = model.transform_with(&pool, q, data.dim, &compose).unwrap();
+        let b = model.transform_with(&pool, q, data.dim, &union).unwrap();
+        assert!(a.stats.used_frozen_tree);
+        assert!(!b.stats.used_frozen_tree);
         let (mut lo, mut hi) = (f32::MAX, f32::MIN);
         for &v in &model.embedding {
             lo = lo.min(v);
             hi = hi.max(v);
         }
         let diam = (hi - lo) as f64 * std::f64::consts::SQRT_2;
-        let dx = (alone.y[0] - batched.y[0]) as f64;
-        let dy = (alone.y[1] - batched.y[1]) as f64;
-        let dist = (dx * dx + dy * dy).sqrt();
-        assert!(dist < 0.05 * diam, "alone-vs-batched drift {dist} (diameter ~{diam})");
+        for i in 0..12 {
+            let dx = (a.y[i * 2] - b.y[i * 2]) as f64;
+            let dy = (a.y[i * 2 + 1] - b.y[i * 2 + 1]) as f64;
+            let dist = (dx * dx + dy * dy).sqrt();
+            assert!(dist < 0.05 * diam, "query {i}: compose-vs-union drift {dist} (diam ~{diam})");
+        }
+    }
+
+    #[test]
+    fn transform_repulsion_parses_the_cli_names() {
+        assert_eq!(TransformRepulsion::parse("frozen"), Some(TransformRepulsion::FrozenOnly));
+        assert_eq!(TransformRepulsion::parse("compose"), Some(TransformRepulsion::FrozenCompose));
+        assert_eq!(TransformRepulsion::parse("union"), Some(TransformRepulsion::Union));
+        assert_eq!(TransformRepulsion::parse("bogus"), None);
+        for r in [
+            TransformRepulsion::FrozenOnly,
+            TransformRepulsion::FrozenCompose,
+            TransformRepulsion::Union,
+        ] {
+            assert_eq!(TransformRepulsion::parse(r.name()), Some(r), "name/parse round trip");
+        }
     }
 
     #[test]

@@ -610,6 +610,50 @@ impl<const DIM: usize> BhTree<DIM> {
         force: &mut [f64; DIM],
         batch: &mut SummaryBatch<DIM>,
     ) -> f64 {
+        self.repulsion_impl::<true>(be, index, yi, theta, force, batch)
+    }
+
+    /// Barnes-Hut traversal for a query point that is NOT in this tree.
+    ///
+    /// Same summary condition and accumulation as [`BhTree::repulsion`],
+    /// but with self-exclusion disabled: a query that happens to coincide
+    /// with a stored point still repels against all `count` copies,
+    /// because none of them is the query itself. This is the frozen
+    /// reference-tree traversal for out-of-sample transforms — the query
+    /// batch lives outside the tree, so excluding a coincident leaf would
+    /// drop a real reference point's contribution.
+    pub fn repulsion_query(&self, yi: &[f32; DIM], theta: f32, force: &mut [f64; DIM]) -> f64 {
+        let mut batch = SummaryBatch::new();
+        self.repulsion_query_with(simd::backend(), yi, theta, force, &mut batch)
+    }
+
+    /// [`BhTree::repulsion_query`] with an explicit backend and
+    /// caller-owned batch, mirroring [`BhTree::repulsion_with`].
+    pub fn repulsion_query_with(
+        &self,
+        be: simd::Backend,
+        yi: &[f32; DIM],
+        theta: f32,
+        force: &mut [f64; DIM],
+        batch: &mut SummaryBatch<DIM>,
+    ) -> f64 {
+        self.repulsion_impl::<false>(be, u32::MAX, yi, theta, force, batch)
+    }
+
+    /// Shared traversal core. `EXCLUDE` selects member mode (the query is
+    /// a tree point and one copy of it must be skipped) vs query mode
+    /// (the query is external; every stored point counts). The flag is a
+    /// const generic so the exclusion test compiles out of the query
+    /// path's leaf loop entirely.
+    fn repulsion_impl<const EXCLUDE: bool>(
+        &self,
+        be: simd::Backend,
+        index: u32,
+        yi: &[f32; DIM],
+        theta: f32,
+        force: &mut [f64; DIM],
+        batch: &mut SummaryBatch<DIM>,
+    ) -> f64 {
         let theta2 = theta * theta;
         batch.len = 0;
         let mut z_acc = [0f64; simd::LANES];
@@ -637,7 +681,7 @@ impl<const DIM: usize> BhTree<DIM> {
         macro_rules! summarize {
             ($id:expr, $count:expr, $is_leaf:expr, $d2:expr, $diff:expr) => {{
                 let mut mult = $count as f64;
-                if $is_leaf && ($d2 == 0.0 || self.t_point[$id] == index) {
+                if EXCLUDE && $is_leaf && ($d2 == 0.0 || self.t_point[$id] == index) {
                     mult -= 1.0;
                 }
                 if mult > 0.0 {

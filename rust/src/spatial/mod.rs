@@ -45,3 +45,45 @@ pub use bhtree::{BhTree, CellSizeMode, DualTreeScratch, NodeStats, REFIT_DISORDE
 pub type QuadTree = BhTree<2>;
 /// 3-D octree for 3-D embeddings.
 pub type OcTree = BhTree<3>;
+
+/// A reference tree frozen at fit time and shared read-only across
+/// transform calls (and across serve workers): the dimension-erased,
+/// reference-counted form of a finalized [`BhTree`] over the model's
+/// fitted embedding. Built once per model — out-of-sample queries
+/// traverse it via [`BhTree::repulsion_query`] (no self-exclusion; the
+/// queries live outside the tree) while a small per-call overlay tree
+/// covers the movable batch, so a transform iteration costs O(m log n)
+/// instead of rebuilding a union tree over n+m points.
+#[derive(Clone)]
+pub enum FrozenTree {
+    D2(std::sync::Arc<BhTree<2>>),
+    D3(std::sync::Arc<BhTree<3>>),
+}
+
+impl FrozenTree {
+    /// Embedding dimensionality of the frozen reference (2 or 3).
+    pub fn out_dim(&self) -> usize {
+        match self {
+            FrozenTree::D2(_) => 2,
+            FrozenTree::D3(_) => 3,
+        }
+    }
+
+    /// Number of reference points the frozen tree summarizes.
+    pub fn len(&self) -> usize {
+        match self {
+            FrozenTree::D2(t) => t.len(),
+            FrozenTree::D3(t) => t.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl std::fmt::Debug for FrozenTree {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FrozenTree").field("out_dim", &self.out_dim()).field("n", &self.len()).finish()
+    }
+}

@@ -19,14 +19,18 @@
 //!   full D-dimensional distance evaluations per *comparison* inside
 //!   `select_nth_unstable_by`.
 //! * [`VpTree::build_parallel`] fans independent subtrees out on the
-//!   thread pool below the top splits (whose distance passes are
-//!   themselves pool-parallel). The random vantage choices are replayed
-//!   from the same seeded pre-order pick sequence the serial build
-//!   consumes, and the partition performs the identical comparator
-//!   decisions, so the parallel build is **bit-identical** to
-//!   [`VpTree::build`] — same vantage points, same tie order, same arena
-//!   — which the serial path (kept for small `n`) doubles as the test
-//!   oracle for.
+//!   thread pool below the top splits, whose distance passes *and* median
+//!   selections are themselves pool-parallel (a deterministic sampled
+//!   quickselect replaces the serial `select_nth_unstable_by` that used
+//!   to serialize the top of the build). The random vantage choices are
+//!   replayed from the same seeded pre-order pick sequence the serial
+//!   build consumes, and every partition is the canonical stable split
+//!   around the unique rank-median element of a total order (distance,
+//!   then item index) — a layout that depends only on the median element,
+//!   not the algorithm that found it — so the parallel build is
+//!   **bit-identical** to [`VpTree::build`]: same vantage points, same
+//!   tie order, same arena — which the serial path (kept for small `n`)
+//!   doubles as the test oracle for.
 //! * Queries are batched: [`VpTree::knn_all`] reuses one
 //!   [`SearchScratch`] (candidate heap + DFS stack) per worker thread and
 //!   writes each row straight into the output arrays, so the query phase
@@ -60,6 +64,12 @@ const PARALLEL_BUILD_MIN: usize = 2048;
 /// Partitions at least this large fan their distance pass over the pool.
 const PARALLEL_DIST_MIN: usize = 4096;
 
+/// Top partitions at least this large select their median with the
+/// pool-parallel sampled quickselect instead of the serial
+/// `select_nth_unstable_by` (which used to serialize the whole top of
+/// the parallel build).
+const PARALLEL_SELECT_MIN: usize = 4096;
+
 /// One vp-tree node: the vantage point's dataset index, the ball radius
 /// (median distance of its subtree items), and child slots.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -74,11 +84,63 @@ struct Node {
 
 const EMPTY_NODE: Node = Node { item: 0, radius: 0.0, left: NO_CHILD, right: NO_CHILD };
 
-/// Distance comparator shared by every partition (serial and parallel
-/// paths must make identical tie decisions).
+/// Total-order comparator shared by every partition and selection path:
+/// ascending distance, ties broken by dataset item index. Item indices
+/// are unique, so the order is total and the rank-k element of any
+/// distance buffer is *unique* — every correct selection algorithm
+/// (the serial `select_nth_unstable_by` oracle, the pool-parallel
+/// sampled quickselect) must find the same element, which makes the
+/// serial/parallel bit-identity structural rather than algorithmic.
 #[inline]
-fn by_dist(a: &(f32, u32), b: &(f32, u32)) -> std::cmp::Ordering {
-    a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal)
+fn by_dist_item(a: &(f32, u32), b: &(f32, u32)) -> std::cmp::Ordering {
+    a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal).then_with(|| a.1.cmp(&b.1))
+}
+
+/// Rank-`k` element of `buf` under the [`by_dist_item`] total order — a
+/// deterministic sampled-pivot quickselect whose O(m) counting passes
+/// fan out on the pool. The pivot of each round is the median of nine
+/// stride samples (deterministic — no RNG), keys are unique, and the
+/// candidate set narrows geometrically; `buf` is consumed as scratch.
+fn select_rank_parallel(pool: &ThreadPool, buf: &mut Vec<(f32, u32)>, mut k: usize) -> (f32, u32) {
+    use std::cmp::Ordering::{Greater, Less};
+    loop {
+        let m = buf.len();
+        debug_assert!(k < m);
+        if m <= 1024 {
+            buf.select_nth_unstable_by(k, by_dist_item);
+            return buf[k];
+        }
+        // Deterministic pivot: median of nine stride samples.
+        let mut samples = [(0f32, 0u32); 9];
+        for (s, slot) in samples.iter_mut().enumerate() {
+            *slot = buf[s * (m - 1) / 8];
+        }
+        samples.sort_unstable_by(by_dist_item);
+        let pivot = samples[4];
+        // Pool-parallel count of keys strictly below the pivot; keys are
+        // unique, so rank(pivot) == that count exactly.
+        const CHUNK: usize = 8192;
+        let mut counts = vec![0usize; m.div_ceil(CHUNK)];
+        {
+            let cc = SendPtr(counts.as_mut_ptr());
+            let buf_ro: &[(f32, u32)] = buf;
+            pool.scope_chunks(m, CHUNK, |lo, hi| {
+                let _ = &cc;
+                let c = buf_ro[lo..hi].iter().filter(|e| by_dist_item(e, &pivot) == Less).count();
+                // SAFETY: one chunk writes exactly one slot.
+                unsafe { *cc.0.add(lo / CHUNK) = c };
+            });
+        }
+        let lt: usize = counts.iter().sum();
+        match k.cmp(&lt) {
+            Less => buf.retain(|e| by_dist_item(e, &pivot) == Less),
+            std::cmp::Ordering::Equal => return pivot,
+            Greater => {
+                buf.retain(|e| by_dist_item(e, &pivot) == Greater);
+                k -= lt + 1;
+            }
+        }
+    }
 }
 
 /// Replay the seeded vantage-point pick sequence without touching data.
@@ -279,7 +341,8 @@ impl<'a, M: Metric> VpTree<'a, M> {
         let mut items: Vec<u32> = (0..n as u32).collect();
         let mut nodes = vec![EMPTY_NODE; n];
         let mut scratch: Vec<(f32, u32)> = Vec::with_capacity(n.saturating_sub(1));
-        Self::build_range(data, dim, &metric, &mut items, &mut nodes, 0, &picks, &mut scratch);
+        let mut aux: Vec<(f32, u32)> = Vec::with_capacity(n.saturating_sub(1));
+        Self::build_range(data, dim, &metric, &mut items, &mut nodes, 0, &picks, &mut scratch, &mut aux);
         VpTree { data, dim, n, nodes: Cow::Owned(nodes), root: 0, metric }
     }
 
@@ -313,6 +376,7 @@ impl<'a, M: Metric> VpTree<'a, M> {
         let mut tasks: Vec<Subtree<'_>> = Vec::new();
         {
             let mut scratch: Vec<(f32, u32)> = Vec::with_capacity(n - 1);
+            let mut aux: Vec<(f32, u32)> = Vec::with_capacity(n - 1);
             Self::split_top(
                 pool,
                 data,
@@ -324,6 +388,7 @@ impl<'a, M: Metric> VpTree<'a, M> {
                 &picks,
                 grain,
                 &mut scratch,
+                &mut aux,
                 &mut tasks,
             );
         }
@@ -332,6 +397,7 @@ impl<'a, M: Metric> VpTree<'a, M> {
             for task in tasks {
                 scope.run(move || {
                     let mut scratch: Vec<(f32, u32)> = Vec::with_capacity(task.items.len());
+                    let mut aux: Vec<(f32, u32)> = Vec::with_capacity(task.items.len());
                     Self::build_range(
                         data,
                         dim,
@@ -341,6 +407,7 @@ impl<'a, M: Metric> VpTree<'a, M> {
                         task.base,
                         task.picks,
                         &mut scratch,
+                        &mut aux,
                     );
                 });
             }
@@ -359,19 +426,29 @@ impl<'a, M: Metric> VpTree<'a, M> {
         &data[i as usize * dim..(i as usize + 1) * dim]
     }
 
-    /// Shared partition tail for both build paths: select the median on
+    /// Shared partition tail for both build paths: find the median of
     /// the filled `scratch` (one `(dist, idx)` per non-vp item, in item
     /// order), write the vantage node at `nodes[0]` with absolute child
-    /// links, and split the subtree views into its children. Keeping the
-    /// tie order, link arithmetic, and pick-slice split in ONE place is
-    /// what makes the serial/parallel bit-identical guarantee structural
-    /// rather than copy-discipline.
+    /// links, and split the subtree views into its children.
+    ///
+    /// The layout is a **canonical stable partition** around the unique
+    /// rank-`mid` element of the [`by_dist_item`] total order: keys
+    /// below the pivot keep their scratch order on the left, the pivot
+    /// sits at slot `mid`, keys above keep their order on the right.
+    /// The layout depends only on the pivot *element* — not on which
+    /// algorithm found it — so the serial selection oracle and the
+    /// pool-parallel sampled quickselect (used when `pool` is given and
+    /// the partition is top-split sized) produce the same arena and the
+    /// same child recursion inputs, bit for bit.
+    #[allow(clippy::too_many_arguments)]
     fn link_children<'s>(
         items: &'s mut [u32],
         nodes: &'s mut [Node],
         base: usize,
         picks: &'s [u32],
         scratch: &mut [(f32, u32)],
+        aux: &mut Vec<(f32, u32)>,
+        pool: Option<&ThreadPool>,
     ) -> (Subtree<'s>, Option<Subtree<'s>>) {
         debug_assert_eq!(items.len(), nodes.len());
         debug_assert_eq!(items.len(), picks.len());
@@ -379,9 +456,35 @@ impl<'a, M: Metric> VpTree<'a, M> {
         let vp = items[0];
         let (_, rest) = items.split_at_mut(1);
         let mid = (rest.len() - 1) / 2;
-        scratch.select_nth_unstable_by(mid, by_dist);
-        let radius = scratch[mid].0;
-        for (slot, &(_, i)) in scratch.iter().enumerate() {
+        aux.clear();
+        aux.extend_from_slice(scratch);
+        let pivot = match pool {
+            Some(pool) if aux.len() >= PARALLEL_SELECT_MIN => {
+                select_rank_parallel(pool, aux, mid)
+            }
+            _ => {
+                aux.select_nth_unstable_by(mid, by_dist_item);
+                aux[mid]
+            }
+        };
+        let radius = pivot.0;
+        // Canonical stable partition around the pivot, rebuilt in `aux`
+        // from the untouched `scratch` (the selection consumed `aux`).
+        aux.clear();
+        for &e in scratch.iter() {
+            if by_dist_item(&e, &pivot) == std::cmp::Ordering::Less {
+                aux.push(e);
+            }
+        }
+        debug_assert_eq!(aux.len(), mid, "rank-mid pivot has exactly mid keys below it");
+        aux.push(pivot);
+        for &e in scratch.iter() {
+            if by_dist_item(&e, &pivot) == std::cmp::Ordering::Greater {
+                aux.push(e);
+            }
+        }
+        debug_assert_eq!(aux.len(), scratch.len());
+        for (slot, &(_, i)) in aux.iter().enumerate() {
             rest[slot] = i;
         }
         let left_len = mid + 1;
@@ -420,6 +523,7 @@ impl<'a, M: Metric> VpTree<'a, M> {
         base: usize,
         picks: &[u32],
         scratch: &mut Vec<(f32, u32)>,
+        aux: &mut Vec<(f32, u32)>,
     ) {
         // Move the seeded random vantage point to slot 0.
         items.swap(0, picks[0] as usize);
@@ -430,10 +534,10 @@ impl<'a, M: Metric> VpTree<'a, M> {
         let vp_row = Self::row(data, dim, items[0]);
         scratch.clear();
         scratch.extend(items[1..].iter().map(|&i| (metric.dist(vp_row, Self::row(data, dim, i)), i)));
-        let (l, r) = Self::link_children(items, nodes, base, picks, scratch);
-        Self::build_range(data, dim, metric, l.items, l.nodes, l.base, l.picks, scratch);
+        let (l, r) = Self::link_children(items, nodes, base, picks, scratch, aux, None);
+        Self::build_range(data, dim, metric, l.items, l.nodes, l.base, l.picks, scratch, aux);
         if let Some(r) = r {
-            Self::build_range(data, dim, metric, r.items, r.nodes, r.base, r.picks, scratch);
+            Self::build_range(data, dim, metric, r.items, r.nodes, r.base, r.picks, scratch, aux);
         }
     }
 
@@ -455,6 +559,7 @@ impl<'a, M: Metric> VpTree<'a, M> {
         picks: &'t [u32],
         grain: usize,
         scratch: &mut Vec<(f32, u32)>,
+        aux: &mut Vec<(f32, u32)>,
         tasks: &mut Vec<Subtree<'t>>,
     ) where
         M: Sync,
@@ -485,8 +590,8 @@ impl<'a, M: Metric> VpTree<'a, M> {
             scratch
                 .extend(items[1..].iter().map(|&i| (metric.dist(vp_row, Self::row(data, dim, i)), i)));
         }
-        let (l, r) = Self::link_children(items, nodes, base, picks, scratch);
-        Self::split_top(pool, data, dim, metric, l.items, l.nodes, l.base, l.picks, grain, scratch, tasks);
+        let (l, r) = Self::link_children(items, nodes, base, picks, scratch, aux, Some(pool));
+        Self::split_top(pool, data, dim, metric, l.items, l.nodes, l.base, l.picks, grain, scratch, aux, tasks);
         if let Some(r) = r {
             Self::split_top(
                 pool,
@@ -499,6 +604,7 @@ impl<'a, M: Metric> VpTree<'a, M> {
                 r.picks,
                 grain,
                 scratch,
+                aux,
                 tasks,
             );
         }
@@ -976,6 +1082,60 @@ mod tests {
         let serial = VpTree::build(&data, n, dim, 7);
         let par = VpTree::build_parallel(&pool, &data, n, dim, 7);
         assert_eq!(serial.nodes, par.nodes);
+    }
+
+    #[test]
+    fn parallel_selection_build_is_bit_identical_to_serial() {
+        // Large enough that the top split's partition (n - 1 items) is
+        // over PARALLEL_SELECT_MIN, so the sampled pool-quickselect —
+        // not the serial select_nth oracle — picks the top medians.
+        let (n, dim) = (PARALLEL_SELECT_MIN + 1357, 6);
+        let data = random_points(n, dim, 33);
+        let pool = ThreadPool::new(4);
+        let serial = VpTree::build(&data, n, dim, 17);
+        let par = VpTree::build_parallel(&pool, &data, n, dim, 17);
+        assert_eq!(serial.root, par.root);
+        assert_eq!(serial.nodes, par.nodes);
+    }
+
+    #[test]
+    fn parallel_selection_bit_identical_on_duplicate_heavy_data() {
+        // Maximal distance ties at parallel-selection size: the
+        // (distance, item) total order must give the quickselect and the
+        // serial oracle the same unique rank-median element.
+        let (n, dim) = (PARALLEL_SELECT_MIN + 421, 4);
+        let mut data = vec![3.0f32; n * dim];
+        for v in data.iter_mut().skip(n * dim / 3) {
+            *v = -1.5;
+        }
+        let pool = ThreadPool::new(4);
+        let serial = VpTree::build(&data, n, dim, 29);
+        let par = VpTree::build_parallel(&pool, &data, n, dim, 29);
+        assert_eq!(serial.nodes, par.nodes);
+    }
+
+    #[test]
+    fn select_rank_parallel_matches_serial_selection() {
+        // Direct oracle check: rank-k under the total order is unique,
+        // so the sampled quickselect must return exactly the element the
+        // serial sort-based oracle finds, at every probed rank — on
+        // random keys and on an all-ties buffer (order decided purely by
+        // the item-index tiebreak).
+        let pool = ThreadPool::new(4);
+        let m = PARALLEL_SELECT_MIN + 2048;
+        let mut rng = Pcg32::new(5, 9);
+        for ties in [false, true] {
+            let base: Vec<(f32, u32)> = (0..m as u32)
+                .map(|i| (if ties { 7.5 } else { (rng.next_u32() % 1000) as f32 }, i))
+                .collect();
+            let mut sorted = base.clone();
+            sorted.sort_unstable_by(by_dist_item);
+            for k in [0, 1, m / 2, m - 2, m - 1] {
+                let mut buf = base.clone();
+                let got = select_rank_parallel(&pool, &mut buf, k);
+                assert_eq!(got, sorted[k], "ties={ties} k={k}");
+            }
+        }
     }
 
     #[test]

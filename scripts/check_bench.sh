@@ -24,6 +24,12 @@
 #      finite, strictly positive numbers (the serve drive window ran and
 #      its latency window saw completions; a zero or missing figure means
 #      the section was skipped or the stats plumbing broke).
+#   6. Transform overlay — `transform_overlay_ns_per_point` (frozen
+#      reference tree + per-batch query overlay, the serving default)
+#      must be strictly faster than `transform_union_ns_per_point` (the
+#      legacy full union rebuild per iteration), or the overlay layer
+#      has stopped paying for itself. Both figures are already gated
+#      finite and positive by gate 2.
 #
 # Plain bash + grep + awk on the single-line JSON; no jq dependency.
 set -u
@@ -69,7 +75,8 @@ interp_spread_simd_ns_per_point
 interp_gather_scalar_ns_per_point
 interp_gather_simd_ns_per_point
 interp_total_ns_per_point
-transform_ns_per_point
+transform_union_ns_per_point
+transform_overlay_ns_per_point
 serve_points_per_sec
 serve_p99_ms
 input_stage
@@ -172,6 +179,19 @@ for key in serve_points_per_sec serve_p99_ms; do
         err "\"$key\" must be strictly positive, got $v"
     fi
 done
+
+# ---- 6. Transform overlay must beat the legacy union rebuild. ----
+ov=$(value_of "transform_overlay_ns_per_point")
+un=$(value_of "transform_union_ns_per_point")
+if [ -n "$ov" ] && [ -n "$un" ]; then
+    if awk -v o="$ov" -v u="$un" 'BEGIN { exit !(o < u) }'; then
+        echo "check_bench: ok   transform overlay $ov < union rebuild $un ns/point"
+    else
+        err "transform overlay $ov ns/point not faster than union rebuild $un ns/point"
+    fi
+else
+    err "cannot compare transform overlay vs union cost (overlay='$ov' union='$un')"
+fi
 
 if [ "$fail" -ne 0 ]; then
     echo "check_bench: $json_file FAILED the perf-trajectory gate" >&2
